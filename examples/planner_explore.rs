@@ -1,0 +1,87 @@
+//! Planner exploration: how the optimal partition shifts with the
+//! cloud-link bandwidth, plus a pipeline Gantt chart — a compact tour of
+//! the paper's §IV machinery.
+//!
+//! ```bash
+//! cargo run --release --example planner_explore
+//! ```
+
+use edgeshard::cluster::presets;
+use edgeshard::model::{llama2_70b, llama2_7b};
+use edgeshard::pipeline::{gantt, simulate, PipelineSpec, Strategy};
+use edgeshard::planner::latency::{algo1, algo1_greedy};
+use edgeshard::planner::{LatencyDp, Planner, ThroughputDp};
+use edgeshard::profiler::{AnalyticProfiler, Workload};
+use edgeshard::util::markdown_table;
+
+fn main() -> anyhow::Result<()> {
+    let profiler = AnalyticProfiler::default();
+
+    // ---- 1. how plans change with bandwidth ------------------------------
+    println!("## Llama2-7B latency-optimal plans vs cloud bandwidth\n");
+    let mut rows = Vec::new();
+    for bw in [1.0, 5.0, 10.0, 25.0, 50.0] {
+        let cluster = presets::paper_testbed(bw, 0);
+        let traces = profiler.profile(&llama2_7b(), &cluster, Workload::paper_default());
+        let plan = LatencyDp::new().plan(&traces, &cluster)?;
+        rows.push(vec![
+            format!("{bw} Mbps"),
+            format!("{:.2}", plan.predicted_ms),
+            format!("{}", plan.n_stages()),
+            plan.describe(),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(&["Cloud link", "ms/token", "Stages", "Plan"], &rows)
+    );
+
+    // ---- 2. Pareto fix vs the paper's literal greedy Algorithm 1 ---------
+    println!("\n## Algorithm 1: Pareto memory frontier vs paper's greedy update\n");
+    let mut rows = Vec::new();
+    // (13B does not fit the two-device pair at all — OOM for both variants
+    // — so the comparison sweeps 7B across bandwidths instead.)
+    for bw in [5.0, 10.0, 25.0] {
+        let model = llama2_7b();
+        let mut cluster = presets::cloud_edge_pair(bw);
+        cluster.set_latency(0, 1, 2.0);
+        let traces = profiler.profile(&model, &cluster, Workload::paper_default());
+        let pool = vec![0, 1];
+        let greedy = algo1_greedy(&traces, &cluster, &pool, 1)?;
+        let pareto = algo1(&traces, &cluster, &pool, 1)?;
+        rows.push(vec![
+            format!("7B @ {bw} Mbps"),
+            format!("{:.2}", greedy.predicted_ms),
+            format!("{:.2}", pareto.predicted_ms),
+            format!(
+                "{:.1}%",
+                (1.0 - pareto.predicted_ms / greedy.predicted_ms) * 100.0
+            ),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &["Model", "Greedy (paper) ms", "Pareto ms", "Improvement"],
+            &rows
+        )
+    );
+
+    // ---- 3. pipeline schedules for the 70B deployment --------------------
+    println!("\n## Llama2-70B pipeline schedule (throughput plan, 4 micro-batches)\n");
+    let cluster = presets::paper_testbed(1.0, 0);
+    let workload = Workload {
+        prompt_len: 32,
+        gen_len: 6,
+        batch: 1,
+    };
+    let traces = profiler.profile(&llama2_70b(), &cluster, workload);
+    let plan = ThroughputDp::new().plan(&traces, &cluster)?;
+    println!("plan: {}\n", plan.describe());
+    let spec = PipelineSpec::from_plan(&plan, &traces, &cluster, 4);
+    for strategy in [Strategy::Bubble, Strategy::NoBubble] {
+        let sched = simulate(&spec, strategy);
+        println!("{}", gantt(&sched, 96));
+    }
+    Ok(())
+}

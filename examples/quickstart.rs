@@ -1,0 +1,80 @@
+//! Quickstart: plan a Llama2-7B deployment on the paper's testbed and,
+//! if artifacts are built, generate text with the real tiny model.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use edgeshard::cluster::presets;
+use edgeshard::coordinator::{api::GenRequest, Batcher, Engine, EngineConfig};
+use edgeshard::model::llama2_7b;
+use edgeshard::planner::{LatencyDp, Planner, ThroughputDp};
+use edgeshard::profiler::{AnalyticProfiler, Workload};
+use edgeshard::runtime::{ExecService, Manifest, MeasuredProfiler, WeightStore};
+use edgeshard::workload::Corpus;
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. the paper's planning problem on the analytic testbed -------
+    let model = llama2_7b();
+    let cluster = presets::paper_testbed(1.0, 0); // cloud link shaped to 1 Mbps
+    let traces =
+        AnalyticProfiler::default().profile(&model, &cluster, Workload::paper_default());
+
+    let latency_plan = LatencyDp::new().plan(&traces, &cluster)?;
+    println!("Llama2-7B latency-optimal plan:  {}", latency_plan.describe());
+    println!("  predicted {:.2} ms/token", latency_plan.predicted_ms);
+
+    let throughput_plan = ThroughputDp::new().plan(&traces, &cluster)?;
+    println!("Llama2-7B throughput-optimal plan: {}", throughput_plan.describe());
+    println!("  bottleneck stage {:.2} ms", throughput_plan.predicted_ms);
+
+    // ---- 2. real inference through PJRT (needs `make artifacts`) -------
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("\n(artifacts not built — run `make artifacts` for the live demo)");
+        return Ok(());
+    }
+    let manifest = Manifest::load(dir)?;
+    let weights = WeightStore::load(&manifest)?;
+    let (_svc, handle) = ExecService::start(&manifest)?;
+
+    // plan the tiny model across the 3-device demo cluster using traces
+    // measured on the REAL shard executables
+    let demo = presets::tiny_demo(0);
+    let mprof = MeasuredProfiler::new(&manifest, &weights, handle.clone());
+    let tiny_traces = mprof.profile(&demo, Workload::paper_default())?;
+    let plan = LatencyDp::new().plan(&tiny_traces, &demo)?;
+    println!("\ntiny model plan on demo cluster: {}", plan.describe());
+
+    let engine = Engine::build(
+        &manifest,
+        &weights,
+        handle,
+        &plan,
+        &demo,
+        &EngineConfig {
+            time_scale: 0.001, // compress simulated link delays
+            ..Default::default()
+        },
+    )?;
+    let mut batcher = Batcher::new(manifest.config.prefill_len, manifest.batch_sizes.clone());
+    let req = GenRequest {
+        id: 1,
+        prompt: "Today is a good day to build systems."
+            .bytes()
+            .map(|b| b as i32)
+            .collect(),
+        max_new_tokens: 16,
+    };
+    let groups = batcher.pack(&[req]);
+    let (results, stats) = engine.generate_sequential(&groups)?;
+    println!("generated: {:?}", Corpus::detokenize(&results[0].tokens));
+    println!(
+        "ttft {:.1} ms · {:.2} ms/token · {:.1} tok/s",
+        results[0].ttft_ms,
+        results[0].ms_per_token(),
+        stats.throughput_tps
+    );
+    engine.shutdown()?;
+    Ok(())
+}

@@ -1,0 +1,110 @@
+//! Smart-home scenario (paper §III): a single user's personal devices —
+//! tablet, phone, smart speaker — collaborate on **sequential** inference.
+//! One prompt at a time, latency is what matters; the raw prompt never
+//! leaves the tablet (privacy constraint pins the embedding there).
+//!
+//! Runs the REAL tiny model through PJRT over shaped links.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example smart_home
+//! ```
+
+use edgeshard::cluster::{Cluster, Device, DeviceClass};
+use edgeshard::coordinator::{api::GenRequest, Batcher, Engine, EngineConfig};
+use edgeshard::planner::{LatencyDp, Planner};
+use edgeshard::profiler::Workload;
+use edgeshard::runtime::{ExecService, Manifest, MeasuredProfiler, WeightStore};
+use edgeshard::workload::Corpus;
+
+/// Household devices: slow tablet (source), mid phone, fast hub.
+fn household() -> Cluster {
+    let tablet = DeviceClass {
+        name: "Tablet".into(),
+        mem_bytes: 6 << 30,
+        tflops: 0.5,
+        mem_bw_gbps: 25.0,
+        is_cloud: false,
+    };
+    let phone = DeviceClass {
+        name: "Phone".into(),
+        mem_bytes: 8 << 30,
+        tflops: 1.0,
+        mem_bw_gbps: 40.0,
+        is_cloud: false,
+    };
+    let hub = DeviceClass {
+        name: "HomeHub".into(),
+        mem_bytes: 16 << 30,
+        tflops: 2.5,
+        mem_bw_gbps: 100.0,
+        is_cloud: false,
+    };
+    let devices = vec![
+        Device::new(0, tablet),
+        Device::new(1, phone),
+        Device::new(2, hub),
+    ];
+    // home Wi-Fi: ~80 Mbps, 2 ms
+    Cluster::new(devices, 80.0, 2.0)
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts not built — run `make artifacts` first");
+        return Ok(());
+    }
+    let manifest = Manifest::load(dir)?;
+    let weights = WeightStore::load(&manifest)?;
+    let (_svc, handle) = ExecService::start(&manifest)?;
+
+    let cluster = household();
+    let mprof = MeasuredProfiler::new(&manifest, &weights, handle.clone());
+    let traces = mprof.profile(&cluster, Workload::paper_default())?;
+    let plan = LatencyDp::new().plan(&traces, &cluster)?;
+    println!("household plan: {} (embedding pinned to the tablet)", plan.describe());
+    for s in &plan.stages {
+        println!(
+            "  {:<10} layers {}..{}",
+            cluster.devices[s.device].name, s.start, s.end
+        );
+    }
+
+    let engine = Engine::build(
+        &manifest,
+        &weights,
+        handle,
+        &plan,
+        &cluster,
+        &EngineConfig {
+            time_scale: 0.001,
+            ..Default::default()
+        },
+    )?;
+    let mut batcher = Batcher::new(manifest.config.prefill_len, manifest.batch_sizes.clone());
+
+    // the user asks one thing at a time (sequential inference)
+    let prompts = [
+        "turn the living room lights to warm white",
+        "what is on my calendar tomorrow morning",
+        "play something quiet in the kitchen",
+    ];
+    for (i, prompt) in prompts.iter().enumerate() {
+        let req = GenRequest {
+            id: i as u64 + 1,
+            prompt: prompt.bytes().map(|b| b as i32).collect(),
+            max_new_tokens: 12,
+        };
+        let groups = batcher.pack(&[req]);
+        let (results, _) = engine.generate_sequential(&groups)?;
+        let r = &results[0];
+        println!(
+            "\n> {prompt}\n< {} \n  [ttft {:.1} ms · {:.2} ms/token]",
+            Corpus::detokenize(&r.tokens),
+            r.ttft_ms,
+            r.ms_per_token()
+        );
+    }
+    engine.shutdown()?;
+    Ok(())
+}

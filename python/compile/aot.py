@@ -1,0 +1,182 @@
+"""AOT compile path: lower every shard variant to HLO **text** + export weights.
+
+Run once by ``make artifacts``::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Outputs (consumed by rust/src/runtime/):
+
+* ``artifacts/<name>.hlo.txt``  — one per (shard fn, phase, batch) variant
+* ``artifacts/weights.bin``     — flat little-endian f32, canonical order
+* ``artifacts/manifest.json``   — model config + weight table + artifact
+  input/output signatures
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` crate links) rejects; the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+BATCH_SIZES = (1, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _sig(specs) -> List[dict]:
+    return [{"dtype": str(s.dtype), "shape": list(s.shape)} for s in specs]
+
+
+def shard_variants(cfg: M.ModelConfig):
+    """Yield (name, fn, arg_specs, output_signature) for every AOT variant."""
+    d, hd, kv = cfg.d_model, cfg.head_dim, cfg.n_kv_heads
+    s_pre, max_seq, vocab = cfg.prefill_len, cfg.max_seq, cfg.vocab_size
+    layer_w = [
+        _spec(cfg.layer_param_shapes()[p]) for p in M.ModelConfig.LAYER_PARAM_ORDER
+    ]
+    emb_w = _spec((vocab, d))
+    head_w = [_spec((d,)), _spec((d, vocab))]
+    cache = _spec((0, kv, max_seq, hd))  # batch filled per-variant
+
+    for b in BATCH_SIZES:
+        cache_b = _spec((b, kv, max_seq, hd))
+        variants = {
+            f"embed_prefill_b{b}": (
+                lambda emb, toks: (M.embed_shard(cfg, emb, toks),),
+                [emb_w, _spec((b, s_pre), jnp.int32)],
+            ),
+            f"embed_decode_b{b}": (
+                lambda emb, toks: (M.embed_shard(cfg, emb, toks),),
+                [emb_w, _spec((b, 1), jnp.int32)],
+            ),
+            f"layer_prefill_b{b}": (
+                lambda *a: M.layer_prefill_shard(cfg, *a),
+                layer_w + [_spec((b, s_pre, d))],
+            ),
+            f"layer_decode_b{b}": (
+                lambda *a: M.layer_decode_shard(cfg, *a),
+                layer_w
+                + [_spec((b, 1, d)), cache_b, cache_b, _spec((), jnp.int32)],
+            ),
+            f"head_prefill_b{b}": (
+                lambda fn_, lm, h: (M.head_shard(cfg, fn_, lm, h),),
+                head_w + [_spec((b, s_pre, d))],
+            ),
+            f"head_decode_b{b}": (
+                lambda fn_, lm, h: (M.head_shard(cfg, fn_, lm, h),),
+                head_w + [_spec((b, 1, d))],
+            ),
+        }
+        for name, (fn, specs) in variants.items():
+            yield name, fn, specs
+
+
+def export_weights(cfg: M.ModelConfig, out_dir: str, seed: int = 0):
+    """Write weights.bin + return the manifest weight table."""
+    weights = M.init_weights(cfg, seed)
+    order = ["tok_emb"]
+    for i in range(cfg.n_layers):
+        order += [f"layers.{i}.{p}" for p in M.ModelConfig.LAYER_PARAM_ORDER]
+    order += ["final_norm", "lm_head"]
+
+    table = []
+    offset = 0
+    path = os.path.join(out_dir, "weights.bin")
+    with open(path, "wb") as f:
+        for name in order:
+            arr = np.asarray(weights[name], dtype="<f4")
+            f.write(arr.tobytes())
+            table.append(
+                {"name": name, "offset_bytes": offset, "shape": list(arr.shape)}
+            )
+            offset += arr.nbytes
+    return table, offset
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="legacy single-file marker path")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    cfg = M.TINY
+    artifacts = []
+    for name, fn, specs in shard_variants(cfg):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_specs = [
+            {"dtype": str(o.dtype), "shape": list(o.shape)}
+            for o in jax.eval_shape(fn, *specs)
+        ]
+        artifacts.append(
+            {"name": name, "file": fname, "inputs": _sig(specs), "outputs": out_specs}
+        )
+        print(f"lowered {name}: {len(text)} chars")
+
+    table, total = export_weights(cfg, out_dir, args.seed)
+
+    manifest = {
+        "config": {
+            "name": cfg.name,
+            "vocab_size": cfg.vocab_size,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads,
+            "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq,
+            "prefill_len": cfg.prefill_len,
+            "layer_param_order": list(M.ModelConfig.LAYER_PARAM_ORDER),
+        },
+        "batch_sizes": list(BATCH_SIZES),
+        "weights_file": "weights.bin",
+        "weights_total_bytes": total,
+        "weights": table,
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    if args.out is not None:
+        # legacy Makefile stamp: the first artifact doubles as the stamp file
+        with open(args.out, "w") as f:
+            f.write("see manifest.json\n")
+    print(f"wrote {len(artifacts)} artifacts + weights ({total} bytes) to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

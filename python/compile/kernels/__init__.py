@@ -1,0 +1,18 @@
+"""Layer-1 Pallas kernels for the EdgeShard shard compute.
+
+All kernels run under ``interpret=True`` so the lowered HLO executes on any
+PJRT backend (the rust coordinator uses the CPU plugin).  Real-TPU lowering
+would emit Mosaic custom-calls; see DESIGN.md #Hardware-Adaptation for the
+VMEM/MXU tiling rationale.
+"""
+
+from .attention import flash_attention_prefill, decode_attention
+from .swiglu import swiglu_mlp
+from . import ref
+
+__all__ = [
+    "flash_attention_prefill",
+    "decode_attention",
+    "swiglu_mlp",
+    "ref",
+]

@@ -1,0 +1,192 @@
+"""Pallas attention kernels (Layer 1).
+
+Two kernels cover the two phases of autoregressive LLM inference:
+
+* :func:`flash_attention_prefill` — blocked causal self-attention over the
+  whole prompt, flash-attention style online softmax.  The CUDA original
+  tiles Q/K/V into shared memory per threadblock; on TPU the same insight
+  becomes a VMEM-resident (block_q, head_dim) accumulator streamed against
+  (block_k, head_dim) K/V tiles, with the HBM->VMEM schedule expressed by
+  ``pl.BlockSpec`` index maps instead of a CUDA grid.
+
+* :func:`decode_attention` — single-token attention against the KV cache
+  with a runtime length mask, one (batch, head) program per grid cell.
+
+Both are lowered with ``interpret=True`` (see package docstring).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Mask value used instead of -inf so that fully-masked rows produce zeros
+# (exp(-1e30 - max) == 0) rather than NaNs.
+_NEG_INF = -1e30
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, scale: float):
+    """One (batch*head, q-block) program: stream K/V blocks, online softmax."""
+    block_q, head_dim = q_ref.shape
+    seq_len = k_ref.shape[0]
+    q_index = pl.program_id(1)
+
+    q = q_ref[...].astype(jnp.float32) * scale
+
+    def body(start_k, carry):
+        acc, m_prev, l_prev = carry
+        k = pl.load(k_ref, (pl.dslice(start_k * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(start_k * block_k, block_k), slice(None)))
+        s = q @ k.astype(jnp.float32).T  # (block_q, block_k)
+
+        # Causal mask: query row (absolute) >= key col (absolute).
+        row = q_index * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0
+        )
+        col = start_k * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1
+        )
+        s = jnp.where(row >= col, s, _NEG_INF)
+
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        correction = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * correction + jnp.sum(p, axis=-1)
+        acc = acc * correction[:, None] + p @ v.astype(jnp.float32)
+        return acc, m_cur, l_cur
+
+    # Only stream K blocks at-or-below the diagonal of this Q block.
+    num_k = (q_index + 1) * block_q // block_k
+    acc0 = jnp.zeros((block_q, head_dim), jnp.float32)
+    m0 = jnp.full((block_q,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, num_k, body, (acc0, m0, l0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_prefill(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Causal flash attention for the prefill phase.
+
+    Args:
+      q, k, v: ``[batch, heads, seq, head_dim]`` (multi-query already
+        expanded — the L2 model repeats KV heads before calling in).
+    Returns:
+      ``[batch, heads, seq, head_dim]`` attention output.
+    """
+    batch, heads, seq, head_dim = q.shape
+    block_q = min(block_q, seq)
+    block_k = min(block_k, seq)
+    if seq % block_q or seq % block_k:
+        raise ValueError(f"seq={seq} must divide block sizes {block_q},{block_k}")
+    scale = 1.0 / math.sqrt(head_dim)
+
+    kernel = functools.partial(_prefill_kernel, block_k=block_k, scale=scale)
+    bh = batch * heads
+    qf = q.reshape(bh, seq, head_dim)
+    kf = k.reshape(bh, seq, head_dim)
+    vf = v.reshape(bh, seq, head_dim)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, seq // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, head_dim), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, seq, head_dim), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, seq, head_dim), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, head_dim), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq, head_dim), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(batch, heads, seq, head_dim)
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int, scale: float):
+    """One (batch*head,) program: q is a single row, K/V are the full cache."""
+    max_seq, head_dim = k_ref.shape
+    pos = pos_ref[0]  # number of valid cache entries - 1 == current position
+
+    q = q_ref[...].astype(jnp.float32) * scale  # (1, head_dim)
+
+    def body(start_k, carry):
+        acc, m_prev, l_prev = carry
+        kb = pl.load(k_ref, (pl.dslice(start_k * block_k, block_k), slice(None)))
+        vb = pl.load(v_ref, (pl.dslice(start_k * block_k, block_k), slice(None)))
+        s = q @ kb.astype(jnp.float32).T  # (1, block_k)
+        col = start_k * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        s = jnp.where(col <= pos, s, _NEG_INF)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        correction = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_cur = l_prev * correction + jnp.sum(p, axis=-1)
+        acc = acc * correction[:, None] + p @ vb.astype(jnp.float32)
+        return acc, m_cur, l_cur
+
+    num_k = max_seq // block_k
+    acc0 = jnp.zeros((1, head_dim), jnp.float32)
+    m0 = jnp.full((1,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((1,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, num_k, body, (acc0, m0, l0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+    *,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Single-step attention against the KV cache.
+
+    Args:
+      q: ``[batch, heads, 1, head_dim]`` current-token queries.
+      k_cache, v_cache: ``[batch, heads, max_seq, head_dim]`` with the
+        current token's K/V already written at index ``pos``.
+      pos: scalar int32 — the current absolute position (mask is ``<= pos``).
+    Returns:
+      ``[batch, heads, 1, head_dim]``.
+    """
+    batch, heads, one, head_dim = q.shape
+    assert one == 1
+    max_seq = k_cache.shape[2]
+    block_k = min(block_k, max_seq)
+    if max_seq % block_k:
+        raise ValueError(f"max_seq={max_seq} must divide block_k={block_k}")
+    scale = 1.0 / math.sqrt(head_dim)
+
+    bh = batch * heads
+    qf = q.reshape(bh, 1, head_dim)
+    kf = k_cache.reshape(bh, max_seq, head_dim)
+    vf = v_cache.reshape(bh, max_seq, head_dim)
+    pos_arr = jnp.broadcast_to(pos.astype(jnp.int32), (1,))
+
+    kernel = functools.partial(_decode_kernel, block_k=block_k, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b: (0,)),
+            pl.BlockSpec((None, 1, head_dim), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, max_seq, head_dim), lambda b: (b, 0, 0)),
+            pl.BlockSpec((None, max_seq, head_dim), lambda b: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, 1, head_dim), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, 1, head_dim), q.dtype),
+        interpret=interpret,
+    )(pos_arr, qf, kf, vf)
+    return out.reshape(batch, heads, 1, head_dim)

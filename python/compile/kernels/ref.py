@@ -1,0 +1,82 @@
+"""Pure-jnp reference oracle for every Layer-1 kernel.
+
+These are the semantics the Pallas kernels must reproduce; pytest asserts
+allclose between the two.  Kept dependency-free (no pallas import) so they
+also serve as readable documentation of the math.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_prefill(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Causal softmax attention. q,k,v: [batch, heads, seq, head_dim]."""
+    seq = q.shape[2]
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    mask = jnp.tril(jnp.ones((seq, seq), bool))
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def attention_decode(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, pos: jax.Array
+) -> jax.Array:
+    """Single-token attention over a length-masked cache.
+
+    q: [batch, heads, 1, head_dim]; caches: [batch, heads, max_seq, head_dim];
+    pos: scalar — positions > pos are masked out.
+    """
+    max_seq = k_cache.shape[2]
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    )
+    s = s * scale
+    idx = jnp.arange(max_seq)
+    s = jnp.where(idx[None, None, None, :] <= pos, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v_cache.astype(jnp.float32)).astype(
+        q.dtype
+    )
+
+
+def swiglu_mlp(
+    x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array
+) -> jax.Array:
+    """SwiGLU feed-forward: silu(x@Wg) * (x@Wu) @ Wd.  x: [tokens, d_model]."""
+    xf = x.astype(jnp.float32)
+    g = xf @ w_gate.astype(jnp.float32)
+    u = xf @ w_up.astype(jnp.float32)
+    h = jax.nn.silu(g) * u
+    return (h @ w_down.astype(jnp.float32)).astype(x.dtype)
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm over the last axis."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary position embedding.
+
+    x: [batch, heads, seq, head_dim]; positions: [seq] absolute positions.
+    Rotates pairs (x[..., :d/2], x[..., d/2:]).
+    """
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [seq, half]
+    cos = jnp.cos(angles)[None, None, :, :]
+    sin = jnp.sin(angles)[None, None, :, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

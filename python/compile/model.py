@@ -1,0 +1,320 @@
+"""Layer-2: Llama-style decoder shards in JAX (build-time only).
+
+EdgeShard partitions an LLM *layer-wise* across devices, so the unit of AOT
+compilation is the **shard function**, not the whole model:
+
+* ``embed_prefill`` / ``embed_decode``  — token embedding lookup
+* ``layer_prefill`` / ``layer_decode``  — one decoder block (RMSNorm ->
+  RoPE QKV -> Pallas attention -> residual -> RMSNorm -> Pallas SwiGLU ->
+  residual), KV cache explicit in/out
+* ``head_prefill`` / ``head_decode``    — final RMSNorm + LM head logits
+
+All decoder layers share shapes, so ONE compiled ``layer_*`` executable
+serves every layer: the rust coordinator feeds each call that layer's weight
+buffers.  This is what makes arbitrary layer->device partitions possible
+without recompilation.
+
+Weights are runtime *inputs* (exported to ``artifacts/weights.bin`` by
+``aot.py``), never baked into HLO constants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import decode_attention, flash_attention_prefill, swiglu_mlp
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture of the executable model."""
+
+    name: str = "tinyllama-4l"
+    vocab_size: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 256
+    max_seq: int = 128
+    prefill_len: int = 32
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def layer_param_shapes(self) -> Dict[str, Tuple[int, ...]]:
+        d, hd = self.d_model, self.head_dim
+        return {
+            "attn_norm": (d,),
+            "wq": (d, self.n_heads * hd),
+            "wk": (d, self.n_kv_heads * hd),
+            "wv": (d, self.n_kv_heads * hd),
+            "wo": (self.n_heads * hd, d),
+            "ffn_norm": (d,),
+            "w_gate": (d, self.d_ff),
+            "w_up": (d, self.d_ff),
+            "w_down": (self.d_ff, d),
+        }
+
+    # Canonical ordering of the per-layer weight arguments for the shard fns
+    # and for the flat weights.bin export.  rust/src/runtime/weights.rs
+    # mirrors this order.
+    LAYER_PARAM_ORDER = (
+        "attn_norm",
+        "wq",
+        "wk",
+        "wv",
+        "wo",
+        "ffn_norm",
+        "w_gate",
+        "w_up",
+        "w_down",
+    )
+
+
+TINY = ModelConfig()
+# A second config exercised by tests to catch shape assumptions (GQA: fewer
+# KV heads than Q heads).
+TINY_GQA = ModelConfig(
+    name="tinyllama-gqa",
+    d_model=64,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    max_seq=64,
+    prefill_len=16,
+)
+
+
+def init_weights(cfg: ModelConfig, seed: int = 0) -> Dict[str, jax.Array]:
+    """Deterministic random-init weights, keyed like the manifest entries."""
+    key = jax.random.PRNGKey(seed)
+    out: Dict[str, jax.Array] = {}
+
+    def nxt():
+        nonlocal key
+        key, sub = jax.random.split(key)
+        return sub
+
+    scale = 0.02
+    out["tok_emb"] = jax.random.normal(
+        nxt(), (cfg.vocab_size, cfg.d_model), jnp.float32
+    ) * scale
+    for i in range(cfg.n_layers):
+        # Draw in canonical order so the export layout is deterministic.
+        for pname in ModelConfig.LAYER_PARAM_ORDER:
+            shape = cfg.layer_param_shapes()[pname]
+            if pname.endswith("norm"):
+                out[f"layers.{i}.{pname}"] = jnp.ones(shape, jnp.float32)
+            else:
+                out[f"layers.{i}.{pname}"] = (
+                    jax.random.normal(nxt(), shape, jnp.float32) * scale
+                )
+    out["final_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+    out["lm_head"] = (
+        jax.random.normal(nxt(), (cfg.d_model, cfg.vocab_size), jnp.float32) * scale
+    )
+    return out
+
+
+# --------------------------------------------------------------------------
+# Shard functions.  Layer weights are passed positionally in
+# ModelConfig.LAYER_PARAM_ORDER so the HLO parameter order is stable.
+# --------------------------------------------------------------------------
+
+
+def embed_shard(cfg: ModelConfig, tok_emb: jax.Array, tokens: jax.Array) -> jax.Array:
+    """tokens [B, S] int32 -> hidden [B, S, D]."""
+    return tok_emb[tokens]
+
+
+def _qkv(cfg: ModelConfig, h, wq, wk, wv, positions):
+    """Project + reshape + RoPE.  h: [B, S, D] -> q [B,H,S,hd], k/v [B,KV,S,hd]."""
+    b, s, _ = h.shape
+    hd = cfg.head_dim
+    q = (h @ wq).reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = (h @ wk).reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = (h @ wv).reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    q = ref.rope(q, positions, cfg.rope_theta)
+    k = ref.rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """[B, KV, S, hd] -> [B, H, S, hd] by repeating each KV head."""
+    reps = cfg.n_heads // cfg.n_kv_heads
+    if reps == 1:
+        return x
+    return jnp.repeat(x, reps, axis=1)
+
+
+def layer_prefill_shard(
+    cfg: ModelConfig,
+    attn_norm,
+    wq,
+    wk,
+    wv,
+    wo,
+    ffn_norm,
+    w_gate,
+    w_up,
+    w_down,
+    h: jax.Array,
+    *,
+    interpret: bool = True,
+):
+    """One decoder block over the whole prompt.
+
+    h: [B, S, D] -> (h': [B, S, D], k_cache, v_cache: [B, KV, max_seq, hd])
+    The returned caches are zero-padded to max_seq with positions 0..S-1
+    filled, ready for the decode phase.
+    """
+    b, s, _ = h.shape
+    positions = jnp.arange(s)
+    x = ref.rms_norm(h, attn_norm, cfg.norm_eps)
+    q, k, v = _qkv(cfg, x, wq, wk, wv, positions)
+    attn = flash_attention_prefill(
+        q, _repeat_kv(cfg, k), _repeat_kv(cfg, v), interpret=interpret
+    )
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    h = h + attn @ wo
+    x = ref.rms_norm(h, ffn_norm, cfg.norm_eps)
+    mlp = swiglu_mlp(
+        x.reshape(b * s, cfg.d_model), w_gate, w_up, w_down, interpret=interpret
+    ).reshape(b, s, cfg.d_model)
+    h = h + mlp
+
+    pad = cfg.max_seq - s
+    k_cache = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    v_cache = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return h, k_cache, v_cache
+
+
+def layer_decode_shard(
+    cfg: ModelConfig,
+    attn_norm,
+    wq,
+    wk,
+    wv,
+    wo,
+    ffn_norm,
+    w_gate,
+    w_up,
+    w_down,
+    h: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+    *,
+    interpret: bool = True,
+):
+    """One decoder block for a single new token at absolute position ``pos``.
+
+    h: [B, 1, D]; caches [B, KV, max_seq, hd] -> (h', k_cache', v_cache').
+    """
+    b = h.shape[0]
+    positions = jnp.reshape(pos, (1,))
+    x = ref.rms_norm(h, attn_norm, cfg.norm_eps)
+    q, k, v = _qkv(cfg, x, wq, wk, wv, positions)
+    # Write this token's K/V into the cache at `pos`.
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, 0, pos, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, 0, pos, 0))
+    attn = decode_attention(
+        q,
+        _repeat_kv(cfg, k_cache),
+        _repeat_kv(cfg, v_cache),
+        pos,
+        interpret=interpret,
+    )
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, 1, -1)
+    h = h + attn @ wo
+    x = ref.rms_norm(h, ffn_norm, cfg.norm_eps)
+    mlp = swiglu_mlp(
+        x.reshape(b, cfg.d_model), w_gate, w_up, w_down, interpret=interpret
+    ).reshape(b, 1, cfg.d_model)
+    h = h + mlp
+    return h, k_cache, v_cache
+
+
+def head_shard(cfg: ModelConfig, final_norm, lm_head, h: jax.Array) -> jax.Array:
+    """hidden [B, S, D] -> logits [B, vocab] for the LAST position."""
+    x = ref.rms_norm(h[:, -1, :], final_norm, cfg.norm_eps)
+    return x @ lm_head
+
+
+# --------------------------------------------------------------------------
+# Whole-model composition (used by tests and by aot.py's self-check; the
+# rust coordinator performs the same composition across devices).
+# --------------------------------------------------------------------------
+
+
+def full_prefill(
+    cfg: ModelConfig,
+    weights: Dict[str, jax.Array],
+    tokens: jax.Array,
+    *,
+    interpret: bool = True,
+):
+    """Compose shards over the prompt.  Returns (logits, caches per layer)."""
+    h = embed_shard(cfg, weights["tok_emb"], tokens)
+    caches: List[Tuple[jax.Array, jax.Array]] = []
+    for i in range(cfg.n_layers):
+        args = [weights[f"layers.{i}.{p}"] for p in ModelConfig.LAYER_PARAM_ORDER]
+        h, kc, vc = layer_prefill_shard(cfg, *args, h, interpret=interpret)
+        caches.append((kc, vc))
+    logits = head_shard(cfg, weights["final_norm"], weights["lm_head"], h)
+    return logits, caches
+
+
+def full_decode_step(
+    cfg: ModelConfig,
+    weights: Dict[str, jax.Array],
+    token: jax.Array,
+    caches,
+    pos: jax.Array,
+    *,
+    interpret: bool = True,
+):
+    """One autoregressive step.  token: [B, 1] int32."""
+    h = embed_shard(cfg, weights["tok_emb"], token)
+    new_caches = []
+    for i in range(cfg.n_layers):
+        args = [weights[f"layers.{i}.{p}"] for p in ModelConfig.LAYER_PARAM_ORDER]
+        kc, vc = caches[i]
+        h, kc, vc = layer_decode_shard(cfg, *args, h, kc, vc, pos, interpret=interpret)
+        new_caches.append((kc, vc))
+    logits = head_shard(cfg, weights["final_norm"], weights["lm_head"], h)
+    return logits, new_caches
+
+
+def generate(
+    cfg: ModelConfig,
+    weights: Dict[str, jax.Array],
+    tokens: jax.Array,
+    n_new: int,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Greedy generation oracle (python reference for the rust engine)."""
+    logits, caches = full_prefill(cfg, weights, tokens, interpret=interpret)
+    out = []
+    pos = tokens.shape[1]
+    cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    out.append(cur)
+    for _ in range(n_new - 1):
+        logits, caches = full_decode_step(
+            cfg, weights, cur, caches, jnp.int32(pos), interpret=interpret
+        )
+        cur = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        out.append(cur)
+        pos += 1
+    return jnp.concatenate(out, axis=1)

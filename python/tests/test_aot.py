@@ -1,0 +1,153 @@
+"""AOT path: manifest integrity, weight export layout, HLO text validity.
+
+These tests guard the python->rust interchange contract: the rust runtime
+(rust/src/runtime/) trusts manifest.json's signatures and weights.bin's
+layout byte-for-byte.
+"""
+
+import io
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+class TestManifest:
+    def test_config_matches_tiny(self):
+        m = _manifest()
+        cfg = m["config"]
+        assert cfg["d_model"] == M.TINY.d_model
+        assert cfg["n_layers"] == M.TINY.n_layers
+        assert cfg["max_seq"] == M.TINY.max_seq
+        assert cfg["prefill_len"] == M.TINY.prefill_len
+        assert cfg["layer_param_order"] == list(M.ModelConfig.LAYER_PARAM_ORDER)
+
+    def test_all_variants_present(self):
+        m = _manifest()
+        names = {a["name"] for a in m["artifacts"]}
+        for b in m["batch_sizes"]:
+            for fn in ("embed", "layer", "head"):
+                for ph in ("prefill", "decode"):
+                    assert f"{fn}_{ph}_b{b}" in names
+
+    def test_artifact_files_exist(self):
+        m = _manifest()
+        for a in m["artifacts"]:
+            path = os.path.join(ART, a["file"])
+            assert os.path.exists(path), a["file"]
+            with open(path) as f:
+                head = f.read(200)
+            assert "HloModule" in head
+
+    def test_weight_table_is_contiguous(self):
+        m = _manifest()
+        offset = 0
+        for w in m["weights"]:
+            assert w["offset_bytes"] == offset
+            offset += int(np.prod(w["shape"])) * 4
+        assert offset == m["weights_total_bytes"]
+        assert os.path.getsize(os.path.join(ART, m["weights_file"])) == offset
+
+    def test_weight_order_matches_model(self):
+        m = _manifest()
+        names = [w["name"] for w in m["weights"]]
+        expect = ["tok_emb"]
+        for i in range(M.TINY.n_layers):
+            expect += [f"layers.{i}.{p}" for p in M.ModelConfig.LAYER_PARAM_ORDER]
+        expect += ["final_norm", "lm_head"]
+        assert names == expect
+
+    def test_weights_bin_matches_init(self):
+        """weights.bin must equal init_weights(TINY, seed=0) byte-for-byte."""
+        m = _manifest()
+        weights = M.init_weights(M.TINY, seed=0)
+        with open(os.path.join(ART, m["weights_file"]), "rb") as f:
+            blob = f.read()
+        for w in m["weights"][:3] + m["weights"][-2:]:
+            n = int(np.prod(w["shape"]))
+            got = np.frombuffer(
+                blob, dtype="<f4", count=n, offset=w["offset_bytes"]
+            ).reshape(w["shape"])
+            np.testing.assert_array_equal(got, np.asarray(weights[w["name"]]))
+
+    def test_layer_signatures(self):
+        """The rust runtime relies on exact input ordering for layer shards."""
+        m = _manifest()
+        cfg = M.TINY
+        art = {a["name"]: a for a in m["artifacts"]}
+        for b in m["batch_sizes"]:
+            a = art[f"layer_decode_b{b}"]
+            ins = a["inputs"]
+            assert len(ins) == 9 + 4  # 9 weights + h, k_cache, v_cache, pos
+            assert ins[9]["shape"] == [b, 1, cfg.d_model]
+            assert ins[10]["shape"] == [
+                b,
+                cfg.n_kv_heads,
+                cfg.max_seq,
+                cfg.head_dim,
+            ]
+            assert ins[12]["shape"] == []
+            assert ins[12]["dtype"] == "int32"
+            outs = a["outputs"]
+            assert [o["shape"] for o in outs] == [
+                [b, 1, cfg.d_model],
+                [b, cfg.n_kv_heads, cfg.max_seq, cfg.head_dim],
+                [b, cfg.n_kv_heads, cfg.max_seq, cfg.head_dim],
+            ]
+
+    def test_head_signature(self):
+        m = _manifest()
+        cfg = M.TINY
+        art = {a["name"]: a for a in m["artifacts"]}
+        a = art["head_prefill_b1"]
+        assert a["outputs"][0]["shape"] == [1, cfg.vocab_size]
+
+
+class TestLowering:
+    def test_hlo_text_roundtrip(self, tmp_path):
+        """Lower one variant fresh and sanity-check the HLO text."""
+        cfg = M.TINY_GQA
+        found = False
+        for name, fn, specs in aot.shard_variants(cfg):
+            if name != "embed_decode_b1":
+                continue
+            found = True
+            lowered = jax.jit(fn).lower(*specs)
+            text = aot.to_hlo_text(lowered)
+            assert text.startswith("HloModule")
+            assert "ENTRY" in text
+        assert found
+
+    def test_variant_count(self):
+        names = [n for n, _, _ in aot.shard_variants(M.TINY)]
+        assert len(names) == 6 * len(aot.BATCH_SIZES)
+        assert len(set(names)) == len(names)
+
+    def test_export_weights_layout(self, tmp_path):
+        cfg = M.TINY_GQA
+        table, total = aot.export_weights(cfg, str(tmp_path), seed=0)
+        blob = open(os.path.join(tmp_path, "weights.bin"), "rb").read()
+        assert len(blob) == total
+        weights = M.init_weights(cfg, seed=0)
+        for w in table:
+            n = int(np.prod(w["shape"]))
+            got = np.frombuffer(
+                blob, dtype="<f4", count=n, offset=w["offset_bytes"]
+            ).reshape(w["shape"])
+            np.testing.assert_array_equal(got, np.asarray(weights[w["name"]]))

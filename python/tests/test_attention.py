@@ -1,0 +1,153 @@
+"""L1 correctness: Pallas attention kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/blocks/dtypes; assert_allclose against ref.py is
+the CORE correctness signal for the compute layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import decode_attention, flash_attention_prefill, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+class TestPrefillAttention:
+    def test_matches_ref_basic(self):
+        q, k, v = (_rand(i, (2, 4, 32, 16)) for i in range(3))
+        out = flash_attention_prefill(q, k, v, block_q=16, block_k=16)
+        np.testing.assert_allclose(out, ref.attention_prefill(q, k, v), **TOL)
+
+    def test_single_block(self):
+        q, k, v = (_rand(i, (1, 2, 8, 8)) for i in range(3))
+        out = flash_attention_prefill(q, k, v, block_q=8, block_k=8)
+        np.testing.assert_allclose(out, ref.attention_prefill(q, k, v), **TOL)
+
+    def test_block_larger_than_seq_is_clamped(self):
+        q, k, v = (_rand(i, (1, 2, 16, 8)) for i in range(3))
+        out = flash_attention_prefill(q, k, v, block_q=128, block_k=128)
+        np.testing.assert_allclose(out, ref.attention_prefill(q, k, v), **TOL)
+
+    def test_rejects_non_dividing_block(self):
+        q, k, v = (_rand(i, (1, 2, 24, 8)) for i in range(3))
+        with pytest.raises(ValueError):
+            flash_attention_prefill(q, k, v, block_q=16, block_k=16)
+
+    def test_causality(self):
+        """Perturbing a future key must not change earlier outputs."""
+        q, k, v = (_rand(i, (1, 1, 16, 8)) for i in range(3))
+        out1 = flash_attention_prefill(q, k, v, block_q=8, block_k=8)
+        k2 = k.at[:, :, -1, :].add(100.0)
+        v2 = v.at[:, :, -1, :].add(100.0)
+        out2 = flash_attention_prefill(q, k2, v2, block_q=8, block_k=8)
+        np.testing.assert_allclose(out1[:, :, :-1], out2[:, :, :-1], **TOL)
+
+    def test_first_row_attends_only_to_itself(self):
+        q, k, v = (_rand(i, (1, 1, 8, 4)) for i in range(3))
+        out = flash_attention_prefill(q, k, v, block_q=8, block_k=8)
+        np.testing.assert_allclose(out[0, 0, 0], v[0, 0, 0], **TOL)
+
+    @settings(deadline=None, max_examples=20)
+    @given(
+        batch=st.integers(1, 3),
+        heads=st.integers(1, 4),
+        log_seq=st.integers(2, 6),
+        head_dim=st.sampled_from([4, 8, 16, 32]),
+        log_block=st.integers(1, 5),
+    )
+    def test_hypothesis_shapes(self, batch, heads, log_seq, head_dim, log_block):
+        seq, block = 2**log_seq, 2**log_block
+        if seq % min(block, seq):
+            return
+        q, k, v = (_rand(i + 7, (batch, heads, seq, head_dim)) for i in range(3))
+        out = flash_attention_prefill(q, k, v, block_q=block, block_k=block)
+        np.testing.assert_allclose(out, ref.attention_prefill(q, k, v), **TOL)
+
+    def test_large_magnitude_stability(self):
+        """Online softmax must not overflow with large logits."""
+        q = _rand(0, (1, 1, 16, 8)) * 30
+        k = _rand(1, (1, 1, 16, 8)) * 30
+        v = _rand(2, (1, 1, 16, 8))
+        out = flash_attention_prefill(q, k, v, block_q=8, block_k=8)
+        assert np.isfinite(np.asarray(out)).all()
+        np.testing.assert_allclose(out, ref.attention_prefill(q, k, v), **TOL)
+
+
+class TestDecodeAttention:
+    def test_matches_ref_basic(self):
+        b, h, m, d = 2, 4, 64, 16
+        q = _rand(0, (b, h, 1, d))
+        kc, vc = _rand(1, (b, h, m, d)), _rand(2, (b, h, m, d))
+        out = decode_attention(q, kc, vc, jnp.int32(10), block_k=16)
+        np.testing.assert_allclose(
+            out, ref.attention_decode(q, kc, vc, jnp.int32(10)), **TOL
+        )
+
+    @pytest.mark.parametrize("pos", [0, 1, 15, 31, 63])
+    def test_positions(self, pos):
+        b, h, m, d = 1, 2, 64, 8
+        q = _rand(3, (b, h, 1, d))
+        kc, vc = _rand(4, (b, h, m, d)), _rand(5, (b, h, m, d))
+        out = decode_attention(q, kc, vc, jnp.int32(pos), block_k=16)
+        np.testing.assert_allclose(
+            out, ref.attention_decode(q, kc, vc, jnp.int32(pos)), **TOL
+        )
+
+    def test_pos_zero_returns_first_value(self):
+        b, h, m, d = 1, 1, 32, 8
+        q = _rand(6, (b, h, 1, d))
+        kc, vc = _rand(7, (b, h, m, d)), _rand(8, (b, h, m, d))
+        out = decode_attention(q, kc, vc, jnp.int32(0), block_k=8)
+        np.testing.assert_allclose(out[0, 0, 0], vc[0, 0, 0], **TOL)
+
+    def test_masked_cache_is_ignored(self):
+        """Garbage beyond pos must not leak into the output."""
+        b, h, m, d = 1, 2, 32, 8
+        q = _rand(9, (b, h, 1, d))
+        kc, vc = _rand(10, (b, h, m, d)), _rand(11, (b, h, m, d))
+        pos = jnp.int32(7)
+        out1 = decode_attention(q, kc, vc, pos, block_k=8)
+        kc2 = kc.at[:, :, 8:, :].set(1e6)
+        vc2 = vc.at[:, :, 8:, :].set(-1e6)
+        out2 = decode_attention(q, kc2, vc2, pos, block_k=8)
+        np.testing.assert_allclose(out1, out2, **TOL)
+
+    @settings(deadline=None, max_examples=20)
+    @given(
+        batch=st.integers(1, 3),
+        heads=st.integers(1, 4),
+        log_max=st.integers(3, 7),
+        head_dim=st.sampled_from([4, 8, 16]),
+        pos_frac=st.floats(0, 1),
+    )
+    def test_hypothesis_shapes(self, batch, heads, log_max, head_dim, pos_frac):
+        m = 2**log_max
+        pos = jnp.int32(int(pos_frac * (m - 1)))
+        q = _rand(12, (batch, heads, 1, head_dim))
+        kc, vc = _rand(13, (batch, heads, m, head_dim)), _rand(
+            14, (batch, heads, m, head_dim)
+        )
+        out = decode_attention(q, kc, vc, pos, block_k=8)
+        np.testing.assert_allclose(out, ref.attention_decode(q, kc, vc, pos), **TOL)
+
+    def test_decode_equals_prefill_last_row(self):
+        """Decode over a cache == last row of prefill over the same seq."""
+        b, h, s, d = 1, 2, 16, 8
+        q = _rand(15, (b, h, s, d))
+        k = _rand(16, (b, h, s, d))
+        v = _rand(17, (b, h, s, d))
+        pre = ref.attention_prefill(q, k, v)
+        out = decode_attention(
+            q[:, :, -1:, :], k, v, jnp.int32(s - 1), block_k=8
+        )
+        np.testing.assert_allclose(out[:, :, 0], pre[:, :, -1], **TOL)

@@ -1,0 +1,189 @@
+"""L2 correctness: shard composition, KV-cache consistency, GQA, generation.
+
+The key invariant for EdgeShard: running the model as independent shards
+(what the rust coordinator does across devices) must be numerically
+identical to a monolithic forward pass, and the decode path (KV cache) must
+agree with re-running prefill over the extended sequence.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.fixture(scope="module", params=[M.TINY_GQA])
+def cfg(request):
+    return request.param
+
+
+@pytest.fixture(scope="module")
+def weights(cfg):
+    return M.init_weights(cfg, seed=0)
+
+
+def _tokens(cfg, batch, length, seed=0):
+    return jax.random.randint(
+        jax.random.PRNGKey(seed), (batch, length), 0, cfg.vocab_size
+    ).astype(jnp.int32)
+
+
+def monolithic_forward(cfg, weights, tokens):
+    """Straight-line reference forward (no shards, no pallas, no cache)."""
+    h = weights["tok_emb"][tokens]
+    s = tokens.shape[1]
+    positions = jnp.arange(s)
+    for i in range(cfg.n_layers):
+        w = {p: weights[f"layers.{i}.{p}"] for p in M.ModelConfig.LAYER_PARAM_ORDER}
+        x = ref.rms_norm(h, w["attn_norm"], cfg.norm_eps)
+        b = x.shape[0]
+        hd = cfg.head_dim
+        q = (x @ w["wq"]).reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+        k = (x @ w["wk"]).reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+        v = (x @ w["wv"]).reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+        q = ref.rope(q, positions, cfg.rope_theta)
+        k = ref.rope(k, positions, cfg.rope_theta)
+        reps = cfg.n_heads // cfg.n_kv_heads
+        k = jnp.repeat(k, reps, axis=1)
+        v = jnp.repeat(v, reps, axis=1)
+        attn = ref.attention_prefill(q, k, v)
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, s, -1)
+        h = h + attn @ w["wo"]
+        x = ref.rms_norm(h, w["ffn_norm"], cfg.norm_eps)
+        mlp = ref.swiglu_mlp(
+            x.reshape(b * s, cfg.d_model), w["w_gate"], w["w_up"], w["w_down"]
+        ).reshape(b, s, cfg.d_model)
+        h = h + mlp
+    x = ref.rms_norm(h[:, -1, :], weights["final_norm"], cfg.norm_eps)
+    return x @ weights["lm_head"]
+
+
+class TestShardComposition:
+    def test_prefill_matches_monolithic(self, cfg, weights):
+        toks = _tokens(cfg, 2, cfg.prefill_len)
+        logits, _ = M.full_prefill(cfg, weights, toks)
+        expect = monolithic_forward(cfg, weights, toks)
+        np.testing.assert_allclose(logits, expect, **TOL)
+
+    def test_decode_matches_prefill_extension(self, cfg, weights):
+        """Prefill(n) + decode steps == prefill(n + k) at every step."""
+        n, k = cfg.prefill_len, 3
+        toks = _tokens(cfg, 1, n + k, seed=3)
+        logits, caches = M.full_prefill(cfg, weights, toks[:, :n])
+        for step in range(k):
+            pos = n + step
+            expect = monolithic_forward(cfg, weights, toks[:, : pos + 1])
+            logits, caches = M.full_decode_step(
+                cfg, weights, toks[:, pos : pos + 1], caches, jnp.int32(pos)
+            )
+            np.testing.assert_allclose(logits, expect, **TOL)
+
+    def test_prefill_cache_contents(self, cfg, weights):
+        """Cache positions >= prompt length must be zero after prefill."""
+        toks = _tokens(cfg, 1, cfg.prefill_len)
+        _, caches = M.full_prefill(cfg, weights, toks)
+        for kc, vc in caches:
+            assert kc.shape == (1, cfg.n_kv_heads, cfg.max_seq, cfg.head_dim)
+            np.testing.assert_array_equal(kc[:, :, cfg.prefill_len :], 0.0)
+            np.testing.assert_array_equal(vc[:, :, cfg.prefill_len :], 0.0)
+            assert np.abs(np.asarray(kc[:, :, : cfg.prefill_len])).sum() > 0
+
+    def test_batch_consistency(self, cfg, weights):
+        """Each batch row must be independent (batched == per-row)."""
+        toks = _tokens(cfg, 3, cfg.prefill_len, seed=5)
+        logits, _ = M.full_prefill(cfg, weights, toks)
+        for b in range(3):
+            solo, _ = M.full_prefill(cfg, weights, toks[b : b + 1])
+            np.testing.assert_allclose(logits[b : b + 1], solo, **TOL)
+
+
+class TestGenerate:
+    def test_deterministic(self, cfg, weights):
+        toks = _tokens(cfg, 2, cfg.prefill_len, seed=7)
+        g1 = M.generate(cfg, weights, toks, 4)
+        g2 = M.generate(cfg, weights, toks, 4)
+        np.testing.assert_array_equal(g1, g2)
+
+    def test_output_range(self, cfg, weights):
+        toks = _tokens(cfg, 1, cfg.prefill_len, seed=8)
+        g = M.generate(cfg, weights, toks, 5)
+        assert g.shape == (1, 5)
+        assert ((g >= 0) & (g < cfg.vocab_size)).all()
+
+    def test_greedy_matches_manual_loop(self, cfg, weights):
+        toks = _tokens(cfg, 1, cfg.prefill_len, seed=9)
+        g = M.generate(cfg, weights, toks, 3)
+        logits, caches = M.full_prefill(cfg, weights, toks)
+        t0 = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        np.testing.assert_array_equal(g[:, 0:1], t0)
+        logits, caches = M.full_decode_step(
+            cfg, weights, t0, caches, jnp.int32(cfg.prefill_len)
+        )
+        t1 = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        np.testing.assert_array_equal(g[:, 1:2], t1)
+
+
+class TestWeights:
+    def test_deterministic_init(self, cfg):
+        w1 = M.init_weights(cfg, seed=0)
+        w2 = M.init_weights(cfg, seed=0)
+        for k in w1:
+            np.testing.assert_array_equal(w1[k], w2[k])
+
+    def test_seed_changes_weights(self, cfg):
+        w1 = M.init_weights(cfg, seed=0)
+        w2 = M.init_weights(cfg, seed=1)
+        assert not np.allclose(w1["lm_head"], w2["lm_head"])
+
+    def test_all_params_present(self, cfg):
+        w = M.init_weights(cfg)
+        assert "tok_emb" in w and "final_norm" in w and "lm_head" in w
+        for i in range(cfg.n_layers):
+            for p in M.ModelConfig.LAYER_PARAM_ORDER:
+                assert f"layers.{i}.{p}" in w
+
+    def test_shapes_match_config(self, cfg):
+        w = M.init_weights(cfg)
+        shapes = cfg.layer_param_shapes()
+        for p, s in shapes.items():
+            assert w[f"layers.0.{p}"].shape == s
+        assert w["tok_emb"].shape == (cfg.vocab_size, cfg.d_model)
+        assert w["lm_head"].shape == (cfg.d_model, cfg.vocab_size)
+
+
+class TestRefPrimitives:
+    def test_rms_norm_unit_variance(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 5
+        out = ref.rms_norm(x, jnp.ones(64))
+        rms = jnp.sqrt(jnp.mean(out**2, -1))
+        np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+    def test_rope_preserves_norm(self):
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 8, 16))
+        out = ref.rope(x, jnp.arange(8))
+        np.testing.assert_allclose(
+            jnp.linalg.norm(out, axis=-1), jnp.linalg.norm(x, axis=-1), rtol=1e-5
+        )
+
+    def test_rope_position_zero_is_identity(self):
+        x = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 8))
+        out = ref.rope(x, jnp.array([0]))
+        np.testing.assert_allclose(out, x, atol=1e-6)
+
+    def test_rope_relative_property(self):
+        """<rope(q,m), rope(k,n)> depends only on m-n (per pair-plane)."""
+        q = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 1, 16))
+        k = jax.random.normal(jax.random.PRNGKey(4), (1, 1, 1, 16))
+        def dot(m, n):
+            qr = ref.rope(q, jnp.array([m]))
+            kr = ref.rope(k, jnp.array([n]))
+            return float(jnp.sum(qr * kr))
+        np.testing.assert_allclose(dot(5, 3), dot(10, 8), rtol=1e-4)
+        np.testing.assert_allclose(dot(2, 2), dot(9, 9), rtol=1e-4)

@@ -1,0 +1,88 @@
+"""L1 correctness: fused SwiGLU Pallas kernel vs the pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import swiglu_mlp, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+TOL = dict(rtol=1e-4, atol=1e-4)
+
+
+def _mats(d_model, d_ff, scale=0.1):
+    return (
+        _rand(1, (d_model, d_ff), scale),
+        _rand(2, (d_model, d_ff), scale),
+        _rand(3, (d_ff, d_model), scale),
+    )
+
+
+class TestSwiglu:
+    def test_matches_ref_basic(self):
+        x = _rand(0, (8, 32))
+        wg, wu, wd = _mats(32, 64)
+        out = swiglu_mlp(x, wg, wu, wd, block_f=16)
+        np.testing.assert_allclose(out, ref.swiglu_mlp(x, wg, wu, wd), **TOL)
+
+    def test_single_token(self):
+        x = _rand(4, (1, 16))
+        wg, wu, wd = _mats(16, 32)
+        out = swiglu_mlp(x, wg, wu, wd, block_f=8)
+        np.testing.assert_allclose(out, ref.swiglu_mlp(x, wg, wu, wd), **TOL)
+
+    def test_block_equals_dff(self):
+        x = _rand(5, (4, 16))
+        wg, wu, wd = _mats(16, 32)
+        out = swiglu_mlp(x, wg, wu, wd, block_f=32)
+        np.testing.assert_allclose(out, ref.swiglu_mlp(x, wg, wu, wd), **TOL)
+
+    def test_block_clamped_to_dff(self):
+        x = _rand(6, (4, 16))
+        wg, wu, wd = _mats(16, 32)
+        out = swiglu_mlp(x, wg, wu, wd, block_f=512)
+        np.testing.assert_allclose(out, ref.swiglu_mlp(x, wg, wu, wd), **TOL)
+
+    def test_rejects_non_dividing_block(self):
+        x = _rand(7, (4, 16))
+        wg, wu, wd = _mats(16, 48)
+        with pytest.raises(ValueError):
+            swiglu_mlp(x, wg, wu, wd, block_f=32)
+
+    def test_zero_input_gives_zero(self):
+        x = jnp.zeros((4, 16))
+        wg, wu, wd = _mats(16, 32)
+        out = swiglu_mlp(x, wg, wu, wd, block_f=8)
+        np.testing.assert_allclose(out, jnp.zeros((4, 16)), atol=1e-7)
+
+    def test_block_invariance(self):
+        """Result must not depend on the tiling choice."""
+        x = _rand(8, (8, 32))
+        wg, wu, wd = _mats(32, 64)
+        outs = [swiglu_mlp(x, wg, wu, wd, block_f=bf) for bf in (8, 16, 32, 64)]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], **TOL)
+
+    @settings(deadline=None, max_examples=20)
+    @given(
+        tokens=st.integers(1, 16),
+        log_d=st.integers(2, 6),
+        log_f=st.integers(3, 7),
+        log_block=st.integers(2, 6),
+    )
+    def test_hypothesis_shapes(self, tokens, log_d, log_f, log_block):
+        d, f, bf = 2**log_d, 2**log_f, 2**log_block
+        x = _rand(9, (tokens, d))
+        wg, wu, wd = _mats(d, f)
+        if f % min(bf, f):
+            return
+        out = swiglu_mlp(x, wg, wu, wd, block_f=bf)
+        np.testing.assert_allclose(out, ref.swiglu_mlp(x, wg, wu, wd), **TOL)

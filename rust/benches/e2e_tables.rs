@@ -1,0 +1,33 @@
+//! End-to-end experiment benches: wall time to regenerate each paper
+//! table/figure (the full profile → plan → evaluate pipeline), plus the
+//! per-cell cost of the throughput evaluation with its batch search.
+
+use edgeshard::cluster::presets;
+use edgeshard::model::{llama2_13b, llama2_70b, llama2_7b};
+use edgeshard::pipeline::Strategy;
+use edgeshard::repro::{evaluate_latency, evaluate_throughput, Method};
+use edgeshard::util::bench;
+
+fn main() {
+    println!("# end-to-end experiment benches\n");
+    let c = presets::paper_testbed(1.0, 0);
+    for (name, model) in [
+        ("7B", llama2_7b()),
+        ("13B", llama2_13b()),
+        ("70B", llama2_70b()),
+    ] {
+        bench(&format!("latency-cell/EdgeShard/{name}"), 5, || {
+            let r = evaluate_latency(&Method::EdgeShard, &model, &c);
+            std::hint::black_box(&r);
+        });
+        bench(&format!("throughput-cell/EdgeShard/{name}"), 3, || {
+            let r = evaluate_throughput(&Method::EdgeShard, &model, &c, Strategy::NoBubble);
+            std::hint::black_box(&r);
+        });
+    }
+    println!();
+    bench("table4/full", 1, || {
+        let s = edgeshard::repro::table4::render(0);
+        std::hint::black_box(&s);
+    });
+}

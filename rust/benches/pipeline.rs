@@ -1,0 +1,48 @@
+//! Pipeline-simulator benchmarks: schedule simulation cost for the
+//! paper's workloads (96 iterations × 4 micro-batches) under each
+//! strategy, including the O(n²)-ish greedy ablation.
+
+use edgeshard::cluster::presets;
+use edgeshard::model::{llama2_70b, llama2_7b};
+use edgeshard::pipeline::{simulate, PipelineSpec, Strategy};
+use edgeshard::planner::{Planner, ThroughputDp};
+use edgeshard::profiler::{AnalyticProfiler, Workload};
+use edgeshard::util::bench;
+
+fn main() {
+    println!("# pipeline simulator benches\n");
+    let cluster = presets::paper_testbed(1.0, 0);
+    for (name, model) in [("7B", llama2_7b()), ("70B", llama2_70b())] {
+        let traces =
+            AnalyticProfiler::default().profile(&model, &cluster, Workload::paper_default());
+        let plan = ThroughputDp::new().plan(&traces, &cluster).unwrap();
+        let spec = PipelineSpec::from_plan(&plan, &traces, &cluster, 4);
+        println!("{name}: {} stages × {} iters", plan.n_stages(), spec.n_iters);
+        for strategy in [Strategy::Bubble, Strategy::NoBubble] {
+            bench(&format!("simulate/{name}/{:?}", strategy), 50, || {
+                let s = simulate(&spec, strategy);
+                std::hint::black_box(&s);
+            });
+        }
+        bench(&format!("simulate/{name}/NoBubbleGreedy"), 5, || {
+            let s = simulate(&spec, Strategy::NoBubbleGreedy);
+            std::hint::black_box(&s);
+        });
+    }
+
+    // scaling in micro-batch count
+    println!("\n# scaling with micro-batches (7B)\n");
+    let traces = AnalyticProfiler::default().profile(
+        &llama2_7b(),
+        &cluster,
+        Workload::paper_default(),
+    );
+    let plan = ThroughputDp::new().plan(&traces, &cluster).unwrap();
+    for n_micro in [1usize, 4, 16, 64] {
+        let spec = PipelineSpec::from_plan(&plan, &traces, &cluster, n_micro);
+        bench(&format!("simulate/no-bubble/micro={n_micro}"), 20, || {
+            let s = simulate(&spec, Strategy::NoBubble);
+            std::hint::black_box(&s);
+        });
+    }
+}

@@ -1,0 +1,61 @@
+//! Planner benchmarks: Algorithm 1 (latency DP, Pareto + greedy) and
+//! Algorithm 2 (throughput DP — exact subset vs class-compressed) across
+//! the three paper models on the 15-device testbed.
+//!
+//! Also shows the scaling wall that makes class compression necessary
+//! (DESIGN.md §Perf).
+
+use edgeshard::cluster::presets;
+use edgeshard::model::{llama2_13b, llama2_70b, llama2_7b, ModelDesc};
+use edgeshard::planner::latency::{algo1, algo1_greedy};
+use edgeshard::planner::throughput::{algo2_classes, algo2_exact};
+use edgeshard::profiler::{AnalyticProfiler, Workload};
+use edgeshard::util::bench;
+
+fn main() {
+    let cluster = presets::paper_testbed(1.0, 0);
+    let pool: Vec<usize> = (0..cluster.len()).collect();
+    let models: Vec<(&str, ModelDesc)> = vec![
+        ("7B", llama2_7b()),
+        ("13B", llama2_13b()),
+        ("70B", llama2_70b()),
+    ];
+    println!("# planner benches (15-device testbed)\n");
+    for (name, model) in &models {
+        let traces =
+            AnalyticProfiler::default().profile(model, &cluster, Workload::paper_default());
+        bench(&format!("profile/{name}"), 20, || {
+            let t = AnalyticProfiler::default().profile(
+                model,
+                &cluster,
+                Workload::paper_default(),
+            );
+            std::hint::black_box(&t);
+        });
+        bench(&format!("algo1-latency-pareto/{name}"), 20, || {
+            let p = algo1(&traces, &cluster, &pool, 1).unwrap();
+            std::hint::black_box(&p);
+        });
+        bench(&format!("algo1-latency-greedy(paper)/{name}"), 20, || {
+            let p = algo1_greedy(&traces, &cluster, &pool, 1).unwrap();
+            std::hint::black_box(&p);
+        });
+        bench(&format!("algo2-throughput-classes/{name}"), 10, || {
+            let p = algo2_classes(&traces, &cluster, &pool, 1).unwrap();
+            std::hint::black_box(&p);
+        });
+    }
+
+    // the exact subset DP only fits small pools — show the scaling wall
+    println!("\n# exact subset DP scaling (7B, growing pool)\n");
+    let model = llama2_7b();
+    let traces =
+        AnalyticProfiler::default().profile(&model, &cluster, Workload::paper_default());
+    for m in [2usize, 4, 6, 8] {
+        let small: Vec<usize> = (0..m).chain([14]).collect();
+        bench(&format!("algo2-exact/pool={}", small.len()), 3, || {
+            let p = algo2_exact(&traces, &cluster, &small, 1).unwrap();
+            std::hint::black_box(&p);
+        });
+    }
+}

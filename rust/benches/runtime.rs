@@ -1,0 +1,100 @@
+//! PJRT runtime benchmarks: per-shard execution latency of the real AOT
+//! artifacts (the L1/L2 hot path as the rust coordinator experiences it).
+//!
+//! Skips gracefully when artifacts are not built.
+
+use edgeshard::runtime::{ExecService, Manifest, TensorData, WeightStore};
+use edgeshard::util::bench;
+
+fn main() {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts not built — run `make artifacts` first (skipping)");
+        return;
+    }
+    let m = Manifest::load(dir).unwrap();
+    let w = WeightStore::load(&m).unwrap();
+    let (_svc, h) = ExecService::start(&m).unwrap();
+    let c = m.config.clone();
+    let (d, kv, ms_, hd, v) = (c.d_model, c.n_kv_heads, c.max_seq, c.head_dim(), c.vocab_size);
+
+    println!("# runtime shard benches (tiny model through PJRT CPU)\n");
+    for &b in &m.batch_sizes {
+        let bi = b as i64;
+        // embed decode
+        let emb_inputs = vec![
+            TensorData::f32(
+                w.get("tok_emb").unwrap().0.to_vec(),
+                vec![v as i64, d as i64],
+            ),
+            TensorData::i32(vec![1; b], vec![bi, 1]),
+        ];
+        bench(&format!("embed_decode_b{b}"), 30, || {
+            let o = h.exec(&format!("embed_decode_b{b}"), emb_inputs.clone()).unwrap();
+            std::hint::black_box(&o);
+        });
+
+        // decoder layer decode (the dominant per-token cost)
+        let mut layer_inputs: Vec<TensorData> = w
+            .layer_params(&m, 0)
+            .unwrap()
+            .into_iter()
+            .map(|(data, shape)| {
+                TensorData::f32(data.to_vec(), shape.iter().map(|&x| x as i64).collect())
+            })
+            .collect();
+        layer_inputs.push(TensorData::f32(vec![0.01; b * d], vec![bi, 1, d as i64]));
+        let cache_dims = vec![bi, kv as i64, ms_ as i64, hd as i64];
+        let cache_len = b * kv * ms_ * hd;
+        layer_inputs.push(TensorData::f32(vec![0.0; cache_len], cache_dims.clone()));
+        layer_inputs.push(TensorData::f32(vec![0.0; cache_len], cache_dims));
+        layer_inputs.push(TensorData::scalar_i32(40));
+        bench(&format!("layer_decode_b{b}"), 30, || {
+            let o = h.exec(&format!("layer_decode_b{b}"), layer_inputs.clone()).unwrap();
+            std::hint::black_box(&o);
+        });
+
+        // hot-path variant: weights registered once (what the engine does)
+        let reg = h.register(layer_inputs[..9].to_vec()).unwrap();
+        let dyn_inputs = layer_inputs[9..].to_vec();
+        bench(&format!("layer_decode_b{b}/registered"), 30, || {
+            let o = h
+                .exec_prefixed(Some(reg), &format!("layer_decode_b{b}"), dyn_inputs.clone())
+                .unwrap();
+            std::hint::black_box(&o);
+        });
+
+        // prefill layer
+        let mut pre_inputs: Vec<TensorData> = w
+            .layer_params(&m, 0)
+            .unwrap()
+            .into_iter()
+            .map(|(data, shape)| {
+                TensorData::f32(data.to_vec(), shape.iter().map(|&x| x as i64).collect())
+            })
+            .collect();
+        pre_inputs.push(TensorData::f32(
+            vec![0.01; b * c.prefill_len * d],
+            vec![bi, c.prefill_len as i64, d as i64],
+        ));
+        bench(&format!("layer_prefill_b{b}"), 10, || {
+            let o = h.exec(&format!("layer_prefill_b{b}"), pre_inputs.clone()).unwrap();
+            std::hint::black_box(&o);
+        });
+
+        // head
+        let head_inputs = vec![
+            TensorData::f32(w.get("final_norm").unwrap().0.to_vec(), vec![d as i64]),
+            TensorData::f32(
+                w.get("lm_head").unwrap().0.to_vec(),
+                vec![d as i64, v as i64],
+            ),
+            TensorData::f32(vec![0.01; b * d], vec![bi, 1, d as i64]),
+        ];
+        bench(&format!("head_decode_b{b}"), 30, || {
+            let o = h.exec(&format!("head_decode_b{b}"), head_inputs.clone()).unwrap();
+            std::hint::black_box(&o);
+        });
+        println!();
+    }
+}

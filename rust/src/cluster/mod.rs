@@ -1,0 +1,358 @@
+//! The collaborative edge network substrate: heterogeneous devices and a
+//! pairwise bandwidth/latency topology.
+//!
+//! Mirrors the paper's testbed (§V.A): 12× Jetson AGX Orin, 2× Jetson
+//! Orin NX, 1× RTX 3090 cloud server, 1000 Mbps LAN, with Linux TC used to
+//! shape individual links (here: [`Cluster::set_bandwidth`]).
+
+use crate::util::Rng;
+
+/// A hardware class (Table III plus memory-bandwidth, which governs
+/// memory-bound decode — see DESIGN.md).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceClass {
+    pub name: String,
+    pub mem_bytes: u64,
+    /// Peak compute (TFLOPS) — bounds the compute-bound prefill phase.
+    pub tflops: f64,
+    /// Memory bandwidth (GB/s) — bounds the memory-bound decode phase.
+    pub mem_bw_gbps: f64,
+    pub is_cloud: bool,
+}
+
+impl DeviceClass {
+    pub fn agx_orin() -> Self {
+        DeviceClass {
+            name: "Jetson AGX Orin".into(),
+            mem_bytes: 32 * GB,
+            tflops: 3.33,
+            mem_bw_gbps: 204.8,
+            is_cloud: false,
+        }
+    }
+
+    pub fn orin_nx() -> Self {
+        DeviceClass {
+            name: "Jetson Orin NX".into(),
+            mem_bytes: 16 * GB,
+            tflops: 1.88,
+            mem_bw_gbps: 102.4,
+            is_cloud: false,
+        }
+    }
+
+    pub fn rtx3090() -> Self {
+        DeviceClass {
+            name: "RTX 3090".into(),
+            mem_bytes: 24 * GB,
+            tflops: 36.0,
+            mem_bw_gbps: 936.0,
+            is_cloud: true,
+        }
+    }
+}
+
+const GB: u64 = 1024 * 1024 * 1024;
+
+/// One concrete device in the network.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub id: usize,
+    pub name: String,
+    pub class: DeviceClass,
+    /// Memory available for model shards + KV cache (total minus the
+    /// OS/runtime reservation).
+    pub usable_mem_bytes: u64,
+}
+
+impl Device {
+    pub fn new(id: usize, class: DeviceClass) -> Self {
+        // The paper's devices run an OS + CUDA/inference runtime alongside
+        // the model: reserve 12.5%, but never less than 4 GiB (the fixed
+        // footprint dominates on small devices — this is what makes half
+        // of Llama2-7B not fit an Orin NX, as the paper observes in §V.D;
+        // Jetson memory is shared between CPU and GPU).
+        let reserve = (class.mem_bytes / 8).max(4 * GB);
+        let usable = class.mem_bytes.saturating_sub(reserve);
+        Device {
+            id,
+            name: format!("{}-{}", class.name, id),
+            class,
+            usable_mem_bytes: usable,
+        }
+    }
+
+    /// Override the usable budget (e.g. a GPU server that stages weights
+    /// in pinned host memory beyond its VRAM).
+    pub fn with_usable_mem(id: usize, class: DeviceClass, usable_mem_bytes: u64) -> Self {
+        Device {
+            usable_mem_bytes,
+            ..Device::new(id, class)
+        }
+    }
+}
+
+/// The collaborative edge network: devices + full pairwise link table.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub devices: Vec<Device>,
+    /// `bandwidth_mbps[a][b]` — link rate from device a to device b.
+    pub bandwidth_mbps: Vec<Vec<f64>>,
+    /// One-way latency in milliseconds.
+    pub latency_ms: Vec<Vec<f64>>,
+    /// Index of the source node (where prompts arrive; privacy pins the
+    /// embedding layer here).
+    pub source: usize,
+}
+
+impl Cluster {
+    /// Build a fully-connected cluster with a uniform default bandwidth.
+    pub fn new(devices: Vec<Device>, default_bw_mbps: f64, default_lat_ms: f64) -> Self {
+        let m = devices.len();
+        let mut bw = vec![vec![default_bw_mbps; m]; m];
+        let mut lat = vec![vec![default_lat_ms; m]; m];
+        for i in 0..m {
+            bw[i][i] = f64::INFINITY;
+            lat[i][i] = 0.0;
+        }
+        Cluster {
+            devices,
+            bandwidth_mbps: bw,
+            latency_ms: lat,
+            source: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Shape one (symmetric) link — the Linux-TC analogue.
+    pub fn set_bandwidth(&mut self, a: usize, b: usize, mbps: f64) {
+        self.bandwidth_mbps[a][b] = mbps;
+        self.bandwidth_mbps[b][a] = mbps;
+    }
+
+    pub fn set_latency(&mut self, a: usize, b: usize, ms: f64) {
+        self.latency_ms[a][b] = ms;
+        self.latency_ms[b][a] = ms;
+    }
+
+    /// Milliseconds to move `bytes` from device `a` to device `b`
+    /// (zero on the same device, per Eq. (1)).
+    pub fn comm_ms(&self, a: usize, b: usize, bytes: u64) -> f64 {
+        if a == b {
+            return 0.0;
+        }
+        let mbps = self.bandwidth_mbps[a][b];
+        let transfer = bytes as f64 * 8.0 / (mbps * 1e6) * 1e3;
+        transfer + self.latency_ms[a][b]
+    }
+
+    /// Apply ±`frac` multiplicative jitter to every edge↔edge link
+    /// (the paper: "50Mbps with a variance of 20%"), deterministic per seed.
+    pub fn jitter_bandwidth(&mut self, frac: f64, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let m = self.len();
+        for a in 0..m {
+            for b in (a + 1)..m {
+                let f = rng.uniform(1.0 - frac, 1.0 + frac);
+                let bw = self.bandwidth_mbps[a][b] * f;
+                self.set_bandwidth(a, b, bw);
+            }
+        }
+    }
+
+    /// Device ids sorted cloud-last (handy for display).
+    pub fn cloud_ids(&self) -> Vec<usize> {
+        self.devices
+            .iter()
+            .filter(|d| d.class.is_cloud)
+            .map(|d| d.id)
+            .collect()
+    }
+}
+
+/// Builders for the topologies used across the paper's experiments.
+pub mod presets {
+    use super::*;
+
+    /// The paper's physical testbed: 12× AGX Orin + 2× Orin NX + 1× RTX
+    /// 3090.  Device 0 is the source (AGX Orin by default); the cloud
+    /// server is the **last** device.
+    ///
+    /// * `cloud_source_mbps` — the shaped source↔cloud link (1 Mbps in the
+    ///   overall evaluation, swept in Figs. 7/8).
+    /// * edge↔edge and edge↔cloud links default to 50 Mbps ± 20% jitter.
+    pub fn paper_testbed(cloud_source_mbps: f64, seed: u64) -> Cluster {
+        let mut devices = Vec::new();
+        for i in 0..12 {
+            devices.push(Device::new(i, DeviceClass::agx_orin()));
+        }
+        devices.push(Device::new(12, DeviceClass::orin_nx()));
+        devices.push(Device::new(13, DeviceClass::orin_nx()));
+        // The cloud server stages weights through pinned host memory
+        // beyond its 24 GB VRAM (the paper's full-precision Cloud-Edge
+        // baselines require >24 GB on the server for Llama2-13B halves).
+        devices.push(Device::with_usable_mem(
+            14,
+            DeviceClass::rtx3090(),
+            28 * GB,
+        ));
+        let mut c = Cluster::new(devices, 50.0, 0.5);
+        c.jitter_bandwidth(0.2, seed);
+        let cloud = 14;
+        c.set_bandwidth(c.source, cloud, cloud_source_mbps);
+        c
+    }
+
+    /// Same testbed but with an Orin NX as the source node (Fig. 9).
+    pub fn paper_testbed_nx_source(cloud_source_mbps: f64, seed: u64) -> Cluster {
+        let mut c = paper_testbed(cloud_source_mbps, seed);
+        // Swap device 0 (AGX) with device 12 (Orin NX) so the source slot
+        // holds an Orin NX; ids/links are preserved by swapping specs.
+        c.devices.swap(0, 12);
+        for (i, d) in c.devices.iter_mut().enumerate() {
+            d.id = i;
+        }
+        c
+    }
+
+    /// Two-device cloud-edge topology (the Cloud-Edge-* baselines run on
+    /// the full testbed but may only use these two devices; this helper
+    /// builds the reduced view used in unit tests).
+    pub fn cloud_edge_pair(cloud_source_mbps: f64) -> Cluster {
+        let devices = vec![
+            Device::new(0, DeviceClass::agx_orin()),
+            Device::new(1, DeviceClass::rtx3090()),
+        ];
+        let mut c = Cluster::new(devices, cloud_source_mbps, 5.0);
+        c.set_bandwidth(0, 1, cloud_source_mbps);
+        c
+    }
+
+    /// Small 3-device heterogeneous cluster used by the executable tiny
+    /// model demos (source AGX + one NX + one 3090).
+    pub fn tiny_demo(seed: u64) -> Cluster {
+        let devices = vec![
+            Device::new(0, DeviceClass::agx_orin()),
+            Device::new(1, DeviceClass::orin_nx()),
+            Device::new(2, DeviceClass::rtx3090()),
+        ];
+        let mut c = Cluster::new(devices, 50.0, 0.5);
+        c.jitter_bandwidth(0.2, seed);
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comm_zero_on_same_device() {
+        let c = presets::paper_testbed(1.0, 0);
+        assert_eq!(c.comm_ms(3, 3, 1 << 30), 0.0);
+    }
+
+    #[test]
+    fn comm_time_scales_with_bytes_and_bw() {
+        let mut c = presets::cloud_edge_pair(8.0);
+        c.set_latency(0, 1, 0.0);
+        // 1 MB at 8 Mbps = 1 second
+        let t = c.comm_ms(0, 1, 1_000_000);
+        assert!((t - 1000.0).abs() < 1e-6, "t={t}");
+        c.set_bandwidth(0, 1, 16.0);
+        assert!((c.comm_ms(0, 1, 1_000_000) - 500.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn latency_added() {
+        let mut c = presets::cloud_edge_pair(8.0);
+        c.set_latency(0, 1, 7.5);
+        assert!((c.comm_ms(0, 1, 0) - 7.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn testbed_composition() {
+        let c = presets::paper_testbed(1.0, 0);
+        assert_eq!(c.len(), 15);
+        let agx = c
+            .devices
+            .iter()
+            .filter(|d| d.class.name.contains("AGX"))
+            .count();
+        assert_eq!(agx, 12);
+        assert_eq!(c.cloud_ids(), vec![14]);
+        assert_eq!(c.source, 0);
+    }
+
+    #[test]
+    fn testbed_cloud_link_shaped() {
+        let c = presets::paper_testbed(1.0, 0);
+        assert_eq!(c.bandwidth_mbps[0][14], 1.0);
+        assert_eq!(c.bandwidth_mbps[14][0], 1.0);
+        // other links near 50 ± 20%
+        let bw = c.bandwidth_mbps[1][2];
+        assert!((40.0..=60.0).contains(&bw), "bw={bw}");
+    }
+
+    #[test]
+    fn jitter_is_deterministic_and_bounded() {
+        let a = presets::paper_testbed(1.0, 42);
+        let b = presets::paper_testbed(1.0, 42);
+        assert_eq!(a.bandwidth_mbps, b.bandwidth_mbps);
+        let c = presets::paper_testbed(1.0, 43);
+        assert_ne!(a.bandwidth_mbps, c.bandwidth_mbps);
+        for x in 0..a.len() {
+            for y in 0..a.len() {
+                if x != y && !(x == 0 && y == 14) && !(x == 14 && y == 0) {
+                    let bw = a.bandwidth_mbps[x][y];
+                    assert!((39.9..=60.1).contains(&bw), "bw[{x}][{y}]={bw}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bandwidth_symmetric_after_jitter() {
+        let c = presets::paper_testbed(1.0, 7);
+        for a in 0..c.len() {
+            for b in 0..c.len() {
+                assert_eq!(c.bandwidth_mbps[a][b], c.bandwidth_mbps[b][a]);
+            }
+        }
+    }
+
+    #[test]
+    fn nx_source_swaps_class() {
+        let c = presets::paper_testbed_nx_source(1.0, 0);
+        assert!(c.devices[0].class.name.contains("Orin NX"));
+        assert_eq!(
+            c.devices
+                .iter()
+                .filter(|d| d.class.name.contains("AGX"))
+                .count(),
+            12
+        );
+    }
+
+    #[test]
+    fn usable_memory_below_total() {
+        let d = Device::new(0, DeviceClass::agx_orin());
+        assert!(d.usable_mem_bytes < d.class.mem_bytes);
+        assert_eq!(d.usable_mem_bytes, 28 * GB);
+    }
+
+    #[test]
+    fn device_classes_match_table3() {
+        assert_eq!(DeviceClass::agx_orin().mem_bytes, 32 * GB);
+        assert_eq!(DeviceClass::orin_nx().mem_bytes, 16 * GB);
+        assert_eq!(DeviceClass::rtx3090().mem_bytes, 24 * GB);
+        assert!((DeviceClass::rtx3090().tflops - 36.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,92 @@
+//! Request/response types of the serving path.
+
+/// One user request (already tokenized).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+/// A batched group the engine executes as one unit: `batch` sequences,
+/// all with the same (padded) prompt length.
+#[derive(Debug, Clone)]
+pub struct GroupRequest {
+    pub group_id: u64,
+    /// Original request ids, one per real (non-padding) sequence.
+    pub request_ids: Vec<u64>,
+    /// Flattened prompts, `batch × prompt_len`, padding rows replicated.
+    pub tokens: Vec<i32>,
+    pub batch: usize,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+}
+
+impl GroupRequest {
+    /// Real (non-padding) sequences in the group.
+    pub fn real(&self) -> usize {
+        self.request_ids.len()
+    }
+}
+
+/// Completed generation for one request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenResult {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Time-to-first-token, milliseconds.
+    pub ttft_ms: f64,
+    /// Total generation wall time, milliseconds.
+    pub total_ms: f64,
+}
+
+impl GenResult {
+    /// Mean milliseconds per generated token (the paper's latency metric).
+    pub fn ms_per_token(&self) -> f64 {
+        if self.tokens.is_empty() {
+            0.0
+        } else {
+            self.total_ms / self.tokens.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ms_per_token() {
+        let r = GenResult {
+            id: 1,
+            tokens: vec![1, 2, 3, 4],
+            ttft_ms: 10.0,
+            total_ms: 100.0,
+        };
+        assert_eq!(r.ms_per_token(), 25.0);
+    }
+
+    #[test]
+    fn empty_tokens_safe() {
+        let r = GenResult {
+            id: 1,
+            tokens: vec![],
+            ttft_ms: 0.0,
+            total_ms: 5.0,
+        };
+        assert_eq!(r.ms_per_token(), 0.0);
+    }
+
+    #[test]
+    fn group_real_count() {
+        let g = GroupRequest {
+            group_id: 0,
+            request_ids: vec![3, 4],
+            tokens: vec![0; 8 * 32],
+            batch: 8,
+            prompt_len: 32,
+            max_new_tokens: 96,
+        };
+        assert_eq!(g.real(), 2);
+    }
+}

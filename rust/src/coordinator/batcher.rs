@@ -1,0 +1,170 @@
+//! Dynamic batcher: packs incoming requests into the AOT-compiled batch
+//! sizes.
+//!
+//! The compiled model has static shapes, so a group's batch must be one of
+//! `manifest.batch_sizes` and its prompt exactly `prefill_len` tokens.
+//! The batcher (a) pads/cycles prompts to the compiled prompt length,
+//! (b) packs up to `max_batch` requests per group, padding the remainder
+//! by replicating the first row (padding rows are dropped from results —
+//! their KV/memory cost is the price of static shapes, exactly like
+//! bucketing in production TPU serving).
+
+use super::api::{GenRequest, GroupRequest};
+
+/// Request → group packing.
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    pub prompt_len: usize,
+    /// Compiled batch sizes, ascending (e.g. [1, 8]).
+    pub batch_sizes: Vec<usize>,
+    next_group: u64,
+}
+
+impl Batcher {
+    pub fn new(prompt_len: usize, mut batch_sizes: Vec<usize>) -> Self {
+        batch_sizes.sort_unstable();
+        assert!(!batch_sizes.is_empty(), "need at least one batch size");
+        Batcher {
+            prompt_len,
+            batch_sizes,
+            next_group: 0,
+        }
+    }
+
+    /// Smallest compiled batch ≥ n, or the largest available.
+    pub fn fit_batch(&self, n: usize) -> usize {
+        self.batch_sizes
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or(*self.batch_sizes.last().unwrap())
+    }
+
+    pub fn max_batch(&self) -> usize {
+        *self.batch_sizes.last().unwrap()
+    }
+
+    /// Normalize one prompt to the compiled length (cycle if short).
+    fn fit_prompt(&self, prompt: &[i32]) -> Vec<i32> {
+        assert!(!prompt.is_empty(), "empty prompt");
+        (0..self.prompt_len)
+            .map(|i| prompt[i % prompt.len()])
+            .collect()
+    }
+
+    /// Pack a slice of requests into groups.  `max_new` must be uniform
+    /// per group; we split on differing values to keep shapes static.
+    pub fn pack(&mut self, requests: &[GenRequest]) -> Vec<GroupRequest> {
+        let mut groups = Vec::new();
+        let mut i = 0;
+        while i < requests.len() {
+            // take a run with the same max_new_tokens, up to max_batch
+            let max_new = requests[i].max_new_tokens;
+            let mut run = Vec::new();
+            while i < requests.len()
+                && requests[i].max_new_tokens == max_new
+                && run.len() < self.max_batch()
+            {
+                run.push(&requests[i]);
+                i += 1;
+            }
+            let batch = self.fit_batch(run.len());
+            let mut tokens = Vec::with_capacity(batch * self.prompt_len);
+            for r in &run {
+                tokens.extend(self.fit_prompt(&r.prompt));
+            }
+            // pad with copies of the first prompt
+            let pad_row = self.fit_prompt(&run[0].prompt);
+            for _ in run.len()..batch {
+                tokens.extend(&pad_row);
+            }
+            groups.push(GroupRequest {
+                group_id: self.next_group,
+                request_ids: run.iter().map(|r| r.id).collect(),
+                tokens,
+                batch,
+                prompt_len: self.prompt_len,
+                max_new_tokens: max_new,
+            });
+            self.next_group += 1;
+        }
+        groups
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, len: usize, max_new: usize) -> GenRequest {
+        GenRequest {
+            id,
+            prompt: (0..len as i32).collect(),
+            max_new_tokens: max_new,
+        }
+    }
+
+    #[test]
+    fn fit_batch_rounds_up() {
+        let b = Batcher::new(32, vec![8, 1]);
+        assert_eq!(b.fit_batch(1), 1);
+        assert_eq!(b.fit_batch(2), 8);
+        assert_eq!(b.fit_batch(8), 8);
+        assert_eq!(b.fit_batch(20), 8); // clamp to largest
+    }
+
+    #[test]
+    fn pack_single() {
+        let mut b = Batcher::new(32, vec![1, 8]);
+        let g = b.pack(&[req(5, 10, 96)]);
+        assert_eq!(g.len(), 1);
+        assert_eq!(g[0].batch, 1);
+        assert_eq!(g[0].tokens.len(), 32);
+        assert_eq!(g[0].request_ids, vec![5]);
+        // prompt cycled to 32 tokens
+        assert_eq!(g[0].tokens[0], 0);
+        assert_eq!(g[0].tokens[10], 0);
+        assert_eq!(g[0].tokens[11], 1);
+    }
+
+    #[test]
+    fn pack_pads_to_compiled_batch() {
+        let mut b = Batcher::new(32, vec![1, 8]);
+        let reqs: Vec<GenRequest> = (0..3).map(|i| req(i, 32, 16)).collect();
+        let g = b.pack(&reqs);
+        assert_eq!(g.len(), 1);
+        assert_eq!(g[0].batch, 8);
+        assert_eq!(g[0].real(), 3);
+        assert_eq!(g[0].tokens.len(), 8 * 32);
+    }
+
+    #[test]
+    fn pack_splits_large_runs() {
+        let mut b = Batcher::new(32, vec![1, 8]);
+        let reqs: Vec<GenRequest> = (0..20).map(|i| req(i, 32, 16)).collect();
+        let g = b.pack(&reqs);
+        assert_eq!(g.len(), 3); // 8 + 8 + 4(padded to 8)
+        assert_eq!(g[0].batch, 8);
+        assert_eq!(g[2].real(), 4);
+        // unique group ids
+        let ids: std::collections::HashSet<u64> = g.iter().map(|x| x.group_id).collect();
+        assert_eq!(ids.len(), 3);
+    }
+
+    #[test]
+    fn pack_splits_on_max_new() {
+        let mut b = Batcher::new(32, vec![1, 8]);
+        let g = b.pack(&[req(0, 32, 16), req(1, 32, 32)]);
+        assert_eq!(g.len(), 2);
+        assert_eq!(g[0].max_new_tokens, 16);
+        assert_eq!(g[1].max_new_tokens, 32);
+    }
+
+    #[test]
+    fn long_prompt_truncated() {
+        let mut b = Batcher::new(8, vec![1]);
+        let g = b.pack(&[req(0, 100, 4)]);
+        assert_eq!(g[0].tokens.len(), 8);
+        assert_eq!(g[0].tokens, vec![0, 1, 2, 3, 4, 5, 6, 7]);
+    }
+}

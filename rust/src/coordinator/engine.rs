@@ -1,0 +1,374 @@
+//! Collaborative-inference engine: wires stage actors per a plan and
+//! drives generation.
+//!
+//! * **Sequential inference** (paper Fig. 4a): one group in flight —
+//!   [`Engine::generate_sequential`].
+//! * **Pipelined inference** (paper Fig. 5): several micro-batch groups in
+//!   flight; the driver releases a group's next iteration either
+//!   immediately when its token returns (**No-bubble**) or after every
+//!   group finishes the current iteration (**Bubble**) —
+//!   [`Engine::generate_pipelined`].
+//!
+//! All activations move through [`crate::netsim`] shaped links with the
+//! cluster's per-pair bandwidth/latency, so the real numerics experience
+//! the same network the planner optimized for.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::mpsc::Receiver;
+use std::time::Instant;
+
+use super::api::{GenResult, GroupRequest};
+use super::stage::{NextHop, Payload, Phase, StageActor, StageMsg, TokenMsg};
+use crate::cluster::Cluster;
+use crate::metrics::Histogram;
+use crate::netsim::{shaped_channel, LinkSpec, ShapedSender};
+use crate::pipeline::Strategy;
+use crate::planner::Plan;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::{ExecServiceHandle, WeightStore};
+
+/// Engine construction parameters.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Compression factor for simulated link delays (1.0 = real time).
+    pub time_scale: f64,
+    /// Per-device compute slowdown factors (index = device id); empty =
+    /// run everything at raw CPU speed.
+    pub compute_scale: Vec<f64>,
+    /// KV budget per stage, bytes (generous default for the tiny model).
+    pub kv_budget_bytes: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            time_scale: 1.0,
+            compute_scale: Vec::new(),
+            kv_budget_bytes: 1 << 30,
+        }
+    }
+}
+
+/// Aggregate serving statistics of one engine run.
+#[derive(Debug)]
+pub struct EngineStats {
+    pub makespan_ms: f64,
+    /// Real (non-padding) tokens generated.
+    pub tokens: u64,
+    pub throughput_tps: f64,
+    /// Time-to-first-token per group.
+    pub ttft: Histogram,
+    /// Per-iteration latency samples (decode steps).
+    pub iter_latency: Histogram,
+}
+
+/// The wired pipeline.
+pub struct Engine {
+    to_first: ShapedSender<StageMsg>,
+    token_rx: Receiver<TokenMsg>,
+    handles: Vec<std::thread::JoinHandle<Result<()>>>,
+    prompt_len: usize,
+    batch_sizes: Vec<usize>,
+}
+
+impl Engine {
+    /// Build stage actors for `plan` over `cluster` and connect them with
+    /// shaped links.
+    pub fn build(
+        manifest: &Manifest,
+        weights: &WeightStore,
+        exec: ExecServiceHandle,
+        plan: &Plan,
+        cluster: &Cluster,
+        cfg: &EngineConfig,
+    ) -> Result<Self> {
+        let n_model_layers = manifest.config.n_layers + 2;
+        anyhow::ensure!(
+            plan.stages.last().map(|s| s.end) == Some(n_model_layers),
+            "plan covers {:?} layers, model has {n_model_layers}",
+            plan.stages.last().map(|s| s.end)
+        );
+        let s_count = plan.n_stages();
+
+        // token loopback: head device -> source
+        let head_dev = plan.stages.last().unwrap().device;
+        let loop_spec = LinkSpec::new(
+            cluster.bandwidth_mbps[head_dev][cluster.source],
+            cluster.latency_ms[head_dev][cluster.source],
+        );
+        let (token_tx, token_rx) = shaped_channel::<TokenMsg>(loop_spec, cfg.time_scale);
+
+        // per-stage ingress links: stage i receives over the link
+        // (stage i-1's device) → (stage i's device); stage 0 receives from
+        // the driver, which lives on the source device (free link).
+        let mut receivers: Vec<Option<Receiver<StageMsg>>> = (0..s_count).map(|_| None).collect();
+        let mut senders: Vec<Option<ShapedSender<StageMsg>>> =
+            (0..s_count).map(|_| None).collect();
+        for i in 0..s_count {
+            let spec = if i == 0 {
+                LinkSpec::new(f64::INFINITY, 0.0)
+            } else {
+                let prev = plan.stages[i - 1].device;
+                let dev = plan.stages[i].device;
+                LinkSpec::new(
+                    cluster.bandwidth_mbps[prev][dev],
+                    cluster.latency_ms[prev][dev],
+                )
+            };
+            let (tx, rx) = shaped_channel::<StageMsg>(spec, cfg.time_scale);
+            receivers[i] = Some(rx);
+            senders[i] = Some(tx);
+        }
+
+        // spawn actors front to back, threading the "next" hops
+        let mut handles = Vec::with_capacity(s_count);
+        for (i, st) in plan.stages.iter().enumerate() {
+            let next = if i + 1 < s_count {
+                NextHop::Stage(senders[i + 1].clone().unwrap())
+            } else {
+                NextHop::Driver(token_tx.clone())
+            };
+            let mut actor = StageActor::new(
+                i,
+                st.device,
+                manifest,
+                weights,
+                st.start..st.end,
+                n_model_layers,
+                exec.clone(),
+                cfg.kv_budget_bytes,
+                next,
+            )?;
+            actor.compute_scale = cfg.compute_scale.get(st.device).copied().unwrap_or(1.0);
+            let rx = receivers[i].take().unwrap();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("stage-{i}"))
+                    .spawn(move || actor.run(rx))
+                    .context("spawning stage")?,
+            );
+        }
+
+        Ok(Engine {
+            to_first: senders[0].clone().unwrap(),
+            token_rx,
+            handles,
+            prompt_len: manifest.config.prefill_len,
+            batch_sizes: manifest.batch_sizes.clone(),
+        })
+    }
+
+    /// Largest compiled batch size.
+    pub fn max_batch(&self) -> usize {
+        self.batch_sizes.iter().copied().max().unwrap_or(1)
+    }
+
+    fn send_prefill(&self, g: &GroupRequest) -> Result<()> {
+        anyhow::ensure!(
+            self.batch_sizes.contains(&g.batch),
+            "batch {} not compiled (have {:?})",
+            g.batch,
+            self.batch_sizes
+        );
+        anyhow::ensure!(
+            g.prompt_len == self.prompt_len,
+            "prompt len {} != compiled {}",
+            g.prompt_len,
+            self.prompt_len
+        );
+        let msg = StageMsg::Work {
+            group: g.group_id,
+            iter: 0,
+            pos: 0,
+            phase: Phase::Prefill,
+            batch: g.batch,
+            prompt_len: g.prompt_len,
+            payload: Payload::Tokens(g.tokens.clone()),
+        };
+        let bytes = msg.bytes();
+        self.to_first.send(msg, bytes)
+    }
+
+    fn send_decode(&self, g: &GroupRequest, iter: usize, tokens: Vec<i32>) -> Result<()> {
+        let pos = (g.prompt_len + iter - 1) as i32;
+        let msg = StageMsg::Work {
+            group: g.group_id,
+            iter,
+            pos,
+            phase: Phase::Decode,
+            batch: g.batch,
+            prompt_len: g.prompt_len,
+            payload: Payload::Tokens(tokens),
+        };
+        let bytes = msg.bytes();
+        self.to_first.send(msg, bytes)
+    }
+
+    /// Serve groups one at a time (paper's sequential inference).
+    pub fn generate_sequential(
+        &self,
+        groups: &[GroupRequest],
+    ) -> Result<(Vec<GenResult>, EngineStats)> {
+        self.run(groups, 1, Strategy::NoBubble)
+    }
+
+    /// Serve all groups as a micro-batched pipeline.
+    pub fn generate_pipelined(
+        &self,
+        groups: &[GroupRequest],
+        strategy: Strategy,
+    ) -> Result<(Vec<GenResult>, EngineStats)> {
+        self.run(groups, groups.len().max(1), Strategy::from_pipeline(strategy))
+    }
+
+    fn run(
+        &self,
+        groups: &[GroupRequest],
+        window: usize,
+        strategy: Strategy,
+    ) -> Result<(Vec<GenResult>, EngineStats)> {
+        struct Active<'a> {
+            req: &'a GroupRequest,
+            rows: Vec<Vec<i32>>,
+            start: Instant,
+            ttft_ms: Option<f64>,
+            last_iter_at: Instant,
+            done: bool,
+        }
+        let t0 = Instant::now();
+        let mut ttft = Histogram::new();
+        let mut iter_lat = Histogram::new();
+        let mut results = Vec::new();
+        let mut active: HashMap<u64, Active> = HashMap::new();
+        let mut queue = groups.iter();
+        let mut in_flight = 0usize;
+        let mut real_tokens = 0u64;
+        // barrier bookkeeping for the Bubble strategy
+        let mut barrier: Vec<(u64, usize, Vec<i32>)> = Vec::new();
+
+        // prime the window
+        while in_flight < window {
+            let Some(g) = queue.next() else { break };
+            self.send_prefill(g)?;
+            active.insert(
+                g.group_id,
+                Active {
+                    req: g,
+                    rows: vec![Vec::new(); g.batch],
+                    start: Instant::now(),
+                    ttft_ms: None,
+                    last_iter_at: Instant::now(),
+                    done: false,
+                },
+            );
+            in_flight += 1;
+        }
+
+        while in_flight > 0 {
+            let tok = self
+                .token_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("pipeline closed unexpectedly"))?;
+            let a = active
+                .get_mut(&tok.group)
+                .with_context(|| format!("unknown group {}", tok.group))?;
+            let now = Instant::now();
+            iter_lat.record(now.duration_since(a.last_iter_at).as_secs_f64() * 1e3);
+            a.last_iter_at = now;
+            if a.ttft_ms.is_none() {
+                let ms = now.duration_since(a.start).as_secs_f64() * 1e3;
+                a.ttft_ms = Some(ms);
+                ttft.record(ms);
+            }
+            for (row, &t) in a.rows.iter_mut().zip(&tok.tokens) {
+                row.push(t);
+            }
+            real_tokens += a.req.real() as u64;
+            let next_iter = tok.iter + 1;
+            if next_iter < a.req.max_new_tokens {
+                match strategy {
+                    Strategy::Bubble => barrier.push((tok.group, next_iter, tok.tokens)),
+                    _ => self.send_decode(a.req, next_iter, tok.tokens)?,
+                }
+            } else {
+                // group complete
+                a.done = true;
+                let total = now.duration_since(a.start).as_secs_f64() * 1e3;
+                for (i, &rid) in a.req.request_ids.iter().enumerate() {
+                    results.push(GenResult {
+                        id: rid,
+                        tokens: a.rows[i].clone(),
+                        ttft_ms: a.ttft_ms.unwrap_or(0.0),
+                        total_ms: total,
+                    });
+                }
+                self.to_first.send(StageMsg::Free { group: tok.group }, 16)?;
+                in_flight -= 1;
+                // admit the next queued group
+                if let Some(g) = queue.next() {
+                    self.send_prefill(g)?;
+                    active.insert(
+                        g.group_id,
+                        Active {
+                            req: g,
+                            rows: vec![Vec::new(); g.batch],
+                            start: Instant::now(),
+                            ttft_ms: None,
+                            last_iter_at: Instant::now(),
+                            done: false,
+                        },
+                    );
+                    in_flight += 1;
+                }
+            }
+            // Bubble barrier: release the next iteration only when every
+            // unfinished group has delivered the current one.
+            if strategy == Strategy::Bubble {
+                let waiting = active.values().filter(|a| !a.done).count();
+                if barrier.len() == waiting && !barrier.is_empty() {
+                    for (gid, it, toks) in barrier.drain(..) {
+                        let req = active[&gid].req;
+                        self.send_decode(req, it, toks)?;
+                    }
+                }
+            }
+        }
+
+        let makespan = t0.elapsed().as_secs_f64() * 1e3;
+        let stats = EngineStats {
+            makespan_ms: makespan,
+            tokens: real_tokens,
+            throughput_tps: if makespan > 0.0 {
+                real_tokens as f64 / (makespan / 1e3)
+            } else {
+                0.0
+            },
+            ttft,
+            iter_latency: iter_lat,
+        };
+        Ok((results, stats))
+    }
+
+    /// Shut the pipeline down and join the actors.
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.to_first.send(StageMsg::Shutdown, 16);
+        for h in self.handles.drain(..) {
+            match h.join() {
+                Ok(r) => r?,
+                Err(_) => anyhow::bail!("stage thread panicked"),
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Strategy {
+    /// Normalize: the engine distinguishes only barrier vs immediate.
+    fn from_pipeline(s: Strategy) -> Strategy {
+        match s {
+            Strategy::Bubble => Strategy::Bubble,
+            _ => Strategy::NoBubble,
+        }
+    }
+}

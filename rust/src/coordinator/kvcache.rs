@@ -1,0 +1,159 @@
+//! KV-cache pool: pre-allocated, byte-accounted cache slots per stage.
+//!
+//! The paper: "We pre-allocate memory space for KV cache on each
+//! participating device."  Each stage owns one pool sized from its
+//! device's memory budget minus its weight shard; groups (micro-batches)
+//! claim a slot at prefill and release it when generation completes.
+
+use crate::runtime::TensorData;
+use std::collections::HashMap;
+
+/// Per-group cache state held by one stage.
+#[derive(Debug, Clone)]
+pub struct GroupCache {
+    /// One (k, v) pair per decoder layer this stage hosts.
+    pub layers: Vec<(TensorData, TensorData)>,
+    pub batch: usize,
+    pub bytes: u64,
+}
+
+/// Byte-budgeted cache pool.
+#[derive(Debug)]
+pub struct KvPool {
+    budget_bytes: u64,
+    used_bytes: u64,
+    groups: HashMap<u64, GroupCache>,
+    /// peak usage for reporting
+    peak_bytes: u64,
+}
+
+impl KvPool {
+    pub fn new(budget_bytes: u64) -> Self {
+        KvPool {
+            budget_bytes,
+            used_bytes: 0,
+            groups: HashMap::new(),
+            peak_bytes: 0,
+        }
+    }
+
+    /// Bytes one group needs on this stage: `layers × 2 × batch × kv_heads
+    /// × max_seq × head_dim × 4`.
+    pub fn group_bytes(
+        n_layers: usize,
+        batch: usize,
+        kv_heads: usize,
+        max_seq: usize,
+        head_dim: usize,
+    ) -> u64 {
+        (n_layers * 2 * batch * kv_heads * max_seq * head_dim * 4) as u64
+    }
+
+    /// Whether a group of this size can be admitted right now.
+    pub fn can_admit(&self, bytes: u64) -> bool {
+        self.used_bytes + bytes <= self.budget_bytes
+    }
+
+    /// Install a freshly prefilled cache.  Fails if over budget (the
+    /// batcher is responsible for never letting this happen).
+    pub fn insert(&mut self, group: u64, cache: GroupCache) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.can_admit(cache.bytes),
+            "KV pool over budget: used={} + group={} > budget={}",
+            self.used_bytes,
+            cache.bytes,
+            self.budget_bytes
+        );
+        self.used_bytes += cache.bytes;
+        self.peak_bytes = self.peak_bytes.max(self.used_bytes);
+        anyhow::ensure!(
+            self.groups.insert(group, cache).is_none(),
+            "group {group} already cached"
+        );
+        Ok(())
+    }
+
+    pub fn get_mut(&mut self, group: u64) -> Option<&mut GroupCache> {
+        self.groups.get_mut(&group)
+    }
+
+    pub fn get(&self, group: u64) -> Option<&GroupCache> {
+        self.groups.get(&group)
+    }
+
+    /// Release a finished group's slot.
+    pub fn remove(&mut self, group: u64) -> Option<GroupCache> {
+        let c = self.groups.remove(&group)?;
+        self.used_bytes -= c.bytes;
+        Some(c)
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak_bytes
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.groups.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dummy_cache(bytes: u64) -> GroupCache {
+        GroupCache {
+            layers: vec![],
+            batch: 1,
+            bytes,
+        }
+    }
+
+    #[test]
+    fn admit_and_release() {
+        let mut p = KvPool::new(1000);
+        assert!(p.can_admit(600));
+        p.insert(1, dummy_cache(600)).unwrap();
+        assert_eq!(p.used_bytes(), 600);
+        assert!(!p.can_admit(600));
+        assert!(p.insert(2, dummy_cache(600)).is_err());
+        p.insert(3, dummy_cache(400)).unwrap();
+        assert_eq!(p.len(), 2);
+        p.remove(1).unwrap();
+        assert_eq!(p.used_bytes(), 400);
+        assert!(p.can_admit(600));
+        assert_eq!(p.peak_bytes(), 1000);
+    }
+
+    #[test]
+    fn duplicate_group_rejected() {
+        let mut p = KvPool::new(100);
+        p.insert(1, dummy_cache(10)).unwrap();
+        assert!(p.insert(1, dummy_cache(10)).is_err());
+    }
+
+    #[test]
+    fn remove_missing_is_none() {
+        let mut p = KvPool::new(100);
+        assert!(p.remove(42).is_none());
+    }
+
+    #[test]
+    fn group_bytes_formula() {
+        // 4 layers, batch 8, 4 kv heads, 128 seq, 32 dim, f32:
+        // 4*2*8*4*128*32*4 = 4 MiB
+        assert_eq!(KvPool::group_bytes(4, 8, 4, 128, 32), 4 * 1024 * 1024);
+    }
+}

@@ -1,0 +1,27 @@
+//! Layer-3 coordinator: collaborative inference over the planned shards
+//! (paper §III "Collaborative inference").
+//!
+//! * [`api`] — request/response types shared by engine, batcher, server.
+//! * [`kvcache`] — per-stage KV-cache pool with byte accounting (the
+//!   paper pre-allocates KV space on each participating device).
+//! * [`stage`] — one device actor: runs its layer range through the PJRT
+//!   [`crate::runtime::ExecService`], keeps its shard's KV caches, and
+//!   forwards activations over shaped links.
+//! * [`engine`] — wires stage actors according to a [`crate::planner::Plan`]
+//!   and drives generation: **sequential** inference (one request at a
+//!   time, §III Fig. 4a) and **pipelined** inference with the Bubble /
+//!   No-bubble strategies (§IV-B, Fig. 5).
+//! * [`batcher`] — groups incoming requests into the compiled batch sizes.
+//! * [`server`] — a JSON-lines TCP front-end over the engine.
+
+pub mod api;
+pub mod batcher;
+pub mod engine;
+pub mod kvcache;
+pub mod server;
+pub mod stage;
+
+pub use api::{GenRequest, GenResult, GroupRequest};
+pub use batcher::Batcher;
+pub use engine::{Engine, EngineConfig, EngineStats};
+pub use kvcache::KvPool;

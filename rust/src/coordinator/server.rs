@@ -1,0 +1,251 @@
+//! JSON-lines TCP serving front-end.
+//!
+//! Protocol (one JSON object per line):
+//!
+//! ```text
+//! → {"id": 1, "prompt": "Today is a", "max_new_tokens": 16}
+//! ← {"id": 1, "text": "…", "tokens": [..], "ttft_ms": 12.3, "total_ms": 87.0}
+//! ```
+//!
+//! Requests are byte-tokenized (the tiny model's 256-entry vocabulary),
+//! batched by [`super::Batcher`] with a small gather window, and executed
+//! on the pipelined engine.  This is the demo front door, not a hardened
+//! production server.
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{self, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+use super::api::{GenRequest, GenResult};
+use super::batcher::Batcher;
+use super::engine::Engine;
+use crate::pipeline::Strategy;
+use crate::util::Json;
+use crate::workload::Corpus;
+
+/// A parsed client line.
+struct Incoming {
+    req: GenRequest,
+    reply: Sender<GenResult>,
+}
+
+/// Server tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// How long to gather requests into a batch before dispatching.
+    pub gather_window_ms: u64,
+    pub strategy: Strategy,
+    /// Stop after serving this many requests (None = run forever).
+    pub max_requests: Option<usize>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            gather_window_ms: 20,
+            strategy: Strategy::NoBubble,
+            max_requests: None,
+        }
+    }
+}
+
+/// Run the serving loop on `listener` until `max_requests` (if set) have
+/// been answered.  Returns the number served.
+pub fn serve(
+    listener: TcpListener,
+    engine: &Engine,
+    batcher: &mut Batcher,
+    cfg: &ServerConfig,
+) -> Result<usize> {
+    let (in_tx, in_rx) = mpsc::channel::<Incoming>();
+
+    // acceptor thread: one handler thread per connection
+    let accept_tx = in_tx.clone();
+    listener
+        .set_nonblocking(false)
+        .context("listener mode")?;
+    let listener2 = listener.try_clone()?;
+    std::thread::spawn(move || {
+        for stream in listener2.incoming() {
+            let Ok(stream) = stream else { continue };
+            let tx = accept_tx.clone();
+            std::thread::spawn(move || {
+                let _ = handle_conn(stream, tx);
+            });
+        }
+    });
+    drop(in_tx);
+
+    let mut served = 0usize;
+    let mut next_id = 1u64;
+    loop {
+        if let Some(max) = cfg.max_requests {
+            if served >= max {
+                return Ok(served);
+            }
+        }
+        // block for the first request, then gather a window
+        let first = match in_rx.recv_timeout(Duration::from_millis(250)) {
+            Ok(x) => x,
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => return Ok(served),
+        };
+        let mut pending = vec![first];
+        let deadline = std::time::Instant::now() + Duration::from_millis(cfg.gather_window_ms);
+        while pending.len() < batcher.max_batch() {
+            let left = deadline.saturating_duration_since(std::time::Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            match in_rx.recv_timeout(left) {
+                Ok(x) => pending.push(x),
+                Err(_) => break,
+            }
+        }
+        // assign ids and pack
+        let mut replies: BTreeMap<u64, Sender<GenResult>> = BTreeMap::new();
+        let reqs: Vec<GenRequest> = pending
+            .into_iter()
+            .map(|mut inc| {
+                inc.req.id = next_id;
+                next_id += 1;
+                replies.insert(inc.req.id, inc.reply);
+                inc.req
+            })
+            .collect();
+        let groups = batcher.pack(&reqs);
+        let (results, _stats) = engine.generate_pipelined(&groups, cfg.strategy)?;
+        for r in results {
+            served += 1;
+            if let Some(tx) = replies.remove(&r.id) {
+                let _ = tx.send(r);
+            }
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, tx: Sender<Incoming>) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_request(&line) {
+            Ok(req) => {
+                let (rtx, rrx) = mpsc::channel();
+                tx.send(Incoming { req, reply: rtx })
+                    .map_err(|_| anyhow::anyhow!("server stopped"))?;
+                match rrx.recv() {
+                    Ok(res) => {
+                        writeln!(writer, "{}", render_result(&res))?;
+                    }
+                    Err(_) => {
+                        writeln!(writer, "{{\"error\":\"engine unavailable\"}}")?;
+                    }
+                }
+            }
+            Err(e) => {
+                writeln!(writer, "{{\"error\":\"{e}\"}}")?;
+            }
+        }
+    }
+    let _ = peer;
+    Ok(())
+}
+
+/// Parse one request line (client-supplied id is ignored; the server
+/// assigns its own).
+pub fn parse_request(line: &str) -> Result<GenRequest> {
+    let j = Json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    let prompt: Vec<i32> = if let Some(text) = j.get("prompt").and_then(|p| p.as_str()) {
+        text.bytes().map(|b| b as i32).collect()
+    } else if let Some(arr) = j.get("tokens").and_then(|p| p.as_arr()) {
+        arr.iter().filter_map(|x| x.as_i64()).map(|x| x as i32).collect()
+    } else {
+        anyhow::bail!("need `prompt` (string) or `tokens` (array)");
+    };
+    anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+    let max_new = j
+        .get("max_new_tokens")
+        .and_then(|x| x.as_usize())
+        .unwrap_or(16);
+    Ok(GenRequest {
+        id: 0,
+        prompt,
+        max_new_tokens: max_new.clamp(1, 96),
+    })
+}
+
+/// Render a result line.
+pub fn render_result(r: &GenResult) -> String {
+    use std::collections::BTreeMap;
+    let mut obj = BTreeMap::new();
+    obj.insert("id".to_string(), Json::Num(r.id as f64));
+    obj.insert(
+        "tokens".to_string(),
+        Json::Arr(r.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+    );
+    obj.insert(
+        "text".to_string(),
+        Json::Str(Corpus::detokenize(&r.tokens)),
+    );
+    obj.insert("ttft_ms".to_string(), Json::Num((r.ttft_ms * 100.0).round() / 100.0));
+    obj.insert(
+        "total_ms".to_string(),
+        Json::Num((r.total_ms * 100.0).round() / 100.0),
+    );
+    Json::Obj(obj).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_text_prompt() {
+        let r = parse_request(r#"{"prompt": "hello", "max_new_tokens": 8}"#).unwrap();
+        assert_eq!(r.prompt, vec![104, 101, 108, 108, 111]);
+        assert_eq!(r.max_new_tokens, 8);
+    }
+
+    #[test]
+    fn parse_token_prompt() {
+        let r = parse_request(r#"{"tokens": [1, 2, 3]}"#).unwrap();
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert_eq!(r.max_new_tokens, 16);
+    }
+
+    #[test]
+    fn parse_rejects_bad_input() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"max_new_tokens": 5}"#).is_err());
+        assert!(parse_request(r#"{"prompt": ""}"#).is_err());
+    }
+
+    #[test]
+    fn max_new_clamped() {
+        let r = parse_request(r#"{"prompt": "x", "max_new_tokens": 10000}"#).unwrap();
+        assert_eq!(r.max_new_tokens, 96);
+    }
+
+    #[test]
+    fn render_roundtrips() {
+        let res = GenResult {
+            id: 3,
+            tokens: vec![104, 105],
+            ttft_ms: 1.234,
+            total_ms: 5.678,
+        };
+        let line = render_result(&res);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("id").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("text").unwrap().as_str(), Some("hi"));
+        assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,425 @@
+//! Stage actor: one simulated device executing its contiguous layer range.
+//!
+//! A stage owns (a) its shard's weights as prebuilt [`TensorData`],
+//! (b) a [`KvPool`] holding the caches of every group in flight, and
+//! (c) the outgoing shaped link.  It processes [`StageMsg`]s FIFO — the
+//! arrival order over the links *is* the pipeline schedule, so the Bubble
+//! / No-bubble distinction lives entirely in when the driver releases the
+//! next iteration (see [`super::engine`]).
+
+use anyhow::{anyhow, Context, Result};
+
+use super::kvcache::{GroupCache, KvPool};
+use crate::netsim::ShapedSender;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::shard::RegId;
+use crate::runtime::{ExecServiceHandle, TensorData, WeightStore};
+
+/// Phase of a token iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Prefill,
+    Decode,
+}
+
+/// Payload entering a stage.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// Token ids for the source stage (prefill prompt or decode feedback).
+    Tokens(Vec<i32>),
+    /// Hidden activations from the previous stage.
+    Hidden(TensorData),
+}
+
+/// Messages travelling between driver and stages.
+#[derive(Debug, Clone)]
+pub enum StageMsg {
+    Work {
+        group: u64,
+        iter: usize,
+        /// Absolute position of the token being decoded (unused in prefill).
+        pos: i32,
+        phase: Phase,
+        batch: usize,
+        prompt_len: usize,
+        payload: Payload,
+    },
+    /// Release the group's KV slot and forward downstream.
+    Free { group: u64 },
+    Shutdown,
+}
+
+impl StageMsg {
+    /// Wire size used by the shaped links.
+    pub fn bytes(&self) -> u64 {
+        match self {
+            StageMsg::Work { payload, .. } => match payload {
+                Payload::Tokens(t) => t.len() as u64 * 4,
+                Payload::Hidden(h) => h.bytes(),
+            },
+            _ => 16,
+        }
+    }
+}
+
+/// Token batch emitted by the head stage back to the driver (one shaped
+/// hop: the autoregressive loopback of Eq. 6).
+#[derive(Debug, Clone)]
+pub struct TokenMsg {
+    pub group: u64,
+    pub iter: usize,
+    pub tokens: Vec<i32>,
+}
+
+impl TokenMsg {
+    pub fn bytes(&self) -> u64 {
+        self.tokens.len() as u64 * 4
+    }
+}
+
+/// Where a stage sends its output.
+pub enum NextHop {
+    /// Forward activations to the next stage.
+    Stage(ShapedSender<StageMsg>),
+    /// This is the head stage: send sampled tokens to the driver.
+    Driver(ShapedSender<TokenMsg>),
+}
+
+/// Static + mutable state of one stage actor.
+pub struct StageActor {
+    pub stage_idx: usize,
+    pub device_id: usize,
+    /// Decoder-layer indices `[lo, hi)` this stage hosts (model layers
+    /// shifted by the embedding layer).
+    pub decoders: std::ops::Range<usize>,
+    pub has_embed: bool,
+    pub has_head: bool,
+    pub exec: ExecServiceHandle,
+    pub kv: KvPool,
+    pub next: NextHop,
+    /// Extra simulated compute slowdown (1.0 = run at real CPU speed).
+    pub compute_scale: f64,
+    // weights registered inside the exec service (converted to literals
+    // once — the per-token decode loop never copies weights again)
+    embed_w: Option<RegId>,
+    head_w: Option<RegId>,
+    layer_w: Vec<RegId>,
+    // model dims
+    kv_heads: usize,
+    max_seq: usize,
+    head_dim: usize,
+    vocab: usize,
+    // telemetry
+    pub exec_ms_total: f64,
+    pub msgs_processed: u64,
+}
+
+impl StageActor {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        stage_idx: usize,
+        device_id: usize,
+        manifest: &Manifest,
+        weights: &WeightStore,
+        model_layers: std::ops::Range<usize>,
+        n_model_layers: usize,
+        exec: ExecServiceHandle,
+        kv_budget_bytes: u64,
+        next: NextHop,
+    ) -> Result<Self> {
+        let c = &manifest.config;
+        let has_embed = model_layers.start == 0;
+        let has_head = model_layers.end == n_model_layers;
+        let dec_lo = model_layers.start.max(1) - 1;
+        let dec_hi = (model_layers.end.min(n_model_layers - 1)).max(1) - 1;
+        let decoders = dec_lo..dec_hi.max(dec_lo);
+
+        let as_td = |data: &[f32], shape: &[usize]| {
+            TensorData::f32(data.to_vec(), shape.iter().map(|&x| x as i64).collect())
+        };
+        let embed_w = if has_embed {
+            let (d, s) = weights.get("tok_emb")?;
+            Some(exec.register(vec![as_td(d, s)])?)
+        } else {
+            None
+        };
+        let head_w = if has_head {
+            let (n, ns) = weights.get("final_norm")?;
+            let (l, ls) = weights.get("lm_head")?;
+            Some(exec.register(vec![as_td(n, ns), as_td(l, ls)])?)
+        } else {
+            None
+        };
+        let layer_w = decoders
+            .clone()
+            .map(|l| {
+                let tensors: Vec<TensorData> = weights
+                    .layer_params(manifest, l)?
+                    .into_iter()
+                    .map(|(d, s)| as_td(d, s))
+                    .collect();
+                exec.register(tensors)
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(StageActor {
+            stage_idx,
+            device_id,
+            decoders,
+            has_embed,
+            has_head,
+            exec,
+            kv: KvPool::new(kv_budget_bytes),
+            next,
+            compute_scale: 1.0,
+            embed_w,
+            head_w,
+            layer_w,
+            kv_heads: c.n_kv_heads,
+            max_seq: c.max_seq,
+            head_dim: c.head_dim(),
+            vocab: c.vocab_size,
+            exec_ms_total: 0.0,
+            msgs_processed: 0,
+        })
+    }
+
+    fn exec_scaled(
+        &mut self,
+        prefix: Option<RegId>,
+        variant: &str,
+        inputs: Vec<TensorData>,
+    ) -> Result<Vec<TensorData>> {
+        let (out, ms) = self.exec.exec_prefixed(prefix, variant, inputs)?;
+        self.exec_ms_total += ms * self.compute_scale;
+        if self.compute_scale > 1.0 {
+            let extra = ms * (self.compute_scale - 1.0);
+            std::thread::sleep(std::time::Duration::from_secs_f64(extra / 1e3));
+        }
+        Ok(out)
+    }
+
+    /// Process messages until `Shutdown` or the input channel closes.
+    pub fn run(mut self, rx: std::sync::mpsc::Receiver<StageMsg>) -> Result<()> {
+        while let Ok(msg) = rx.recv() {
+            match msg {
+                StageMsg::Shutdown => {
+                    self.forward_control(StageMsg::Shutdown)?;
+                    break;
+                }
+                StageMsg::Free { group } => {
+                    self.kv.remove(group);
+                    self.forward_control(StageMsg::Free { group })?;
+                }
+                StageMsg::Work {
+                    group,
+                    iter,
+                    pos,
+                    phase,
+                    batch,
+                    prompt_len,
+                    payload,
+                } => {
+                    self.msgs_processed += 1;
+                    let hidden = self.input_hidden(phase, batch, prompt_len, payload)?;
+                    let hidden = match phase {
+                        Phase::Prefill => self.run_prefill(group, batch, hidden)?,
+                        Phase::Decode => self.run_decode(group, batch, pos, hidden)?,
+                    };
+                    self.emit(group, iter, pos, phase, batch, prompt_len, hidden)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn forward_control(&self, msg: StageMsg) -> Result<()> {
+        if let NextHop::Stage(tx) = &self.next {
+            tx.send(msg, 16)?;
+        }
+        Ok(())
+    }
+
+    /// Resolve the incoming payload to hidden activations.
+    fn input_hidden(
+        &mut self,
+        phase: Phase,
+        batch: usize,
+        prompt_len: usize,
+        payload: Payload,
+    ) -> Result<TensorData> {
+        match payload {
+            Payload::Hidden(h) => Ok(h),
+            Payload::Tokens(tokens) => {
+                anyhow::ensure!(self.has_embed, "tokens sent to a non-source stage");
+                let emb = self.embed_w.context("missing tok_emb")?;
+                let (variant, dims) = match phase {
+                    Phase::Prefill => (
+                        format!("embed_prefill_b{batch}"),
+                        vec![batch as i64, prompt_len as i64],
+                    ),
+                    Phase::Decode => (format!("embed_decode_b{batch}"), vec![batch as i64, 1]),
+                };
+                let toks = TensorData::i32(tokens, dims);
+                let out = self.exec_scaled(Some(emb), &variant, vec![toks])?;
+                out.into_iter()
+                    .next()
+                    .ok_or_else(|| anyhow!("embed returned nothing"))
+            }
+        }
+    }
+
+    fn run_prefill(&mut self, group: u64, batch: usize, mut h: TensorData) -> Result<TensorData> {
+        let n_local = self.layer_w.len();
+        let bytes = KvPool::group_bytes(n_local, batch, self.kv_heads, self.max_seq, self.head_dim);
+        anyhow::ensure!(
+            self.kv.can_admit(bytes),
+            "stage {} (device {}) KV pool full: admit {} used {} budget {}",
+            self.stage_idx,
+            self.device_id,
+            bytes,
+            self.kv.used_bytes(),
+            self.kv.budget_bytes()
+        );
+        let variant = format!("layer_prefill_b{batch}");
+        let mut layers = Vec::with_capacity(n_local);
+        for w in self.layer_w.clone() {
+            let mut out = self.exec_scaled(Some(w), &variant, vec![h])?;
+            anyhow::ensure!(out.len() == 3, "layer_prefill must return 3 outputs");
+            let vc = out.pop().unwrap();
+            let kc = out.pop().unwrap();
+            h = out.pop().unwrap();
+            layers.push((kc, vc));
+        }
+        if n_local > 0 {
+            self.kv.insert(
+                group,
+                GroupCache {
+                    layers,
+                    batch,
+                    bytes,
+                },
+            )?;
+        }
+        Ok(h)
+    }
+
+    fn run_decode(
+        &mut self,
+        group: u64,
+        batch: usize,
+        pos: i32,
+        mut h: TensorData,
+    ) -> Result<TensorData> {
+        let variant = format!("layer_decode_b{batch}");
+        let n_local = self.layer_w.len();
+        for li in 0..n_local {
+            let (kc, vc) = {
+                let cache = self
+                    .kv
+                    .get(group)
+                    .with_context(|| format!("no cache for group {group}"))?;
+                cache.layers[li].clone()
+            };
+            let w = self.layer_w[li];
+            let inputs = vec![h, kc, vc, TensorData::scalar_i32(pos)];
+            let mut out = self.exec_scaled(Some(w), &variant, inputs)?;
+            anyhow::ensure!(out.len() == 3, "layer_decode must return 3 outputs");
+            let vc = out.pop().unwrap();
+            let kc = out.pop().unwrap();
+            h = out.pop().unwrap();
+            let cache = self.kv.get_mut(group).unwrap();
+            cache.layers[li] = (kc, vc);
+        }
+        Ok(h)
+    }
+
+    /// Run the head (if present) and forward.
+    #[allow(clippy::too_many_arguments)]
+    fn emit(
+        &mut self,
+        group: u64,
+        iter: usize,
+        pos: i32,
+        phase: Phase,
+        batch: usize,
+        prompt_len: usize,
+        hidden: TensorData,
+    ) -> Result<()> {
+        if self.has_head {
+            let hw = self.head_w.context("missing head weights")?;
+            let variant = match phase {
+                Phase::Prefill => format!("head_prefill_b{batch}"),
+                Phase::Decode => format!("head_decode_b{batch}"),
+            };
+            let out = self.exec_scaled(Some(hw), &variant, vec![hidden])?;
+            let logits = out[0].as_f32()?;
+            let tokens: Vec<i32> = (0..batch)
+                .map(|b| {
+                    let row = &logits[b * self.vocab..(b + 1) * self.vocab];
+                    row.iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i as i32)
+                        .unwrap_or(0)
+                })
+                .collect();
+            let msg = TokenMsg {
+                group,
+                iter,
+                tokens,
+            };
+            match &self.next {
+                NextHop::Driver(tx) => {
+                    let bytes = msg.bytes();
+                    tx.send(msg, bytes)?;
+                }
+                NextHop::Stage(_) => anyhow::bail!("head stage wired to another stage"),
+            }
+        } else {
+            let msg = StageMsg::Work {
+                group,
+                iter,
+                pos,
+                phase,
+                batch,
+                prompt_len,
+                payload: Payload::Hidden(hidden),
+            };
+            match &self.next {
+                NextHop::Stage(tx) => {
+                    let bytes = msg.bytes();
+                    tx.send(msg, bytes)?;
+                }
+                NextHop::Driver(_) => anyhow::bail!("non-head stage wired to driver"),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msg_bytes() {
+        let m = StageMsg::Work {
+            group: 0,
+            iter: 0,
+            pos: 0,
+            phase: Phase::Prefill,
+            batch: 1,
+            prompt_len: 4,
+            payload: Payload::Tokens(vec![1, 2, 3, 4]),
+        };
+        assert_eq!(m.bytes(), 16);
+        assert_eq!(StageMsg::Free { group: 1 }.bytes(), 16);
+        let t = TokenMsg {
+            group: 0,
+            iter: 0,
+            tokens: vec![1; 8],
+        };
+        assert_eq!(t.bytes(), 32);
+    }
+}

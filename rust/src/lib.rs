@@ -1,0 +1,49 @@
+//! # EdgeShard — collaborative edge inference for LLMs
+//!
+//! Reproduction of *EdgeShard: Efficient LLM Inference via Collaborative
+//! Edge Computing* (Zhang, Cao, Shen, Cui; 2024).
+//!
+//! Given a network of heterogeneous edge devices and cloud servers,
+//! EdgeShard (1) profiles per-layer compute cost, activation sizes and
+//! memory, (2) solves a joint **device-selection + layer-wise model
+//! partition** problem with dynamic programming — latency-optimal
+//! (Algorithm 1) and throughput-optimal (Algorithm 2) — and (3) runs
+//! collaborative inference either sequentially (single-user latency) or as
+//! a micro-batched pipeline with a *no-bubble* schedule (throughput).
+//!
+//! ## Crate layout
+//!
+//! | module | role |
+//! |---|---|
+//! | [`model`] | LLM descriptors: Llama2-7B/13B/70B analytic + the executable tiny model |
+//! | [`cluster`] | device catalog, heterogeneous bandwidth topologies, the paper's testbed |
+//! | [`netsim`] | Linux-TC stand-in: shaped, latency-injected async links |
+//! | [`profiler`] | offline profiling stage (analytic roofline + measured PJRT traces) |
+//! | [`planner`] | Algorithms 1 & 2 + all paper baselines |
+//! | [`pipeline`] | bubble / no-bubble pipeline schedule simulator + Gantt |
+//! | [`runtime`] | PJRT artifact loading & execution (`xla` crate), weight store |
+//! | [`coordinator`] | KV-cache manager, sequential & pipelined engines, batcher, TCP server |
+//! | [`workload`] | synthetic corpus + request trace generators |
+//! | [`metrics`] | latency/throughput instrumentation, table rendering |
+//! | [`repro`] | regenerates every table and figure of the paper's evaluation |
+//!
+//! Python/JAX/Pallas exist only on the build path (`make artifacts`); the
+//! request path is pure rust + PJRT.
+
+pub mod cluster;
+pub mod coordinator;
+pub mod metrics;
+pub mod model;
+pub mod netsim;
+pub mod pipeline;
+pub mod planner;
+pub mod profiler;
+pub mod repro;
+pub mod runtime;
+pub mod util;
+pub mod workload;
+
+pub use cluster::{Cluster, Device, DeviceClass};
+pub use model::{ModelDesc, Precision};
+pub use planner::{Plan, PlanObjective, Planner};
+pub use profiler::ProfiledTraces;

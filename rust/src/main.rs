@@ -1,0 +1,296 @@
+//! `edgeshard` — CLI for the EdgeShard reproduction.
+//!
+//! ```text
+//! edgeshard repro <table1|table4|fig7|fig8|fig9|fig10|all> [--seed N]
+//! edgeshard plan --model <7b|13b|70b> [--bandwidth MBPS] [--objective latency|throughput] [--seed N]
+//! edgeshard profile --model <7b|13b|70b> [--bandwidth MBPS]
+//! edgeshard gantt --model <7b|13b|70b> [--strategy bubble|nobubble] [--micro N]
+//! edgeshard serve [--addr HOST:PORT] [--stages N] [--time-scale F]
+//! edgeshard generate --prompt "text" [--max-new N] [--stages N]
+//! ```
+//!
+//! `repro` regenerates the paper's tables/figures (analytic testbed);
+//! `serve`/`generate` run the REAL tiny model through PJRT (needs
+//! `make artifacts`).
+
+use anyhow::{bail, Context, Result};
+use edgeshard::cluster::presets;
+use edgeshard::coordinator::{api::GenRequest, Batcher, Engine, EngineConfig};
+use edgeshard::model::{llama2_13b, llama2_70b, llama2_7b, ModelDesc};
+use edgeshard::pipeline::{gantt, simulate, PipelineSpec, Strategy};
+use edgeshard::planner::{LatencyDp, Planner, ThroughputDp};
+use edgeshard::profiler::{AnalyticProfiler, Workload};
+use edgeshard::runtime::{ExecService, Manifest, WeightStore};
+use edgeshard::util::markdown_table;
+use edgeshard::workload::Corpus;
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, String)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = it
+                    .next()
+                    .with_context(|| format!("flag --{key} needs a value"))?;
+                flags.push((key.to_string(), val.clone()));
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+            None => Ok(default),
+        }
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn model_by_name(name: &str) -> Result<ModelDesc> {
+    Ok(match name.to_lowercase().as_str() {
+        "7b" | "llama2-7b" => llama2_7b(),
+        "13b" | "llama2-13b" => llama2_13b(),
+        "70b" | "llama2-70b" => llama2_70b(),
+        other => bail!("unknown model `{other}` (use 7b|13b|70b)"),
+    })
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().map(|s| s.as_str()) else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd {
+        "repro" => cmd_repro(&args),
+        "plan" => cmd_plan(&args),
+        "profile" => cmd_profile(&args),
+        "gantt" => cmd_gantt(&args),
+        "serve" => cmd_serve(&args),
+        "generate" => cmd_generate(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command `{other}` (try `edgeshard help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "edgeshard — EdgeShard reproduction (collaborative edge LLM inference)\n\n\
+         USAGE:\n  edgeshard repro <table1|table4|fig7|fig8|fig9|fig10|all> [--seed N]\n  \
+         edgeshard plan --model 7b [--bandwidth 1] [--objective latency] [--seed N]\n  \
+         edgeshard profile --model 7b [--bandwidth 1]\n  \
+         edgeshard gantt --model 7b [--strategy nobubble] [--micro 4]\n  \
+         edgeshard serve [--addr 127.0.0.1:7077] [--stages 3] [--time-scale 0.001]\n  \
+         edgeshard generate --prompt \"Today is a\" [--max-new 16] [--stages 3]"
+    );
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let seed = args.get_usize("seed", 0)? as u64;
+    let what = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    match what {
+        "table1" => edgeshard::repro::table1::run(),
+        "table4" => edgeshard::repro::table4::run(seed),
+        "fig7" => edgeshard::repro::figs::fig7(seed),
+        "fig8" => edgeshard::repro::figs::fig8(seed),
+        "fig9" => edgeshard::repro::figs::fig9(seed),
+        "fig10" => edgeshard::repro::figs::fig10(seed),
+        "all" => edgeshard::repro::run_all(seed),
+        other => bail!("unknown experiment `{other}`"),
+    }
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let model = model_by_name(args.get("model").unwrap_or("7b"))?;
+    let bw = args.get_f64("bandwidth", 1.0)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    let objective = args.get("objective").unwrap_or("latency");
+    let cluster = presets::paper_testbed(bw, seed);
+    let traces =
+        AnalyticProfiler::default().profile(&model, &cluster, Workload::paper_default());
+    let plan = match objective {
+        "latency" => LatencyDp::new().plan(&traces, &cluster)?,
+        "throughput" => ThroughputDp::new().plan(&traces, &cluster)?,
+        other => bail!("objective must be latency|throughput, got `{other}`"),
+    };
+    println!("model: {}", model.name);
+    println!("cluster: paper testbed, cloud↔source {bw} Mbps (seed {seed})");
+    println!("objective: {objective}");
+    println!("plan: {}", plan.describe());
+    println!("predicted: {:.2} ms", plan.predicted_ms);
+    let rows: Vec<Vec<String>> = plan
+        .stages
+        .iter()
+        .map(|s| {
+            vec![
+                cluster.devices[s.device].name.clone(),
+                format!("{}..{}", s.start, s.end),
+                format!("{}", s.len()),
+                edgeshard::util::fmt_bytes(traces.range_mem_bytes(s.start, s.end, 1)),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        markdown_table(&["Device", "Layers", "Count", "Memory"], &rows)
+    );
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let model = model_by_name(args.get("model").unwrap_or("7b"))?;
+    let bw = args.get_f64("bandwidth", 1.0)?;
+    let cluster = presets::paper_testbed(bw, 0);
+    let traces =
+        AnalyticProfiler::default().profile(&model, &cluster, Workload::paper_default());
+    println!("# Profiling traces — {}", model.name);
+    let rows: Vec<Vec<String>> = cluster
+        .devices
+        .iter()
+        .map(|d| {
+            vec![
+                d.name.clone(),
+                format!("{:.2}", traces.range_prefill_ms(0, traces.n_layers, d.id)),
+                format!("{:.2}", traces.range_decode_ms(0, traces.n_layers, d.id)),
+                edgeshard::util::fmt_bytes(d.usable_mem_bytes),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        markdown_table(
+            &["Device", "Full prefill (ms)", "Full decode (ms/tok)", "Usable mem"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn cmd_gantt(args: &Args) -> Result<()> {
+    let model = model_by_name(args.get("model").unwrap_or("7b"))?;
+    let strategy = match args.get("strategy").unwrap_or("nobubble") {
+        "bubble" => Strategy::Bubble,
+        "nobubble" => Strategy::NoBubble,
+        "greedy" => Strategy::NoBubbleGreedy,
+        other => bail!("strategy must be bubble|nobubble|greedy, got `{other}`"),
+    };
+    let n_micro = args.get_usize("micro", 4)?;
+    let bw = args.get_f64("bandwidth", 1.0)?;
+    let cluster = presets::paper_testbed(bw, 0);
+    let workload = Workload {
+        prompt_len: 32,
+        gen_len: args.get_usize("iters", 8)?,
+        batch: 1,
+    };
+    let traces = AnalyticProfiler::default().profile(&model, &cluster, workload);
+    let plan = ThroughputDp::new().plan(&traces, &cluster)?;
+    println!("plan: {}", plan.describe());
+    let spec = PipelineSpec::from_plan(&plan, &traces, &cluster, n_micro);
+    let sched = simulate(&spec, strategy);
+    println!("{}", gantt(&sched, 100));
+    Ok(())
+}
+
+/// Build the real-model engine shared by `serve` and `generate`.
+fn build_engine(args: &Args) -> Result<(ExecService, Engine, Batcher)> {
+    let manifest = Manifest::load(Manifest::default_dir())
+        .context("loading artifacts (run `make artifacts` first)")?;
+    let weights = WeightStore::load(&manifest)?;
+    let (svc, handle) = ExecService::start(&manifest)?;
+    let n = manifest.config.n_layers + 2;
+    let stages = args.get_usize("stages", 3)?.clamp(1, n);
+    let cluster = presets::tiny_demo(0);
+    let time_scale = args.get_f64("time-scale", 0.001)?;
+
+    // plan on measured traces across the demo cluster
+    let mprof = edgeshard::runtime::MeasuredProfiler::new(&manifest, &weights, handle.clone());
+    let traces = mprof.profile(&cluster, Workload::paper_default())?;
+    let pool: Vec<usize> = (0..cluster.len().min(stages)).collect();
+    let plan = edgeshard::planner::throughput::algo2_exact(&traces, &cluster, &pool, 1)
+        .or_else(|_| LatencyDp::restricted(pool.clone()).plan(&traces, &cluster))?;
+    println!("deployment plan: {}", plan.describe());
+
+    let cfg = EngineConfig {
+        time_scale,
+        ..Default::default()
+    };
+    let engine = Engine::build(&manifest, &weights, handle, &plan, &cluster, &cfg)?;
+    let batcher = Batcher::new(manifest.config.prefill_len, manifest.batch_sizes.clone());
+    Ok((svc, engine, batcher))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7077").to_string();
+    let (svc, engine, mut batcher) = build_engine(args)?;
+    let listener = std::net::TcpListener::bind(&addr)?;
+    println!("serving on {addr} (JSON lines: {{\"prompt\": \"…\", \"max_new_tokens\": 16}})");
+    let cfg = edgeshard::coordinator::server::ServerConfig {
+        max_requests: args.get("max-requests").map(|v| v.parse()).transpose()?,
+        ..Default::default()
+    };
+    let served = edgeshard::coordinator::server::serve(listener, &engine, &mut batcher, &cfg)?;
+    println!("served {served} requests");
+    engine.shutdown()?;
+    drop(svc);
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let prompt = args.get("prompt").unwrap_or("Today is a good day").to_string();
+    let max_new = args.get_usize("max-new", 16)?;
+    let (svc, engine, mut batcher) = build_engine(args)?;
+    let req = GenRequest {
+        id: 1,
+        prompt: prompt.bytes().map(|b| b as i32).collect(),
+        max_new_tokens: max_new.clamp(1, 96),
+    };
+    let groups = batcher.pack(&[req]);
+    let (results, stats) = engine.generate_sequential(&groups)?;
+    let r = &results[0];
+    println!("prompt:    {prompt}");
+    println!("generated: {}", Corpus::detokenize(&r.tokens));
+    println!("tokens:    {:?}", r.tokens);
+    println!(
+        "ttft: {:.1} ms, total: {:.1} ms ({:.2} ms/token), throughput {:.2} tok/s",
+        r.ttft_ms,
+        r.total_ms,
+        r.ms_per_token(),
+        stats.throughput_tps
+    );
+    engine.shutdown()?;
+    drop(svc);
+    Ok(())
+}

@@ -1,0 +1,201 @@
+//! Serving metrics: latency histograms, throughput meters, and experiment
+//! result tables.
+
+use std::time::Instant;
+
+/// Latency histogram with exact percentiles (stores samples; fine at the
+/// request rates these experiments run).
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    samples_ms: Vec<f64>,
+    sorted: bool,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, ms: f64) {
+        self.samples_ms.push(ms);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_ms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_ms.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples_ms.is_empty() {
+            return 0.0;
+        }
+        self.samples_ms.iter().sum::<f64>() / self.samples_ms.len() as f64
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples_ms
+                .sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Exact percentile (nearest-rank). `q` in [0, 100].
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.samples_ms.is_empty() {
+            return 0.0;
+        }
+        self.ensure_sorted();
+        let n = self.samples_ms.len();
+        let rank = ((q / 100.0) * (n as f64 - 1.0)).round() as usize;
+        self.samples_ms[rank.min(n - 1)]
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.percentile(0.0)
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.percentile(100.0)
+    }
+
+    pub fn summary(&mut self) -> String {
+        format!(
+            "n={} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms max={:.2}ms",
+            self.len(),
+            self.mean(),
+            self.percentile(50.0),
+            self.percentile(95.0),
+            self.percentile(99.0),
+            self.max(),
+        )
+    }
+}
+
+/// Counts events over a wall-clock window.
+#[derive(Debug)]
+pub struct ThroughputMeter {
+    start: Instant,
+    count: u64,
+}
+
+impl Default for ThroughputMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ThroughputMeter {
+    pub fn new() -> Self {
+        ThroughputMeter {
+            start: Instant::now(),
+            count: 0,
+        }
+    }
+
+    pub fn add(&mut self, n: u64) {
+        self.count += n;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn per_second(&self) -> f64 {
+        let s = self.elapsed_s();
+        if s <= 0.0 {
+            0.0
+        } else {
+            self.count as f64 / s
+        }
+    }
+}
+
+/// One (method × model) cell of a paper-style result table.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Cell {
+    /// latency ms/token, throughput tokens/s
+    Ok { latency_ms: f64, throughput: f64 },
+    /// the configuration cannot host the model
+    Oom,
+}
+
+impl Cell {
+    pub fn latency_str(&self) -> String {
+        match self {
+            Cell::Ok { latency_ms, .. } => format!("{latency_ms:.2}"),
+            Cell::Oom => "OOM".into(),
+        }
+    }
+
+    pub fn throughput_str(&self) -> String {
+        match self {
+            Cell::Ok { throughput, .. } => format!("{throughput:.2}"),
+            Cell::Oom => "OOM".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.len(), 100);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+        assert!((h.percentile(50.0) - 50.0).abs() <= 1.0);
+        assert!((h.percentile(95.0) - 95.0).abs() <= 1.0);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 100.0);
+    }
+
+    #[test]
+    fn histogram_empty_safe() {
+        let mut h = Histogram::new();
+        assert_eq!(h.percentile(99.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn histogram_unsorted_input() {
+        let mut h = Histogram::new();
+        for v in [5.0, 1.0, 3.0, 2.0, 4.0] {
+            h.record(v);
+        }
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 5.0);
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let mut t = ThroughputMeter::new();
+        t.add(10);
+        t.add(5);
+        assert_eq!(t.count(), 15);
+        assert!(t.per_second() > 0.0);
+    }
+
+    #[test]
+    fn cell_render() {
+        let c = Cell::Ok {
+            latency_ms: 75.879,
+            throughput: 52.446,
+        };
+        assert_eq!(c.latency_str(), "75.88");
+        assert_eq!(c.throughput_str(), "52.45");
+        assert_eq!(Cell::Oom.latency_str(), "OOM");
+    }
+}

@@ -1,0 +1,187 @@
+//! Llama2 family descriptors (the paper's benchmark models) and the
+//! executable tiny model loaded from `artifacts/manifest.json`.
+
+use super::{LayerDesc, LayerKind, ModelDesc, Precision};
+
+/// Architecture hyper-parameters of a Llama-family model.
+#[derive(Debug, Clone, Copy)]
+pub struct LlamaParams {
+    pub d_model: u64,
+    pub n_layers: u64,
+    pub n_heads: u64,
+    pub n_kv_heads: u64,
+    pub d_ff: u64,
+    pub vocab: u64,
+}
+
+impl LlamaParams {
+    pub fn head_dim(&self) -> u64 {
+        self.d_model / self.n_heads
+    }
+
+    /// Parameters in one decoder block: attention (q,k,v,o) + SwiGLU MLP
+    /// (gate, up, down) + two RMSNorm vectors.
+    pub fn decoder_params(&self) -> u64 {
+        let d = self.d_model;
+        let kv_dim = self.n_kv_heads * self.head_dim();
+        let attn = d * d /*q*/ + d * kv_dim /*k*/ + d * kv_dim /*v*/ + d * d /*o*/;
+        let mlp = 3 * d * self.d_ff;
+        attn + mlp + 2 * d
+    }
+}
+
+/// Build a layered descriptor from Llama hyper-parameters.
+///
+/// FLOPs/token per layer ≈ 2 × matmul params (multiply + accumulate);
+/// attention score FLOPs are sequence-dependent and small next to the
+/// projections at the paper's context (≤128 tokens), matching its
+/// profiling which averages prefill/decode per-token cost.
+pub fn llama_desc(name: &str, p: LlamaParams, max_seq: usize) -> ModelDesc {
+    let mut layers = Vec::with_capacity(p.n_layers as usize + 2);
+    let emb_params = p.vocab * p.d_model;
+    layers.push(LayerDesc {
+        kind: LayerKind::Embedding,
+        params: emb_params,
+        // lookup, negligible FLOPs, but nonzero to keep costs positive
+        flops_per_token: p.d_model as f64,
+        activation_elems: p.d_model,
+        kv_elems_per_token: 0,
+    });
+    let dec_params = p.decoder_params();
+    for _ in 0..p.n_layers {
+        layers.push(LayerDesc {
+            kind: LayerKind::Decoder,
+            params: dec_params,
+            flops_per_token: 2.0 * dec_params as f64,
+            activation_elems: p.d_model,
+            kv_elems_per_token: 2 * p.n_kv_heads * p.head_dim(),
+        });
+    }
+    let head_params = p.vocab * p.d_model + p.d_model;
+    layers.push(LayerDesc {
+        kind: LayerKind::Head,
+        params: head_params,
+        flops_per_token: 2.0 * head_params as f64,
+        // After the head only the sampled token id crosses the wire (the
+        // autoregressive loopback to the source node) — 1 element.
+        activation_elems: 1,
+        kv_elems_per_token: 0,
+    });
+    ModelDesc {
+        name: name.to_string(),
+        layers,
+        weight_precision: Precision::Fp32,
+        activation_precision: Precision::Fp32,
+        max_seq,
+    }
+}
+
+/// Llama2-7B: 32 layers, d=4096, 32 heads (MHA), ff=11008, vocab=32000.
+pub fn llama2_7b() -> ModelDesc {
+    llama_desc(
+        "Llama2-7B",
+        LlamaParams {
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            n_kv_heads: 32,
+            d_ff: 11008,
+            vocab: 32000,
+        },
+        128,
+    )
+}
+
+/// Llama2-13B: 40 layers, d=5120, 40 heads (MHA), ff=13824.
+pub fn llama2_13b() -> ModelDesc {
+    llama_desc(
+        "Llama2-13B",
+        LlamaParams {
+            d_model: 5120,
+            n_layers: 40,
+            n_heads: 40,
+            n_kv_heads: 40,
+            d_ff: 13824,
+            vocab: 32000,
+        },
+        128,
+    )
+}
+
+/// Llama2-70B: 80 layers, d=8192, 64 heads, 8 KV heads (GQA), ff=28672.
+pub fn llama2_70b() -> ModelDesc {
+    llama_desc(
+        "Llama2-70B",
+        LlamaParams {
+            d_model: 8192,
+            n_layers: 80,
+            n_heads: 64,
+            n_kv_heads: 8,
+            d_ff: 28672,
+            vocab: 32000,
+        },
+        128,
+    )
+}
+
+/// Descriptor for the AOT-compiled tiny model, derived from the manifest
+/// written by `python/compile/aot.py` so the analytic and executable views
+/// can never drift apart.
+pub fn tiny_from_manifest(manifest: &crate::runtime::Manifest) -> ModelDesc {
+    let c = &manifest.config;
+    llama_desc(
+        &c.name,
+        LlamaParams {
+            d_model: c.d_model as u64,
+            n_layers: c.n_layers as u64,
+            n_heads: c.n_heads as u64,
+            n_kv_heads: c.n_kv_heads as u64,
+            d_ff: c.d_ff as u64,
+            vocab: c.vocab_size as u64,
+        },
+        c.max_seq,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_dim_7b() {
+        let p = LlamaParams {
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            n_kv_heads: 32,
+            d_ff: 11008,
+            vocab: 32000,
+        };
+        assert_eq!(p.head_dim(), 128);
+        // attention 4*d^2 + mlp 3*d*ff + norms
+        assert_eq!(
+            p.decoder_params(),
+            4 * 4096 * 4096 + 3 * 4096 * 11008 + 2 * 4096
+        );
+    }
+
+    #[test]
+    fn gqa_reduces_decoder_params() {
+        let mha = LlamaParams {
+            d_model: 8192,
+            n_layers: 80,
+            n_heads: 64,
+            n_kv_heads: 64,
+            d_ff: 28672,
+            vocab: 32000,
+        };
+        let gqa = LlamaParams { n_kv_heads: 8, ..mha };
+        assert!(gqa.decoder_params() < mha.decoder_params());
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(llama2_7b().name, "Llama2-7B");
+        assert_eq!(llama2_70b().layers.len(), 82);
+    }
+}

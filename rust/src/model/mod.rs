@@ -1,0 +1,284 @@
+//! LLM descriptors: the layered view of a model that the profiler, the
+//! planners and the pipeline simulator operate on.
+//!
+//! EdgeShard partitions a model **layer-wise**: `[embedding, decoder_0,
+//! …, decoder_{L-1}, head]`.  Each layer carries its parameter bytes,
+//! per-token FLOPs, activation output size and per-token KV-cache bytes —
+//! exactly the traces the paper's offline profiling stage collects.
+//!
+//! Analytic descriptors exist for Llama2-7B/13B/70B (the paper's
+//! benchmarks) plus the executable `tiny` model compiled by
+//! `python/compile/aot.py`.
+
+mod llama;
+
+pub use llama::{llama2_13b, llama2_70b, llama2_7b, llama_desc, tiny_from_manifest, LlamaParams};
+
+
+/// Numeric precision of the deployed weights (Table I of the paper).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    Fp32,
+    Fp16,
+    Int8,
+    Int4,
+}
+
+impl Precision {
+    /// Bytes per parameter.
+    pub fn bytes_per_param(self) -> f64 {
+        match self {
+            Precision::Fp32 => 4.0,
+            Precision::Fp16 => 2.0,
+            Precision::Int8 => 1.0,
+            Precision::Int4 => 0.5,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Fp32 => "fp32",
+            Precision::Fp16 => "fp16",
+            Precision::Int8 => "int8",
+            Precision::Int4 => "int4",
+        }
+    }
+}
+
+/// Role of a layer in the stack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Token embedding lookup (must sit on the source node — privacy).
+    Embedding,
+    /// One transformer decoder block.
+    Decoder,
+    /// Final norm + LM head.
+    Head,
+}
+
+/// One partitionable layer.
+#[derive(Debug, Clone)]
+pub struct LayerDesc {
+    pub kind: LayerKind,
+    /// Parameter count (not bytes — precision applied by [`ModelDesc`]).
+    pub params: u64,
+    /// FLOPs to process ONE token through this layer (decode step).
+    pub flops_per_token: f64,
+    /// Output activation size per token, in elements (multiplied by
+    /// activation precision for wire bytes).
+    pub activation_elems: u64,
+    /// KV-cache elements appended per token (2 × kv_heads × head_dim for a
+    /// decoder layer, 0 otherwise).
+    pub kv_elems_per_token: u64,
+}
+
+/// A layered model description.
+#[derive(Debug, Clone)]
+pub struct ModelDesc {
+    pub name: String,
+    pub layers: Vec<LayerDesc>,
+    pub weight_precision: Precision,
+    /// Activations travel at this precision between devices.
+    pub activation_precision: Precision,
+    /// Upper bound on sequence length (prompt + generation) — sizes the
+    /// KV cache reservation.
+    pub max_seq: usize,
+}
+
+impl ModelDesc {
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Total parameter count.
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params).sum()
+    }
+
+    /// Weight bytes of one layer at the deployed precision.
+    pub fn layer_weight_bytes(&self, i: usize) -> u64 {
+        (self.layers[i].params as f64 * self.weight_precision.bytes_per_param()) as u64
+    }
+
+    /// Weight bytes of a contiguous layer range `[lo, hi)`.
+    pub fn range_weight_bytes(&self, lo: usize, hi: usize) -> u64 {
+        (lo..hi).map(|i| self.layer_weight_bytes(i)).sum()
+    }
+
+    /// Total model weight bytes.
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.range_weight_bytes(0, self.n_layers())
+    }
+
+    /// Wire size of layer `i`'s output activations for `tokens` tokens.
+    pub fn activation_bytes(&self, i: usize, tokens: usize) -> u64 {
+        (self.layers[i].activation_elems as f64
+            * tokens as f64
+            * self.activation_precision.bytes_per_param()) as u64
+    }
+
+    /// KV-cache bytes one sequence consumes over `max_seq` positions for a
+    /// contiguous layer range (what a device must reserve per batch slot).
+    pub fn range_kv_bytes_per_seq(&self, lo: usize, hi: usize) -> u64 {
+        let per_tok: u64 = (lo..hi).map(|i| self.layers[i].kv_elems_per_token).sum();
+        (per_tok as f64
+            * self.max_seq as f64
+            * self.activation_precision.bytes_per_param()) as u64
+    }
+
+    /// Memory a device needs to host layers `[lo, hi)` with `batch`
+    /// concurrent sequences: weights + KV reservation + one activation
+    /// workspace.
+    pub fn range_memory_bytes(&self, lo: usize, hi: usize, batch: usize) -> u64 {
+        let weights = self.range_weight_bytes(lo, hi);
+        let kv = self.range_kv_bytes_per_seq(lo, hi) * batch as u64;
+        let workspace = if hi > lo {
+            self.activation_bytes(hi - 1, self.max_seq) * batch as u64
+        } else {
+            0
+        };
+        weights + kv + workspace
+    }
+
+    /// FLOPs for one decode token through layers `[lo, hi)`.
+    pub fn range_flops_per_token(&self, lo: usize, hi: usize) -> f64 {
+        (lo..hi).map(|i| self.layers[i].flops_per_token).sum()
+    }
+
+    /// Clone at a different weight precision (Table I sweeps this).
+    pub fn with_precision(&self, p: Precision) -> ModelDesc {
+        let mut m = self.clone();
+        m.weight_precision = p;
+        m.name = format!("{}-{}", self.name, p.name());
+        m
+    }
+
+    /// Indices of decoder layers (excludes embedding/head).
+    pub fn decoder_range(&self) -> std::ops::Range<usize> {
+        let lo = self
+            .layers
+            .iter()
+            .position(|l| l.kind == LayerKind::Decoder)
+            .unwrap_or(0);
+        let hi = self
+            .layers
+            .iter()
+            .rposition(|l| l.kind == LayerKind::Decoder)
+            .map(|i| i + 1)
+            .unwrap_or(self.n_layers());
+        lo..hi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_bytes() {
+        assert_eq!(Precision::Fp32.bytes_per_param(), 4.0);
+        assert_eq!(Precision::Int4.bytes_per_param(), 0.5);
+    }
+
+    #[test]
+    fn llama7b_param_count_close_to_7b() {
+        let m = llama2_7b();
+        let p = m.total_params() as f64;
+        assert!((6.5e9..7.5e9).contains(&p), "params={p}");
+    }
+
+    #[test]
+    fn llama13b_param_count() {
+        let p = llama2_13b().total_params() as f64;
+        assert!((12.5e9..13.5e9).contains(&p), "params={p}");
+    }
+
+    #[test]
+    fn llama70b_param_count() {
+        let p = llama2_70b().total_params() as f64;
+        assert!((65e9..72e9).contains(&p), "params={p}");
+    }
+
+    #[test]
+    fn table1_memory_footprints() {
+        // Table I: 7B -> 28GB fp32, 7GB int8, 3.5GB int4 (±15%).
+        let m = llama2_7b();
+        let gb = |b: u64| b as f64 / 1e9;
+        let fp32 = gb(m.total_weight_bytes());
+        assert!((24.0..30.0).contains(&fp32), "fp32={fp32}GB");
+        let int8 = gb(m.with_precision(Precision::Int8).total_weight_bytes());
+        assert!((6.0..7.5).contains(&int8), "int8={int8}GB");
+        let int4 = gb(m.with_precision(Precision::Int4).total_weight_bytes());
+        assert!((3.0..3.8).contains(&int4), "int4={int4}GB");
+    }
+
+    #[test]
+    fn layer_structure() {
+        let m = llama2_7b();
+        assert_eq!(m.n_layers(), 34); // embed + 32 decoders + head
+        assert_eq!(m.layers[0].kind, LayerKind::Embedding);
+        assert_eq!(m.layers[33].kind, LayerKind::Head);
+        assert_eq!(m.decoder_range(), 1..33);
+    }
+
+    #[test]
+    fn range_weight_bytes_adds_up() {
+        let m = llama2_7b();
+        let total: u64 = (0..m.n_layers()).map(|i| m.layer_weight_bytes(i)).sum();
+        assert_eq!(m.total_weight_bytes(), total);
+        assert_eq!(
+            m.range_weight_bytes(0, 10) + m.range_weight_bytes(10, m.n_layers()),
+            total
+        );
+    }
+
+    #[test]
+    fn flops_approx_2x_params_for_decoders() {
+        // Matmul-dominated decode: FLOPs/token ≈ 2 × params.
+        let m = llama2_7b();
+        for i in m.decoder_range() {
+            let l = &m.layers[i];
+            let ratio = l.flops_per_token / (2.0 * l.params as f64);
+            assert!((0.9..1.2).contains(&ratio), "layer {i} ratio={ratio}");
+        }
+    }
+
+    #[test]
+    fn kv_bytes_7b() {
+        // Llama2-7B fp32 KV: 2 * 32 heads * 128 dim * 4B = 32KB per token
+        // per layer.
+        let m = llama2_7b();
+        let i = m.decoder_range().start;
+        let per_tok = (m.layers[i].kv_elems_per_token as f64
+            * m.activation_precision.bytes_per_param()) as u64;
+        assert_eq!(per_tok, 32 * 1024);
+    }
+
+    #[test]
+    fn gqa_70b_kv_smaller_than_mha_scaling() {
+        // 70B uses GQA (8 kv heads), so per-layer KV is smaller than d_model
+        // scaling would suggest.
+        let m7 = llama2_7b();
+        let m70 = llama2_70b();
+        let kv7 = m7.layers[1].kv_elems_per_token;
+        let kv70 = m70.layers[1].kv_elems_per_token;
+        assert!(kv70 < kv7, "kv70={kv70} kv7={kv7}");
+    }
+
+    #[test]
+    fn memory_includes_kv_and_grows_with_batch() {
+        let m = llama2_7b();
+        let b1 = m.range_memory_bytes(0, m.n_layers(), 1);
+        let b8 = m.range_memory_bytes(0, m.n_layers(), 8);
+        assert!(b8 > b1);
+        assert!(b1 > m.total_weight_bytes());
+    }
+
+    #[test]
+    fn with_precision_renames_and_shrinks() {
+        let m = llama2_7b();
+        let q = m.with_precision(Precision::Int8);
+        assert!(q.name.contains("int8"));
+        assert_eq!(q.total_weight_bytes() * 4, m.total_weight_bytes());
+    }
+}

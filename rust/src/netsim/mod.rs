@@ -1,0 +1,206 @@
+//! Network simulator — the stand-in for the paper's Linux-TC-shaped LAN.
+//!
+//! Two layers of fidelity:
+//!
+//! * [`LinkSpec::transfer_ms`] — closed-form transfer time, used by the
+//!   planners and the pipeline simulator (identical math to
+//!   [`crate::cluster::Cluster::comm_ms`]).
+//! * [`shaped_channel`] — a real channel whose deliveries are delayed by
+//!   transfer time + propagation latency, serialized like a physical link
+//!   (one frame at a time; a dedicated pacer thread plays the role of the
+//!   NIC).  The collaborative engines in [`crate::coordinator`] move real
+//!   activation tensors through these, so the end-to-end demo experiences
+//!   the same queueing the paper's testbed does.
+
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::thread;
+use std::time::Duration;
+
+/// Static description of one directed link.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    pub bandwidth_mbps: f64,
+    pub latency_ms: f64,
+}
+
+impl LinkSpec {
+    pub fn new(bandwidth_mbps: f64, latency_ms: f64) -> Self {
+        LinkSpec {
+            bandwidth_mbps,
+            latency_ms,
+        }
+    }
+
+    /// Pure serialization delay for `bytes` (no propagation latency).
+    pub fn transfer_ms(&self, bytes: u64) -> f64 {
+        if !self.bandwidth_mbps.is_finite() {
+            return 0.0;
+        }
+        bytes as f64 * 8.0 / (self.bandwidth_mbps * 1e6) * 1e3
+    }
+
+    /// One-shot delivery time: serialization + propagation.
+    pub fn delivery_ms(&self, bytes: u64) -> f64 {
+        self.transfer_ms(bytes) + self.latency_ms
+    }
+}
+
+/// A message with an explicit wire size.
+struct Frame<T> {
+    payload: T,
+    bytes: u64,
+}
+
+/// Sender half of a shaped channel.
+pub struct ShapedSender<T> {
+    tx: Sender<Frame<T>>,
+}
+
+impl<T> Clone for ShapedSender<T> {
+    fn clone(&self) -> Self {
+        ShapedSender {
+            tx: self.tx.clone(),
+        }
+    }
+}
+
+impl<T: Send + 'static> ShapedSender<T> {
+    /// Enqueue a frame; it will arrive after the link finishes serializing
+    /// everything ahead of it plus this frame, plus propagation latency.
+    pub fn send(&self, payload: T, bytes: u64) -> anyhow::Result<()> {
+        self.tx
+            .send(Frame { payload, bytes })
+            .map_err(|_| anyhow::anyhow!("shaped link closed"))
+    }
+}
+
+/// Create a shaped, serialized link.
+///
+/// `time_scale` compresses simulated time (0.01 ⇒ delays run at 1% of
+/// real time) so integration tests finish quickly while preserving
+/// ordering and relative timing.  The pacer thread exits when both ends
+/// hang up.
+pub fn shaped_channel<T: Send + 'static>(
+    spec: LinkSpec,
+    time_scale: f64,
+) -> (ShapedSender<T>, Receiver<T>) {
+    let (in_tx, in_rx) = mpsc::channel::<Frame<T>>();
+    let (out_tx, out_rx) = mpsc::channel::<T>();
+    thread::spawn(move || {
+        // Track the latency-stage so propagation overlaps the next frame's
+        // serialization: deliver_at(frame) = serialize_done + latency.
+        while let Ok(frame) = in_rx.recv() {
+            let transfer = spec.transfer_ms(frame.bytes) * time_scale;
+            if transfer > 0.0 {
+                thread::sleep(Duration::from_secs_f64(transfer / 1e3));
+            }
+            let lat = spec.latency_ms * time_scale;
+            if lat > 0.0 {
+                let out = out_tx.clone();
+                thread::spawn(move || {
+                    thread::sleep(Duration::from_secs_f64(lat / 1e3));
+                    let _ = out.send(frame.payload);
+                });
+            } else if out_tx.send(frame.payload).is_err() {
+                break;
+            }
+        }
+    });
+    (ShapedSender { tx: in_tx }, out_rx)
+}
+
+/// Full-mesh link specs for a cluster: `specs[a][b]` describes traffic a→b.
+pub fn cluster_link_specs(cluster: &crate::cluster::Cluster) -> Vec<Vec<LinkSpec>> {
+    let m = cluster.len();
+    (0..m)
+        .map(|a| {
+            (0..m)
+                .map(|b| LinkSpec::new(cluster.bandwidth_mbps[a][b], cluster.latency_ms[a][b]))
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn transfer_math() {
+        let l = LinkSpec::new(8.0, 2.0);
+        assert!((l.transfer_ms(1_000_000) - 1000.0).abs() < 1e-9);
+        assert!((l.delivery_ms(0) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn infinite_bandwidth_is_free() {
+        let l = LinkSpec::new(f64::INFINITY, 0.0);
+        assert_eq!(l.transfer_ms(u64::MAX / 16), 0.0);
+    }
+
+    #[test]
+    fn shaped_channel_delivers_in_order() {
+        let (tx, rx) = shaped_channel(LinkSpec::new(1000.0, 0.0), 0.01);
+        for i in 0..5 {
+            tx.send(i, 1000).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(rx.recv().unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn shaped_channel_delays_by_bandwidth() {
+        // 1 MB at 8 Mbps = 1000 ms; at scale 0.05 → 50 ms.
+        let (tx, rx) = shaped_channel(LinkSpec::new(8.0, 0.0), 0.05);
+        let start = Instant::now();
+        tx.send("x", 1_000_000).unwrap();
+        rx.recv().unwrap();
+        let ms = start.elapsed().as_secs_f64() * 1e3;
+        assert!((35.0..500.0).contains(&ms), "elapsed={ms}ms");
+    }
+
+    #[test]
+    fn link_serializes_back_to_back_frames() {
+        let (tx, rx) = shaped_channel(LinkSpec::new(8.0, 0.0), 0.05);
+        let start = Instant::now();
+        tx.send(1, 500_000).unwrap();
+        tx.send(2, 500_000).unwrap();
+        rx.recv().unwrap();
+        let t1 = start.elapsed().as_secs_f64() * 1e3;
+        rx.recv().unwrap();
+        let t2 = start.elapsed().as_secs_f64() * 1e3;
+        // Second frame must wait for the first (~25 ms each at this scale).
+        assert!(t2 > t1 + 10.0, "t1={t1} t2={t2}");
+    }
+
+    #[test]
+    fn zero_scale_is_instant() {
+        let (tx, rx) = shaped_channel(LinkSpec::new(0.001, 100.0), 0.0);
+        tx.send(7, 1 << 40).unwrap();
+        assert_eq!(rx.recv().unwrap(), 7);
+    }
+
+    #[test]
+    fn latency_overlaps_serialization() {
+        // Two tiny frames over a high-latency fast link: both arrive about
+        // one latency after send, not two latencies.
+        let (tx, rx) = shaped_channel(LinkSpec::new(1e6, 1000.0), 0.05);
+        let start = Instant::now();
+        tx.send(1, 10).unwrap();
+        tx.send(2, 10).unwrap();
+        rx.recv().unwrap();
+        rx.recv().unwrap();
+        let ms = start.elapsed().as_secs_f64() * 1e3;
+        assert!(ms < 140.0, "elapsed={ms}ms (latencies must overlap)");
+    }
+
+    #[test]
+    fn cluster_specs_mirror_cluster() {
+        let c = crate::cluster::presets::paper_testbed(1.0, 0);
+        let specs = cluster_link_specs(&c);
+        assert_eq!(specs[0][14].bandwidth_mbps, 1.0);
+        assert_eq!(specs[3][4].bandwidth_mbps, c.bandwidth_mbps[3][4]);
+    }
+}

@@ -1,0 +1,506 @@
+//! Pipeline-execution simulator: EdgeShard-Bubbles vs EdgeShard-No-bubbles
+//! (paper §IV-B "Pipeline Execution Optimization", Fig. 5).
+//!
+//! LLM pipelines differ from GPipe-style one-shot pipelines because of the
+//! autoregressive loop: micro-batch `b` cannot start generation iteration
+//! `t+1` until its token from iteration `t` has travelled back to the
+//! source node.  The **Bubbles** strategy additionally imposes the
+//! iteration barrier of classic pipelined inference — no micro-batch may
+//! enter iteration `t+1` until *every* micro-batch finished iteration `t` —
+//! which is exactly the idle time Fig. 5(a) shows.  **No-bubbles** drops
+//! the barrier: a micro-batch re-enters the pipeline the moment its own
+//! dependency is satisfied (Fig. 5(b)).
+//!
+//! The simulator is event-free: start times are computed with a dependency
+//! recurrence over `(micro-batch, iteration, stage)`, with per-device FIFO
+//! occupancy in `(iteration, micro-batch)` order — the dispatch order of
+//! the paper's figures.  [`Strategy::NoBubbleGreedy`] is an ablation that
+//! relaxes FIFO to earliest-ready-first.
+
+use crate::cluster::Cluster;
+use crate::planner::Plan;
+use crate::profiler::ProfiledTraces;
+
+/// Pipeline execution strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Iteration barrier across micro-batches (Fig. 5a).
+    Bubble,
+    /// Immediate re-entry per micro-batch, FIFO device order (Fig. 5b).
+    NoBubble,
+    /// No-bubble with earliest-ready-first device order (ablation).
+    NoBubbleGreedy,
+}
+
+impl Strategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::Bubble => "EdgeShard-Bubbles",
+            Strategy::NoBubble => "EdgeShard-No-bubbles",
+            Strategy::NoBubbleGreedy => "EdgeShard-No-bubbles(greedy)",
+        }
+    }
+}
+
+/// One scheduled task on a device timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Slot {
+    pub stage: usize,
+    pub micro: usize,
+    /// 0 = prefill; ≥1 = autoregressive iteration.
+    pub iter: usize,
+    pub start_ms: f64,
+    pub end_ms: f64,
+}
+
+/// Full simulated schedule.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub strategy: Strategy,
+    /// Per stage, in execution order.
+    pub slots: Vec<Vec<Slot>>,
+    pub makespan_ms: f64,
+    /// Tokens produced (micro-batches × batch-per-micro × iterations).
+    pub tokens: u64,
+    pub throughput_tps: f64,
+    /// Mean busy fraction across devices over the makespan.
+    pub utilization: f64,
+}
+
+/// Inputs for one pipeline simulation.
+#[derive(Debug, Clone)]
+pub struct PipelineSpec {
+    /// Per-stage prefill time (whole prompt, one micro-batch).
+    pub prefill_ms: Vec<f64>,
+    /// Per-stage decode time (one iteration, one micro-batch).
+    pub decode_ms: Vec<f64>,
+    /// Comm time stage s-1 → s for prefill activations (index 0 unused).
+    pub comm_prefill_ms: Vec<f64>,
+    /// Comm time stage s-1 → s for decode activations.
+    pub comm_decode_ms: Vec<f64>,
+    /// Token loopback time (last stage → source).
+    pub loopback_ms: f64,
+    /// Number of micro-batches in flight.
+    pub n_micro: usize,
+    /// Autoregressive iterations (tokens generated per sequence).
+    pub n_iters: usize,
+    /// Sequences per micro-batch (for token accounting).
+    pub batch_per_micro: usize,
+}
+
+impl PipelineSpec {
+    /// Build from a plan + traces (the production path).
+    pub fn from_plan(
+        plan: &Plan,
+        traces: &ProfiledTraces,
+        cluster: &Cluster,
+        n_micro: usize,
+    ) -> Self {
+        let s = plan.n_stages();
+        let mut prefill = Vec::with_capacity(s);
+        let mut decode = Vec::with_capacity(s);
+        let mut comm_p = vec![0.0; s];
+        let mut comm_d = vec![0.0; s];
+        for (i, st) in plan.stages.iter().enumerate() {
+            prefill.push(traces.range_prefill_ms(st.start, st.end, st.device));
+            decode.push(traces.range_decode_ms(st.start, st.end, st.device));
+            if i > 0 {
+                let prev = plan.stages[i - 1].device;
+                comm_p[i] =
+                    cluster.comm_ms(prev, st.device, traces.act_bytes_prefill[st.start - 1]);
+                comm_d[i] =
+                    cluster.comm_ms(prev, st.device, traces.act_bytes_decode[st.start - 1]);
+            }
+        }
+        let last = plan.stages.last().unwrap().device;
+        let loopback = cluster.comm_ms(
+            last,
+            cluster.source,
+            traces.act_bytes_decode[traces.n_layers - 1],
+        );
+        PipelineSpec {
+            prefill_ms: prefill,
+            decode_ms: decode,
+            comm_prefill_ms: comm_p,
+            comm_decode_ms: comm_d,
+            loopback_ms: loopback,
+            n_micro: n_micro.max(1),
+            n_iters: traces.workload.iterations(),
+            batch_per_micro: traces.workload.batch,
+        }
+    }
+
+    fn comp(&self, stage: usize, iter: usize) -> f64 {
+        if iter == 0 {
+            self.prefill_ms[stage]
+        } else {
+            self.decode_ms[stage]
+        }
+    }
+
+    fn comm(&self, stage: usize, iter: usize) -> f64 {
+        if stage == 0 {
+            0.0
+        } else if iter == 0 {
+            self.comm_prefill_ms[stage]
+        } else {
+            self.comm_decode_ms[stage]
+        }
+    }
+}
+
+/// Simulate one strategy over the spec.
+pub fn simulate(spec: &PipelineSpec, strategy: Strategy) -> Schedule {
+    match strategy {
+        Strategy::NoBubbleGreedy => simulate_greedy(spec, strategy),
+        _ => simulate_fifo(spec, strategy),
+    }
+}
+
+/// FIFO dispatch in (iteration, micro) order per device; optional
+/// iteration barrier for [`Strategy::Bubble`].
+fn simulate_fifo(spec: &PipelineSpec, strategy: Strategy) -> Schedule {
+    let s_count = spec.prefill_ms.len();
+    let (n_micro, n_iters) = (spec.n_micro, spec.n_iters);
+    // finish[b][t][s]
+    let mut finish = vec![vec![vec![0.0f64; s_count]; n_iters]; n_micro];
+    let mut dev_free = vec![0.0f64; s_count];
+    let mut slots: Vec<Vec<Slot>> = vec![Vec::new(); s_count];
+    let mut iter_done = 0.0f64; // barrier: when the previous iteration fully completed
+
+    for t in 0..n_iters {
+        let mut this_iter_done = 0.0f64;
+        for b in 0..n_micro {
+            for s in 0..s_count {
+                // dependency: previous stage of same (b, t), or for stage 0
+                // the token loopback from (b, t-1)'s last stage
+                let dep = if s > 0 {
+                    finish[b][t][s - 1] + spec.comm(s, t)
+                } else if t > 0 {
+                    finish[b][t - 1][s_count - 1] + spec.loopback_ms
+                } else {
+                    0.0
+                };
+                let barrier = if strategy == Strategy::Bubble && s == 0 && t > 0 {
+                    iter_done + spec.loopback_ms
+                } else {
+                    0.0
+                };
+                let start = dep.max(barrier).max(dev_free[s]);
+                let end = start + spec.comp(s, t);
+                finish[b][t][s] = end;
+                dev_free[s] = end;
+                slots[s].push(Slot {
+                    stage: s,
+                    micro: b,
+                    iter: t,
+                    start_ms: start,
+                    end_ms: end,
+                });
+            }
+            this_iter_done = this_iter_done.max(finish[b][t][s_count - 1]);
+        }
+        iter_done = this_iter_done;
+    }
+
+    finalize(spec, strategy, slots)
+}
+
+/// Earliest-ready-first per device (work-conserving ablation).
+fn simulate_greedy(spec: &PipelineSpec, strategy: Strategy) -> Schedule {
+    let s_count = spec.prefill_ms.len();
+    let (n_micro, n_iters) = (spec.n_micro, spec.n_iters);
+    // ready time of (b,t,s); f64::INFINITY = dependency unmet
+    let mut ready = vec![vec![vec![f64::INFINITY; s_count]; n_iters]; n_micro];
+    let mut done = vec![vec![vec![false; s_count]; n_iters]; n_micro];
+    let mut dev_free = vec![0.0f64; s_count];
+    let mut slots: Vec<Vec<Slot>> = vec![Vec::new(); s_count];
+    for b in 0..n_micro {
+        ready[b][0][0] = 0.0;
+    }
+    let total = n_micro * n_iters * s_count;
+    for _ in 0..total {
+        // pick the globally earliest-startable task
+        let mut best: Option<(f64, usize, usize, usize)> = None;
+        for b in 0..n_micro {
+            for t in 0..n_iters {
+                for s in 0..s_count {
+                    if done[b][t][s] || !ready[b][t][s].is_finite() {
+                        continue;
+                    }
+                    let start = ready[b][t][s].max(dev_free[s]);
+                    if best.map_or(true, |(bs, ..)| {
+                        start < bs
+                    }) {
+                        best = Some((start, b, t, s));
+                    }
+                }
+            }
+        }
+        let (start, b, t, s) = best.expect("schedulable task must exist");
+        let end = start + spec.comp(s, t);
+        done[b][t][s] = true;
+        dev_free[s] = end;
+        slots[s].push(Slot {
+            stage: s,
+            micro: b,
+            iter: t,
+            start_ms: start,
+            end_ms: end,
+        });
+        // release successors
+        if s + 1 < s_count {
+            ready[b][t][s + 1] = end + spec.comm(s + 1, t);
+        } else if t + 1 < n_iters {
+            ready[b][t + 1][0] = end + spec.loopback_ms;
+        }
+    }
+    finalize(spec, strategy, slots)
+}
+
+fn finalize(spec: &PipelineSpec, strategy: Strategy, slots: Vec<Vec<Slot>>) -> Schedule {
+    let makespan = slots
+        .iter()
+        .flat_map(|v| v.iter().map(|s| s.end_ms))
+        .fold(0.0f64, f64::max);
+    let tokens = (spec.n_micro * spec.n_iters * spec.batch_per_micro) as u64;
+    let busy: f64 = slots
+        .iter()
+        .map(|v| v.iter().map(|s| s.end_ms - s.start_ms).sum::<f64>())
+        .sum();
+    let util = if makespan > 0.0 {
+        busy / (makespan * slots.len() as f64)
+    } else {
+        0.0
+    };
+    Schedule {
+        strategy,
+        slots,
+        makespan_ms: makespan,
+        tokens,
+        throughput_tps: if makespan > 0.0 {
+            tokens as f64 / (makespan / 1e3)
+        } else {
+            0.0
+        },
+        utilization: util,
+    }
+}
+
+/// Render an ASCII Gantt chart (one row per stage/device).
+pub fn gantt(schedule: &Schedule, width: usize) -> String {
+    let span = schedule.makespan_ms.max(1e-9);
+    let mut out = String::new();
+    for (s, row) in schedule.slots.iter().enumerate() {
+        let mut line = vec![' '; width];
+        for slot in row {
+            let a = ((slot.start_ms / span) * width as f64) as usize;
+            let b = (((slot.end_ms / span) * width as f64) as usize).min(width);
+            let ch = if slot.iter == 0 {
+                'P'
+            } else {
+                char::from_digit(((slot.iter - 1) % 10) as u32, 10).unwrap()
+            };
+            for c in line.iter_mut().take(b).skip(a.min(width)) {
+                *c = ch;
+            }
+        }
+        out.push_str(&format!("stage{:<2}|{}|\n", s, line.iter().collect::<String>()));
+    }
+    out.push_str(&format!(
+        "{} makespan={:.1}ms tokens={} throughput={:.2}tok/s util={:.0}%\n",
+        schedule.strategy.name(),
+        schedule.makespan_ms,
+        schedule.tokens,
+        schedule.throughput_tps,
+        schedule.utilization * 100.0
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Ideal 4-stage, equal-time pipeline like Fig. 5.
+    fn fig5_spec() -> PipelineSpec {
+        PipelineSpec {
+            prefill_ms: vec![10.0; 4],
+            decode_ms: vec![10.0; 4],
+            comm_prefill_ms: vec![0.0; 4],
+            comm_decode_ms: vec![0.0; 4],
+            loopback_ms: 0.0,
+            n_micro: 4,
+            n_iters: 5,
+            batch_per_micro: 1,
+        }
+    }
+
+    #[test]
+    fn no_bubble_beats_bubble_fig5() {
+        let spec = fig5_spec();
+        let b = simulate(&spec, Strategy::Bubble);
+        let nb = simulate(&spec, Strategy::NoBubble);
+        assert!(
+            nb.makespan_ms < b.makespan_ms,
+            "no-bubble {} vs bubble {}",
+            nb.makespan_ms,
+            b.makespan_ms
+        );
+        assert!(nb.throughput_tps > b.throughput_tps);
+    }
+
+    #[test]
+    fn ideal_no_bubble_is_fully_packed() {
+        // With equal stage times and no comm, no-bubble keeps every device
+        // busy once warmed up: makespan = (pipeline fill) + work.
+        let spec = fig5_spec();
+        let nb = simulate(&spec, Strategy::NoBubble);
+        // stage0 processes 4 micro × 5 iters × 10 ms = 200 ms of work,
+        // pipeline drain adds 3 stages × 10 ms.
+        assert!((nb.makespan_ms - 230.0).abs() < 1e-6, "{}", nb.makespan_ms);
+        let b = simulate(&spec, Strategy::Bubble);
+        assert!(b.makespan_ms >= 230.0 + 30.0, "{}", b.makespan_ms);
+    }
+
+    #[test]
+    fn tokens_accounting() {
+        let spec = PipelineSpec {
+            batch_per_micro: 8,
+            ..fig5_spec()
+        };
+        let s = simulate(&spec, Strategy::NoBubble);
+        assert_eq!(s.tokens, 4 * 5 * 8);
+    }
+
+    #[test]
+    fn single_stage_no_pipeline_equal_strategies() {
+        // One device: bubble vs no-bubble identical (§V.E: Cloud-Edge-Opt
+        // local execution has "no pipeline execution").
+        let spec = PipelineSpec {
+            prefill_ms: vec![20.0],
+            decode_ms: vec![5.0],
+            comm_prefill_ms: vec![0.0],
+            comm_decode_ms: vec![0.0],
+            loopback_ms: 0.0,
+            n_micro: 3,
+            n_iters: 4,
+            batch_per_micro: 1,
+        };
+        let b = simulate(&spec, Strategy::Bubble);
+        let nb = simulate(&spec, Strategy::NoBubble);
+        assert!((b.makespan_ms - nb.makespan_ms).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dependencies_respected() {
+        let spec = fig5_spec();
+        for strat in [Strategy::Bubble, Strategy::NoBubble, Strategy::NoBubbleGreedy] {
+            let sch = simulate(&spec, strat);
+            // collect finish times
+            let mut fin = std::collections::HashMap::new();
+            for row in &sch.slots {
+                for s in row {
+                    fin.insert((s.micro, s.iter, s.stage), (s.start_ms, s.end_ms));
+                }
+            }
+            for (&(b, t, s), &(start, _)) in &fin {
+                if s > 0 {
+                    let (_, prev_end) = fin[&(b, t, s - 1)];
+                    assert!(start >= prev_end - 1e-9, "{strat:?} ({b},{t},{s})");
+                }
+                if s == 0 && t > 0 {
+                    let (_, prev_end) = fin[&(b, t - 1, spec.prefill_ms.len() - 1)];
+                    assert!(start >= prev_end - 1e-9, "{strat:?} loopback ({b},{t})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn device_never_overlaps() {
+        let spec = fig5_spec();
+        for strat in [Strategy::Bubble, Strategy::NoBubble, Strategy::NoBubbleGreedy] {
+            let sch = simulate(&spec, strat);
+            for row in &sch.slots {
+                let mut sorted = row.clone();
+                sorted.sort_by(|a, b| a.start_ms.partial_cmp(&b.start_ms).unwrap());
+                for w in sorted.windows(2) {
+                    assert!(
+                        w[1].start_ms >= w[0].end_ms - 1e-9,
+                        "{strat:?}: overlap {w:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_close_to_fifo() {
+        // Earliest-ready-first is work-conserving but list scheduling has
+        // no optimality guarantee (Graham anomalies) — require it stays
+        // within the 2x list-scheduling bound and usually close.
+        let spec = PipelineSpec {
+            prefill_ms: vec![30.0, 10.0, 20.0],
+            decode_ms: vec![12.0, 4.0, 8.0],
+            comm_prefill_ms: vec![0.0, 3.0, 3.0],
+            comm_decode_ms: vec![0.0, 1.0, 1.0],
+            loopback_ms: 2.0,
+            n_micro: 4,
+            n_iters: 6,
+            batch_per_micro: 1,
+        };
+        let fifo = simulate(&spec, Strategy::NoBubble);
+        let greedy = simulate(&spec, Strategy::NoBubbleGreedy);
+        assert!(
+            greedy.makespan_ms <= fifo.makespan_ms * 1.25,
+            "greedy={} fifo={}",
+            greedy.makespan_ms,
+            fifo.makespan_ms
+        );
+    }
+
+    #[test]
+    fn comm_delays_push_starts() {
+        let mut spec = fig5_spec();
+        spec.comm_decode_ms = vec![0.0, 50.0, 0.0, 0.0];
+        spec.comm_prefill_ms = vec![0.0, 50.0, 0.0, 0.0];
+        let sch = simulate(&spec, Strategy::NoBubble);
+        // stage1's first slot must start ≥ stage0 prefill end + 50
+        let s1 = &sch.slots[1][0];
+        assert!(s1.start_ms >= 60.0 - 1e-9, "{}", s1.start_ms);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let sch = simulate(&fig5_spec(), Strategy::NoBubble);
+        assert!(sch.utilization > 0.5 && sch.utilization <= 1.0);
+    }
+
+    #[test]
+    fn gantt_renders() {
+        let sch = simulate(&fig5_spec(), Strategy::NoBubble);
+        let g = gantt(&sch, 60);
+        assert!(g.contains("stage0"));
+        assert!(g.contains('P'));
+        assert!(g.contains("throughput"));
+    }
+
+    #[test]
+    fn more_micro_batches_increase_throughput_until_saturation() {
+        let mut last = 0.0;
+        for n_micro in [1, 2, 4] {
+            let spec = PipelineSpec {
+                n_micro,
+                ..fig5_spec()
+            };
+            let sch = simulate(&spec, Strategy::NoBubble);
+            assert!(
+                sch.throughput_tps >= last - 1e-9,
+                "n_micro={n_micro}: {} < {last}",
+                sch.throughput_tps
+            );
+            last = sch.throughput_tps;
+        }
+    }
+}

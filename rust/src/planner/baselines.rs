@@ -1,0 +1,319 @@
+//! Baseline deployment strategies from the paper's evaluation (§V.A):
+//!
+//! * **Edge-Solo** — whole model on the source edge device.
+//! * **Cloud-Edge-Even** — model split in half: first half on the source,
+//!   second half on the cloud server.
+//! * **Cloud-Edge-Opt** — the EdgeShard DP restricted to {source, cloud}
+//!   (the paper notes it is "a special case of EdgeShard").
+//! * **EdgeShard-Even** — model split evenly across a given device list
+//!   (the 70B comparison in §V.C).
+
+use super::latency::algo1;
+use super::throughput::algo2_exact;
+use super::{Plan, PlanError, PlanObjective, Planner, Stage};
+use crate::cluster::Cluster;
+use crate::profiler::ProfiledTraces;
+
+fn check_mem(
+    stages: &[Stage],
+    traces: &ProfiledTraces,
+    cluster: &Cluster,
+    batch: usize,
+) -> Result<(), PlanError> {
+    let mut used = vec![0u64; cluster.len()];
+    for s in stages {
+        used[s.device] += traces.range_mem_bytes(s.start, s.end, batch);
+    }
+    for (d, u) in used.iter().enumerate() {
+        if *u > cluster.devices[d].usable_mem_bytes {
+            return Err(PlanError::Oom);
+        }
+    }
+    Ok(())
+}
+
+/// Whole model on the source device.
+#[derive(Debug, Clone, Default)]
+pub struct EdgeSolo {
+    pub batch: usize,
+}
+
+impl EdgeSolo {
+    pub fn new() -> Self {
+        EdgeSolo { batch: 1 }
+    }
+}
+
+impl Planner for EdgeSolo {
+    fn name(&self) -> &'static str {
+        "Edge-Solo"
+    }
+
+    fn plan(&self, traces: &ProfiledTraces, cluster: &Cluster) -> Result<Plan, PlanError> {
+        let stages = vec![Stage {
+            device: cluster.source,
+            start: 0,
+            end: traces.n_layers,
+        }];
+        check_mem(&stages, traces, cluster, self.batch.max(1))?;
+        let predicted_ms = traces.range_avg_ms(0, traces.n_layers, cluster.source);
+        Ok(Plan {
+            objective: PlanObjective::Latency,
+            stages,
+            predicted_ms,
+        })
+    }
+}
+
+/// Even 50/50 split between the source and the (single) cloud server.
+#[derive(Debug, Clone, Default)]
+pub struct CloudEdgeEven {
+    pub batch: usize,
+}
+
+impl CloudEdgeEven {
+    pub fn new() -> Self {
+        CloudEdgeEven { batch: 1 }
+    }
+}
+
+impl Planner for CloudEdgeEven {
+    fn name(&self) -> &'static str {
+        "Cloud-Edge-Even"
+    }
+
+    fn plan(&self, traces: &ProfiledTraces, cluster: &Cluster) -> Result<Plan, PlanError> {
+        let cloud = *cluster
+            .cloud_ids()
+            .first()
+            .ok_or_else(|| PlanError::Infeasible("no cloud device".into()))?;
+        let n = traces.n_layers;
+        let mid = n / 2;
+        let stages = vec![
+            Stage {
+                device: cluster.source,
+                start: 0,
+                end: mid,
+            },
+            Stage {
+                device: cloud,
+                start: mid,
+                end: n,
+            },
+        ];
+        check_mem(&stages, traces, cluster, self.batch.max(1))?;
+        let plan = Plan {
+            objective: PlanObjective::Latency,
+            stages,
+            predicted_ms: 0.0,
+        };
+        let predicted_ms = super::sequential_latency_ms(&plan, traces, cluster);
+        Ok(Plan {
+            predicted_ms,
+            ..plan
+        })
+    }
+}
+
+/// The EdgeShard DP on the {source, cloud} pair only.
+#[derive(Debug, Clone)]
+pub struct CloudEdgeOpt {
+    pub objective: PlanObjective,
+    pub batch: usize,
+}
+
+impl CloudEdgeOpt {
+    pub fn latency() -> Self {
+        CloudEdgeOpt {
+            objective: PlanObjective::Latency,
+            batch: 1,
+        }
+    }
+
+    pub fn throughput() -> Self {
+        CloudEdgeOpt {
+            objective: PlanObjective::Throughput,
+            batch: 1,
+        }
+    }
+}
+
+impl Planner for CloudEdgeOpt {
+    fn name(&self) -> &'static str {
+        "Cloud-Edge-Opt"
+    }
+
+    fn plan(&self, traces: &ProfiledTraces, cluster: &Cluster) -> Result<Plan, PlanError> {
+        let cloud = *cluster
+            .cloud_ids()
+            .first()
+            .ok_or_else(|| PlanError::Infeasible("no cloud device".into()))?;
+        let pool = vec![cluster.source, cloud];
+        match self.objective {
+            PlanObjective::Latency => algo1(traces, cluster, &pool, self.batch.max(1)),
+            PlanObjective::Throughput => {
+                algo2_exact(traces, cluster, &pool, self.batch.max(1))
+            }
+        }
+    }
+}
+
+/// Even layer split across an explicit device list (EdgeShard-Even, §V.C).
+#[derive(Debug, Clone)]
+pub struct EdgeShardEven {
+    pub devices: Vec<usize>,
+    pub batch: usize,
+}
+
+impl EdgeShardEven {
+    pub fn new(devices: Vec<usize>) -> Self {
+        EdgeShardEven { devices, batch: 1 }
+    }
+}
+
+impl Planner for EdgeShardEven {
+    fn name(&self) -> &'static str {
+        "EdgeShard-Even"
+    }
+
+    fn plan(&self, traces: &ProfiledTraces, cluster: &Cluster) -> Result<Plan, PlanError> {
+        if self.devices.is_empty() {
+            return Err(PlanError::Infeasible("no devices".into()));
+        }
+        if self.devices[0] != cluster.source {
+            return Err(PlanError::Infeasible(
+                "first device must be the source".into(),
+            ));
+        }
+        let n = traces.n_layers;
+        let d = self.devices.len().min(n);
+        let mut stages = Vec::with_capacity(d);
+        let mut start = 0;
+        for (s, &dev) in self.devices[..d].iter().enumerate() {
+            let end = (n * (s + 1)) / d;
+            if end > start {
+                stages.push(Stage {
+                    device: dev,
+                    start,
+                    end,
+                });
+                start = end;
+            }
+        }
+        check_mem(&stages, traces, cluster, self.batch.max(1))?;
+        let plan = Plan {
+            objective: PlanObjective::Throughput,
+            stages,
+            predicted_ms: 0.0,
+        };
+        let predicted_ms = super::pipeline_bottleneck_ms(&plan, traces, cluster);
+        Ok(Plan {
+            predicted_ms,
+            ..plan
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::model::{llama2_13b, llama2_70b, llama2_7b};
+    use crate::planner::{validate_plan, LatencyDp};
+    use crate::profiler::{AnalyticProfiler, Workload};
+
+    fn profile(model: &crate::model::ModelDesc, cluster: &Cluster) -> ProfiledTraces {
+        AnalyticProfiler::default().profile(model, cluster, Workload::paper_default())
+    }
+
+    #[test]
+    fn solo_7b_fits_on_agx() {
+        let c = presets::paper_testbed(1.0, 0);
+        let t = profile(&llama2_7b(), &c);
+        let p = EdgeSolo::new().plan(&t, &c).unwrap();
+        validate_plan(&p, &t, &c, 1).unwrap();
+        assert_eq!(p.n_stages(), 1);
+    }
+
+    #[test]
+    fn solo_13b_oom() {
+        // Table IV row 1: 13B/70B OOM on a single AGX Orin.
+        let c = presets::paper_testbed(1.0, 0);
+        assert_eq!(
+            EdgeSolo::new().plan(&profile(&llama2_13b(), &c), &c),
+            Err(PlanError::Oom)
+        );
+        assert_eq!(
+            EdgeSolo::new().plan(&profile(&llama2_70b(), &c), &c),
+            Err(PlanError::Oom)
+        );
+    }
+
+    #[test]
+    fn cloud_edge_even_7b_ok_70b_oom() {
+        let c = presets::paper_testbed(1.0, 0);
+        let p = CloudEdgeEven::new()
+            .plan(&profile(&llama2_7b(), &c), &c)
+            .unwrap();
+        assert_eq!(p.n_stages(), 2);
+        assert_eq!(p.stages[1].device, 14);
+        assert_eq!(
+            CloudEdgeEven::new().plan(&profile(&llama2_70b(), &c), &c),
+            Err(PlanError::Oom)
+        );
+    }
+
+    #[test]
+    fn cloud_edge_opt_matches_restricted_dp() {
+        let c = presets::paper_testbed(1.0, 0);
+        let t = profile(&llama2_7b(), &c);
+        let opt = CloudEdgeOpt::latency().plan(&t, &c).unwrap();
+        let dp = LatencyDp::restricted(vec![0, 14]).plan(&t, &c).unwrap();
+        assert!((opt.predicted_ms - dp.predicted_ms).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cloud_edge_opt_at_1mbps_is_local() {
+        // §V.B: "The optimal deployment strategy of Cloud-Edge-
+        // Collaboration is local execution" at 1 Mbps.
+        let c = presets::paper_testbed(1.0, 0);
+        let t = profile(&llama2_7b(), &c);
+        let p = CloudEdgeOpt::latency().plan(&t, &c).unwrap();
+        assert_eq!(p.n_stages(), 1);
+        assert_eq!(p.stages[0].device, 0);
+        let solo = EdgeSolo::new().plan(&t, &c).unwrap();
+        assert!((p.predicted_ms - solo.predicted_ms).abs() < 1e-9);
+    }
+
+    #[test]
+    fn even_70b_needs_12_devices() {
+        // §V.C: EdgeShard-Even selects 11 AGX + 1 RTX 3090 for 70B.
+        let c = presets::paper_testbed(1.0, 0);
+        let t = profile(&llama2_70b(), &c);
+        let mut devs: Vec<usize> = (0..12).collect(); // 12 AGX Orin
+        devs.push(14);
+        let p = EdgeShardEven::new(devs).plan(&t, &c).unwrap();
+        validate_plan(&p, &t, &c, 1).unwrap();
+        assert_eq!(p.n_stages(), 13);
+    }
+
+    #[test]
+    fn even_rejects_wrong_source() {
+        let c = presets::paper_testbed(1.0, 0);
+        let t = profile(&llama2_7b(), &c);
+        assert!(matches!(
+            EdgeShardEven::new(vec![3, 14]).plan(&t, &c),
+            Err(PlanError::Infeasible(_))
+        ));
+    }
+
+    #[test]
+    fn even_split_balanced() {
+        let c = presets::paper_testbed(50.0, 0);
+        let t = profile(&llama2_7b(), &c);
+        let p = EdgeShardEven::new(vec![0, 1, 2, 3]).plan(&t, &c).unwrap();
+        let sizes: Vec<usize> = p.stages.iter().map(|s| s.len()).collect();
+        let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(mx - mn <= 1, "sizes={sizes:?}");
+    }
+}

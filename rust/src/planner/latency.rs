@@ -1,0 +1,418 @@
+//! Algorithm 1 — joint device selection + partition for **latency**.
+//!
+//! Faithful implementation of the paper's DP (Eqs. 6–8):
+//!
+//! ```text
+//! DP(i,j) = min_k ( DP(i-1,k) + t_comp(i,j) + t_comm(i-1,k,j) )          1 ≤ i < N-1
+//! DP(N-1,j) adds t_comm(N-1,j,source)   (token loopback, autoregression)
+//! DP(0,source) = t_comp(0,source)       (privacy constraint, Eq. 4/7)
+//! ```
+//!
+//! Memory (Eq. 5): the paper's pseudo-code greedily updates `Mem_j` while
+//! filling the table (Algo 1 line 13).  That greedy update is subtly
+//! lossy: the single cheapest path into state `(i,j)` may have loaded a
+//! device so full that every *continuation* needs extra hops, while a
+//! slightly costlier prefix would have finished cheaper overall.  We fix
+//! it by keeping a small **Pareto frontier** of (cost, per-device memory)
+//! candidates per state instead of one best path: a candidate survives if
+//! no other is both cheaper and no more memory-hungry on every device.
+//! With the frontier capped at [`PARETO_CAP`] the complexity stays
+//! O(N·M²·K).  [`algo1_greedy`] preserves the paper's literal single-path
+//! behaviour for comparison (always feasible, occasionally suboptimal —
+//! see `tests::greedy_variant_can_be_suboptimal`).
+
+use super::{Plan, PlanError, PlanObjective, Planner, Stage};
+use crate::cluster::Cluster;
+use crate::profiler::ProfiledTraces;
+
+/// Latency planner (Algorithm 1).  `restrict` optionally limits the device
+/// pool (e.g. `[source, cloud]` turns it into Cloud-Edge-Opt).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyDp {
+    pub restrict: Option<Vec<usize>>,
+    /// Batch used for memory accounting (KV slots per sequence).
+    pub batch: usize,
+}
+
+impl LatencyDp {
+    pub fn new() -> Self {
+        LatencyDp {
+            restrict: None,
+            batch: 1,
+        }
+    }
+
+    pub fn restricted(devices: Vec<usize>) -> Self {
+        LatencyDp {
+            restrict: Some(devices),
+            batch: 1,
+        }
+    }
+
+    fn device_pool(&self, cluster: &Cluster) -> Vec<usize> {
+        match &self.restrict {
+            Some(v) => v.clone(),
+            None => (0..cluster.len()).collect(),
+        }
+    }
+}
+
+impl Planner for LatencyDp {
+    fn name(&self) -> &'static str {
+        "EdgeShard-Latency(Algo1)"
+    }
+
+    fn plan(&self, traces: &ProfiledTraces, cluster: &Cluster) -> Result<Plan, PlanError> {
+        algo1(traces, cluster, &self.device_pool(cluster), self.batch.max(1))
+    }
+}
+
+/// Max Pareto candidates kept per DP state.
+pub const PARETO_CAP: usize = 8;
+
+#[derive(Clone)]
+struct State {
+    cost: f64,
+    /// predecessor device (choice table)
+    prev: usize,
+    /// index of the predecessor candidate within dp[i-1][prev]
+    prev_slot: usize,
+    /// memory consumed on each device along this candidate's path
+    mem_used: Vec<u64>,
+}
+
+fn dominates(a: &State, b: &State) -> bool {
+    a.cost <= b.cost && a.mem_used.iter().zip(&b.mem_used).all(|(x, y)| x <= y)
+}
+
+/// Insert a candidate into a Pareto frontier (capped, cost-sorted).
+fn pareto_insert(frontier: &mut Vec<State>, cand: State, cap: usize) {
+    if frontier.iter().any(|s| dominates(s, &cand)) {
+        return;
+    }
+    frontier.retain(|s| !dominates(&cand, s));
+    let pos = frontier
+        .iter()
+        .position(|s| s.cost > cand.cost)
+        .unwrap_or(frontier.len());
+    frontier.insert(pos, cand);
+    frontier.truncate(cap);
+}
+
+
+/// Algorithm 1 with the Pareto-frontier memory fix.  `pool` is the
+/// candidate device set (must contain the source); `batch` sizes the KV
+/// reservation.
+pub fn algo1(
+    traces: &ProfiledTraces,
+    cluster: &Cluster,
+    pool: &[usize],
+    batch: usize,
+) -> Result<Plan, PlanError> {
+    algo1_impl(traces, cluster, pool, batch, PARETO_CAP)
+}
+
+/// The paper's literal Algorithm 1 (single best path per state, greedy
+/// memory update) — kept for the ablation benches.
+pub fn algo1_greedy(
+    traces: &ProfiledTraces,
+    cluster: &Cluster,
+    pool: &[usize],
+    batch: usize,
+) -> Result<Plan, PlanError> {
+    algo1_impl(traces, cluster, pool, batch, 1)
+}
+
+fn algo1_impl(
+    traces: &ProfiledTraces,
+    cluster: &Cluster,
+    pool: &[usize],
+    batch: usize,
+    cap: usize,
+) -> Result<Plan, PlanError> {
+    let n = traces.n_layers;
+    let src = cluster.source;
+    if n == 0 {
+        return Err(PlanError::Infeasible("no layers".into()));
+    }
+    if !pool.contains(&src) {
+        return Err(PlanError::Infeasible("pool must contain source".into()));
+    }
+    let m = cluster.len();
+    let layer_mem = |i: usize| traces.range_mem_bytes(i, i + 1, batch);
+    let budget: Vec<u64> = (0..m).map(|d| cluster.devices[d].usable_mem_bytes).collect();
+
+    // dp[i][j]: Pareto frontier of (cost, memory) candidates with layer i
+    // on device j.
+    let mut dp: Vec<Vec<Vec<State>>> = vec![vec![Vec::new(); m]; n];
+
+    // init: privacy — layer 0 pinned to the source node (Eq. 7)
+    if layer_mem(0) > budget[src] {
+        return Err(PlanError::Oom);
+    }
+    let mut mem0 = vec![0u64; m];
+    mem0[src] = layer_mem(0);
+    dp[0][src].push(State {
+        cost: traces.avg_ms[0][src],
+        prev: usize::MAX,
+        prev_slot: usize::MAX,
+        mem_used: mem0,
+    });
+
+    for i in 1..n {
+        let need = layer_mem(i);
+        for &j in pool {
+            let mut frontier: Vec<State> = Vec::new();
+            for &k in pool {
+                let comm = cluster.comm_ms(k, j, traces.act_bytes_avg[i - 1]);
+                for (slot, prev) in dp[i - 1][k].iter().enumerate() {
+                    // memory feasibility along this path (Algo 1 line 13)
+                    if prev.mem_used[j] + need > budget[j] {
+                        continue;
+                    }
+                    let mut cost = prev.cost + traces.avg_ms[i][j] + comm;
+                    if i == n - 1 {
+                        // Eq. 6 second branch: loopback to the source
+                        cost += cluster.comm_ms(j, src, traces.act_bytes_avg[n - 1]);
+                    }
+                    let mut mem = prev.mem_used.clone();
+                    mem[j] += need;
+                    pareto_insert(
+                        &mut frontier,
+                        State {
+                            cost,
+                            prev: k,
+                            prev_slot: slot,
+                            mem_used: mem,
+                        },
+                        cap,
+                    );
+                }
+            }
+            dp[i][j] = frontier;
+        }
+    }
+
+    // Eq. 8: best final state
+    let (last_dev, last_slot, cost) = dp[n - 1]
+        .iter()
+        .enumerate()
+        .flat_map(|(j, f)| f.iter().enumerate().map(move |(s, st)| (j, s, st.cost)))
+        .min_by(|a, b| a.2.partial_cmp(&b.2).unwrap())
+        .ok_or(PlanError::Oom)?;
+
+    // backtrace the choice table into a per-layer device list
+    let mut assign = vec![0usize; n];
+    let (mut j, mut slot) = (last_dev, last_slot);
+    for i in (0..n).rev() {
+        assign[i] = j;
+        let st = &dp[i][j][slot];
+        let (pj, ps) = (st.prev, st.prev_slot);
+        j = pj;
+        slot = ps;
+    }
+
+    Ok(Plan {
+        objective: PlanObjective::Latency,
+        stages: stages_from_assignment(&assign),
+        predicted_ms: cost,
+    })
+}
+
+/// Collapse a per-layer device assignment into contiguous stages.
+pub fn stages_from_assignment(assign: &[usize]) -> Vec<Stage> {
+    let mut stages: Vec<Stage> = Vec::new();
+    for (i, &d) in assign.iter().enumerate() {
+        match stages.last_mut() {
+            Some(s) if s.device == d && s.end == i => s.end = i + 1,
+            _ => stages.push(Stage {
+                device: d,
+                start: i,
+                end: i + 1,
+            }),
+        }
+    }
+    stages
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::model::{llama2_13b, llama2_70b, llama2_7b};
+    use crate::planner::{sequential_latency_ms, validate_plan};
+    use crate::profiler::{AnalyticProfiler, Workload};
+
+    fn profile(model: &crate::model::ModelDesc, cluster: &Cluster) -> ProfiledTraces {
+        AnalyticProfiler::default().profile(model, cluster, Workload::paper_default())
+    }
+
+    #[test]
+    fn plan_is_valid_7b() {
+        let c = presets::paper_testbed(1.0, 0);
+        let t = profile(&llama2_7b(), &c);
+        let p = LatencyDp::new().plan(&t, &c).unwrap();
+        validate_plan(&p, &t, &c, 1).unwrap();
+    }
+
+    #[test]
+    fn predicted_matches_evaluator() {
+        // The DP's objective must equal the independent plan evaluator.
+        let c = presets::paper_testbed(1.0, 0);
+        let t = profile(&llama2_7b(), &c);
+        let p = LatencyDp::new().plan(&t, &c).unwrap();
+        let eval = sequential_latency_ms(&p, &t, &c);
+        assert!(
+            (p.predicted_ms - eval).abs() < 1e-6,
+            "dp={} eval={}",
+            p.predicted_ms,
+            eval
+        );
+    }
+
+    #[test]
+    fn edgeshard_beats_solo_7b() {
+        // Table IV: EdgeShard ≈2× faster than Edge-Solo for 7B.
+        let c = presets::paper_testbed(1.0, 0);
+        let t = profile(&llama2_7b(), &c);
+        let p = LatencyDp::new().plan(&t, &c).unwrap();
+        let solo = t.range_avg_ms(0, t.n_layers, 0);
+        assert!(
+            p.predicted_ms < solo * 0.8,
+            "edgeshard={} solo={solo}",
+            p.predicted_ms
+        );
+        assert!(p.n_stages() > 1, "expected sharding: {}", p.describe());
+    }
+
+    #[test]
+    fn slow_cloud_link_avoided_with_two_devices() {
+        // Cloud-Edge-Opt at 1 Mbps collapses to local execution (§V.B).
+        let c = presets::paper_testbed(1.0, 0);
+        let t = profile(&llama2_7b(), &c);
+        let p = LatencyDp::restricted(vec![0, 14]).plan(&t, &c).unwrap();
+        assert_eq!(p.n_stages(), 1, "{}", p.describe());
+        assert_eq!(p.stages[0].device, 0);
+    }
+
+    #[test]
+    fn fast_cloud_link_used_with_two_devices() {
+        // At 50 Mbps the optimal 2-device plan offloads to the 3090.
+        let c = presets::paper_testbed(50.0, 0);
+        let t = profile(&llama2_7b(), &c);
+        let p = LatencyDp::restricted(vec![0, 14]).plan(&t, &c).unwrap();
+        assert!(p.devices().contains(&14), "{}", p.describe());
+    }
+
+    #[test]
+    fn first_layer_always_on_source() {
+        for bw in [1.0, 10.0, 50.0] {
+            let c = presets::paper_testbed(bw, 0);
+            let t = profile(&llama2_7b(), &c);
+            let p = LatencyDp::new().plan(&t, &c).unwrap();
+            assert_eq!(p.stages[0].device, c.source);
+        }
+    }
+
+    #[test]
+    fn oom_when_model_exceeds_cluster() {
+        // 70B fp32 (280 GB) on just the source AGX — OOM.
+        let c = presets::paper_testbed(1.0, 0);
+        let t = profile(&llama2_70b(), &c);
+        let err = LatencyDp::restricted(vec![0]).plan(&t, &c).unwrap_err();
+        assert_eq!(err, PlanError::Oom);
+    }
+
+    #[test]
+    fn seventy_b_feasible_across_cluster() {
+        // Only EdgeShard can host 70B (Table IV).
+        let c = presets::paper_testbed(1.0, 0);
+        let t = profile(&llama2_70b(), &c);
+        let p = LatencyDp::new().plan(&t, &c).unwrap();
+        validate_plan(&p, &t, &c, 1).unwrap();
+        assert!(p.n_stages() >= 10, "70B needs many devices: {}", p.describe());
+    }
+
+    #[test]
+    fn thirteen_b_oom_on_solo_but_plannable() {
+        let c = presets::paper_testbed(1.0, 0);
+        let t = profile(&llama2_13b(), &c);
+        assert_eq!(
+            LatencyDp::restricted(vec![0]).plan(&t, &c).unwrap_err(),
+            PlanError::Oom
+        );
+        let p = LatencyDp::new().plan(&t, &c).unwrap();
+        validate_plan(&p, &t, &c, 1).unwrap();
+    }
+
+    #[test]
+    fn better_bandwidth_never_hurts() {
+        let mut last = f64::INFINITY;
+        for bw in [1.0, 5.0, 10.0, 25.0, 50.0] {
+            let c = presets::paper_testbed(bw, 0);
+            let t = profile(&llama2_7b(), &c);
+            let p = LatencyDp::new().plan(&t, &c).unwrap();
+            assert!(
+                p.predicted_ms <= last * 1.02,
+                "bw={bw}: {} > prev {last}",
+                p.predicted_ms
+            );
+            last = p.predicted_ms;
+        }
+    }
+
+    #[test]
+    fn stages_from_assignment_collapses_runs() {
+        let stages = stages_from_assignment(&[0, 0, 3, 3, 3, 1]);
+        assert_eq!(stages.len(), 3);
+        assert_eq!(stages[1], Stage { device: 3, start: 2, end: 5 });
+    }
+
+    #[test]
+    fn greedy_variant_can_be_suboptimal() {
+        // The paper's literal greedy memory update forces an extra hop at
+        // 10 Mbps on the 2-device topology; the Pareto fix does not.
+        let mut c = presets::cloud_edge_pair(10.0);
+        c.set_latency(0, 1, 2.0);
+        let t = profile(&llama2_7b(), &c);
+        let pool = vec![0, 1];
+        let greedy = algo1_greedy(&t, &c, &pool, 1).unwrap();
+        let pareto = algo1(&t, &c, &pool, 1).unwrap();
+        assert!(pareto.predicted_ms <= greedy.predicted_ms + 1e-9);
+        // both remain feasible
+        validate_plan(&pareto, &t, &c, 1).unwrap();
+        validate_plan(&greedy, &t, &c, 1).unwrap();
+    }
+
+    #[test]
+    fn pareto_insert_respects_dominance() {
+        let mk = |cost: f64, mem: u64| State {
+            cost,
+            prev: 0,
+            prev_slot: 0,
+            mem_used: vec![mem],
+        };
+        let mut f = Vec::new();
+        pareto_insert(&mut f, mk(10.0, 100), 8);
+        // dominated: worse cost AND worse memory
+        pareto_insert(&mut f, mk(11.0, 200), 8);
+        assert_eq!(f.len(), 1);
+        // incomparable: worse cost, better memory
+        pareto_insert(&mut f, mk(11.0, 50), 8);
+        assert_eq!(f.len(), 2);
+        // dominates everything
+        pareto_insert(&mut f, mk(1.0, 10), 8);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].cost, 1.0);
+    }
+
+    #[test]
+    fn pool_without_source_rejected() {
+        let c = presets::paper_testbed(1.0, 0);
+        let t = profile(&llama2_7b(), &c);
+        assert!(matches!(
+            LatencyDp::restricted(vec![3, 14]).plan(&t, &c),
+            Err(PlanError::Infeasible(_))
+        ));
+    }
+}

@@ -1,0 +1,378 @@
+//! Joint device selection + model partition (paper §IV).
+//!
+//! * [`latency::algo1`] — the paper's Algorithm 1: `DP(i,j)` over
+//!   (layer, device), O(N·M²), minimizing end-to-end per-token latency
+//!   with the privacy constraint (layer 0 on the source node) and memory
+//!   budgets (Eqs. 3–8).
+//! * [`throughput::algo2`] — the paper's Algorithm 2: `g(m, S, j)` over
+//!   (boundary, used-device-set, last device), minimizing the slowest
+//!   pipeline stage (Eqs. 9–13).  Exponential in device count as written
+//!   (O(N²·2^M·M²)), so [`throughput::algo2_classes`] adds **device-class
+//!   compression**: identical devices are interchangeable, collapsing the
+//!   subset state to per-class usage counts — exact for clusters made of
+//!   repeated hardware classes (the paper's 12+2+1 testbed) and fast
+//!   enough for 80-layer models.
+//! * [`baselines`] — Edge-Solo, Cloud-Edge-Even, Cloud-Edge-Opt, and
+//!   EdgeShard-Even (§V.A / §V.C).
+
+pub mod baselines;
+pub mod latency;
+pub mod throughput;
+
+pub use baselines::{CloudEdgeEven, CloudEdgeOpt, EdgeShardEven, EdgeSolo};
+pub use latency::LatencyDp;
+pub use throughput::ThroughputDp;
+
+use crate::cluster::Cluster;
+use crate::profiler::ProfiledTraces;
+
+/// What the planner optimizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanObjective {
+    /// Minimize sequential per-token latency (Algorithm 1).
+    Latency,
+    /// Minimize the slowest pipeline stage (Algorithm 2).
+    Throughput,
+}
+
+/// A contiguous run of layers assigned to one device.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Stage {
+    pub device: usize,
+    /// Layer indices `[start, end)`.
+    pub start: usize,
+    pub end: usize,
+}
+
+impl Stage {
+    pub fn layers(&self) -> std::ops::Range<usize> {
+        self.start..self.end
+    }
+
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.end <= self.start
+    }
+}
+
+/// A complete partition + allocation strategy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    pub objective: PlanObjective,
+    pub stages: Vec<Stage>,
+    /// Objective value predicted by the DP: ms/token (latency) or
+    /// bottleneck stage ms (throughput).
+    pub predicted_ms: f64,
+}
+
+impl Plan {
+    /// Device hosting layer `i`.
+    pub fn device_of_layer(&self, i: usize) -> Option<usize> {
+        self.stages
+            .iter()
+            .find(|s| s.layers().contains(&i))
+            .map(|s| s.device)
+    }
+
+    /// Distinct devices used, in stage order.
+    pub fn devices(&self) -> Vec<usize> {
+        self.stages.iter().map(|s| s.device).collect()
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Human-readable strategy string, e.g. `[0:0..5 → 3:5..20 → 14:20..34]`.
+    pub fn describe(&self) -> String {
+        let parts: Vec<String> = self
+            .stages
+            .iter()
+            .map(|s| format!("d{}:{}..{}", s.device, s.start, s.end))
+            .collect();
+        format!("[{}]", parts.join(" → "))
+    }
+}
+
+/// Why planning failed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlanError {
+    /// No allocation satisfies the memory budgets (Table IV "OOM").
+    Oom,
+    /// Structural problem (empty cluster, zero layers, bad restriction).
+    Infeasible(String),
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::Oom => write!(f, "out of memory: no feasible allocation"),
+            PlanError::Infeasible(s) => write!(f, "infeasible: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// Common planner interface (latency DP, throughput DP, and every baseline
+/// implement this).
+pub trait Planner {
+    fn plan(&self, traces: &ProfiledTraces, cluster: &Cluster) -> Result<Plan, PlanError>;
+    fn name(&self) -> &'static str;
+}
+
+/// Validate the structural invariants every legal plan must satisfy;
+/// returns a violation description.  Used by tests and by proptest.
+pub fn validate_plan(
+    plan: &Plan,
+    traces: &ProfiledTraces,
+    cluster: &Cluster,
+    batch: usize,
+) -> Result<(), String> {
+    if plan.stages.is_empty() {
+        return Err("empty plan".into());
+    }
+    // 1. full contiguous coverage
+    let mut next = 0;
+    for s in &plan.stages {
+        if s.start != next {
+            return Err(format!("gap/overlap at layer {next}: {}", plan.describe()));
+        }
+        if s.is_empty() {
+            return Err("empty stage".into());
+        }
+        next = s.end;
+    }
+    if next != traces.n_layers {
+        return Err(format!("covers {next}/{} layers", traces.n_layers));
+    }
+    // 2. privacy: first layer on the source node (Eq. 4)
+    if plan.stages[0].device != cluster.source {
+        return Err(format!(
+            "privacy violation: first stage on d{}, source is d{}",
+            plan.stages[0].device, cluster.source
+        ));
+    }
+    // 3. memory budgets (Eq. 5) — aggregate per device across stages
+    let mut used = vec![0u64; cluster.len()];
+    for s in &plan.stages {
+        used[s.device] += traces.range_mem_bytes(s.start, s.end, batch);
+    }
+    for (d, u) in used.iter().enumerate() {
+        if *u > cluster.devices[d].usable_mem_bytes {
+            return Err(format!(
+                "device {d} over budget: {} > {}",
+                u, cluster.devices[d].usable_mem_bytes
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Evaluate the *sequential-inference* per-token latency of a plan
+/// (Eq. 2 + the loopback term): Σ stage compute + Σ boundary comms + the
+/// generated-token transmission back to the source.
+pub fn sequential_latency_ms(plan: &Plan, traces: &ProfiledTraces, cluster: &Cluster) -> f64 {
+    let mut total = 0.0;
+    let mut prev: Option<usize> = None;
+    for s in &plan.stages {
+        if let Some(k) = prev {
+            total += cluster.comm_ms(k, s.device, traces.act_bytes_avg[s.start - 1]);
+        }
+        total += traces.range_avg_ms(s.start, s.end, s.device);
+        prev = Some(s.device);
+    }
+    let last = plan.stages.last().unwrap();
+    total += cluster.comm_ms(
+        last.device,
+        cluster.source,
+        traces.act_bytes_avg[traces.n_layers - 1],
+    );
+    total
+}
+
+/// Evaluate the pipeline bottleneck (Eq. 9/10): the slowest of every
+/// stage's `max(compute, incoming-comm)`.
+pub fn pipeline_bottleneck_ms(plan: &Plan, traces: &ProfiledTraces, cluster: &Cluster) -> f64 {
+    let mut worst: f64 = 0.0;
+    let mut prev: Option<usize> = None;
+    for s in &plan.stages {
+        let comp = traces.range_avg_ms(s.start, s.end, s.device);
+        let comm = match prev {
+            Some(k) => cluster.comm_ms(k, s.device, traces.act_bytes_avg[s.start - 1]),
+            None => 0.0,
+        };
+        worst = worst.max(comp.max(comm));
+        prev = Some(s.device);
+    }
+    // loopback of the generated token to the source also occupies a slot
+    let last = plan.stages.last().unwrap();
+    worst.max(cluster.comm_ms(
+        last.device,
+        cluster.source,
+        traces.act_bytes_avg[traces.n_layers - 1],
+    ))
+}
+
+/// Largest batch size every stage of `plan` can hold in memory.
+pub fn max_feasible_batch(plan: &Plan, traces: &ProfiledTraces, cluster: &Cluster) -> usize {
+    let mut best = usize::MAX;
+    for s in &plan.stages {
+        let mem = cluster.devices[s.device].usable_mem_bytes;
+        let b = traces.max_batch_for(s.start, s.end, mem);
+        best = best.min(b);
+    }
+    if best == usize::MAX {
+        1
+    } else {
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::model::llama2_7b;
+    use crate::profiler::{AnalyticProfiler, Workload};
+
+    fn setup() -> (ProfiledTraces, Cluster) {
+        let cluster = presets::paper_testbed(1.0, 0);
+        let traces = AnalyticProfiler::default().profile(
+            &llama2_7b(),
+            &cluster,
+            Workload::paper_default(),
+        );
+        (traces, cluster)
+    }
+
+    fn solo_plan(n: usize) -> Plan {
+        Plan {
+            objective: PlanObjective::Latency,
+            stages: vec![Stage {
+                device: 0,
+                start: 0,
+                end: n,
+            }],
+            predicted_ms: 0.0,
+        }
+    }
+
+    #[test]
+    fn validate_accepts_solo() {
+        let (t, c) = setup();
+        assert!(validate_plan(&solo_plan(t.n_layers), &t, &c, 1).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_gap() {
+        let (t, c) = setup();
+        let p = Plan {
+            objective: PlanObjective::Latency,
+            stages: vec![
+                Stage { device: 0, start: 0, end: 5 },
+                Stage { device: 1, start: 6, end: t.n_layers },
+            ],
+            predicted_ms: 0.0,
+        };
+        assert!(validate_plan(&p, &t, &c, 1).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_privacy_violation() {
+        let (t, c) = setup();
+        let p = Plan {
+            objective: PlanObjective::Latency,
+            stages: vec![Stage { device: 3, start: 0, end: t.n_layers }],
+            predicted_ms: 0.0,
+        };
+        let err = validate_plan(&p, &t, &c, 1).unwrap_err();
+        assert!(err.contains("privacy"));
+    }
+
+    #[test]
+    fn validate_rejects_oom_on_small_device() {
+        let (t, c) = setup();
+        // all of 7B on the Orin NX (14GB usable) — must fail
+        let p = Plan {
+            objective: PlanObjective::Latency,
+            stages: vec![
+                Stage { device: 0, start: 0, end: 1 },
+                Stage { device: 12, start: 1, end: t.n_layers },
+            ],
+            predicted_ms: 0.0,
+        };
+        let err = validate_plan(&p, &t, &c, 1).unwrap_err();
+        assert!(err.contains("over budget"), "{err}");
+    }
+
+    #[test]
+    fn sequential_latency_includes_loopback() {
+        let (t, mut c) = setup();
+        let p = Plan {
+            objective: PlanObjective::Latency,
+            stages: vec![
+                Stage { device: 0, start: 0, end: 10 },
+                Stage { device: 1, start: 10, end: t.n_layers },
+            ],
+            predicted_ms: 0.0,
+        };
+        let base = sequential_latency_ms(&p, &t, &c);
+        // slow the return path: device1 -> source
+        c.set_latency(1, 0, 50.0);
+        let slow = sequential_latency_ms(&p, &t, &c);
+        assert!(slow > base + 40.0, "base={base} slow={slow}");
+    }
+
+    #[test]
+    fn bottleneck_is_max_not_sum() {
+        let (t, c) = setup();
+        let p = Plan {
+            objective: PlanObjective::Throughput,
+            stages: vec![
+                Stage { device: 0, start: 0, end: 17 },
+                Stage { device: 1, start: 17, end: t.n_layers },
+            ],
+            predicted_ms: 0.0,
+        };
+        let b = pipeline_bottleneck_ms(&p, &t, &c);
+        let s = sequential_latency_ms(&p, &t, &c);
+        assert!(b < s);
+        assert!(b >= t.range_avg_ms(0, 17, 0).min(t.range_avg_ms(17, t.n_layers, 1)));
+    }
+
+    #[test]
+    fn max_batch_decreases_with_more_layers_per_device() {
+        let (t, c) = setup();
+        let solo = solo_plan(t.n_layers);
+        let split = Plan {
+            objective: PlanObjective::Throughput,
+            stages: vec![
+                Stage { device: 0, start: 0, end: 17 },
+                Stage { device: 1, start: 17, end: t.n_layers },
+            ],
+            predicted_ms: 0.0,
+        };
+        assert!(max_feasible_batch(&split, &t, &c) >= max_feasible_batch(&solo, &t, &c));
+    }
+
+    #[test]
+    fn plan_describe_and_device_of_layer() {
+        let p = Plan {
+            objective: PlanObjective::Latency,
+            stages: vec![
+                Stage { device: 0, start: 0, end: 5 },
+                Stage { device: 14, start: 5, end: 34 },
+            ],
+            predicted_ms: 1.0,
+        };
+        assert_eq!(p.device_of_layer(0), Some(0));
+        assert_eq!(p.device_of_layer(5), Some(14));
+        assert_eq!(p.device_of_layer(33), Some(14));
+        assert_eq!(p.device_of_layer(34), None);
+        assert!(p.describe().contains("d14:5..34"));
+    }
+}

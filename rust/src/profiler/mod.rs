@@ -1,0 +1,165 @@
+//! Offline profiling stage (paper §III "Profiling").
+//!
+//! Produces [`ProfiledTraces`]: per-layer execution time on every device
+//! (prefill and autoregressive decode, averaged per the paper), activation
+//! wire sizes, per-layer memory requirements and per-sequence KV-cache
+//! reservations.  The planners and the pipeline simulator consume ONLY this
+//! schema, so traces can come from either source:
+//!
+//! * [`analytic::AnalyticProfiler`] — roofline model per device class
+//!   (prefill is compute-bound against peak TFLOPS, decode is
+//!   memory-bandwidth-bound against weight bytes; see DESIGN.md).  Used for
+//!   the Llama2-7B/13B/70B paper reproductions.
+//! * [`crate::runtime::MeasuredProfiler`] — wall-clock timings of the real
+//!   AOT shards through PJRT, scaled per device class.  Used for the
+//!   executable tiny model.
+
+pub mod analytic;
+
+pub use analytic::AnalyticProfiler;
+
+
+/// The request shape the system is being planned for (the paper uses
+/// 32 prompt tokens and 96 generated tokens from WikiText-2).
+#[derive(Debug, Clone, Copy)]
+pub struct Workload {
+    pub prompt_len: usize,
+    pub gen_len: usize,
+    /// Micro-batch size flowing through the pipeline (1 for sequential
+    /// latency-oriented serving).
+    pub batch: usize,
+}
+
+impl Workload {
+    pub fn paper_default() -> Self {
+        Workload {
+            prompt_len: 32,
+            gen_len: 96,
+            batch: 1,
+        }
+    }
+
+    pub fn with_batch(self, batch: usize) -> Self {
+        Workload { batch, ..self }
+    }
+
+    /// Total token iterations a request performs (1 prefill + gen-1 decodes
+    /// produce gen tokens).
+    pub fn iterations(&self) -> usize {
+        self.gen_len.max(1)
+    }
+}
+
+/// Output of the profiling stage; everything downstream is derived from it.
+#[derive(Debug, Clone)]
+pub struct ProfiledTraces {
+    pub model_name: String,
+    pub n_layers: usize,
+    pub n_devices: usize,
+    pub workload: Workload,
+    /// `prefill_ms[i][j]`: time for layer `i` on device `j` to process the
+    /// whole prompt (batch included).
+    pub prefill_ms: Vec<Vec<f64>>,
+    /// `decode_ms[i][j]`: per-token-iteration time (batch included).
+    pub decode_ms: Vec<Vec<f64>>,
+    /// Paper's averaged per-token cost t_comp^{i,j} used by the DPs:
+    /// workload-weighted mean of prefill and decode.
+    pub avg_ms: Vec<Vec<f64>>,
+    /// Activation bytes leaving layer `i` during decode (one token,
+    /// batch included).
+    pub act_bytes_decode: Vec<u64>,
+    /// Activation bytes leaving layer `i` during prefill.
+    pub act_bytes_prefill: Vec<u64>,
+    /// Workload-averaged wire bytes per token iteration (O_i in the paper).
+    pub act_bytes_avg: Vec<u64>,
+    /// Weight bytes of each layer (Req_i, static part).
+    pub weight_bytes: Vec<u64>,
+    /// KV-cache reservation per sequence slot for each layer.
+    pub kv_bytes_per_seq: Vec<u64>,
+}
+
+impl ProfiledTraces {
+    /// Σ avg_ms over a contiguous layer range on one device
+    /// (t_comp^{i→m,j} in the paper).
+    pub fn range_avg_ms(&self, lo: usize, hi: usize, dev: usize) -> f64 {
+        (lo..hi).map(|i| self.avg_ms[i][dev]).sum()
+    }
+
+    pub fn range_decode_ms(&self, lo: usize, hi: usize, dev: usize) -> f64 {
+        (lo..hi).map(|i| self.decode_ms[i][dev]).sum()
+    }
+
+    pub fn range_prefill_ms(&self, lo: usize, hi: usize, dev: usize) -> f64 {
+        (lo..hi).map(|i| self.prefill_ms[i][dev]).sum()
+    }
+
+    /// Memory to host layers `[lo, hi)` with `batch` sequence slots.
+    pub fn range_mem_bytes(&self, lo: usize, hi: usize, batch: usize) -> u64 {
+        let w: u64 = (lo..hi).map(|i| self.weight_bytes[i]).sum();
+        let kv: u64 = (lo..hi).map(|i| self.kv_bytes_per_seq[i]).sum();
+        w + kv * batch as u64
+    }
+
+    /// Largest batch size such that layers `[lo, hi)` fit in `mem` bytes
+    /// (0 if even the weights don't fit).
+    pub fn max_batch_for(&self, lo: usize, hi: usize, mem: u64) -> usize {
+        let w: u64 = (lo..hi).map(|i| self.weight_bytes[i]).sum();
+        if w > mem {
+            return 0;
+        }
+        let kv: u64 = (lo..hi).map(|i| self.kv_bytes_per_seq[i]).sum();
+        if kv == 0 {
+            return usize::MAX;
+        }
+        ((mem - w) / kv) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::model::llama2_7b;
+
+    fn traces() -> ProfiledTraces {
+        AnalyticProfiler::default().profile(
+            &llama2_7b(),
+            &presets::paper_testbed(1.0, 0),
+            Workload::paper_default(),
+        )
+    }
+
+    #[test]
+    fn ranges_sum() {
+        let t = traces();
+        let a = t.range_avg_ms(0, 10, 0) + t.range_avg_ms(10, t.n_layers, 0);
+        let b = t.range_avg_ms(0, t.n_layers, 0);
+        assert!((a - b).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memory_monotone_in_batch() {
+        let t = traces();
+        assert!(t.range_mem_bytes(0, 10, 8) > t.range_mem_bytes(0, 10, 1));
+    }
+
+    #[test]
+    fn max_batch_inverse_of_mem() {
+        let t = traces();
+        let mem = t.range_mem_bytes(1, 11, 4);
+        let b = t.max_batch_for(1, 11, mem);
+        assert_eq!(b, 4);
+        assert!(t.max_batch_for(1, 11, mem - 1) < 4 || t.kv_bytes_per_seq[1] == 0);
+    }
+
+    #[test]
+    fn max_batch_zero_when_weights_oversize() {
+        let t = traces();
+        assert_eq!(t.max_batch_for(0, t.n_layers, 1024), 0);
+    }
+
+    #[test]
+    fn workload_iterations() {
+        assert_eq!(Workload::paper_default().iterations(), 96);
+    }
+}

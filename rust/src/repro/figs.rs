@@ -1,0 +1,259 @@
+//! Figures 7–10 of the paper's evaluation, regenerated as data series.
+
+use super::methods::{evaluate_latency, evaluate_throughput, Method};
+use crate::cluster::{presets, Cluster};
+use crate::model::{llama2_13b, llama2_70b, llama2_7b, ModelDesc};
+use crate::pipeline::Strategy;
+use crate::util::markdown_table;
+
+/// The bandwidth sweep of Figs. 7/8 (cloud↔source, Mbps).
+pub const BW_SWEEP: [f64; 5] = [1.0, 5.0, 10.0, 25.0, 50.0];
+
+fn fmt_lat(v: Option<f64>) -> String {
+    v.map(|x| format!("{x:.2}")).unwrap_or_else(|| "OOM".into())
+}
+
+fn fmt_tput(v: Option<f64>) -> String {
+    v.map(|x| format!("{x:.2}")).unwrap_or_else(|| "OOM".into())
+}
+
+/// Methods compared per model in Figs. 7/8 (§V.C: 13B drops Edge-Solo,
+/// 70B compares EdgeShard vs EdgeShard-Even on 11 AGX + 1 RTX 3090).
+fn fig78_methods(model: &ModelDesc) -> Vec<Method> {
+    if model.name.contains("70B") {
+        let mut devs: Vec<usize> = (0..12).collect();
+        devs.push(14);
+        vec![Method::EdgeShard, Method::EdgeShardEven(devs)]
+    } else if model.name.contains("13B") {
+        vec![
+            Method::CloudEdgeEven,
+            Method::CloudEdgeOpt,
+            Method::EdgeShard,
+        ]
+    } else {
+        vec![
+            Method::EdgeSolo,
+            Method::CloudEdgeEven,
+            Method::CloudEdgeOpt,
+            Method::EdgeShard,
+        ]
+    }
+}
+
+fn sweep_table(
+    model: &ModelDesc,
+    seed: u64,
+    eval: impl Fn(&Method, &ModelDesc, &Cluster) -> Option<f64>,
+) -> String {
+    let methods = fig78_methods(model);
+    let mut header = vec!["Method".to_string()];
+    header.extend(BW_SWEEP.iter().map(|b| format!("{b}Mbps")));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let rows: Vec<Vec<String>> = methods
+        .iter()
+        .map(|m| {
+            let mut row = vec![m.name().to_string()];
+            for &bw in &BW_SWEEP {
+                let cluster = presets::paper_testbed(bw, seed);
+                row.push(fmt_lat(eval(m, model, &cluster)));
+            }
+            row
+        })
+        .collect();
+    format!("## {}\n\n{}\n", model.name, markdown_table(&header_refs, &rows))
+}
+
+/// Fig. 7 — impact of cloud↔source bandwidth on latency.
+pub fn fig7(seed: u64) -> anyhow::Result<()> {
+    let mut out =
+        String::from("# Fig. 7 — latency (ms/token) vs cloud-source bandwidth\n\n");
+    for model in [llama2_7b(), llama2_13b(), llama2_70b()] {
+        out.push_str(&sweep_table(&model, seed, |m, model, c| {
+            evaluate_latency(m, model, c).map(|(ms, _)| ms)
+        }));
+    }
+    super::emit("fig7", &out)
+}
+
+/// Fig. 8 — impact of cloud↔source bandwidth on throughput.
+pub fn fig8(seed: u64) -> anyhow::Result<()> {
+    let mut out =
+        String::from("# Fig. 8 — throughput (tokens/s) vs cloud-source bandwidth\n\n");
+    for model in [llama2_7b(), llama2_13b(), llama2_70b()] {
+        out.push_str(&sweep_table(&model, seed, |m, model, c| {
+            evaluate_throughput(m, model, c, Strategy::NoBubble).map(|t| t.tokens_per_s)
+        }));
+    }
+    super::emit("fig8", &out)
+}
+
+/// Fig. 9 — impact of the source node (AGX Orin vs Orin NX), Llama2-7B,
+/// 1 Mbps cloud link.
+pub fn fig9(seed: u64) -> anyhow::Result<()> {
+    let model = llama2_7b();
+    let methods = [
+        Method::EdgeSolo,
+        Method::CloudEdgeEven,
+        Method::CloudEdgeOpt,
+        Method::EdgeShard,
+    ];
+    let sources: [(&str, Cluster); 2] = [
+        ("AGX Orin", presets::paper_testbed(1.0, seed)),
+        ("Orin NX", presets::paper_testbed_nx_source(1.0, seed)),
+    ];
+    let mut rows_lat = Vec::new();
+    let mut rows_tput = Vec::new();
+    for m in &methods {
+        let mut rl = vec![m.name().to_string()];
+        let mut rt = vec![m.name().to_string()];
+        for (_, cluster) in &sources {
+            rl.push(fmt_lat(
+                evaluate_latency(m, &model, cluster).map(|(ms, _)| ms),
+            ));
+            rt.push(fmt_tput(
+                evaluate_throughput(m, &model, cluster, Strategy::NoBubble)
+                    .map(|t| t.tokens_per_s),
+            ));
+        }
+        rows_lat.push(rl);
+        rows_tput.push(rt);
+    }
+    let mut out = String::from("# Fig. 9 — impact of source node (Llama2-7B, 1 Mbps)\n\n");
+    out.push_str("## latency (ms/token)\n\n");
+    out.push_str(&markdown_table(&["Method", "AGX Orin", "Orin NX"], &rows_lat));
+    out.push_str("\n## throughput (tokens/s)\n\n");
+    out.push_str(&markdown_table(&["Method", "AGX Orin", "Orin NX"], &rows_tput));
+    super::emit("fig9", &out)
+}
+
+/// Fig. 10 — pipeline execution strategy (bubble vs no-bubble),
+/// Llama2-7B and 13B, 1 Mbps cloud link.
+pub fn fig10(seed: u64) -> anyhow::Result<()> {
+    let methods = [
+        Method::CloudEdgeEven,
+        Method::CloudEdgeOpt,
+        Method::EdgeShard,
+    ];
+    let mut out =
+        String::from("# Fig. 10 — pipeline execution strategy, throughput (tokens/s)\n\n");
+    for model in [llama2_7b(), llama2_13b()] {
+        let cluster = presets::paper_testbed(1.0, seed);
+        let rows: Vec<Vec<String>> = methods
+            .iter()
+            .map(|m| {
+                let bubble = evaluate_throughput(m, &model, &cluster, Strategy::Bubble)
+                    .map(|t| t.tokens_per_s);
+                let nobubble = evaluate_throughput(m, &model, &cluster, Strategy::NoBubble)
+                    .map(|t| t.tokens_per_s);
+                vec![m.name().to_string(), fmt_tput(bubble), fmt_tput(nobubble)]
+            })
+            .collect();
+        out.push_str(&format!(
+            "## {}\n\n{}\n",
+            model.name,
+            markdown_table(&["Method", "Bubbles", "No-bubbles"], &rows)
+        ));
+    }
+    super::emit("fig10", &out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_decreases_with_bandwidth_for_collaboration() {
+        // Fig. 7's headline: collaborative methods improve with bandwidth,
+        // Edge-Solo is flat.
+        let model = llama2_7b();
+        let mut last = f64::INFINITY;
+        for &bw in &BW_SWEEP {
+            let c = presets::paper_testbed(bw, 0);
+            let (opt, _) = evaluate_latency(&Method::CloudEdgeOpt, &model, &c).unwrap();
+            assert!(opt <= last * 1.02, "bw={bw}: {opt} > {last}");
+            last = opt;
+        }
+        let solo_1 = evaluate_latency(
+            &Method::EdgeSolo,
+            &model,
+            &presets::paper_testbed(1.0, 0),
+        )
+        .unwrap()
+        .0;
+        let solo_50 = evaluate_latency(
+            &Method::EdgeSolo,
+            &model,
+            &presets::paper_testbed(50.0, 0),
+        )
+        .unwrap()
+        .0;
+        assert!((solo_1 - solo_50).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cloud_edge_opt_converges_to_edgeshard_at_high_bw() {
+        // §V.C: "the latency of Cloud-Edge-Opt and EdgeShard is nearly the
+        // same when the bandwidth is greater than 10Mbps".
+        let model = llama2_7b();
+        let c = presets::paper_testbed(50.0, 0);
+        let (opt, _) = evaluate_latency(&Method::CloudEdgeOpt, &model, &c).unwrap();
+        let (shard, _) = evaluate_latency(&Method::EdgeShard, &model, &c).unwrap();
+        assert!(shard <= opt + 1e-9);
+        assert!(
+            (opt - shard) / opt < 0.25,
+            "opt={opt} shard={shard} — should be close at 50 Mbps"
+        );
+    }
+
+    #[test]
+    fn edgeshard_beats_even_for_70b() {
+        // §V.C: EdgeShard > EdgeShard-Even for 70B (mild, since 11 of 12
+        // devices are identical).
+        let model = llama2_70b();
+        let c = presets::paper_testbed(10.0, 0);
+        let mut devs: Vec<usize> = (0..12).collect();
+        devs.push(14);
+        let (shard, _) = evaluate_latency(&Method::EdgeShard, &model, &c).unwrap();
+        let (even, _) =
+            evaluate_latency(&Method::EdgeShardEven(devs), &model, &c).unwrap();
+        assert!(shard <= even * 1.001, "shard={shard} even={even}");
+    }
+
+    #[test]
+    fn nx_source_widens_gap_for_cloud_edge_opt() {
+        // Fig. 9: the AGX→NX swap hurts Cloud-Edge-Opt far more than
+        // EdgeShard (EdgeShard moves layers off the weak source).
+        let model = llama2_7b();
+        let agx = presets::paper_testbed(1.0, 0);
+        let nx = presets::paper_testbed_nx_source(1.0, 0);
+        let shard_gap = {
+            let a = evaluate_latency(&Method::EdgeShard, &model, &agx).unwrap().0;
+            let b = evaluate_latency(&Method::EdgeShard, &model, &nx).unwrap().0;
+            b - a
+        };
+        let opt_gap = {
+            let a = evaluate_latency(&Method::CloudEdgeOpt, &model, &agx)
+                .unwrap()
+                .0;
+            let b = evaluate_latency(&Method::CloudEdgeOpt, &model, &nx)
+                .unwrap()
+                .0;
+            b - a
+        };
+        assert!(
+            opt_gap > shard_gap * 2.0,
+            "opt_gap={opt_gap} shard_gap={shard_gap}"
+        );
+    }
+
+    #[test]
+    fn solo_oom_when_source_is_nx() {
+        // Fig. 9: "when the source node is Orin NX, the Edge-Solo and
+        // Cloud-Edge-Even methods encounter the OOM error".
+        let model = llama2_7b();
+        let nx = presets::paper_testbed_nx_source(1.0, 0);
+        assert!(evaluate_latency(&Method::EdgeSolo, &model, &nx).is_none());
+        assert!(evaluate_latency(&Method::CloudEdgeEven, &model, &nx).is_none());
+        assert!(evaluate_latency(&Method::EdgeShard, &model, &nx).is_some());
+    }
+}

@@ -1,0 +1,275 @@
+//! The four deployment methods of the paper's evaluation, with a uniform
+//! latency/throughput evaluation pipeline:
+//!
+//! 1. profile the model on the cluster (analytic roofline),
+//! 2. plan with the method's planner,
+//! 3. evaluate the plan on the TRUE (jittered) links — sequential latency
+//!    for the latency metric, the bubble/no-bubble pipeline simulator for
+//!    the throughput metric,
+//! 4. for throughput, search the largest resident batch the participating
+//!    devices can support (the paper: "we set the batch size as the
+//!    maximum batch size that the participating devices can support").
+
+use crate::cluster::Cluster;
+use crate::model::ModelDesc;
+use crate::pipeline::{simulate, PipelineSpec, Strategy};
+use crate::planner::baselines::{CloudEdgeEven, EdgeShardEven, EdgeSolo};
+use crate::planner::latency::algo1;
+use crate::planner::throughput::{algo2_classes, algo2_exact};
+use crate::planner::{Plan, PlanError, Planner};
+use crate::profiler::{AnalyticProfiler, ProfiledTraces, Workload};
+
+/// Candidate per-micro-batch sizes, searched descending (the paper's
+/// devices support at most batch 8 — §V.B).
+pub const BATCH_CANDIDATES: [usize; 4] = [8, 4, 2, 1];
+/// Micro-batches in flight for pipelined serving (the paper's figures use
+/// 4; single-stage plans degenerate to 1).
+pub const N_MICRO: usize = 4;
+
+/// A deployment method from §V.A.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Method {
+    EdgeSolo,
+    CloudEdgeEven,
+    CloudEdgeOpt,
+    EdgeShard,
+    /// Even partition over an explicit device list (§V.C, 70B).
+    EdgeShardEven(Vec<usize>),
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::EdgeSolo => "Edge-Solo",
+            Method::CloudEdgeEven => "Cloud-Edge-Even",
+            Method::CloudEdgeOpt => "Cloud-Edge-Opt",
+            Method::EdgeShard => "EdgeShard",
+            Method::EdgeShardEven(_) => "EdgeShard-Even",
+        }
+    }
+
+    /// All-method list for the main table.
+    pub fn table4() -> Vec<Method> {
+        vec![
+            Method::EdgeSolo,
+            Method::CloudEdgeEven,
+            Method::CloudEdgeOpt,
+            Method::EdgeShard,
+        ]
+    }
+
+    fn pool(&self, cluster: &Cluster) -> Result<Vec<usize>, PlanError> {
+        match self {
+            Method::CloudEdgeOpt => {
+                let cloud = *cluster
+                    .cloud_ids()
+                    .first()
+                    .ok_or_else(|| PlanError::Infeasible("no cloud".into()))?;
+                Ok(vec![cluster.source, cloud])
+            }
+            _ => Ok((0..cluster.len()).collect()),
+        }
+    }
+
+    /// Latency-objective plan (sequential inference).
+    pub fn latency_plan(
+        &self,
+        traces: &ProfiledTraces,
+        cluster: &Cluster,
+    ) -> Result<Plan, PlanError> {
+        match self {
+            Method::EdgeSolo => EdgeSolo::new().plan(traces, cluster),
+            Method::CloudEdgeEven => CloudEdgeEven::new().plan(traces, cluster),
+            Method::CloudEdgeOpt => algo1(traces, cluster, &self.pool(cluster)?, 1),
+            Method::EdgeShard => algo1(traces, cluster, &self.pool(cluster)?, 1),
+            Method::EdgeShardEven(devs) => {
+                EdgeShardEven::new(devs.clone()).plan(traces, cluster)
+            }
+        }
+    }
+
+    /// Throughput-objective plan with `resident` KV sequence slots per
+    /// device for the memory constraint.
+    pub fn throughput_plan(
+        &self,
+        traces: &ProfiledTraces,
+        cluster: &Cluster,
+        resident: usize,
+    ) -> Result<Plan, PlanError> {
+        match self {
+            Method::EdgeSolo => {
+                let mut p = EdgeSolo::new();
+                p.batch = resident;
+                p.plan(traces, cluster)
+            }
+            Method::CloudEdgeEven => {
+                let mut p = CloudEdgeEven::new();
+                p.batch = resident;
+                p.plan(traces, cluster)
+            }
+            Method::CloudEdgeOpt => {
+                algo2_exact(traces, cluster, &self.pool(cluster)?, resident)
+            }
+            Method::EdgeShard => {
+                algo2_classes(traces, cluster, &self.pool(cluster)?, resident)
+            }
+            Method::EdgeShardEven(devs) => {
+                let mut p = EdgeShardEven::new(devs.clone());
+                p.batch = resident;
+                p.plan(traces, cluster)
+            }
+        }
+    }
+}
+
+/// Latency (ms/token) of a method, or `None` on OOM.
+pub fn evaluate_latency(
+    method: &Method,
+    model: &ModelDesc,
+    cluster: &Cluster,
+) -> Option<(f64, Plan)> {
+    let traces =
+        AnalyticProfiler::default().profile(model, cluster, Workload::paper_default());
+    let plan = method.latency_plan(&traces, cluster).ok()?;
+    let ms = crate::planner::sequential_latency_ms(&plan, &traces, cluster);
+    Some((ms, plan))
+}
+
+/// Result of the throughput evaluation.
+#[derive(Debug, Clone)]
+pub struct ThroughputEval {
+    pub tokens_per_s: f64,
+    pub batch_per_micro: usize,
+    pub n_micro: usize,
+    pub plan: Plan,
+}
+
+/// Throughput of a method under `strategy`, searching the largest
+/// feasible batch; `None` on OOM at every batch size.
+pub fn evaluate_throughput(
+    method: &Method,
+    model: &ModelDesc,
+    cluster: &Cluster,
+    strategy: Strategy,
+) -> Option<ThroughputEval> {
+    let profiler = AnalyticProfiler::default();
+    for &b in &BATCH_CANDIDATES {
+        let workload = Workload::paper_default().with_batch(b);
+        let traces = profiler.profile(model, cluster, workload);
+        // planning-time memory must cover every micro-batch resident
+        let probe = method.throughput_plan(&traces, cluster, b);
+        let Ok(plan) = probe else { continue };
+        let n_micro = if plan.n_stages() > 1 { N_MICRO } else { 1 };
+        let resident = b * n_micro;
+        let plan = match method.throughput_plan(&traces, cluster, resident) {
+            Ok(p) => p,
+            Err(_) => continue,
+        };
+        if crate::planner::validate_plan(&plan, &traces, cluster, resident).is_err() {
+            continue;
+        }
+        let spec = PipelineSpec::from_plan(&plan, &traces, cluster, n_micro);
+        let sched = simulate(&spec, strategy);
+        return Some(ThroughputEval {
+            tokens_per_s: sched.throughput_tps,
+            batch_per_micro: b,
+            n_micro,
+            plan,
+        });
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::model::{llama2_13b, llama2_70b, llama2_7b};
+
+    #[test]
+    fn table4_shape_7b() {
+        // Qualitative Table IV for 7B at 1 Mbps cloud link:
+        //   latency: EdgeShard < Edge-Solo ≈ Cloud-Edge-Opt < Cloud-Edge-Even
+        //   throughput: EdgeShard > Edge-Solo ≈ Cloud-Edge-Opt > Cloud-Edge-Even
+        let c = presets::paper_testbed(1.0, 0);
+        let m = llama2_7b();
+        let lat = |meth: Method| evaluate_latency(&meth, &m, &c).unwrap().0;
+        let solo = lat(Method::EdgeSolo);
+        let even = lat(Method::CloudEdgeEven);
+        let opt = lat(Method::CloudEdgeOpt);
+        let shard = lat(Method::EdgeShard);
+        assert!(shard < solo * 0.75, "shard={shard} solo={solo}");
+        assert!((opt - solo).abs() < solo * 0.05, "opt={opt} solo={solo}");
+        assert!(even > solo, "even={even} solo={solo}");
+
+        let tp = |meth: Method| {
+            evaluate_throughput(&meth, &m, &c, Strategy::NoBubble)
+                .unwrap()
+                .tokens_per_s
+        };
+        let t_solo = tp(Method::EdgeSolo);
+        let t_even = tp(Method::CloudEdgeEven);
+        let t_shard = tp(Method::EdgeShard);
+        assert!(t_shard > t_solo * 1.5, "t_shard={t_shard} t_solo={t_solo}");
+        assert!(t_even < t_solo, "t_even={t_even} t_solo={t_solo}");
+    }
+
+    #[test]
+    fn table4_oom_pattern() {
+        let c = presets::paper_testbed(1.0, 0);
+        // 13B: solo OOM, collaboration feasible
+        let m13 = llama2_13b();
+        assert!(evaluate_latency(&Method::EdgeSolo, &m13, &c).is_none());
+        assert!(evaluate_latency(&Method::CloudEdgeEven, &m13, &c).is_some());
+        assert!(evaluate_latency(&Method::EdgeShard, &m13, &c).is_some());
+        // 70B: only EdgeShard feasible
+        let m70 = llama2_70b();
+        assert!(evaluate_latency(&Method::EdgeSolo, &m70, &c).is_none());
+        assert!(evaluate_latency(&Method::CloudEdgeEven, &m70, &c).is_none());
+        assert!(evaluate_latency(&Method::CloudEdgeOpt, &m70, &c).is_none());
+        let (ms, plan) = evaluate_latency(&Method::EdgeShard, &m70, &c).unwrap();
+        assert!(ms > 0.0);
+        assert!(plan.n_stages() >= 10);
+    }
+
+    #[test]
+    fn throughput_uses_batching() {
+        let c = presets::paper_testbed(1.0, 0);
+        let ev = evaluate_throughput(
+            &Method::EdgeShard,
+            &llama2_7b(),
+            &c,
+            Strategy::NoBubble,
+        )
+        .unwrap();
+        assert!(ev.batch_per_micro >= 2, "batch={}", ev.batch_per_micro);
+        assert!(ev.tokens_per_s > 10.0);
+    }
+
+    #[test]
+    fn no_bubble_beats_bubble_for_pipelined_method() {
+        let c = presets::paper_testbed(1.0, 0);
+        let m = llama2_13b();
+        let nb = evaluate_throughput(&Method::EdgeShard, &m, &c, Strategy::NoBubble).unwrap();
+        let bb = evaluate_throughput(&Method::EdgeShard, &m, &c, Strategy::Bubble).unwrap();
+        assert!(
+            nb.tokens_per_s > bb.tokens_per_s,
+            "nb={} bb={}",
+            nb.tokens_per_s,
+            bb.tokens_per_s
+        );
+    }
+
+    #[test]
+    fn cloud_edge_opt_equals_solo_at_1mbps_throughput() {
+        // §V.E: Cloud-Edge-Opt selects local execution at 1 Mbps, so
+        // bubble == no-bubble for it.
+        let c = presets::paper_testbed(1.0, 0);
+        let m = llama2_7b();
+        let nb =
+            evaluate_throughput(&Method::CloudEdgeOpt, &m, &c, Strategy::NoBubble).unwrap();
+        let bb = evaluate_throughput(&Method::CloudEdgeOpt, &m, &c, Strategy::Bubble).unwrap();
+        assert_eq!(nb.plan.n_stages(), 1);
+        assert!((nb.tokens_per_s - bb.tokens_per_s).abs() < 1e-6);
+    }
+}

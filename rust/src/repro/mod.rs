@@ -1,0 +1,47 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (§V).  See DESIGN.md's per-experiment index.
+//!
+//! | id | paper artifact | function |
+//! |----|----------------|----------|
+//! | table1 | Table I — LLM memory vs precision | [`table1::run`] |
+//! | table4 | Table IV — latency + throughput, 3 models × 4 methods | [`table4::run`] |
+//! | fig7 | latency vs cloud-source bandwidth | [`figs::fig7`] |
+//! | fig8 | throughput vs cloud-source bandwidth | [`figs::fig8`] |
+//! | fig9 | source-node effect (AGX Orin vs Orin NX) | [`figs::fig9`] |
+//! | fig10 | bubble vs no-bubble pipeline strategies | [`figs::fig10`] |
+//!
+//! Numbers come from the analytic profiler + the planners + the pipeline
+//! simulator (the paper's physical testbed is simulated per DESIGN.md);
+//! the *shape* of every comparison — who wins, by what factor, where the
+//! crossovers sit — is the reproduction target, not absolute ms.
+
+pub mod figs;
+pub mod methods;
+pub mod table1;
+pub mod table4;
+
+pub use methods::{evaluate_latency, evaluate_throughput, Method, ThroughputEval};
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write an experiment's rendered output under `results/` and echo it.
+pub fn emit(name: &str, content: &str) -> anyhow::Result<()> {
+    println!("{content}");
+    let dir = Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    let mut f = std::fs::File::create(dir.join(format!("{name}.md")))?;
+    f.write_all(content.as_bytes())?;
+    Ok(())
+}
+
+/// Run every experiment (the `edgeshard repro all` entrypoint).
+pub fn run_all(seed: u64) -> anyhow::Result<()> {
+    table1::run()?;
+    table4::run(seed)?;
+    figs::fig7(seed)?;
+    figs::fig8(seed)?;
+    figs::fig9(seed)?;
+    figs::fig10(seed)?;
+    Ok(())
+}

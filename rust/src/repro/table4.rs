@@ -1,0 +1,81 @@
+//! Table IV — overall evaluation: average latency (ms/token) and
+//! throughput (tokens/s) for Llama2-7B/13B/70B under the four methods.
+//!
+//! Setup (§V.B): source = AGX Orin, cloud↔source shaped to 1 Mbps, other
+//! links 50 Mbps ± 20%, workload 32 prompt tokens / 96 generated, batch =
+//! the largest the participating devices support.
+
+use super::methods::{evaluate_latency, evaluate_throughput, Method};
+use crate::cluster::presets;
+use crate::metrics::Cell;
+use crate::model::{llama2_13b, llama2_70b, llama2_7b, ModelDesc};
+use crate::pipeline::Strategy;
+use crate::util::markdown_table;
+
+/// One (method, model) evaluation.
+pub fn cell(method: &Method, model: &ModelDesc, seed: u64) -> Cell {
+    let cluster = presets::paper_testbed(1.0, seed);
+    let lat = evaluate_latency(method, model, &cluster);
+    let thr = evaluate_throughput(method, model, &cluster, Strategy::NoBubble);
+    match (lat, thr) {
+        (Some((latency_ms, _)), Some(t)) => Cell::Ok {
+            latency_ms,
+            throughput: t.tokens_per_s,
+        },
+        _ => Cell::Oom,
+    }
+}
+
+pub fn render(seed: u64) -> String {
+    let models = [llama2_7b(), llama2_13b(), llama2_70b()];
+    let methods = Method::table4();
+    let mut rows = Vec::new();
+    for method in &methods {
+        let mut row = vec![method.name().to_string()];
+        for model in &models {
+            let c = cell(method, model, seed);
+            row.push(c.latency_str());
+            row.push(c.throughput_str());
+        }
+        rows.push(row);
+    }
+    let mut out = String::from(
+        "# Table IV — LLM inference performance (latency ms/token; throughput tokens/s)\n\n\
+         source=AGX Orin, cloud↔source 1 Mbps, edge links 50 Mbps ±20%, 32 in / 96 out\n\n",
+    );
+    out.push_str(&markdown_table(
+        &[
+            "Method",
+            "7B lat", "7B tput",
+            "13B lat", "13B tput",
+            "70B lat", "70B tput",
+        ],
+        &rows,
+    ));
+    out
+}
+
+pub fn run(seed: u64) -> anyhow::Result<()> {
+    super::emit("table4", &render(seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_renders_with_paper_oom_pattern() {
+        let t = render(0);
+        // row shapes
+        assert!(t.contains("Edge-Solo"));
+        assert!(t.contains("EdgeShard"));
+        let solo_row: &str = t.lines().find(|l| l.contains("Edge-Solo")).unwrap();
+        // 13B + 70B OOM for solo
+        assert!(solo_row.matches("OOM").count() >= 4, "{solo_row}");
+        let shard_row: &str = t
+            .lines()
+            .find(|l| l.trim_start_matches('|').trim().starts_with("EdgeShard"))
+            .unwrap();
+        assert!(!shard_row.contains("OOM"), "{shard_row}");
+    }
+}

@@ -1,0 +1,280 @@
+//! `artifacts/manifest.json` — the python→rust interchange contract
+//! written by `python/compile/aot.py`.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::util::Json;
+
+/// Architecture of the AOT-compiled model.
+#[derive(Debug, Clone)]
+pub struct ManifestConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub prefill_len: usize,
+    pub layer_param_order: Vec<String>,
+}
+
+impl ManifestConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}
+
+/// Dtype + shape of one HLO parameter or result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(TensorSig {
+            dtype: j.req("dtype")?.as_str().context("dtype")?.to_string(),
+            shape: j
+                .req("shape")?
+                .as_arr()
+                .context("shape")?
+                .iter()
+                .map(|x| x.as_usize().context("shape elem"))
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// One AOT-lowered shard variant.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// One tensor in `weights.bin`.
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub offset_bytes: usize,
+    pub shape: Vec<usize>,
+}
+
+impl WeightEntry {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config: ManifestConfig,
+    pub batch_sizes: Vec<usize>,
+    pub weights_file: String,
+    pub weights_total_bytes: usize,
+    pub weights: Vec<WeightEntry>,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let c = j.req("config")?;
+        let config = ManifestConfig {
+            name: c.req("name")?.as_str().context("name")?.to_string(),
+            vocab_size: c.req("vocab_size")?.as_usize().context("vocab_size")?,
+            d_model: c.req("d_model")?.as_usize().context("d_model")?,
+            n_layers: c.req("n_layers")?.as_usize().context("n_layers")?,
+            n_heads: c.req("n_heads")?.as_usize().context("n_heads")?,
+            n_kv_heads: c.req("n_kv_heads")?.as_usize().context("n_kv_heads")?,
+            d_ff: c.req("d_ff")?.as_usize().context("d_ff")?,
+            max_seq: c.req("max_seq")?.as_usize().context("max_seq")?,
+            prefill_len: c.req("prefill_len")?.as_usize().context("prefill_len")?,
+            layer_param_order: c
+                .req("layer_param_order")?
+                .as_arr()
+                .context("layer_param_order")?
+                .iter()
+                .map(|x| x.as_str().unwrap_or("").to_string())
+                .collect(),
+        };
+
+        let batch_sizes = j
+            .req("batch_sizes")?
+            .as_arr()
+            .context("batch_sizes")?
+            .iter()
+            .map(|x| x.as_usize().context("batch size"))
+            .collect::<Result<_>>()?;
+
+        let weights = j
+            .req("weights")?
+            .as_arr()
+            .context("weights")?
+            .iter()
+            .map(|w| {
+                Ok(WeightEntry {
+                    name: w.req("name")?.as_str().context("w.name")?.to_string(),
+                    offset_bytes: w.req("offset_bytes")?.as_usize().context("offset")?,
+                    shape: w
+                        .req("shape")?
+                        .as_arr()
+                        .context("w.shape")?
+                        .iter()
+                        .map(|x| x.as_usize().context("dim"))
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let artifacts = j
+            .req("artifacts")?
+            .as_arr()
+            .context("artifacts")?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactEntry {
+                    name: a.req("name")?.as_str().context("a.name")?.to_string(),
+                    file: a.req("file")?.as_str().context("a.file")?.to_string(),
+                    inputs: a
+                        .req("inputs")?
+                        .as_arr()
+                        .context("inputs")?
+                        .iter()
+                        .map(TensorSig::from_json)
+                        .collect::<Result<_>>()?,
+                    outputs: a
+                        .req("outputs")?
+                        .as_arr()
+                        .context("outputs")?
+                        .iter()
+                        .map(TensorSig::from_json)
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest {
+            config,
+            batch_sizes,
+            weights_file: j
+                .req("weights_file")?
+                .as_str()
+                .context("weights_file")?
+                .to_string(),
+            weights_total_bytes: j
+                .req("weights_total_bytes")?
+                .as_usize()
+                .context("weights_total_bytes")?,
+            weights,
+            artifacts,
+            dir,
+        })
+    }
+
+    /// Default artifact directory: `$EDGESHARD_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("EDGESHARD_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("artifact `{name}` not in manifest"))
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.dir.join(&self.weights_file)
+    }
+
+    pub fn weight(&self, name: &str) -> Result<&WeightEntry> {
+        self.weights
+            .iter()
+            .find(|w| w.name == name)
+            .with_context(|| format!("weight `{name}` not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> Option<PathBuf> {
+        let d = Manifest::default_dir();
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_built_artifacts() {
+        let Some(dir) = art_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(dir).unwrap();
+        assert_eq!(m.config.d_model, 128);
+        assert_eq!(m.config.layer_param_order.len(), 9);
+        assert!(m.artifact("layer_decode_b1").is_ok());
+        assert!(m.artifact("nope").is_err());
+        assert!(m.artifact_path("layer_decode_b1").unwrap().exists());
+        assert!(m.weights_path().exists());
+        assert_eq!(m.batch_sizes, vec![1, 8]);
+    }
+
+    #[test]
+    fn weight_lookup() {
+        let Some(dir) = art_dir() else {
+            return;
+        };
+        let m = Manifest::load(dir).unwrap();
+        let w = m.weight("layers.0.wq").unwrap();
+        assert_eq!(w.shape, vec![m.config.d_model, m.config.d_model]);
+        assert!(m.weight("layers.99.wq").is_err());
+    }
+
+    #[test]
+    fn artifact_signatures_parsed() {
+        let Some(dir) = art_dir() else {
+            return;
+        };
+        let m = Manifest::load(dir).unwrap();
+        let a = m.artifact("layer_decode_b1").unwrap();
+        assert_eq!(a.inputs.len(), 13);
+        assert_eq!(a.outputs.len(), 3);
+        assert_eq!(a.inputs[12].dtype, "int32");
+        assert_eq!(a.inputs[12].shape, Vec::<usize>::new());
+    }
+
+    #[test]
+    fn tensor_sig_elems() {
+        let t = TensorSig {
+            dtype: "float32".into(),
+            shape: vec![2, 3, 4],
+        };
+        assert_eq!(t.elems(), 24);
+    }
+}

@@ -1,0 +1,230 @@
+//! Measured profiler: the paper's offline profiling stage, run against the
+//! REAL AOT shard executables through PJRT.
+//!
+//! The testbed simulates M heterogeneous devices on one physical CPU, so
+//! the measured per-shard wall time is taken as the cost on a reference
+//! device class and scaled by each class's relative decode/prefill speed
+//! (memory-bandwidth ratio for decode, TFLOPS ratio for prefill — the same
+//! roofline reasoning as [`crate::profiler::AnalyticProfiler`], now
+//! anchored to real measurements instead of first principles).
+
+use anyhow::Result;
+
+use super::manifest::Manifest;
+use super::shard::{ExecServiceHandle, TensorData};
+use super::weights::WeightStore;
+use crate::cluster::Cluster;
+use crate::model::ModelDesc;
+use crate::profiler::{ProfiledTraces, Workload};
+
+/// Profiles the tiny model's real shards.
+pub struct MeasuredProfiler<'a> {
+    pub manifest: &'a Manifest,
+    pub weights: &'a WeightStore,
+    pub exec: ExecServiceHandle,
+    /// Timing repetitions (median taken).
+    pub reps: usize,
+}
+
+impl<'a> MeasuredProfiler<'a> {
+    pub fn new(
+        manifest: &'a Manifest,
+        weights: &'a WeightStore,
+        exec: ExecServiceHandle,
+    ) -> Self {
+        MeasuredProfiler {
+            manifest,
+            weights,
+            exec,
+            reps: 3,
+        }
+    }
+
+    fn weight_inputs(&self, names: &[(&str, Vec<i64>)]) -> Result<Vec<TensorData>> {
+        names
+            .iter()
+            .map(|(n, dims)| {
+                let (data, _) = self.weights.get(n)?;
+                Ok(TensorData::f32(data.to_vec(), dims.clone()))
+            })
+            .collect()
+    }
+
+    fn median(&self, variant: &str, inputs: &[TensorData]) -> Result<f64> {
+        let mut times = Vec::with_capacity(self.reps);
+        for _ in 0..self.reps.max(1) {
+            let (_, ms) = self.exec.exec_timed(variant, inputs.to_vec())?;
+            times.push(ms);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Ok(times[times.len() / 2])
+    }
+
+    /// Measure (embed, layer, head) cost for one phase/batch variant.
+    ///
+    /// Returns per-shard ms on this CPU.
+    pub fn measure_phase(&self, phase: &str, batch: usize) -> Result<(f64, f64, f64)> {
+        let c = &self.manifest.config;
+        let (d, kv, ms_, hd, v) = (
+            c.d_model,
+            c.n_kv_heads,
+            c.max_seq,
+            c.head_dim(),
+            c.vocab_size,
+        );
+        let s = if phase == "prefill" { c.prefill_len } else { 1 };
+        let b = batch as i64;
+
+        // embed
+        let mut inputs = self.weight_inputs(&[("tok_emb", vec![v as i64, d as i64])])?;
+        inputs.push(TensorData::i32(
+            vec![1; batch * s],
+            vec![b, s as i64],
+        ));
+        let t_embed = self.median(&format!("embed_{phase}_b{batch}"), &inputs)?;
+
+        // decoder layer
+        let mut inputs: Vec<TensorData> = self
+            .weights
+            .layer_params(self.manifest, 0)?
+            .into_iter()
+            .map(|(data, shape)| {
+                TensorData::f32(data.to_vec(), shape.iter().map(|&x| x as i64).collect())
+            })
+            .collect();
+        inputs.push(TensorData::f32(
+            vec![0.01; batch * s * d],
+            vec![b, s as i64, d as i64],
+        ));
+        if phase == "decode" {
+            let cache_dims = vec![b, kv as i64, ms_ as i64, hd as i64];
+            let cache_len = batch * kv * ms_ * hd;
+            inputs.push(TensorData::f32(vec![0.0; cache_len], cache_dims.clone()));
+            inputs.push(TensorData::f32(vec![0.0; cache_len], cache_dims));
+            inputs.push(TensorData::scalar_i32(c.prefill_len as i32));
+        }
+        let t_layer = self.median(&format!("layer_{phase}_b{batch}"), &inputs)?;
+
+        // head
+        let mut inputs = self.weight_inputs(&[
+            ("final_norm", vec![d as i64]),
+            ("lm_head", vec![d as i64, v as i64]),
+        ])?;
+        inputs.push(TensorData::f32(
+            vec![0.01; batch * s * d],
+            vec![b, s as i64, d as i64],
+        ));
+        let t_head = self.median(&format!("head_{phase}_b{batch}"), &inputs)?;
+
+        Ok((t_embed, t_layer, t_head))
+    }
+
+    /// Build [`ProfiledTraces`] for the tiny model on `cluster`, scaling
+    /// the measured reference times by per-class speed ratios.
+    pub fn profile(&self, cluster: &Cluster, workload: Workload) -> Result<ProfiledTraces> {
+        let batch = workload
+            .batch
+            .min(*self.manifest.batch_sizes.iter().max().unwrap_or(&1));
+        let batch = if self.manifest.batch_sizes.contains(&batch) {
+            batch
+        } else {
+            1
+        };
+        let (pe, pl, ph) = self.measure_phase("prefill", batch)?;
+        let (de, dl, dh) = self.measure_phase("decode", batch)?;
+
+        let model: ModelDesc = crate::model::tiny_from_manifest(self.manifest);
+        let n = model.n_layers();
+        let m = cluster.len();
+        // reference class = the fastest (the physical CPU measurement)
+        let ref_bw = cluster
+            .devices
+            .iter()
+            .map(|d| d.class.mem_bw_gbps)
+            .fold(0.0f64, f64::max);
+        let ref_tf = cluster
+            .devices
+            .iter()
+            .map(|d| d.class.tflops)
+            .fold(0.0f64, f64::max);
+
+        let iters = workload.iterations() as f64;
+        let mut prefill = vec![vec![0.0; m]; n];
+        let mut decode = vec![vec![0.0; m]; n];
+        let mut avg = vec![vec![0.0; m]; n];
+        for i in 0..n {
+            let (p0, d0) = if i == 0 {
+                (pe, de)
+            } else if i == n - 1 {
+                (ph, dh)
+            } else {
+                (pl, dl)
+            };
+            for j in 0..m {
+                let dev = &cluster.devices[j].class;
+                // decode is bandwidth-bound, prefill compute-bound
+                let p = p0 * (ref_tf / dev.tflops);
+                let dcd = d0 * (ref_bw / dev.mem_bw_gbps);
+                prefill[i][j] = p;
+                decode[i][j] = dcd;
+                avg[i][j] = (p + (iters - 1.0) * dcd) / iters;
+            }
+        }
+        let act_decode: Vec<u64> = (0..n)
+            .map(|i| model.activation_bytes(i, 1) * batch as u64)
+            .collect();
+        let act_prefill: Vec<u64> = (0..n)
+            .map(|i| model.activation_bytes(i, workload.prompt_len) * batch as u64)
+            .collect();
+        let act_avg: Vec<u64> = (0..n)
+            .map(|i| {
+                ((act_prefill[i] as f64 + (iters - 1.0) * act_decode[i] as f64) / iters) as u64
+            })
+            .collect();
+        Ok(ProfiledTraces {
+            model_name: model.name.clone(),
+            n_layers: n,
+            n_devices: m,
+            workload,
+            prefill_ms: prefill,
+            decode_ms: decode,
+            avg_ms: avg,
+            act_bytes_decode: act_decode,
+            act_bytes_prefill: act_prefill,
+            act_bytes_avg: act_avg,
+            weight_bytes: (0..n).map(|i| model.layer_weight_bytes(i)).collect(),
+            kv_bytes_per_seq: (0..n)
+                .map(|i| model.range_kv_bytes_per_seq(i, i + 1))
+                .collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::runtime::shard::ExecService;
+
+    #[test]
+    fn measured_traces_shape_and_scaling() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        let w = WeightStore::load(&m).unwrap();
+        let (_svc, h) = ExecService::start(&m).unwrap();
+        let mut p = MeasuredProfiler::new(&m, &w, h);
+        p.reps = 1;
+        let cluster = presets::tiny_demo(0);
+        let t = p.profile(&cluster, Workload::paper_default()).unwrap();
+        assert_eq!(t.n_layers, m.config.n_layers + 2);
+        assert_eq!(t.n_devices, 3);
+        // the 3090 (device 2) must be faster than the Orin NX (device 1)
+        assert!(t.decode_ms[1][2] < t.decode_ms[1][1]);
+        // all times positive
+        assert!(t.decode_ms.iter().flatten().all(|&x| x > 0.0));
+    }
+}

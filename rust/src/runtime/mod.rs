@@ -1,0 +1,23 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them on the request path — python is never involved.
+//!
+//! * [`manifest`] — the python→rust interchange contract.
+//! * [`weights`] — loads `weights.bin` and slices per-layer tensors.
+//! * [`shard`] — compiles `*.hlo.txt` on the PJRT CPU client
+//!   (`HloModuleProto::from_text_file` → `client.compile`) and runs them.
+//!   [`shard::ExecService`] owns the client on a dedicated thread so the
+//!   multi-threaded device actors in [`crate::coordinator`] can share it
+//!   (the `xla` crate's handles are deliberately `!Send`).
+//! * [`measured`] — profiles the real shard executables to produce
+//!   [`crate::profiler::ProfiledTraces`] for the tiny model, scaled per
+//!   device class.
+
+pub mod manifest;
+pub mod measured;
+pub mod shard;
+pub mod weights;
+
+pub use manifest::Manifest;
+pub use measured::MeasuredProfiler;
+pub use shard::{ExecService, ExecServiceHandle, TensorData};
+pub use weights::WeightStore;

@@ -1,0 +1,426 @@
+//! Shard execution: compile `artifacts/*.hlo.txt` on the PJRT CPU client
+//! and serve execution requests from the device actors.
+//!
+//! The `xla` crate's handles wrap raw pointers behind `Rc`, so they are
+//! `!Send`: [`ExecService`] therefore owns the client + every compiled
+//! executable on ONE dedicated thread and exposes a cloneable, `Send`
+//! [`ExecServiceHandle`] speaking plain-data [`TensorData`] over channels.
+//! (On this testbed all simulated devices share one physical CPU, so a
+//! single execution queue is also the honest performance model.)
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::mpsc::{self, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::manifest::Manifest;
+
+/// Plain-data tensor crossing thread / simulated-network boundaries.
+///
+/// Payloads are `Arc`-shared: stage actors clone per-layer weight tensors
+/// into every execution request, and KV caches are re-submitted each
+/// decode step — `clone()` must stay O(1) for the hot path.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32 { data: Arc<Vec<f32>>, dims: Vec<i64> },
+    I32 { data: Arc<Vec<i32>>, dims: Vec<i64> },
+}
+
+impl TensorData {
+    pub fn f32(data: Vec<f32>, dims: Vec<i64>) -> Self {
+        debug_assert_eq!(data.len() as i64, dims.iter().product::<i64>());
+        TensorData::F32 {
+            data: Arc::new(data),
+            dims,
+        }
+    }
+
+    pub fn i32(data: Vec<i32>, dims: Vec<i64>) -> Self {
+        debug_assert_eq!(data.len() as i64, dims.iter().product::<i64>());
+        TensorData::I32 {
+            data: Arc::new(data),
+            dims,
+        }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        TensorData::I32 {
+            data: Arc::new(vec![v]),
+            dims: vec![],
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        match self {
+            TensorData::F32 { dims, .. } | TensorData::I32 { dims, .. } => dims,
+        }
+    }
+
+    /// Wire size in bytes (for the shaped links).
+    pub fn bytes(&self) -> u64 {
+        match self {
+            TensorData::F32 { data, .. } => data.len() as u64 * 4,
+            TensorData::I32 { data, .. } => data.len() as u64 * 4,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            TensorData::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            TensorData::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            TensorData::F32 { data, dims } => {
+                if dims.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    xla::Literal::vec1(data).reshape(dims)?
+                }
+            }
+            TensorData::I32 { data, dims } => {
+                if dims.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    xla::Literal::vec1(data).reshape(dims)?
+                }
+            }
+        })
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<i64> = shape.dims().to_vec();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(TensorData::F32 {
+                data: Arc::new(lit.to_vec::<f32>()?),
+                dims,
+            }),
+            xla::ElementType::S32 => Ok(TensorData::I32 {
+                data: Arc::new(lit.to_vec::<i32>()?),
+                dims,
+            }),
+            other => bail!("unsupported element type {other:?}"),
+        }
+    }
+}
+
+/// Handle to a set of tensors registered (converted to literals once)
+/// inside the exec service — the weight tensors of one shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegId(u64);
+
+enum Req {
+    /// Convert `tensors` to literals once; subsequent `Exec` calls can
+    /// reference them as an input prefix.  This is the hot-path
+    /// optimization that keeps per-token weight copies out of the decode
+    /// loop (EXPERIMENTS.md §Perf).
+    Register {
+        tensors: Vec<TensorData>,
+        reply: Sender<Result<RegId>>,
+    },
+    Exec {
+        variant: String,
+        /// Registered literals prepended to `inputs`.
+        prefix: Option<RegId>,
+        inputs: Vec<TensorData>,
+        reply: Sender<Result<(Vec<TensorData>, f64)>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle to the execution thread.
+#[derive(Clone)]
+pub struct ExecServiceHandle {
+    tx: Sender<Req>,
+}
+
+impl ExecServiceHandle {
+    /// Register tensors (typically a shard's weights) once; returns a
+    /// handle usable as an input prefix in [`Self::exec_prefixed`].
+    pub fn register(&self, tensors: Vec<TensorData>) -> Result<RegId> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Req::Register { tensors, reply })
+            .map_err(|_| anyhow!("exec service stopped"))?;
+        rx.recv().map_err(|_| anyhow!("exec service dropped reply"))?
+    }
+
+    /// Execute artifact `variant` with `inputs`; returns the decomposed
+    /// tuple outputs plus the pure-execution wall time in ms.
+    pub fn exec_timed(
+        &self,
+        variant: &str,
+        inputs: Vec<TensorData>,
+    ) -> Result<(Vec<TensorData>, f64)> {
+        self.exec_prefixed(None, variant, inputs)
+    }
+
+    /// Like [`Self::exec_timed`], with registered literals prepended.
+    pub fn exec_prefixed(
+        &self,
+        prefix: Option<RegId>,
+        variant: &str,
+        inputs: Vec<TensorData>,
+    ) -> Result<(Vec<TensorData>, f64)> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Req::Exec {
+                variant: variant.to_string(),
+                prefix,
+                inputs,
+                reply,
+            })
+            .map_err(|_| anyhow!("exec service stopped"))?;
+        rx.recv().map_err(|_| anyhow!("exec service dropped reply"))?
+    }
+
+    pub fn exec(&self, variant: &str, inputs: Vec<TensorData>) -> Result<Vec<TensorData>> {
+        Ok(self.exec_timed(variant, inputs)?.0)
+    }
+}
+
+/// Owns the PJRT client thread; dropping shuts it down.
+pub struct ExecService {
+    tx: Sender<Req>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ExecService {
+    /// Compile every artifact in the manifest on a fresh CPU client.
+    pub fn start(manifest: &Manifest) -> Result<(Self, ExecServiceHandle)> {
+        let (tx, rx) = mpsc::channel::<Req>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let dir = manifest.dir.clone();
+        let names: Vec<(String, String)> = manifest
+            .artifacts
+            .iter()
+            .map(|a| (a.name.clone(), a.file.clone()))
+            .collect();
+        let join = std::thread::Builder::new()
+            .name("pjrt-exec".into())
+            .spawn(move || {
+                let setup = (|| -> Result<HashMap<String, xla::PjRtLoadedExecutable>> {
+                    let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
+                    let mut exes = HashMap::new();
+                    for (name, file) in &names {
+                        let path = dir.join(file);
+                        let proto = xla::HloModuleProto::from_text_file(&path)
+                            .with_context(|| format!("parsing {path:?}"))?;
+                        let comp = xla::XlaComputation::from_proto(&proto);
+                        let exe = client
+                            .compile(&comp)
+                            .with_context(|| format!("compiling {name}"))?;
+                        exes.insert(name.clone(), exe);
+                    }
+                    Ok(exes)
+                })();
+                let exes = match setup {
+                    Ok(exes) => {
+                        let _ = ready_tx.send(Ok(()));
+                        exes
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let mut registered: Vec<Vec<xla::Literal>> = Vec::new();
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::Shutdown => break,
+                        Req::Register { tensors, reply } => {
+                            let lits: Result<Vec<xla::Literal>> =
+                                tensors.iter().map(|t| t.to_literal()).collect();
+                            let _ = reply.send(lits.map(|l| {
+                                registered.push(l);
+                                RegId(registered.len() as u64 - 1)
+                            }));
+                        }
+                        Req::Exec {
+                            variant,
+                            prefix,
+                            inputs,
+                            reply,
+                        } => {
+                            let pre = prefix.map(|RegId(i)| registered.get(i as usize));
+                            let out = match pre {
+                                Some(None) => Err(anyhow!("bad RegId")),
+                                Some(Some(p)) => run_one(&exes, &variant, Some(p), inputs),
+                                None => run_one(&exes, &variant, None, inputs),
+                            };
+                            let _ = reply.send(out);
+                        }
+                    }
+                }
+            })
+            .context("spawning pjrt-exec thread")?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("exec thread died during setup"))??;
+        Ok((
+            ExecService {
+                tx: tx.clone(),
+                join: Some(join),
+            },
+            ExecServiceHandle { tx },
+        ))
+    }
+}
+
+impl Drop for ExecService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Req::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn run_one(
+    exes: &HashMap<String, xla::PjRtLoadedExecutable>,
+    variant: &str,
+    prefix: Option<&Vec<xla::Literal>>,
+    inputs: Vec<TensorData>,
+) -> Result<(Vec<TensorData>, f64)> {
+    let exe = exes
+        .get(variant)
+        .ok_or_else(|| anyhow!("unknown artifact `{variant}`"))?;
+    let dyn_lits: Vec<xla::Literal> = inputs
+        .iter()
+        .map(|t| t.to_literal())
+        .collect::<Result<_>>()?;
+    let all: Vec<&xla::Literal> = prefix
+        .map(|p| p.iter())
+        .into_iter()
+        .flatten()
+        .chain(dyn_lits.iter())
+        .collect();
+    let start = Instant::now();
+    let result = exe.execute::<&xla::Literal>(&all)?;
+    let tuple = result[0][0].to_literal_sync()?;
+    let ms = start.elapsed().as_secs_f64() * 1e3;
+    // aot.py lowers with return_tuple=True: single tuple output.
+    let parts = tuple.to_tuple()?;
+    let outputs = parts
+        .iter()
+        .map(TensorData::from_literal)
+        .collect::<Result<_>>()?;
+    Ok((outputs, ms))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn service() -> Option<(ExecService, ExecServiceHandle, Manifest)> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let m = Manifest::load(dir).unwrap();
+        let (svc, h) = ExecService::start(&m).unwrap();
+        Some((svc, h, m))
+    }
+
+    #[test]
+    fn embed_lookup_matches_weights() {
+        let Some((_svc, h, m)) = service() else { return };
+        let w = super::super::WeightStore::load(&m).unwrap();
+        let (emb, _) = w.get("tok_emb").unwrap();
+        let d = m.config.d_model;
+        let tok = 7i32;
+        let out = h
+            .exec(
+                "embed_decode_b1",
+                vec![
+                    TensorData::f32(emb.to_vec(), vec![m.config.vocab_size as i64, d as i64]),
+                    TensorData::i32(vec![tok], vec![1, 1]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let h_out = out[0].as_f32().unwrap();
+        assert_eq!(h_out.len(), d);
+        let expect = &emb[tok as usize * d..(tok as usize + 1) * d];
+        for (a, b) in h_out.iter().zip(expect) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn layer_decode_shapes_and_cache_write() {
+        let Some((_svc, h, m)) = service() else { return };
+        let w = super::super::WeightStore::load(&m).unwrap();
+        let c = &m.config;
+        let (d, kv, ms_, hd) = (c.d_model, c.n_kv_heads, c.max_seq, c.head_dim());
+        let mut inputs: Vec<TensorData> = w
+            .layer_params(&m, 0)
+            .unwrap()
+            .into_iter()
+            .map(|(data, shape)| {
+                TensorData::f32(data.to_vec(), shape.iter().map(|&x| x as i64).collect())
+            })
+            .collect();
+        inputs.push(TensorData::f32(vec![0.1; d], vec![1, 1, d as i64]));
+        let cache_dims = vec![1, kv as i64, ms_ as i64, hd as i64];
+        let cache_len = kv * ms_ * hd;
+        inputs.push(TensorData::f32(vec![0.0; cache_len], cache_dims.clone()));
+        inputs.push(TensorData::f32(vec![0.0; cache_len], cache_dims.clone()));
+        inputs.push(TensorData::scalar_i32(3));
+        let out = h.exec("layer_decode_b1", inputs).unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].dims(), &[1, 1, d as i64]);
+        assert_eq!(out[1].dims(), cache_dims.as_slice());
+        // position 3 of the k-cache must now be non-zero, position 4 zero
+        let kc = out[1].as_f32().unwrap();
+        let at = |pos: usize| -> f32 {
+            (0..kv)
+                .map(|h_| {
+                    kc[h_ * ms_ * hd + pos * hd..h_ * ms_ * hd + pos * hd + hd]
+                        .iter()
+                        .map(|x| x.abs())
+                        .sum::<f32>()
+                })
+                .sum()
+        };
+        assert!(at(3) > 0.0);
+        assert_eq!(at(4), 0.0);
+        assert_eq!(at(2), 0.0);
+    }
+
+    #[test]
+    fn unknown_variant_errors() {
+        let Some((_svc, h, _m)) = service() else { return };
+        assert!(h.exec("nope", vec![]).is_err());
+    }
+
+    #[test]
+    fn tensor_data_roundtrip() {
+        let t = TensorData::f32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        let lit = t.to_literal().unwrap();
+        let back = TensorData::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+        let s = TensorData::scalar_i32(42);
+        let lit = s.to_literal().unwrap();
+        assert_eq!(TensorData::from_literal(&lit).unwrap(), s);
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        assert_eq!(TensorData::f32(vec![0.0; 8], vec![8]).bytes(), 32);
+        assert_eq!(TensorData::scalar_i32(1).bytes(), 4);
+    }
+}

@@ -1,0 +1,172 @@
+//! Weight store: loads `artifacts/weights.bin` (flat little-endian f32,
+//! layout defined by the manifest's weight table) and serves per-tensor
+//! slices.  In a real EdgeShard deployment each device loads only its
+//! shard's weights; [`WeightStore::stage_bytes`] reports exactly that
+//! footprint for the memory accounting tests.
+
+use anyhow::{ensure, Context, Result};
+use std::sync::Arc;
+
+use super::manifest::Manifest;
+
+/// All model weights, resident once per process and shared by stages.
+#[derive(Debug, Clone)]
+pub struct WeightStore {
+    data: Arc<Vec<f32>>,
+    entries: Vec<(String, usize, usize, Vec<usize>)>, // name, offset_elems, len, shape
+}
+
+impl WeightStore {
+    /// Read the full weight blob described by `manifest`.
+    pub fn load(manifest: &Manifest) -> Result<Self> {
+        let path = manifest.weights_path();
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        ensure!(
+            bytes.len() == manifest.weights_total_bytes,
+            "weights.bin size {} != manifest {}",
+            bytes.len(),
+            manifest.weights_total_bytes
+        );
+        ensure!(bytes.len() % 4 == 0, "weights.bin not f32-aligned");
+        let mut data = vec![0f32; bytes.len() / 4];
+        for (i, ch) in bytes.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+        }
+        let entries = manifest
+            .weights
+            .iter()
+            .map(|w| {
+                ensure!(w.offset_bytes % 4 == 0, "misaligned weight {}", w.name);
+                Ok((
+                    w.name.clone(),
+                    w.offset_bytes / 4,
+                    w.elems(),
+                    w.shape.clone(),
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(WeightStore {
+            data: Arc::new(data),
+            entries,
+        })
+    }
+
+    /// Slice of one named tensor.
+    pub fn get(&self, name: &str) -> Result<(&[f32], &[usize])> {
+        let (_, off, len, shape) = self
+            .entries
+            .iter()
+            .find(|(n, ..)| n == name)
+            .with_context(|| format!("weight `{name}` not found"))?;
+        Ok((&self.data[*off..*off + *len], shape))
+    }
+
+    /// The nine per-layer tensors of decoder layer `i`, in the canonical
+    /// order the `layer_*` HLO parameters expect.
+    pub fn layer_params(
+        &self,
+        manifest: &Manifest,
+        layer: usize,
+    ) -> Result<Vec<(&[f32], &[usize])>> {
+        manifest
+            .config
+            .layer_param_order
+            .iter()
+            .map(|p| self.get(&format!("layers.{layer}.{p}")))
+            .collect()
+    }
+
+    /// Bytes of weights a stage holding decoder layers `[lo, hi)` (plus
+    /// optionally embed / head) keeps resident.
+    pub fn stage_bytes(
+        &self,
+        manifest: &Manifest,
+        decoders: std::ops::Range<usize>,
+        has_embed: bool,
+        has_head: bool,
+    ) -> usize {
+        let mut total = 0usize;
+        if has_embed {
+            total += self.get("tok_emb").map(|(d, _)| d.len() * 4).unwrap_or(0);
+        }
+        for l in decoders {
+            for p in &manifest.config.layer_param_order {
+                total += self
+                    .get(&format!("layers.{l}.{p}"))
+                    .map(|(d, _)| d.len() * 4)
+                    .unwrap_or(0);
+            }
+        }
+        if has_head {
+            total += self.get("final_norm").map(|(d, _)| d.len() * 4).unwrap_or(0);
+            total += self.get("lm_head").map(|(d, _)| d.len() * 4).unwrap_or(0);
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load() -> Option<(Manifest, WeightStore)> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let m = Manifest::load(dir).unwrap();
+        let w = WeightStore::load(&m).unwrap();
+        Some((m, w))
+    }
+
+    #[test]
+    fn loads_and_slices() {
+        let Some((m, w)) = load() else { return };
+        let (emb, shape) = w.get("tok_emb").unwrap();
+        assert_eq!(shape, &[m.config.vocab_size, m.config.d_model]);
+        assert_eq!(emb.len(), m.config.vocab_size * m.config.d_model);
+        // weights are random-normal scaled 0.02 — check magnitude sanity
+        let mean_abs: f32 = emb.iter().map(|x| x.abs()).sum::<f32>() / emb.len() as f32;
+        assert!(mean_abs > 0.001 && mean_abs < 0.1, "mean_abs={mean_abs}");
+    }
+
+    #[test]
+    fn layer_params_order_and_shapes() {
+        let Some((m, w)) = load() else { return };
+        let params = w.layer_params(&m, 0).unwrap();
+        assert_eq!(params.len(), 9);
+        // attn_norm first: shape [d_model]
+        assert_eq!(params[0].1, &[m.config.d_model]);
+        // wq second: [d_model, n_heads*head_dim]
+        assert_eq!(
+            params[1].1,
+            &[m.config.d_model, m.config.n_heads * m.config.head_dim()]
+        );
+        // w_down last: [d_ff, d_model]
+        assert_eq!(params[8].1, &[m.config.d_ff, m.config.d_model]);
+    }
+
+    #[test]
+    fn norm_weights_are_ones() {
+        let Some((_m, w)) = load() else { return };
+        let (norm, _) = w.get("final_norm").unwrap();
+        assert!(norm.iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn missing_weight_errors() {
+        let Some((_m, w)) = load() else { return };
+        assert!(w.get("layers.7.wq").is_err());
+    }
+
+    #[test]
+    fn stage_bytes_partitions_total() {
+        let Some((m, w)) = load() else { return };
+        let all = w.stage_bytes(&m, 0..m.config.n_layers, true, true);
+        assert_eq!(all, m.weights_total_bytes);
+        let a = w.stage_bytes(&m, 0..2, true, false);
+        let b = w.stage_bytes(&m, 2..m.config.n_layers, false, true);
+        assert_eq!(a + b, all);
+    }
+}

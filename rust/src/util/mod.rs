@@ -1,0 +1,197 @@
+//! Small shared utilities: deterministic RNG, byte formatting, markdown
+//! tables, float helpers, and a minimal JSON parser.
+
+pub mod json;
+
+pub use json::Json;
+
+/// Deterministic xorshift64* RNG.
+///
+/// Used everywhere randomness is needed (bandwidth jitter, synthetic
+/// corpus, workload traces) so that every experiment is reproducible
+/// without pulling in a heavyweight dependency.
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // avoid the all-zero fixed point
+        Rng(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).max(1))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        (self.next_f64() * n as f64) as u64
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.next_f64() * (hi - lo)
+    }
+
+    /// Exponential with the given mean (for Poisson inter-arrivals).
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        -mean * (1.0 - self.next_f64()).ln()
+    }
+}
+
+/// Format a byte count as a human string (GiB/MiB/KiB with short scale).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const G: f64 = 1024.0 * 1024.0 * 1024.0;
+    const M: f64 = 1024.0 * 1024.0;
+    const K: f64 = 1024.0;
+    let b = bytes as f64;
+    if b >= G {
+        format!("{:.2}GB", b / G)
+    } else if b >= M {
+        format!("{:.2}MB", b / M)
+    } else if b >= K {
+        format!("{:.2}KB", b / K)
+    } else {
+        format!("{bytes}B")
+    }
+}
+
+/// Render rows as a GitHub-flavoured markdown table.
+pub fn markdown_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: Vec<String>| -> String {
+        let padded: Vec<String> = cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:<w$}", c, w = widths.get(i).copied().unwrap_or(0)))
+            .collect();
+        format!("| {} |", padded.join(" | "))
+    };
+    let mut out = String::new();
+    out.push_str(&line(header.iter().map(|s| s.to_string()).collect()));
+    out.push('\n');
+    out.push_str(&line(widths.iter().map(|w| "-".repeat(*w)).collect()));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&line(row.clone()));
+        out.push('\n');
+    }
+    out
+}
+
+/// Relative difference |a-b| / max(|a|,|b|,eps) — used in tests.
+pub fn rel_diff(a: f64, b: f64) -> f64 {
+    (a - b).abs() / a.abs().max(b.abs()).max(1e-12)
+}
+
+/// Minimal benchmark runner (criterion is unavailable in the sandboxed
+/// registry): warms up, runs `iters` timed repetitions, prints
+/// mean/min/p50 and returns the mean in ms.
+pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..iters.clamp(1, 3) {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t = std::time::Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples[0];
+    let p50 = samples[samples.len() / 2];
+    println!("{name:<52} mean {mean:>10.3} ms   min {min:>10.3} ms   p50 {p50:>10.3} ms");
+    mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn rng_f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn rng_uniform_respects_bounds() {
+        let mut r = Rng::new(9);
+        for _ in 0..1000 {
+            let x = r.uniform(40.0, 60.0);
+            assert!((40.0..60.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn rng_exponential_mean_close() {
+        let mut r = Rng::new(11);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.exponential(5.0)).sum::<f64>() / n as f64;
+        assert!((mean - 5.0).abs() < 0.2, "mean={mean}");
+    }
+
+    #[test]
+    fn fmt_bytes_scales() {
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(2048), "2.00KB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00MB");
+        assert_eq!(fmt_bytes(28 * 1024 * 1024 * 1024), "28.00GB");
+    }
+
+    #[test]
+    fn markdown_table_shape() {
+        let t = markdown_table(
+            &["a", "bb"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("| a"));
+        assert!(lines[1].contains("---"));
+    }
+
+    #[test]
+    fn rel_diff_basics() {
+        assert!(rel_diff(1.0, 1.0) < 1e-12);
+        assert!((rel_diff(1.0, 2.0) - 0.5).abs() < 1e-12);
+    }
+}

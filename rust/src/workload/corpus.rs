@@ -1,0 +1,122 @@
+//! Synthetic text corpus — stands in for WikiText-2 (see DESIGN.md
+//! Substitutions).  Generates deterministic English-like sentences via a
+//! tiny template grammar, then byte-tokenizes them to match the executable
+//! model's 256-entry vocabulary.  Latency/throughput are content-agnostic;
+//! only the token-stream *shape* matters.
+
+use crate::util::Rng;
+
+const SUBJECTS: &[&str] = &[
+    "the river", "a senator", "the museum", "an engineer", "the treaty",
+    "the orchestra", "a glacier", "the village", "the archive", "a comet",
+];
+const VERBS: &[&str] = &[
+    "crossed", "described", "rebuilt", "measured", "inspired",
+    "preserved", "followed", "composed", "surveyed", "recorded",
+];
+const OBJECTS: &[&str] = &[
+    "the northern valley", "an early manuscript", "the coastal railway",
+    "a series of experiments", "the annual festival", "the stone bridge",
+    "a collection of maps", "the quiet harbor", "the old observatory",
+    "a chain of islands",
+];
+const CONNECTIVES: &[&str] = &[" while ", " because ", " and later ", " although ", " before "];
+
+/// Deterministic sentence generator + byte tokenizer.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    seed: u64,
+}
+
+impl Corpus {
+    pub fn new(seed: u64) -> Self {
+        Corpus { seed }
+    }
+
+    /// The `idx`-th document: a few clauses of template text.
+    pub fn document(&self, idx: u64) -> String {
+        let mut rng = Rng::new(self.seed.wrapping_add(idx.wrapping_mul(0x0FD4_7DED)));
+        let mut s = String::new();
+        let clauses = 2 + rng.next_below(3);
+        for c in 0..clauses {
+            if c > 0 {
+                s.push_str(CONNECTIVES[rng.next_below(CONNECTIVES.len() as u64) as usize]);
+            }
+            s.push_str(SUBJECTS[rng.next_below(SUBJECTS.len() as u64) as usize]);
+            s.push(' ');
+            s.push_str(VERBS[rng.next_below(VERBS.len() as u64) as usize]);
+            s.push(' ');
+            s.push_str(OBJECTS[rng.next_below(OBJECTS.len() as u64) as usize]);
+        }
+        s.push('.');
+        s
+    }
+
+    /// Byte-tokenize `document(idx)` into exactly `len` tokens in
+    /// `[0, vocab)`, cycling the text if it is shorter.
+    pub fn sample_tokens(&self, len: usize, vocab: i32, idx: u64) -> Vec<i32> {
+        let doc = self.document(idx);
+        let bytes = doc.as_bytes();
+        (0..len)
+            .map(|i| (bytes[i % bytes.len()] as i32) % vocab)
+            .collect()
+    }
+
+    /// Decode byte tokens back into (lossy) text — used by the demo server.
+    pub fn detokenize(tokens: &[i32]) -> String {
+        tokens
+            .iter()
+            .map(|&t| {
+                let b = (t.clamp(0, 255)) as u8;
+                if b.is_ascii_graphic() || b == b' ' {
+                    b as char
+                } else {
+                    '·'
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn documents_deterministic() {
+        let c = Corpus::new(5);
+        assert_eq!(c.document(3), c.document(3));
+        assert_ne!(c.document(3), c.document(4));
+    }
+
+    #[test]
+    fn tokens_in_range_and_exact_length() {
+        let c = Corpus::new(1);
+        let t = c.sample_tokens(100, 256, 0);
+        assert_eq!(t.len(), 100);
+        assert!(t.iter().all(|&x| (0..256).contains(&x)));
+    }
+
+    #[test]
+    fn short_doc_cycles() {
+        let c = Corpus::new(2);
+        let t = c.sample_tokens(500, 256, 1);
+        assert_eq!(t.len(), 500);
+    }
+
+    #[test]
+    fn detokenize_roundtrip_printable() {
+        let s = "the river crossed";
+        let toks: Vec<i32> = s.bytes().map(|b| b as i32).collect();
+        assert_eq!(Corpus::detokenize(&toks), s);
+    }
+
+    #[test]
+    fn text_looks_like_text() {
+        let c = Corpus::new(7);
+        let d = c.document(0);
+        assert!(d.len() > 20);
+        assert!(d.ends_with('.'));
+        assert!(d.contains(' '));
+    }
+}
