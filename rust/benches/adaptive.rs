@@ -1,0 +1,75 @@
+//! Adaptive-runtime benchmarks: replan solve time (the control-loop
+//! budget) and migration pause (ms of generation stalled moving KV state)
+//! across testbed-sized clusters.
+//!
+//! The replanner runs *inline* in the serving loop, so its solve time is
+//! dead time added to one token iteration; the migration pause is the
+//! KV-freight transfer on the post-drop network.  Both must stay small
+//! against a ~decode-iteration budget for adaptation to be worth it.
+
+use edgeshard::adaptive::replan::{migration_diff, Replanner, TriggerPolicy};
+use edgeshard::adaptive::Decision;
+use edgeshard::cluster::presets;
+use edgeshard::model::{llama2_13b, llama2_7b, ModelDesc};
+use edgeshard::planner::{PlanObjective, Planner};
+use edgeshard::profiler::{AnalyticProfiler, Workload};
+use edgeshard::util::{bench, fmt_bytes};
+
+fn main() {
+    println!("# adaptive benches (15-device paper testbed)\n");
+    let models: Vec<(&str, ModelDesc)> = vec![("7B", llama2_7b()), ("13B", llama2_13b())];
+    for (name, model) in &models {
+        let cluster = presets::paper_testbed(50.0, 0);
+        let traces =
+            AnalyticProfiler::default().profile(model, &cluster, Workload::paper_default());
+        let plan = edgeshard::planner::LatencyDp::new()
+            .plan(&traces, &cluster)
+            .unwrap();
+        let baseline =
+            edgeshard::planner::sequential_latency_ms(&plan, &traces, &cluster);
+
+        // degraded observed state: strangle the links the plan uses
+        let mut degraded = cluster.clone();
+        for w in plan.devices().windows(2) {
+            degraded.set_bandwidth(w[0], w[1], 0.5);
+        }
+
+        for objective in [PlanObjective::Latency, PlanObjective::Throughput] {
+            let label = format!("replan-evaluate/{name}/{objective:?}");
+            bench(&label, 10, || {
+                let mut r = Replanner::new(objective, TriggerPolicy::default(), 1, baseline);
+                let d = r.evaluate(&plan, &traces, &degraded, 0.0);
+                std::hint::black_box(&d);
+            });
+        }
+
+        // migration diff + pause accounting for the triggered switch
+        let mut r = Replanner::new(
+            PlanObjective::Latency,
+            TriggerPolicy::default(),
+            1,
+            baseline,
+        );
+        match r.evaluate(&plan, &traces, &degraded, 0.0) {
+            Decision::Migrate { plan: cand, diff, .. } => {
+                bench(&format!("migration-diff/{name}"), 50, || {
+                    let d = migration_diff(&plan, &cand, &traces.kv_bytes_per_seq, 1);
+                    std::hint::black_box(&d);
+                });
+                let pause_degraded = diff.pause_ms(&degraded);
+                let pause_healthy = diff.pause_ms(&cluster);
+                println!(
+                    "migration/{name}: {} KV over {} moves — pause {:.1} ms (degraded net) / {:.1} ms (healthy net)",
+                    fmt_bytes(diff.total_kv_bytes),
+                    diff.moves.len(),
+                    pause_degraded,
+                    pause_healthy
+                );
+            }
+            Decision::Keep { current_pred_ms } => {
+                println!("migration/{name}: replanner kept the plan (pred {current_pred_ms:.1} ms)");
+            }
+        }
+        println!();
+    }
+}

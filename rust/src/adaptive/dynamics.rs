@@ -1,0 +1,399 @@
+//! Time-varying link schedules — the network weather the adaptive runtime
+//! lives in.
+//!
+//! A [`ScheduleShape`] is a pure function `sim_time_ms → Mbps`, so replays
+//! are deterministic and a schedule can be sampled by planners, tests and
+//! the [`DynamicsDriver`] alike.  The driver is the only mutator: it
+//! periodically samples every [`LinkSchedule`] and writes the result into
+//! both the ground-truth [`LiveCluster`] and the engine's in-flight
+//! [`RoutedLink`] pacers (mid-frame — a drop stretches the remaining bits
+//! of whatever is on the wire).
+
+use crate::cluster::LiveCluster;
+use crate::netsim::RoutedLink;
+use crate::util::Rng;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Floor for any scheduled bandwidth (Mbps): keeps degraded links valid
+/// for [`crate::cluster::Cluster::set_bandwidth`] and the pacers (a true
+/// 0 would mean "down forever", which deadlocks a pipeline that still has
+/// traffic queued on the link).
+pub const MIN_MBPS: f64 = 0.01;
+
+/// Upper bound on random-walk steps evaluated per sample (guards the
+/// stateless replay when asked for the bandwidth at `t = ∞`).
+const MAX_WALK_STEPS: usize = 100_000;
+
+/// Bandwidth-over-time shape of one link.
+#[derive(Debug, Clone)]
+pub enum ScheduleShape {
+    /// Fixed rate (useful to pin a link in a scenario).
+    Constant(f64),
+    /// Hard drop/jump at `at_ms`.
+    Step {
+        at_ms: f64,
+        before_mbps: f64,
+        after_mbps: f64,
+    },
+    /// Linear glide from `from_mbps` to `to_mbps` over `[start_ms, end_ms]`.
+    Ramp {
+        start_ms: f64,
+        end_ms: f64,
+        from_mbps: f64,
+        to_mbps: f64,
+    },
+    /// Square-wave congestion: `high_mbps` for the first `duty` fraction
+    /// of every `period_ms`, `low_mbps` for the rest.
+    Periodic {
+        period_ms: f64,
+        duty: f64,
+        high_mbps: f64,
+        low_mbps: f64,
+    },
+    /// Seeded multiplicative random walk in `[floor_mbps, ceil_mbps]`,
+    /// stepping every `step_ms`.  Deterministic per seed: the walk is
+    /// replayed from t=0 at every sample.
+    RandomWalk {
+        seed: u64,
+        start_mbps: f64,
+        step_ms: f64,
+        vol: f64,
+        floor_mbps: f64,
+        ceil_mbps: f64,
+    },
+    /// Replay of a recorded `(t_ms, mbps)` trace (step-wise, sorted by
+    /// time; before the first point the first value holds).
+    Trace(Vec<(f64, f64)>),
+}
+
+impl ScheduleShape {
+    /// Bandwidth at simulated time `t_ms` (clamped to [`MIN_MBPS`]).
+    pub fn mbps_at(&self, t_ms: f64) -> f64 {
+        let t = t_ms.max(0.0);
+        let raw = match self {
+            ScheduleShape::Constant(v) => *v,
+            ScheduleShape::Step {
+                at_ms,
+                before_mbps,
+                after_mbps,
+            } => {
+                if t < *at_ms {
+                    *before_mbps
+                } else {
+                    *after_mbps
+                }
+            }
+            ScheduleShape::Ramp {
+                start_ms,
+                end_ms,
+                from_mbps,
+                to_mbps,
+            } => {
+                if t <= *start_ms {
+                    *from_mbps
+                } else if t >= *end_ms {
+                    *to_mbps
+                } else {
+                    let f = (t - start_ms) / (end_ms - start_ms).max(1e-9);
+                    from_mbps + f * (to_mbps - from_mbps)
+                }
+            }
+            ScheduleShape::Periodic {
+                period_ms,
+                duty,
+                high_mbps,
+                low_mbps,
+            } => {
+                let phase = t.rem_euclid(period_ms.max(1e-9));
+                if phase < duty.clamp(0.0, 1.0) * period_ms {
+                    *high_mbps
+                } else {
+                    *low_mbps
+                }
+            }
+            ScheduleShape::RandomWalk {
+                seed,
+                start_mbps,
+                step_ms,
+                vol,
+                floor_mbps,
+                ceil_mbps,
+            } => {
+                let steps = if step_ms.is_finite() && *step_ms > 0.0 && t.is_finite() {
+                    ((t / step_ms) as usize).min(MAX_WALK_STEPS)
+                } else {
+                    0
+                };
+                let mut rng = Rng::new(*seed);
+                let mut bw = *start_mbps;
+                for _ in 0..steps {
+                    bw *= 1.0 + rng.uniform(-*vol, *vol);
+                    bw = bw.clamp(*floor_mbps, *ceil_mbps);
+                }
+                bw
+            }
+            ScheduleShape::Trace(points) => points
+                .iter()
+                .take_while(|(pt, _)| *pt <= t)
+                .last()
+                .or(points.first())
+                .map(|(_, v)| *v)
+                .unwrap_or(MIN_MBPS),
+        };
+        raw.max(MIN_MBPS)
+    }
+}
+
+/// One link's schedule (applied symmetrically, like
+/// [`crate::cluster::Cluster::set_bandwidth`]).
+#[derive(Debug, Clone)]
+pub struct LinkSchedule {
+    pub a: usize,
+    pub b: usize,
+    pub shape: ScheduleShape,
+}
+
+/// The full weather forecast: a set of per-link schedules.
+#[derive(Debug, Clone, Default)]
+pub struct NetworkDynamics {
+    pub links: Vec<LinkSchedule>,
+}
+
+impl NetworkDynamics {
+    pub fn new() -> Self {
+        NetworkDynamics { links: Vec::new() }
+    }
+
+    /// Add a schedule for the (symmetric) link `a↔b`.
+    pub fn link(mut self, a: usize, b: usize, shape: ScheduleShape) -> Self {
+        self.links.push(LinkSchedule { a, b, shape });
+        self
+    }
+
+    /// Scheduled bandwidth of `a↔b` at `t_ms`, if a schedule exists.
+    pub fn mbps_at(&self, a: usize, b: usize, t_ms: f64) -> Option<f64> {
+        self.links
+            .iter()
+            .find(|l| (l.a == a && l.b == b) || (l.a == b && l.b == a))
+            .map(|l| l.shape.mbps_at(t_ms))
+    }
+
+    /// Write the state at `t_ms` into the ground-truth cluster and any
+    /// affected live links.
+    pub fn apply(&self, cluster: &LiveCluster, links: &[RoutedLink], t_ms: f64) {
+        for l in &self.links {
+            let mbps = l.shape.mbps_at(t_ms);
+            cluster.set_bandwidth(l.a, l.b, mbps);
+            for rl in links {
+                if (rl.from == l.a && rl.to == l.b) || (rl.from == l.b && rl.to == l.a) {
+                    rl.link.set_bandwidth(mbps);
+                }
+            }
+        }
+    }
+}
+
+/// Background thread replaying a [`NetworkDynamics`] onto a live cluster
+/// and a (swappable) set of routed links, on the engine's simulated
+/// clock: `sim_ms = real_elapsed_ms / time_scale`.
+pub struct DynamicsDriver {
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl DynamicsDriver {
+    /// Start replaying.  `links` is shared so a migration can swap in the
+    /// freshly wired links without restarting the driver.  Requires
+    /// `time_scale > 0` to have a meaningful clock (at 0 the schedule
+    /// collapses to its end state).
+    pub fn spawn(
+        dynamics: NetworkDynamics,
+        cluster: LiveCluster,
+        links: Arc<Mutex<Vec<RoutedLink>>>,
+        time_scale: f64,
+        tick_real_ms: f64,
+    ) -> DynamicsDriver {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let join = std::thread::Builder::new()
+            .name("net-dynamics".into())
+            .spawn(move || {
+                let t0 = Instant::now();
+                while !stop2.load(Ordering::Relaxed) {
+                    let sim_ms = if time_scale > 0.0 {
+                        t0.elapsed().as_secs_f64() * 1e3 / time_scale
+                    } else {
+                        f64::INFINITY
+                    };
+                    {
+                        let snapshot = links.lock().expect("links lock poisoned");
+                        dynamics.apply(&cluster, &snapshot, sim_ms);
+                    }
+                    std::thread::sleep(Duration::from_secs_f64(tick_real_ms.max(0.5) / 1e3));
+                }
+            })
+            .expect("spawning net-dynamics thread");
+        DynamicsDriver {
+            stop,
+            join: Some(join),
+        }
+    }
+
+    /// Stop replaying and join the thread.
+    pub fn stop(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for DynamicsDriver {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+
+    #[test]
+    fn step_and_ramp_shapes() {
+        let s = ScheduleShape::Step {
+            at_ms: 100.0,
+            before_mbps: 1000.0,
+            after_mbps: 50.0,
+        };
+        assert_eq!(s.mbps_at(0.0), 1000.0);
+        assert_eq!(s.mbps_at(99.9), 1000.0);
+        assert_eq!(s.mbps_at(100.0), 50.0);
+        assert_eq!(s.mbps_at(f64::INFINITY), 50.0);
+
+        let r = ScheduleShape::Ramp {
+            start_ms: 0.0,
+            end_ms: 100.0,
+            from_mbps: 100.0,
+            to_mbps: 200.0,
+        };
+        assert_eq!(r.mbps_at(0.0), 100.0);
+        assert!((r.mbps_at(50.0) - 150.0).abs() < 1e-9);
+        assert_eq!(r.mbps_at(1e9), 200.0);
+    }
+
+    #[test]
+    fn periodic_duty_cycle() {
+        let p = ScheduleShape::Periodic {
+            period_ms: 100.0,
+            duty: 0.6,
+            high_mbps: 500.0,
+            low_mbps: 10.0,
+        };
+        assert_eq!(p.mbps_at(10.0), 500.0);
+        assert_eq!(p.mbps_at(59.0), 500.0);
+        assert_eq!(p.mbps_at(61.0), 10.0);
+        assert_eq!(p.mbps_at(161.0), 10.0);
+        assert_eq!(p.mbps_at(210.0), 500.0);
+    }
+
+    #[test]
+    fn random_walk_deterministic_and_bounded() {
+        let w = ScheduleShape::RandomWalk {
+            seed: 7,
+            start_mbps: 100.0,
+            step_ms: 10.0,
+            vol: 0.2,
+            floor_mbps: 20.0,
+            ceil_mbps: 400.0,
+        };
+        for t in [0.0, 55.0, 123.0, 999.0] {
+            let a = w.mbps_at(t);
+            let b = w.mbps_at(t);
+            assert_eq!(a, b);
+            assert!((20.0..=400.0).contains(&a), "t={t} bw={a}");
+        }
+        // actually walks
+        assert_ne!(w.mbps_at(0.0), w.mbps_at(999.0));
+        // infinite time terminates (step cap)
+        assert!(w.mbps_at(f64::INFINITY).is_finite());
+    }
+
+    #[test]
+    fn trace_replay_stepwise() {
+        let tr = ScheduleShape::Trace(vec![(0.0, 100.0), (50.0, 10.0), (80.0, 300.0)]);
+        assert_eq!(tr.mbps_at(0.0), 100.0);
+        assert_eq!(tr.mbps_at(49.0), 100.0);
+        assert_eq!(tr.mbps_at(50.0), 10.0);
+        assert_eq!(tr.mbps_at(79.0), 10.0);
+        assert_eq!(tr.mbps_at(1e6), 300.0);
+    }
+
+    #[test]
+    fn schedules_floor_at_min() {
+        let s = ScheduleShape::Constant(0.0);
+        assert_eq!(s.mbps_at(5.0), MIN_MBPS);
+        let s = ScheduleShape::Step {
+            at_ms: 0.0,
+            before_mbps: 10.0,
+            after_mbps: -3.0,
+        };
+        assert_eq!(s.mbps_at(1.0), MIN_MBPS);
+    }
+
+    #[test]
+    fn dynamics_apply_updates_cluster_and_links() {
+        let live = LiveCluster::new(presets::tiny_demo(0));
+        let dynamics = NetworkDynamics::new().link(
+            0,
+            1,
+            ScheduleShape::Step {
+                at_ms: 100.0,
+                before_mbps: 1000.0,
+                after_mbps: 2.0,
+            },
+        );
+        let rl = RoutedLink {
+            from: 1,
+            to: 0,
+            link: crate::netsim::LiveLink::new(crate::netsim::LinkSpec::new(1000.0, 0.5)),
+        };
+        dynamics.apply(&live, std::slice::from_ref(&rl), 0.0);
+        assert_eq!(live.bandwidth(0, 1), 1000.0);
+        assert_eq!(rl.link.get().bandwidth_mbps, 1000.0);
+        dynamics.apply(&live, std::slice::from_ref(&rl), 200.0);
+        assert_eq!(live.bandwidth(1, 0), 2.0);
+        assert_eq!(rl.link.get().bandwidth_mbps, 2.0);
+        assert_eq!(dynamics.mbps_at(1, 0, 200.0), Some(2.0));
+        assert_eq!(dynamics.mbps_at(0, 2, 200.0), None);
+    }
+
+    #[test]
+    fn driver_replays_on_sim_clock() {
+        let live = LiveCluster::new(presets::tiny_demo(0));
+        let dynamics = NetworkDynamics::new().link(
+            0,
+            1,
+            ScheduleShape::Step {
+                at_ms: 400.0,
+                before_mbps: 777.0,
+                after_mbps: 5.0,
+            },
+        );
+        let links = Arc::new(Mutex::new(Vec::new()));
+        // time_scale 0.1 → 400 sim ms arrive after 40 real ms
+        let driver = DynamicsDriver::spawn(dynamics, live.clone(), links, 0.1, 2.0);
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(live.bandwidth(0, 1), 777.0);
+        std::thread::sleep(Duration::from_millis(120));
+        assert_eq!(live.bandwidth(0, 1), 5.0);
+        driver.stop();
+    }
+}

@@ -1,0 +1,627 @@
+//! The adaptive serving engine: a coordinator pipeline that watches its
+//! own timings and re-plans itself while generating.
+//!
+//! Control loop (every [`AdaptiveConfig::check_every`] tokens):
+//!
+//! 1. drain the [`Monitor`] and materialize observed cluster + traces;
+//! 2. ask the [`Replanner`] whether the current plan degraded past the
+//!    hysteresis band *and* a decisively better plan exists;
+//! 3. if so, **drain** — stop releasing decode iterations and let
+//!    in-flight ones land — then **migrate**: snapshot every stage's
+//!    [`GroupCache`] via [`StageMsg::Export`], tear the pipeline down,
+//!    charge the real KV transfer time on the current (live) links,
+//!    rewire stage actors per the new plan with the caches preloaded,
+//!    and release the held iterations.
+//!
+//! Token numerics are unaffected by migration: the KV tensors move
+//! byte-identically, so an adaptive run emits exactly the token stream a
+//! static run would — just faster when the network turns hostile
+//! (asserted end-to-end in `tests/adaptive_e2e.rs`).
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::dynamics::{DynamicsDriver, NetworkDynamics};
+use super::monitor::Monitor;
+use super::replan::{Decision, MigrationDiff, Replanner, TriggerPolicy};
+use crate::cluster::{Cluster, LiveCluster};
+use crate::coordinator::api::{GenResult, GroupRequest};
+use crate::coordinator::engine::{wire, EngineConfig, ObsSinks, Wired};
+use crate::coordinator::kvcache::{GroupCache, KvPool};
+use crate::coordinator::stage::{stage_decoders, KvEntry, Payload, Phase, StageExport, StageMsg};
+use crate::metrics::Histogram;
+use crate::netsim::RoutedLink;
+use crate::planner::{pipeline_bottleneck_ms, sequential_latency_ms, Plan, PlanObjective};
+use crate::profiler::ProfiledTraces;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::{ExecServiceHandle, WeightStore};
+
+/// Hard cap on the real time one migration pause may sleep (safety net
+/// against a scenario that schedules a migration over a dead link).
+const MAX_MIGRATION_SLEEP_REAL_MS: f64 = 30_000.0;
+
+/// Knobs of the adaptive engine.
+#[derive(Debug, Clone)]
+pub struct AdaptiveConfig {
+    pub engine: EngineConfig,
+    /// Which DP re-solves on drift.
+    pub objective: PlanObjective,
+    pub policy: TriggerPolicy,
+    /// EWMA weight of the newest observation.
+    pub monitor_alpha: f64,
+    /// Run the control loop every this many received token messages.
+    pub check_every: usize,
+    /// Upper bound on migrations per generate call.
+    pub max_migrations: usize,
+    /// Ground-truth network weather to replay during generation (the
+    /// monitor never reads it — only its effects on timings).
+    pub dynamics: Option<NetworkDynamics>,
+    /// Dynamics replay granularity, real ms.
+    pub dynamics_tick_real_ms: f64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            engine: EngineConfig::default(),
+            objective: PlanObjective::Latency,
+            policy: TriggerPolicy::default(),
+            monitor_alpha: 0.5,
+            check_every: 2,
+            max_migrations: 4,
+            dynamics: None,
+            dynamics_tick_real_ms: 5.0,
+        }
+    }
+}
+
+/// One completed migration.
+#[derive(Debug, Clone)]
+pub struct MigrationRecord {
+    /// Token messages received when the migration committed.
+    pub at_iter: u64,
+    pub from_plan: String,
+    pub to_plan: String,
+    /// KV freight that crossed the network.
+    pub kv_bytes: u64,
+    /// Simulated generation stall while it crossed.
+    pub pause_ms: f64,
+}
+
+/// Aggregate statistics of one adaptive run.
+#[derive(Debug)]
+pub struct AdaptiveStats {
+    pub makespan_ms: f64,
+    pub tokens: u64,
+    pub throughput_tps: f64,
+    pub ttft: Histogram,
+    pub iter_latency: Histogram,
+    /// Control-loop rounds that ran.
+    pub replan_evaluations: u64,
+    pub migrations: Vec<MigrationRecord>,
+    pub final_plan: String,
+}
+
+/// An engine that owns its plan and may replace it mid-generation.
+pub struct AdaptiveEngine<'a> {
+    manifest: &'a Manifest,
+    weights: &'a WeightStore,
+    exec: ExecServiceHandle,
+    live: LiveCluster,
+    base_traces: ProfiledTraces,
+    plan: Plan,
+    cfg: AdaptiveConfig,
+}
+
+fn sim_now_ms(t0: Instant, time_scale: f64) -> f64 {
+    let real = t0.elapsed().as_secs_f64() * 1e3;
+    if time_scale > 0.0 {
+        real / time_scale
+    } else {
+        real
+    }
+}
+
+fn send_prefill(wired: &Wired, g: &GroupRequest) -> Result<()> {
+    let msg = StageMsg::Work {
+        group: g.group_id,
+        iter: 0,
+        pos: 0,
+        phase: Phase::Prefill,
+        batch: g.batch,
+        prompt_len: g.prompt_len,
+        payload: Payload::Tokens(g.tokens.clone()),
+    };
+    let bytes = msg.bytes();
+    wired.to_first.send(msg, bytes)
+}
+
+fn send_decode(wired: &Wired, g: &GroupRequest, iter: usize, tokens: Vec<i32>) -> Result<()> {
+    let pos = (g.prompt_len + iter - 1) as i32;
+    let msg = StageMsg::Work {
+        group: g.group_id,
+        iter,
+        pos,
+        phase: Phase::Decode,
+        batch: g.batch,
+        prompt_len: g.prompt_len,
+        payload: Payload::Tokens(tokens),
+    };
+    let bytes = msg.bytes();
+    wired.to_first.send(msg, bytes)
+}
+
+impl<'a> AdaptiveEngine<'a> {
+    /// `cluster` is the ground-truth starting state (also the initial
+    /// belief); `base_traces` are the offline-profiled traces the initial
+    /// `plan` was solved against.
+    pub fn new(
+        manifest: &'a Manifest,
+        weights: &'a WeightStore,
+        exec: ExecServiceHandle,
+        plan: Plan,
+        cluster: Cluster,
+        base_traces: ProfiledTraces,
+        cfg: AdaptiveConfig,
+    ) -> Self {
+        AdaptiveEngine {
+            manifest,
+            weights,
+            exec,
+            live: LiveCluster::new(cluster),
+            base_traces,
+            plan,
+            cfg,
+        }
+    }
+
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// The ground-truth network view (what dynamics mutate).
+    pub fn live_cluster(&self) -> LiveCluster {
+        self.live.clone()
+    }
+
+    /// Serve groups one at a time (sequential inference, window 1).
+    pub fn generate_sequential(
+        &mut self,
+        groups: &[GroupRequest],
+    ) -> Result<(Vec<GenResult>, AdaptiveStats)> {
+        self.run(groups, 1)
+    }
+
+    /// Serve all groups as a no-bubble micro-batched pipeline.
+    pub fn generate_pipelined(
+        &mut self,
+        groups: &[GroupRequest],
+    ) -> Result<(Vec<GenResult>, AdaptiveStats)> {
+        self.run(groups, groups.len().max(1))
+    }
+
+    /// Whether every stage of `plan` could hold the KV caches of groups
+    /// with these batch sizes inside the per-stage KV budget — checked
+    /// *before* committing to a migration so a replan can never tear down
+    /// a working pipeline for a target that cannot admit the freight.
+    fn preload_fits(&self, plan: &Plan, batches: &[usize]) -> bool {
+        let c = &self.manifest.config;
+        let n_model_layers = c.n_layers + 2;
+        plan.stages.iter().all(|s| {
+            let n_local = stage_decoders(&(s.start..s.end), n_model_layers).len();
+            let total: u64 = batches
+                .iter()
+                .map(|&b| KvPool::group_bytes(n_local, b, c.n_kv_heads, c.max_seq, c.head_dim()))
+                .sum();
+            total <= self.cfg.engine.kv_budget_bytes
+        })
+    }
+
+    fn run(
+        &mut self,
+        groups: &[GroupRequest],
+        window: usize,
+    ) -> Result<(Vec<GenResult>, AdaptiveStats)> {
+        struct Active<'g> {
+            req: &'g GroupRequest,
+            rows: Vec<Vec<i32>>,
+            start: Instant,
+            ttft_ms: Option<f64>,
+            last_iter_at: Instant,
+            done: bool,
+            in_flight: bool,
+        }
+        fn admit(g: &GroupRequest) -> Active<'_> {
+            Active {
+                req: g,
+                rows: vec![Vec::new(); g.batch],
+                start: Instant::now(),
+                ttft_ms: None,
+                last_iter_at: Instant::now(),
+                done: false,
+                in_flight: true,
+            }
+        }
+
+        // Same admission contract as the static engine — reject up front
+        // rather than letting a stage thread die on a missing variant.
+        for g in groups {
+            anyhow::ensure!(
+                self.manifest.batch_sizes.contains(&g.batch),
+                "batch {} not compiled (have {:?})",
+                g.batch,
+                self.manifest.batch_sizes
+            );
+            anyhow::ensure!(
+                g.prompt_len == self.manifest.config.prefill_len,
+                "prompt len {} != compiled {}",
+                g.prompt_len,
+                self.manifest.config.prefill_len
+            );
+        }
+
+        let believed = self.live.snapshot();
+        let (mut monitor, mon_handle) = Monitor::new(believed.clone(), self.cfg.monitor_alpha);
+        let sinks = mon_handle.sinks();
+        let mut wired = wire(
+            self.manifest,
+            self.weights,
+            self.exec.clone(),
+            &self.plan,
+            &believed,
+            &self.cfg.engine,
+            Some(&sinks),
+            Vec::new(),
+        )?;
+        let shared_links: Arc<Mutex<Vec<RoutedLink>>> = Arc::new(Mutex::new(wired.links.clone()));
+        let driver = self.cfg.dynamics.clone().map(|d| {
+            DynamicsDriver::spawn(
+                d,
+                self.live.clone(),
+                shared_links.clone(),
+                self.cfg.engine.time_scale,
+                self.cfg.dynamics_tick_real_ms,
+            )
+        });
+
+        let batch = groups.iter().map(|g| g.batch).max().unwrap_or(1);
+        let baseline = match self.cfg.objective {
+            PlanObjective::Latency => {
+                sequential_latency_ms(&self.plan, &self.base_traces, &believed)
+            }
+            PlanObjective::Throughput => {
+                pipeline_bottleneck_ms(&self.plan, &self.base_traces, &believed)
+            }
+        };
+        let mut replanner =
+            Replanner::new(self.cfg.objective, self.cfg.policy.clone(), batch, baseline);
+
+        let t0 = Instant::now();
+        let scale = self.cfg.engine.time_scale;
+        let mut ttft = Histogram::new();
+        let mut iter_lat = Histogram::new();
+        let mut results = Vec::new();
+        let mut active: HashMap<u64, Active> = HashMap::new();
+        let mut queue = groups.iter();
+        let mut in_flight_groups = 0usize;
+        let mut received = 0u64;
+        let mut real_tokens = 0u64;
+        let mut pending: Option<(Plan, MigrationDiff, f64)> = None;
+        let mut held: Vec<(u64, usize, Vec<i32>)> = Vec::new();
+        let mut migrations: Vec<MigrationRecord> = Vec::new();
+
+        // prime the window
+        while in_flight_groups < window {
+            let Some(g) = queue.next() else { break };
+            send_prefill(&wired, g)?;
+            active.insert(g.group_id, admit(g));
+            in_flight_groups += 1;
+        }
+
+        while in_flight_groups > 0 {
+            let tok = wired
+                .token_rx
+                .recv()
+                .map_err(|_| anyhow!("adaptive pipeline closed unexpectedly"))?;
+            received += 1;
+            let a = active
+                .get_mut(&tok.group)
+                .with_context(|| format!("unknown group {}", tok.group))?;
+            a.in_flight = false;
+            let now = Instant::now();
+            iter_lat.record(now.duration_since(a.last_iter_at).as_secs_f64() * 1e3);
+            a.last_iter_at = now;
+            if a.ttft_ms.is_none() {
+                let ms = now.duration_since(a.start).as_secs_f64() * 1e3;
+                a.ttft_ms = Some(ms);
+                ttft.record(ms);
+            }
+            for (row, &t) in a.rows.iter_mut().zip(&tok.tokens) {
+                row.push(t);
+            }
+            real_tokens += a.req.real() as u64;
+            let next_iter = tok.iter + 1;
+            if next_iter < a.req.max_new_tokens {
+                if pending.is_some() {
+                    held.push((tok.group, next_iter, tok.tokens));
+                } else {
+                    send_decode(&wired, a.req, next_iter, tok.tokens)?;
+                    a.in_flight = true;
+                }
+            } else {
+                a.done = true;
+                let total = now.duration_since(a.start).as_secs_f64() * 1e3;
+                for (i, &rid) in a.req.request_ids.iter().enumerate() {
+                    results.push(GenResult {
+                        id: rid,
+                        tokens: a.rows[i].clone(),
+                        ttft_ms: a.ttft_ms.unwrap_or(0.0),
+                        total_ms: total,
+                    });
+                }
+                wired.to_first.send(StageMsg::Free { group: tok.group }, 16)?;
+                in_flight_groups -= 1;
+                if pending.is_none() {
+                    if let Some(g) = queue.next() {
+                        send_prefill(&wired, g)?;
+                        active.insert(g.group_id, admit(g));
+                        in_flight_groups += 1;
+                    }
+                }
+            }
+
+            // control loop: consider replanning once everything prefilled
+            if pending.is_none()
+                && migrations.len() < self.cfg.max_migrations
+                && self.cfg.check_every > 0
+                && received % self.cfg.check_every as u64 == 0
+                && active.values().all(|x| x.done || x.ttft_ms.is_some())
+            {
+                monitor.drain();
+                let obs_cluster = monitor.observed_cluster();
+                let obs_traces = monitor.observed_traces(&self.base_traces, &self.plan);
+                let decision = replanner.evaluate(
+                    &self.plan,
+                    &obs_traces,
+                    &obs_cluster,
+                    sim_now_ms(t0, scale),
+                );
+                if let Decision::Migrate {
+                    plan,
+                    diff,
+                    candidate_pred_ms,
+                    ..
+                } = decision
+                {
+                    let batches: Vec<usize> =
+                        active.values().filter(|x| !x.done).map(|x| x.req.batch).collect();
+                    if self.preload_fits(&plan, &batches) {
+                        pending = Some((plan, diff, candidate_pred_ms));
+                    }
+                }
+            }
+
+            // barrier reached? (every unfinished group drained)
+            if pending.is_some() && active.values().all(|x| x.done || !x.in_flight) {
+                let (new_plan, diff, cand_pred) = pending.take().unwrap();
+                // On a `None` the migration aborted and the old pipeline
+                // (or a rewire of it) is still serving the current plan.
+                if let Some(record) =
+                    self.migrate(&mut wired, &sinks, &shared_links, &new_plan, &diff, received)?
+                {
+                    replanner.adopt(cand_pred, sim_now_ms(t0, scale));
+                    migrations.push(record);
+                    self.plan = new_plan;
+                }
+                for (gid, it, toks) in held.drain(..) {
+                    let a = active
+                        .get_mut(&gid)
+                        .with_context(|| format!("held group {gid} vanished"))?;
+                    send_decode(&wired, a.req, it, toks)?;
+                    a.in_flight = true;
+                }
+                while in_flight_groups < window {
+                    let Some(g) = queue.next() else { break };
+                    send_prefill(&wired, g)?;
+                    active.insert(g.group_id, admit(g));
+                    in_flight_groups += 1;
+                }
+            }
+        }
+
+        if let Some(d) = driver {
+            d.stop();
+        }
+        let _ = wired.to_first.send(StageMsg::Shutdown, 16);
+        for h in wired.handles.drain(..) {
+            match h.join() {
+                Ok(r) => r?,
+                Err(_) => anyhow::bail!("stage thread panicked"),
+            }
+        }
+
+        let makespan = t0.elapsed().as_secs_f64() * 1e3;
+        let stats = AdaptiveStats {
+            makespan_ms: makespan,
+            tokens: real_tokens,
+            throughput_tps: if makespan > 0.0 {
+                real_tokens as f64 / (makespan / 1e3)
+            } else {
+                0.0
+            },
+            ttft,
+            iter_latency: iter_lat,
+            replan_evaluations: replanner.evaluations(),
+            migrations,
+            final_plan: self.plan.describe(),
+        };
+        Ok((results, stats))
+    }
+
+    /// Route a flat KV snapshot onto `plan`'s stages: per-stage preloads
+    /// in local layer order, plus the per-link freight that must cross
+    /// the network (entries whose device changes).
+    #[allow(clippy::type_complexity)]
+    fn route_exports(
+        &self,
+        flat: &[(usize, KvEntry)],
+        plan: &Plan,
+    ) -> Result<(Vec<Vec<(u64, GroupCache)>>, HashMap<(usize, usize), u64>)> {
+        let c = &self.manifest.config;
+        let n_model_layers = c.n_layers + 2;
+        let ranges: Vec<std::ops::Range<usize>> = plan
+            .stages
+            .iter()
+            .map(|s| stage_decoders(&(s.start..s.end), n_model_layers))
+            .collect();
+        let mut per_stage: Vec<HashMap<u64, Vec<KvEntry>>> =
+            (0..plan.n_stages()).map(|_| HashMap::new()).collect();
+        let mut link_bytes: HashMap<(usize, usize), u64> = HashMap::new();
+        for (from_dev, e) in flat {
+            let si = ranges
+                .iter()
+                .position(|r| r.contains(&e.layer))
+                .with_context(|| format!("decoder layer {} homeless in plan", e.layer))?;
+            let new_dev = plan.stages[si].device;
+            if new_dev != *from_dev {
+                *link_bytes.entry((*from_dev, new_dev)).or_insert(0) += e.k.bytes() + e.v.bytes();
+            }
+            per_stage[si].entry(e.group).or_default().push(e.clone());
+        }
+        let mut preloads: Vec<Vec<(u64, GroupCache)>> = Vec::with_capacity(plan.n_stages());
+        for (si, groups_map) in per_stage.into_iter().enumerate() {
+            let n_local = ranges[si].len();
+            let mut v: Vec<(u64, GroupCache)> = Vec::new();
+            for (gid, mut entries) in groups_map.into_iter() {
+                entries.sort_by_key(|e| e.layer);
+                anyhow::ensure!(
+                    entries.len() == n_local,
+                    "group {gid}: stage {si} expected {n_local} migrated layers, got {}",
+                    entries.len()
+                );
+                let batch = entries.first().map(|e| e.batch).unwrap_or(1);
+                let bytes =
+                    KvPool::group_bytes(n_local, batch, c.n_kv_heads, c.max_seq, c.head_dim());
+                let layers = entries.into_iter().map(|e| (e.k, e.v)).collect();
+                v.push((
+                    gid,
+                    GroupCache {
+                        layers,
+                        batch,
+                        bytes,
+                    },
+                ));
+            }
+            preloads.push(v);
+        }
+        Ok((preloads, link_bytes))
+    }
+
+    /// Execute one migration: export KV, tear down, charge transfer time,
+    /// rewire with preloaded caches.  Called only at a drained barrier.
+    ///
+    /// Returns `Ok(None)` when the migration aborted safely — either the
+    /// snapshot could not be routed onto the new plan (old pipeline left
+    /// untouched) or the new wiring failed (the old plan is re-wired with
+    /// the same caches).  A hard `Err` means generation cannot continue.
+    fn migrate(
+        &self,
+        wired: &mut Wired,
+        sinks: &ObsSinks,
+        shared_links: &Arc<Mutex<Vec<RoutedLink>>>,
+        new_plan: &Plan,
+        diff: &MigrationDiff,
+        at_iter: u64,
+    ) -> Result<Option<MigrationRecord>> {
+        // 1. snapshot every stage's resident KV caches
+        let (reply_tx, reply_rx) = mpsc::channel();
+        wired.to_first.send(StageMsg::Export { reply: reply_tx }, 16)?;
+        let mut exports: Vec<StageExport> = Vec::new();
+        for _ in 0..self.plan.n_stages() {
+            exports.push(
+                reply_rx
+                    .recv()
+                    .map_err(|_| anyhow!("stage export lost (pipeline died mid-migration)"))?,
+            );
+        }
+        let mut flat: Vec<(usize, KvEntry)> = Vec::new();
+        for ex in exports {
+            let dev = ex.device;
+            for e in ex.entries {
+                flat.push((dev, e));
+            }
+        }
+
+        // 2. route onto the new plan BEFORE touching the running pipeline
+        //    — an unroutable snapshot aborts with everything still serving.
+        let Ok((preloads, link_bytes)) = self.route_exports(&flat, new_plan) else {
+            return Ok(None);
+        };
+
+        // 3. tear down the old pipeline
+        wired.to_first.send(StageMsg::Shutdown, 16)?;
+        for h in wired.handles.drain(..) {
+            match h.join() {
+                Ok(r) => r?,
+                Err(_) => anyhow::bail!("stage thread panicked during migration"),
+            }
+        }
+
+        // 4. charge the real KV transfer time on the *current* network:
+        //    per-link freight serializes, distinct links overlap.
+        let cluster_now = self.live.snapshot();
+        let pause_sim_ms = link_bytes
+            .iter()
+            .map(|(&(f, t), &b)| cluster_now.comm_ms(f, t, b))
+            .fold(0.0, f64::max);
+        let scale = self.cfg.engine.time_scale;
+        if pause_sim_ms > 0.0 && scale > 0.0 {
+            let real_ms = (pause_sim_ms * scale).min(MAX_MIGRATION_SLEEP_REAL_MS);
+            std::thread::sleep(Duration::from_secs_f64(real_ms / 1e3));
+        }
+
+        // 5. rewire on the current ground-truth network; if the new plan
+        //    cannot be wired, restore the old one with the same caches.
+        match wire(
+            self.manifest,
+            self.weights,
+            self.exec.clone(),
+            new_plan,
+            &cluster_now,
+            &self.cfg.engine,
+            Some(sinks),
+            preloads,
+        ) {
+            Ok(w) => {
+                *wired = w;
+                *shared_links.lock().expect("links lock poisoned") = wired.links.clone();
+                Ok(Some(MigrationRecord {
+                    at_iter,
+                    from_plan: self.plan.describe(),
+                    to_plan: new_plan.describe(),
+                    kv_bytes: diff.total_kv_bytes,
+                    pause_ms: pause_sim_ms,
+                }))
+            }
+            Err(_) => {
+                let (old_preloads, _) = self.route_exports(&flat, &self.plan)?;
+                *wired = wire(
+                    self.manifest,
+                    self.weights,
+                    self.exec.clone(),
+                    &self.plan,
+                    &cluster_now,
+                    &self.cfg.engine,
+                    Some(sinks),
+                    old_preloads,
+                )
+                .context("re-wiring the previous plan after a failed migration")?;
+                *shared_links.lock().expect("links lock poisoned") = wired.links.clone();
+                Ok(None)
+            }
+        }
+    }
+}

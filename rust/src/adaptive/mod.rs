@@ -1,0 +1,54 @@
+//! Adaptive runtime: network dynamics, online monitoring, and live
+//! replanning with KV-cache migration.
+//!
+//! The paper formulates device selection + partition as an *adaptive*
+//! problem, but a plan solved once against a frozen [`crate::cluster`]
+//! goes stale the moment an edge link degrades.  This subsystem closes
+//! the loop:
+//!
+//! ```text
+//!            ┌──────────── ground truth ────────────┐
+//!  dynamics ─┤ LiveCluster + LiveLink pacers        │  (scheduled drops,
+//!            └──────┬───────────────────────────────┘   ramps, walks)
+//!                   │ transfer / compute timings (the only signal)
+//!            ┌──────▼───────────────────────────────┐
+//!  monitor ──┤ EWMA link + stage estimators         │  observed Cluster
+//!            └──────┬───────────────────────────────┘  + ProfiledTraces
+//!                   │ drift vs. the current plan's prediction
+//!            ┌──────▼───────────────────────────────┐
+//!  replan ───┤ hysteresis trigger → DP re-solve     │  migration diff
+//!            └──────┬───────────────────────────────┘
+//!                   │ drain → export KV → transfer → rewire → resume
+//!            ┌──────▼───────────────────────────────┐
+//!  engine ───┤ AdaptiveEngine over coordinator wire │
+//!            └──────────────────────────────────────┘
+//! ```
+//!
+//! * [`dynamics`] — time-varying [`crate::netsim::LinkSpec`] schedules
+//!   (step drops, ramps, periodic congestion, seeded random walks, trace
+//!   replay) and the [`dynamics::DynamicsDriver`] that replays them onto a
+//!   [`crate::cluster::LiveCluster`] and the engine's live links.
+//! * [`monitor`] — EWMA estimators over the per-hop
+//!   [`crate::netsim::TransferObs`] and per-stage
+//!   [`crate::metrics::ComputeObs`] streams, reconstructing an *observed*
+//!   cluster and traces without ground-truth access.
+//! * [`replan`] — the trigger policy (estimate drift beyond a hysteresis
+//!   band) plus DP re-solve, emitting a [`replan::MigrationDiff`] that is
+//!   never predicted-worse than keeping the current plan.
+//! * [`engine`] — [`engine::AdaptiveEngine`]: drives generation, drains
+//!   in-flight groups at a barrier, hands KV caches across shaped links
+//!   (charging real transfer time), rewires stage actors and resumes.
+//! * [`scenario`] — canned end-to-end experiments (mid-generation
+//!   bandwidth drop, adaptive vs. static) shared by tests, the
+//!   `adaptive_recovery` example and `edgeshard repro adaptive`.
+
+pub mod dynamics;
+pub mod engine;
+pub mod monitor;
+pub mod replan;
+pub mod scenario;
+
+pub use dynamics::{DynamicsDriver, LinkSchedule, NetworkDynamics, ScheduleShape};
+pub use engine::{AdaptiveConfig, AdaptiveEngine, AdaptiveStats, MigrationRecord};
+pub use monitor::{Ewma, Monitor, MonitorHandle};
+pub use replan::{Decision, MigrationDiff, Replanner, StageMove, TriggerPolicy};

@@ -1,0 +1,419 @@
+//! Online estimators: reconstruct network + compute state from the
+//! timings that already flow through the serving stack.
+//!
+//! The monitor never touches the ground-truth [`crate::cluster::Cluster`]
+//! or the [`crate::netsim::LiveLink`] specs.  Its only inputs are:
+//!
+//! * [`TransferObs`] — per-frame (bytes, sim-ms) timings reported by the
+//!   shaped-link pacers the engine already routes activations through;
+//! * [`ComputeObs`] — per-message shard execution times reported by the
+//!   stage actors.
+//!
+//! From these it maintains EWMA estimates of effective link bandwidth and
+//! per-device compute speed, and can materialize an **observed**
+//! [`Cluster`] / [`ProfiledTraces`] pair for the replanner — the same
+//! schema the offline profiler produces, now estimated live.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{self, Receiver, Sender};
+
+use crate::cluster::Cluster;
+use crate::coordinator::engine::ObsSinks;
+use crate::metrics::ComputeObs;
+use crate::netsim::TransferObs;
+use crate::planner::Plan;
+use crate::profiler::ProfiledTraces;
+
+/// Exponentially weighted moving average.
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+    samples: u64,
+}
+
+impl Ewma {
+    /// `alpha` ∈ (0, 1]: weight of the newest sample.
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0,1]");
+        Ewma {
+            alpha,
+            value: None,
+            samples: 0,
+        }
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        self.samples += 1;
+        self.value = Some(match self.value {
+            None => x,
+            Some(v) => v + self.alpha * (x - v),
+        });
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+}
+
+/// Cloneable sender half handed to engines; see [`Monitor::new`].
+#[derive(Clone)]
+pub struct MonitorHandle {
+    pub transfer: Sender<TransferObs>,
+    pub compute: Sender<ComputeObs>,
+}
+
+impl MonitorHandle {
+    /// The observation taps in the shape [`crate::coordinator::engine::wire`]
+    /// wants.
+    pub fn sinks(&self) -> ObsSinks {
+        ObsSinks {
+            compute: self.compute.clone(),
+            transfer: self.transfer.clone(),
+        }
+    }
+}
+
+/// The estimator state.  Single-consumer: engines send observations
+/// through a [`MonitorHandle`]; the driver loop calls [`Monitor::drain`]
+/// before consulting the estimates.
+pub struct Monitor {
+    /// Prior beliefs (the cluster the initial plan was solved against) —
+    /// also the source of the latency term subtracted from transfer
+    /// timings, and of link values no observation has touched yet.
+    base: Cluster,
+    alpha: f64,
+    /// Frames smaller than this carry no usable bandwidth signal (their
+    /// timing is dominated by propagation latency + scheduler noise).
+    pub min_sample_bytes: u64,
+    transfer_rx: Receiver<TransferObs>,
+    compute_rx: Receiver<ComputeObs>,
+    /// EWMA over **ms-per-bit** (inverse bandwidth): averaging transfer
+    /// *time* makes a bandwidth collapse dominate the estimate within a
+    /// couple of frames (1000 → 1 Mbps is a 1000× jump in ms/bit), while
+    /// plain Mbps-averaging would need ~log₂(1000) samples to halve its
+    /// way down — far too slow to react to a link drop.
+    link_inv: HashMap<(usize, usize), Ewma>,
+    /// Keyed by (device, is_decode).
+    stage_ms: HashMap<(usize, bool), Ewma>,
+}
+
+impl Monitor {
+    pub fn new(base: Cluster, alpha: f64) -> (Monitor, MonitorHandle) {
+        let (transfer_tx, transfer_rx) = mpsc::channel();
+        let (compute_tx, compute_rx) = mpsc::channel();
+        (
+            Monitor {
+                base,
+                alpha,
+                min_sample_bytes: 256,
+                transfer_rx,
+                compute_rx,
+                link_inv: HashMap::new(),
+                stage_ms: HashMap::new(),
+            },
+            MonitorHandle {
+                transfer: transfer_tx,
+                compute: compute_tx,
+            },
+        )
+    }
+
+    /// Ingest every pending observation; returns how many arrived.
+    pub fn drain(&mut self) -> usize {
+        let mut n = 0;
+        while let Ok(o) = self.transfer_rx.try_recv() {
+            self.ingest_transfer(o);
+            n += 1;
+        }
+        while let Ok(o) = self.compute_rx.try_recv() {
+            self.ingest_compute(o);
+            n += 1;
+        }
+        n
+    }
+
+    /// Fold one transfer timing into the link estimate.  Public so tests
+    /// and offline replays can feed observations directly.
+    pub fn ingest_transfer(&mut self, o: TransferObs) {
+        if o.from == o.to || o.bytes < self.min_sample_bytes || !o.sim_ms.is_finite() {
+            return;
+        }
+        // Serialization time ≈ total − propagation (the base latency is a
+        // measurable, stable quantity; bandwidth is what drifts).  Clamp
+        // so a timing at or below the latency floor still yields a
+        // (large) finite estimate instead of a division blow-up.
+        let latency = self.base.latency_ms[o.from][o.to];
+        let ser_ms = (o.sim_ms - latency).max(o.sim_ms * 0.02).max(1e-3);
+        let ms_per_bit = ser_ms / (o.bytes as f64 * 8.0);
+        let key = (o.from.min(o.to), o.from.max(o.to));
+        self.link_inv
+            .entry(key)
+            .or_insert_with(|| Ewma::new(self.alpha))
+            .observe(ms_per_bit);
+    }
+
+    /// Fold one stage-compute timing into the device estimate.
+    pub fn ingest_compute(&mut self, o: ComputeObs) {
+        if o.ms.is_nan() || o.ms < 0.0 {
+            return;
+        }
+        self.stage_ms
+            .entry((o.device, o.decode))
+            .or_insert_with(|| Ewma::new(self.alpha))
+            .observe(o.ms);
+    }
+
+    /// Current bandwidth estimate for the (symmetric) link `a↔b`.
+    pub fn link_estimate_mbps(&self, a: usize, b: usize) -> Option<f64> {
+        self.link_inv
+            .get(&(a.min(b), a.max(b)))
+            .and_then(|e| e.get())
+            .map(|ms_per_bit| 1.0 / (ms_per_bit * 1e3))
+    }
+
+    /// Observed per-iteration compute for `device` (decode phase).
+    pub fn stage_estimate_ms(&self, device: usize, decode: bool) -> Option<f64> {
+        self.stage_ms.get(&(device, decode)).and_then(|e| e.get())
+    }
+
+    /// Prior beliefs the monitor was constructed with.
+    pub fn base(&self) -> &Cluster {
+        &self.base
+    }
+
+    /// The cluster as currently observed: prior beliefs overridden by
+    /// every link estimate the traffic has produced.
+    pub fn observed_cluster(&self) -> Cluster {
+        let mut c = self.base.clone();
+        for &(a, b) in self.link_inv.keys() {
+            if let Some(mbps) = self.link_estimate_mbps(a, b) {
+                c.set_bandwidth(a, b, mbps.max(crate::adaptive::dynamics::MIN_MBPS));
+            }
+        }
+        c
+    }
+
+    /// Observed traces: `base` with each planned device's compute columns
+    /// scaled by (observed stage ms / predicted stage ms) and the
+    /// workload-averaged column rebuilt.  Devices without observations
+    /// keep their profiled values.
+    pub fn observed_traces(&self, base: &ProfiledTraces, plan: &Plan) -> ProfiledTraces {
+        let mut t = base.clone();
+        let mut scales: HashMap<usize, (f64, f64)> = HashMap::new();
+        for s in &plan.stages {
+            let dev = s.device;
+            if scales.contains_key(&dev) {
+                continue;
+            }
+            let decode_scale = self
+                .stage_estimate_ms(dev, true)
+                .map(|obs| {
+                    let pred = base.range_decode_ms(s.start, s.end, dev);
+                    if pred > 1e-9 {
+                        obs / pred
+                    } else {
+                        1.0
+                    }
+                })
+                .unwrap_or(1.0);
+            let prefill_scale = self
+                .stage_estimate_ms(dev, false)
+                .map(|obs| {
+                    let pred = base.range_prefill_ms(s.start, s.end, dev);
+                    if pred > 1e-9 {
+                        obs / pred
+                    } else {
+                        1.0
+                    }
+                })
+                .unwrap_or(1.0);
+            scales.insert(dev, (prefill_scale, decode_scale));
+        }
+        if scales.is_empty() {
+            return t;
+        }
+        let iters = t.workload.iterations().max(1) as f64;
+        for i in 0..t.n_layers {
+            for (&dev, &(ps, ds)) in &scales {
+                t.prefill_ms[i][dev] *= ps;
+                t.decode_ms[i][dev] *= ds;
+                t.avg_ms[i][dev] =
+                    (t.prefill_ms[i][dev] + (iters - 1.0) * t.decode_ms[i][dev]) / iters;
+            }
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::model::llama2_7b;
+    use crate::planner::{PlanObjective, Stage};
+    use crate::profiler::{AnalyticProfiler, Workload};
+
+    #[test]
+    fn ewma_converges_to_constant() {
+        let mut e = Ewma::new(0.3);
+        assert_eq!(e.get(), None);
+        for _ in 0..50 {
+            e.observe(42.0);
+        }
+        assert!((e.get().unwrap() - 42.0).abs() < 1e-9);
+        assert_eq!(e.samples(), 50);
+    }
+
+    #[test]
+    fn ewma_tracks_level_shift_geometrically() {
+        let mut e = Ewma::new(0.5);
+        e.observe(100.0);
+        for _ in 0..10 {
+            e.observe(10.0);
+        }
+        // after 10 half-weight steps the old level is ~90/1024 away
+        assert!((e.get().unwrap() - 10.0).abs() < 0.1);
+        // and a fresh shift moves halfway in one step
+        e.observe(20.0);
+        assert!((e.get().unwrap() - 15.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn ewma_ignores_non_finite() {
+        let mut e = Ewma::new(0.5);
+        e.observe(f64::NAN);
+        e.observe(f64::INFINITY);
+        assert_eq!(e.get(), None);
+        e.observe(5.0);
+        assert_eq!(e.get(), Some(5.0));
+    }
+
+    fn obs(from: usize, to: usize, bytes: u64, sim_ms: f64) -> TransferObs {
+        TransferObs {
+            from,
+            to,
+            bytes,
+            sim_ms,
+        }
+    }
+
+    #[test]
+    fn link_estimate_recovers_bandwidth() {
+        let mut c = presets::tiny_demo(0);
+        c.set_latency(0, 1, 0.5);
+        let (mut m, _h) = Monitor::new(c, 0.5);
+        // 100 KB in 8.5 sim ms minus 0.5 latency → 100 Mbps
+        for _ in 0..8 {
+            m.ingest_transfer(obs(0, 1, 100_000, 8.5));
+        }
+        let est = m.link_estimate_mbps(0, 1).unwrap();
+        assert!((est - 100.0).abs() < 5.0, "est={est}");
+        // symmetric lookup
+        assert!(m.link_estimate_mbps(1, 0).is_some());
+        assert!(m.link_estimate_mbps(0, 2).is_none());
+    }
+
+    #[test]
+    fn bandwidth_drop_detected_within_a_few_frames() {
+        // 1 KB frames: healthy link delivers in ~0.008 ms (1000 Mbps),
+        // then the link collapses to ~0.4 Mbps (20.5 ms per frame).
+        // Because the monitor averages ms-per-bit, two collapsed frames
+        // must drag the estimate below 1 Mbps.
+        let mut c = presets::tiny_demo(0);
+        c.set_latency(0, 1, 0.5);
+        let (mut m, _h) = Monitor::new(c, 0.5);
+        for _ in 0..20 {
+            m.ingest_transfer(obs(0, 1, 1000, 0.508));
+        }
+        let healthy = m.link_estimate_mbps(0, 1).unwrap();
+        assert!(healthy > 100.0, "healthy={healthy}");
+        for _ in 0..2 {
+            m.ingest_transfer(obs(0, 1, 1000, 21.0));
+        }
+        let degraded = m.link_estimate_mbps(0, 1).unwrap();
+        assert!(degraded < 1.0, "degraded={degraded}");
+    }
+
+    #[test]
+    fn tiny_frames_and_self_links_ignored() {
+        let c = presets::tiny_demo(0);
+        let (mut m, _h) = Monitor::new(c, 0.5);
+        m.ingest_transfer(obs(0, 1, 32, 0.6)); // below min_sample_bytes
+        m.ingest_transfer(obs(1, 1, 1 << 20, 4.0)); // self link
+        assert!(m.link_estimate_mbps(0, 1).is_none());
+    }
+
+    #[test]
+    fn observed_cluster_overrides_only_measured_links() {
+        let mut base = presets::tiny_demo(0);
+        base.set_latency(0, 1, 0.0);
+        let before_02 = base.bandwidth_mbps[0][2];
+        let (mut m, _h) = Monitor::new(base, 0.5);
+        // measure 0↔1 at ~2 Mbps (1 KB in 4 sim ms)
+        for _ in 0..10 {
+            m.ingest_transfer(obs(0, 1, 1000, 4.0));
+        }
+        let oc = m.observed_cluster();
+        assert!((oc.bandwidth_mbps[0][1] - 2.0).abs() < 0.3, "est={}", oc.bandwidth_mbps[0][1]);
+        assert_eq!(oc.bandwidth_mbps[0][2], before_02);
+    }
+
+    #[test]
+    fn drain_pulls_from_handles() {
+        let c = presets::tiny_demo(0);
+        let (mut m, h) = Monitor::new(c, 0.5);
+        h.transfer.send(obs(0, 1, 10_000, 2.0)).unwrap();
+        h.compute
+            .send(ComputeObs {
+                device: 1,
+                stage: 1,
+                decode: true,
+                ms: 3.0,
+            })
+            .unwrap();
+        assert_eq!(m.drain(), 2);
+        assert!(m.link_estimate_mbps(0, 1).is_some());
+        assert_eq!(m.stage_estimate_ms(1, true), Some(3.0));
+    }
+
+    #[test]
+    fn observed_traces_scale_planned_devices() {
+        let cluster = presets::paper_testbed(1.0, 0);
+        let base =
+            AnalyticProfiler::default().profile(&llama2_7b(), &cluster, Workload::paper_default());
+        let (mut m, _h) = Monitor::new(cluster, 0.5);
+        let plan = Plan {
+            objective: PlanObjective::Latency,
+            stages: vec![
+                Stage { device: 0, start: 0, end: 10 },
+                Stage { device: 3, start: 10, end: base.n_layers },
+            ],
+            predicted_ms: 0.0,
+        };
+        // device 3 decodes 2× slower than profiled
+        let pred = base.range_decode_ms(10, base.n_layers, 3);
+        m.ingest_compute(ComputeObs {
+            device: 3,
+            stage: 1,
+            decode: true,
+            ms: pred * 2.0,
+        });
+        let t = m.observed_traces(&base, &plan);
+        let ratio = t.range_decode_ms(10, t.n_layers, 3) / pred;
+        assert!((ratio - 2.0).abs() < 1e-6, "ratio={ratio}");
+        // unobserved device unchanged
+        assert_eq!(t.decode_ms[5][7], base.decode_ms[5][7]);
+        // avg rebuilt consistently: avg = (prefill + (iters-1)*decode)/iters
+        let iters = t.workload.iterations() as f64;
+        let want = (t.prefill_ms[12][3] + (iters - 1.0) * t.decode_ms[12][3]) / iters;
+        assert!((t.avg_ms[12][3] - want).abs() < 1e-9);
+    }
+}

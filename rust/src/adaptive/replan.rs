@@ -1,0 +1,398 @@
+//! Trigger policy + live re-solve: when the observed state has drifted
+//! past a hysteresis band, re-run the paper's DP planners on the
+//! *observed* cluster/traces and emit a migration diff.
+//!
+//! Invariants (property-tested in `tests/adaptive_replan.rs`):
+//!
+//! * every emitted plan passes [`crate::planner::validate_plan`] on the
+//!   observed state;
+//! * an emitted plan is never predicted-worse than keeping the current
+//!   plan on that same observed state (by at least the hysteresis
+//!   factor), so the engine cannot be talked into a regression by its own
+//!   replanner.
+
+use crate::cluster::Cluster;
+use crate::planner::latency::algo1;
+use crate::planner::throughput::algo2_classes;
+use crate::planner::{
+    pipeline_bottleneck_ms, sequential_latency_ms, validate_plan, Plan, PlanObjective,
+};
+use crate::profiler::ProfiledTraces;
+use std::collections::HashMap;
+
+/// When to abandon the current plan.
+#[derive(Debug, Clone)]
+pub struct TriggerPolicy {
+    /// Consider replanning only once the current plan's predicted metric
+    /// on the *observed* state exceeds `degrade_factor ×` its adopted
+    /// baseline (the band that absorbs measurement noise).
+    pub degrade_factor: f64,
+    /// Migrate only if the candidate beats the current plan on the
+    /// observed state by at least this factor (`cand × improve ≤ cur`) —
+    /// the hysteresis that prevents plan flapping.
+    pub improve_factor: f64,
+    /// Cooldown between migrations, simulated ms.
+    pub min_interval_ms: f64,
+}
+
+impl Default for TriggerPolicy {
+    fn default() -> Self {
+        TriggerPolicy {
+            degrade_factor: 1.4,
+            improve_factor: 1.15,
+            min_interval_ms: 0.0,
+        }
+    }
+}
+
+/// A contiguous run of layers changing device.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageMove {
+    /// Model layers `[layer_lo, layer_hi)` moving.
+    pub layer_lo: usize,
+    pub layer_hi: usize,
+    pub from: usize,
+    pub to: usize,
+    /// KV bytes that must cross `from → to` for these layers.
+    pub kv_bytes: u64,
+}
+
+/// The layer-wise diff between two plans, with KV freight.
+#[derive(Debug, Clone, Default)]
+pub struct MigrationDiff {
+    pub moves: Vec<StageMove>,
+    pub total_kv_bytes: u64,
+}
+
+impl MigrationDiff {
+    pub fn is_empty(&self) -> bool {
+        self.moves.is_empty()
+    }
+
+    /// Predicted stall while KV state crosses the network: per-link
+    /// freight is serialized, distinct links transfer in parallel, so the
+    /// pause is the slowest link's delivery time on `cluster`.
+    pub fn pause_ms(&self, cluster: &Cluster) -> f64 {
+        let mut per_link: HashMap<(usize, usize), u64> = HashMap::new();
+        for m in &self.moves {
+            *per_link.entry((m.from, m.to)).or_insert(0) += m.kv_bytes;
+        }
+        per_link
+            .iter()
+            .map(|(&(f, t), &bytes)| cluster.comm_ms(f, t, bytes))
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Layer-wise diff of `old → new`: which layers change device and how
+/// many KV bytes ride along (`kv_bytes_per_seq[layer] × batch`; layers
+/// without KV — embedding, head — move for free).
+pub fn migration_diff(
+    old: &Plan,
+    new: &Plan,
+    kv_bytes_per_seq: &[u64],
+    batch: usize,
+) -> MigrationDiff {
+    let mut moves: Vec<StageMove> = Vec::new();
+    let mut total = 0u64;
+    for (layer, &kv_per_seq) in kv_bytes_per_seq.iter().enumerate() {
+        let (Some(od), Some(nd)) = (old.device_of_layer(layer), new.device_of_layer(layer)) else {
+            continue;
+        };
+        if od == nd {
+            continue;
+        }
+        let kv = kv_per_seq * batch as u64;
+        total += kv;
+        match moves.last_mut() {
+            Some(m) if m.layer_hi == layer && m.from == od && m.to == nd => {
+                m.layer_hi = layer + 1;
+                m.kv_bytes += kv;
+            }
+            _ => moves.push(StageMove {
+                layer_lo: layer,
+                layer_hi: layer + 1,
+                from: od,
+                to: nd,
+                kv_bytes: kv,
+            }),
+        }
+    }
+    MigrationDiff {
+        moves,
+        total_kv_bytes: total,
+    }
+}
+
+/// What the replanner concluded this round.
+#[derive(Debug, Clone)]
+pub enum Decision {
+    /// Stay on the current plan (its predicted metric on the observed
+    /// state is attached for telemetry).
+    Keep { current_pred_ms: f64 },
+    /// Abandon ship: adopt `plan`, moving the KV freight in `diff`.
+    Migrate {
+        plan: Plan,
+        diff: MigrationDiff,
+        current_pred_ms: f64,
+        candidate_pred_ms: f64,
+    },
+}
+
+/// The live re-solver.
+pub struct Replanner {
+    pub objective: PlanObjective,
+    pub policy: TriggerPolicy,
+    /// Batch used for memory accounting and KV freight.
+    pub batch: usize,
+    /// The current plan's predicted metric at adoption time — the
+    /// reference the degrade trigger compares against.
+    baseline_ms: f64,
+    last_migrate_ms: f64,
+    evaluations: u64,
+    triggers: u64,
+}
+
+impl Replanner {
+    pub fn new(
+        objective: PlanObjective,
+        policy: TriggerPolicy,
+        batch: usize,
+        baseline_ms: f64,
+    ) -> Self {
+        Replanner {
+            objective,
+            policy,
+            batch: batch.max(1),
+            baseline_ms,
+            last_migrate_ms: f64::NEG_INFINITY,
+            evaluations: 0,
+            triggers: 0,
+        }
+    }
+
+    /// The objective-matched plan evaluator (independent of the DPs).
+    pub fn predict_ms(&self, plan: &Plan, traces: &ProfiledTraces, cluster: &Cluster) -> f64 {
+        match self.objective {
+            PlanObjective::Latency => sequential_latency_ms(plan, traces, cluster),
+            PlanObjective::Throughput => pipeline_bottleneck_ms(plan, traces, cluster),
+        }
+    }
+
+    pub fn baseline_ms(&self) -> f64 {
+        self.baseline_ms
+    }
+
+    pub fn evaluations(&self) -> u64 {
+        self.evaluations
+    }
+
+    pub fn triggers(&self) -> u64 {
+        self.triggers
+    }
+
+    /// Record that a migration to a plan with observed prediction
+    /// `new_baseline_ms` actually happened at `now_ms`.
+    pub fn adopt(&mut self, new_baseline_ms: f64, now_ms: f64) {
+        self.baseline_ms = new_baseline_ms;
+        self.last_migrate_ms = now_ms;
+    }
+
+    /// One control-loop round: compare the current plan's prediction on
+    /// the observed state against its baseline, and if it degraded past
+    /// the band, try to find a plan that is decisively better *on that
+    /// same observed state*.
+    pub fn evaluate(
+        &mut self,
+        current: &Plan,
+        traces: &ProfiledTraces,
+        cluster: &Cluster,
+        now_ms: f64,
+    ) -> Decision {
+        self.evaluations += 1;
+        let cur = self.predict_ms(current, traces, cluster);
+        let keep = Decision::Keep {
+            current_pred_ms: cur,
+        };
+        if now_ms - self.last_migrate_ms < self.policy.min_interval_ms {
+            return keep;
+        }
+        if cur <= self.policy.degrade_factor * self.baseline_ms {
+            return keep;
+        }
+        let pool: Vec<usize> = (0..cluster.len()).collect();
+        let cand = match self.objective {
+            PlanObjective::Latency => algo1(traces, cluster, &pool, self.batch),
+            PlanObjective::Throughput => algo2_classes(traces, cluster, &pool, self.batch),
+        };
+        let Ok(cand) = cand else { return keep };
+        if cand.stages == current.stages {
+            return keep;
+        }
+        let cand_pred = self.predict_ms(&cand, traces, cluster);
+        if cand_pred * self.policy.improve_factor > cur
+            || validate_plan(&cand, traces, cluster, self.batch).is_err()
+        {
+            return keep;
+        }
+        self.triggers += 1;
+        let diff = migration_diff(current, &cand, &traces.kv_bytes_per_seq, self.batch);
+        Decision::Migrate {
+            plan: cand,
+            diff,
+            current_pred_ms: cur,
+            candidate_pred_ms: cand_pred,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::model::llama2_7b;
+    use crate::planner::{Planner, Stage};
+    use crate::profiler::{AnalyticProfiler, Workload};
+
+    fn setup() -> (ProfiledTraces, Cluster, Plan) {
+        let cluster = presets::paper_testbed(50.0, 0);
+        let traces = AnalyticProfiler::default().profile(
+            &llama2_7b(),
+            &cluster,
+            Workload::paper_default(),
+        );
+        let plan = crate::planner::LatencyDp::new().plan(&traces, &cluster).unwrap();
+        (traces, cluster, plan)
+    }
+
+    #[test]
+    fn keeps_inside_hysteresis_band() {
+        let (traces, cluster, plan) = setup();
+        let baseline = sequential_latency_ms(&plan, &traces, &cluster);
+        let mut r = Replanner::new(
+            PlanObjective::Latency,
+            TriggerPolicy::default(),
+            1,
+            baseline,
+        );
+        // unchanged observed state → keep, forever
+        for _ in 0..5 {
+            assert!(matches!(
+                r.evaluate(&plan, &traces, &cluster, 0.0),
+                Decision::Keep { .. }
+            ));
+        }
+        assert_eq!(r.triggers(), 0);
+    }
+
+    #[test]
+    fn migrates_after_bottleneck_link_degrades() {
+        let (traces, mut cluster, plan) = setup();
+        let baseline = sequential_latency_ms(&plan, &traces, &cluster);
+        let mut r = Replanner::new(
+            PlanObjective::Latency,
+            TriggerPolicy::default(),
+            1,
+            baseline,
+        );
+        // strangle every link the current plan uses
+        let devs = plan.devices();
+        for w in devs.windows(2) {
+            cluster.set_bandwidth(w[0], w[1], 0.2);
+        }
+        match r.evaluate(&plan, &traces, &cluster, 0.0) {
+            Decision::Migrate {
+                plan: cand,
+                current_pred_ms,
+                candidate_pred_ms,
+                ..
+            } => {
+                validate_plan(&cand, &traces, &cluster, 1).unwrap();
+                assert!(candidate_pred_ms < current_pred_ms);
+                assert_ne!(cand.stages, plan.stages);
+            }
+            Decision::Keep { .. } => panic!("expected migration"),
+        }
+    }
+
+    #[test]
+    fn cooldown_suppresses_back_to_back_migrations() {
+        let (traces, mut cluster, plan) = setup();
+        let baseline = sequential_latency_ms(&plan, &traces, &cluster);
+        let policy = TriggerPolicy {
+            min_interval_ms: 500.0,
+            ..TriggerPolicy::default()
+        };
+        let mut r = Replanner::new(PlanObjective::Latency, policy, 1, baseline);
+        let devs = plan.devices();
+        for w in devs.windows(2) {
+            cluster.set_bandwidth(w[0], w[1], 0.2);
+        }
+        let d1 = r.evaluate(&plan, &traces, &cluster, 0.0);
+        assert!(matches!(d1, Decision::Migrate { .. }));
+        r.adopt(1.0, 0.0);
+        // still degraded (we did not actually switch plans), but inside
+        // the cooldown window nothing fires…
+        assert!(matches!(
+            r.evaluate(&plan, &traces, &cluster, 100.0),
+            Decision::Keep { .. }
+        ));
+        // …and after the cooldown it may fire again
+        assert!(matches!(
+            r.evaluate(&plan, &traces, &cluster, 600.0),
+            Decision::Migrate { .. }
+        ));
+    }
+
+    #[test]
+    fn diff_merges_contiguous_runs_and_counts_kv() {
+        let mk = |stages: Vec<Stage>| Plan {
+            objective: PlanObjective::Latency,
+            stages,
+            predicted_ms: 0.0,
+        };
+        let old = mk(vec![
+            Stage { device: 0, start: 0, end: 3 },
+            Stage { device: 1, start: 3, end: 6 },
+        ]);
+        let new = mk(vec![
+            Stage { device: 0, start: 0, end: 3 },
+            Stage { device: 2, start: 3, end: 6 },
+        ]);
+        let kv = vec![0, 10, 10, 10, 10, 0]; // embed/head carry no KV
+        let diff = migration_diff(&old, &new, &kv, 4);
+        assert_eq!(diff.moves.len(), 1);
+        let m = &diff.moves[0];
+        assert_eq!((m.layer_lo, m.layer_hi, m.from, m.to), (3, 6, 1, 2));
+        // layers 3,4 carry 10×4 bytes each, layer 5 (head) carries none
+        assert_eq!(diff.total_kv_bytes, 80);
+        assert_eq!(m.kv_bytes, 80);
+    }
+
+    #[test]
+    fn pause_parallel_links_take_max() {
+        let mut cluster = presets::tiny_demo(0);
+        cluster.set_bandwidth(0, 1, 8.0);
+        cluster.set_bandwidth(1, 2, 8.0);
+        cluster.set_latency(0, 1, 0.0);
+        cluster.set_latency(1, 2, 0.0);
+        let diff = MigrationDiff {
+            moves: vec![
+                StageMove { layer_lo: 1, layer_hi: 2, from: 0, to: 1, kv_bytes: 1_000_000 },
+                StageMove { layer_lo: 3, layer_hi: 4, from: 1, to: 2, kv_bytes: 500_000 },
+            ],
+            total_kv_bytes: 1_500_000,
+        };
+        // 1 MB at 8 Mbps = 1000 ms on link 0→1; the 0.5 MB on 1→2 overlaps
+        let pause = diff.pause_ms(&cluster);
+        assert!((pause - 1000.0).abs() < 1e-6, "pause={pause}");
+    }
+
+    #[test]
+    fn empty_diff_for_identical_plans() {
+        let (traces, _cluster, plan) = setup();
+        let diff = migration_diff(&plan, &plan, &traces.kv_bytes_per_seq, 1);
+        assert!(diff.is_empty());
+        assert_eq!(diff.total_kv_bytes, 0);
+    }
+}

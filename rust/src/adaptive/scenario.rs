@@ -1,0 +1,327 @@
+//! Canned adaptive-runtime experiments, shared by the integration tests,
+//! the `adaptive_recovery` example and `edgeshard repro adaptive`.
+//!
+//! The flagship scenario is [`link_drop_scenario`]: a 3-device edge
+//! cluster serves batched generation over a fast source↔worker link;
+//! mid-generation the link collapses (e.g. 1000 → 0.4 Mbps).  The same
+//! trace is served three times:
+//!
+//! 1. **adaptive** — monitors its own timings, detects the collapse,
+//!    re-plans onto the healthy device, migrates KV caches over the
+//!    still-fast link, and keeps decoding;
+//! 2. **static + dynamics** — the paper's one-shot plan, suffering the
+//!    collapsed link for every remaining iteration;
+//! 3. **static, clean network** — the control: dynamics disabled must
+//!    leave the static engine's numbers (and tokens) untouched.
+//!
+//! All three must produce byte-identical token streams — migration moves
+//! KV tensors, never changes math — which is the scenario's correctness
+//! anchor, while tokens/s and p95 inter-token latency are its performance
+//! verdict.
+
+use anyhow::{Context, Result};
+use std::sync::{Arc, Mutex};
+
+use super::dynamics::{DynamicsDriver, NetworkDynamics, ScheduleShape};
+use super::engine::{AdaptiveConfig, AdaptiveEngine, MigrationRecord};
+use crate::cluster::{Cluster, Device, DeviceClass, LiveCluster};
+use crate::coordinator::api::{GenResult, GroupRequest};
+use crate::coordinator::{Engine, EngineConfig};
+use crate::planner::latency::algo1;
+use crate::planner::Plan;
+use crate::profiler::Workload;
+use crate::runtime::manifest::ManifestConfig;
+use crate::runtime::{ExecService, Manifest, MeasuredProfiler, WeightStore};
+use crate::util::markdown_table;
+
+/// Scenario knobs (defaults are what the e2e test runs).
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    pub max_new_tokens: usize,
+    pub batch: usize,
+    /// When the bottleneck link collapses, simulated ms after serving
+    /// starts.
+    pub drop_at_ms: f64,
+    pub drop_to_mbps: f64,
+    pub time_scale: f64,
+    pub seed: u64,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            max_new_tokens: 96,
+            batch: 8,
+            drop_at_ms: 120.0,
+            drop_to_mbps: 0.4,
+            time_scale: 1.0,
+            seed: 0,
+        }
+    }
+}
+
+/// One engine run, summarized.
+#[derive(Debug)]
+pub struct RunSummary {
+    pub label: String,
+    pub tokens_per_s: f64,
+    pub p95_iter_ms: f64,
+    pub makespan_ms: f64,
+    pub results: Vec<GenResult>,
+}
+
+impl RunSummary {
+    /// Token rows sorted by request id (the cross-run comparison key).
+    pub fn token_rows(&self) -> Vec<Vec<i32>> {
+        let mut rs: Vec<&GenResult> = self.results.iter().collect();
+        rs.sort_by_key(|r| r.id);
+        rs.iter().map(|r| r.tokens.clone()).collect()
+    }
+}
+
+/// Everything the link-drop experiment produced.
+#[derive(Debug)]
+pub struct ScenarioReport {
+    pub initial_plan: String,
+    pub adaptive: RunSummary,
+    pub static_dynamic: RunSummary,
+    pub static_clean: RunSummary,
+    pub migrations: Vec<MigrationRecord>,
+    pub replan_evaluations: u64,
+    pub final_plan: String,
+}
+
+/// The tiny-but-fast model config the scenarios run (small enough that
+/// debug-build compute stays well under the simulated network costs).
+fn mini_config() -> ManifestConfig {
+    ManifestConfig {
+        name: "tinyllama-mini-sim".into(),
+        vocab_size: 64,
+        d_model: 32,
+        n_layers: 4,
+        n_heads: 2,
+        n_kv_heads: 2,
+        d_ff: 64,
+        max_seq: 128,
+        prefill_len: 16,
+        layer_param_order: [
+            "attn_norm", "wq", "wk", "wv", "wo", "ffn_norm", "w_gate", "w_up", "w_down",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect(),
+    }
+}
+
+/// The scenario's 3-device cluster: the source (d0), the initially
+/// preferred worker (d1, fast 1000 Mbps link) and the alternative (d2,
+/// 300 Mbps links).  Memory budgets are sized so no single device can
+/// host the whole model — partitioning is forced, exactly the regime the
+/// paper targets.
+fn mini_cluster(manifest: &Manifest, workload: Workload) -> Cluster {
+    let model = crate::model::tiny_from_manifest(manifest);
+    let total = model.range_memory_bytes(0, model.n_layers(), workload.batch);
+    let budget = (total as f64 * 0.6) as u64;
+    let devices = vec![
+        Device::with_usable_mem(0, DeviceClass::agx_orin(), budget),
+        Device::with_usable_mem(1, DeviceClass::agx_orin(), budget),
+        Device::with_usable_mem(2, DeviceClass::agx_orin(), budget),
+    ];
+    let mut c = Cluster::new(devices, 300.0, 3.0);
+    c.set_bandwidth(0, 1, 1000.0);
+    c
+}
+
+fn mini_group(cfg: &ScenarioConfig, vocab: usize, prompt_len: usize) -> GroupRequest {
+    let mut tokens = Vec::with_capacity(cfg.batch * prompt_len);
+    for r in 0..cfg.batch {
+        for i in 0..prompt_len {
+            tokens.push(((i * 7 + r * 13 + cfg.seed as usize) % vocab) as i32);
+        }
+    }
+    GroupRequest {
+        group_id: 1,
+        request_ids: (1..=cfg.batch as u64).collect(),
+        tokens,
+        batch: cfg.batch,
+        prompt_len,
+        max_new_tokens: cfg.max_new_tokens,
+    }
+}
+
+fn summarize(
+    label: &str,
+    results: Vec<GenResult>,
+    tokens: u64,
+    makespan_ms: f64,
+    iter_latency: &mut crate::metrics::Histogram,
+) -> RunSummary {
+    RunSummary {
+        label: label.to_string(),
+        tokens_per_s: if makespan_ms > 0.0 {
+            tokens as f64 / (makespan_ms / 1e3)
+        } else {
+            0.0
+        },
+        p95_iter_ms: iter_latency.percentile(95.0),
+        makespan_ms,
+        results,
+    }
+}
+
+/// Run the mid-generation link-drop experiment; see the module docs.
+pub fn link_drop_scenario(cfg: &ScenarioConfig) -> Result<ScenarioReport> {
+    let manifest = Manifest::synthetic(mini_config(), vec![1, cfg.batch]);
+    let weights = WeightStore::synthetic(&manifest, cfg.seed);
+    let (_svc, exec) = ExecService::start_sim(&manifest)?;
+
+    let workload = Workload {
+        prompt_len: manifest.config.prefill_len,
+        gen_len: cfg.max_new_tokens,
+        batch: cfg.batch,
+    };
+    let cluster = mini_cluster(&manifest, workload);
+
+    // offline profiling through the very backend that will serve
+    let mut profiler = MeasuredProfiler::new(&manifest, &weights, exec.clone());
+    profiler.reps = 2;
+    let traces = profiler.profile(&cluster, workload)?;
+
+    let pool: Vec<usize> = (0..cluster.len()).collect();
+    let plan: Plan = algo1(&traces, &cluster, &pool, cfg.batch)
+        .map_err(|e| anyhow::anyhow!("initial planning failed: {e}"))?;
+    let initial_plan = plan.describe();
+
+    let dynamics = NetworkDynamics::new().link(
+        0,
+        1,
+        ScheduleShape::Step {
+            at_ms: cfg.drop_at_ms,
+            before_mbps: 1000.0,
+            after_mbps: cfg.drop_to_mbps,
+        },
+    );
+    let group = mini_group(cfg, manifest.config.vocab_size, manifest.config.prefill_len);
+    let engine_cfg = EngineConfig {
+        time_scale: cfg.time_scale,
+        ..EngineConfig::default()
+    };
+
+    // 1. adaptive engine under dynamics
+    let adaptive_cfg = AdaptiveConfig {
+        engine: engine_cfg.clone(),
+        dynamics: Some(dynamics.clone()),
+        dynamics_tick_real_ms: 4.0,
+        max_migrations: 2,
+        ..AdaptiveConfig::default()
+    };
+    let mut adaptive_engine = AdaptiveEngine::new(
+        &manifest,
+        &weights,
+        exec.clone(),
+        plan.clone(),
+        cluster.clone(),
+        traces.clone(),
+        adaptive_cfg,
+    );
+    let (a_results, mut a_stats) = adaptive_engine
+        .generate_sequential(std::slice::from_ref(&group))
+        .context("adaptive run")?;
+    let adaptive = summarize(
+        "adaptive",
+        a_results,
+        a_stats.tokens,
+        a_stats.makespan_ms,
+        &mut a_stats.iter_latency,
+    );
+
+    // 2. static plan under the same dynamics
+    let s_engine =
+        Engine::build(&manifest, &weights, exec.clone(), &plan, &cluster, &engine_cfg)?;
+    let links = Arc::new(Mutex::new(s_engine.routed_links()));
+    let driver = DynamicsDriver::spawn(
+        dynamics.clone(),
+        LiveCluster::new(cluster.clone()),
+        links,
+        cfg.time_scale,
+        4.0,
+    );
+    let (s_results, mut s_stats) = s_engine
+        .generate_sequential(std::slice::from_ref(&group))
+        .context("static run under dynamics")?;
+    driver.stop();
+    s_engine.shutdown()?;
+    let static_dynamic = summarize(
+        "static+drop",
+        s_results,
+        s_stats.tokens,
+        s_stats.makespan_ms,
+        &mut s_stats.iter_latency,
+    );
+
+    // 3. static plan, dynamics disabled (the control)
+    let c_engine =
+        Engine::build(&manifest, &weights, exec.clone(), &plan, &cluster, &engine_cfg)?;
+    let (c_results, mut c_stats) = c_engine
+        .generate_sequential(std::slice::from_ref(&group))
+        .context("static clean run")?;
+    c_engine.shutdown()?;
+    let static_clean = summarize(
+        "static+clean",
+        c_results,
+        c_stats.tokens,
+        c_stats.makespan_ms,
+        &mut c_stats.iter_latency,
+    );
+
+    Ok(ScenarioReport {
+        initial_plan,
+        adaptive,
+        static_dynamic,
+        static_clean,
+        migrations: a_stats.migrations,
+        replan_evaluations: a_stats.replan_evaluations,
+        final_plan: a_stats.final_plan,
+    })
+}
+
+/// Render the report as the markdown `edgeshard repro adaptive` emits.
+pub fn report_markdown(r: &ScenarioReport) -> String {
+    let mut out = String::new();
+    out.push_str("# Adaptive recovery — mid-generation bandwidth drop\n\n");
+    out.push_str(&format!("initial plan: `{}`\n", r.initial_plan));
+    out.push_str(&format!("final plan:   `{}`\n\n", r.final_plan));
+    let rows: Vec<Vec<String>> = [&r.adaptive, &r.static_dynamic, &r.static_clean]
+        .iter()
+        .map(|s| {
+            vec![
+                s.label.clone(),
+                format!("{:.1}", s.tokens_per_s),
+                format!("{:.2}", s.p95_iter_ms),
+                format!("{:.0}", s.makespan_ms),
+            ]
+        })
+        .collect();
+    out.push_str(&markdown_table(
+        &["engine", "tokens/s", "p95 inter-token (ms)", "makespan (ms)"],
+        &rows,
+    ));
+    out.push('\n');
+    for m in &r.migrations {
+        out.push_str(&format!(
+            "migration @token {}: `{}` → `{}` ({} KV bytes, {:.1} ms pause)\n",
+            m.at_iter,
+            m.from_plan,
+            m.to_plan,
+            m.kv_bytes,
+            m.pause_ms
+        ));
+    }
+    out.push_str(&format!(
+        "\nreplan evaluations: {}; tokens identical across engines: {}\n",
+        r.replan_evaluations,
+        r.adaptive.token_rows() == r.static_dynamic.token_rows()
+            && r.adaptive.token_rows() == r.static_clean.token_rows()
+    ));
+    out
+}

@@ -5,7 +5,9 @@
 //! Orin NX, 1× RTX 3090 cloud server, 1000 Mbps LAN, with Linux TC used to
 //! shape individual links (here: [`Cluster::set_bandwidth`]).
 
+use crate::netsim::LinkSpec;
 use crate::util::Rng;
+use std::sync::{Arc, RwLock};
 
 /// A hardware class (Table III plus memory-bandwidth, which governs
 /// memory-bound decode — see DESIGN.md).
@@ -132,25 +134,43 @@ impl Cluster {
     }
 
     /// Shape one (symmetric) link — the Linux-TC analogue.
+    ///
+    /// Bandwidth must be a positive rate (infinite is allowed for
+    /// same-device links): zero, negative or NaN values would silently
+    /// poison every downstream latency computation, so they are rejected
+    /// here.  Model a *down* link as a very small positive rate instead.
     pub fn set_bandwidth(&mut self, a: usize, b: usize, mbps: f64) {
+        assert!(
+            mbps > 0.0 && !mbps.is_nan(),
+            "link {a}<->{b}: bandwidth must be positive, got {mbps} Mbps"
+        );
         self.bandwidth_mbps[a][b] = mbps;
         self.bandwidth_mbps[b][a] = mbps;
     }
 
     pub fn set_latency(&mut self, a: usize, b: usize, ms: f64) {
+        assert!(
+            ms >= 0.0 && ms.is_finite(),
+            "link {a}<->{b}: latency must be finite and non-negative, got {ms} ms"
+        );
         self.latency_ms[a][b] = ms;
         self.latency_ms[b][a] = ms;
     }
 
+    /// The directed link a→b as a [`LinkSpec`].
+    pub fn link(&self, a: usize, b: usize) -> LinkSpec {
+        LinkSpec::new(self.bandwidth_mbps[a][b], self.latency_ms[a][b])
+    }
+
     /// Milliseconds to move `bytes` from device `a` to device `b`
-    /// (zero on the same device, per Eq. (1)).
+    /// (zero on the same device, per Eq. (1)).  Delegates to
+    /// [`LinkSpec::delivery_ms`] so the hardened zero/negative-bandwidth
+    /// semantics live in exactly one place.
     pub fn comm_ms(&self, a: usize, b: usize, bytes: u64) -> f64 {
         if a == b {
             return 0.0;
         }
-        let mbps = self.bandwidth_mbps[a][b];
-        let transfer = bytes as f64 * 8.0 / (mbps * 1e6) * 1e3;
-        transfer + self.latency_ms[a][b]
+        self.link(a, b).delivery_ms(bytes)
     }
 
     /// Apply ±`frac` multiplicative jitter to every edge↔edge link
@@ -174,6 +194,54 @@ impl Cluster {
             .filter(|d| d.class.is_cloud)
             .map(|d| d.id)
             .collect()
+    }
+}
+
+/// A shared, mutable view of a cluster — the ground-truth network state a
+/// [`crate::adaptive::dynamics::DynamicsDriver`] mutates while engines are
+/// serving.  Cloning shares the underlying cluster.
+///
+/// The adaptive runtime's *monitor* never reads this (it reconstructs its
+/// own estimate from transfer/compute timings); the live view exists so
+/// the simulation itself, migration cost charging, and freshly wired
+/// links all agree on what the network currently is.
+#[derive(Debug, Clone)]
+pub struct LiveCluster {
+    inner: Arc<RwLock<Cluster>>,
+}
+
+impl LiveCluster {
+    pub fn new(cluster: Cluster) -> Self {
+        LiveCluster {
+            inner: Arc::new(RwLock::new(cluster)),
+        }
+    }
+
+    /// A point-in-time copy.
+    pub fn snapshot(&self) -> Cluster {
+        self.inner.read().expect("cluster lock poisoned").clone()
+    }
+
+    /// Run a closure against the current state without copying.
+    pub fn with<R>(&self, f: impl FnOnce(&Cluster) -> R) -> R {
+        f(&self.inner.read().expect("cluster lock poisoned"))
+    }
+
+    /// Re-shape one symmetric link (validated like
+    /// [`Cluster::set_bandwidth`]).
+    pub fn set_bandwidth(&self, a: usize, b: usize, mbps: f64) {
+        self.inner
+            .write()
+            .expect("cluster lock poisoned")
+            .set_bandwidth(a, b, mbps);
+    }
+
+    pub fn bandwidth(&self, a: usize, b: usize) -> f64 {
+        self.with(|c| c.bandwidth_mbps[a][b])
+    }
+
+    pub fn comm_ms(&self, a: usize, b: usize, bytes: u64) -> f64 {
+        self.with(|c| c.comm_ms(a, b, bytes))
     }
 }
 
@@ -346,6 +414,46 @@ mod tests {
         let d = Device::new(0, DeviceClass::agx_orin());
         assert!(d.usable_mem_bytes < d.class.mem_bytes);
         assert_eq!(d.usable_mem_bytes, 28 * GB);
+    }
+
+    #[test]
+    #[should_panic(expected = "bandwidth must be positive")]
+    fn zero_bandwidth_rejected() {
+        let mut c = presets::cloud_edge_pair(8.0);
+        c.set_bandwidth(0, 1, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "bandwidth must be positive")]
+    fn nan_bandwidth_rejected() {
+        let mut c = presets::cloud_edge_pair(8.0);
+        c.set_bandwidth(0, 1, f64::NAN);
+    }
+
+    #[test]
+    #[should_panic(expected = "latency must be finite")]
+    fn negative_latency_rejected() {
+        let mut c = presets::cloud_edge_pair(8.0);
+        c.set_latency(0, 1, -1.0);
+    }
+
+    #[test]
+    fn infinite_bandwidth_allowed_comm_free() {
+        let mut c = presets::cloud_edge_pair(8.0);
+        c.set_bandwidth(0, 1, f64::INFINITY);
+        c.set_latency(0, 1, 0.0);
+        assert_eq!(c.comm_ms(0, 1, 1 << 30), 0.0);
+    }
+
+    #[test]
+    fn live_cluster_shares_state() {
+        let live = LiveCluster::new(presets::cloud_edge_pair(8.0));
+        let alias = live.clone();
+        alias.set_bandwidth(0, 1, 64.0);
+        assert_eq!(live.bandwidth(0, 1), 64.0);
+        assert_eq!(live.snapshot().bandwidth_mbps[1][0], 64.0);
+        let t = live.comm_ms(0, 1, 1_000_000);
+        assert!((t - (125.0 + live.snapshot().latency_ms[0][1])).abs() < 1e-6);
     }
 
     #[test]

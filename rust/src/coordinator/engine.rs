@@ -15,14 +15,17 @@
 
 use anyhow::{Context, Result};
 use std::collections::HashMap;
-use std::sync::mpsc::Receiver;
+use std::sync::mpsc::{Receiver, Sender};
 use std::time::Instant;
 
 use super::api::{GenResult, GroupRequest};
+use super::kvcache::GroupCache;
 use super::stage::{NextHop, Payload, Phase, StageActor, StageMsg, TokenMsg};
 use crate::cluster::Cluster;
-use crate::metrics::Histogram;
-use crate::netsim::{shaped_channel, LinkSpec, ShapedSender};
+use crate::metrics::{ComputeObs, Histogram};
+use crate::netsim::{
+    shaped_channel_live, LinkSpec, LiveLink, RoutedLink, ShapedSender, TransferObs,
+};
 use crate::pipeline::Strategy;
 use crate::planner::Plan;
 use crate::runtime::manifest::Manifest;
@@ -63,11 +66,152 @@ pub struct EngineStats {
     pub iter_latency: Histogram,
 }
 
+/// Observation sinks threaded into a wired pipeline — the adaptive
+/// monitor's taps on stage compute and link transfers.
+#[derive(Clone)]
+pub struct ObsSinks {
+    pub compute: Sender<ComputeObs>,
+    pub transfer: Sender<TransferObs>,
+}
+
+/// A fully wired pipeline: stage actor threads connected by live shaped
+/// links.  [`Engine`] wraps one for static serving; the adaptive engine
+/// drives (and at migration, rebuilds) one directly.
+pub struct Wired {
+    pub to_first: ShapedSender<StageMsg>,
+    pub token_rx: Receiver<TokenMsg>,
+    pub handles: Vec<std::thread::JoinHandle<Result<()>>>,
+    /// Inter-device links in use: one ingress link per stage > 0 plus the
+    /// token loopback.  Live — re-shaping them affects in-flight traffic.
+    pub links: Vec<RoutedLink>,
+}
+
+/// Build stage actors for `plan` over `cluster` and connect them with
+/// live shaped links.
+///
+/// `preloads[i]` seeds stage *i*'s KV pool (migration hand-off); shorter
+/// or empty vectors mean no preload.  `obs` taps every stage and link
+/// for the adaptive monitor.
+#[allow(clippy::too_many_arguments)]
+pub fn wire(
+    manifest: &Manifest,
+    weights: &WeightStore,
+    exec: ExecServiceHandle,
+    plan: &Plan,
+    cluster: &Cluster,
+    cfg: &EngineConfig,
+    obs: Option<&ObsSinks>,
+    mut preloads: Vec<Vec<(u64, GroupCache)>>,
+) -> Result<Wired> {
+    let n_model_layers = manifest.config.n_layers + 2;
+    anyhow::ensure!(
+        plan.stages.last().map(|s| s.end) == Some(n_model_layers),
+        "plan covers {:?} layers, model has {n_model_layers}",
+        plan.stages.last().map(|s| s.end)
+    );
+    let s_count = plan.n_stages();
+    let mut links = Vec::new();
+    let transfer_tx = obs.map(|o| o.transfer.clone());
+
+    // token loopback: head device -> source
+    let head_dev = plan.stages.last().unwrap().device;
+    let loop_link = LiveLink::new(cluster.link(head_dev, cluster.source));
+    links.push(RoutedLink {
+        from: head_dev,
+        to: cluster.source,
+        link: loop_link.clone(),
+    });
+    let (token_tx, token_rx) = shaped_channel_live::<TokenMsg>(
+        loop_link,
+        cfg.time_scale,
+        (head_dev, cluster.source),
+        transfer_tx.clone(),
+    );
+
+    // per-stage ingress links: stage i receives over the link
+    // (stage i-1's device) → (stage i's device); stage 0 receives from
+    // the driver, which lives on the source device (free link).
+    let mut receivers: Vec<Option<Receiver<StageMsg>>> = (0..s_count).map(|_| None).collect();
+    let mut senders: Vec<Option<ShapedSender<StageMsg>>> = (0..s_count).map(|_| None).collect();
+    for i in 0..s_count {
+        let (route, spec) = if i == 0 {
+            (
+                (cluster.source, cluster.source),
+                LinkSpec::new(f64::INFINITY, 0.0),
+            )
+        } else {
+            let prev = plan.stages[i - 1].device;
+            let dev = plan.stages[i].device;
+            ((prev, dev), cluster.link(prev, dev))
+        };
+        let live = LiveLink::new(spec);
+        if i > 0 {
+            links.push(RoutedLink {
+                from: route.0,
+                to: route.1,
+                link: live.clone(),
+            });
+        }
+        let (tx, rx) = shaped_channel_live::<StageMsg>(
+            live,
+            cfg.time_scale,
+            route,
+            if i > 0 { transfer_tx.clone() } else { None },
+        );
+        receivers[i] = Some(rx);
+        senders[i] = Some(tx);
+    }
+
+    // spawn actors front to back, threading the "next" hops
+    let mut handles = Vec::with_capacity(s_count);
+    for (i, st) in plan.stages.iter().enumerate() {
+        let next = if i + 1 < s_count {
+            NextHop::Stage(senders[i + 1].clone().unwrap())
+        } else {
+            NextHop::Driver(token_tx.clone())
+        };
+        let pre = if i < preloads.len() {
+            std::mem::take(&mut preloads[i])
+        } else {
+            Vec::new()
+        };
+        let mut actor = StageActor::new(
+            i,
+            st.device,
+            manifest,
+            weights,
+            st.start..st.end,
+            n_model_layers,
+            exec.clone(),
+            cfg.kv_budget_bytes,
+            next,
+            pre,
+        )?;
+        actor.compute_scale = cfg.compute_scale.get(st.device).copied().unwrap_or(1.0);
+        actor.obs = obs.map(|o| o.compute.clone());
+        let rx = receivers[i].take().unwrap();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("stage-{i}"))
+                .spawn(move || actor.run(rx))
+                .context("spawning stage")?,
+        );
+    }
+
+    Ok(Wired {
+        to_first: senders[0].clone().unwrap(),
+        token_rx,
+        handles,
+        links,
+    })
+}
+
 /// The wired pipeline.
 pub struct Engine {
     to_first: ShapedSender<StageMsg>,
     token_rx: Receiver<TokenMsg>,
     handles: Vec<std::thread::JoinHandle<Result<()>>>,
+    links: Vec<RoutedLink>,
     prompt_len: usize,
     batch_sizes: Vec<usize>,
 }
@@ -83,80 +227,24 @@ impl Engine {
         cluster: &Cluster,
         cfg: &EngineConfig,
     ) -> Result<Self> {
-        let n_model_layers = manifest.config.n_layers + 2;
-        anyhow::ensure!(
-            plan.stages.last().map(|s| s.end) == Some(n_model_layers),
-            "plan covers {:?} layers, model has {n_model_layers}",
-            plan.stages.last().map(|s| s.end)
-        );
-        let s_count = plan.n_stages();
-
-        // token loopback: head device -> source
-        let head_dev = plan.stages.last().unwrap().device;
-        let loop_spec = LinkSpec::new(
-            cluster.bandwidth_mbps[head_dev][cluster.source],
-            cluster.latency_ms[head_dev][cluster.source],
-        );
-        let (token_tx, token_rx) = shaped_channel::<TokenMsg>(loop_spec, cfg.time_scale);
-
-        // per-stage ingress links: stage i receives over the link
-        // (stage i-1's device) → (stage i's device); stage 0 receives from
-        // the driver, which lives on the source device (free link).
-        let mut receivers: Vec<Option<Receiver<StageMsg>>> = (0..s_count).map(|_| None).collect();
-        let mut senders: Vec<Option<ShapedSender<StageMsg>>> =
-            (0..s_count).map(|_| None).collect();
-        for i in 0..s_count {
-            let spec = if i == 0 {
-                LinkSpec::new(f64::INFINITY, 0.0)
-            } else {
-                let prev = plan.stages[i - 1].device;
-                let dev = plan.stages[i].device;
-                LinkSpec::new(
-                    cluster.bandwidth_mbps[prev][dev],
-                    cluster.latency_ms[prev][dev],
-                )
-            };
-            let (tx, rx) = shaped_channel::<StageMsg>(spec, cfg.time_scale);
-            receivers[i] = Some(rx);
-            senders[i] = Some(tx);
-        }
-
-        // spawn actors front to back, threading the "next" hops
-        let mut handles = Vec::with_capacity(s_count);
-        for (i, st) in plan.stages.iter().enumerate() {
-            let next = if i + 1 < s_count {
-                NextHop::Stage(senders[i + 1].clone().unwrap())
-            } else {
-                NextHop::Driver(token_tx.clone())
-            };
-            let mut actor = StageActor::new(
-                i,
-                st.device,
-                manifest,
-                weights,
-                st.start..st.end,
-                n_model_layers,
-                exec.clone(),
-                cfg.kv_budget_bytes,
-                next,
-            )?;
-            actor.compute_scale = cfg.compute_scale.get(st.device).copied().unwrap_or(1.0);
-            let rx = receivers[i].take().unwrap();
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("stage-{i}"))
-                    .spawn(move || actor.run(rx))
-                    .context("spawning stage")?,
-            );
-        }
-
+        let wired = wire(manifest, weights, exec, plan, cluster, cfg, None, Vec::new())?;
         Ok(Engine {
-            to_first: senders[0].clone().unwrap(),
-            token_rx,
-            handles,
+            to_first: wired.to_first,
+            token_rx: wired.token_rx,
+            handles: wired.handles,
+            links: wired.links,
             prompt_len: manifest.config.prefill_len,
             batch_sizes: manifest.batch_sizes.clone(),
         })
+    }
+
+    /// The live inter-device links this engine's traffic flows over
+    /// (loopback first).  Re-shaping them — e.g. from a
+    /// [`crate::adaptive::dynamics::DynamicsDriver`] — affects in-flight
+    /// frames, which is exactly how the network-drop scenarios degrade a
+    /// running static engine.
+    pub fn routed_links(&self) -> Vec<RoutedLink> {
+        self.links.clone()
     }
 
     /// Largest compiled batch size.

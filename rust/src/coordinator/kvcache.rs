@@ -81,6 +81,12 @@ impl KvPool {
         self.groups.get(&group)
     }
 
+    /// Iterate over resident groups (migration export reads the pool
+    /// through this).
+    pub fn iter(&self) -> impl Iterator<Item = (&u64, &GroupCache)> {
+        self.groups.iter()
+    }
+
     /// Release a finished group's slot.
     pub fn remove(&mut self, group: u64) -> Option<GroupCache> {
         let c = self.groups.remove(&group)?;

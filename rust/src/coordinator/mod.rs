@@ -13,6 +13,11 @@
 //!   No-bubble strategies (§IV-B, Fig. 5).
 //! * [`batcher`] — groups incoming requests into the compiled batch sizes.
 //! * [`server`] — a JSON-lines TCP front-end over the engine.
+//!
+//! Stages report per-message compute timings and links report per-frame
+//! transfer timings when wired with [`engine::ObsSinks`]; together with
+//! [`stage::StageMsg::Export`] (KV snapshot for migration) these are the
+//! hooks the [`crate::adaptive`] runtime drives live replanning through.
 
 pub mod api;
 pub mod batcher;
@@ -24,4 +29,5 @@ pub mod stage;
 pub use api::{GenRequest, GenResult, GroupRequest};
 pub use batcher::Batcher;
 pub use engine::{Engine, EngineConfig, EngineStats};
-pub use kvcache::KvPool;
+pub use kvcache::{GroupCache, KvPool};
+pub use stage::{KvEntry, StageExport};

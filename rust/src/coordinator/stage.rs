@@ -8,8 +8,10 @@
 //! next iteration (see [`super::engine`]).
 
 use anyhow::{anyhow, Context, Result};
+use std::sync::mpsc::Sender;
 
 use super::kvcache::{GroupCache, KvPool};
+use crate::metrics::ComputeObs;
 use crate::netsim::ShapedSender;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::shard::RegId;
@@ -46,7 +48,30 @@ pub enum StageMsg {
     },
     /// Release the group's KV slot and forward downstream.
     Free { group: u64 },
+    /// Migration probe: every stage snapshots its resident KV caches to
+    /// `reply` (keyed by **global** decoder index) and forwards the probe,
+    /// so the driver collects exactly one export per stage.
+    Export { reply: Sender<StageExport> },
     Shutdown,
+}
+
+/// One (group, global decoder layer) KV pair leaving a stage at migration.
+#[derive(Debug, Clone)]
+pub struct KvEntry {
+    pub group: u64,
+    /// Global decoder-layer index (`decoders.start + local`).
+    pub layer: usize,
+    pub k: TensorData,
+    pub v: TensorData,
+    pub batch: usize,
+}
+
+/// A stage's KV snapshot, produced in response to [`StageMsg::Export`].
+#[derive(Debug, Clone)]
+pub struct StageExport {
+    pub stage_idx: usize,
+    pub device: usize,
+    pub entries: Vec<KvEntry>,
 }
 
 impl StageMsg {
@@ -77,6 +102,19 @@ impl TokenMsg {
     }
 }
 
+/// Decoder-layer indices `[lo, hi)` for a stage hosting model layers
+/// `model_layers` out of `n_model_layers` total (model layer 0 is the
+/// embedding, the last is the head).  Shared by stage construction and by
+/// the migration coordinator, which must agree on the mapping exactly.
+pub fn stage_decoders(
+    model_layers: &std::ops::Range<usize>,
+    n_model_layers: usize,
+) -> std::ops::Range<usize> {
+    let dec_lo = model_layers.start.max(1) - 1;
+    let dec_hi = (model_layers.end.min(n_model_layers - 1)).max(1) - 1;
+    dec_lo..dec_hi.max(dec_lo)
+}
+
 /// Where a stage sends its output.
 pub enum NextHop {
     /// Forward activations to the next stage.
@@ -99,6 +137,8 @@ pub struct StageActor {
     pub next: NextHop,
     /// Extra simulated compute slowdown (1.0 = run at real CPU speed).
     pub compute_scale: f64,
+    /// Optional sink for per-message compute timings (adaptive monitor).
+    pub obs: Option<Sender<ComputeObs>>,
     // weights registered inside the exec service (converted to literals
     // once — the per-token decode loop never copies weights again)
     embed_w: Option<RegId>,
@@ -126,13 +166,12 @@ impl StageActor {
         exec: ExecServiceHandle,
         kv_budget_bytes: u64,
         next: NextHop,
+        preload: Vec<(u64, GroupCache)>,
     ) -> Result<Self> {
         let c = &manifest.config;
         let has_embed = model_layers.start == 0;
         let has_head = model_layers.end == n_model_layers;
-        let dec_lo = model_layers.start.max(1) - 1;
-        let dec_hi = (model_layers.end.min(n_model_layers - 1)).max(1) - 1;
-        let decoders = dec_lo..dec_hi.max(dec_lo);
+        let decoders = stage_decoders(&model_layers, n_model_layers);
 
         let as_td = |data: &[f32], shape: &[usize]| {
             TensorData::f32(data.to_vec(), shape.iter().map(|&x| x as i64).collect())
@@ -162,6 +201,14 @@ impl StageActor {
             })
             .collect::<Result<Vec<_>>>()?;
 
+        // Migration hands a stage its predecessors' KV state before any
+        // message flows; admission rules are the same as at prefill.
+        let mut kv = KvPool::new(kv_budget_bytes);
+        for (gid, cache) in preload {
+            kv.insert(gid, cache)
+                .with_context(|| format!("preloading migrated KV for group {gid}"))?;
+        }
+
         Ok(StageActor {
             stage_idx,
             device_id,
@@ -169,9 +216,10 @@ impl StageActor {
             has_embed,
             has_head,
             exec,
-            kv: KvPool::new(kv_budget_bytes),
+            kv,
             next,
             compute_scale: 1.0,
+            obs: None,
             embed_w,
             head_w,
             layer_w,
@@ -211,6 +259,26 @@ impl StageActor {
                     self.kv.remove(group);
                     self.forward_control(StageMsg::Free { group })?;
                 }
+                StageMsg::Export { reply } => {
+                    let mut entries = Vec::new();
+                    for (gid, cache) in self.kv.iter() {
+                        for (li, (k, v)) in cache.layers.iter().enumerate() {
+                            entries.push(KvEntry {
+                                group: *gid,
+                                layer: self.decoders.start + li,
+                                k: k.clone(),
+                                v: v.clone(),
+                                batch: cache.batch,
+                            });
+                        }
+                    }
+                    let _ = reply.send(StageExport {
+                        stage_idx: self.stage_idx,
+                        device: self.device_id,
+                        entries,
+                    });
+                    self.forward_control(StageMsg::Export { reply })?;
+                }
                 StageMsg::Work {
                     group,
                     iter,
@@ -221,12 +289,21 @@ impl StageActor {
                     payload,
                 } => {
                     self.msgs_processed += 1;
+                    let exec_ms_before = self.exec_ms_total;
                     let hidden = self.input_hidden(phase, batch, prompt_len, payload)?;
                     let hidden = match phase {
                         Phase::Prefill => self.run_prefill(group, batch, hidden)?,
                         Phase::Decode => self.run_decode(group, batch, pos, hidden)?,
                     };
                     self.emit(group, iter, pos, phase, batch, prompt_len, hidden)?;
+                    if let Some(tx) = &self.obs {
+                        let _ = tx.send(ComputeObs {
+                            device: self.device_id,
+                            stage: self.stage_idx,
+                            decode: phase == Phase::Decode,
+                            ms: self.exec_ms_total - exec_ms_before,
+                        });
+                    }
                 }
             }
         }

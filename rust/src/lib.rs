@@ -17,19 +17,23 @@
 //! |---|---|
 //! | [`model`] | LLM descriptors: Llama2-7B/13B/70B analytic + the executable tiny model |
 //! | [`cluster`] | device catalog, heterogeneous bandwidth topologies, the paper's testbed |
-//! | [`netsim`] | Linux-TC stand-in: shaped, latency-injected async links |
-//! | [`profiler`] | offline profiling stage (analytic roofline + measured PJRT traces) |
+//! | [`netsim`] | Linux-TC stand-in: shaped, latency-injected, live-reshapeable async links |
+//! | [`profiler`] | offline profiling stage (analytic roofline + measured backend traces) |
 //! | [`planner`] | Algorithms 1 & 2 + all paper baselines |
 //! | [`pipeline`] | bubble / no-bubble pipeline schedule simulator + Gantt |
-//! | [`runtime`] | PJRT artifact loading & execution (`xla` crate), weight store |
+//! | [`runtime`] | artifact loading & execution (PJRT via `xla`, or the pure-rust sim backend), weight store |
 //! | [`coordinator`] | KV-cache manager, sequential & pipelined engines, batcher, TCP server |
+//! | [`adaptive`] | network dynamics, online monitoring, live replanning + KV-cache migration |
 //! | [`workload`] | synthetic corpus + request trace generators |
 //! | [`metrics`] | latency/throughput instrumentation, table rendering |
 //! | [`repro`] | regenerates every table and figure of the paper's evaluation |
 //!
 //! Python/JAX/Pallas exist only on the build path (`make artifacts`); the
-//! request path is pure rust + PJRT.
+//! request path is pure rust (PJRT when artifacts are present, the sim
+//! backend otherwise — see `rust/vendor/xla` for how the PJRT dependency
+//! is quarantined in sandboxed builds).
 
+pub mod adaptive;
 pub mod cluster;
 pub mod coordinator;
 pub mod metrics;
@@ -43,7 +47,7 @@ pub mod runtime;
 pub mod util;
 pub mod workload;
 
-pub use cluster::{Cluster, Device, DeviceClass};
+pub use cluster::{Cluster, Device, DeviceClass, LiveCluster};
 pub use model::{ModelDesc, Precision};
 pub use planner::{Plan, PlanObjective, Planner};
 pub use profiler::ProfiledTraces;

@@ -128,6 +128,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
         "fig8" => edgeshard::repro::figs::fig8(seed),
         "fig9" => edgeshard::repro::figs::fig9(seed),
         "fig10" => edgeshard::repro::figs::fig10(seed),
+        "adaptive" => edgeshard::repro::adaptive::run(seed),
         "all" => edgeshard::repro::run_all(seed),
         other => bail!("unknown experiment `{other}`"),
     }

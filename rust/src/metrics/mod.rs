@@ -76,6 +76,20 @@ impl Histogram {
     }
 }
 
+/// One stage-compute timing observation flowing from a stage actor to the
+/// adaptive monitor: milliseconds of shard execution (compute-scale
+/// applied) for one pipeline message.  Link time is observed separately
+/// as [`crate::netsim::TransferObs`]; together they are everything the
+/// online estimators in [`crate::adaptive::monitor`] see.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ComputeObs {
+    pub device: usize,
+    pub stage: usize,
+    /// `true` for a decode iteration, `false` for prefill.
+    pub decode: bool,
+    pub ms: f64,
+}
+
 /// Counts events over a wall-clock window.
 #[derive(Debug)]
 pub struct ThroughputMeter {

@@ -14,7 +14,6 @@ mod llama;
 
 pub use llama::{llama2_13b, llama2_70b, llama2_7b, llama_desc, tiny_from_manifest, LlamaParams};
 
-
 /// Numeric precision of the deployed weights (Table I of the paper).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Precision {

@@ -11,10 +11,20 @@
 //!   NIC).  The collaborative engines in [`crate::coordinator`] move real
 //!   activation tensors through these, so the end-to-end demo experiences
 //!   the same queueing the paper's testbed does.
+//!
+//! For the adaptive runtime ([`crate::adaptive`]) links are **live**:
+//! [`shaped_channel_live`] reads its [`LiveLink`] spec in small slices
+//! while serializing, so a bandwidth change applied mid-frame (by
+//! [`crate::adaptive::dynamics`]) immediately stretches or shrinks the
+//! remaining transfer.  Live channels can also report a [`TransferObs`]
+//! per delivered frame — the raw signal the online
+//! [`crate::adaptive::monitor`] estimates link state from, without ever
+//! reading the ground-truth spec.
 
 use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Static description of one directed link.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -31,12 +41,27 @@ impl LinkSpec {
         }
     }
 
+    /// Whether the link can move bytes at all (positive finite rate or
+    /// the infinite same-device "link").
+    pub fn is_up(&self) -> bool {
+        self.bandwidth_mbps == f64::INFINITY
+            || (self.bandwidth_mbps > 0.0 && self.bandwidth_mbps.is_finite())
+    }
+
     /// Pure serialization delay for `bytes` (no propagation latency).
+    ///
+    /// Infinite bandwidth is free; zero, negative or NaN bandwidth means
+    /// the link is **down** and yields `INFINITY` (so planners route
+    /// around it) rather than the NaN the naive division would produce.
     pub fn transfer_ms(&self, bytes: u64) -> f64 {
-        if !self.bandwidth_mbps.is_finite() {
+        let bw = self.bandwidth_mbps;
+        if bw == f64::INFINITY {
             return 0.0;
         }
-        bytes as f64 * 8.0 / (self.bandwidth_mbps * 1e6) * 1e3
+        if !bw.is_finite() || bw <= 0.0 {
+            return f64::INFINITY;
+        }
+        bytes as f64 * 8.0 / (bw * 1e6) * 1e3
     }
 
     /// One-shot delivery time: serialization + propagation.
@@ -45,10 +70,60 @@ impl LinkSpec {
     }
 }
 
+/// A link spec that can be re-shaped while traffic is in flight — the
+/// Linux-TC analogue for the adaptive runtime.  Cloning shares the spec.
+#[derive(Debug, Clone)]
+pub struct LiveLink {
+    spec: Arc<Mutex<LinkSpec>>,
+}
+
+impl LiveLink {
+    pub fn new(spec: LinkSpec) -> Self {
+        LiveLink {
+            spec: Arc::new(Mutex::new(spec)),
+        }
+    }
+
+    pub fn get(&self) -> LinkSpec {
+        *self.spec.lock().expect("link spec lock poisoned")
+    }
+
+    pub fn set(&self, spec: LinkSpec) {
+        *self.spec.lock().expect("link spec lock poisoned") = spec;
+    }
+
+    pub fn set_bandwidth(&self, mbps: f64) {
+        self.spec.lock().expect("link spec lock poisoned").bandwidth_mbps = mbps;
+    }
+}
+
+/// A live link annotated with the device pair it connects, so dynamics
+/// drivers can look up the right schedule.
+#[derive(Debug, Clone)]
+pub struct RoutedLink {
+    pub from: usize,
+    pub to: usize,
+    pub link: LiveLink,
+}
+
+/// One delivered frame as observed at the receiving end of a shaped link:
+/// wire bytes and simulated milliseconds from send to delivery (queueing +
+/// serialization + propagation).  This is a *measurement*, not the spec —
+/// under congestion it reads slower than the nominal rate, exactly like a
+/// real transfer timing would.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TransferObs {
+    pub from: usize,
+    pub to: usize,
+    pub bytes: u64,
+    pub sim_ms: f64,
+}
+
 /// A message with an explicit wire size.
 struct Frame<T> {
     payload: T,
     bytes: u64,
+    enqueued: Instant,
 }
 
 /// Sender half of a shaped channel.
@@ -69,12 +144,21 @@ impl<T: Send + 'static> ShapedSender<T> {
     /// everything ahead of it plus this frame, plus propagation latency.
     pub fn send(&self, payload: T, bytes: u64) -> anyhow::Result<()> {
         self.tx
-            .send(Frame { payload, bytes })
+            .send(Frame {
+                payload,
+                bytes,
+                enqueued: Instant::now(),
+            })
             .map_err(|_| anyhow::anyhow!("shaped link closed"))
     }
 }
 
-/// Create a shaped, serialized link.
+/// How often the pacer re-reads a live spec while serializing (real ms).
+/// Small enough that a mid-frame bandwidth change takes effect promptly;
+/// large enough that tiny frames cost one syscall-scale sleep.
+const PACER_SLICE_REAL_MS: f64 = 2.0;
+
+/// Create a shaped, serialized link with a fixed spec.
 ///
 /// `time_scale` compresses simulated time (0.01 ⇒ delays run at 1% of
 /// real time) so integration tests finish quickly while preserving
@@ -84,24 +168,87 @@ pub fn shaped_channel<T: Send + 'static>(
     spec: LinkSpec,
     time_scale: f64,
 ) -> (ShapedSender<T>, Receiver<T>) {
+    shaped_channel_live(LiveLink::new(spec), time_scale, (0, 0), None)
+}
+
+/// Create a shaped link whose spec is read live from `link` — bandwidth
+/// changes apply to the *remaining* bits of any frame being serialized.
+///
+/// `route` tags observations with the (from, to) device pair; when `obs`
+/// is set, every delivered frame reports a [`TransferObs`].
+pub fn shaped_channel_live<T: Send + 'static>(
+    link: LiveLink,
+    time_scale: f64,
+    route: (usize, usize),
+    obs: Option<Sender<TransferObs>>,
+) -> (ShapedSender<T>, Receiver<T>) {
     let (in_tx, in_rx) = mpsc::channel::<Frame<T>>();
     let (out_tx, out_rx) = mpsc::channel::<T>();
+    let (deliver_tx, deliver_rx) = mpsc::channel::<(Instant, T)>();
+    // Delivery thread: frames queue FIFO with a due time (serialize_done +
+    // latency), so propagation overlaps the next frame's serialization
+    // while per-link ordering is preserved — the coordinator's control
+    // protocol (Free before Export before Shutdown) depends on links
+    // never reordering frames.
     thread::spawn(move || {
-        // Track the latency-stage so propagation overlaps the next frame's
-        // serialization: deliver_at(frame) = serialize_done + latency.
+        while let Ok((due, payload)) = deliver_rx.recv() {
+            let wait = due.saturating_duration_since(Instant::now());
+            if !wait.is_zero() {
+                thread::sleep(wait);
+            }
+            if out_tx.send(payload).is_err() {
+                break;
+            }
+        }
+    });
+    thread::spawn(move || {
         while let Ok(frame) = in_rx.recv() {
-            let transfer = spec.transfer_ms(frame.bytes) * time_scale;
-            if transfer > 0.0 {
-                thread::sleep(Duration::from_secs_f64(transfer / 1e3));
+            let mut spec = link.get();
+            let mut remaining_bits = frame.bytes as f64 * 8.0;
+            while remaining_bits > 0.0 {
+                spec = link.get();
+                let bw = spec.bandwidth_mbps;
+                if bw == f64::INFINITY || time_scale <= 0.0 {
+                    break;
+                }
+                if !bw.is_finite() || bw <= 0.0 {
+                    // Link down: hold the frame and poll for recovery.
+                    thread::sleep(Duration::from_secs_f64(PACER_SLICE_REAL_MS / 1e3));
+                    continue;
+                }
+                // sim ms for the remaining bits = bits / (bw Mbps * 1e3)
+                let need_real_ms = remaining_bits / (bw * 1e3) * time_scale;
+                if need_real_ms <= PACER_SLICE_REAL_MS {
+                    if need_real_ms > 0.0 {
+                        thread::sleep(Duration::from_secs_f64(need_real_ms / 1e3));
+                    }
+                    remaining_bits = 0.0;
+                } else {
+                    thread::sleep(Duration::from_secs_f64(PACER_SLICE_REAL_MS / 1e3));
+                    remaining_bits -= PACER_SLICE_REAL_MS / time_scale * bw * 1e3;
+                }
+            }
+            if let Some(tx) = &obs {
+                let real_ms = frame.enqueued.elapsed().as_secs_f64() * 1e3;
+                let ser_sim_ms = if time_scale > 0.0 {
+                    real_ms / time_scale
+                } else {
+                    spec.transfer_ms(frame.bytes)
+                };
+                let _ = tx.send(TransferObs {
+                    from: route.0,
+                    to: route.1,
+                    bytes: frame.bytes,
+                    sim_ms: ser_sim_ms + spec.latency_ms,
+                });
             }
             let lat = spec.latency_ms * time_scale;
-            if lat > 0.0 {
-                let out = out_tx.clone();
-                thread::spawn(move || {
-                    thread::sleep(Duration::from_secs_f64(lat / 1e3));
-                    let _ = out.send(frame.payload);
-                });
-            } else if out_tx.send(frame.payload).is_err() {
+            let due = if lat.is_finite() && lat > 0.0 {
+                Instant::now() + Duration::from_secs_f64(lat / 1e3)
+            } else {
+                Instant::now()
+            };
+            if deliver_tx.send((due, frame.payload)).is_err() {
                 break;
             }
         }
@@ -124,7 +271,6 @@ pub fn cluster_link_specs(cluster: &crate::cluster::Cluster) -> Vec<Vec<LinkSpec
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::time::Instant;
 
     #[test]
     fn transfer_math() {
@@ -137,6 +283,20 @@ mod tests {
     fn infinite_bandwidth_is_free() {
         let l = LinkSpec::new(f64::INFINITY, 0.0);
         assert_eq!(l.transfer_ms(u64::MAX / 16), 0.0);
+        assert!(l.is_up());
+    }
+
+    #[test]
+    fn dead_links_yield_infinity_not_nan() {
+        // 0, negative, and NaN bandwidths all mean "down": planners see an
+        // infinite cost instead of NaN poisoning the DP tables.
+        for bw in [0.0, -5.0, f64::NAN] {
+            let l = LinkSpec::new(bw, 1.0);
+            assert!(!l.is_up(), "bw={bw}");
+            assert_eq!(l.transfer_ms(0), f64::INFINITY, "bw={bw}");
+            assert_eq!(l.transfer_ms(1000), f64::INFINITY, "bw={bw}");
+            assert_eq!(l.delivery_ms(1000), f64::INFINITY, "bw={bw}");
+        }
     }
 
     #[test]
@@ -176,6 +336,20 @@ mod tests {
     }
 
     #[test]
+    fn latency_link_preserves_order() {
+        // Tiny control frames over a high-latency link must never reorder:
+        // the coordinator's Free → Export → Shutdown protocol depends on
+        // links being FIFO even though propagation overlaps serialization.
+        let (tx, rx) = shaped_channel(LinkSpec::new(1e6, 500.0), 0.02);
+        for i in 0..50 {
+            tx.send(i, 16).unwrap();
+        }
+        for i in 0..50 {
+            assert_eq!(rx.recv().unwrap(), i);
+        }
+    }
+
+    #[test]
     fn zero_scale_is_instant() {
         let (tx, rx) = shaped_channel(LinkSpec::new(0.001, 100.0), 0.0);
         tx.send(7, 1 << 40).unwrap();
@@ -194,6 +368,49 @@ mod tests {
         rx.recv().unwrap();
         let ms = start.elapsed().as_secs_f64() * 1e3;
         assert!(ms < 140.0, "elapsed={ms}ms (latencies must overlap)");
+    }
+
+    #[test]
+    fn live_link_change_applies_mid_frame() {
+        // A frame that would take ~400 ms real at the initial rate speeds
+        // up when the link is re-shaped 10× faster shortly after send.
+        let link = LiveLink::new(LinkSpec::new(2.0, 0.0));
+        let (tx, rx) = shaped_channel_live::<u32>(link.clone(), 0.1, (0, 1), None);
+        let start = Instant::now();
+        tx.send(1, 1_000_000).unwrap(); // 4000 ms sim → 400 ms real
+        thread::sleep(Duration::from_millis(40));
+        link.set_bandwidth(2000.0);
+        rx.recv().unwrap();
+        let ms = start.elapsed().as_secs_f64() * 1e3;
+        assert!(ms < 250.0, "elapsed={ms}ms (re-shape must apply mid-frame)");
+        assert!(ms > 30.0, "elapsed={ms}ms (initial slow phase must count)");
+    }
+
+    #[test]
+    fn observations_report_bytes_and_time() {
+        let link = LiveLink::new(LinkSpec::new(8.0, 3.0));
+        let (obs_tx, obs_rx) = mpsc::channel();
+        let (tx, rx) = shaped_channel_live::<u32>(link, 0.05, (2, 4), Some(obs_tx));
+        tx.send(9, 100_000).unwrap(); // 100 ms sim serialization
+        rx.recv().unwrap();
+        let o = obs_rx.recv().unwrap();
+        assert_eq!((o.from, o.to, o.bytes), (2, 4, 100_000));
+        // ~100 ms serialization + 3 ms latency, in sim ms (generous band:
+        // the pacer sleeps in 2 ms real slices).
+        assert!((80.0..250.0).contains(&o.sim_ms), "sim_ms={}", o.sim_ms);
+    }
+
+    #[test]
+    fn down_link_holds_frames_until_recovery() {
+        let link = LiveLink::new(LinkSpec::new(1000.0, 0.0));
+        let (tx, rx) = shaped_channel_live::<u32>(link.clone(), 0.05, (0, 1), None);
+        link.set_bandwidth(0.0);
+        tx.send(5, 1000).unwrap();
+        assert!(rx
+            .recv_timeout(Duration::from_millis(30))
+            .is_err());
+        link.set_bandwidth(1000.0);
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap(), 5);
     }
 
     #[test]

@@ -99,7 +99,6 @@ fn pareto_insert(frontier: &mut Vec<State>, cand: State, cap: usize) {
     frontier.truncate(cap);
 }
 
-
 /// Algorithm 1 with the Pareto-frontier memory fix.  `pool` is the
 /// candidate device set (must contain the source); `batch` sizes the KV
 /// reservation.

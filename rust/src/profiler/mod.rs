@@ -18,7 +18,6 @@ pub mod analytic;
 
 pub use analytic::AnalyticProfiler;
 
-
 /// The request shape the system is being planned for (the paper uses
 /// 32 prompt tokens and 96 generated tokens from WikiText-2).
 #[derive(Debug, Clone, Copy)]

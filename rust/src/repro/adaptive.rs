@@ -1,0 +1,15 @@
+//! `edgeshard repro adaptive` — the adaptive-runtime recovery experiment:
+//! a mid-generation bandwidth collapse served by the static one-shot plan
+//! vs. the monitoring/replanning/KV-migrating engine, on the real (sim
+//! backend) coordinator stack.  Not a paper artifact — this is the
+//! extension the paper's §VI "adaptive" formulation points at.
+
+use crate::adaptive::scenario::{link_drop_scenario, report_markdown, ScenarioConfig};
+
+pub fn run(seed: u64) -> anyhow::Result<()> {
+    let report = link_drop_scenario(&ScenarioConfig {
+        seed,
+        ..ScenarioConfig::default()
+    })?;
+    super::emit("adaptive_recovery", &report_markdown(&report))
+}

@@ -9,12 +9,16 @@
 //! | fig8 | throughput vs cloud-source bandwidth | [`figs::fig8`] |
 //! | fig9 | source-node effect (AGX Orin vs Orin NX) | [`figs::fig9`] |
 //! | fig10 | bubble vs no-bubble pipeline strategies | [`figs::fig10`] |
+//! | adaptive | mid-generation link drop: static vs adaptive engine | [`adaptive::run`] |
 //!
 //! Numbers come from the analytic profiler + the planners + the pipeline
 //! simulator (the paper's physical testbed is simulated per DESIGN.md);
 //! the *shape* of every comparison — who wins, by what factor, where the
-//! crossovers sit — is the reproduction target, not absolute ms.
+//! crossovers sit — is the reproduction target, not absolute ms.  The
+//! `adaptive` experiment additionally runs the real coordinator stack on
+//! the sim backend.
 
+pub mod adaptive;
 pub mod figs;
 pub mod methods;
 pub mod table1;
@@ -43,5 +47,6 @@ pub fn run_all(seed: u64) -> anyhow::Result<()> {
     figs::fig8(seed)?;
     figs::fig9(seed)?;
     figs::fig10(seed)?;
+    adaptive::run(seed)?;
     Ok(())
 }

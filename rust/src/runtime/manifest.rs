@@ -190,6 +190,103 @@ impl Manifest {
         })
     }
 
+    /// Build an **in-memory** manifest for `config` — no files involved.
+    ///
+    /// This is the entry point of the pure-rust sim backend
+    /// ([`crate::runtime::sim`]): together with
+    /// [`crate::runtime::WeightStore::synthetic`] and
+    /// [`crate::runtime::ExecService::start_sim`] it lets the full
+    /// coordinator stack (stage actors, shaped links, KV migration) run
+    /// end-to-end without `make artifacts` or PJRT.
+    ///
+    /// The weight table uses the canonical export layout of
+    /// `python/compile/aot.py` (tok_emb, per-layer params in
+    /// `layer_param_order`, final_norm, lm_head); artifact entries carry
+    /// the variant names with empty files since nothing is compiled.
+    pub fn synthetic(config: ManifestConfig, batch_sizes: Vec<usize>) -> Manifest {
+        let c = &config;
+        let mut weights = Vec::new();
+        let mut offset = 0usize;
+        let mut push = |name: String, shape: Vec<usize>, offset: &mut usize| {
+            let elems: usize = shape.iter().product();
+            weights.push(WeightEntry {
+                name,
+                offset_bytes: *offset,
+                shape,
+            });
+            *offset += elems * 4;
+        };
+        let d = c.d_model;
+        let hd = c.head_dim();
+        push("tok_emb".into(), vec![c.vocab_size, d], &mut offset);
+        for i in 0..c.n_layers {
+            for p in &c.layer_param_order {
+                let shape = match p.as_str() {
+                    "attn_norm" | "ffn_norm" => vec![d],
+                    "wq" => vec![d, c.n_heads * hd],
+                    "wk" | "wv" => vec![d, c.n_kv_heads * hd],
+                    "wo" => vec![c.n_heads * hd, d],
+                    "w_gate" | "w_up" => vec![d, c.d_ff],
+                    "w_down" => vec![c.d_ff, d],
+                    other => panic!("unknown layer param `{other}`"),
+                };
+                push(format!("layers.{i}.{p}"), shape, &mut offset);
+            }
+        }
+        push("final_norm".into(), vec![d], &mut offset);
+        push("lm_head".into(), vec![d, c.vocab_size], &mut offset);
+
+        let mut artifacts = Vec::new();
+        for &b in &batch_sizes {
+            for fam in ["embed", "layer", "head"] {
+                for phase in ["prefill", "decode"] {
+                    artifacts.push(ArtifactEntry {
+                        name: format!("{fam}_{phase}_b{b}"),
+                        file: String::new(),
+                        inputs: Vec::new(),
+                        outputs: Vec::new(),
+                    });
+                }
+            }
+        }
+
+        Manifest {
+            config,
+            batch_sizes,
+            weights_file: String::new(),
+            weights_total_bytes: offset,
+            weights,
+            artifacts,
+            dir: PathBuf::new(),
+        }
+    }
+
+    /// Synthetic manifest mirroring the python `TINY` config
+    /// (`tinyllama-4l`), the model every sim-backend test and the adaptive
+    /// scenarios run.
+    pub fn synthetic_tiny() -> Manifest {
+        Manifest::synthetic(
+            ManifestConfig {
+                name: "tinyllama-4l-sim".into(),
+                vocab_size: 256,
+                d_model: 128,
+                n_layers: 4,
+                n_heads: 4,
+                n_kv_heads: 4,
+                d_ff: 256,
+                max_seq: 128,
+                prefill_len: 32,
+                layer_param_order: [
+                    "attn_norm", "wq", "wk", "wv", "wo", "ffn_norm", "w_gate", "w_up", "w_down",
+                ]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            },
+            vec![1, 8],
+        )
+    }
+
     /// Default artifact directory: `$EDGESHARD_ARTIFACTS` or `./artifacts`.
     pub fn default_dir() -> PathBuf {
         std::env::var_os("EDGESHARD_ARTIFACTS")
@@ -267,6 +364,25 @@ mod tests {
         assert_eq!(a.outputs.len(), 3);
         assert_eq!(a.inputs[12].dtype, "int32");
         assert_eq!(a.inputs[12].shape, Vec::<usize>::new());
+    }
+
+    #[test]
+    fn synthetic_tiny_layout() {
+        let m = Manifest::synthetic_tiny();
+        assert_eq!(m.config.d_model, 128);
+        assert_eq!(m.config.layer_param_order.len(), 9);
+        assert_eq!(m.batch_sizes, vec![1, 8]);
+        // tok_emb + 4×9 layer params + final_norm + lm_head
+        assert_eq!(m.weights.len(), 1 + 4 * 9 + 2);
+        let wq = m.weight("layers.0.wq").unwrap();
+        assert_eq!(wq.shape, vec![128, 128]);
+        // offsets are contiguous f32s
+        let total: usize = m.weights.iter().map(|w| w.elems() * 4).sum();
+        assert_eq!(total, m.weights_total_bytes);
+        let last = m.weights.last().unwrap();
+        assert_eq!(last.offset_bytes + last.elems() * 4, m.weights_total_bytes);
+        assert!(m.artifact("layer_decode_b8").is_ok());
+        assert!(m.artifact("layer_decode_b3").is_err());
     }
 
     #[test]

@@ -1,20 +1,29 @@
-//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
-//! and executes them on the request path — python is never involved.
+//! Model runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path — python
+//! is never involved.
 //!
-//! * [`manifest`] — the python→rust interchange contract.
-//! * [`weights`] — loads `weights.bin` and slices per-layer tensors.
+//! * [`manifest`] — the python→rust interchange contract (plus
+//!   [`Manifest::synthetic`] for file-less operation).
+//! * [`weights`] — loads `weights.bin` and slices per-layer tensors (plus
+//!   [`WeightStore::synthetic`] deterministic init).
 //! * [`shard`] — compiles `*.hlo.txt` on the PJRT CPU client
 //!   (`HloModuleProto::from_text_file` → `client.compile`) and runs them.
 //!   [`shard::ExecService`] owns the client on a dedicated thread so the
 //!   multi-threaded device actors in [`crate::coordinator`] can share it
 //!   (the `xla` crate's handles are deliberately `!Send`).
-//! * [`measured`] — profiles the real shard executables to produce
-//!   [`crate::profiler::ProfiledTraces`] for the tiny model, scaled per
-//!   device class.
+//! * [`sim`] — the pure-rust reference executor behind
+//!   [`shard::ExecService::start_sim`]: same shard semantics, no PJRT, no
+//!   artifacts.  This is what CI and the adaptive scenarios run; the
+//!   vendored `rust/vendor/xla` stub quarantines the real PJRT
+//!   dependency, and artifact-requiring tests skip when absent.
+//! * [`measured`] — profiles the real shard executables (either backend)
+//!   to produce [`crate::profiler::ProfiledTraces`], scaled per device
+//!   class.
 
 pub mod manifest;
 pub mod measured;
 pub mod shard;
+pub mod sim;
 pub mod weights;
 
 pub use manifest::Manifest;

@@ -198,6 +198,59 @@ pub struct ExecService {
 }
 
 impl ExecService {
+    /// Start the **sim backend**: the same service-thread protocol, but
+    /// every variant executes through the pure-rust reference math in
+    /// [`crate::runtime::sim`] instead of PJRT.  Works with a synthetic
+    /// manifest ([`Manifest::synthetic`]) — no artifacts, no `xla`.
+    pub fn start_sim(manifest: &Manifest) -> Result<(Self, ExecServiceHandle)> {
+        let (tx, rx) = mpsc::channel::<Req>();
+        let cfg = manifest.config.clone();
+        let join = std::thread::Builder::new()
+            .name("sim-exec".into())
+            .spawn(move || {
+                let mut registered: Vec<Vec<TensorData>> = Vec::new();
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::Shutdown => break,
+                        Req::Register { tensors, reply } => {
+                            registered.push(tensors);
+                            let _ = reply.send(Ok(RegId(registered.len() as u64 - 1)));
+                        }
+                        Req::Exec {
+                            variant,
+                            prefix,
+                            inputs,
+                            reply,
+                        } => {
+                            let out = (|| -> Result<(Vec<TensorData>, f64)> {
+                                let mut all: Vec<TensorData> = Vec::new();
+                                if let Some(RegId(i)) = prefix {
+                                    let pre = registered
+                                        .get(i as usize)
+                                        .ok_or_else(|| anyhow!("bad RegId"))?;
+                                    all.extend(pre.iter().cloned());
+                                }
+                                all.extend(inputs);
+                                let start = Instant::now();
+                                let outputs = super::sim::run_variant(&cfg, &variant, &all)?;
+                                let ms = start.elapsed().as_secs_f64() * 1e3;
+                                Ok((outputs, ms))
+                            })();
+                            let _ = reply.send(out);
+                        }
+                    }
+                }
+            })
+            .context("spawning sim-exec thread")?;
+        Ok((
+            ExecService {
+                tx: tx.clone(),
+                join: Some(join),
+            },
+            ExecServiceHandle { tx },
+        ))
+    }
+
     /// Compile every artifact in the manifest on a fresh CPU client.
     pub fn start(manifest: &Manifest) -> Result<(Self, ExecServiceHandle)> {
         let (tx, rx) = mpsc::channel::<Req>();
@@ -405,6 +458,31 @@ mod tests {
     fn unknown_variant_errors() {
         let Some((_svc, h, _m)) = service() else { return };
         assert!(h.exec("nope", vec![]).is_err());
+    }
+
+    #[test]
+    fn sim_service_executes_registered_weights() {
+        let m = Manifest::synthetic_tiny();
+        let w = super::super::WeightStore::synthetic(&m, 0);
+        let (_svc, h) = ExecService::start_sim(&m).unwrap();
+        let (emb, s) = w.get("tok_emb").unwrap();
+        let reg = h
+            .register(vec![TensorData::f32(
+                emb.to_vec(),
+                s.iter().map(|&x| x as i64).collect(),
+            )])
+            .unwrap();
+        let (out, ms) = h
+            .exec_prefixed(
+                Some(reg),
+                "embed_decode_b1",
+                vec![TensorData::i32(vec![3], vec![1, 1])],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].dims(), &[1, 1, m.config.d_model as i64]);
+        assert!(ms >= 0.0);
+        assert!(h.exec("layer_decode_b1", vec![]).is_err());
     }
 
     #[test]

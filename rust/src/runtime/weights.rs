@@ -51,6 +51,34 @@ impl WeightStore {
         })
     }
 
+    /// Deterministic synthetic weights for a manifest built with
+    /// [`Manifest::synthetic`] — the sim-backend analogue of
+    /// `python/compile/model.py::init_weights`: norm weights are ones,
+    /// everything else is normal(0, 0.02²), drawn from the crate's seeded
+    /// RNG (different numbers than JAX's PRNG, but the same structure).
+    pub fn synthetic(manifest: &Manifest, seed: u64) -> WeightStore {
+        let mut rng = crate::util::Rng::new(seed.wrapping_add(0x5EED));
+        let mut data = vec![0f32; manifest.weights_total_bytes / 4];
+        let mut entries = Vec::with_capacity(manifest.weights.len());
+        for w in &manifest.weights {
+            let off = w.offset_bytes / 4;
+            let len = w.elems();
+            let ones = w.name.ends_with("norm");
+            for x in data[off..off + len].iter_mut() {
+                *x = if ones {
+                    1.0
+                } else {
+                    (rng.normal() * 0.02) as f32
+                };
+            }
+            entries.push((w.name.clone(), off, len, w.shape.clone()));
+        }
+        WeightStore {
+            data: Arc::new(data),
+            entries,
+        }
+    }
+
     /// Slice of one named tensor.
     pub fn get(&self, name: &str) -> Result<(&[f32], &[usize])> {
         let (_, off, len, shape) = self
@@ -158,6 +186,27 @@ mod tests {
     fn missing_weight_errors() {
         let Some((_m, w)) = load() else { return };
         assert!(w.get("layers.7.wq").is_err());
+    }
+
+    #[test]
+    fn synthetic_weights_layout_and_stats() {
+        let m = Manifest::synthetic_tiny();
+        let w = WeightStore::synthetic(&m, 0);
+        let (emb, shape) = w.get("tok_emb").unwrap();
+        assert_eq!(shape, &[m.config.vocab_size, m.config.d_model]);
+        let mean_abs: f32 = emb.iter().map(|x| x.abs()).sum::<f32>() / emb.len() as f32;
+        assert!(mean_abs > 0.005 && mean_abs < 0.05, "mean_abs={mean_abs}");
+        let (norm, _) = w.get("layers.2.ffn_norm").unwrap();
+        assert!(norm.iter().all(|&x| x == 1.0));
+        assert_eq!(w.layer_params(&m, 3).unwrap().len(), 9);
+        // deterministic per seed
+        let w2 = WeightStore::synthetic(&m, 0);
+        assert_eq!(w.get("lm_head").unwrap().0, w2.get("lm_head").unwrap().0);
+        let w3 = WeightStore::synthetic(&m, 1);
+        assert_ne!(w.get("lm_head").unwrap().0, w3.get("lm_head").unwrap().0);
+        // partitions cover the whole blob
+        let all = w.stage_bytes(&m, 0..m.config.n_layers, true, true);
+        assert_eq!(all, m.weights_total_bytes);
     }
 
     #[test]

@@ -47,6 +47,14 @@ impl Rng {
     pub fn exponential(&mut self, mean: f64) -> f64 {
         -mean * (1.0 - self.next_f64()).ln()
     }
+
+    /// Standard normal via Box–Muller (deterministic per seed; used for
+    /// the synthetic weight init of the sim backend).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = (1.0 - self.next_f64()).max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
 }
 
 /// Format a byte count as a human string (GiB/MiB/KiB with short scale).
@@ -167,6 +175,17 @@ mod tests {
         let n = 20_000;
         let mean: f64 = (0..n).map(|_| r.exponential(5.0)).sum::<f64>() / n as f64;
         assert!((mean - 5.0).abs() < 0.2, "mean={mean}");
+    }
+
+    #[test]
+    fn rng_normal_moments() {
+        let mut r = Rng::new(13);
+        let n = 20_000;
+        let samples: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
     }
 
     #[test]

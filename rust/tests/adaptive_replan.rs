@@ -1,0 +1,212 @@
+//! Property tests on the replanner's safety invariants (hand-rolled
+//! generation with the crate's deterministic RNG — the sandboxed registry
+//! has no proptest; failures print the case seed for replay).
+//!
+//! Per random (cluster, model, drift) instance:
+//!   1. every plan the replanner emits passes `validate_plan` on the
+//!      *observed* state it was solved against;
+//!   2. an emitted plan is never predicted-worse than keeping the current
+//!      plan on that observed state (the engine cannot be talked into a
+//!      regression by its own replanner);
+//!   3. the attached predictions match the independent evaluators;
+//!   4. the migration diff only moves layers that actually changed device
+//!      and its KV accounting matches the traces.
+//!
+//! A deterministic crush case (every link of the current plan strangled)
+//! is run per instance too, so the suite always exercises the Migrate
+//! path, not just Keep.
+
+use edgeshard::adaptive::{Decision, Replanner, TriggerPolicy};
+use edgeshard::cluster::{Cluster, Device, DeviceClass};
+use edgeshard::model::{llama_desc, LlamaParams};
+use edgeshard::planner::latency::algo1;
+use edgeshard::planner::throughput::algo2_exact;
+use edgeshard::planner::{
+    pipeline_bottleneck_ms, sequential_latency_ms, validate_plan, Plan, PlanObjective,
+};
+use edgeshard::profiler::{AnalyticProfiler, ProfiledTraces, Workload};
+use edgeshard::util::Rng;
+
+fn random_cluster(rng: &mut Rng) -> Cluster {
+    let m = 2 + rng.next_below(4) as usize;
+    let devices: Vec<Device> = (0..m)
+        .map(|id| {
+            let class = DeviceClass {
+                name: format!("class-{}", rng.next_below(1000)),
+                mem_bytes: (6 + rng.next_below(58)) << 30,
+                tflops: rng.uniform(0.5, 40.0),
+                mem_bw_gbps: rng.uniform(20.0, 900.0),
+                is_cloud: rng.next_f64() < 0.3,
+            };
+            Device::new(id, class)
+        })
+        .collect();
+    let mut c = Cluster::new(devices, 50.0, rng.uniform(0.1, 5.0));
+    for a in 0..m {
+        for b in (a + 1)..m {
+            c.set_bandwidth(a, b, rng.uniform(0.5, 200.0));
+        }
+    }
+    c
+}
+
+fn random_model(rng: &mut Rng) -> edgeshard::model::ModelDesc {
+    let n_heads = 1 << rng.next_below(4);
+    let head_dim = 64 << rng.next_below(2);
+    let d = n_heads * head_dim;
+    llama_desc(
+        "rand",
+        LlamaParams {
+            d_model: d,
+            n_layers: 2 + rng.next_below(16),
+            n_heads,
+            n_kv_heads: n_heads,
+            d_ff: d * 3,
+            vocab: 1000 + rng.next_below(32000),
+        },
+        128,
+    )
+}
+
+/// Random drift: rescale some links and some device compute columns.
+fn drift(rng: &mut Rng, cluster: &mut Cluster, traces: &mut ProfiledTraces) {
+    let m = cluster.len();
+    for a in 0..m {
+        for b in (a + 1)..m {
+            if rng.next_f64() < 0.5 {
+                let f = rng.uniform(0.02, 2.0);
+                let bw = cluster.bandwidth_mbps[a][b] * f;
+                cluster.set_bandwidth(a, b, bw.max(0.01));
+            }
+        }
+    }
+    for dev in 0..m {
+        if rng.next_f64() < 0.4 {
+            let f = rng.uniform(0.5, 4.0);
+            for i in 0..traces.n_layers {
+                traces.avg_ms[i][dev] *= f;
+                traces.decode_ms[i][dev] *= f;
+                traces.prefill_ms[i][dev] *= f;
+            }
+        }
+    }
+}
+
+fn check_migrate(
+    objective: PlanObjective,
+    current: &Plan,
+    traces: &ProfiledTraces,
+    cluster: &Cluster,
+    decision: Decision,
+    seed: u64,
+) -> usize {
+    let evaluate = |p: &Plan| match objective {
+        PlanObjective::Latency => sequential_latency_ms(p, traces, cluster),
+        PlanObjective::Throughput => pipeline_bottleneck_ms(p, traces, cluster),
+    };
+    match decision {
+        Decision::Keep { .. } => 0,
+        Decision::Migrate {
+            plan,
+            diff,
+            current_pred_ms,
+            candidate_pred_ms,
+        } => {
+            // 1. structurally valid on the observed state
+            validate_plan(&plan, traces, cluster, 1)
+                .unwrap_or_else(|e| panic!("seed {seed}: invalid emitted plan: {e}"));
+            // 2. never predicted-worse than keeping
+            assert!(
+                candidate_pred_ms <= current_pred_ms,
+                "seed {seed}: candidate {candidate_pred_ms} worse than current {current_pred_ms}"
+            );
+            // 3. attached predictions match the independent evaluators
+            assert!(
+                (evaluate(&plan) - candidate_pred_ms).abs() < 1e-6,
+                "seed {seed}: candidate prediction mismatch"
+            );
+            assert!(
+                (evaluate(current) - current_pred_ms).abs() < 1e-6,
+                "seed {seed}: current prediction mismatch"
+            );
+            // 4. the diff moves exactly the layers that changed device
+            for layer in 0..traces.n_layers {
+                let moved = diff
+                    .moves
+                    .iter()
+                    .any(|mv| (mv.layer_lo..mv.layer_hi).contains(&layer));
+                let changed = current.device_of_layer(layer) != plan.device_of_layer(layer);
+                assert_eq!(moved, changed, "seed {seed}: diff wrong at layer {layer}");
+            }
+            let want_kv: u64 = (0..traces.n_layers)
+                .filter(|&l| current.device_of_layer(l) != plan.device_of_layer(l))
+                .map(|l| traces.kv_bytes_per_seq[l])
+                .sum();
+            assert_eq!(diff.total_kv_bytes, want_kv, "seed {seed}: kv accounting");
+            1
+        }
+    }
+}
+
+fn run_cases(objective: PlanObjective, base_seed: u64, cases: u64) {
+    let mut migrations = 0usize;
+    for case in 0..cases {
+        let seed = base_seed + case;
+        let mut rng = Rng::new(seed);
+        let cluster0 = random_cluster(&mut rng);
+        let model = random_model(&mut rng);
+        let traces0 =
+            AnalyticProfiler::default().profile(&model, &cluster0, Workload::paper_default());
+        let pool: Vec<usize> = (0..cluster0.len()).collect();
+        let plan0 = match objective {
+            PlanObjective::Latency => algo1(&traces0, &cluster0, &pool, 1),
+            PlanObjective::Throughput => algo2_exact(&traces0, &cluster0, &pool, 1),
+        };
+        let Ok(plan0) = plan0 else { continue }; // OOM instance — skip
+        let baseline = match objective {
+            PlanObjective::Latency => sequential_latency_ms(&plan0, &traces0, &cluster0),
+            PlanObjective::Throughput => pipeline_bottleneck_ms(&plan0, &traces0, &cluster0),
+        };
+        let policy = TriggerPolicy {
+            degrade_factor: 1.01,
+            improve_factor: 1.05,
+            min_interval_ms: 0.0,
+        };
+
+        // random drift
+        let mut cluster = cluster0.clone();
+        let mut traces = traces0.clone();
+        drift(&mut rng, &mut cluster, &mut traces);
+        let mut r = Replanner::new(objective, policy.clone(), 1, baseline);
+        let d = r.evaluate(&plan0, &traces, &cluster, 0.0);
+        migrations += check_migrate(objective, &plan0, &traces, &cluster, d, seed);
+
+        // deterministic crush of every link the plan uses (incl. loopback)
+        let mut crushed = cluster0.clone();
+        let devs = plan0.devices();
+        for w in devs.windows(2) {
+            crushed.set_bandwidth(w[0], w[1], 0.05);
+        }
+        let last = *devs.last().unwrap();
+        if last != crushed.source {
+            crushed.set_bandwidth(last, crushed.source, 0.05);
+        }
+        let mut r = Replanner::new(objective, policy, 1, baseline);
+        let d = r.evaluate(&plan0, &traces0, &crushed, 0.0);
+        migrations += check_migrate(objective, &plan0, &traces0, &crushed, d, seed);
+    }
+    assert!(
+        migrations > 0,
+        "{objective:?}: no case ever migrated — generator broken"
+    );
+}
+
+#[test]
+fn latency_replans_are_safe() {
+    run_cases(PlanObjective::Latency, 0xADA0, 30);
+}
+
+#[test]
+fn throughput_replans_are_safe() {
+    run_cases(PlanObjective::Throughput, 0xBEE0, 20);
+}
