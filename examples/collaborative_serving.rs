@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
     // at 2% of simulated time so comm still matters without making the
     // demo take minutes.
     let compute_scale = vec![6.0, 12.0, 1.5]; // AGX Orin, Orin NX, RTX 3090
-    let engine = Engine::build(
+    let mut engine = Engine::build(
         &manifest,
         &weights,
         handle,

@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
     let plan = LatencyDp::new().plan(&tiny_traces, &demo)?;
     println!("\ntiny model plan on demo cluster: {}", plan.describe());
 
-    let engine = Engine::build(
+    let mut engine = Engine::build(
         &manifest,
         &weights,
         handle,

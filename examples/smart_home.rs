@@ -70,7 +70,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    let engine = Engine::build(
+    let mut engine = Engine::build(
         &manifest,
         &weights,
         handle,

@@ -1,0 +1,16 @@
+//! Serving-throughput bench binary: continuous batching vs fixed groups
+//! on a ragged workload (sim backend).  `cargo bench --bench serving`.
+//! The CI artifact variant is `edgeshard bench serving`.
+
+use edgeshard::repro::serving::{report_markdown, run_bench, ServingBenchConfig};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ServingBenchConfig {
+        requests: 48,
+        ..Default::default()
+    };
+    let report = run_bench(&cfg)?;
+    println!("{}", report_markdown(&report));
+    anyhow::ensure!(report.tokens_identical, "modes diverged");
+    Ok(())
+}

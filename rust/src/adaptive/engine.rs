@@ -29,11 +29,13 @@ use super::monitor::Monitor;
 use super::replan::{Decision, MigrationDiff, Replanner, TriggerPolicy};
 use crate::cluster::{Cluster, LiveCluster};
 use crate::coordinator::api::{GenResult, GroupRequest};
+use crate::coordinator::driver::{drive_groups, DriveHooks, DriveView};
 use crate::coordinator::engine::{wire, EngineConfig, ObsSinks, Wired};
 use crate::coordinator::kvcache::{GroupCache, KvPool};
-use crate::coordinator::stage::{stage_decoders, KvEntry, Payload, Phase, StageExport, StageMsg};
+use crate::coordinator::stage::{stage_decoders, KvEntry, StageExport, StageMsg};
 use crate::metrics::Histogram;
 use crate::netsim::RoutedLink;
+use crate::pipeline::Strategy;
 use crate::planner::{pipeline_bottleneck_ms, sequential_latency_ms, Plan, PlanObjective};
 use crate::profiler::ProfiledTraces;
 use crate::runtime::manifest::Manifest;
@@ -98,7 +100,10 @@ pub struct AdaptiveStats {
     pub tokens: u64,
     pub throughput_tps: f64,
     pub ttft: Histogram,
+    /// Decode-step latency (first tokens excluded — they are TTFT).
     pub iter_latency: Histogram,
+    /// Real rows / total rows over every frame sent.
+    pub padding_efficiency: f64,
     /// Control-loop rounds that ran.
     pub replan_evaluations: u64,
     pub migrations: Vec<MigrationRecord>,
@@ -125,33 +130,88 @@ fn sim_now_ms(t0: Instant, time_scale: f64) -> f64 {
     }
 }
 
-fn send_prefill(wired: &Wired, g: &GroupRequest) -> Result<()> {
-    let msg = StageMsg::Work {
-        group: g.group_id,
-        iter: 0,
-        pos: 0,
-        phase: Phase::Prefill,
-        batch: g.batch,
-        prompt_len: g.prompt_len,
-        payload: Payload::Tokens(g.tokens.clone()),
-    };
-    let bytes = msg.bytes();
-    wired.to_first.send(msg, bytes)
+/// The adaptive engine's interposition on the shared generation driver:
+/// `after_token` runs the replan control loop (and requests a drain
+/// barrier when a decisively better plan exists), `at_barrier` executes
+/// the migration on the quiesced pipeline.
+struct AdaptiveHooks<'h, 'a> {
+    eng: &'h mut AdaptiveEngine<'a>,
+    monitor: &'h mut Monitor,
+    replanner: &'h mut Replanner,
+    sinks: &'h ObsSinks,
+    shared_links: &'h Arc<Mutex<Vec<RoutedLink>>>,
+    t0: Instant,
+    scale: f64,
+    check_every: usize,
+    max_migrations: usize,
+    pending: Option<(Plan, MigrationDiff, f64)>,
+    migrations: Vec<MigrationRecord>,
+    received: u64,
 }
 
-fn send_decode(wired: &Wired, g: &GroupRequest, iter: usize, tokens: Vec<i32>) -> Result<()> {
-    let pos = (g.prompt_len + iter - 1) as i32;
-    let msg = StageMsg::Work {
-        group: g.group_id,
-        iter,
-        pos,
-        phase: Phase::Decode,
-        batch: g.batch,
-        prompt_len: g.prompt_len,
-        payload: Payload::Tokens(tokens),
-    };
-    let bytes = msg.bytes();
-    wired.to_first.send(msg, bytes)
+impl DriveHooks for AdaptiveHooks<'_, '_> {
+    fn wants_view(&mut self, received: u64) -> bool {
+        self.received = received;
+        // the cheap gate: a replan is only considered every
+        // `check_every` tokens, never while one is already pending
+        self.pending.is_none()
+            && self.migrations.len() < self.max_migrations
+            && self.check_every > 0
+            && received % self.check_every as u64 == 0
+    }
+
+    fn after_token(&mut self, view: &DriveView) -> Result<bool> {
+        // control loop: consider replanning once everything prefilled
+        if !view.all_prefilled {
+            return Ok(false);
+        }
+        self.monitor.drain();
+        let obs_cluster = self.monitor.observed_cluster();
+        let obs_traces = self
+            .monitor
+            .observed_traces(&self.eng.base_traces, &self.eng.plan);
+        let decision = self.replanner.evaluate(
+            &self.eng.plan,
+            &obs_traces,
+            &obs_cluster,
+            sim_now_ms(self.t0, self.scale),
+        );
+        if let Decision::Migrate {
+            plan,
+            diff,
+            candidate_pred_ms,
+            ..
+        } = decision
+        {
+            if self.eng.preload_fits(&plan, &view.unfinished_batches) {
+                self.pending = Some((plan, diff, candidate_pred_ms));
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
+    fn at_barrier(&mut self, wired: &mut Wired) -> Result<()> {
+        let Some((new_plan, diff, cand_pred)) = self.pending.take() else {
+            return Ok(());
+        };
+        // On a `None` the migration aborted and the old pipeline (or a
+        // rewire of it) is still serving the current plan.
+        if let Some(record) = self.eng.migrate(
+            wired,
+            self.sinks,
+            self.shared_links,
+            &new_plan,
+            &diff,
+            self.received,
+        )? {
+            self.replanner
+                .adopt(cand_pred, sim_now_ms(self.t0, self.scale));
+            self.migrations.push(record);
+            self.eng.plan = new_plan;
+        }
+        Ok(())
+    }
 }
 
 impl<'a> AdaptiveEngine<'a> {
@@ -225,44 +285,8 @@ impl<'a> AdaptiveEngine<'a> {
         groups: &[GroupRequest],
         window: usize,
     ) -> Result<(Vec<GenResult>, AdaptiveStats)> {
-        struct Active<'g> {
-            req: &'g GroupRequest,
-            rows: Vec<Vec<i32>>,
-            start: Instant,
-            ttft_ms: Option<f64>,
-            last_iter_at: Instant,
-            done: bool,
-            in_flight: bool,
-        }
-        fn admit(g: &GroupRequest) -> Active<'_> {
-            Active {
-                req: g,
-                rows: vec![Vec::new(); g.batch],
-                start: Instant::now(),
-                ttft_ms: None,
-                last_iter_at: Instant::now(),
-                done: false,
-                in_flight: true,
-            }
-        }
-
-        // Same admission contract as the static engine — reject up front
-        // rather than letting a stage thread die on a missing variant.
-        for g in groups {
-            anyhow::ensure!(
-                self.manifest.batch_sizes.contains(&g.batch),
-                "batch {} not compiled (have {:?})",
-                g.batch,
-                self.manifest.batch_sizes
-            );
-            anyhow::ensure!(
-                g.prompt_len == self.manifest.config.prefill_len,
-                "prompt len {} != compiled {}",
-                g.prompt_len,
-                self.manifest.config.prefill_len
-            );
-        }
-
+        let driver_cfg =
+            crate::coordinator::engine::driver_cfg(self.manifest, &self.plan, &self.cfg.engine);
         let believed = self.live.snapshot();
         let (mut monitor, mon_handle) = Monitor::new(believed.clone(), self.cfg.monitor_alpha);
         let sinks = mon_handle.sinks();
@@ -301,141 +325,42 @@ impl<'a> AdaptiveEngine<'a> {
 
         let t0 = Instant::now();
         let scale = self.cfg.engine.time_scale;
-        let mut ttft = Histogram::new();
-        let mut iter_lat = Histogram::new();
-        let mut results = Vec::new();
-        let mut active: HashMap<u64, Active> = HashMap::new();
-        let mut queue = groups.iter();
-        let mut in_flight_groups = 0usize;
-        let mut received = 0u64;
-        let mut real_tokens = 0u64;
-        let mut pending: Option<(Plan, MigrationDiff, f64)> = None;
-        let mut held: Vec<(u64, usize, Vec<i32>)> = Vec::new();
-        let mut migrations: Vec<MigrationRecord> = Vec::new();
-
-        // prime the window
-        while in_flight_groups < window {
-            let Some(g) = queue.next() else { break };
-            send_prefill(&wired, g)?;
-            active.insert(g.group_id, admit(g));
-            in_flight_groups += 1;
-        }
-
-        while in_flight_groups > 0 {
-            let tok = wired
-                .token_rx
-                .recv()
-                .map_err(|_| anyhow!("adaptive pipeline closed unexpectedly"))?;
-            received += 1;
-            let a = active
-                .get_mut(&tok.group)
-                .with_context(|| format!("unknown group {}", tok.group))?;
-            a.in_flight = false;
-            let now = Instant::now();
-            iter_lat.record(now.duration_since(a.last_iter_at).as_secs_f64() * 1e3);
-            a.last_iter_at = now;
-            if a.ttft_ms.is_none() {
-                let ms = now.duration_since(a.start).as_secs_f64() * 1e3;
-                a.ttft_ms = Some(ms);
-                ttft.record(ms);
-            }
-            for (row, &t) in a.rows.iter_mut().zip(&tok.tokens) {
-                row.push(t);
-            }
-            real_tokens += a.req.real() as u64;
-            let next_iter = tok.iter + 1;
-            if next_iter < a.req.max_new_tokens {
-                if pending.is_some() {
-                    held.push((tok.group, next_iter, tok.tokens));
-                } else {
-                    send_decode(&wired, a.req, next_iter, tok.tokens)?;
-                    a.in_flight = true;
-                }
-            } else {
-                a.done = true;
-                let total = now.duration_since(a.start).as_secs_f64() * 1e3;
-                for (i, &rid) in a.req.request_ids.iter().enumerate() {
-                    results.push(GenResult {
-                        id: rid,
-                        tokens: a.rows[i].clone(),
-                        ttft_ms: a.ttft_ms.unwrap_or(0.0),
-                        total_ms: total,
-                    });
-                }
-                wired.to_first.send(StageMsg::Free { group: tok.group }, 16)?;
-                in_flight_groups -= 1;
-                if pending.is_none() {
-                    if let Some(g) = queue.next() {
-                        send_prefill(&wired, g)?;
-                        active.insert(g.group_id, admit(g));
-                        in_flight_groups += 1;
-                    }
-                }
-            }
-
-            // control loop: consider replanning once everything prefilled
-            if pending.is_none()
-                && migrations.len() < self.cfg.max_migrations
-                && self.cfg.check_every > 0
-                && received % self.cfg.check_every as u64 == 0
-                && active.values().all(|x| x.done || x.ttft_ms.is_some())
-            {
-                monitor.drain();
-                let obs_cluster = monitor.observed_cluster();
-                let obs_traces = monitor.observed_traces(&self.base_traces, &self.plan);
-                let decision = replanner.evaluate(
-                    &self.plan,
-                    &obs_traces,
-                    &obs_cluster,
-                    sim_now_ms(t0, scale),
-                );
-                if let Decision::Migrate {
-                    plan,
-                    diff,
-                    candidate_pred_ms,
-                    ..
-                } = decision
-                {
-                    let batches: Vec<usize> =
-                        active.values().filter(|x| !x.done).map(|x| x.req.batch).collect();
-                    if self.preload_fits(&plan, &batches) {
-                        pending = Some((plan, diff, candidate_pred_ms));
-                    }
-                }
-            }
-
-            // barrier reached? (every unfinished group drained)
-            if pending.is_some() && active.values().all(|x| x.done || !x.in_flight) {
-                let (new_plan, diff, cand_pred) = pending.take().unwrap();
-                // On a `None` the migration aborted and the old pipeline
-                // (or a rewire of it) is still serving the current plan.
-                if let Some(record) =
-                    self.migrate(&mut wired, &sinks, &shared_links, &new_plan, &diff, received)?
-                {
-                    replanner.adopt(cand_pred, sim_now_ms(t0, scale));
-                    migrations.push(record);
-                    self.plan = new_plan;
-                }
-                for (gid, it, toks) in held.drain(..) {
-                    let a = active
-                        .get_mut(&gid)
-                        .with_context(|| format!("held group {gid} vanished"))?;
-                    send_decode(&wired, a.req, it, toks)?;
-                    a.in_flight = true;
-                }
-                while in_flight_groups < window {
-                    let Some(g) = queue.next() else { break };
-                    send_prefill(&wired, g)?;
-                    active.insert(g.group_id, admit(g));
-                    in_flight_groups += 1;
-                }
-            }
-        }
+        let check_every = self.cfg.check_every;
+        let max_migrations = self.cfg.max_migrations;
+        let mut hooks = AdaptiveHooks {
+            eng: self,
+            monitor: &mut monitor,
+            replanner: &mut replanner,
+            sinks: &sinks,
+            shared_links: &shared_links,
+            t0,
+            scale,
+            check_every,
+            max_migrations,
+            pending: None,
+            migrations: Vec::new(),
+            received: 0,
+        };
+        // The shared drive loop owns admission, stats and the drain
+        // barrier; everything adaptive happens inside the hooks.
+        let drive = drive_groups(
+            &mut wired,
+            &driver_cfg,
+            groups,
+            window,
+            Strategy::NoBubble,
+            &mut hooks,
+        );
+        let migrations = std::mem::take(&mut hooks.migrations);
+        drop(hooks);
+        let (results, dstats) = drive?;
 
         if let Some(d) = driver {
             d.stop();
         }
-        let _ = wired.to_first.send(StageMsg::Shutdown, 16);
+        let _ = wired
+            .to_first
+            .send(StageMsg::Shutdown, StageMsg::Shutdown.wire_bytes());
         for h in wired.handles.drain(..) {
             match h.join() {
                 Ok(r) => r?,
@@ -443,17 +368,13 @@ impl<'a> AdaptiveEngine<'a> {
             }
         }
 
-        let makespan = t0.elapsed().as_secs_f64() * 1e3;
         let stats = AdaptiveStats {
-            makespan_ms: makespan,
-            tokens: real_tokens,
-            throughput_tps: if makespan > 0.0 {
-                real_tokens as f64 / (makespan / 1e3)
-            } else {
-                0.0
-            },
-            ttft,
-            iter_latency: iter_lat,
+            makespan_ms: dstats.makespan_ms,
+            tokens: dstats.tokens,
+            throughput_tps: dstats.throughput_tps,
+            ttft: dstats.ttft,
+            iter_latency: dstats.iter_latency,
+            padding_efficiency: dstats.padding_efficiency,
             replan_evaluations: replanner.evaluations(),
             migrations,
             final_plan: self.plan.describe(),
@@ -512,6 +433,7 @@ impl<'a> AdaptiveEngine<'a> {
                         layers,
                         batch,
                         bytes,
+                        live: vec![true; batch],
                     },
                 ));
             }
@@ -538,7 +460,9 @@ impl<'a> AdaptiveEngine<'a> {
     ) -> Result<Option<MigrationRecord>> {
         // 1. snapshot every stage's resident KV caches
         let (reply_tx, reply_rx) = mpsc::channel();
-        wired.to_first.send(StageMsg::Export { reply: reply_tx }, 16)?;
+        let export = StageMsg::Export { reply: reply_tx };
+        let export_bytes = export.wire_bytes();
+        wired.to_first.send(export, export_bytes)?;
         let mut exports: Vec<StageExport> = Vec::new();
         for _ in 0..self.plan.n_stages() {
             exports.push(
@@ -562,7 +486,9 @@ impl<'a> AdaptiveEngine<'a> {
         };
 
         // 3. tear down the old pipeline
-        wired.to_first.send(StageMsg::Shutdown, 16)?;
+        wired
+            .to_first
+            .send(StageMsg::Shutdown, StageMsg::Shutdown.wire_bytes())?;
         for h in wired.handles.drain(..) {
             match h.join() {
                 Ok(r) => r?,

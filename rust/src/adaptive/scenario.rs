@@ -67,6 +67,8 @@ pub struct RunSummary {
     pub tokens_per_s: f64,
     pub p95_iter_ms: f64,
     pub makespan_ms: f64,
+    /// Real rows / total rows over every frame the engine sent.
+    pub padding_efficiency: f64,
     pub results: Vec<GenResult>,
 }
 
@@ -91,26 +93,9 @@ pub struct ScenarioReport {
     pub final_plan: String,
 }
 
-/// The tiny-but-fast model config the scenarios run (small enough that
-/// debug-build compute stays well under the simulated network costs).
+/// The tiny-but-fast model config the scenarios run.
 fn mini_config() -> ManifestConfig {
-    ManifestConfig {
-        name: "tinyllama-mini-sim".into(),
-        vocab_size: 64,
-        d_model: 32,
-        n_layers: 4,
-        n_heads: 2,
-        n_kv_heads: 2,
-        d_ff: 64,
-        max_seq: 128,
-        prefill_len: 16,
-        layer_param_order: [
-            "attn_norm", "wq", "wk", "wv", "wo", "ffn_norm", "w_gate", "w_up", "w_down",
-        ]
-        .iter()
-        .map(|s| s.to_string())
-        .collect(),
-    }
+    ManifestConfig::mini_sim("tinyllama-mini-sim", 16, 128)
 }
 
 /// The scenario's 3-device cluster: the source (d0), the initially
@@ -155,6 +140,7 @@ fn summarize(
     tokens: u64,
     makespan_ms: f64,
     iter_latency: &mut crate::metrics::Histogram,
+    padding_efficiency: f64,
 ) -> RunSummary {
     RunSummary {
         label: label.to_string(),
@@ -165,6 +151,7 @@ fn summarize(
         },
         p95_iter_ms: iter_latency.percentile(95.0),
         makespan_ms,
+        padding_efficiency,
         results,
     }
 }
@@ -233,10 +220,11 @@ pub fn link_drop_scenario(cfg: &ScenarioConfig) -> Result<ScenarioReport> {
         a_stats.tokens,
         a_stats.makespan_ms,
         &mut a_stats.iter_latency,
+        a_stats.padding_efficiency,
     );
 
     // 2. static plan under the same dynamics
-    let s_engine =
+    let mut s_engine =
         Engine::build(&manifest, &weights, exec.clone(), &plan, &cluster, &engine_cfg)?;
     let links = Arc::new(Mutex::new(s_engine.routed_links()));
     let driver = DynamicsDriver::spawn(
@@ -257,10 +245,11 @@ pub fn link_drop_scenario(cfg: &ScenarioConfig) -> Result<ScenarioReport> {
         s_stats.tokens,
         s_stats.makespan_ms,
         &mut s_stats.iter_latency,
+        s_stats.padding_efficiency,
     );
 
     // 3. static plan, dynamics disabled (the control)
-    let c_engine =
+    let mut c_engine =
         Engine::build(&manifest, &weights, exec.clone(), &plan, &cluster, &engine_cfg)?;
     let (c_results, mut c_stats) = c_engine
         .generate_sequential(std::slice::from_ref(&group))
@@ -272,6 +261,7 @@ pub fn link_drop_scenario(cfg: &ScenarioConfig) -> Result<ScenarioReport> {
         c_stats.tokens,
         c_stats.makespan_ms,
         &mut c_stats.iter_latency,
+        c_stats.padding_efficiency,
     );
 
     Ok(ScenarioReport {
@@ -298,12 +288,19 @@ pub fn report_markdown(r: &ScenarioReport) -> String {
                 s.label.clone(),
                 format!("{:.1}", s.tokens_per_s),
                 format!("{:.2}", s.p95_iter_ms),
+                format!("{:.2}", s.padding_efficiency),
                 format!("{:.0}", s.makespan_ms),
             ]
         })
         .collect();
     out.push_str(&markdown_table(
-        &["engine", "tokens/s", "p95 inter-token (ms)", "makespan (ms)"],
+        &[
+            "engine",
+            "tokens/s",
+            "p95 inter-token (ms)",
+            "padding eff.",
+            "makespan (ms)",
+        ],
         &rows,
     ));
     out.push('\n');

@@ -34,9 +34,14 @@ impl GroupRequest {
 pub struct GenResult {
     pub id: u64,
     pub tokens: Vec<i32>,
-    /// Time-to-first-token, milliseconds.
+    /// Time-to-first-token, milliseconds, measured from when serving
+    /// started (queue wait included — what a client would observe), the
+    /// same baseline in every serving mode.
     pub ttft_ms: f64,
-    /// Total generation wall time, milliseconds.
+    /// Completion wall time, milliseconds, on the same drive-start
+    /// baseline as `ttft_ms` (so `ttft_ms <= total_ms` always; for a
+    /// request served alone this is exactly its generation time, the
+    /// paper's latency metric).
     pub total_ms: f64,
 }
 

@@ -11,6 +11,14 @@
 
 use super::api::{GenRequest, GroupRequest};
 
+/// Normalize one prompt to the compiled length (cycle if short, truncate
+/// if long).  Shared by the batcher and the continuous-batching slot
+/// scheduler so every serving mode fits prompts identically.
+pub fn fit_prompt(prompt: &[i32], prompt_len: usize) -> Vec<i32> {
+    assert!(!prompt.is_empty(), "empty prompt");
+    (0..prompt_len).map(|i| prompt[i % prompt.len()]).collect()
+}
+
 /// Request → group packing.
 #[derive(Debug, Clone)]
 pub struct Batcher {
@@ -46,10 +54,7 @@ impl Batcher {
 
     /// Normalize one prompt to the compiled length (cycle if short).
     fn fit_prompt(&self, prompt: &[i32]) -> Vec<i32> {
-        assert!(!prompt.is_empty(), "empty prompt");
-        (0..self.prompt_len)
-            .map(|i| prompt[i % prompt.len()])
-            .collect()
+        fit_prompt(prompt, self.prompt_len)
     }
 
     /// Pack a slice of requests into groups.  `max_new` must be uniform

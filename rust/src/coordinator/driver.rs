@@ -1,0 +1,560 @@
+//! The unified generation driver.
+//!
+//! Exactly one loop owns the autoregressive feedback cycle — receive a
+//! head token frame, fold stats, release the next iteration — for every
+//! serving mode:
+//!
+//! * **Group serving** ([`drive_groups`]): the classic sequential /
+//!   pipelined paths.  [`crate::coordinator::Engine`] drives it with
+//!   [`NoHooks`]; the adaptive engine drives the *same* loop with hooks
+//!   that interpose its replan control loop and migration barrier — so a
+//!   stats fix or admission change lands in both engines by construction
+//!   (previously `Engine::run` and `AdaptiveEngine::run` were duplicated).
+//! * **Continuous batching** ([`drive_slots`]): iteration-level
+//!   scheduling via the [`super::scheduler::SlotScheduler`] — admissions,
+//!   per-iteration slot maps, per-row retirement.
+//!
+//! ## Barriers
+//!
+//! Hooks request a **drain barrier** by returning `true` from
+//! [`DriveHooks::after_token`]: the driver stops releasing decode
+//! iterations (holding them in a queue), waits until every unfinished
+//! group has no iteration in flight, then calls
+//! [`DriveHooks::at_barrier`] — which may tear down and replace the wired
+//! pipeline (KV migration) — and finally releases the held iterations and
+//! re-primes the admission window.  The Bubble strategy's per-iteration
+//! barrier is the degenerate in-loop case of the same machinery.
+//!
+//! ## Stats
+//!
+//! TTFT is recorded per group/request on its first token, measured from
+//! drive start in every mode (client-observed: queue wait included); that
+//! first token's latency is *not* recorded into `iter_latency` (it
+//! includes prefill — mixing it in polluted the decode-step histogram).
+//! `padding_efficiency` = real rows / total rows carried by every frame:
+//! 1.0 means no compute or KV was spent on padding or dead slots.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::time::Instant;
+
+use super::api::{GenRequest, GenResult, GroupRequest};
+use super::engine::Wired;
+use super::scheduler::{Action, ContinuousConfig, SeqEvent, SlotScheduler};
+use super::stage::{Payload, Phase, StageMsg, TokenOrigin};
+use crate::metrics::Histogram;
+use crate::pipeline::Strategy;
+
+/// Compiled-shape contract the driver validates admissions against.
+#[derive(Debug, Clone)]
+pub struct DriverCfg {
+    pub prompt_len: usize,
+    pub batch_sizes: Vec<usize>,
+    /// Longest absolute position the compiled caches hold.
+    pub max_seq: usize,
+    /// Per-stage KV budget, bytes.
+    pub kv_budget_bytes: u64,
+    /// Padded KV bytes one sequence row costs on the *heaviest* stage —
+    /// continuous-batching admission control budgets against this (0 =
+    /// unknown, check skipped).
+    pub row_bytes_worst: u64,
+}
+
+/// Aggregate statistics of one drive, embedded into
+/// [`super::engine::EngineStats`] / `AdaptiveStats`.
+#[derive(Debug)]
+pub struct DriveStats {
+    pub makespan_ms: f64,
+    /// Real (non-padding) tokens generated.
+    pub tokens: u64,
+    pub throughput_tps: f64,
+    pub ttft: Histogram,
+    /// Decode-step latency (first tokens excluded — they are TTFT).
+    pub iter_latency: Histogram,
+    /// Real rows / total rows over every work frame sent.
+    pub padding_efficiency: f64,
+}
+
+/// What the hooks may inspect after each folded token frame.
+#[derive(Debug)]
+pub struct DriveView {
+    pub received: u64,
+    /// Batch sizes of the groups still generating.
+    pub unfinished_batches: Vec<usize>,
+    /// Whether every active group got its first token (prefill settled).
+    pub all_prefilled: bool,
+}
+
+/// Interposition points for adaptive serving.  The default impls are
+/// no-ops: plain static serving.
+pub trait DriveHooks {
+    /// Whether this hook wants per-token callbacks at all.  Defaults to
+    /// `true`; [`NoHooks`] opts out so plain serving skips building the
+    /// per-token [`DriveView`].
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    /// Cheap per-token pre-gate, called (with the running token count)
+    /// before the driver pays for a [`DriveView`].  Return `false` to
+    /// skip [`DriveHooks::after_token`] this token — e.g. the adaptive
+    /// control loop only evaluates every `check_every` tokens.
+    fn wants_view(&mut self, received: u64) -> bool {
+        let _ = received;
+        true
+    }
+
+    /// Called after a folded token frame that passed
+    /// [`DriveHooks::wants_view`].  Return `true` to request a drain
+    /// barrier before any further decode iteration is released.
+    fn after_token(&mut self, view: &DriveView) -> Result<bool> {
+        let _ = view;
+        Ok(false)
+    }
+
+    /// Called once the requested barrier is reached (no unfinished group
+    /// has an iteration in flight).  May replace `wired` wholesale — the
+    /// driver continues on whatever pipeline this leaves behind.
+    fn at_barrier(&mut self, wired: &mut Wired) -> Result<()> {
+        let _ = wired;
+        Ok(())
+    }
+}
+
+/// Plain static serving: no control loop, no barriers.
+pub struct NoHooks;
+impl DriveHooks for NoHooks {
+    fn enabled(&self) -> bool {
+        false
+    }
+}
+
+pub(crate) fn send_prefill(wired: &Wired, g: &GroupRequest) -> Result<()> {
+    let msg = StageMsg::Work {
+        group: g.group_id,
+        iter: 0,
+        pos: 0,
+        phase: Phase::Prefill,
+        batch: g.batch,
+        prompt_len: g.prompt_len,
+        payload: Payload::Tokens(g.tokens.clone()),
+    };
+    let bytes = msg.wire_bytes();
+    wired.to_first.send(msg, bytes)
+}
+
+pub(crate) fn send_decode(
+    wired: &Wired,
+    g: &GroupRequest,
+    iter: usize,
+    tokens: Vec<i32>,
+) -> Result<()> {
+    let pos = (g.prompt_len + iter - 1) as i32;
+    let msg = StageMsg::Work {
+        group: g.group_id,
+        iter,
+        pos,
+        phase: Phase::Decode,
+        batch: g.batch,
+        prompt_len: g.prompt_len,
+        payload: Payload::Tokens(tokens),
+    };
+    let bytes = msg.wire_bytes();
+    wired.to_first.send(msg, bytes)
+}
+
+fn send_control(wired: &Wired, msg: StageMsg) -> Result<()> {
+    let bytes = msg.wire_bytes();
+    wired.to_first.send(msg, bytes)
+}
+
+/// Drive a set of pre-packed groups to completion: `window` groups in
+/// flight, Bubble / No-bubble release policy, hooks for the adaptive
+/// control loop.  See the module docs.
+pub fn drive_groups(
+    wired: &mut Wired,
+    cfg: &DriverCfg,
+    groups: &[GroupRequest],
+    window: usize,
+    strategy: Strategy,
+    hooks: &mut dyn DriveHooks,
+) -> Result<(Vec<GenResult>, DriveStats)> {
+    struct Active<'a> {
+        req: &'a GroupRequest,
+        rows: Vec<Vec<i32>>,
+        ttft_ms: Option<f64>,
+        last_iter_at: Instant,
+        done: bool,
+        in_flight: bool,
+    }
+    fn admit(g: &GroupRequest) -> Active<'_> {
+        Active {
+            req: g,
+            rows: vec![Vec::new(); g.batch],
+            ttft_ms: None,
+            last_iter_at: Instant::now(),
+            done: false,
+            in_flight: true,
+        }
+    }
+
+    // Same admission contract for every caller — reject up front rather
+    // than letting a stage thread die on a missing compiled variant.
+    for g in groups {
+        anyhow::ensure!(
+            cfg.batch_sizes.contains(&g.batch),
+            "batch {} not compiled (have {:?})",
+            g.batch,
+            cfg.batch_sizes
+        );
+        anyhow::ensure!(
+            g.prompt_len == cfg.prompt_len,
+            "prompt len {} != compiled {}",
+            g.prompt_len,
+            cfg.prompt_len
+        );
+    }
+
+    let t0 = Instant::now();
+    let mut ttft = Histogram::new();
+    let mut iter_lat = Histogram::new();
+    let mut results = Vec::new();
+    let mut active: HashMap<u64, Active> = HashMap::new();
+    let mut queue = groups.iter();
+    let mut in_flight_groups = 0usize;
+    let mut received = 0u64;
+    let mut real_tokens = 0u64;
+    let mut rows_real = 0u64;
+    let mut rows_total = 0u64;
+    // iterations held back: by the Bubble strategy (per-iteration sync)
+    let mut bubble_barrier: Vec<(u64, usize, Vec<i32>)> = Vec::new();
+    // …or by a hook-requested drain barrier (e.g. pending migration)
+    let mut pending_barrier = false;
+    let mut held: Vec<(u64, usize, Vec<i32>)> = Vec::new();
+
+    // prime the window
+    while in_flight_groups < window {
+        let Some(g) = queue.next() else { break };
+        send_prefill(wired, g)?;
+        rows_real += g.real() as u64;
+        rows_total += g.batch as u64;
+        active.insert(g.group_id, admit(g));
+        in_flight_groups += 1;
+    }
+
+    while in_flight_groups > 0 {
+        let tok = wired
+            .token_rx
+            .recv()
+            .map_err(|_| anyhow!("pipeline closed unexpectedly"))?;
+        anyhow::ensure!(
+            tok.origin == TokenOrigin::Group,
+            "continuous-batching token in group mode"
+        );
+        received += 1;
+        let a = active
+            .get_mut(&tok.group)
+            .with_context(|| format!("unknown group {}", tok.group))?;
+        a.in_flight = false;
+        let now = Instant::now();
+        if a.ttft_ms.is_none() {
+            // client-observed TTFT: measured from drive start (queue wait
+            // included), recorded once per real request so the histogram
+            // weights clients equally across serving modes
+            let ms = now.duration_since(t0).as_secs_f64() * 1e3;
+            a.ttft_ms = Some(ms);
+            for _ in 0..a.req.real() {
+                ttft.record(ms);
+            }
+        } else {
+            // the first token's latency IS the TTFT (prefill included) —
+            // only subsequent gaps are decode-step latency
+            iter_lat.record(now.duration_since(a.last_iter_at).as_secs_f64() * 1e3);
+        }
+        a.last_iter_at = now;
+        for (row, &t) in a.rows.iter_mut().zip(&tok.tokens) {
+            row.push(t);
+        }
+        real_tokens += a.req.real() as u64;
+        let next_iter = tok.iter + 1;
+        if next_iter < a.req.max_new_tokens {
+            if pending_barrier {
+                held.push((tok.group, next_iter, tok.tokens));
+            } else {
+                match strategy {
+                    Strategy::Bubble => bubble_barrier.push((tok.group, next_iter, tok.tokens)),
+                    _ => {
+                        send_decode(wired, a.req, next_iter, tok.tokens)?;
+                        rows_real += a.req.real() as u64;
+                        rows_total += a.req.batch as u64;
+                        a.in_flight = true;
+                    }
+                }
+            }
+        } else {
+            // group complete — completion time shares the drive-start
+            // baseline with ttft_ms (and with drive_slots), so the two
+            // are ordered and comparable across serving modes
+            a.done = true;
+            let total = now.duration_since(t0).as_secs_f64() * 1e3;
+            for (i, &rid) in a.req.request_ids.iter().enumerate() {
+                results.push(GenResult {
+                    id: rid,
+                    tokens: a.rows[i].clone(),
+                    ttft_ms: a.ttft_ms.unwrap_or(0.0),
+                    total_ms: total,
+                });
+            }
+            send_control(wired, StageMsg::Free { group: tok.group })?;
+            in_flight_groups -= 1;
+            // admit the next queued group (deferred while a barrier is
+            // pending: the window re-primes after the barrier)
+            if !pending_barrier {
+                if let Some(g) = queue.next() {
+                    send_prefill(wired, g)?;
+                    rows_real += g.real() as u64;
+                    rows_total += g.batch as u64;
+                    active.insert(g.group_id, admit(g));
+                    in_flight_groups += 1;
+                }
+            }
+        }
+
+        // Bubble barrier: release the next iteration only when every
+        // unfinished group has delivered the current one.
+        if strategy == Strategy::Bubble && !pending_barrier {
+            let waiting = active.values().filter(|a| !a.done).count();
+            if bubble_barrier.len() == waiting && !bubble_barrier.is_empty() {
+                for (gid, it, toks) in bubble_barrier.drain(..) {
+                    let a = active.get_mut(&gid).expect("barrier group vanished");
+                    send_decode(wired, a.req, it, toks)?;
+                    rows_real += a.req.real() as u64;
+                    rows_total += a.req.batch as u64;
+                    a.in_flight = true;
+                }
+            }
+        }
+
+        // hooks: the adaptive control loop rides here (skipped entirely
+        // for plain serving, and gated by the cheap counter check before
+        // the view — which costs an allocation — is built)
+        if hooks.enabled() && hooks.wants_view(received) {
+            let view = DriveView {
+                received,
+                unfinished_batches: active
+                    .values()
+                    .filter(|x| !x.done)
+                    .map(|x| x.req.batch)
+                    .collect(),
+                all_prefilled: active.values().all(|x| x.done || x.ttft_ms.is_some()),
+            };
+            if hooks.after_token(&view)? {
+                pending_barrier = true;
+            }
+        }
+
+        // drain barrier reached? (no unfinished group has work in flight)
+        if pending_barrier && active.values().all(|x| x.done || !x.in_flight) {
+            // anything the Bubble strategy was staging is drained too
+            held.append(&mut bubble_barrier);
+            hooks.at_barrier(wired)?;
+            pending_barrier = false;
+            for (gid, it, toks) in held.drain(..) {
+                let a = active
+                    .get_mut(&gid)
+                    .with_context(|| format!("held group {gid} vanished"))?;
+                send_decode(wired, a.req, it, toks)?;
+                rows_real += a.req.real() as u64;
+                rows_total += a.req.batch as u64;
+                a.in_flight = true;
+            }
+            while in_flight_groups < window {
+                let Some(g) = queue.next() else { break };
+                send_prefill(wired, g)?;
+                rows_real += g.real() as u64;
+                rows_total += g.batch as u64;
+                active.insert(g.group_id, admit(g));
+                in_flight_groups += 1;
+            }
+        }
+    }
+
+    Ok((results, finish_stats(t0, real_tokens, ttft, iter_lat, rows_real, rows_total)))
+}
+
+/// Drive raw requests through the iteration-level slot scheduler
+/// (continuous batching).  Requests are admitted into compiled batch
+/// slots as capacity frees up, retire individually, and every frame
+/// carries a per-iteration slot map.  See [`super::scheduler`].
+pub fn drive_slots(
+    wired: &mut Wired,
+    cfg: &DriverCfg,
+    requests: &[GenRequest],
+    ccfg: &ContinuousConfig,
+) -> Result<(Vec<GenResult>, DriveStats)> {
+    // admissions prefill at batch 1, so that variant must be compiled
+    anyhow::ensure!(
+        cfg.batch_sizes.contains(&1),
+        "continuous batching needs a compiled batch-1 prefill (have {:?})",
+        cfg.batch_sizes
+    );
+    for r in requests {
+        anyhow::ensure!(
+            cfg.prompt_len + r.max_new_tokens <= cfg.max_seq,
+            "request {}: {} prompt + {} new tokens exceeds compiled max_seq {}",
+            r.id,
+            cfg.prompt_len,
+            r.max_new_tokens,
+            cfg.max_seq
+        );
+    }
+    let mut sched = SlotScheduler::new(ccfg, cfg.prompt_len, cfg.batch_sizes.clone(), requests)?;
+    // Reject up front a slot configuration whose fully-admitted state
+    // could not fit the per-stage KV budget — failing here beats a stage
+    // thread dying on an over-budget insert_row mid-generation.  (Demand
+    // paging / deferred admission under budget pressure is a ROADMAP
+    // follow-on.)
+    let worst = sched.worst_case_rows() as u64 * cfg.row_bytes_worst;
+    anyhow::ensure!(
+        cfg.row_bytes_worst == 0 || worst <= cfg.kv_budget_bytes,
+        "continuous-batching slots need up to {} KV bytes on the heaviest stage \
+         (budget {}): lower `runs`/`max_batch` or raise the KV budget",
+        worst,
+        cfg.kv_budget_bytes
+    );
+
+    let t0 = Instant::now();
+    let mut ttft = Histogram::new();
+    let mut iter_lat = Histogram::new();
+    let mut results = Vec::new();
+    let mut real_tokens = 0u64;
+    // closed-loop: every request is enqueued at t0, so TTFT includes
+    // queue wait — the number a client of the serving system would see
+    let mut ttft_by_req: HashMap<u64, f64> = HashMap::new();
+    let mut last_step_at: HashMap<u64, Instant> = HashMap::new();
+    let mut expecting = 0usize;
+
+    loop {
+        for action in sched.pump() {
+            match action {
+                Action::Admit {
+                    run,
+                    slot,
+                    run_batch,
+                    prompt,
+                } => {
+                    let msg = StageMsg::Admit {
+                        run,
+                        slot,
+                        run_batch,
+                        prompt_len: cfg.prompt_len,
+                        payload: Payload::Tokens(prompt),
+                    };
+                    let bytes = msg.wire_bytes();
+                    wired.to_first.send(msg, bytes)?;
+                    expecting += 1;
+                }
+                Action::Step {
+                    run,
+                    iter,
+                    batch,
+                    pos,
+                    tokens,
+                } => {
+                    let msg = StageMsg::Step {
+                        run,
+                        iter,
+                        batch,
+                        pos,
+                        payload: Payload::Tokens(tokens),
+                    };
+                    let bytes = msg.wire_bytes();
+                    wired.to_first.send(msg, bytes)?;
+                    expecting += 1;
+                }
+                Action::Evict { run, slot } => {
+                    send_control(wired, StageMsg::Evict { run, slot })?
+                }
+                Action::Compact {
+                    run,
+                    new_batch,
+                    moves,
+                } => send_control(
+                    wired,
+                    StageMsg::Compact {
+                        run,
+                        new_batch,
+                        moves,
+                    },
+                )?,
+                Action::FreeRun { run } => send_control(wired, StageMsg::Free { group: run })?,
+            }
+        }
+        if expecting == 0 {
+            break;
+        }
+        let tok = wired
+            .token_rx
+            .recv()
+            .map_err(|_| anyhow!("pipeline closed unexpectedly"))?;
+        expecting -= 1;
+        let now = Instant::now();
+        for ev in sched.on_token(&tok)? {
+            match ev {
+                SeqEvent::First { req_id } => {
+                    real_tokens += 1;
+                    let ms = now.duration_since(t0).as_secs_f64() * 1e3;
+                    ttft.record(ms);
+                    ttft_by_req.insert(req_id, ms);
+                }
+                SeqEvent::StepDone { run, live } => {
+                    real_tokens += live as u64;
+                    // gaps between a run's consecutive steps are the
+                    // decode-step latency; the first has no predecessor
+                    if let Some(prev) = last_step_at.insert(run, now) {
+                        iter_lat.record(now.duration_since(prev).as_secs_f64() * 1e3);
+                    }
+                }
+                SeqEvent::Finished { req_id, tokens } => {
+                    results.push(GenResult {
+                        id: req_id,
+                        tokens,
+                        ttft_ms: ttft_by_req.get(&req_id).copied().unwrap_or(0.0),
+                        total_ms: now.duration_since(t0).as_secs_f64() * 1e3,
+                    });
+                }
+            }
+        }
+    }
+    anyhow::ensure!(sched.done(), "slot scheduler stalled with work left");
+
+    let (rows_real, rows_total) = sched.rows();
+    Ok((results, finish_stats(t0, real_tokens, ttft, iter_lat, rows_real, rows_total)))
+}
+
+fn finish_stats(
+    t0: Instant,
+    tokens: u64,
+    ttft: Histogram,
+    iter_latency: Histogram,
+    rows_real: u64,
+    rows_total: u64,
+) -> DriveStats {
+    let makespan_ms = t0.elapsed().as_secs_f64() * 1e3;
+    DriveStats {
+        makespan_ms,
+        tokens,
+        throughput_tps: if makespan_ms > 0.0 {
+            tokens as f64 / (makespan_ms / 1e3)
+        } else {
+            0.0
+        },
+        ttft,
+        iter_latency,
+        padding_efficiency: if rows_total > 0 {
+            rows_real as f64 / rows_total as f64
+        } else {
+            1.0
+        },
+    }
+}

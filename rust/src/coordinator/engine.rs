@@ -8,19 +8,27 @@
 //!   immediately when its token returns (**No-bubble**) or after every
 //!   group finishes the current iteration (**Bubble**) —
 //!   [`Engine::generate_pipelined`].
+//! * **Continuous batching** (vLLM/Orca-style iteration-level
+//!   scheduling): requests are admitted into compiled batch slots and
+//!   retired per-row every iteration — [`Engine::generate_continuous`],
+//!   policy in [`super::scheduler`], drive loop in [`super::driver`].
+//!
+//! All modes run through the one shared generation driver in
+//! [`super::driver`] — the same loop the adaptive engine interposes its
+//! migration barrier on.
 //!
 //! All activations move through [`crate::netsim`] shaped links with the
 //! cluster's per-pair bandwidth/latency, so the real numerics experience
 //! the same network the planner optimized for.
 
 use anyhow::{Context, Result};
-use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender};
-use std::time::Instant;
 
-use super::api::{GenResult, GroupRequest};
-use super::kvcache::GroupCache;
-use super::stage::{NextHop, Payload, Phase, StageActor, StageMsg, TokenMsg};
+use super::api::{GenRequest, GenResult, GroupRequest};
+use super::driver::{drive_groups, drive_slots, DriverCfg, NoHooks};
+use super::kvcache::{GroupCache, KvPool};
+use super::scheduler::ContinuousConfig;
+use super::stage::{stage_decoders, NextHop, StageActor, StageMsg, TokenMsg};
 use crate::cluster::Cluster;
 use crate::metrics::{ComputeObs, Histogram};
 use crate::netsim::{
@@ -60,10 +68,28 @@ pub struct EngineStats {
     /// Real (non-padding) tokens generated.
     pub tokens: u64,
     pub throughput_tps: f64,
-    /// Time-to-first-token per group.
+    /// Time-to-first-token, one sample per real request, measured from
+    /// drive start (queue wait included — the client-observed number).
     pub ttft: Histogram,
-    /// Per-iteration latency samples (decode steps).
+    /// Per-iteration latency samples (decode steps only; the first token
+    /// of a group is TTFT, not an inter-token gap).
     pub iter_latency: Histogram,
+    /// Real rows / total rows over every frame sent: 1.0 = no compute or
+    /// KV spent on padding rows or dead slots.
+    pub padding_efficiency: f64,
+}
+
+impl From<super::driver::DriveStats> for EngineStats {
+    fn from(d: super::driver::DriveStats) -> Self {
+        EngineStats {
+            makespan_ms: d.makespan_ms,
+            tokens: d.tokens,
+            throughput_tps: d.throughput_tps,
+            ttft: d.ttft,
+            iter_latency: d.iter_latency,
+            padding_efficiency: d.padding_efficiency,
+        }
+    }
 }
 
 /// Observation sinks threaded into a wired pipeline — the adaptive
@@ -206,14 +232,33 @@ pub fn wire(
     })
 }
 
+/// The compiled-shape + budget contract the generation driver enforces,
+/// derived from the manifest and the plan's heaviest stage.
+pub fn driver_cfg(manifest: &Manifest, plan: &Plan, cfg: &EngineConfig) -> DriverCfg {
+    let c = &manifest.config;
+    let n_model_layers = c.n_layers + 2;
+    let row_bytes_worst = plan
+        .stages
+        .iter()
+        .map(|s| {
+            let n_local = stage_decoders(&(s.start..s.end), n_model_layers).len();
+            KvPool::group_bytes(n_local, 1, c.n_kv_heads, c.max_seq, c.head_dim())
+        })
+        .max()
+        .unwrap_or(0);
+    DriverCfg {
+        prompt_len: c.prefill_len,
+        batch_sizes: manifest.batch_sizes.clone(),
+        max_seq: c.max_seq,
+        kv_budget_bytes: cfg.kv_budget_bytes,
+        row_bytes_worst,
+    }
+}
+
 /// The wired pipeline.
 pub struct Engine {
-    to_first: ShapedSender<StageMsg>,
-    token_rx: Receiver<TokenMsg>,
-    handles: Vec<std::thread::JoinHandle<Result<()>>>,
-    links: Vec<RoutedLink>,
-    prompt_len: usize,
-    batch_sizes: Vec<usize>,
+    wired: Wired,
+    driver_cfg: DriverCfg,
 }
 
 impl Engine {
@@ -229,12 +274,8 @@ impl Engine {
     ) -> Result<Self> {
         let wired = wire(manifest, weights, exec, plan, cluster, cfg, None, Vec::new())?;
         Ok(Engine {
-            to_first: wired.to_first,
-            token_rx: wired.token_rx,
-            handles: wired.handles,
-            links: wired.links,
-            prompt_len: manifest.config.prefill_len,
-            batch_sizes: manifest.batch_sizes.clone(),
+            wired,
+            driver_cfg: driver_cfg(manifest, plan, cfg),
         })
     }
 
@@ -244,58 +285,17 @@ impl Engine {
     /// frames, which is exactly how the network-drop scenarios degrade a
     /// running static engine.
     pub fn routed_links(&self) -> Vec<RoutedLink> {
-        self.links.clone()
+        self.wired.links.clone()
     }
 
     /// Largest compiled batch size.
     pub fn max_batch(&self) -> usize {
-        self.batch_sizes.iter().copied().max().unwrap_or(1)
-    }
-
-    fn send_prefill(&self, g: &GroupRequest) -> Result<()> {
-        anyhow::ensure!(
-            self.batch_sizes.contains(&g.batch),
-            "batch {} not compiled (have {:?})",
-            g.batch,
-            self.batch_sizes
-        );
-        anyhow::ensure!(
-            g.prompt_len == self.prompt_len,
-            "prompt len {} != compiled {}",
-            g.prompt_len,
-            self.prompt_len
-        );
-        let msg = StageMsg::Work {
-            group: g.group_id,
-            iter: 0,
-            pos: 0,
-            phase: Phase::Prefill,
-            batch: g.batch,
-            prompt_len: g.prompt_len,
-            payload: Payload::Tokens(g.tokens.clone()),
-        };
-        let bytes = msg.bytes();
-        self.to_first.send(msg, bytes)
-    }
-
-    fn send_decode(&self, g: &GroupRequest, iter: usize, tokens: Vec<i32>) -> Result<()> {
-        let pos = (g.prompt_len + iter - 1) as i32;
-        let msg = StageMsg::Work {
-            group: g.group_id,
-            iter,
-            pos,
-            phase: Phase::Decode,
-            batch: g.batch,
-            prompt_len: g.prompt_len,
-            payload: Payload::Tokens(tokens),
-        };
-        let bytes = msg.bytes();
-        self.to_first.send(msg, bytes)
+        self.driver_cfg.batch_sizes.iter().copied().max().unwrap_or(1)
     }
 
     /// Serve groups one at a time (paper's sequential inference).
     pub fn generate_sequential(
-        &self,
+        &mut self,
         groups: &[GroupRequest],
     ) -> Result<(Vec<GenResult>, EngineStats)> {
         self.run(groups, 1, Strategy::NoBubble)
@@ -303,145 +303,54 @@ impl Engine {
 
     /// Serve all groups as a micro-batched pipeline.
     pub fn generate_pipelined(
-        &self,
+        &mut self,
         groups: &[GroupRequest],
         strategy: Strategy,
     ) -> Result<(Vec<GenResult>, EngineStats)> {
         self.run(groups, groups.len().max(1), Strategy::from_pipeline(strategy))
     }
 
+    /// Serve raw requests with **continuous batching**: iteration-level
+    /// admission into compiled batch slots, per-row retirement and KV
+    /// accounting, batch recomposition between iterations.  Requests need
+    /// no pre-packing (the slot scheduler replaces the batcher); token
+    /// streams are byte-identical to sequential serving.
+    ///
+    /// Requires a backend with per-row-position decode support (the sim
+    /// backend has it; PJRT artifacts need recompiled decode variants).
+    pub fn generate_continuous(
+        &mut self,
+        requests: &[GenRequest],
+        ccfg: &ContinuousConfig,
+    ) -> Result<(Vec<GenResult>, EngineStats)> {
+        let (results, stats) = drive_slots(&mut self.wired, &self.driver_cfg, requests, ccfg)?;
+        Ok((results, stats.into()))
+    }
+
     fn run(
-        &self,
+        &mut self,
         groups: &[GroupRequest],
         window: usize,
         strategy: Strategy,
     ) -> Result<(Vec<GenResult>, EngineStats)> {
-        struct Active<'a> {
-            req: &'a GroupRequest,
-            rows: Vec<Vec<i32>>,
-            start: Instant,
-            ttft_ms: Option<f64>,
-            last_iter_at: Instant,
-            done: bool,
-        }
-        let t0 = Instant::now();
-        let mut ttft = Histogram::new();
-        let mut iter_lat = Histogram::new();
-        let mut results = Vec::new();
-        let mut active: HashMap<u64, Active> = HashMap::new();
-        let mut queue = groups.iter();
-        let mut in_flight = 0usize;
-        let mut real_tokens = 0u64;
-        // barrier bookkeeping for the Bubble strategy
-        let mut barrier: Vec<(u64, usize, Vec<i32>)> = Vec::new();
-
-        // prime the window
-        while in_flight < window {
-            let Some(g) = queue.next() else { break };
-            self.send_prefill(g)?;
-            active.insert(
-                g.group_id,
-                Active {
-                    req: g,
-                    rows: vec![Vec::new(); g.batch],
-                    start: Instant::now(),
-                    ttft_ms: None,
-                    last_iter_at: Instant::now(),
-                    done: false,
-                },
-            );
-            in_flight += 1;
-        }
-
-        while in_flight > 0 {
-            let tok = self
-                .token_rx
-                .recv()
-                .map_err(|_| anyhow::anyhow!("pipeline closed unexpectedly"))?;
-            let a = active
-                .get_mut(&tok.group)
-                .with_context(|| format!("unknown group {}", tok.group))?;
-            let now = Instant::now();
-            iter_lat.record(now.duration_since(a.last_iter_at).as_secs_f64() * 1e3);
-            a.last_iter_at = now;
-            if a.ttft_ms.is_none() {
-                let ms = now.duration_since(a.start).as_secs_f64() * 1e3;
-                a.ttft_ms = Some(ms);
-                ttft.record(ms);
-            }
-            for (row, &t) in a.rows.iter_mut().zip(&tok.tokens) {
-                row.push(t);
-            }
-            real_tokens += a.req.real() as u64;
-            let next_iter = tok.iter + 1;
-            if next_iter < a.req.max_new_tokens {
-                match strategy {
-                    Strategy::Bubble => barrier.push((tok.group, next_iter, tok.tokens)),
-                    _ => self.send_decode(a.req, next_iter, tok.tokens)?,
-                }
-            } else {
-                // group complete
-                a.done = true;
-                let total = now.duration_since(a.start).as_secs_f64() * 1e3;
-                for (i, &rid) in a.req.request_ids.iter().enumerate() {
-                    results.push(GenResult {
-                        id: rid,
-                        tokens: a.rows[i].clone(),
-                        ttft_ms: a.ttft_ms.unwrap_or(0.0),
-                        total_ms: total,
-                    });
-                }
-                self.to_first.send(StageMsg::Free { group: tok.group }, 16)?;
-                in_flight -= 1;
-                // admit the next queued group
-                if let Some(g) = queue.next() {
-                    self.send_prefill(g)?;
-                    active.insert(
-                        g.group_id,
-                        Active {
-                            req: g,
-                            rows: vec![Vec::new(); g.batch],
-                            start: Instant::now(),
-                            ttft_ms: None,
-                            last_iter_at: Instant::now(),
-                            done: false,
-                        },
-                    );
-                    in_flight += 1;
-                }
-            }
-            // Bubble barrier: release the next iteration only when every
-            // unfinished group has delivered the current one.
-            if strategy == Strategy::Bubble {
-                let waiting = active.values().filter(|a| !a.done).count();
-                if barrier.len() == waiting && !barrier.is_empty() {
-                    for (gid, it, toks) in barrier.drain(..) {
-                        let req = active[&gid].req;
-                        self.send_decode(req, it, toks)?;
-                    }
-                }
-            }
-        }
-
-        let makespan = t0.elapsed().as_secs_f64() * 1e3;
-        let stats = EngineStats {
-            makespan_ms: makespan,
-            tokens: real_tokens,
-            throughput_tps: if makespan > 0.0 {
-                real_tokens as f64 / (makespan / 1e3)
-            } else {
-                0.0
-            },
-            ttft,
-            iter_latency: iter_lat,
-        };
-        Ok((results, stats))
+        let (results, stats) = drive_groups(
+            &mut self.wired,
+            &self.driver_cfg,
+            groups,
+            window,
+            strategy,
+            &mut NoHooks,
+        )?;
+        Ok((results, stats.into()))
     }
 
     /// Shut the pipeline down and join the actors.
     pub fn shutdown(mut self) -> Result<()> {
-        let _ = self.to_first.send(StageMsg::Shutdown, 16);
-        for h in self.handles.drain(..) {
+        let _ = self
+            .wired
+            .to_first
+            .send(StageMsg::Shutdown, StageMsg::Shutdown.wire_bytes());
+        for h in self.wired.handles.drain(..) {
             match h.join() {
                 Ok(r) => r?,
                 Err(_) => anyhow::bail!("stage thread panicked"),

@@ -2,19 +2,92 @@
 //!
 //! The paper: "We pre-allocate memory space for KV cache on each
 //! participating device."  Each stage owns one pool sized from its
-//! device's memory budget minus its weight shard; groups (micro-batches)
-//! claim a slot at prefill and release it when generation completes.
+//! device's memory budget minus its weight shard.
+//!
+//! Two granularities coexist:
+//!
+//! * **Group-at-a-time** (classic serving): a micro-batch group claims a
+//!   whole slot at prefill ([`KvPool::insert`]) and releases it when the
+//!   group completes ([`KvPool::remove`]).  Padding rows are part of the
+//!   slot — the price of static compiled shapes.
+//! * **Row-granular** (continuous batching): a *run* owns one cache
+//!   tensor per layer sized to a compiled batch, but rows are admitted
+//!   ([`KvPool::insert_row`]), retired ([`KvPool::evict_row`]) and
+//!   recomposed ([`KvPool::compact`]) individually, and the pool accounts
+//!   bytes per **live row**, so a finished sequence's KV budget is
+//!   reclaimed the moment it retires — not when its whole batch drains.
 
 use crate::runtime::TensorData;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Per-group cache state held by one stage.
 #[derive(Debug, Clone)]
 pub struct GroupCache {
-    /// One (k, v) pair per decoder layer this stage hosts.
+    /// One (k, v) pair per decoder layer this stage hosts.  Dims are
+    /// `[batch, kv_heads, max_seq, head_dim]`.
     pub layers: Vec<(TensorData, TensorData)>,
     pub batch: usize,
+    /// Bytes this cache currently charges against the pool budget.  For
+    /// group-granular caches this is the whole padded tensor; for
+    /// row-granular caches it is `live rows × row_bytes`.
     pub bytes: u64,
+    /// Row liveness, one flag per batch row.  Group-granular caches are
+    /// fully live; row-granular caches toggle rows as sequences are
+    /// admitted and retired.
+    pub live: Vec<bool>,
+}
+
+impl GroupCache {
+    /// Bytes one live row of this cache charges (the padded per-row K+V
+    /// footprint across this stage's layers).
+    pub fn row_bytes(&self) -> u64 {
+        if self.batch == 0 {
+            return 0;
+        }
+        let total: u64 = self.layers.iter().map(|(k, v)| k.bytes() + v.bytes()).sum();
+        total / self.batch as u64
+    }
+
+    /// Live (charged) rows.
+    pub fn live_rows(&self) -> usize {
+        self.live.iter().filter(|&&l| l).count()
+    }
+}
+
+/// Copy row `src_row` of `src` into row `dst_row` of `dst` (both
+/// `[batch, …]` tensors with identical trailing dims).
+fn copy_row(dst: &mut TensorData, dst_row: usize, src: &TensorData, src_row: usize) {
+    let (TensorData::F32 { data: dd, dims: ddims }, TensorData::F32 { data: sd, dims: sdims }) =
+        (dst, src)
+    else {
+        debug_assert!(false, "KV caches are f32");
+        return;
+    };
+    let row_len: usize = ddims[1..].iter().product::<i64>() as usize;
+    debug_assert_eq!(row_len, sdims[1..].iter().product::<i64>() as usize);
+    let out = Arc::make_mut(dd);
+    out[dst_row * row_len..(dst_row + 1) * row_len]
+        .copy_from_slice(&sd[src_row * row_len..(src_row + 1) * row_len]);
+}
+
+/// Zero row `row` of a `[batch, …]` tensor.
+fn zero_row(t: &mut TensorData, row: usize) {
+    let TensorData::F32 { data, dims } = t else {
+        debug_assert!(false, "KV caches are f32");
+        return;
+    };
+    let row_len: usize = dims[1..].iter().product::<i64>() as usize;
+    Arc::make_mut(data)[row * row_len..(row + 1) * row_len].fill(0.0);
+}
+
+/// A zeroed `[batch, …]` tensor with the trailing dims of `like`.
+fn zeros_like_rows(like: &TensorData, batch: usize) -> TensorData {
+    let dims = like.dims();
+    let mut new_dims = dims.to_vec();
+    new_dims[0] = batch as i64;
+    let len: usize = new_dims.iter().product::<i64>() as usize;
+    TensorData::f32(vec![0.0; len], new_dims)
 }
 
 /// Byte-budgeted cache pool.
@@ -73,6 +146,125 @@ impl KvPool {
         Ok(())
     }
 
+    /// Continuous batching: install one prefilled sequence as row `row`
+    /// of run `run`'s cache, allocating a zeroed `run_batch`-row cache on
+    /// the first admission.  `layer_rows` is one `[1, …]` (k, v) pair per
+    /// local layer.  Only the admitted row is charged against the budget.
+    pub fn insert_row(
+        &mut self,
+        run: u64,
+        row: usize,
+        run_batch: usize,
+        layer_rows: Vec<(TensorData, TensorData)>,
+    ) -> anyhow::Result<()> {
+        let row_bytes: u64 = layer_rows.iter().map(|(k, v)| k.bytes() + v.bytes()).sum();
+        anyhow::ensure!(
+            self.can_admit(row_bytes),
+            "KV pool over budget: used={} + row={} > budget={}",
+            self.used_bytes,
+            row_bytes,
+            self.budget_bytes
+        );
+        anyhow::ensure!(row < run_batch, "row {row} outside run batch {run_batch}");
+        let cache = self.groups.entry(run).or_insert_with(|| GroupCache {
+            layers: layer_rows
+                .iter()
+                .map(|(k, v)| (zeros_like_rows(k, run_batch), zeros_like_rows(v, run_batch)))
+                .collect(),
+            batch: run_batch,
+            bytes: 0,
+            live: vec![false; run_batch],
+        });
+        anyhow::ensure!(
+            cache.batch == run_batch,
+            "run {run} cache has batch {}, admit says {run_batch}",
+            cache.batch
+        );
+        anyhow::ensure!(
+            cache.layers.len() == layer_rows.len(),
+            "run {run}: {} layer rows for a {}-layer cache",
+            layer_rows.len(),
+            cache.layers.len()
+        );
+        anyhow::ensure!(!cache.live[row], "run {run} row {row} already live");
+        for ((dk, dv), (sk, sv)) in cache.layers.iter_mut().zip(&layer_rows) {
+            copy_row(dk, row, sk, 0);
+            copy_row(dv, row, sv, 0);
+        }
+        cache.live[row] = true;
+        cache.bytes += row_bytes;
+        self.used_bytes += row_bytes;
+        self.peak_bytes = self.peak_bytes.max(self.used_bytes);
+        Ok(())
+    }
+
+    /// Continuous batching: retire row `row` of run `run` — zero the row
+    /// (hygiene: a later re-admission starts clean) and release its bytes
+    /// immediately, per-row rather than per-group.
+    pub fn evict_row(&mut self, run: u64, row: usize) -> anyhow::Result<u64> {
+        let cache = self
+            .groups
+            .get_mut(&run)
+            .ok_or_else(|| anyhow::anyhow!("evict: run {run} has no cache"))?;
+        anyhow::ensure!(row < cache.batch, "evict: row {row} outside batch {}", cache.batch);
+        anyhow::ensure!(cache.live[row], "evict: run {run} row {row} not live");
+        let row_bytes = cache.row_bytes();
+        for (k, v) in cache.layers.iter_mut() {
+            zero_row(k, row);
+            zero_row(v, row);
+        }
+        cache.live[row] = false;
+        cache.bytes = cache.bytes.saturating_sub(row_bytes);
+        self.used_bytes = self.used_bytes.saturating_sub(row_bytes);
+        Ok(row_bytes)
+    }
+
+    /// Continuous batching: rebuild run `run`'s cache at `new_batch` rows,
+    /// moving row `from` → `to` for each pair in `moves`.  Rows not named
+    /// in `moves` are dropped — a live row left unnamed is released and
+    /// its bytes freed.  Byte accounting follows the surviving live rows.
+    pub fn compact(
+        &mut self,
+        run: u64,
+        new_batch: usize,
+        moves: &[(usize, usize)],
+    ) -> anyhow::Result<()> {
+        let cache = self
+            .groups
+            .get_mut(&run)
+            .ok_or_else(|| anyhow::anyhow!("compact: run {run} has no cache"))?;
+        let row_bytes = cache.row_bytes();
+        let mut new_live = vec![false; new_batch];
+        for &(from, to) in moves {
+            anyhow::ensure!(
+                from < cache.batch && to < new_batch,
+                "compact: move {from}→{to} outside {}→{new_batch}",
+                cache.batch
+            );
+            anyhow::ensure!(cache.live[from], "compact: moving dead row {from}");
+            anyhow::ensure!(!new_live[to], "compact: duplicate target row {to}");
+            new_live[to] = true;
+        }
+        let mut new_layers = Vec::with_capacity(cache.layers.len());
+        for (k, v) in &cache.layers {
+            let mut nk = zeros_like_rows(k, new_batch);
+            let mut nv = zeros_like_rows(v, new_batch);
+            for &(from, to) in moves {
+                copy_row(&mut nk, to, k, from);
+                copy_row(&mut nv, to, v, from);
+            }
+            new_layers.push((nk, nv));
+        }
+        let new_bytes = moves.len() as u64 * row_bytes;
+        self.used_bytes = self.used_bytes - cache.bytes + new_bytes;
+        self.peak_bytes = self.peak_bytes.max(self.used_bytes);
+        cache.layers = new_layers;
+        cache.batch = new_batch;
+        cache.bytes = new_bytes;
+        cache.live = new_live;
+        Ok(())
+    }
+
     pub fn get_mut(&mut self, group: u64) -> Option<&mut GroupCache> {
         self.groups.get_mut(&group)
     }
@@ -124,7 +316,18 @@ mod tests {
             layers: vec![],
             batch: 1,
             bytes,
+            live: vec![true],
         }
+    }
+
+    /// A `[1, kv, seq, hd]` row tensor with every element `fill`.
+    fn row(kv: usize, seq: usize, hd: usize, fill: f32) -> (TensorData, TensorData) {
+        let dims = vec![1, kv as i64, seq as i64, hd as i64];
+        let len = kv * seq * hd;
+        (
+            TensorData::f32(vec![fill; len], dims.clone()),
+            TensorData::f32(vec![-fill; len], dims),
+        )
     }
 
     #[test]
@@ -161,5 +364,72 @@ mod tests {
         // 4 layers, batch 8, 4 kv heads, 128 seq, 32 dim, f32:
         // 4*2*8*4*128*32*4 = 4 MiB
         assert_eq!(KvPool::group_bytes(4, 8, 4, 128, 32), 4 * 1024 * 1024);
+    }
+
+    #[test]
+    fn row_insert_evict_accounting() {
+        let (kv, seq, hd) = (2, 4, 2);
+        let row_bytes = (2 * 2 * kv * seq * hd * 4) as u64; // 2 layers × (k+v)
+        let mut p = KvPool::new(10 * row_bytes);
+        p.insert_row(9, 0, 4, vec![row(kv, seq, hd, 1.0), row(kv, seq, hd, 2.0)])
+            .unwrap();
+        assert_eq!(p.used_bytes(), row_bytes);
+        p.insert_row(9, 2, 4, vec![row(kv, seq, hd, 3.0), row(kv, seq, hd, 4.0)])
+            .unwrap();
+        assert_eq!(p.used_bytes(), 2 * row_bytes);
+        let c = p.get(9).unwrap();
+        assert_eq!(c.batch, 4);
+        assert_eq!(c.live, vec![true, false, true, false]);
+        // row 0 of layer 0 carries 1.0s, row 2 carries 3.0s, dead rows zero
+        let k0 = c.layers[0].0.as_f32().unwrap();
+        let row_len = kv * seq * hd;
+        assert!(k0[..row_len].iter().all(|&x| x == 1.0));
+        assert!(k0[row_len..2 * row_len].iter().all(|&x| x == 0.0));
+        assert!(k0[2 * row_len..3 * row_len].iter().all(|&x| x == 3.0));
+
+        // double-admit and dead-evict are rejected
+        assert!(p
+            .insert_row(9, 0, 4, vec![row(kv, seq, hd, 9.0), row(kv, seq, hd, 9.0)])
+            .is_err());
+        assert!(p.evict_row(9, 1).is_err());
+
+        assert_eq!(p.evict_row(9, 0).unwrap(), row_bytes);
+        assert_eq!(p.used_bytes(), row_bytes);
+        // evicted row zeroed; slot can be re-admitted
+        let c = p.get(9).unwrap();
+        assert!(c.layers[0].0.as_f32().unwrap()[..row_len].iter().all(|&x| x == 0.0));
+        p.insert_row(9, 0, 4, vec![row(kv, seq, hd, 5.0), row(kv, seq, hd, 5.0)])
+            .unwrap();
+        assert_eq!(p.used_bytes(), 2 * row_bytes);
+        p.evict_row(9, 0).unwrap();
+        p.evict_row(9, 2).unwrap();
+        assert_eq!(p.used_bytes(), 0);
+        // the (empty) cache allocation itself charges nothing; remove drops it
+        p.remove(9).unwrap();
+        assert_eq!(p.used_bytes(), 0);
+    }
+
+    #[test]
+    fn compact_moves_rows_and_bytes() {
+        let (kv, seq, hd) = (2, 4, 2);
+        let row_len = kv * seq * hd;
+        let mut p = KvPool::new(1 << 20);
+        p.insert_row(5, 1, 8, vec![row(kv, seq, hd, 1.0)]).unwrap();
+        p.insert_row(5, 6, 8, vec![row(kv, seq, hd, 2.0)]).unwrap();
+        let row_bytes = p.get(5).unwrap().row_bytes();
+        assert_eq!(p.used_bytes(), 2 * row_bytes);
+        p.compact(5, 2, &[(1, 0), (6, 1)]).unwrap();
+        let c = p.get(5).unwrap();
+        assert_eq!(c.batch, 2);
+        assert_eq!(c.live, vec![true, true]);
+        let k = c.layers[0].0.as_f32().unwrap();
+        assert!(k[..row_len].iter().all(|&x| x == 1.0));
+        assert!(k[row_len..].iter().all(|&x| x == 2.0));
+        assert_eq!(p.used_bytes(), 2 * row_bytes);
+        // dropping a row via compact releases its bytes
+        p.compact(5, 1, &[(0, 0)]).unwrap_or_else(|e| panic!("{e}"));
+        assert_eq!(p.used_bytes(), row_bytes);
+        // duplicate targets are rejected
+        assert!(p.compact(5, 1, &[(0, 0), (0, 0)]).is_err());
     }
 }

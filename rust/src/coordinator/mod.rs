@@ -8,9 +8,14 @@
 //!   [`crate::runtime::ExecService`], keeps its shard's KV caches, and
 //!   forwards activations over shaped links.
 //! * [`engine`] — wires stage actors according to a [`crate::planner::Plan`]
-//!   and drives generation: **sequential** inference (one request at a
-//!   time, §III Fig. 4a) and **pipelined** inference with the Bubble /
-//!   No-bubble strategies (§IV-B, Fig. 5).
+//!   and exposes generation: **sequential** inference (one request at a
+//!   time, §III Fig. 4a), **pipelined** inference with the Bubble /
+//!   No-bubble strategies (§IV-B, Fig. 5), and **continuous batching**.
+//! * [`driver`] — the one generation drive loop every mode (and the
+//!   adaptive engine, via [`driver::DriveHooks`]) runs through.
+//! * [`scheduler`] — the iteration-level slot scheduler behind
+//!   [`engine::Engine::generate_continuous`]: per-iteration admission,
+//!   per-row retirement, batch recomposition.
 //! * [`batcher`] — groups incoming requests into the compiled batch sizes.
 //! * [`server`] — a JSON-lines TCP front-end over the engine.
 //!
@@ -21,13 +26,17 @@
 
 pub mod api;
 pub mod batcher;
+pub mod driver;
 pub mod engine;
 pub mod kvcache;
+pub mod scheduler;
 pub mod server;
 pub mod stage;
 
 pub use api::{GenRequest, GenResult, GroupRequest};
 pub use batcher::Batcher;
+pub use driver::{DriveHooks, DriveStats, DriveView, DriverCfg, NoHooks};
 pub use engine::{Engine, EngineConfig, EngineStats};
 pub use kvcache::{GroupCache, KvPool};
+pub use scheduler::{ContinuousConfig, SlotScheduler};
 pub use stage::{KvEntry, StageExport};

@@ -56,7 +56,7 @@ impl Default for ServerConfig {
 /// been answered.  Returns the number served.
 pub fn serve(
     listener: TcpListener,
-    engine: &Engine,
+    engine: &mut Engine,
     batcher: &mut Batcher,
     cfg: &ServerConfig,
 ) -> Result<usize> {

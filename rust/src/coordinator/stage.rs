@@ -5,7 +5,15 @@
 //! (c) the outgoing shaped link.  It processes [`StageMsg`]s FIFO — the
 //! arrival order over the links *is* the pipeline schedule, so the Bubble
 //! / No-bubble distinction lives entirely in when the driver releases the
-//! next iteration (see [`super::engine`]).
+//! next iteration (see [`super::driver`]).
+//!
+//! Continuous batching adds four frames: [`StageMsg::Admit`] (batch-1
+//! prefill installed as one row of a run's cache), [`StageMsg::Step`]
+//! (one decode iteration over a composed slot batch, carrying the
+//! per-row position map), and the row-granular [`StageMsg::Evict`] /
+//! [`StageMsg::Compact`] cache operations.  FIFO ordering is what makes
+//! them safe: an admission sent before a step is resident before that
+//! step executes on every stage it passes.
 
 use anyhow::{anyhow, Context, Result};
 use std::sync::mpsc::Sender;
@@ -33,6 +41,10 @@ pub enum Payload {
     Hidden(TensorData),
 }
 
+/// Wire size of a control frame (Free/Evict/Compact/Export/Shutdown) on
+/// the shaped links — a small fixed header, not a payload.
+pub const CONTROL_FRAME_BYTES: u64 = 16;
+
 /// Messages travelling between driver and stages.
 #[derive(Debug, Clone)]
 pub enum StageMsg {
@@ -45,6 +57,40 @@ pub enum StageMsg {
         batch: usize,
         prompt_len: usize,
         payload: Payload,
+    },
+    /// Continuous batching: prefill one sequence at batch 1 and install
+    /// the resulting KV as row `slot` of run `run`'s cache (allocated
+    /// zeroed at `run_batch` rows on the first admission).  The head
+    /// stage answers with the sequence's first token
+    /// ([`TokenOrigin::Admit`]).
+    Admit {
+        run: u64,
+        slot: usize,
+        run_batch: usize,
+        prompt_len: usize,
+        payload: Payload,
+    },
+    /// Continuous batching: one decode iteration over run `run`'s
+    /// composed slot batch.  `pos` is the per-iteration slot map: row i
+    /// decodes at absolute position `pos[i]`, and `pos[i] < 0` marks a
+    /// dead row the kernels skip (its token/output is discarded by the
+    /// driver).
+    Step {
+        run: u64,
+        iter: usize,
+        batch: usize,
+        pos: Vec<i32>,
+        payload: Payload,
+    },
+    /// Continuous batching: retire row `slot` of run `run`, freeing its
+    /// KV bytes immediately (per-row, not per-group).
+    Evict { run: u64, slot: usize },
+    /// Continuous batching: recompose run `run`'s cache at `new_batch`
+    /// rows, moving row `from` → `to` for each `(from, to)` pair.
+    Compact {
+        run: u64,
+        new_batch: usize,
+        moves: Vec<(usize, usize)>,
     },
     /// Release the group's KV slot and forward downstream.
     Free { group: u64 },
@@ -74,17 +120,47 @@ pub struct StageExport {
     pub entries: Vec<KvEntry>,
 }
 
-impl StageMsg {
-    /// Wire size used by the shaped links.
-    pub fn bytes(&self) -> u64 {
+impl Payload {
+    fn wire_bytes(&self) -> u64 {
         match self {
-            StageMsg::Work { payload, .. } => match payload {
-                Payload::Tokens(t) => t.len() as u64 * 4,
-                Payload::Hidden(h) => h.bytes(),
-            },
-            _ => 16,
+            Payload::Tokens(t) => t.len() as u64 * 4,
+            Payload::Hidden(h) => h.bytes(),
         }
     }
+}
+
+impl StageMsg {
+    /// Wire size of this frame on the shaped links: payload bytes for
+    /// work-bearing frames (plus the slot map for [`StageMsg::Step`]),
+    /// [`CONTROL_FRAME_BYTES`] for control frames.  Every send must use
+    /// this — no call site hardcodes frame sizes.
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            StageMsg::Work { payload, .. } | StageMsg::Admit { payload, .. } => {
+                payload.wire_bytes()
+            }
+            StageMsg::Step { payload, pos, .. } => payload.wire_bytes() + pos.len() as u64 * 4,
+            StageMsg::Evict { .. }
+            | StageMsg::Compact { .. }
+            | StageMsg::Free { .. }
+            | StageMsg::Export { .. }
+            | StageMsg::Shutdown => CONTROL_FRAME_BYTES,
+        }
+    }
+}
+
+/// What produced a [`TokenMsg`] — classic group serving or one of the
+/// continuous-batching paths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenOrigin {
+    /// Classic group-at-a-time serving ([`StageMsg::Work`]).
+    Group,
+    /// First token of a continuous-batching admission into `slot`
+    /// ([`StageMsg::Admit`]; `group` is the run id).
+    Admit { slot: usize },
+    /// One continuous-batching decode step ([`StageMsg::Step`]; `group`
+    /// is the run id, tokens of dead rows are meaningless).
+    Step,
 }
 
 /// Token batch emitted by the head stage back to the driver (one shaped
@@ -94,10 +170,11 @@ pub struct TokenMsg {
     pub group: u64,
     pub iter: usize,
     pub tokens: Vec<i32>,
+    pub origin: TokenOrigin,
 }
 
 impl TokenMsg {
-    pub fn bytes(&self) -> u64 {
+    pub fn wire_bytes(&self) -> u64 {
         self.tokens.len() as u64 * 4
     }
 }
@@ -259,6 +336,98 @@ impl StageActor {
                     self.kv.remove(group);
                     self.forward_control(StageMsg::Free { group })?;
                 }
+                StageMsg::Evict { run, slot } => {
+                    // Stages hosting no decoder layers never allocated a
+                    // run cache; everyone else must have one.
+                    if !self.layer_w.is_empty() {
+                        self.kv.evict_row(run, slot)?;
+                    }
+                    self.forward_control(StageMsg::Evict { run, slot })?;
+                }
+                StageMsg::Compact {
+                    run,
+                    new_batch,
+                    moves,
+                } => {
+                    if !self.layer_w.is_empty() {
+                        self.kv.compact(run, new_batch, &moves)?;
+                    }
+                    self.forward_control(StageMsg::Compact {
+                        run,
+                        new_batch,
+                        moves,
+                    })?;
+                }
+                StageMsg::Admit {
+                    run,
+                    slot,
+                    run_batch,
+                    prompt_len,
+                    payload,
+                } => {
+                    self.msgs_processed += 1;
+                    let exec_ms_before = self.exec_ms_total;
+                    let hidden = self.input_hidden(Phase::Prefill, 1, prompt_len, payload)?;
+                    let (hidden, layers) = self.prefill_compute(1, hidden)?;
+                    if !layers.is_empty() {
+                        self.kv
+                            .insert_row(run, slot, run_batch, layers)
+                            .with_context(|| {
+                                format!(
+                                    "stage {} (device {}) admitting run {run} slot {slot}",
+                                    self.stage_idx, self.device_id
+                                )
+                            })?;
+                    }
+                    self.record_obs(false, exec_ms_before);
+                    if self.has_head {
+                        let tokens = self.head_tokens(1, Phase::Prefill, hidden)?;
+                        self.send_tokens(TokenMsg {
+                            group: run,
+                            iter: 0,
+                            tokens,
+                            origin: TokenOrigin::Admit { slot },
+                        })?;
+                    } else {
+                        self.forward_work(StageMsg::Admit {
+                            run,
+                            slot,
+                            run_batch,
+                            prompt_len,
+                            payload: Payload::Hidden(hidden),
+                        })?;
+                    }
+                }
+                StageMsg::Step {
+                    run,
+                    iter,
+                    batch,
+                    pos,
+                    payload,
+                } => {
+                    self.msgs_processed += 1;
+                    let exec_ms_before = self.exec_ms_total;
+                    let hidden = self.input_hidden(Phase::Decode, batch, 0, payload)?;
+                    let hidden = self.run_step(run, batch, &pos, hidden)?;
+                    self.record_obs(true, exec_ms_before);
+                    if self.has_head {
+                        let tokens = self.head_tokens(batch, Phase::Decode, hidden)?;
+                        self.send_tokens(TokenMsg {
+                            group: run,
+                            iter,
+                            tokens,
+                            origin: TokenOrigin::Step,
+                        })?;
+                    } else {
+                        self.forward_work(StageMsg::Step {
+                            run,
+                            iter,
+                            batch,
+                            pos,
+                            payload: Payload::Hidden(hidden),
+                        })?;
+                    }
+                }
                 StageMsg::Export { reply } => {
                     let mut entries = Vec::new();
                     for (gid, cache) in self.kv.iter() {
@@ -295,14 +464,25 @@ impl StageActor {
                         Phase::Prefill => self.run_prefill(group, batch, hidden)?,
                         Phase::Decode => self.run_decode(group, batch, pos, hidden)?,
                     };
-                    self.emit(group, iter, pos, phase, batch, prompt_len, hidden)?;
-                    if let Some(tx) = &self.obs {
-                        let _ = tx.send(ComputeObs {
-                            device: self.device_id,
-                            stage: self.stage_idx,
-                            decode: phase == Phase::Decode,
-                            ms: self.exec_ms_total - exec_ms_before,
-                        });
+                    self.record_obs(phase == Phase::Decode, exec_ms_before);
+                    if self.has_head {
+                        let tokens = self.head_tokens(batch, phase, hidden)?;
+                        self.send_tokens(TokenMsg {
+                            group,
+                            iter,
+                            tokens,
+                            origin: TokenOrigin::Group,
+                        })?;
+                    } else {
+                        self.forward_work(StageMsg::Work {
+                            group,
+                            iter,
+                            pos,
+                            phase,
+                            batch,
+                            prompt_len,
+                            payload: Payload::Hidden(hidden),
+                        })?;
                     }
                 }
             }
@@ -312,9 +492,43 @@ impl StageActor {
 
     fn forward_control(&self, msg: StageMsg) -> Result<()> {
         if let NextHop::Stage(tx) = &self.next {
-            tx.send(msg, 16)?;
+            let bytes = msg.wire_bytes();
+            tx.send(msg, bytes)?;
         }
         Ok(())
+    }
+
+    /// Forward a work-bearing frame to the next stage.
+    fn forward_work(&self, msg: StageMsg) -> Result<()> {
+        match &self.next {
+            NextHop::Stage(tx) => {
+                let bytes = msg.wire_bytes();
+                tx.send(msg, bytes)
+            }
+            NextHop::Driver(_) => anyhow::bail!("non-head stage wired to driver"),
+        }
+    }
+
+    /// Send sampled tokens to the driver (head stage only).
+    fn send_tokens(&self, msg: TokenMsg) -> Result<()> {
+        match &self.next {
+            NextHop::Driver(tx) => {
+                let bytes = msg.wire_bytes();
+                tx.send(msg, bytes)
+            }
+            NextHop::Stage(_) => anyhow::bail!("head stage wired to another stage"),
+        }
+    }
+
+    fn record_obs(&self, decode: bool, exec_ms_before: f64) {
+        if let Some(tx) = &self.obs {
+            let _ = tx.send(ComputeObs {
+                device: self.device_id,
+                stage: self.stage_idx,
+                decode,
+                ms: self.exec_ms_total - exec_ms_before,
+            });
+        }
     }
 
     /// Resolve the incoming payload to hidden activations.
@@ -346,7 +560,28 @@ impl StageActor {
         }
     }
 
-    fn run_prefill(&mut self, group: u64, batch: usize, mut h: TensorData) -> Result<TensorData> {
+    /// Run this stage's layers in prefill mode, returning the outgoing
+    /// hidden plus the per-layer (k, v) caches — installation is the
+    /// caller's business (whole group vs one continuous-batching row).
+    fn prefill_compute(
+        &mut self,
+        batch: usize,
+        mut h: TensorData,
+    ) -> Result<(TensorData, Vec<(TensorData, TensorData)>)> {
+        let variant = format!("layer_prefill_b{batch}");
+        let mut layers = Vec::with_capacity(self.layer_w.len());
+        for w in self.layer_w.clone() {
+            let mut out = self.exec_scaled(Some(w), &variant, vec![h])?;
+            anyhow::ensure!(out.len() == 3, "layer_prefill must return 3 outputs");
+            let vc = out.pop().unwrap();
+            let kc = out.pop().unwrap();
+            h = out.pop().unwrap();
+            layers.push((kc, vc));
+        }
+        Ok((h, layers))
+    }
+
+    fn run_prefill(&mut self, group: u64, batch: usize, h: TensorData) -> Result<TensorData> {
         let n_local = self.layer_w.len();
         let bytes = KvPool::group_bytes(n_local, batch, self.kv_heads, self.max_seq, self.head_dim);
         anyhow::ensure!(
@@ -358,16 +593,7 @@ impl StageActor {
             self.kv.used_bytes(),
             self.kv.budget_bytes()
         );
-        let variant = format!("layer_prefill_b{batch}");
-        let mut layers = Vec::with_capacity(n_local);
-        for w in self.layer_w.clone() {
-            let mut out = self.exec_scaled(Some(w), &variant, vec![h])?;
-            anyhow::ensure!(out.len() == 3, "layer_prefill must return 3 outputs");
-            let vc = out.pop().unwrap();
-            let kc = out.pop().unwrap();
-            h = out.pop().unwrap();
-            layers.push((kc, vc));
-        }
+        let (h, layers) = self.prefill_compute(batch, h)?;
         if n_local > 0 {
             self.kv.insert(
                 group,
@@ -375,8 +601,52 @@ impl StageActor {
                     layers,
                     batch,
                     bytes,
+                    live: vec![true; batch],
                 },
             )?;
+        }
+        Ok(h)
+    }
+
+    /// One continuous-batching decode iteration: every local layer runs
+    /// the composed batch against run `run`'s cache with the per-row
+    /// position map (`pos[i] < 0` rows are skipped by the kernel).
+    fn run_step(
+        &mut self,
+        run: u64,
+        batch: usize,
+        pos: &[i32],
+        mut h: TensorData,
+    ) -> Result<TensorData> {
+        anyhow::ensure!(pos.len() == batch, "slot map len {} != batch {batch}", pos.len());
+        let n_local = self.layer_w.len();
+        if n_local == 0 {
+            return Ok(h);
+        }
+        let variant = format!("layer_decode_b{batch}");
+        let pos_t = TensorData::i32(pos.to_vec(), vec![batch as i64]);
+        for li in 0..n_local {
+            let (kc, vc) = {
+                let cache = self
+                    .kv
+                    .get(run)
+                    .with_context(|| format!("no cache for run {run}"))?;
+                anyhow::ensure!(
+                    cache.batch == batch,
+                    "run {run} cache batch {} != step batch {batch}",
+                    cache.batch
+                );
+                cache.layers[li].clone()
+            };
+            let w = self.layer_w[li];
+            let inputs = vec![h, kc, vc, pos_t.clone()];
+            let mut out = self.exec_scaled(Some(w), &variant, inputs)?;
+            anyhow::ensure!(out.len() == 3, "layer_decode must return 3 outputs");
+            let vc = out.pop().unwrap();
+            let kc = out.pop().unwrap();
+            h = out.pop().unwrap();
+            let cache = self.kv.get_mut(run).unwrap();
+            cache.layers[li] = (kc, vc);
         }
         Ok(h)
     }
@@ -411,67 +681,25 @@ impl StageActor {
         Ok(h)
     }
 
-    /// Run the head (if present) and forward.
-    #[allow(clippy::too_many_arguments)]
-    fn emit(
-        &mut self,
-        group: u64,
-        iter: usize,
-        pos: i32,
-        phase: Phase,
-        batch: usize,
-        prompt_len: usize,
-        hidden: TensorData,
-    ) -> Result<()> {
-        if self.has_head {
-            let hw = self.head_w.context("missing head weights")?;
-            let variant = match phase {
-                Phase::Prefill => format!("head_prefill_b{batch}"),
-                Phase::Decode => format!("head_decode_b{batch}"),
-            };
-            let out = self.exec_scaled(Some(hw), &variant, vec![hidden])?;
-            let logits = out[0].as_f32()?;
-            let tokens: Vec<i32> = (0..batch)
-                .map(|b| {
-                    let row = &logits[b * self.vocab..(b + 1) * self.vocab];
-                    row.iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                        .map(|(i, _)| i as i32)
-                        .unwrap_or(0)
-                })
-                .collect();
-            let msg = TokenMsg {
-                group,
-                iter,
-                tokens,
-            };
-            match &self.next {
-                NextHop::Driver(tx) => {
-                    let bytes = msg.bytes();
-                    tx.send(msg, bytes)?;
-                }
-                NextHop::Stage(_) => anyhow::bail!("head stage wired to another stage"),
-            }
-        } else {
-            let msg = StageMsg::Work {
-                group,
-                iter,
-                pos,
-                phase,
-                batch,
-                prompt_len,
-                payload: Payload::Hidden(hidden),
-            };
-            match &self.next {
-                NextHop::Stage(tx) => {
-                    let bytes = msg.bytes();
-                    tx.send(msg, bytes)?;
-                }
-                NextHop::Driver(_) => anyhow::bail!("non-head stage wired to driver"),
-            }
-        }
-        Ok(())
+    /// Run the head shard and greedy-sample one token per row.
+    fn head_tokens(&mut self, batch: usize, phase: Phase, hidden: TensorData) -> Result<Vec<i32>> {
+        let hw = self.head_w.context("missing head weights")?;
+        let variant = match phase {
+            Phase::Prefill => format!("head_prefill_b{batch}"),
+            Phase::Decode => format!("head_decode_b{batch}"),
+        };
+        let out = self.exec_scaled(Some(hw), &variant, vec![hidden])?;
+        let logits = out[0].as_f32()?;
+        Ok((0..batch)
+            .map(|b| {
+                let row = &logits[b * self.vocab..(b + 1) * self.vocab];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap_or(0)
+            })
+            .collect())
     }
 }
 
@@ -490,13 +718,28 @@ mod tests {
             prompt_len: 4,
             payload: Payload::Tokens(vec![1, 2, 3, 4]),
         };
-        assert_eq!(m.bytes(), 16);
-        assert_eq!(StageMsg::Free { group: 1 }.bytes(), 16);
+        assert_eq!(m.wire_bytes(), 16);
+        assert_eq!(StageMsg::Free { group: 1 }.wire_bytes(), CONTROL_FRAME_BYTES);
+        assert_eq!(
+            StageMsg::Evict { run: 0, slot: 3 }.wire_bytes(),
+            CONTROL_FRAME_BYTES
+        );
+        assert_eq!(StageMsg::Shutdown.wire_bytes(), CONTROL_FRAME_BYTES);
+        // a Step frame pays for its feedback tokens AND its slot map
+        let s = StageMsg::Step {
+            run: 0,
+            iter: 1,
+            batch: 4,
+            pos: vec![5, -1, 9, -1],
+            payload: Payload::Tokens(vec![1, 2, 3, 4]),
+        };
+        assert_eq!(s.wire_bytes(), 32);
         let t = TokenMsg {
             group: 0,
             iter: 0,
             tokens: vec![1; 8],
+            origin: TokenOrigin::Group,
         };
-        assert_eq!(t.bytes(), 32);
+        assert_eq!(t.wire_bytes(), 32);
     }
 }

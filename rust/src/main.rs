@@ -1,7 +1,8 @@
 //! `edgeshard` — CLI for the EdgeShard reproduction.
 //!
 //! ```text
-//! edgeshard repro <table1|table4|fig7|fig8|fig9|fig10|all> [--seed N]
+//! edgeshard repro <table1|table4|fig7|fig8|fig9|fig10|adaptive|all> [--seed N]
+//! edgeshard bench serving [--requests N] [--runs N] [--seed N] [--out PATH]
 //! edgeshard plan --model <7b|13b|70b> [--bandwidth MBPS] [--objective latency|throughput] [--seed N]
 //! edgeshard profile --model <7b|13b|70b> [--bandwidth MBPS]
 //! edgeshard gantt --model <7b|13b|70b> [--strategy bubble|nobubble] [--micro N]
@@ -89,6 +90,7 @@ fn main() -> Result<()> {
     let args = Args::parse(&argv[1..])?;
     match cmd {
         "repro" => cmd_repro(&args),
+        "bench" => cmd_bench(&args),
         "plan" => cmd_plan(&args),
         "profile" => cmd_profile(&args),
         "gantt" => cmd_gantt(&args),
@@ -105,7 +107,8 @@ fn main() -> Result<()> {
 fn print_usage() {
     println!(
         "edgeshard — EdgeShard reproduction (collaborative edge LLM inference)\n\n\
-         USAGE:\n  edgeshard repro <table1|table4|fig7|fig8|fig9|fig10|all> [--seed N]\n  \
+         USAGE:\n  edgeshard repro <table1|table4|fig7|fig8|fig9|fig10|adaptive|all> [--seed N]\n  \
+         edgeshard bench serving [--requests N] [--runs N] [--seed N] [--out BENCH_serving.json]\n  \
          edgeshard plan --model 7b [--bandwidth 1] [--objective latency] [--seed N]\n  \
          edgeshard profile --model 7b [--bandwidth 1]\n  \
          edgeshard gantt --model 7b [--strategy nobubble] [--micro 4]\n  \
@@ -131,6 +134,31 @@ fn cmd_repro(args: &Args) -> Result<()> {
         "adaptive" => edgeshard::repro::adaptive::run(seed),
         "all" => edgeshard::repro::run_all(seed),
         other => bail!("unknown experiment `{other}`"),
+    }
+}
+
+/// `edgeshard bench serving`: the sim-backend serving-throughput bench
+/// (continuous batching vs fixed groups) with a machine-readable JSON
+/// artifact — the perf trajectory CI tracks.
+fn cmd_bench(args: &Args) -> Result<()> {
+    let what = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("serving");
+    match what {
+        "serving" => {
+            let cfg = edgeshard::repro::serving::ServingBenchConfig {
+                requests: args.get_usize("requests", 24)?,
+                seed: args.get_usize("seed", 0)? as u64,
+                runs: args.get_usize("runs", 2)?,
+                sequential: args.get("sequential").map(|v| v == "true").unwrap_or(true),
+                ..Default::default()
+            };
+            let out = args.get("out").unwrap_or("BENCH_serving.json");
+            edgeshard::repro::serving::run(&cfg, std::path::Path::new(out))
+        }
+        other => bail!("unknown bench `{other}` (try `serving`)"),
     }
 }
 
@@ -255,14 +283,14 @@ fn build_engine(args: &Args) -> Result<(ExecService, Engine, Batcher)> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get("addr").unwrap_or("127.0.0.1:7077").to_string();
-    let (svc, engine, mut batcher) = build_engine(args)?;
+    let (svc, mut engine, mut batcher) = build_engine(args)?;
     let listener = std::net::TcpListener::bind(&addr)?;
     println!("serving on {addr} (JSON lines: {{\"prompt\": \"…\", \"max_new_tokens\": 16}})");
     let cfg = edgeshard::coordinator::server::ServerConfig {
         max_requests: args.get("max-requests").map(|v| v.parse()).transpose()?,
         ..Default::default()
     };
-    let served = edgeshard::coordinator::server::serve(listener, &engine, &mut batcher, &cfg)?;
+    let served = edgeshard::coordinator::server::serve(listener, &mut engine, &mut batcher, &cfg)?;
     println!("served {served} requests");
     engine.shutdown()?;
     drop(svc);
@@ -272,7 +300,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_generate(args: &Args) -> Result<()> {
     let prompt = args.get("prompt").unwrap_or("Today is a good day").to_string();
     let max_new = args.get_usize("max-new", 16)?;
-    let (svc, engine, mut batcher) = build_engine(args)?;
+    let (svc, mut engine, mut batcher) = build_engine(args)?;
     let req = GenRequest {
         id: 1,
         prompt: prompt.bytes().map(|b| b as i32).collect(),

@@ -10,6 +10,7 @@
 //! | fig9 | source-node effect (AGX Orin vs Orin NX) | [`figs::fig9`] |
 //! | fig10 | bubble vs no-bubble pipeline strategies | [`figs::fig10`] |
 //! | adaptive | mid-generation link drop: static vs adaptive engine | [`adaptive::run`] |
+//! | serving | continuous batching vs fixed groups (`edgeshard bench`) | [`serving::run`] |
 //!
 //! Numbers come from the analytic profiler + the planners + the pipeline
 //! simulator (the paper's physical testbed is simulated per DESIGN.md);
@@ -21,6 +22,7 @@
 pub mod adaptive;
 pub mod figs;
 pub mod methods;
+pub mod serving;
 pub mod table1;
 pub mod table4;
 

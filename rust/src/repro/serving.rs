@@ -1,0 +1,359 @@
+//! Serving-throughput bench: continuous batching vs the paper's
+//! fixed-group serving on a ragged workload — the perf-trajectory
+//! artifact behind `edgeshard bench` and the non-gating CI job.
+//!
+//! Three modes serve the *same* ragged request mix (bursts of mixed
+//! `max_new_tokens`, arrival queue longer than one compiled group) on the
+//! same sim-backend pipeline:
+//!
+//! 1. **sequential** — one request at a time (latency baseline);
+//! 2. **fixed** — the classic batcher packs compiled groups up front and
+//!    pipelines them (the paper's throughput mode): bursts shorter than
+//!    the compiled batch become padded rows, long groups hold slots;
+//! 3. **continuous** — the iteration-level slot scheduler
+//!    ([`crate::coordinator::scheduler`]).
+//!
+//! Correctness anchor: all three must emit **byte-identical per-request
+//! token streams** (batch composition never changes row math).  Verdict
+//! metrics: tokens/s, TTFT percentiles (overall and short-request),
+//! decode-step latency, and `padding_efficiency` — quantifying, not just
+//! asserting, where the continuous-batching win comes from.
+//!
+//! Output: a markdown table under `results/serving.md` plus
+//! machine-readable `BENCH_serving.json` for the CI perf artifact.
+
+use anyhow::{Context, Result};
+
+use crate::cluster::{Cluster, Device, DeviceClass};
+use crate::coordinator::api::{GenRequest, GenResult};
+use crate::coordinator::scheduler::ContinuousConfig;
+use crate::coordinator::{Batcher, Engine, EngineConfig, EngineStats};
+use crate::metrics::Histogram;
+use crate::pipeline::Strategy;
+use crate::runtime::manifest::ManifestConfig;
+use crate::runtime::{ExecService, Manifest, WeightStore};
+use crate::util::{markdown_table, Json};
+use crate::workload::RaggedTraceGen;
+
+/// Bench knobs (defaults are what CI runs).
+#[derive(Debug, Clone)]
+pub struct ServingBenchConfig {
+    pub requests: usize,
+    pub seed: u64,
+    /// Continuous-batching pipeline depth (independent runs).
+    pub runs: usize,
+    /// Generation lengths the ragged mix draws from (the shortest one
+    /// defines the "short request" TTFT bucket).  Several distinct
+    /// lengths keep same-length bursts from merging into full groups.
+    pub gen_lens: Vec<usize>,
+    /// Mean same-length burst size (keep it under the compiled batch so
+    /// fixed packing actually pads).
+    pub mean_burst: usize,
+    /// Run the per-request sequential baseline too (slowest mode).
+    pub sequential: bool,
+}
+
+impl Default for ServingBenchConfig {
+    fn default() -> Self {
+        ServingBenchConfig {
+            requests: 24,
+            seed: 0,
+            runs: 2,
+            gen_lens: vec![4, 12, 24, 48],
+            mean_burst: 2,
+            sequential: true,
+        }
+    }
+}
+
+/// One serving mode, summarized.
+#[derive(Debug)]
+pub struct ModeSummary {
+    pub mode: String,
+    pub tokens_per_s: f64,
+    pub makespan_ms: f64,
+    pub ttft_p50_ms: f64,
+    pub ttft_p95_ms: f64,
+    /// p95 TTFT over the short (shortest `gen_lens`) requests only.
+    pub ttft_p95_short_ms: f64,
+    pub iter_p50_ms: f64,
+    pub iter_p95_ms: f64,
+    pub padding_efficiency: f64,
+    pub results: Vec<GenResult>,
+}
+
+/// Everything the bench produced.
+#[derive(Debug)]
+pub struct ServingBenchReport {
+    pub config: ServingBenchConfig,
+    pub modes: Vec<ModeSummary>,
+    /// Per-request token streams byte-identical across every mode.
+    pub tokens_identical: bool,
+    /// continuous tokens/s ÷ fixed tokens/s.
+    pub speedup_vs_fixed: f64,
+    /// continuous short-request p95 TTFT ÷ fixed (lower is better).
+    pub short_ttft_ratio: f64,
+}
+
+impl ServingBenchReport {
+    pub fn mode(&self, name: &str) -> Option<&ModeSummary> {
+        self.modes.iter().find(|m| m.mode == name)
+    }
+}
+
+/// The bench model: the scenario-sized mini model, but compiled at
+/// batches [1, 8] so group packing has a real padding decision to make.
+fn bench_config() -> ManifestConfig {
+    ManifestConfig::mini_sim("tinyllama-bench-sim", 16, 128)
+}
+
+fn bench_cluster() -> Cluster {
+    let devices = vec![
+        Device::new(0, DeviceClass::agx_orin()),
+        Device::new(1, DeviceClass::agx_orin()),
+    ];
+    Cluster::new(devices, 1000.0, 0.5)
+}
+
+fn summarize(
+    mode: &str,
+    results: Vec<GenResult>,
+    stats: &mut EngineStats,
+    short_ids: &std::collections::HashSet<u64>,
+) -> ModeSummary {
+    let mut short_ttft = Histogram::new();
+    for r in &results {
+        if short_ids.contains(&r.id) {
+            short_ttft.record(r.ttft_ms);
+        }
+    }
+    ModeSummary {
+        mode: mode.to_string(),
+        tokens_per_s: stats.throughput_tps,
+        makespan_ms: stats.makespan_ms,
+        ttft_p50_ms: stats.ttft.percentile(50.0),
+        ttft_p95_ms: stats.ttft.percentile(95.0),
+        ttft_p95_short_ms: short_ttft.percentile(95.0),
+        iter_p50_ms: stats.iter_latency.percentile(50.0),
+        iter_p95_ms: stats.iter_latency.percentile(95.0),
+        padding_efficiency: stats.padding_efficiency,
+        results,
+    }
+}
+
+/// Token rows keyed by request id — the cross-mode comparison key.
+fn token_rows(results: &[GenResult]) -> Vec<(u64, Vec<i32>)> {
+    let mut rows: Vec<(u64, Vec<i32>)> =
+        results.iter().map(|r| (r.id, r.tokens.clone())).collect();
+    rows.sort_by_key(|(id, _)| *id);
+    rows
+}
+
+/// Run the serving bench; see the module docs.
+pub fn run_bench(cfg: &ServingBenchConfig) -> Result<ServingBenchReport> {
+    let manifest = Manifest::synthetic(bench_config(), vec![1, 8]);
+    let weights = WeightStore::synthetic(&manifest, cfg.seed);
+    let (_svc, exec) = ExecService::start_sim(&manifest)?;
+    let cluster = bench_cluster();
+    let n_model_layers = manifest.config.n_layers + 2;
+    let plan = crate::planner::Plan {
+        objective: crate::planner::PlanObjective::Throughput,
+        stages: vec![
+            crate::planner::Stage {
+                device: 0,
+                start: 0,
+                end: 3,
+            },
+            crate::planner::Stage {
+                device: 1,
+                start: 3,
+                end: n_model_layers,
+            },
+        ],
+        predicted_ms: 0.0,
+    };
+    let engine_cfg = EngineConfig {
+        time_scale: 0.0,
+        ..EngineConfig::default()
+    };
+
+    let short_gen = *cfg.gen_lens.iter().min().context("empty gen_lens")?;
+    let gen = RaggedTraceGen {
+        mean_burst: cfg.mean_burst,
+        ..RaggedTraceGen::new(
+            manifest.config.prefill_len,
+            manifest.config.vocab_size as i32,
+            cfg.gen_lens.clone(),
+            cfg.seed,
+        )
+    };
+    let trace = gen.generate(cfg.requests);
+    let requests: Vec<GenRequest> = trace
+        .iter()
+        .map(|r| GenRequest {
+            id: r.id,
+            prompt: r.prompt.clone(),
+            max_new_tokens: r.max_new_tokens,
+        })
+        .collect();
+    let short_ids: std::collections::HashSet<u64> = requests
+        .iter()
+        .filter(|r| r.max_new_tokens == short_gen)
+        .map(|r| r.id)
+        .collect();
+
+    let mut engine =
+        Engine::build(&manifest, &weights, exec.clone(), &plan, &cluster, &engine_cfg)?;
+    let mut modes: Vec<ModeSummary> = Vec::new();
+
+    if cfg.sequential {
+        // one request at a time, each its own batch-1 group
+        let mut batcher = Batcher::new(manifest.config.prefill_len, vec![1]);
+        let mut groups = Vec::new();
+        for r in &requests {
+            groups.extend(batcher.pack(std::slice::from_ref(r)));
+        }
+        let (results, mut stats) = engine
+            .generate_sequential(&groups)
+            .context("sequential mode")?;
+        modes.push(summarize("sequential", results, &mut stats, &short_ids));
+    }
+
+    // the paper's throughput mode: pack once, pipeline the groups
+    let mut batcher = Batcher::new(manifest.config.prefill_len, manifest.batch_sizes.clone());
+    let groups = batcher.pack(&requests);
+    let (results, mut stats) = engine
+        .generate_pipelined(&groups, Strategy::NoBubble)
+        .context("fixed-group mode")?;
+    modes.push(summarize("fixed", results, &mut stats, &short_ids));
+
+    // iteration-level slot scheduling
+    let ccfg = ContinuousConfig {
+        runs: cfg.runs,
+        ..ContinuousConfig::default()
+    };
+    let (results, mut stats) = engine
+        .generate_continuous(&requests, &ccfg)
+        .context("continuous mode")?;
+    modes.push(summarize("continuous", results, &mut stats, &short_ids));
+    engine.shutdown()?;
+
+    let reference = token_rows(&modes[0].results);
+    let tokens_identical = modes.iter().all(|m| token_rows(&m.results) == reference);
+    let fixed = modes.iter().find(|m| m.mode == "fixed").unwrap();
+    let cont = modes.iter().find(|m| m.mode == "continuous").unwrap();
+    let speedup_vs_fixed = if fixed.tokens_per_s > 0.0 {
+        cont.tokens_per_s / fixed.tokens_per_s
+    } else {
+        0.0
+    };
+    let short_ttft_ratio = if fixed.ttft_p95_short_ms > 0.0 {
+        cont.ttft_p95_short_ms / fixed.ttft_p95_short_ms
+    } else {
+        0.0
+    };
+    Ok(ServingBenchReport {
+        config: cfg.clone(),
+        modes,
+        tokens_identical,
+        speedup_vs_fixed,
+        short_ttft_ratio,
+    })
+}
+
+/// Render the markdown `edgeshard bench` emits.
+pub fn report_markdown(r: &ServingBenchReport) -> String {
+    let mut out = String::new();
+    out.push_str("# Serving bench — continuous batching vs fixed groups (sim backend)\n\n");
+    out.push_str(&format!(
+        "workload: {} requests, gen lengths {:?} in bursts of ~{}, seed {}\n\n",
+        r.config.requests, r.config.gen_lens, r.config.mean_burst, r.config.seed
+    ));
+    let rows: Vec<Vec<String>> = r
+        .modes
+        .iter()
+        .map(|m| {
+            vec![
+                m.mode.clone(),
+                format!("{:.1}", m.tokens_per_s),
+                format!("{:.1}", m.ttft_p50_ms),
+                format!("{:.1}", m.ttft_p95_ms),
+                format!("{:.1}", m.ttft_p95_short_ms),
+                format!("{:.2}", m.iter_p95_ms),
+                format!("{:.2}", m.padding_efficiency),
+                format!("{:.0}", m.makespan_ms),
+            ]
+        })
+        .collect();
+    out.push_str(&markdown_table(
+        &[
+            "mode",
+            "tokens/s",
+            "TTFT p50 (ms)",
+            "TTFT p95 (ms)",
+            "TTFT p95 short (ms)",
+            "iter p95 (ms)",
+            "padding eff.",
+            "makespan (ms)",
+        ],
+        &rows,
+    ));
+    out.push_str(&format!(
+        "\ncontinuous vs fixed: {:.2}x tokens/s, {:.2}x short-request p95 TTFT; \
+         tokens identical across modes: {}\n",
+        r.speedup_vs_fixed, r.short_ttft_ratio, r.tokens_identical
+    ));
+    out
+}
+
+/// Machine-readable form (the `BENCH_serving.json` CI artifact).
+pub fn report_json(r: &ServingBenchReport) -> Json {
+    use std::collections::BTreeMap;
+    let num = |v: f64| Json::Num((v * 1000.0).round() / 1000.0);
+    let mut root = BTreeMap::new();
+    let mut workload = BTreeMap::new();
+    workload.insert("requests".into(), Json::Num(r.config.requests as f64));
+    workload.insert(
+        "gen_lens".into(),
+        Json::Arr(r.config.gen_lens.iter().map(|&g| Json::Num(g as f64)).collect()),
+    );
+    workload.insert("mean_burst".into(), Json::Num(r.config.mean_burst as f64));
+    workload.insert("seed".into(), Json::Num(r.config.seed as f64));
+    root.insert("workload".into(), Json::Obj(workload));
+    root.insert(
+        "modes".into(),
+        Json::Arr(
+            r.modes
+                .iter()
+                .map(|m| {
+                    let mut o = BTreeMap::new();
+                    o.insert("mode".into(), Json::Str(m.mode.clone()));
+                    o.insert("tokens_per_s".into(), num(m.tokens_per_s));
+                    o.insert("makespan_ms".into(), num(m.makespan_ms));
+                    o.insert("ttft_p50_ms".into(), num(m.ttft_p50_ms));
+                    o.insert("ttft_p95_ms".into(), num(m.ttft_p95_ms));
+                    o.insert("ttft_p95_short_ms".into(), num(m.ttft_p95_short_ms));
+                    o.insert("iter_p50_ms".into(), num(m.iter_p50_ms));
+                    o.insert("iter_p95_ms".into(), num(m.iter_p95_ms));
+                    o.insert("padding_efficiency".into(), num(m.padding_efficiency));
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    root.insert("speedup_vs_fixed".into(), num(r.speedup_vs_fixed));
+    root.insert("short_ttft_ratio".into(), num(r.short_ttft_ratio));
+    root.insert("tokens_identical".into(), Json::Bool(r.tokens_identical));
+    Json::Obj(root)
+}
+
+/// `edgeshard bench serving` entry: run, echo markdown, write the JSON
+/// artifact (and the markdown under `results/`).
+pub fn run(cfg: &ServingBenchConfig, json_path: &std::path::Path) -> Result<()> {
+    let report = run_bench(cfg)?;
+    super::emit("serving", &report_markdown(&report))?;
+    std::fs::write(json_path, report_json(&report).to_string())
+        .with_context(|| format!("writing {json_path:?}"))?;
+    println!("wrote {}", json_path.display());
+    Ok(())
+}

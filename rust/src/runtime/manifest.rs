@@ -25,6 +25,31 @@ impl ManifestConfig {
     pub fn head_dim(&self) -> usize {
         self.d_model / self.n_heads
     }
+
+    /// The mini sim-backend model (vocab 64, d_model 32, 4 layers, 2
+    /// heads, d_ff 64) shared by the adaptive scenarios, the serving
+    /// bench and the continuous-batching tests — small enough that
+    /// debug-build compute stays well under the simulated network costs.
+    /// `prefill_len`/`max_seq` vary per harness.
+    pub fn mini_sim(name: &str, prefill_len: usize, max_seq: usize) -> ManifestConfig {
+        ManifestConfig {
+            name: name.into(),
+            vocab_size: 64,
+            d_model: 32,
+            n_layers: 4,
+            n_heads: 2,
+            n_kv_heads: 2,
+            d_ff: 64,
+            max_seq,
+            prefill_len,
+            layer_param_order: [
+                "attn_norm", "wq", "wk", "wv", "wo", "ffn_norm", "w_gate", "w_up", "w_down",
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        }
+    }
 }
 
 /// Dtype + shape of one HLO parameter or result.

@@ -352,39 +352,77 @@ fn run_layer(
             kc_dims == cache_dims.as_slice() && vc_dims == cache_dims.as_slice(),
             "sim layer decode: cache dims {kc_dims:?}/{vc_dims:?}"
         );
-        let pos = inputs[12].as_i32()?[0];
-        ensure!(
-            (0..ms as i32).contains(&pos),
-            "sim layer decode: pos {pos} out of range"
-        );
-        let pos = pos as usize;
-        let x = rms_norm(h_in, w.attn_norm, batch, d);
+        // `pos` is either a scalar (classic group decode: every row at the
+        // same absolute position) or a `[batch]` vector (continuous
+        // batching: the per-iteration slot map — row i decodes at
+        // `pos[i]`, and `pos[i] < 0` marks a dead row that is skipped
+        // entirely: no compute, no cache write, zero output).
+        let pos_raw = inputs[12].as_i32()?;
+        let pos_rows: Vec<i32> = if inputs[12].dims().is_empty() {
+            // scalar form is the classic whole-batch decode: dead-row
+            // sentinels are only meaningful in the per-row slot map
+            ensure!(
+                pos_raw[0] >= 0,
+                "sim layer decode: pos {} out of range",
+                pos_raw[0]
+            );
+            vec![pos_raw[0]; batch]
+        } else {
+            ensure!(
+                pos_raw.len() == batch,
+                "sim layer decode: pos len {} != batch {batch}",
+                pos_raw.len()
+            );
+            pos_raw.to_vec()
+        };
+        for &p in &pos_rows {
+            ensure!(p < ms as i32, "sim layer decode: pos {p} out of range");
+        }
+        let mut x = rms_norm(h_in, w.attn_norm, batch, d);
+        // Zero dead rows before the projections: the zero-skip fast path
+        // in `matmul` makes them near-free, and row independence keeps
+        // live rows byte-identical to a batch of any other composition.
+        for (b, &p) in pos_rows.iter().enumerate() {
+            if p < 0 {
+                x[b * d..(b + 1) * d].fill(0.0);
+            }
+        }
         let mut q = matmul(&x, w.wq, batch, d, nh * hd);
         let mut k = matmul(&x, w.wk, batch, d, nkv * hd);
         let v = matmul(&x, w.wv, batch, d, nkv * hd);
-        for b in 0..batch {
+        for (b, &p) in pos_rows.iter().enumerate() {
+            if p < 0 {
+                continue;
+            }
             for hh in 0..nh {
                 let off = b * nh * hd + hh * hd;
-                rope_rotate(&mut q[off..off + hd], pos, 10000.0);
+                rope_rotate(&mut q[off..off + hd], p as usize, 10000.0);
             }
             for kh in 0..nkv {
                 let off = b * nkv * hd + kh * hd;
-                rope_rotate(&mut k[off..off + hd], pos, 10000.0);
+                rope_rotate(&mut k[off..off + hd], p as usize, 10000.0);
             }
         }
         let mut kc = kc_in.to_vec();
         let mut vc = vc_in.to_vec();
-        for b in 0..batch {
+        for (b, &p) in pos_rows.iter().enumerate() {
+            if p < 0 {
+                continue;
+            }
             for kh in 0..nkv {
-                let dst = cache_at(b, kh, pos);
+                let dst = cache_at(b, kh, p as usize);
                 let src = b * nkv * hd + kh * hd;
                 kc[dst..dst + hd].copy_from_slice(&k[src..src + hd]);
                 vc[dst..dst + hd].copy_from_slice(&v[src..src + hd]);
             }
         }
         let mut attn = vec![0f32; batch * nh * hd];
-        let mut scores = vec![0f32; pos + 1];
-        for b in 0..batch {
+        for (b, &p) in pos_rows.iter().enumerate() {
+            if p < 0 {
+                continue;
+            }
+            let pos = p as usize;
+            let mut scores = vec![0f32; pos + 1];
             for hh in 0..nh {
                 let kh = hh / reps.max(1);
                 let qoff = b * nh * hd + hh * hd;
@@ -399,15 +437,22 @@ fn run_layer(
                 }
                 softmax(&mut scores);
                 let arow = &mut attn[qoff..qoff + hd];
-                for (ki, &p) in scores.iter().enumerate() {
+                for (ki, &sp) in scores.iter().enumerate() {
                     let voff = cache_at(b, kh, ki);
                     for (a, b_) in arow.iter_mut().zip(&vc[voff..voff + hd]) {
-                        *a += p * b_;
+                        *a += sp * b_;
                     }
                 }
             }
         }
         let mut h = h_in.to_vec();
+        // Dead rows leave the layer as zeros (the residual stream of a
+        // dead slot is not meaningful and must stay cheap downstream).
+        for (b, &p) in pos_rows.iter().enumerate() {
+            if p < 0 {
+                h[b * d..(b + 1) * d].fill(0.0);
+            }
+        }
         attn_out_and_mlp(cfg, &w, &mut h, &attn, batch);
         Ok(vec![
             TensorData::f32(h, vec![batch as i64, 1, d as i64]),
@@ -577,6 +622,54 @@ mod tests {
         let r0 = &logits[..c.vocab_size];
         let r1 = &logits[c.vocab_size..];
         assert!(r0.iter().zip(r1).any(|(a, b)| (a - b).abs() > 1e-9));
+    }
+
+    #[test]
+    fn per_row_pos_matches_scalar_and_skips_dead_rows() {
+        // Continuous batching decodes a composed batch where each row sits
+        // at its own absolute position; live rows must be byte-identical
+        // to a scalar-pos decode of the same row, and dead rows (pos < 0)
+        // must produce zero output and leave their cache rows untouched.
+        let (m, w) = setup();
+        let c = &m.config;
+        let (d, nkv, ms, hd) = (c.d_model, c.n_kv_heads, c.max_seq, c.head_dim());
+        let cache_len = nkv * ms * hd;
+
+        // reference: row alone at pos 5, batch 1, scalar pos
+        let h_row: Vec<f32> = (0..d).map(|i| ((i % 7) as f32 - 3.0) * 0.07).collect();
+        let mut inputs = layer_inputs(&m, &w, 0);
+        inputs.push(as_td(&h_row, &[1, 1, d]));
+        inputs.push(as_td(&vec![0.25; cache_len], &[1, nkv, ms, hd]));
+        inputs.push(as_td(&vec![0.5; cache_len], &[1, nkv, ms, hd]));
+        inputs.push(TensorData::scalar_i32(5));
+        let solo = run_variant(c, "layer_decode_b1", &inputs).unwrap();
+
+        // batch 3: dead row, the live row at pos 5, another dead row
+        let mut h3 = vec![0.9f32; 3 * d]; // garbage in dead rows
+        h3[d..2 * d].copy_from_slice(&h_row);
+        let mut kc3 = vec![7.0f32; 3 * cache_len]; // sentinel in dead rows
+        let mut vc3 = vec![8.0f32; 3 * cache_len];
+        kc3[cache_len..2 * cache_len].fill(0.25);
+        vc3[cache_len..2 * cache_len].fill(0.5);
+        let mut inputs = layer_inputs(&m, &w, 0);
+        inputs.push(as_td(&h3, &[3, 1, d]));
+        inputs.push(as_td(&kc3, &[3, nkv, ms, hd]));
+        inputs.push(as_td(&vc3, &[3, nkv, ms, hd]));
+        inputs.push(TensorData::i32(vec![-1, 5, -1], vec![3]));
+        let mixed = run_variant(c, "layer_decode_b3", &inputs).unwrap();
+
+        let h_solo = solo[0].as_f32().unwrap();
+        let h_mixed = mixed[0].as_f32().unwrap();
+        assert_eq!(&h_mixed[d..2 * d], h_solo, "live row diverged");
+        assert!(h_mixed[..d].iter().all(|&x| x == 0.0), "dead row not zeroed");
+        assert!(h_mixed[2 * d..].iter().all(|&x| x == 0.0));
+        let kc_out = mixed[1].as_f32().unwrap();
+        assert_eq!(
+            &kc_out[cache_len..2 * cache_len],
+            solo[1].as_f32().unwrap(),
+            "live cache row diverged"
+        );
+        assert!(kc_out[..cache_len].iter().all(|&x| x == 7.0), "dead cache row touched");
     }
 
     #[test]

@@ -2,6 +2,9 @@
 //! 32-token prompts from WikiText-2 and generates 96 tokens) and request
 //! traces with Poisson arrivals for the serving experiments.
 
+//! `RaggedTraceGen` adds the mixed-`max_new_tokens` burst mix the
+//! continuous-batching bench runs on.
+
 pub mod corpus;
 
 pub use corpus::Corpus;
@@ -66,9 +69,95 @@ impl TraceGen {
     }
 }
 
+/// Ragged serving mix: `max_new_tokens` is drawn per *burst* — short
+/// stretches of consecutive requests sharing one generation length, the
+/// arrival shape real serving queues exhibit and the one static group
+/// packing handles worst (bursts shorter than the compiled batch turn
+/// into padded groups; mixed lengths hold pipeline slots hostage).  This
+/// is the workload the continuous-batching scheduler is benched on.
+#[derive(Debug, Clone)]
+pub struct RaggedTraceGen {
+    pub prompt_len: usize,
+    pub vocab_size: i32,
+    /// Generation lengths a burst may draw (e.g. `[8, 48]`).
+    pub gen_lens: Vec<usize>,
+    /// Burst length is uniform in `1..=2*mean_burst-1` (mean `mean_burst`).
+    pub mean_burst: usize,
+    /// Mean inter-arrival gap (ms); 0 ⇒ closed loop.
+    pub mean_interarrival_ms: f64,
+    pub seed: u64,
+}
+
+impl RaggedTraceGen {
+    pub fn new(prompt_len: usize, vocab_size: i32, gen_lens: Vec<usize>, seed: u64) -> Self {
+        assert!(!gen_lens.is_empty(), "need at least one generation length");
+        RaggedTraceGen {
+            prompt_len,
+            vocab_size,
+            gen_lens,
+            mean_burst: 3,
+            mean_interarrival_ms: 0.0,
+            seed,
+        }
+    }
+
+    /// Generate `n` requests in same-length bursts.
+    pub fn generate(&self, n: usize) -> Vec<Request> {
+        let corpus = Corpus::new(self.seed);
+        let mut rng = Rng::new(self.seed ^ 0xA24B_AED4_963E_E407);
+        let mut t = 0.0;
+        let mut burst_left = 0usize;
+        let mut gen_len = self.gen_lens[0];
+        (0..n as u64)
+            .map(|id| {
+                if burst_left == 0 {
+                    let span = (2 * self.mean_burst as u64).saturating_sub(1).max(1);
+                    burst_left = 1 + rng.next_below(span) as usize;
+                    gen_len = self.gen_lens
+                        [rng.next_below(self.gen_lens.len() as u64) as usize];
+                }
+                burst_left -= 1;
+                let prompt = corpus.sample_tokens(self.prompt_len, self.vocab_size, id);
+                let arrival = t;
+                if self.mean_interarrival_ms > 0.0 {
+                    t += rng.exponential(self.mean_interarrival_ms);
+                }
+                Request {
+                    id,
+                    arrival_ms: arrival,
+                    prompt,
+                    max_new_tokens: gen_len,
+                }
+            })
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn ragged_trace_is_deterministic_and_bursty() {
+        let g = RaggedTraceGen::new(16, 64, vec![4, 32], 7);
+        let a = g.generate(40);
+        assert_eq!(a, g.generate(40));
+        assert_eq!(a.len(), 40);
+        // both lengths appear, and at least one same-length burst of ≥ 2
+        assert!(a.iter().any(|r| r.max_new_tokens == 4));
+        assert!(a.iter().any(|r| r.max_new_tokens == 32));
+        assert!(a
+            .windows(2)
+            .any(|w| w[0].max_new_tokens == w[1].max_new_tokens));
+        // …and the mix actually switches (it is ragged, not uniform)
+        assert!(a
+            .windows(2)
+            .any(|w| w[0].max_new_tokens != w[1].max_new_tokens));
+        for r in &a {
+            assert_eq!(r.prompt.len(), 16);
+            assert!(r.prompt.iter().all(|&t| (0..64).contains(&t)));
+        }
+    }
 
     #[test]
     fn trace_is_deterministic() {

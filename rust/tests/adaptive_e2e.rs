@@ -61,12 +61,12 @@ fn sim_backend_sharding_invariance() {
     let n = manifest.config.n_layers + 2;
 
     let solo_plan = plan(&[(0, 0, n)]);
-    let solo =
+    let mut solo =
         Engine::build(&manifest, &weights, exec.clone(), &solo_plan, &cluster, &cfg).unwrap();
     let (r1, s1) = solo.generate_sequential(&[tiny_group(6)]).unwrap();
     solo.shutdown().unwrap();
 
-    let sharded = Engine::build(
+    let mut sharded = Engine::build(
         &manifest,
         &weights,
         exec.clone(),
@@ -118,7 +118,7 @@ fn adaptive_engine_is_a_noop_on_a_healthy_network() {
         ..EngineConfig::default()
     };
 
-    let static_engine =
+    let mut static_engine =
         Engine::build(&manifest, &weights, exec.clone(), &p, &cluster, &cfg).unwrap();
     let (rs, _) = static_engine.generate_sequential(&[tiny_group(8)]).unwrap();
     static_engine.shutdown().unwrap();

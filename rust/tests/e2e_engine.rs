@@ -89,7 +89,7 @@ fn engine(c: &Ctx, p: &Plan, time_scale: f64) -> Engine {
 fn single_stage_matches_python_oracle() {
     let Some(c) = ctx() else { return };
     let n = c.manifest.config.n_layers + 2;
-    let e = engine(&c, &plan(&[(0, 0, n)]), 0.0);
+    let mut e = engine(&c, &plan(&[(0, 0, n)]), 0.0);
     let (results, stats) = e.generate_sequential(&[group_b1(8)]).unwrap();
     assert_eq!(results.len(), 1);
     assert_eq!(results[0].tokens, ORACLE_B1.to_vec());
@@ -104,7 +104,7 @@ fn sharded_three_stages_identical_numerics() {
     // change the numerics.
     let Some(c) = ctx() else { return };
     let n = c.manifest.config.n_layers + 2; // 6 model layers
-    let e = engine(&c, &plan(&[(0, 0, 2), (1, 2, 4), (2, 4, n)]), 0.0);
+    let mut e = engine(&c, &plan(&[(0, 0, 2), (1, 2, 4), (2, 4, n)]), 0.0);
     let (results, _) = e.generate_sequential(&[group_b1(8)]).unwrap();
     assert_eq!(results[0].tokens, ORACLE_B1.to_vec());
     e.shutdown().unwrap();
@@ -114,7 +114,7 @@ fn sharded_three_stages_identical_numerics() {
 fn two_stage_split_at_head_matches() {
     let Some(c) = ctx() else { return };
     let n = c.manifest.config.n_layers + 2;
-    let e = engine(&c, &plan(&[(0, 0, n - 1), (2, n - 1, n)]), 0.0);
+    let mut e = engine(&c, &plan(&[(0, 0, n - 1), (2, n - 1, n)]), 0.0);
     let (results, _) = e.generate_sequential(&[group_b1(8)]).unwrap();
     assert_eq!(results[0].tokens, ORACLE_B1.to_vec());
     e.shutdown().unwrap();
@@ -124,7 +124,7 @@ fn two_stage_split_at_head_matches() {
 fn batched_group_matches_oracle() {
     let Some(c) = ctx() else { return };
     let n = c.manifest.config.n_layers + 2;
-    let e = engine(&c, &plan(&[(0, 0, 3), (2, 3, n)]), 0.0);
+    let mut e = engine(&c, &plan(&[(0, 0, 3), (2, 3, n)]), 0.0);
     let mut tokens = Vec::new();
     for i in 0..8i32 {
         tokens.extend((0..32).map(|t| (t + i * 7) % 256));
@@ -151,7 +151,7 @@ fn batched_group_matches_oracle() {
 fn pipelined_multi_group_no_bubble_matches() {
     let Some(c) = ctx() else { return };
     let n = c.manifest.config.n_layers + 2;
-    let e = engine(&c, &plan(&[(0, 0, 2), (1, 2, 4), (2, 4, n)]), 0.0);
+    let mut e = engine(&c, &plan(&[(0, 0, 2), (1, 2, 4), (2, 4, n)]), 0.0);
     let groups: Vec<GroupRequest> = (0..4)
         .map(|gi| {
             let mut g = group_b1(6);
@@ -174,7 +174,7 @@ fn pipelined_multi_group_no_bubble_matches() {
 fn pipelined_bubble_same_tokens_as_no_bubble() {
     let Some(c) = ctx() else { return };
     let n = c.manifest.config.n_layers + 2;
-    let e = engine(&c, &plan(&[(0, 0, 3), (1, 3, n)]), 0.0);
+    let mut e = engine(&c, &plan(&[(0, 0, 3), (1, 3, n)]), 0.0);
     let groups: Vec<GroupRequest> = (0..3)
         .map(|gi| {
             let mut g = group_b1(5);
@@ -201,7 +201,7 @@ fn shaped_links_slow_generation_down() {
     let n = c.manifest.config.n_layers + 2;
     let p = plan(&[(0, 0, 3), (2, 3, n)]);
 
-    let fast = engine(&c, &p, 0.0);
+    let mut fast = engine(&c, &p, 0.0);
     let t0 = std::time::Instant::now();
     fast.generate_sequential(&[group_b1(4)]).unwrap();
     let fast_ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -209,7 +209,7 @@ fn shaped_links_slow_generation_down() {
 
     // tiny_demo link 0->2 is ~50 Mbps; activations are 32*128*4 B for
     // prefill + decode steps. time_scale=50 inflates delays ~50x.
-    let slow = engine(&c, &p, 50.0);
+    let mut slow = engine(&c, &p, 50.0);
     let t0 = std::time::Instant::now();
     slow.generate_sequential(&[group_b1(4)]).unwrap();
     let slow_ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -225,7 +225,7 @@ fn shaped_links_slow_generation_down() {
 fn batcher_to_engine_roundtrip() {
     let Some(c) = ctx() else { return };
     let n = c.manifest.config.n_layers + 2;
-    let e = engine(&c, &plan(&[(0, 0, n)]), 0.0);
+    let mut e = engine(&c, &plan(&[(0, 0, n)]), 0.0);
     let mut b = Batcher::new(c.manifest.config.prefill_len, c.manifest.batch_sizes.clone());
     let reqs: Vec<GenRequest> = (0..3)
         .map(|i| GenRequest {
@@ -249,7 +249,7 @@ fn kv_cache_freed_between_runs() {
     // were released).
     let Some(c) = ctx() else { return };
     let n = c.manifest.config.n_layers + 2;
-    let e = engine(&c, &plan(&[(0, 0, n)]), 0.0);
+    let mut e = engine(&c, &plan(&[(0, 0, n)]), 0.0);
     for _ in 0..3 {
         let (results, _) = e.generate_sequential(&[group_b1(2)]).unwrap();
         assert_eq!(results[0].tokens, ORACLE_B1[..2].to_vec());
