@@ -1,5 +1,5 @@
-//! Time-varying link schedules — the network weather the adaptive runtime
-//! lives in.
+//! Time-varying link *and device* schedules — the weather the adaptive
+//! runtime lives in.
 //!
 //! A [`ScheduleShape`] is a pure function `sim_time_ms → Mbps`, so replays
 //! are deterministic and a schedule can be sampled by planners, tests and
@@ -8,8 +8,19 @@
 //! both the ground-truth [`LiveCluster`] and the engine's in-flight
 //! [`RoutedLink`] pacers (mid-frame — a drop stretches the remaining bits
 //! of whatever is on the wire).
+//!
+//! Device churn works the same way: a [`DeviceShape`] is a pure function
+//! `sim_time_ms → alive?`.  When a scheduled device is down the driver
+//! (a) flips its flag in the shared [`DeviceLiveness`] — stage actors
+//! consult it per message, so frames reaching a dead host vanish with its
+//! KV state — and (b) forces every live link touching the device to zero
+//! bandwidth, so in-flight frames stall exactly like traffic to a
+//! disappeared host.  On rejoin the flag flips back and the links are
+//! restored from the ground-truth cluster; the rejoined device has **cold
+//! KV** (whatever it held died with it) and only re-enters service when a
+//! replan migrates state onto it.
 
-use crate::cluster::LiveCluster;
+use crate::cluster::{DeviceLiveness, LiveCluster};
 use crate::netsim::RoutedLink;
 use crate::util::Rng;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -156,20 +167,66 @@ pub struct LinkSchedule {
     pub shape: ScheduleShape,
 }
 
-/// The full weather forecast: a set of per-link schedules.
+/// Liveness-over-time shape of one device (pure `sim_time_ms → alive?`,
+/// deterministic like [`ScheduleShape`]).
+#[derive(Debug, Clone)]
+pub enum DeviceShape {
+    /// Hard crash at `at_ms`: alive before, gone forever after.
+    CrashAt(f64),
+    /// Crash at `down_ms`, rejoin (with cold KV) at `up_ms`.
+    DownBetween { down_ms: f64, up_ms: f64 },
+    /// Square-wave flapping: up for the first `up_duty` fraction of every
+    /// `period_ms`, down for the rest.  Frames that reach the device while
+    /// it is down are lost, so even a brief blip costs a recovery — this
+    /// models a genuinely crashing host, not heartbeat jitter (model the
+    /// latter as a [`ScheduleShape::Periodic`] link degradation).
+    Flapping { period_ms: f64, up_duty: f64 },
+}
+
+impl DeviceShape {
+    /// Whether the device is up at simulated time `t_ms`.
+    pub fn alive_at(&self, t_ms: f64) -> bool {
+        let t = t_ms.max(0.0);
+        match self {
+            DeviceShape::CrashAt(at_ms) => t < *at_ms,
+            DeviceShape::DownBetween { down_ms, up_ms } => t < *down_ms || t >= *up_ms,
+            DeviceShape::Flapping { period_ms, up_duty } => {
+                let phase = t.rem_euclid(period_ms.max(1e-9));
+                phase < up_duty.clamp(0.0, 1.0) * period_ms
+            }
+        }
+    }
+}
+
+/// One device's churn schedule.
+#[derive(Debug, Clone)]
+pub struct DeviceSchedule {
+    pub device: usize,
+    pub shape: DeviceShape,
+}
+
+/// The full weather forecast: per-link bandwidth schedules plus per-device
+/// churn schedules.
 #[derive(Debug, Clone, Default)]
 pub struct NetworkDynamics {
     pub links: Vec<LinkSchedule>,
+    pub devices: Vec<DeviceSchedule>,
 }
 
 impl NetworkDynamics {
     pub fn new() -> Self {
-        NetworkDynamics { links: Vec::new() }
+        NetworkDynamics::default()
     }
 
     /// Add a schedule for the (symmetric) link `a↔b`.
     pub fn link(mut self, a: usize, b: usize, shape: ScheduleShape) -> Self {
         self.links.push(LinkSchedule { a, b, shape });
+        self
+    }
+
+    /// Add a churn schedule for `device`.
+    pub fn device(mut self, device: usize, shape: DeviceShape) -> Self {
+        self.devices.push(DeviceSchedule { device, shape });
         self
     }
 
@@ -181,15 +238,80 @@ impl NetworkDynamics {
             .map(|l| l.shape.mbps_at(t_ms))
     }
 
+    /// Scheduled liveness of `device` at `t_ms` (`None` = no schedule,
+    /// i.e. always up).
+    pub fn device_alive_at(&self, device: usize, t_ms: f64) -> Option<bool> {
+        self.devices
+            .iter()
+            .find(|d| d.device == device)
+            .map(|d| d.shape.alive_at(t_ms))
+    }
+
+    /// Whether any device churn is scheduled at all (engines use this to
+    /// decide whether to allocate a [`DeviceLiveness`]).
+    pub fn has_device_churn(&self) -> bool {
+        !self.devices.is_empty()
+    }
+
     /// Write the state at `t_ms` into the ground-truth cluster and any
     /// affected live links.
     pub fn apply(&self, cluster: &LiveCluster, links: &[RoutedLink], t_ms: f64) {
+        self.apply_full(cluster, links, None, t_ms);
+    }
+
+    /// [`NetworkDynamics::apply`] plus device churn: dead devices get
+    /// their [`DeviceLiveness`] flag cleared (frames reaching them vanish)
+    /// and every live link touching them forced down; rejoined devices get
+    /// the flag restored and their links re-shaped from the ground truth.
+    ///
+    /// The ground-truth *cluster* is never written with a zero bandwidth
+    /// (planners must keep seeing a routable topology around the corpse);
+    /// only the in-flight pacers are.
+    pub fn apply_full(
+        &self,
+        cluster: &LiveCluster,
+        links: &[RoutedLink],
+        liveness: Option<&DeviceLiveness>,
+        t_ms: f64,
+    ) {
         for l in &self.links {
             let mbps = l.shape.mbps_at(t_ms);
             cluster.set_bandwidth(l.a, l.b, mbps);
             for rl in links {
                 if (rl.from == l.a && rl.to == l.b) || (rl.from == l.b && rl.to == l.a) {
                     rl.link.set_bandwidth(mbps);
+                }
+            }
+        }
+        // resolve every scheduled device's aliveness first: a link is up
+        // only if NEITHER endpoint is a scheduled-dead device, so two
+        // schedules sharing a link cannot re-open it for a corpse
+        // regardless of schedule order
+        let dead: Vec<usize> = self
+            .devices
+            .iter()
+            .filter(|d| !d.shape.alive_at(t_ms))
+            .map(|d| d.device)
+            .collect();
+        for d in &self.devices {
+            let alive = !dead.contains(&d.device);
+            // flag first: a stage must never process a frame after its
+            // links are already down (the frame would vanish into a wire
+            // the monitor can still hear)
+            if let Some(lv) = liveness {
+                lv.set_alive(d.device, alive);
+            }
+            for rl in links {
+                if rl.from != d.device && rl.to != d.device {
+                    continue;
+                }
+                if dead.contains(&rl.from) || dead.contains(&rl.to) {
+                    rl.link.set_bandwidth(0.0);
+                } else {
+                    // restore from the ground truth (which includes any
+                    // link schedule applied above)
+                    rl.link
+                        .set_bandwidth(cluster.bandwidth(rl.from, rl.to));
                 }
             }
         }
@@ -216,6 +338,19 @@ impl DynamicsDriver {
         time_scale: f64,
         tick_real_ms: f64,
     ) -> DynamicsDriver {
+        Self::spawn_full(dynamics, cluster, links, None, time_scale, tick_real_ms)
+    }
+
+    /// [`DynamicsDriver::spawn`] plus a shared [`DeviceLiveness`] the
+    /// device-churn schedules are replayed onto.
+    pub fn spawn_full(
+        dynamics: NetworkDynamics,
+        cluster: LiveCluster,
+        links: Arc<Mutex<Vec<RoutedLink>>>,
+        liveness: Option<DeviceLiveness>,
+        time_scale: f64,
+        tick_real_ms: f64,
+    ) -> DynamicsDriver {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let join = std::thread::Builder::new()
@@ -230,7 +365,7 @@ impl DynamicsDriver {
                     };
                     {
                         let snapshot = links.lock().expect("links lock poisoned");
-                        dynamics.apply(&cluster, &snapshot, sim_ms);
+                        dynamics.apply_full(&cluster, &snapshot, liveness.as_ref(), sim_ms);
                     }
                     std::thread::sleep(Duration::from_secs_f64(tick_real_ms.max(0.5) / 1e3));
                 }
@@ -373,6 +508,100 @@ mod tests {
         assert_eq!(rl.link.get().bandwidth_mbps, 2.0);
         assert_eq!(dynamics.mbps_at(1, 0, 200.0), Some(2.0));
         assert_eq!(dynamics.mbps_at(0, 2, 200.0), None);
+    }
+
+    #[test]
+    fn device_shapes_replay_deterministically() {
+        let crash = DeviceShape::CrashAt(100.0);
+        assert!(crash.alive_at(0.0));
+        assert!(crash.alive_at(99.9));
+        assert!(!crash.alive_at(100.0));
+        assert!(!crash.alive_at(f64::INFINITY));
+
+        let blip = DeviceShape::DownBetween {
+            down_ms: 50.0,
+            up_ms: 80.0,
+        };
+        assert!(blip.alive_at(49.0));
+        assert!(!blip.alive_at(50.0));
+        assert!(!blip.alive_at(79.0));
+        assert!(blip.alive_at(80.0));
+        assert!(blip.alive_at(1e9));
+
+        let flap = DeviceShape::Flapping {
+            period_ms: 100.0,
+            up_duty: 0.7,
+        };
+        assert!(flap.alive_at(10.0));
+        assert!(flap.alive_at(69.0));
+        assert!(!flap.alive_at(71.0));
+        assert!(flap.alive_at(110.0));
+    }
+
+    #[test]
+    fn device_churn_downs_links_and_flags_then_restores() {
+        let live = LiveCluster::new(presets::tiny_demo(0));
+        let base_bw = live.bandwidth(0, 1);
+        let dynamics = NetworkDynamics::new().device(
+            1,
+            DeviceShape::DownBetween {
+                down_ms: 100.0,
+                up_ms: 200.0,
+            },
+        );
+        assert!(dynamics.has_device_churn());
+        assert_eq!(dynamics.device_alive_at(1, 150.0), Some(false));
+        assert_eq!(dynamics.device_alive_at(2, 150.0), None);
+        let liveness = crate::cluster::DeviceLiveness::new(3);
+        let touching = RoutedLink {
+            from: 0,
+            to: 1,
+            link: crate::netsim::LiveLink::new(crate::netsim::LinkSpec::new(base_bw, 0.5)),
+        };
+        let elsewhere = RoutedLink {
+            from: 0,
+            to: 2,
+            link: crate::netsim::LiveLink::new(crate::netsim::LinkSpec::new(300.0, 0.5)),
+        };
+        let links = [touching, elsewhere];
+        dynamics.apply_full(&live, &links, Some(&liveness), 150.0);
+        assert!(!liveness.is_alive(1));
+        assert_eq!(links[0].link.get().bandwidth_mbps, 0.0);
+        assert_eq!(links[1].link.get().bandwidth_mbps, 300.0);
+        // the ground-truth cluster keeps a routable topology
+        assert!(live.bandwidth(0, 1) > 0.0);
+        // rejoin restores the flag and the link from the ground truth
+        dynamics.apply_full(&live, &links, Some(&liveness), 250.0);
+        assert!(liveness.is_alive(1));
+        assert_eq!(links[0].link.get().bandwidth_mbps, base_bw);
+    }
+
+    #[test]
+    fn shared_link_stays_down_while_either_endpoint_dead() {
+        // two schedules sharing a link: the rejoined device must not
+        // re-open the wire to the still-dead one, whatever the schedule
+        // order
+        let live = LiveCluster::new(presets::tiny_demo(0));
+        let dynamics = NetworkDynamics::new()
+            .device(1, DeviceShape::CrashAt(100.0))
+            .device(
+                2,
+                DeviceShape::DownBetween {
+                    down_ms: 0.0,
+                    up_ms: 50.0,
+                },
+            );
+        let liveness = crate::cluster::DeviceLiveness::new(3);
+        let links = [RoutedLink {
+            from: 1,
+            to: 2,
+            link: crate::netsim::LiveLink::new(crate::netsim::LinkSpec::new(300.0, 0.5)),
+        }];
+        // t=150: device 2 rejoined, device 1 crashed for good
+        dynamics.apply_full(&live, &links, Some(&liveness), 150.0);
+        assert!(!liveness.is_alive(1));
+        assert!(liveness.is_alive(2));
+        assert_eq!(links[0].link.get().bandwidth_mbps, 0.0);
     }
 
     #[test]

@@ -17,6 +17,31 @@
 //! byte-identically, so an adaptive run emits exactly the token stream a
 //! static run would — just faster when the network turns hostile
 //! (asserted end-to-end in `tests/adaptive_e2e.rs`).
+//!
+//! ## Failover (device loss)
+//!
+//! Migration assumes the current pipeline can still be drained; a **dead
+//! stage host** cannot.  With a finite
+//! [`AdaptiveConfig::heartbeat_timeout_ms`] the engine opts into the
+//! driver's stall polling ([`crate::coordinator::driver::DriveHooks::on_stall`]):
+//!
+//! 1. **detect** — once no token has arrived for the heartbeat timeout,
+//!    the [`crate::adaptive::monitor::LivenessDetector`] blames the most
+//!    upstream silent plan device (pure observation, no ground truth);
+//! 2. **replan** — [`Replanner::solve_over`] re-runs the DP over the
+//!    surviving pool on the observed state (no keep-vs-migrate
+//!    hysteresis: keeping a plan with a dead host is infeasible);
+//! 3. **rewire** — the old pipeline is *abandoned*, not joined (its
+//!    threads exit once their trapped frames flush), and a fresh one is
+//!    wired over the survivors;
+//! 4. **recover KV** — groups restore from the last periodic
+//!    [`StageMsg::Export`] checkpoint when one exists
+//!    ([`AdaptiveConfig::checkpoint_every`]), else re-prefill, and every
+//!    folded-but-uncheckpointed iteration is replayed from the token
+//!    history (each replayed frame is verified against that history).
+//!
+//! Decode is deterministic, so the recovered stream is byte-identical to
+//! an uninterrupted run — asserted end-to-end in `tests/device_churn.rs`.
 
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
@@ -25,11 +50,13 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::dynamics::{DynamicsDriver, NetworkDynamics};
-use super::monitor::Monitor;
+use super::monitor::{LivenessDetector, Monitor};
 use super::replan::{Decision, MigrationDiff, Replanner, TriggerPolicy};
-use crate::cluster::{Cluster, LiveCluster};
+use crate::cluster::{Cluster, DeviceLiveness, LiveCluster};
 use crate::coordinator::api::{GenResult, GroupRequest};
-use crate::coordinator::driver::{drive_groups, DriveHooks, DriveView};
+use crate::coordinator::driver::{
+    drive_groups, send_decode, send_prefill, DriveHooks, DriveView, StallView,
+};
 use crate::coordinator::engine::{wire, EngineConfig, ObsSinks, Wired};
 use crate::coordinator::kvcache::{GroupCache, KvPool};
 use crate::coordinator::stage::{stage_decoders, KvEntry, StageExport, StageMsg};
@@ -44,6 +71,10 @@ use crate::runtime::{ExecServiceHandle, WeightStore};
 /// Hard cap on the real time one migration pause may sleep (safety net
 /// against a scenario that schedules a migration over a dead link).
 const MAX_MIGRATION_SLEEP_REAL_MS: f64 = 30_000.0;
+
+/// How long (real) to wait for each replayed token frame during failover
+/// recovery before declaring the rebuilt pipeline broken too.
+const REPLAY_REPLY_TIMEOUT: Duration = Duration::from_secs(20);
 
 /// Knobs of the adaptive engine.
 #[derive(Debug, Clone)]
@@ -63,6 +94,21 @@ pub struct AdaptiveConfig {
     pub dynamics: Option<NetworkDynamics>,
     /// Dynamics replay granularity, real ms.
     pub dynamics_tick_real_ms: f64,
+    /// Simulated ms of total pipeline silence before the engine declares
+    /// a stage host dead and fails over.  `INFINITY` (the default)
+    /// disables stall polling entirely — the driver blocks on the token
+    /// channel exactly as before.  Must comfortably exceed the slowest
+    /// expected iteration: slow-but-alive never times out because every
+    /// delivered token resets the stall clock.
+    pub heartbeat_timeout_ms: f64,
+    /// Real-ms tick the driver polls the token channel with while stall
+    /// detection is enabled.
+    pub stall_poll_real_ms: f64,
+    /// Take a periodic KV checkpoint ([`StageMsg::Export`] snapshot of
+    /// every stage) every this many received token messages; 0 disables
+    /// checkpointing, in which case failover recovers by re-prefilling
+    /// from token history instead of checkpoint replay.
+    pub checkpoint_every: usize,
 }
 
 impl Default for AdaptiveConfig {
@@ -76,6 +122,9 @@ impl Default for AdaptiveConfig {
             max_migrations: 4,
             dynamics: None,
             dynamics_tick_real_ms: 5.0,
+            heartbeat_timeout_ms: f64::INFINITY,
+            stall_poll_real_ms: 25.0,
+            checkpoint_every: 0,
         }
     }
 }
@@ -93,6 +142,30 @@ pub struct MigrationRecord {
     pub pause_ms: f64,
 }
 
+/// One completed failover (device loss → replan → KV recovery).
+#[derive(Debug, Clone)]
+pub struct FailoverRecord {
+    /// Token messages received when the loss was declared.
+    pub at_iter: u64,
+    /// The device the liveness detector blamed.
+    pub dead_device: usize,
+    pub from_plan: String,
+    pub to_plan: String,
+    /// Simulated ms the pipeline had been silent at the verdict.
+    pub stalled_ms: f64,
+    /// Whether KV was restored from a periodic checkpoint (`false` =
+    /// re-prefilled from token history).
+    pub via_checkpoint: bool,
+    /// Groups restored from the checkpoint snapshot.
+    pub restored_groups: usize,
+    /// Decode iterations replayed (and verified) from token history.
+    pub replayed_iters: usize,
+    /// KV bytes shipped from the checkpoint store to the new stages.
+    pub restore_kv_bytes: u64,
+    /// Simulated stall charged for shipping them.
+    pub pause_ms: f64,
+}
+
 /// Aggregate statistics of one adaptive run.
 #[derive(Debug)]
 pub struct AdaptiveStats {
@@ -107,6 +180,10 @@ pub struct AdaptiveStats {
     /// Control-loop rounds that ran.
     pub replan_evaluations: u64,
     pub migrations: Vec<MigrationRecord>,
+    /// Device-loss recoveries that ran.
+    pub failovers: Vec<FailoverRecord>,
+    /// KV checkpoints successfully collected.
+    pub checkpoints: u64,
     pub final_plan: String,
 }
 
@@ -119,6 +196,9 @@ pub struct AdaptiveEngine<'a> {
     base_traces: ProfiledTraces,
     plan: Plan,
     cfg: AdaptiveConfig,
+    /// Shared ground-truth device flags (allocated per run when the
+    /// dynamics schedule device churn); every wired pipeline gets a clone.
+    liveness: Option<DeviceLiveness>,
 }
 
 fn sim_now_ms(t0: Instant, time_scale: f64) -> f64 {
@@ -130,51 +210,177 @@ fn sim_now_ms(t0: Instant, time_scale: f64) -> f64 {
     }
 }
 
+/// One collected KV checkpoint: every stage's resident caches flattened
+/// (keyed by global decoder layer), plus each unfinished group's
+/// dispatched-iteration watermark at snapshot time.  Conceptually the
+/// snapshot lives on the source node — restoring it onto a new plan
+/// charges `source → device` freight.
+struct Checkpoint {
+    entries: Vec<KvEntry>,
+    /// Per group: highest iteration dispatched before the export probe
+    /// (every KV write up to it is inside the snapshot).
+    sent: HashMap<u64, usize>,
+}
+
+/// An [`StageMsg::Export`] probe in flight: replies are collected
+/// *asynchronously* across subsequent `after_token` calls, so checkpoint
+/// collection never blocks the driver's fold loop (the watermarks were
+/// captured when the probe entered the send stream, which is all the
+/// snapshot's consistency depends on).
+struct PendingCheckpoint {
+    reply_rx: mpsc::Receiver<StageExport>,
+    sent: HashMap<u64, usize>,
+    /// Stage replies still outstanding.
+    expect: usize,
+    entries: Vec<KvEntry>,
+}
+
+/// Detection context handed from the hooks into
+/// [`AdaptiveEngine::failover`].
+struct FailoverCtx {
+    at_iter: u64,
+    dead_device: usize,
+    stalled_ms: f64,
+}
+
 /// The adaptive engine's interposition on the shared generation driver:
 /// `after_token` runs the replan control loop (and requests a drain
-/// barrier when a decisively better plan exists), `at_barrier` executes
-/// the migration on the quiesced pipeline.
+/// barrier when a decisively better plan exists) plus the periodic KV
+/// checkpoint, `at_barrier` executes the migration on the quiesced
+/// pipeline, and `on_stall` executes device-loss failover.
 struct AdaptiveHooks<'h, 'a> {
     eng: &'h mut AdaptiveEngine<'a>,
     monitor: &'h mut Monitor,
     replanner: &'h mut Replanner,
+    detector: LivenessDetector,
     sinks: &'h ObsSinks,
     shared_links: &'h Arc<Mutex<Vec<RoutedLink>>>,
     t0: Instant,
     scale: f64,
     check_every: usize,
     max_migrations: usize,
+    checkpoint_every: usize,
+    stall_poll_real_ms: f64,
     pending: Option<(Plan, MigrationDiff, f64)>,
+    checkpoint: Option<Checkpoint>,
+    pending_ck: Option<PendingCheckpoint>,
+    checkpoints_taken: u64,
     migrations: Vec<MigrationRecord>,
+    failovers: Vec<FailoverRecord>,
     received: u64,
+}
+
+impl AdaptiveHooks<'_, '_> {
+    fn replan_due(&self, received: u64) -> bool {
+        self.migrations.len() < self.max_migrations
+            && self.check_every > 0
+            && received % self.check_every as u64 == 0
+    }
+
+    fn checkpoint_due(&self, received: u64) -> bool {
+        self.checkpoint_every > 0 && received % self.checkpoint_every as u64 == 0
+    }
+
+    /// Launch an [`StageMsg::Export`] probe whose replies become the next
+    /// failover checkpoint.  Non-blocking: replies are drained by
+    /// [`AdaptiveHooks::poll_checkpoint`] on later tokens, so the fold
+    /// loop never waits on the pipeline.  A probe still outstanding when
+    /// the next one is due (or when a failover scraps the pipeline) is
+    /// abandoned and the previous committed checkpoint kept.
+    ///
+    /// Collection is deliberately *not* charged as a generation stall:
+    /// the modeled system snapshots copy-on-write and streams the bytes
+    /// to the source off the critical path (the probe itself rides the
+    /// links as a control frame).  Restoring at failover, by contrast, IS
+    /// on the critical path and is charged in
+    /// [`AdaptiveEngine::failover`].
+    fn start_checkpoint(&mut self, wired: &Wired, view: &DriveView) -> Result<()> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let msg = StageMsg::Export { reply: reply_tx };
+        let bytes = msg.wire_bytes();
+        wired.to_first.send(msg, bytes)?;
+        self.pending_ck = Some(PendingCheckpoint {
+            reply_rx,
+            // the watermark is the probe's position in the send stream
+            sent: view.groups.iter().map(|g| (g.group_id, g.sent)).collect(),
+            expect: self.eng.plan.n_stages(),
+            entries: Vec::new(),
+        });
+        Ok(())
+    }
+
+    /// Drain any replies of the in-flight probe; commit the checkpoint
+    /// once every stage has answered.
+    fn poll_checkpoint(&mut self) {
+        let complete = {
+            let Some(p) = self.pending_ck.as_mut() else {
+                return;
+            };
+            while p.expect > 0 {
+                match p.reply_rx.try_recv() {
+                    Ok(ex) => {
+                        p.entries.extend(ex.entries);
+                        p.expect -= 1;
+                    }
+                    Err(_) => break,
+                }
+            }
+            p.expect == 0
+        };
+        if complete {
+            let done = self.pending_ck.take().expect("completeness checked above");
+            self.checkpoint = Some(Checkpoint {
+                entries: done.entries,
+                sent: done.sent,
+            });
+            self.checkpoints_taken += 1;
+        }
+    }
 }
 
 impl DriveHooks for AdaptiveHooks<'_, '_> {
     fn wants_view(&mut self, received: u64) -> bool {
         self.received = received;
-        // the cheap gate: a replan is only considered every
-        // `check_every` tokens, never while one is already pending
+        // the cheap gate: replans and checkpoints each have their own
+        // token cadence (plus every token while a probe's replies are
+        // pending), and none of it runs while a migration is pending
         self.pending.is_none()
-            && self.migrations.len() < self.max_migrations
-            && self.check_every > 0
-            && received % self.check_every as u64 == 0
+            && (self.replan_due(received)
+                || self.checkpoint_due(received)
+                || self.pending_ck.is_some())
     }
 
-    fn after_token(&mut self, view: &DriveView) -> Result<bool> {
-        // control loop: consider replanning once everything prefilled
+    fn after_token(&mut self, wired: &Wired, view: &DriveView) -> Result<bool> {
+        self.poll_checkpoint();
+        // both control loops wait until everything prefilled (a snapshot
+        // of a half-prefilled group would be unreplayable)
         if !view.all_prefilled {
             return Ok(false);
         }
-        self.monitor.drain();
+        if self.checkpoint_due(view.received) {
+            // a probe still unanswered after a whole cadence is stale
+            // (the pipeline likely died under it) — replace it
+            self.pending_ck = None;
+            self.start_checkpoint(wired, view)?;
+        }
+        if !self.replan_due(view.received) {
+            return Ok(false);
+        }
+        self.monitor.drain_at(sim_now_ms(self.t0, self.scale));
         let obs_cluster = self.monitor.observed_cluster();
         let obs_traces = self
             .monitor
             .observed_traces(&self.eng.base_traces, &self.eng.plan);
-        let decision = self.replanner.evaluate(
+        // devices declared dead stay out of the candidate pool
+        let pool: Vec<usize> = (0..obs_cluster.len())
+            .filter(|d| !self.detector.is_dead(*d))
+            .collect();
+        let decision = self.replanner.evaluate_pool(
             &self.eng.plan,
             &obs_traces,
             &obs_cluster,
             sim_now_ms(self.t0, self.scale),
+            &pool,
         );
         if let Decision::Migrate {
             plan,
@@ -212,6 +418,99 @@ impl DriveHooks for AdaptiveHooks<'_, '_> {
         }
         Ok(())
     }
+
+    fn stall_poll_real_ms(&self) -> Option<f64> {
+        self.eng
+            .cfg
+            .heartbeat_timeout_ms
+            .is_finite()
+            .then_some(self.stall_poll_real_ms)
+    }
+
+    fn on_stall(&mut self, wired: &mut Wired, view: &StallView<'_>) -> Result<bool> {
+        let now_ms = sim_now_ms(self.t0, self.scale);
+        let stalled_sim_ms = if self.scale > 0.0 {
+            view.stalled_real_ms / self.scale
+        } else {
+            view.stalled_real_ms
+        };
+        self.monitor.drain_at(now_ms);
+        let plan_devices = self.eng.plan.devices();
+        let Some(dead) = self
+            .detector
+            .suspect(&plan_devices, self.monitor, stalled_sim_ms)
+        else {
+            return Ok(false);
+        };
+        let source = self.eng.live.with(|c| c.source);
+        anyhow::ensure!(
+            dead != source,
+            "source device {source} declared dead after {stalled_sim_ms:.0} ms of silence: \
+             the source holds the prompts and the embedding (privacy pin) — nothing to fail \
+             over to"
+        );
+        self.detector.mark_dead(dead);
+        // a pending migration's target may include the corpse, and an
+        // in-flight checkpoint probe died with the pipeline — drop both
+        // (the last *committed* checkpoint stays valid for recovery)
+        self.pending = None;
+        self.pending_ck = None;
+
+        // replan over the survivors on the observed state; if the pool
+        // has become unplannable, retract every verdict but the newest
+        // (an earlier blame may have been wrong) and retry once
+        let obs_cluster = self.monitor.observed_cluster();
+        let obs_traces = self
+            .monitor
+            .observed_traces(&self.eng.base_traces, &self.eng.plan);
+        let survivors = |det: &LivenessDetector| -> Vec<usize> {
+            (0..obs_cluster.len()).filter(|d| !det.is_dead(*d)).collect()
+        };
+        let new_plan = match self
+            .replanner
+            .solve_over(&obs_traces, &obs_cluster, &survivors(&self.detector))
+        {
+            Ok(p) => p,
+            Err(first_err) => {
+                self.detector.demote_to(1);
+                self.replanner
+                    .solve_over(&obs_traces, &obs_cluster, &survivors(&self.detector))
+                    .map_err(|e| {
+                        anyhow!(
+                            "no feasible plan on surviving devices after losing d{dead}: \
+                             {first_err}; retry excluding only d{dead}: {e}"
+                        )
+                    })?
+            }
+        };
+        let batches: Vec<usize> = view.groups.iter().map(|g| g.req.batch).collect();
+        anyhow::ensure!(
+            self.eng.preload_fits(&new_plan, &batches),
+            "failover plan {} cannot hold the in-flight KV within the per-stage budget",
+            new_plan.describe()
+        );
+
+        let record = self.eng.failover(
+            wired,
+            self.sinks,
+            self.shared_links,
+            &new_plan,
+            view,
+            self.checkpoint.as_ref(),
+            FailoverCtx {
+                at_iter: self.received,
+                dead_device: dead,
+                stalled_ms: stalled_sim_ms,
+            },
+        )?;
+        let baseline = self
+            .replanner
+            .predict_ms(&new_plan, &obs_traces, &obs_cluster);
+        self.replanner.adopt(baseline, now_ms);
+        self.failovers.push(record);
+        self.eng.plan = new_plan;
+        Ok(true)
+    }
 }
 
 impl<'a> AdaptiveEngine<'a> {
@@ -235,6 +534,7 @@ impl<'a> AdaptiveEngine<'a> {
             base_traces,
             plan,
             cfg,
+            liveness: None,
         }
     }
 
@@ -288,6 +588,14 @@ impl<'a> AdaptiveEngine<'a> {
         let driver_cfg =
             crate::coordinator::engine::driver_cfg(self.manifest, &self.plan, &self.cfg.engine);
         let believed = self.live.snapshot();
+        // ground-truth device flags, shared by the dynamics driver and
+        // every pipeline wired during this run
+        self.liveness = self
+            .cfg
+            .dynamics
+            .as_ref()
+            .filter(|d| d.has_device_churn())
+            .map(|_| DeviceLiveness::new(believed.len()));
         let (mut monitor, mon_handle) = Monitor::new(believed.clone(), self.cfg.monitor_alpha);
         let sinks = mon_handle.sinks();
         let mut wired = wire(
@@ -298,14 +606,16 @@ impl<'a> AdaptiveEngine<'a> {
             &believed,
             &self.cfg.engine,
             Some(&sinks),
+            self.liveness.as_ref(),
             Vec::new(),
         )?;
         let shared_links: Arc<Mutex<Vec<RoutedLink>>> = Arc::new(Mutex::new(wired.links.clone()));
         let driver = self.cfg.dynamics.clone().map(|d| {
-            DynamicsDriver::spawn(
+            DynamicsDriver::spawn_full(
                 d,
                 self.live.clone(),
                 shared_links.clone(),
+                self.liveness.clone(),
                 self.cfg.engine.time_scale,
                 self.cfg.dynamics_tick_real_ms,
             )
@@ -327,18 +637,28 @@ impl<'a> AdaptiveEngine<'a> {
         let scale = self.cfg.engine.time_scale;
         let check_every = self.cfg.check_every;
         let max_migrations = self.cfg.max_migrations;
+        let checkpoint_every = self.cfg.checkpoint_every;
+        let stall_poll_real_ms = self.cfg.stall_poll_real_ms;
+        let detector = LivenessDetector::new(self.cfg.heartbeat_timeout_ms);
         let mut hooks = AdaptiveHooks {
             eng: self,
             monitor: &mut monitor,
             replanner: &mut replanner,
+            detector,
             sinks: &sinks,
             shared_links: &shared_links,
             t0,
             scale,
             check_every,
             max_migrations,
+            checkpoint_every,
+            stall_poll_real_ms,
             pending: None,
+            checkpoint: None,
+            pending_ck: None,
+            checkpoints_taken: 0,
             migrations: Vec::new(),
+            failovers: Vec::new(),
             received: 0,
         };
         // The shared drive loop owns admission, stats and the drain
@@ -352,6 +672,8 @@ impl<'a> AdaptiveEngine<'a> {
             &mut hooks,
         );
         let migrations = std::mem::take(&mut hooks.migrations);
+        let failovers = std::mem::take(&mut hooks.failovers);
+        let checkpoints = hooks.checkpoints_taken;
         drop(hooks);
         let (results, dstats) = drive?;
 
@@ -377,6 +699,8 @@ impl<'a> AdaptiveEngine<'a> {
             padding_efficiency: dstats.padding_efficiency,
             replan_evaluations: replanner.evaluations(),
             migrations,
+            failovers,
+            checkpoints,
             final_plan: self.plan.describe(),
         };
         Ok((results, stats))
@@ -385,6 +709,12 @@ impl<'a> AdaptiveEngine<'a> {
     /// Route a flat KV snapshot onto `plan`'s stages: per-stage preloads
     /// in local layer order, plus the per-link freight that must cross
     /// the network (entries whose device changes).
+    ///
+    /// Row-liveness masks ride along: a half-full continuous-batching run
+    /// is rebuilt with its slot occupancy intact, and its preload charges
+    /// `live rows × row bytes` against the target pool — the same
+    /// accounting [`KvPool::insert_row`] uses — while fully-live group
+    /// caches keep charging the whole padded tensor.
     #[allow(clippy::type_complexity)]
     fn route_exports(
         &self,
@@ -423,9 +753,17 @@ impl<'a> AdaptiveEngine<'a> {
                     "group {gid}: stage {si} expected {n_local} migrated layers, got {}",
                     entries.len()
                 );
-                let batch = entries.first().map(|e| e.batch).unwrap_or(1);
-                let bytes =
-                    KvPool::group_bytes(n_local, batch, c.n_kv_heads, c.max_seq, c.head_dim());
+                let first = entries.first().expect("n_local > 0 if entries exist");
+                let batch = first.batch;
+                let live = first.live.clone();
+                anyhow::ensure!(
+                    live.len() == batch,
+                    "group {gid}: liveness mask has {} flags for batch {batch}",
+                    live.len()
+                );
+                let full: u64 = entries.iter().map(|e| e.k.bytes() + e.v.bytes()).sum();
+                let row_bytes = if batch > 0 { full / batch as u64 } else { 0 };
+                let bytes = live.iter().filter(|&&l| l).count() as u64 * row_bytes;
                 let layers = entries.into_iter().map(|e| (e.k, e.v)).collect();
                 v.push((
                     gid,
@@ -433,13 +771,23 @@ impl<'a> AdaptiveEngine<'a> {
                         layers,
                         batch,
                         bytes,
-                        live: vec![true; batch],
+                        live,
                     },
                 ));
             }
             preloads.push(v);
         }
         Ok((preloads, link_bytes))
+    }
+
+    /// Sleep out a simulated stall at the engine's time scale (capped by
+    /// [`MAX_MIGRATION_SLEEP_REAL_MS`]).
+    fn charge_pause(&self, pause_sim_ms: f64) {
+        let scale = self.cfg.engine.time_scale;
+        if pause_sim_ms > 0.0 && pause_sim_ms.is_finite() && scale > 0.0 {
+            let real_ms = (pause_sim_ms * scale).min(MAX_MIGRATION_SLEEP_REAL_MS);
+            std::thread::sleep(Duration::from_secs_f64(real_ms / 1e3));
+        }
     }
 
     /// Execute one migration: export KV, tear down, charge transfer time,
@@ -503,11 +851,7 @@ impl<'a> AdaptiveEngine<'a> {
             .iter()
             .map(|(&(f, t), &b)| cluster_now.comm_ms(f, t, b))
             .fold(0.0, f64::max);
-        let scale = self.cfg.engine.time_scale;
-        if pause_sim_ms > 0.0 && scale > 0.0 {
-            let real_ms = (pause_sim_ms * scale).min(MAX_MIGRATION_SLEEP_REAL_MS);
-            std::thread::sleep(Duration::from_secs_f64(real_ms / 1e3));
-        }
+        self.charge_pause(pause_sim_ms);
 
         // 5. rewire on the current ground-truth network; if the new plan
         //    cannot be wired, restore the old one with the same caches.
@@ -519,6 +863,7 @@ impl<'a> AdaptiveEngine<'a> {
             &cluster_now,
             &self.cfg.engine,
             Some(sinks),
+            self.liveness.as_ref(),
             preloads,
         ) {
             Ok(w) => {
@@ -542,6 +887,7 @@ impl<'a> AdaptiveEngine<'a> {
                     &cluster_now,
                     &self.cfg.engine,
                     Some(sinks),
+                    self.liveness.as_ref(),
                     old_preloads,
                 )
                 .context("re-wiring the previous plan after a failed migration")?;
@@ -549,5 +895,263 @@ impl<'a> AdaptiveEngine<'a> {
                 Ok(None)
             }
         }
+    }
+
+    /// Execute one failover onto `new_plan`: abandon the dead pipeline,
+    /// rewire over the survivors, restore KV from `checkpoint` for every
+    /// group the snapshot covers, and replay the folded-but-unrestored
+    /// iterations from token history (verifying each replayed frame
+    /// against what was already served).  Groups without a checkpoint are
+    /// re-prefilled here; groups without a first token are left to the
+    /// driver, which re-prefills them live after this returns.
+    ///
+    /// Unlike [`AdaptiveEngine::migrate`] this never joins the old stage
+    /// threads — a dead host cannot acknowledge a shutdown.  The old
+    /// pipeline is dropped (threads detach), its links forced open so
+    /// trapped frames flush and every detached thread exits; any late
+    /// token it still produces lands in the dropped channel.
+    #[allow(clippy::too_many_arguments)]
+    fn failover(
+        &self,
+        wired: &mut Wired,
+        sinks: &ObsSinks,
+        shared_links: &Arc<Mutex<Vec<RoutedLink>>>,
+        new_plan: &Plan,
+        view: &StallView<'_>,
+        checkpoint: Option<&Checkpoint>,
+        ctx: FailoverCtx,
+    ) -> Result<FailoverRecord> {
+        let cluster_now = self.live.snapshot();
+        let source = cluster_now.source;
+
+        // 1. pick each group's recovery path: checkpoint restore needs a
+        //    folded first token (else a re-prefill would collide with the
+        //    preloaded cache) and snapshot coverage
+        let mut restore_ids: Vec<u64> = Vec::new();
+        if let Some(ck) = checkpoint {
+            for g in &view.groups {
+                let folded = g.rows.first().map(|r| r.len()).unwrap_or(0);
+                if folded >= 1 && ck.sent.contains_key(&g.req.group_id) {
+                    restore_ids.push(g.req.group_id);
+                }
+            }
+        }
+        let (preloads, link_bytes, restore_kv_bytes) = if restore_ids.is_empty() {
+            (Vec::new(), HashMap::new(), 0u64)
+        } else {
+            let ck = checkpoint.expect("restore_ids implies a checkpoint");
+            // the snapshot lives on the source node: restoring charges
+            // source → stage-device freight
+            let flat: Vec<(usize, KvEntry)> = ck
+                .entries
+                .iter()
+                .filter(|e| restore_ids.contains(&e.group))
+                .map(|e| (source, e.clone()))
+                .collect();
+            let bytes: u64 = flat.iter().map(|(_, e)| e.k.bytes() + e.v.bytes()).sum();
+            let (p, l) = self.route_exports(&flat, new_plan)?;
+            (p, l, bytes)
+        };
+
+        // 2. wire the replacement, then abandon the dead pipeline: swap
+        //    the shared link set first (so the dynamics driver stops
+        //    re-shaping the old links), then force the old links open so
+        //    trapped frames flush and the detached threads exit
+        let fresh = wire(
+            self.manifest,
+            self.weights,
+            self.exec.clone(),
+            new_plan,
+            &cluster_now,
+            &self.cfg.engine,
+            Some(sinks),
+            self.liveness.as_ref(),
+            preloads,
+        )
+        .with_context(|| format!("wiring failover plan {}", new_plan.describe()))?;
+        let old = std::mem::replace(wired, fresh);
+        *shared_links.lock().expect("links lock poisoned") = wired.links.clone();
+        // Flushing can emit late TransferObs with stall-sized timings,
+        // but only for links that were actually *down* — i.e. links
+        // touching the dead device, whose estimates the detector has
+        // already excluded from planning.  Healthy↔healthy links never
+        // trap frames past normal pacing, so survivor estimates stay
+        // clean.
+        for rl in &old.links {
+            rl.link.set_bandwidth(f64::INFINITY);
+        }
+        drop(old);
+
+        // 3. charge the restore freight (per-link shipments overlap)
+        let pause_ms = link_bytes
+            .iter()
+            .map(|(&(f, t), &b)| cluster_now.comm_ms(f, t, b))
+            .fold(0.0, f64::max);
+        self.charge_pause(pause_ms);
+
+        // 4. replay from token history whatever the restore does not
+        //    cover, verifying every replayed token against served history
+        let mut expected: HashMap<(u64, usize), Vec<i32>> = HashMap::new();
+        for g in &view.groups {
+            let folded = g.rows.first().map(|r| r.len()).unwrap_or(0);
+            if folded == 0 {
+                continue; // the driver re-prefills this one live
+            }
+            let gid = g.req.group_id;
+            let from_iter = if restore_ids.contains(&gid) {
+                // iterations dispatched before the snapshot are inside
+                // it (idempotent rewrites make over-coverage harmless)
+                let sent = checkpoint.expect("restored from a checkpoint").sent[&gid];
+                sent + 1
+            } else {
+                send_prefill(wired, g.req)?;
+                expected.insert((gid, 0), g.rows.iter().map(|r| r[0]).collect());
+                1
+            };
+            for j in from_iter..folded {
+                let toks: Vec<i32> = g.rows.iter().map(|r| r[j - 1]).collect();
+                send_decode(wired, g.req, j, toks)?;
+                expected.insert((gid, j), g.rows.iter().map(|r| r[j]).collect());
+            }
+        }
+        let replayed_iters = expected.len();
+        while !expected.is_empty() {
+            let tok = wired.token_rx.recv_timeout(REPLAY_REPLY_TIMEOUT).map_err(|_| {
+                anyhow!(
+                    "failover replay onto {} stalled (another device down?)",
+                    new_plan.describe()
+                )
+            })?;
+            let want = expected.remove(&(tok.group, tok.iter)).with_context(|| {
+                format!(
+                    "unexpected frame (group {}, iter {}) during failover replay",
+                    tok.group, tok.iter
+                )
+            })?;
+            anyhow::ensure!(
+                tok.tokens == want,
+                "failover replay diverged from served history at group {} iter {}",
+                tok.group,
+                tok.iter
+            );
+        }
+
+        Ok(FailoverRecord {
+            at_iter: ctx.at_iter,
+            dead_device: ctx.dead_device,
+            from_plan: self.plan.describe(),
+            to_plan: new_plan.describe(),
+            stalled_ms: ctx.stalled_ms,
+            via_checkpoint: !restore_ids.is_empty(),
+            restored_groups: restore_ids.len(),
+            replayed_iters,
+            restore_kv_bytes,
+            pause_ms,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::planner::Stage;
+    use crate::profiler::{AnalyticProfiler, Workload};
+    use crate::runtime::{ExecService, TensorData};
+
+    fn plan2(n_model_layers: usize) -> Plan {
+        Plan {
+            objective: crate::planner::PlanObjective::Latency,
+            stages: vec![
+                Stage { device: 0, start: 0, end: 3 },
+                Stage { device: 2, start: 3, end: n_model_layers },
+            ],
+            predicted_ms: 0.0,
+        }
+    }
+
+    /// Routing a half-full run's export onto a new plan must preserve the
+    /// row-liveness mask and charge only the live rows — the contract
+    /// failover/migration of continuous batches rests on.
+    #[test]
+    fn route_exports_carries_liveness_mask() {
+        let manifest = Manifest::synthetic_tiny();
+        let weights = WeightStore::synthetic(&manifest, 0);
+        let (_svc, exec) = ExecService::start_sim(&manifest).unwrap();
+        let cluster = presets::tiny_demo(0);
+        let model = crate::model::tiny_from_manifest(&manifest);
+        let traces = AnalyticProfiler::default().profile(
+            &model,
+            &cluster,
+            Workload {
+                prompt_len: 32,
+                gen_len: 8,
+                batch: 1,
+            },
+        );
+        let c = manifest.config.clone();
+        let n_model_layers = c.n_layers + 2;
+        let plan = plan2(n_model_layers);
+        let eng = AdaptiveEngine::new(
+            &manifest,
+            &weights,
+            exec,
+            plan.clone(),
+            cluster,
+            traces,
+            AdaptiveConfig::default(),
+        );
+
+        // a 4-row run with rows 0 and 2 live, exported from device 1
+        let (batch, live) = (4usize, vec![true, false, true, false]);
+        let elems = batch * c.n_kv_heads * c.max_seq * c.head_dim();
+        let dims = vec![
+            batch as i64,
+            c.n_kv_heads as i64,
+            c.max_seq as i64,
+            c.head_dim() as i64,
+        ];
+        let flat: Vec<(usize, KvEntry)> = (0..c.n_layers)
+            .map(|layer| {
+                (
+                    1usize,
+                    KvEntry {
+                        group: 42,
+                        layer,
+                        k: TensorData::f32(vec![1.0; elems], dims.clone()),
+                        v: TensorData::f32(vec![2.0; elems], dims.clone()),
+                        batch,
+                        live: live.clone(),
+                    },
+                )
+            })
+            .collect();
+        let (preloads, link_bytes) = eng.route_exports(&flat, &plan).unwrap();
+        assert_eq!(preloads.len(), 2);
+        for (si, stage_loads) in preloads.iter().enumerate() {
+            assert_eq!(stage_loads.len(), 1, "stage {si}");
+            let (gid, cache) = &stage_loads[0];
+            assert_eq!(*gid, 42);
+            assert_eq!(cache.batch, batch);
+            assert_eq!(cache.live, live, "stage {si} lost the liveness mask");
+            assert_eq!(cache.live_rows(), 2);
+            // charged bytes = live rows × per-row footprint, not the full
+            // padded tensor
+            let full: u64 = cache.layers.iter().map(|(k, v)| k.bytes() + v.bytes()).sum();
+            assert_eq!(cache.bytes, full / 2, "stage {si}");
+            assert_eq!(cache.bytes, cache.live_rows() as u64 * cache.row_bytes());
+            // and the preload passes KvPool admission with the mask intact
+            let mut pool = KvPool::new(u64::MAX);
+            pool.insert(*gid, cache.clone()).unwrap();
+            assert_eq!(pool.used_bytes(), cache.bytes);
+        }
+        // both stages' layers left device 1, so freight rides 1→0 and 1→2
+        assert!(link_bytes.contains_key(&(1, 0)));
+        assert!(link_bytes.contains_key(&(1, 2)));
+
+        // a mask/batch mismatch is rejected, not silently defaulted
+        let mut broken = flat.clone();
+        broken[0].1.live = vec![true];
+        assert!(eng.route_exports(&broken, &plan).is_err());
     }
 }

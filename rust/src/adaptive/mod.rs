@@ -26,21 +26,31 @@
 //!
 //! * [`dynamics`] — time-varying [`crate::netsim::LinkSpec`] schedules
 //!   (step drops, ramps, periodic congestion, seeded random walks, trace
-//!   replay) and the [`dynamics::DynamicsDriver`] that replays them onto a
-//!   [`crate::cluster::LiveCluster`] and the engine's live links.
+//!   replay) **and device churn schedules** (crash, crash-and-rejoin,
+//!   flapping), replayed by the [`dynamics::DynamicsDriver`] onto a
+//!   [`crate::cluster::LiveCluster`], the engine's live links, and the
+//!   shared [`crate::cluster::DeviceLiveness`] flags.
 //! * [`monitor`] — EWMA estimators over the per-hop
 //!   [`crate::netsim::TransferObs`] and per-stage
 //!   [`crate::metrics::ComputeObs`] streams, reconstructing an *observed*
-//!   cluster and traces without ground-truth access.
+//!   cluster and traces without ground-truth access; the same streams
+//!   double as heartbeats for the [`monitor::LivenessDetector`].
 //! * [`replan`] — the trigger policy (estimate drift beyond a hysteresis
 //!   band) plus DP re-solve, emitting a [`replan::MigrationDiff`] that is
-//!   never predicted-worse than keeping the current plan.
+//!   never predicted-worse than keeping the current plan; for device
+//!   loss, [`replan::Replanner::solve_over`] re-solves unconditionally
+//!   over the surviving pool (keeping is infeasible, so the hysteresis
+//!   comparison does not apply).
 //! * [`engine`] — [`engine::AdaptiveEngine`]: drives generation, drains
 //!   in-flight groups at a barrier, hands KV caches across shaped links
 //!   (charging real transfer time), rewires stage actors and resumes.
+//!   On a detected device loss it **fails over**: abandons the dead
+//!   pipeline, rewires the survivors, and recovers the lost KV from a
+//!   periodic [`crate::coordinator::stage::StageMsg::Export`] checkpoint
+//!   or by re-prefilling from token history.
 //! * [`scenario`] — canned end-to-end experiments (mid-generation
-//!   bandwidth drop, adaptive vs. static) shared by tests, the
-//!   `adaptive_recovery` example and `edgeshard repro adaptive`.
+//!   bandwidth drop, mid-generation device crash) shared by tests, the
+//!   `adaptive_recovery` example and `edgeshard repro adaptive|churn`.
 
 pub mod dynamics;
 pub mod engine;
@@ -48,7 +58,9 @@ pub mod monitor;
 pub mod replan;
 pub mod scenario;
 
-pub use dynamics::{DynamicsDriver, LinkSchedule, NetworkDynamics, ScheduleShape};
-pub use engine::{AdaptiveConfig, AdaptiveEngine, AdaptiveStats, MigrationRecord};
-pub use monitor::{Ewma, Monitor, MonitorHandle};
+pub use dynamics::{
+    DeviceSchedule, DeviceShape, DynamicsDriver, LinkSchedule, NetworkDynamics, ScheduleShape,
+};
+pub use engine::{AdaptiveConfig, AdaptiveEngine, AdaptiveStats, FailoverRecord, MigrationRecord};
+pub use monitor::{Ewma, LivenessDetector, Monitor, MonitorHandle};
 pub use replan::{Decision, MigrationDiff, Replanner, StageMove, TriggerPolicy};

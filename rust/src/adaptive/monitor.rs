@@ -13,6 +13,14 @@
 //! per-device compute speed, and can materialize an **observed**
 //! [`Cluster`] / [`ProfiledTraces`] pair for the replanner — the same
 //! schema the offline profiler produces, now estimated live.
+//!
+//! The same observation streams double as **heartbeats**: every compute
+//! timing (and every delivered frame's sender) proves a device was alive
+//! moments ago.  [`Monitor::drain_at`] stamps each drained observation
+//! with the caller's simulated clock, and the [`LivenessDetector`] turns
+//! a stalled pipeline plus a per-device silence ranking into a failover
+//! verdict — still without ever reading the ground-truth
+//! [`crate::cluster::DeviceLiveness`].
 
 use std::collections::HashMap;
 use std::sync::mpsc::{self, Receiver, Sender};
@@ -103,6 +111,15 @@ pub struct Monitor {
     link_inv: HashMap<(usize, usize), Ewma>,
     /// Keyed by (device, is_decode).
     stage_ms: HashMap<(usize, bool), Ewma>,
+    /// Last evidence of life per device (a compute timing, or sending a
+    /// frame that got delivered): `(sequence, simulated ms)`.  The
+    /// sequence increments per drained observation, so it preserves the
+    /// *causal* pipeline order even when a whole backlog drains in one
+    /// call and shares a timestamp — which is exactly the situation right
+    /// after a crash.  Only updated by [`Monitor::drain_at`]; plain
+    /// [`Monitor::drain`] calls carry no clock.
+    last_seen: HashMap<usize, (u64, f64)>,
+    obs_seq: u64,
 }
 
 impl Monitor {
@@ -118,6 +135,8 @@ impl Monitor {
                 compute_rx,
                 link_inv: HashMap::new(),
                 stage_ms: HashMap::new(),
+                last_seen: HashMap::new(),
+                obs_seq: 0,
             },
             MonitorHandle {
                 transfer: transfer_tx,
@@ -128,16 +147,52 @@ impl Monitor {
 
     /// Ingest every pending observation; returns how many arrived.
     pub fn drain(&mut self) -> usize {
+        self.drain_inner(None)
+    }
+
+    /// [`Monitor::drain`] that also stamps each drained observation's
+    /// device as heard-from at `now_ms` (simulated): the sending device of
+    /// a delivered frame and the executing device of a compute timing.
+    /// Observations queued since the previous drain get this drain's
+    /// stamp — a granularity the [`LivenessDetector`] timeout must (and
+    /// does, via the stall precondition) tolerate.
+    pub fn drain_at(&mut self, now_ms: f64) -> usize {
+        self.drain_inner(Some(now_ms))
+    }
+
+    fn drain_inner(&mut self, now_ms: Option<f64>) -> usize {
         let mut n = 0;
         while let Ok(o) = self.transfer_rx.try_recv() {
+            if let Some(t) = now_ms {
+                self.obs_seq += 1;
+                self.last_seen.insert(o.from, (self.obs_seq, t));
+            }
             self.ingest_transfer(o);
             n += 1;
         }
         while let Ok(o) = self.compute_rx.try_recv() {
+            if let Some(t) = now_ms {
+                self.obs_seq += 1;
+                self.last_seen.insert(o.device, (self.obs_seq, t));
+            }
             self.ingest_compute(o);
             n += 1;
         }
         n
+    }
+
+    /// Simulated ms `device` last produced evidence of life (`None` =
+    /// never heard from it through a stamped drain).
+    pub fn last_seen_ms(&self, device: usize) -> Option<f64> {
+        self.last_seen.get(&device).map(|&(_, t)| t)
+    }
+
+    /// Causal rank of `device`'s last evidence of life: higher = heard
+    /// from more recently in pipeline order.  Unlike the timestamp this
+    /// distinguishes observations that drained in one batch, so the
+    /// silence ranking stays meaningful right after a crash.
+    pub fn last_seen_seq(&self, device: usize) -> Option<u64> {
+        self.last_seen.get(&device).map(|&(s, _)| s)
     }
 
     /// Fold one transfer timing into the link estimate.  Public so tests
@@ -250,6 +305,89 @@ impl Monitor {
             }
         }
         t
+    }
+}
+
+/// Heartbeat-timeout device-loss detection over the monitor's silence
+/// records.
+///
+/// The rule: failover is considered only once the whole pipeline has been
+/// **stalled** (no token delivered) for at least `timeout_ms` of simulated
+/// time — jitter, slow links and slow-but-alive stages never trigger it,
+/// because tokens keep (however slowly) arriving and reset the stall
+/// clock.  Once stalled past the timeout, the suspect is the *most
+/// upstream* plan device among those silent the longest: stages ahead of
+/// the stuck frame carry fresh timings, the dead stage and everything
+/// behind it carry timings from the previous iteration, and FIFO pipeline
+/// order makes the first of the stale ones the blocking host.
+///
+/// A verdict is a heuristic, not ground truth: failover stays correct
+/// under a wrong blame (the rebuilt pipeline re-derives every token
+/// deterministically), it just costs another detection round — which is
+/// why [`LivenessDetector::demote_to`] lets the engine retract stale
+/// verdicts when the surviving pool becomes unplannable.
+#[derive(Debug, Clone)]
+pub struct LivenessDetector {
+    /// Simulated ms of pipeline stall before a device may be declared dead.
+    pub timeout_ms: f64,
+    /// Devices declared dead, oldest verdict first.
+    dead: Vec<usize>,
+}
+
+impl LivenessDetector {
+    pub fn new(timeout_ms: f64) -> Self {
+        LivenessDetector {
+            timeout_ms,
+            dead: Vec::new(),
+        }
+    }
+
+    pub fn is_dead(&self, device: usize) -> bool {
+        self.dead.contains(&device)
+    }
+
+    /// Devices currently declared dead, oldest verdict first.
+    pub fn dead(&self) -> &[usize] {
+        &self.dead
+    }
+
+    /// Record a verdict (idempotent).
+    pub fn mark_dead(&mut self, device: usize) {
+        if !self.dead.contains(&device) {
+            self.dead.push(device);
+        }
+    }
+
+    /// Retract a verdict (e.g. fresh evidence of life).
+    pub fn mark_alive(&mut self, device: usize) {
+        self.dead.retain(|&d| d != device);
+    }
+
+    /// Keep only the `n` most recent verdicts — the self-healing path
+    /// when an earlier blame was wrong and the shrunken pool has become
+    /// unplannable.
+    pub fn demote_to(&mut self, n: usize) {
+        let excess = self.dead.len().saturating_sub(n);
+        self.dead.drain(..excess);
+    }
+
+    /// The device to blame for a pipeline stalled `stalled_ms` (simulated),
+    /// or `None` while the stall is still within the heartbeat timeout.
+    /// `plan_devices` must be in stage order (upstream first).
+    pub fn suspect(
+        &self,
+        plan_devices: &[usize],
+        monitor: &Monitor,
+        stalled_ms: f64,
+    ) -> Option<usize> {
+        if stalled_ms.is_nan() || stalled_ms < self.timeout_ms {
+            return None;
+        }
+        plan_devices
+            .iter()
+            .copied()
+            .filter(|d| !self.is_dead(*d))
+            .min_by_key(|&d| monitor.last_seen_seq(d).unwrap_or(0))
     }
 }
 
@@ -382,6 +520,92 @@ mod tests {
         assert_eq!(m.drain(), 2);
         assert!(m.link_estimate_mbps(0, 1).is_some());
         assert_eq!(m.stage_estimate_ms(1, true), Some(3.0));
+    }
+
+    #[test]
+    fn drain_at_stamps_heartbeats() {
+        let c = presets::tiny_demo(0);
+        let (mut m, h) = Monitor::new(c, 0.5);
+        h.transfer.send(obs(0, 1, 10_000, 2.0)).unwrap();
+        h.compute
+            .send(ComputeObs {
+                device: 2,
+                stage: 2,
+                decode: true,
+                ms: 1.0,
+            })
+            .unwrap();
+        assert_eq!(m.drain_at(100.0), 2);
+        // the frame's *sender* and the computing device are stamped
+        assert_eq!(m.last_seen_ms(0), Some(100.0));
+        assert_eq!(m.last_seen_ms(2), Some(100.0));
+        assert_eq!(m.last_seen_ms(1), None);
+        // a later drain refreshes only devices with new evidence
+        h.compute
+            .send(ComputeObs {
+                device: 0,
+                stage: 0,
+                decode: true,
+                ms: 1.0,
+            })
+            .unwrap();
+        m.drain_at(250.0);
+        assert_eq!(m.last_seen_ms(0), Some(250.0));
+        assert_eq!(m.last_seen_ms(2), Some(100.0));
+        // causal order survives same-batch draining via the sequence
+        assert!(m.last_seen_seq(0).unwrap() > m.last_seen_seq(2).unwrap());
+    }
+
+    fn beat(m: &mut Monitor, h: &MonitorHandle, device: usize, now_ms: f64) {
+        h.compute
+            .send(ComputeObs {
+                device,
+                stage: device,
+                decode: true,
+                ms: 1.0,
+            })
+            .unwrap();
+        m.drain_at(now_ms);
+    }
+
+    #[test]
+    fn detector_waits_out_jitter_below_timeout() {
+        let c = presets::tiny_demo(0);
+        let (mut m, h) = Monitor::new(c, 0.5);
+        let det = LivenessDetector::new(500.0);
+        for d in 0..3 {
+            beat(&mut m, &h, d, 100.0);
+        }
+        // slow-but-alive: the stall clock never reaches the timeout
+        assert_eq!(det.suspect(&[0, 1, 2], &m, 0.0), None);
+        assert_eq!(det.suspect(&[0, 1, 2], &m, 499.9), None);
+        assert_eq!(det.suspect(&[0, 1, 2], &m, f64::NAN), None);
+    }
+
+    #[test]
+    fn detector_blames_most_upstream_silent_device() {
+        let c = presets::tiny_demo(0);
+        let (mut m, h) = Monitor::new(c, 0.5);
+        let mut det = LivenessDetector::new(500.0);
+        // iteration k-1 passed every stage; iteration k got through the
+        // source (device 0) only — devices 1 and 2 are silent since, and
+        // 1 is the most upstream of the stale pair
+        beat(&mut m, &h, 1, 90.0);
+        beat(&mut m, &h, 2, 95.0);
+        beat(&mut m, &h, 0, 700.0);
+        assert_eq!(det.suspect(&[0, 1, 2], &m, 600.0), Some(1));
+        // never-heard devices rank as silent forever
+        assert_eq!(det.suspect(&[0, 7, 1], &m, 600.0), Some(7));
+        // verdicts are excluded from later rounds, and demotable
+        det.mark_dead(1);
+        assert!(det.is_dead(1));
+        assert_eq!(det.suspect(&[0, 1, 2], &m, 600.0), Some(2));
+        det.mark_dead(2);
+        assert_eq!(det.dead(), &[1, 2]);
+        det.demote_to(1);
+        assert_eq!(det.dead(), &[2]);
+        det.mark_alive(2);
+        assert!(!det.is_dead(2));
     }
 
     #[test]

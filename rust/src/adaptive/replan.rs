@@ -198,16 +198,31 @@ impl Replanner {
         self.last_migrate_ms = now_ms;
     }
 
-    /// One control-loop round: compare the current plan's prediction on
-    /// the observed state against its baseline, and if it degraded past
-    /// the band, try to find a plan that is decisively better *on that
-    /// same observed state*.
+    /// One control-loop round over the full device pool; see
+    /// [`Replanner::evaluate_pool`].
     pub fn evaluate(
         &mut self,
         current: &Plan,
         traces: &ProfiledTraces,
         cluster: &Cluster,
         now_ms: f64,
+    ) -> Decision {
+        let pool: Vec<usize> = (0..cluster.len()).collect();
+        self.evaluate_pool(current, traces, cluster, now_ms, &pool)
+    }
+
+    /// One control-loop round: compare the current plan's prediction on
+    /// the observed state against its baseline, and if it degraded past
+    /// the band, try to find a plan — over `pool` only, so devices the
+    /// liveness detector has declared dead stay out of candidates — that
+    /// is decisively better *on that same observed state*.
+    pub fn evaluate_pool(
+        &mut self,
+        current: &Plan,
+        traces: &ProfiledTraces,
+        cluster: &Cluster,
+        now_ms: f64,
+        pool: &[usize],
     ) -> Decision {
         self.evaluations += 1;
         let cur = self.predict_ms(current, traces, cluster);
@@ -220,10 +235,9 @@ impl Replanner {
         if cur <= self.policy.degrade_factor * self.baseline_ms {
             return keep;
         }
-        let pool: Vec<usize> = (0..cluster.len()).collect();
         let cand = match self.objective {
-            PlanObjective::Latency => algo1(traces, cluster, &pool, self.batch),
-            PlanObjective::Throughput => algo2_classes(traces, cluster, &pool, self.batch),
+            PlanObjective::Latency => algo1(traces, cluster, pool, self.batch),
+            PlanObjective::Throughput => algo2_classes(traces, cluster, pool, self.batch),
         };
         let Ok(cand) = cand else { return keep };
         if cand.stages == current.stages {
@@ -243,6 +257,27 @@ impl Replanner {
             current_pred_ms: cur,
             candidate_pred_ms: cand_pred,
         }
+    }
+
+    /// Failover re-solve: the current plan is *infeasible* (a stage host
+    /// is gone), so there is no keep-vs-migrate hysteresis — "keeping"
+    /// cannot be predicted-better because keeping does not exist.  Solve
+    /// the objective's DP over the surviving `pool` on the observed state
+    /// and validate the result; the caller decides what an `Err` (no
+    /// feasible plan on the survivors) means.
+    pub fn solve_over(
+        &self,
+        traces: &ProfiledTraces,
+        cluster: &Cluster,
+        pool: &[usize],
+    ) -> Result<Plan, crate::planner::PlanError> {
+        let cand = match self.objective {
+            PlanObjective::Latency => algo1(traces, cluster, pool, self.batch)?,
+            PlanObjective::Throughput => algo2_classes(traces, cluster, pool, self.batch)?,
+        };
+        validate_plan(&cand, traces, cluster, self.batch)
+            .map_err(crate::planner::PlanError::Infeasible)?;
+        Ok(cand)
     }
 }
 
@@ -342,6 +377,28 @@ mod tests {
             r.evaluate(&plan, &traces, &cluster, 600.0),
             Decision::Migrate { .. }
         ));
+    }
+
+    #[test]
+    fn solve_over_excludes_dead_devices() {
+        let (traces, cluster, plan) = setup();
+        let r = Replanner::new(PlanObjective::Latency, TriggerPolicy::default(), 1, 1.0);
+        // kill every non-source device the current plan uses; the forced
+        // re-solve must produce a valid plan that avoids all of them
+        let dead: Vec<usize> = plan
+            .devices()
+            .into_iter()
+            .filter(|&d| d != cluster.source)
+            .collect();
+        assert!(!dead.is_empty(), "plan uses only the source?");
+        let pool: Vec<usize> = (0..cluster.len()).filter(|d| !dead.contains(d)).collect();
+        let cand = r.solve_over(&traces, &cluster, &pool).unwrap();
+        validate_plan(&cand, &traces, &cluster, 1).unwrap();
+        for d in cand.devices() {
+            assert!(!dead.contains(&d), "failover plan uses dead device {d}");
+        }
+        // an unplannable pool errors instead of panicking
+        assert!(r.solve_over(&traces, &cluster, &[]).is_err());
     }
 
     #[test]

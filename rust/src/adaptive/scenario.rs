@@ -1,5 +1,6 @@
 //! Canned adaptive-runtime experiments, shared by the integration tests,
-//! the `adaptive_recovery` example and `edgeshard repro adaptive`.
+//! the `adaptive_recovery` example and `edgeshard repro adaptive` /
+//! `edgeshard repro churn`.
 //!
 //! The flagship scenario is [`link_drop_scenario`]: a 3-device edge
 //! cluster serves batched generation over a fast source↔worker link;
@@ -18,17 +19,26 @@
 //! KV tensors, never changes math — which is the scenario's correctness
 //! anchor, while tokens/s and p95 inter-token latency are its performance
 //! verdict.
+//!
+//! [`device_churn_scenario`] is the fault-tolerance counterpart: a stage
+//! host **crashes** mid-generation (taking its KV with it).  The adaptive
+//! engine must detect the loss from missing heartbeats alone, replan onto
+//! the survivors, recover the lost KV — once via periodic checkpoint
+//! replay, once via re-prefill from token history — and still emit the
+//! exact token stream of an uninterrupted run.  A static engine cannot
+//! serve this trace at all (it would block forever on the dead host), so
+//! the comparison is adaptive-under-churn vs. static-on-a-clean-network.
 
 use anyhow::{Context, Result};
 use std::sync::{Arc, Mutex};
 
-use super::dynamics::{DynamicsDriver, NetworkDynamics, ScheduleShape};
-use super::engine::{AdaptiveConfig, AdaptiveEngine, MigrationRecord};
+use super::dynamics::{DeviceShape, DynamicsDriver, NetworkDynamics, ScheduleShape};
+use super::engine::{AdaptiveConfig, AdaptiveEngine, FailoverRecord, MigrationRecord};
 use crate::cluster::{Cluster, Device, DeviceClass, LiveCluster};
 use crate::coordinator::api::{GenResult, GroupRequest};
 use crate::coordinator::{Engine, EngineConfig};
 use crate::planner::latency::algo1;
-use crate::planner::Plan;
+use crate::planner::{Plan, PlanObjective, Stage};
 use crate::profiler::Workload;
 use crate::runtime::manifest::ManifestConfig;
 use crate::runtime::{ExecService, Manifest, MeasuredProfiler, WeightStore};
@@ -117,20 +127,26 @@ fn mini_cluster(manifest: &Manifest, workload: Workload) -> Cluster {
     c
 }
 
-fn mini_group(cfg: &ScenarioConfig, vocab: usize, prompt_len: usize) -> GroupRequest {
-    let mut tokens = Vec::with_capacity(cfg.batch * prompt_len);
-    for r in 0..cfg.batch {
+fn mini_group(
+    batch: usize,
+    seed: u64,
+    max_new_tokens: usize,
+    vocab: usize,
+    prompt_len: usize,
+) -> GroupRequest {
+    let mut tokens = Vec::with_capacity(batch * prompt_len);
+    for r in 0..batch {
         for i in 0..prompt_len {
-            tokens.push(((i * 7 + r * 13 + cfg.seed as usize) % vocab) as i32);
+            tokens.push(((i * 7 + r * 13 + seed as usize) % vocab) as i32);
         }
     }
     GroupRequest {
         group_id: 1,
-        request_ids: (1..=cfg.batch as u64).collect(),
+        request_ids: (1..=batch as u64).collect(),
         tokens,
-        batch: cfg.batch,
+        batch,
         prompt_len,
-        max_new_tokens: cfg.max_new_tokens,
+        max_new_tokens,
     }
 }
 
@@ -188,7 +204,13 @@ pub fn link_drop_scenario(cfg: &ScenarioConfig) -> Result<ScenarioReport> {
             after_mbps: cfg.drop_to_mbps,
         },
     );
-    let group = mini_group(cfg, manifest.config.vocab_size, manifest.config.prefill_len);
+    let group = mini_group(
+        cfg.batch,
+        cfg.seed,
+        cfg.max_new_tokens,
+        manifest.config.vocab_size,
+        manifest.config.prefill_len,
+    );
     let engine_cfg = EngineConfig {
         time_scale: cfg.time_scale,
         ..EngineConfig::default()
@@ -273,6 +295,251 @@ pub fn link_drop_scenario(cfg: &ScenarioConfig) -> Result<ScenarioReport> {
         replan_evaluations: a_stats.replan_evaluations,
         final_plan: a_stats.final_plan,
     })
+}
+
+/// Knobs of the device-churn experiment (defaults are what the gating
+/// e2e test in `tests/device_churn.rs` runs).
+#[derive(Debug, Clone)]
+pub struct ChurnConfig {
+    pub max_new_tokens: usize,
+    pub batch: usize,
+    /// Which device crashes (must not be the source, device 0 — the
+    /// source holds the prompts and the privacy-pinned embedding).
+    pub crash_device: usize,
+    /// When it crashes, simulated ms after serving starts.
+    pub crash_at_ms: f64,
+    /// Simulated ms of pipeline silence before failover triggers.
+    pub heartbeat_timeout_ms: f64,
+    /// Checkpoint cadence (tokens) for the checkpoint-replay run; the
+    /// re-prefill run always disables checkpointing.
+    pub checkpoint_every: usize,
+    pub time_scale: f64,
+    pub seed: u64,
+}
+
+impl Default for ChurnConfig {
+    fn default() -> Self {
+        // Timing rationale: per-hop latency (3 ms × 3 links) floors every
+        // iteration near 10 ms, so 96 tokens keep the run alive well past
+        // the 400 ms crash in any build profile, and a 4-token checkpoint
+        // cadence guarantees a snapshot exists by then.  The 450 ms
+        // heartbeat timeout is ~40× a healthy iteration — slow-but-alive
+        // never trips it.
+        ChurnConfig {
+            max_new_tokens: 96,
+            batch: 4,
+            crash_device: 1,
+            crash_at_ms: 400.0,
+            heartbeat_timeout_ms: 450.0,
+            checkpoint_every: 4,
+            time_scale: 1.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Everything the device-churn experiment produced.
+#[derive(Debug)]
+pub struct ChurnReport {
+    pub initial_plan: String,
+    /// Adaptive run recovering via periodic-checkpoint replay.
+    pub checkpointed: RunSummary,
+    pub checkpointed_failovers: Vec<FailoverRecord>,
+    pub checkpointed_final_plan: String,
+    pub checkpoints_taken: u64,
+    /// Adaptive run recovering via re-prefill from token history.
+    pub reprefilled: RunSummary,
+    pub reprefilled_failovers: Vec<FailoverRecord>,
+    pub reprefilled_final_plan: String,
+    /// The control: a static engine on a clean network (a static engine
+    /// under churn would simply never finish).
+    pub static_clean: RunSummary,
+}
+
+/// The churn scenario's forced 3-stage plan — one stage per device of the
+/// mini cluster, so killing device 1 kills a mid-pipeline stage and
+/// killing device 2 kills the head stage.
+fn three_stage_plan(n_model_layers: usize) -> Plan {
+    let a = n_model_layers / 3;
+    let b = 2 * n_model_layers / 3;
+    Plan {
+        objective: PlanObjective::Latency,
+        stages: vec![
+            Stage { device: 0, start: 0, end: a },
+            Stage { device: 1, start: a, end: b },
+            Stage { device: 2, start: b, end: n_model_layers },
+        ],
+        predicted_ms: 0.0,
+    }
+}
+
+/// Run the mid-generation device-crash experiment; see the module docs.
+pub fn device_churn_scenario(cfg: &ChurnConfig) -> Result<ChurnReport> {
+    anyhow::ensure!(
+        cfg.crash_device != 0,
+        "crash_device 0 is the source — there is nothing to fail over to"
+    );
+    let manifest = Manifest::synthetic(mini_config(), vec![1, cfg.batch]);
+    let weights = WeightStore::synthetic(&manifest, cfg.seed);
+    let (_svc, exec) = ExecService::start_sim(&manifest)?;
+
+    let workload = Workload {
+        prompt_len: manifest.config.prefill_len,
+        gen_len: cfg.max_new_tokens,
+        batch: cfg.batch,
+    };
+    let cluster = mini_cluster(&manifest, workload);
+
+    let mut profiler = MeasuredProfiler::new(&manifest, &weights, exec.clone());
+    profiler.reps = 2;
+    let traces = profiler.profile(&cluster, workload)?;
+
+    let plan = three_stage_plan(manifest.config.n_layers + 2);
+    let initial_plan = plan.describe();
+    let group = mini_group(
+        cfg.batch,
+        cfg.seed,
+        cfg.max_new_tokens,
+        manifest.config.vocab_size,
+        manifest.config.prefill_len,
+    );
+    let engine_cfg = EngineConfig {
+        time_scale: cfg.time_scale,
+        ..EngineConfig::default()
+    };
+    let dynamics =
+        NetworkDynamics::new().device(cfg.crash_device, DeviceShape::CrashAt(cfg.crash_at_ms));
+
+    type ChurnRun = (RunSummary, Vec<FailoverRecord>, String, u64);
+    let adaptive_run = |label: &str, checkpoint_every: usize| -> Result<ChurnRun> {
+        let adaptive_cfg = AdaptiveConfig {
+            engine: engine_cfg.clone(),
+            dynamics: Some(dynamics.clone()),
+            dynamics_tick_real_ms: 4.0,
+            heartbeat_timeout_ms: cfg.heartbeat_timeout_ms,
+            checkpoint_every,
+            // wide hysteresis: this experiment isolates *failover* — the
+            // drift-replan path is exercised by the link-drop scenario
+            policy: crate::adaptive::replan::TriggerPolicy {
+                degrade_factor: 10.0,
+                ..Default::default()
+            },
+            ..AdaptiveConfig::default()
+        };
+        let mut engine = AdaptiveEngine::new(
+            &manifest,
+            &weights,
+            exec.clone(),
+            plan.clone(),
+            cluster.clone(),
+            traces.clone(),
+            adaptive_cfg,
+        );
+        let (results, mut stats) = engine
+            .generate_sequential(std::slice::from_ref(&group))
+            .with_context(|| format!("churn run `{label}`"))?;
+        let summary = summarize(
+            label,
+            results,
+            stats.tokens,
+            stats.makespan_ms,
+            &mut stats.iter_latency,
+            stats.padding_efficiency,
+        );
+        Ok((summary, stats.failovers, stats.final_plan, stats.checkpoints))
+    };
+
+    let (checkpointed, checkpointed_failovers, checkpointed_final_plan, checkpoints_taken) =
+        adaptive_run("adaptive+crash (checkpoint)", cfg.checkpoint_every)?;
+    let (reprefilled, reprefilled_failovers, reprefilled_final_plan, _) =
+        adaptive_run("adaptive+crash (re-prefill)", 0)?;
+
+    // the control: static engine, no churn
+    let mut c_engine =
+        Engine::build(&manifest, &weights, exec.clone(), &plan, &cluster, &engine_cfg)?;
+    let (c_results, mut c_stats) = c_engine
+        .generate_sequential(std::slice::from_ref(&group))
+        .context("static clean run")?;
+    c_engine.shutdown()?;
+    let static_clean = summarize(
+        "static+clean",
+        c_results,
+        c_stats.tokens,
+        c_stats.makespan_ms,
+        &mut c_stats.iter_latency,
+        c_stats.padding_efficiency,
+    );
+
+    Ok(ChurnReport {
+        initial_plan,
+        checkpointed,
+        checkpointed_failovers,
+        checkpointed_final_plan,
+        checkpoints_taken,
+        reprefilled,
+        reprefilled_failovers,
+        reprefilled_final_plan,
+        static_clean,
+    })
+}
+
+/// Render the report as the markdown `edgeshard repro churn` emits.
+pub fn churn_report_markdown(r: &ChurnReport) -> String {
+    let mut out = String::new();
+    out.push_str("# Fault tolerance — mid-generation device crash\n\n");
+    out.push_str(&format!("initial plan: `{}`\n", r.initial_plan));
+    out.push_str(&format!(
+        "final plan (checkpoint run):  `{}`\n",
+        r.checkpointed_final_plan
+    ));
+    out.push_str(&format!(
+        "final plan (re-prefill run):  `{}`\n\n",
+        r.reprefilled_final_plan
+    ));
+    let rows: Vec<Vec<String>> = [&r.checkpointed, &r.reprefilled, &r.static_clean]
+        .iter()
+        .map(|s| {
+            vec![
+                s.label.clone(),
+                format!("{:.1}", s.tokens_per_s),
+                format!("{:.2}", s.p95_iter_ms),
+                format!("{:.0}", s.makespan_ms),
+            ]
+        })
+        .collect();
+    out.push_str(&markdown_table(
+        &["engine", "tokens/s", "p95 inter-token (ms)", "makespan (ms)"],
+        &rows,
+    ));
+    out.push('\n');
+    for (run, fos) in [
+        ("checkpoint", &r.checkpointed_failovers),
+        ("re-prefill", &r.reprefilled_failovers),
+    ] {
+        for f in fos.iter() {
+            out.push_str(&format!(
+                "failover ({run}) @token {}: d{} declared dead after {:.0} ms silence, \
+                 `{}` → `{}` ({} groups restored, {} iters replayed, {} KV bytes, \
+                 {:.1} ms restore pause)\n",
+                f.at_iter,
+                f.dead_device,
+                f.stalled_ms,
+                f.from_plan,
+                f.to_plan,
+                f.restored_groups,
+                f.replayed_iters,
+                f.restore_kv_bytes,
+                f.pause_ms,
+            ));
+        }
+    }
+    out.push_str(&format!(
+        "\ncheckpoints taken: {}; tokens identical across runs: {}\n",
+        r.checkpoints_taken,
+        r.checkpointed.token_rows() == r.static_clean.token_rows()
+            && r.reprefilled.token_rows() == r.static_clean.token_rows()
+    ));
+    out
 }
 
 /// Render the report as the markdown `edgeshard repro adaptive` emits.

@@ -7,6 +7,7 @@
 
 use crate::netsim::LinkSpec;
 use crate::util::Rng;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, RwLock};
 
 /// A hardware class (Table III plus memory-bandwidth, which governs
@@ -245,6 +246,53 @@ impl LiveCluster {
     }
 }
 
+/// Shared ground-truth device liveness — the device-level analogue of
+/// [`LiveCluster`].  The churn scenarios in
+/// [`crate::adaptive::dynamics`] flip these flags when a device crashes
+/// or rejoins; stage actors consult them per message (a dead device's
+/// frames vanish, like a real host disappearing mid-pipeline).  Cloning
+/// shares the flags.
+///
+/// The adaptive *monitor* never reads this: device loss is detected from
+/// the absence of per-hop timings alone (see
+/// [`crate::adaptive::monitor::LivenessDetector`]).
+#[derive(Debug, Clone, Default)]
+pub struct DeviceLiveness {
+    alive: Arc<Vec<AtomicBool>>,
+}
+
+impl DeviceLiveness {
+    /// All `n` devices start alive.
+    pub fn new(n: usize) -> Self {
+        DeviceLiveness {
+            alive: Arc::new((0..n).map(|_| AtomicBool::new(true)).collect()),
+        }
+    }
+
+    /// Whether `device` is currently up.  Devices outside the tracked
+    /// range are considered alive (an untracked device cannot crash).
+    pub fn is_alive(&self, device: usize) -> bool {
+        self.alive
+            .get(device)
+            .map(|a| a.load(Ordering::Relaxed))
+            .unwrap_or(true)
+    }
+
+    pub fn set_alive(&self, device: usize, alive: bool) {
+        if let Some(a) = self.alive.get(device) {
+            a.store(alive, Ordering::Relaxed);
+        }
+    }
+
+    /// Point-in-time copy of every flag.
+    pub fn snapshot(&self) -> Vec<bool> {
+        self.alive
+            .iter()
+            .map(|a| a.load(Ordering::Relaxed))
+            .collect()
+    }
+}
+
 /// Builders for the topologies used across the paper's experiments.
 pub mod presets {
     use super::*;
@@ -454,6 +502,22 @@ mod tests {
         assert_eq!(live.snapshot().bandwidth_mbps[1][0], 64.0);
         let t = live.comm_ms(0, 1, 1_000_000);
         assert!((t - (125.0 + live.snapshot().latency_ms[0][1])).abs() < 1e-6);
+    }
+
+    #[test]
+    fn device_liveness_shared_and_forgiving() {
+        let l = DeviceLiveness::new(3);
+        let alias = l.clone();
+        assert!(l.is_alive(1));
+        alias.set_alive(1, false);
+        assert!(!l.is_alive(1));
+        assert_eq!(l.snapshot(), vec![true, false, true]);
+        // out-of-range devices are alive and setting them is a no-op
+        assert!(l.is_alive(99));
+        l.set_alive(99, false);
+        assert!(l.is_alive(99));
+        alias.set_alive(1, true);
+        assert!(l.is_alive(1));
     }
 
     #[test]

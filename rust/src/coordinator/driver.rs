@@ -25,6 +25,22 @@
 //! re-primes the admission window.  The Bubble strategy's per-iteration
 //! barrier is the degenerate in-loop case of the same machinery.
 //!
+//! ## Stalls and failover
+//!
+//! A barrier assumes in-flight iterations can land; a **dead stage host**
+//! breaks that assumption.  When a hook opts in via
+//! [`DriveHooks::stall_poll_real_ms`], the driver polls the token channel
+//! with a timeout and reports silence through [`DriveHooks::on_stall`]
+//! with a [`StallView`] (each unfinished group's request + folded token
+//! history).  A hook that answers `true` has *replaced* the pipeline —
+//! detected the loss, replanned onto survivors, recovered KV (see
+//! [`crate::adaptive::engine`]) — and the driver re-derives the next live
+//! iteration of every unfinished group from its history (a group without
+//! a first token is re-prefilled), drops all barrier state, and resumes.
+//! Everything the old pipeline still owed is discarded: its late tokens
+//! can never fold, which is what keeps a false-positive failover merely
+//! wasteful instead of incorrect.
+//!
 //! ## Stats
 //!
 //! TTFT is recorded per group/request on its first token, measured from
@@ -36,7 +52,8 @@
 
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
-use std::time::Instant;
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::{Duration, Instant};
 
 use super::api::{GenRequest, GenResult, GroupRequest};
 use super::engine::Wired;
@@ -75,6 +92,19 @@ pub struct DriveStats {
     pub padding_efficiency: f64,
 }
 
+/// Progress of one still-unfinished group, as the hooks see it.
+#[derive(Debug, Clone)]
+pub struct GroupProgress {
+    pub group_id: u64,
+    pub batch: usize,
+    /// Highest iteration dispatched into the pipeline (prefill = 0) —
+    /// every KV write up to this iteration precedes anything the hook
+    /// sends next, which is exactly what a checkpoint snapshot covers.
+    pub sent: usize,
+    /// Token frames folded so far (= the next iteration to dispatch).
+    pub folded: usize,
+}
+
 /// What the hooks may inspect after each folded token frame.
 #[derive(Debug)]
 pub struct DriveView {
@@ -83,6 +113,28 @@ pub struct DriveView {
     pub unfinished_batches: Vec<usize>,
     /// Whether every active group got its first token (prefill settled).
     pub all_prefilled: bool,
+    /// Per-group progress of the groups still generating.
+    pub groups: Vec<GroupProgress>,
+}
+
+/// One still-unfinished group at a pipeline stall: the request plus its
+/// folded token history — everything a failover needs to re-prefill or
+/// replay the group on a rebuilt pipeline.
+#[derive(Debug)]
+pub struct StallGroup<'a> {
+    pub req: &'a GroupRequest,
+    /// Folded tokens, `[row][iter]` (every row has `folded` entries).
+    pub rows: &'a [Vec<i32>],
+}
+
+/// What the hooks see when the pipeline has delivered nothing for a full
+/// stall-poll tick.
+#[derive(Debug)]
+pub struct StallView<'a> {
+    pub received: u64,
+    /// Real ms since the last delivered token (or drive start).
+    pub stalled_real_ms: f64,
+    pub groups: Vec<StallGroup<'a>>,
 }
 
 /// Interposition points for adaptive serving.  The default impls are
@@ -105,10 +157,14 @@ pub trait DriveHooks {
     }
 
     /// Called after a folded token frame that passed
-    /// [`DriveHooks::wants_view`].  Return `true` to request a drain
+    /// [`DriveHooks::wants_view`].  `wired` is shared (not `&mut`): a
+    /// hook may *send* through the pipeline here — e.g. a periodic
+    /// [`crate::coordinator::stage::StageMsg::Export`] checkpoint probe —
+    /// but may only replace it at [`DriveHooks::at_barrier`] /
+    /// [`DriveHooks::on_stall`].  Return `true` to request a drain
     /// barrier before any further decode iteration is released.
-    fn after_token(&mut self, view: &DriveView) -> Result<bool> {
-        let _ = view;
+    fn after_token(&mut self, wired: &Wired, view: &DriveView) -> Result<bool> {
+        let _ = (wired, view);
         Ok(false)
     }
 
@@ -118,6 +174,27 @@ pub trait DriveHooks {
     fn at_barrier(&mut self, wired: &mut Wired) -> Result<()> {
         let _ = wired;
         Ok(())
+    }
+
+    /// How long (real ms) the driver may block on the token channel
+    /// before reporting a stall via [`DriveHooks::on_stall`].  `None`
+    /// (the default) keeps the plain blocking receive — no stall
+    /// detection, no failover.
+    fn stall_poll_real_ms(&self) -> Option<f64> {
+        None
+    }
+
+    /// Called each time no token has arrived within the stall-poll tick.
+    /// Return `Ok(false)` to keep waiting.  Return `Ok(true)` to signal
+    /// the hook **replaced the pipeline** (failover): any KV recovery and
+    /// history replay must already have happened on the new `wired` —
+    /// the driver then re-dispatches the next live iteration (or the
+    /// prefill, for groups without a first token) of every unfinished
+    /// group, abandons all barrier state, and resumes folding.  An `Err`
+    /// aborts generation.
+    fn on_stall(&mut self, wired: &mut Wired, view: &StallView<'_>) -> Result<bool> {
+        let _ = (wired, view);
+        Ok(false)
     }
 }
 
@@ -186,6 +263,14 @@ pub fn drive_groups(
         last_iter_at: Instant,
         done: bool,
         in_flight: bool,
+        /// Highest iteration dispatched (prefill = 0).
+        sent: usize,
+    }
+    impl Active<'_> {
+        /// Token frames folded so far (= the next iteration to dispatch).
+        fn folded(&self) -> usize {
+            self.rows.first().map(|r| r.len()).unwrap_or(0)
+        }
     }
     fn admit(g: &GroupRequest) -> Active<'_> {
         Active {
@@ -195,6 +280,7 @@ pub fn drive_groups(
             last_iter_at: Instant::now(),
             done: false,
             in_flight: true,
+            sent: 0,
         }
     }
 
@@ -242,11 +328,77 @@ pub fn drive_groups(
         in_flight_groups += 1;
     }
 
+    // stall detection: real time since the last delivered token
+    let mut last_progress = Instant::now();
+    let stall_poll = if hooks.enabled() {
+        hooks.stall_poll_real_ms()
+    } else {
+        None
+    };
+
     while in_flight_groups > 0 {
-        let tok = wired
-            .token_rx
-            .recv()
-            .map_err(|_| anyhow!("pipeline closed unexpectedly"))?;
+        let tok = match stall_poll {
+            None => wired
+                .token_rx
+                .recv()
+                .map_err(|_| anyhow!("pipeline closed unexpectedly"))?,
+            Some(tick_ms) => {
+                match wired
+                    .token_rx
+                    .recv_timeout(Duration::from_secs_f64(tick_ms.max(1.0) / 1e3))
+                {
+                    Ok(t) => t,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        anyhow::bail!("pipeline closed unexpectedly")
+                    }
+                    Err(RecvTimeoutError::Timeout) => {
+                        let recovered = {
+                            let view = StallView {
+                                received,
+                                stalled_real_ms: last_progress.elapsed().as_secs_f64() * 1e3,
+                                groups: active
+                                    .values()
+                                    .filter(|a| !a.done)
+                                    .map(|a| StallGroup {
+                                        req: a.req,
+                                        rows: &a.rows,
+                                    })
+                                    .collect(),
+                            };
+                            hooks.on_stall(wired, &view)?
+                        };
+                        if recovered {
+                            // Failover: the hook rebuilt the pipeline and
+                            // already replayed every *folded* iteration's
+                            // KV.  Whatever was in flight or held died
+                            // with the old pipeline — re-derive the next
+                            // live iteration of every unfinished group
+                            // from its token history and resume.
+                            pending_barrier = false;
+                            held.clear();
+                            bubble_barrier.clear();
+                            for a in active.values_mut().filter(|a| !a.done) {
+                                let folded = a.folded();
+                                if folded == 0 {
+                                    send_prefill(wired, a.req)?;
+                                    a.sent = 0;
+                                } else {
+                                    let toks: Vec<i32> =
+                                        a.rows.iter().map(|r| r[folded - 1]).collect();
+                                    send_decode(wired, a.req, folded, toks)?;
+                                    a.sent = folded;
+                                }
+                                rows_real += a.req.real() as u64;
+                                rows_total += a.req.batch as u64;
+                                a.in_flight = true;
+                            }
+                            last_progress = Instant::now();
+                        }
+                        continue;
+                    }
+                }
+            }
+        };
         anyhow::ensure!(
             tok.origin == TokenOrigin::Group,
             "continuous-batching token in group mode"
@@ -288,6 +440,7 @@ pub fn drive_groups(
                         rows_real += a.req.real() as u64;
                         rows_total += a.req.batch as u64;
                         a.in_flight = true;
+                        a.sent = next_iter;
                     }
                 }
             }
@@ -331,6 +484,7 @@ pub fn drive_groups(
                     rows_real += a.req.real() as u64;
                     rows_total += a.req.batch as u64;
                     a.in_flight = true;
+                    a.sent = it;
                 }
             }
         }
@@ -347,8 +501,18 @@ pub fn drive_groups(
                     .map(|x| x.req.batch)
                     .collect(),
                 all_prefilled: active.values().all(|x| x.done || x.ttft_ms.is_some()),
+                groups: active
+                    .values()
+                    .filter(|x| !x.done)
+                    .map(|x| GroupProgress {
+                        group_id: x.req.group_id,
+                        batch: x.req.batch,
+                        sent: x.sent,
+                        folded: x.folded(),
+                    })
+                    .collect(),
             };
-            if hooks.after_token(&view)? {
+            if hooks.after_token(wired, &view)? {
                 pending_barrier = true;
             }
         }
@@ -367,6 +531,7 @@ pub fn drive_groups(
                 rows_real += a.req.real() as u64;
                 rows_total += a.req.batch as u64;
                 a.in_flight = true;
+                a.sent = it;
             }
             while in_flight_groups < window {
                 let Some(g) = queue.next() else { break };
@@ -377,6 +542,12 @@ pub fn drive_groups(
                 in_flight_groups += 1;
             }
         }
+
+        // Reset the stall clock only now: folding, a blocking hook call
+        // (checkpoint probe) or a barrier migration pause may have eaten
+        // real time that must not read as pipeline silence — only the
+        // recv-timeout path above accumulates stall time.
+        last_progress = Instant::now();
     }
 
     Ok((results, finish_stats(t0, real_tokens, ttft, iter_lat, rows_real, rows_total)))

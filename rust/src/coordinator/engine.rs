@@ -117,7 +117,9 @@ pub struct Wired {
 ///
 /// `preloads[i]` seeds stage *i*'s KV pool (migration hand-off); shorter
 /// or empty vectors mean no preload.  `obs` taps every stage and link
-/// for the adaptive monitor.
+/// for the adaptive monitor.  `liveness` is the shared ground-truth
+/// device-churn state (see [`crate::cluster::DeviceLiveness`]): when set,
+/// a stage whose device is flagged dead drops every frame it receives.
 #[allow(clippy::too_many_arguments)]
 pub fn wire(
     manifest: &Manifest,
@@ -127,6 +129,7 @@ pub fn wire(
     cluster: &Cluster,
     cfg: &EngineConfig,
     obs: Option<&ObsSinks>,
+    liveness: Option<&crate::cluster::DeviceLiveness>,
     mut preloads: Vec<Vec<(u64, GroupCache)>>,
 ) -> Result<Wired> {
     let n_model_layers = manifest.config.n_layers + 2;
@@ -215,6 +218,7 @@ pub fn wire(
         )?;
         actor.compute_scale = cfg.compute_scale.get(st.device).copied().unwrap_or(1.0);
         actor.obs = obs.map(|o| o.compute.clone());
+        actor.liveness = liveness.cloned();
         let rx = receivers[i].take().unwrap();
         handles.push(
             std::thread::Builder::new()
@@ -272,7 +276,7 @@ impl Engine {
         cluster: &Cluster,
         cfg: &EngineConfig,
     ) -> Result<Self> {
-        let wired = wire(manifest, weights, exec, plan, cluster, cfg, None, Vec::new())?;
+        let wired = wire(manifest, weights, exec, plan, cluster, cfg, None, None, Vec::new())?;
         Ok(Engine {
             wired,
             driver_cfg: driver_cfg(manifest, plan, cfg),

@@ -127,9 +127,18 @@ impl KvPool {
         self.used_bytes + bytes <= self.budget_bytes
     }
 
-    /// Install a freshly prefilled cache.  Fails if over budget (the
-    /// batcher is responsible for never letting this happen).
+    /// Install a freshly prefilled (or migrated/restored) cache.  Fails
+    /// if over budget (the batcher is responsible for never letting this
+    /// happen) or if the liveness mask does not match the batch — a
+    /// half-full run must arrive with its occupancy intact, not a
+    /// defaulted all-live mask.
     pub fn insert(&mut self, group: u64, cache: GroupCache) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            cache.live.len() == cache.batch,
+            "group {group}: liveness mask has {} flags for batch {}",
+            cache.live.len(),
+            cache.batch
+        );
         anyhow::ensure!(
             self.can_admit(cache.bytes),
             "KV pool over budget: used={} + group={} > budget={}",
@@ -344,6 +353,19 @@ mod tests {
         assert_eq!(p.used_bytes(), 400);
         assert!(p.can_admit(600));
         assert_eq!(p.peak_bytes(), 1000);
+    }
+
+    #[test]
+    fn mask_batch_mismatch_rejected() {
+        let mut p = KvPool::new(100);
+        let bad = GroupCache {
+            layers: vec![],
+            batch: 4,
+            bytes: 10,
+            live: vec![true], // 1 flag for 4 rows
+        };
+        assert!(p.insert(1, bad).is_err());
+        assert_eq!(p.used_bytes(), 0);
     }
 
     #[test]

@@ -35,7 +35,9 @@ pub mod stage;
 
 pub use api::{GenRequest, GenResult, GroupRequest};
 pub use batcher::Batcher;
-pub use driver::{DriveHooks, DriveStats, DriveView, DriverCfg, NoHooks};
+pub use driver::{
+    DriveHooks, DriveStats, DriveView, DriverCfg, GroupProgress, NoHooks, StallGroup, StallView,
+};
 pub use engine::{Engine, EngineConfig, EngineStats};
 pub use kvcache::{GroupCache, KvPool};
 pub use scheduler::{ContinuousConfig, SlotScheduler};

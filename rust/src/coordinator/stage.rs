@@ -19,6 +19,7 @@ use anyhow::{anyhow, Context, Result};
 use std::sync::mpsc::Sender;
 
 use super::kvcache::{GroupCache, KvPool};
+use crate::cluster::DeviceLiveness;
 use crate::metrics::ComputeObs;
 use crate::netsim::ShapedSender;
 use crate::runtime::manifest::Manifest;
@@ -94,14 +95,17 @@ pub enum StageMsg {
     },
     /// Release the group's KV slot and forward downstream.
     Free { group: u64 },
-    /// Migration probe: every stage snapshots its resident KV caches to
-    /// `reply` (keyed by **global** decoder index) and forwards the probe,
-    /// so the driver collects exactly one export per stage.
+    /// Migration / checkpoint probe: every stage snapshots its resident
+    /// KV caches to `reply` (keyed by **global** decoder index) and
+    /// forwards the probe, so the driver collects exactly one export per
+    /// stage.  The adaptive engine sends this both at a migration barrier
+    /// and on a periodic token cadence to keep a failover checkpoint.
     Export { reply: Sender<StageExport> },
     Shutdown,
 }
 
-/// One (group, global decoder layer) KV pair leaving a stage at migration.
+/// One (group, global decoder layer) KV pair leaving a stage at migration
+/// or checkpoint export.
 #[derive(Debug, Clone)]
 pub struct KvEntry {
     pub group: u64,
@@ -110,6 +114,11 @@ pub struct KvEntry {
     pub k: TensorData,
     pub v: TensorData,
     pub batch: usize,
+    /// Row liveness, one flag per batch row — carried through so a
+    /// half-full continuous-batching run exports/migrates with its slot
+    /// occupancy (and per-live-row byte accounting) intact.  Group caches
+    /// are fully live.
+    pub live: Vec<bool>,
 }
 
 /// A stage's KV snapshot, produced in response to [`StageMsg::Export`].
@@ -216,6 +225,11 @@ pub struct StageActor {
     pub compute_scale: f64,
     /// Optional sink for per-message compute timings (adaptive monitor).
     pub obs: Option<Sender<ComputeObs>>,
+    /// Shared ground-truth device liveness (churn scenarios).  While this
+    /// device is flagged dead every frame reaching it is dropped — no
+    /// compute, no forwarding, no observations — exactly as if the host
+    /// vanished with its KV state.
+    pub liveness: Option<DeviceLiveness>,
     // weights registered inside the exec service (converted to literals
     // once — the per-token decode loop never copies weights again)
     embed_w: Option<RegId>,
@@ -297,6 +311,7 @@ impl StageActor {
             next,
             compute_scale: 1.0,
             obs: None,
+            liveness: None,
             embed_w,
             head_w,
             layer_w,
@@ -327,6 +342,15 @@ impl StageActor {
     /// Process messages until `Shutdown` or the input channel closes.
     pub fn run(mut self, rx: std::sync::mpsc::Receiver<StageMsg>) -> Result<()> {
         while let Ok(msg) = rx.recv() {
+            // A dead host consumes nothing: frames delivered to it vanish
+            // (with whatever KV they would have touched), and the thread
+            // exits only when its channel closes — the failover path in
+            // `crate::adaptive` abandons rather than joins it.
+            if let Some(l) = &self.liveness {
+                if !l.is_alive(self.device_id) {
+                    continue;
+                }
+            }
             match msg {
                 StageMsg::Shutdown => {
                     self.forward_control(StageMsg::Shutdown)?;
@@ -438,6 +462,7 @@ impl StageActor {
                                 k: k.clone(),
                                 v: v.clone(),
                                 batch: cache.batch,
+                                live: cache.live.clone(),
                             });
                         }
                     }
@@ -490,7 +515,20 @@ impl StageActor {
         Ok(())
     }
 
+    /// Whether this stage's host is (still) up.  Checked again right
+    /// before any output leaves the stage: a host that dies *mid-compute*
+    /// must not emit observations or forward frames — it died with them.
+    fn host_alive(&self) -> bool {
+        self.liveness
+            .as_ref()
+            .map(|l| l.is_alive(self.device_id))
+            .unwrap_or(true)
+    }
+
     fn forward_control(&self, msg: StageMsg) -> Result<()> {
+        if !self.host_alive() {
+            return Ok(());
+        }
         if let NextHop::Stage(tx) = &self.next {
             let bytes = msg.wire_bytes();
             tx.send(msg, bytes)?;
@@ -500,6 +538,9 @@ impl StageActor {
 
     /// Forward a work-bearing frame to the next stage.
     fn forward_work(&self, msg: StageMsg) -> Result<()> {
+        if !self.host_alive() {
+            return Ok(());
+        }
         match &self.next {
             NextHop::Stage(tx) => {
                 let bytes = msg.wire_bytes();
@@ -511,6 +552,9 @@ impl StageActor {
 
     /// Send sampled tokens to the driver (head stage only).
     fn send_tokens(&self, msg: TokenMsg) -> Result<()> {
+        if !self.host_alive() {
+            return Ok(());
+        }
         match &self.next {
             NextHop::Driver(tx) => {
                 let bytes = msg.wire_bytes();
@@ -521,6 +565,9 @@ impl StageActor {
     }
 
     fn record_obs(&self, decode: bool, exec_ms_before: f64) {
+        if !self.host_alive() {
+            return;
+        }
         if let Some(tx) = &self.obs {
             let _ = tx.send(ComputeObs {
                 device: self.device_id,

@@ -47,7 +47,7 @@ pub mod runtime;
 pub mod util;
 pub mod workload;
 
-pub use cluster::{Cluster, Device, DeviceClass, LiveCluster};
+pub use cluster::{Cluster, Device, DeviceClass, DeviceLiveness, LiveCluster};
 pub use model::{ModelDesc, Precision};
 pub use planner::{Plan, PlanObjective, Planner};
 pub use profiler::ProfiledTraces;

@@ -1,7 +1,7 @@
 //! `edgeshard` — CLI for the EdgeShard reproduction.
 //!
 //! ```text
-//! edgeshard repro <table1|table4|fig7|fig8|fig9|fig10|adaptive|all> [--seed N]
+//! edgeshard repro <table1|table4|fig7|fig8|fig9|fig10|adaptive|churn|serving|all> [--seed N]
 //! edgeshard bench serving [--requests N] [--runs N] [--seed N] [--out PATH]
 //! edgeshard plan --model <7b|13b|70b> [--bandwidth MBPS] [--objective latency|throughput] [--seed N]
 //! edgeshard profile --model <7b|13b|70b> [--bandwidth MBPS]
@@ -107,7 +107,7 @@ fn main() -> Result<()> {
 fn print_usage() {
     println!(
         "edgeshard — EdgeShard reproduction (collaborative edge LLM inference)\n\n\
-         USAGE:\n  edgeshard repro <table1|table4|fig7|fig8|fig9|fig10|adaptive|all> [--seed N]\n  \
+         USAGE:\n  edgeshard repro <table1|table4|fig7|fig8|fig9|fig10|adaptive|churn|serving|all> [--seed N]\n  \
          edgeshard bench serving [--requests N] [--runs N] [--seed N] [--out BENCH_serving.json]\n  \
          edgeshard plan --model 7b [--bandwidth 1] [--objective latency] [--seed N]\n  \
          edgeshard profile --model 7b [--bandwidth 1]\n  \
@@ -132,6 +132,16 @@ fn cmd_repro(args: &Args) -> Result<()> {
         "fig9" => edgeshard::repro::figs::fig9(seed),
         "fig10" => edgeshard::repro::figs::fig10(seed),
         "adaptive" => edgeshard::repro::adaptive::run(seed),
+        "churn" => edgeshard::repro::churn::run(seed),
+        // alias for `bench serving` so every row of the repro table is
+        // reachable from `repro`
+        "serving" => {
+            let cfg = edgeshard::repro::serving::ServingBenchConfig {
+                seed,
+                ..Default::default()
+            };
+            edgeshard::repro::serving::run(&cfg, std::path::Path::new("BENCH_serving.json"))
+        }
         "all" => edgeshard::repro::run_all(seed),
         other => bail!("unknown experiment `{other}`"),
     }

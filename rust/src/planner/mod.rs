@@ -4,7 +4,7 @@
 //!   (layer, device), O(N·M²), minimizing end-to-end per-token latency
 //!   with the privacy constraint (layer 0 on the source node) and memory
 //!   budgets (Eqs. 3–8).
-//! * [`throughput::algo2`] — the paper's Algorithm 2: `g(m, S, j)` over
+//! * [`throughput::algo2_exact`] — the paper's Algorithm 2: `g(m, S, j)` over
 //!   (boundary, used-device-set, last device), minimizing the slowest
 //!   pipeline stage (Eqs. 9–13).  Exponential in device count as written
 //!   (O(N²·2^M·M²)), so [`throughput::algo2_classes`] adds **device-class

@@ -1,0 +1,18 @@
+//! `edgeshard repro churn` — the fault-tolerance experiment: a stage
+//! host crashes mid-generation (its KV dies with it) and the adaptive
+//! engine must detect the loss from missing heartbeats, replan onto the
+//! survivors, recover the lost KV (checkpoint replay in one run,
+//! re-prefill from token history in the other) and finish with the exact
+//! token stream of an uninterrupted run.  Not a paper artifact — this is
+//! the reliability story EdgeShard's premise (edge devices come and go)
+//! demands of a serving system.
+
+use crate::adaptive::scenario::{churn_report_markdown, device_churn_scenario, ChurnConfig};
+
+pub fn run(seed: u64) -> anyhow::Result<()> {
+    let report = device_churn_scenario(&ChurnConfig {
+        seed,
+        ..ChurnConfig::default()
+    })?;
+    super::emit("device_churn", &churn_report_markdown(&report))
+}

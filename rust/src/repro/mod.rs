@@ -10,6 +10,7 @@
 //! | fig9 | source-node effect (AGX Orin vs Orin NX) | [`figs::fig9`] |
 //! | fig10 | bubble vs no-bubble pipeline strategies | [`figs::fig10`] |
 //! | adaptive | mid-generation link drop: static vs adaptive engine | [`adaptive::run`] |
+//! | churn | mid-generation device crash: failover + KV recovery | [`churn::run`] |
 //! | serving | continuous batching vs fixed groups (`edgeshard bench`) | [`serving::run`] |
 //!
 //! Numbers come from the analytic profiler + the planners + the pipeline
@@ -20,6 +21,7 @@
 //! the sim backend.
 
 pub mod adaptive;
+pub mod churn;
 pub mod figs;
 pub mod methods;
 pub mod serving;
@@ -50,5 +52,13 @@ pub fn run_all(seed: u64) -> anyhow::Result<()> {
     figs::fig9(seed)?;
     figs::fig10(seed)?;
     adaptive::run(seed)?;
+    churn::run(seed)?;
+    serving::run(
+        &serving::ServingBenchConfig {
+            seed,
+            ..Default::default()
+        },
+        Path::new("BENCH_serving.json"),
+    )?;
     Ok(())
 }

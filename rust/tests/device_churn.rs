@@ -1,0 +1,221 @@
+//! End-to-end fault tolerance: a stage host crashes mid-generation under
+//! a scripted `adaptive::dynamics` churn schedule, on real stage actors +
+//! shaped links + the pure-rust sim backend.
+//!
+//! The gating invariants:
+//!
+//! * the engine detects the loss from missing heartbeats within a small
+//!   multiple of the heartbeat timeout (no ground-truth peeking);
+//! * it replans onto the survivors (the corpse never reappears in the
+//!   failover plan) and recovers the lost KV — via periodic-checkpoint
+//!   replay in one run and via re-prefill from token history in another,
+//!   so both recovery paths are exercised;
+//! * the final token stream is **byte-identical** to an uninterrupted
+//!   run, whether the dead stage was mid-pipeline or the head stage;
+//! * a slow-but-alive pipeline (bandwidth jitter stalling frames well
+//!   below the timeout) never triggers a failover.
+
+use edgeshard::adaptive::scenario::{device_churn_scenario, ChurnConfig};
+use edgeshard::adaptive::{AdaptiveConfig, AdaptiveEngine, ScheduleShape, TriggerPolicy};
+use edgeshard::cluster::presets;
+use edgeshard::coordinator::api::GroupRequest;
+use edgeshard::coordinator::{Engine, EngineConfig};
+use edgeshard::planner::{Plan, PlanObjective, Stage};
+use edgeshard::profiler::Workload;
+use edgeshard::runtime::{ExecService, Manifest, MeasuredProfiler, WeightStore};
+use std::sync::Mutex;
+
+/// The tests in this binary assert on wall-clock behavior; run them one
+/// at a time so they don't contend for CPU.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn assert_recovered(report: &edgeshard::adaptive::scenario::ChurnReport, dead: usize) {
+    let cfg = ChurnConfig::default();
+
+    // exactly one failover per adaptive run, blaming the right device
+    assert_eq!(
+        report.checkpointed_failovers.len(),
+        1,
+        "checkpoint run: {:?}",
+        report.checkpointed_failovers
+    );
+    assert_eq!(
+        report.reprefilled_failovers.len(),
+        1,
+        "re-prefill run: {:?}",
+        report.reprefilled_failovers
+    );
+    let ck = &report.checkpointed_failovers[0];
+    let rp = &report.reprefilled_failovers[0];
+    assert_eq!(ck.dead_device, dead, "checkpoint run blamed {ck:?}");
+    assert_eq!(rp.dead_device, dead, "re-prefill run blamed {rp:?}");
+
+    // detection happened within the heartbeat-timeout regime: at least
+    // one timeout of silence, and not unboundedly more
+    for f in [ck, rp] {
+        assert!(
+            f.stalled_ms >= cfg.heartbeat_timeout_ms,
+            "declared dead too early: {f:?}"
+        );
+        // upper bound: a few poll ticks past the timeout (checkpoint
+        // collection is asynchronous, so nothing blocks the stall clock)
+        assert!(
+            f.stalled_ms < cfg.heartbeat_timeout_ms * 4.0,
+            "detection took too long: {f:?}"
+        );
+        assert!(f.at_iter > 0, "crash before any token folded: {f:?}");
+        // the survivors' plan avoids the corpse
+        assert!(
+            !f.to_plan.contains(&format!("d{dead}:")),
+            "failover plan still uses the dead device: {f:?}"
+        );
+    }
+
+    // both recovery paths exercised
+    assert!(report.checkpoints_taken > 0, "no checkpoint was collected");
+    assert!(ck.via_checkpoint, "checkpoint run fell back: {ck:?}");
+    assert_eq!(ck.restored_groups, 1);
+    assert!(ck.restore_kv_bytes > 0);
+    assert!(!rp.via_checkpoint, "re-prefill run used a checkpoint: {rp:?}");
+    assert_eq!(rp.restored_groups, 0);
+    assert!(rp.replayed_iters > 0, "re-prefill run replayed nothing");
+    // checkpoint replay starts past the snapshot watermark, so it replays
+    // no more than the re-prefill run does
+    assert!(ck.replayed_iters <= rp.replayed_iters, "ck {ck:?} vs rp {rp:?}");
+
+    // the correctness anchor: byte-identical token streams
+    let clean = report.static_clean.token_rows();
+    assert_eq!(clean.len(), cfg.batch);
+    assert!(clean.iter().all(|row| row.len() == cfg.max_new_tokens));
+    assert_eq!(
+        report.checkpointed.token_rows(),
+        clean,
+        "checkpoint-replay recovery changed tokens"
+    );
+    assert_eq!(
+        report.reprefilled.token_rows(),
+        clean,
+        "re-prefill recovery changed tokens"
+    );
+}
+
+#[test]
+fn mid_pipeline_device_crash_recovers_byte_identical() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let report = device_churn_scenario(&ChurnConfig::default()).unwrap();
+    assert_recovered(&report, 1);
+}
+
+#[test]
+fn head_stage_device_crash_recovers_byte_identical() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let report = device_churn_scenario(&ChurnConfig {
+        crash_device: 2,
+        ..ChurnConfig::default()
+    })
+    .unwrap();
+    assert_recovered(&report, 2);
+}
+
+#[test]
+fn crashing_the_source_is_rejected_up_front() {
+    let err = device_churn_scenario(&ChurnConfig {
+        crash_device: 0,
+        ..ChurnConfig::default()
+    })
+    .unwrap_err();
+    assert!(err.to_string().contains("source"), "{err}");
+}
+
+#[test]
+fn jitter_below_timeout_never_triggers_failover() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    // Heartbeat jitter: the inter-stage link periodically collapses hard
+    // enough to stall frames for ~100 ms — well below the 450 ms timeout.
+    // The adaptive engine must ride it out: no failover, no divergence.
+    let manifest = Manifest::synthetic_tiny();
+    let weights = WeightStore::synthetic(&manifest, 0);
+    let (_svc, exec) = ExecService::start_sim(&manifest).unwrap();
+    let cluster = presets::tiny_demo(0);
+    let mut profiler = MeasuredProfiler::new(&manifest, &weights, exec.clone());
+    profiler.reps = 2;
+    let traces = profiler
+        .profile(
+            &cluster,
+            Workload {
+                prompt_len: 32,
+                gen_len: 24,
+                batch: 1,
+            },
+        )
+        .unwrap();
+    let n = manifest.config.n_layers + 2;
+    let plan = Plan {
+        objective: PlanObjective::Latency,
+        stages: vec![
+            Stage { device: 0, start: 0, end: 3 },
+            Stage { device: 2, start: 3, end: n },
+        ],
+        predicted_ms: 0.0,
+    };
+    let group = GroupRequest {
+        group_id: 0,
+        request_ids: vec![1],
+        tokens: (0..32).map(|i| i % 256).collect(),
+        batch: 1,
+        prompt_len: 32,
+        max_new_tokens: 24,
+    };
+    let cfg = EngineConfig {
+        time_scale: 1.0,
+        ..EngineConfig::default()
+    };
+
+    let mut static_engine =
+        Engine::build(&manifest, &weights, exec.clone(), &plan, &cluster, &cfg).unwrap();
+    let (rs, _) = static_engine.generate_sequential(&[group.clone()]).unwrap();
+    static_engine.shutdown().unwrap();
+
+    let dynamics = edgeshard::adaptive::NetworkDynamics::new().link(
+        0,
+        2,
+        ScheduleShape::Periodic {
+            period_ms: 120.0,
+            duty: 0.5,
+            high_mbps: 1000.0,
+            low_mbps: 0.05,
+        },
+    );
+    let mut adaptive = AdaptiveEngine::new(
+        &manifest,
+        &weights,
+        exec.clone(),
+        plan.clone(),
+        cluster.clone(),
+        traces,
+        AdaptiveConfig {
+            engine: cfg,
+            dynamics: Some(dynamics),
+            dynamics_tick_real_ms: 4.0,
+            heartbeat_timeout_ms: 450.0,
+            checkpoint_every: 6,
+            // wide hysteresis so the drift replanner stays quiet too —
+            // this test isolates the failover trigger
+            policy: TriggerPolicy {
+                degrade_factor: 50.0,
+                ..TriggerPolicy::default()
+            },
+            ..AdaptiveConfig::default()
+        },
+    );
+    let (ra, stats) = adaptive.generate_sequential(&[group]).unwrap();
+
+    assert!(
+        stats.failovers.is_empty(),
+        "jitter below the timeout triggered failover: {:?}",
+        stats.failovers
+    );
+    assert!(stats.checkpoints > 0, "checkpointing never ran under jitter");
+    assert_eq!(stats.tokens, 24);
+    assert_eq!(ra[0].tokens, rs[0].tokens, "jitter changed tokens");
+}
