@@ -42,6 +42,17 @@
 //!
 //! Decode is deterministic, so the recovered stream is byte-identical to
 //! an uninterrupted run — asserted end-to-end in `tests/device_churn.rs`.
+//!
+//! Every serving mode gets the same treatment: group serving recovers
+//! whole groups (`AdaptiveEngine::failover` via the group `StallView`),
+//! continuous batching recovers per **row**
+//! (`AdaptiveEngine::failover_slots` via
+//! [`crate::coordinator::scheduler::RunSnap`]s — checkpoint restore
+//! reconciles the admits/evicts/compacts that happened since the
+//! snapshot, uncovered rows re-prefill, and history replays as composed
+//! per-row steps).  A blame that turns out wrong — the recovery replay
+//! itself stalls — triggers one bounded re-detection round
+//! (`DETECTION_ROUNDS`) instead of a hard failure.
 
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
@@ -53,13 +64,16 @@ use super::dynamics::{DynamicsDriver, NetworkDynamics};
 use super::monitor::{LivenessDetector, Monitor};
 use super::replan::{Decision, MigrationDiff, Replanner, TriggerPolicy};
 use crate::cluster::{Cluster, DeviceLiveness, LiveCluster};
-use crate::coordinator::api::{GenResult, GroupRequest};
+use crate::coordinator::api::{GenRequest, GenResult, GroupRequest};
 use crate::coordinator::driver::{
-    drive_groups, send_decode, send_prefill, DriveHooks, DriveView, StallView,
+    drive_groups, drive_slots, send_decode, send_prefill, DriveHooks, DriveView, StallView,
 };
 use crate::coordinator::engine::{wire, EngineConfig, ObsSinks, Wired};
 use crate::coordinator::kvcache::{GroupCache, KvPool};
-use crate::coordinator::stage::{stage_decoders, KvEntry, StageExport, StageMsg};
+use crate::coordinator::scheduler::{ContinuousConfig, RunSnap};
+use crate::coordinator::stage::{
+    stage_decoders, KvEntry, Payload, StageExport, StageMsg, TokenOrigin,
+};
 use crate::metrics::Histogram;
 use crate::netsim::RoutedLink;
 use crate::pipeline::Strategy;
@@ -75,6 +89,16 @@ const MAX_MIGRATION_SLEEP_REAL_MS: f64 = 30_000.0;
 /// How long (real) to wait for each replayed token frame during failover
 /// recovery before declaring the rebuilt pipeline broken too.
 const REPLAY_REPLY_TIMEOUT: Duration = Duration::from_secs(20);
+
+/// Detection rounds one stall may consume: the initial verdict plus one
+/// bounded re-detection round.  A wrong blame leaves the real corpse
+/// inside the failover plan, the recovery replay stalls against it, and
+/// instead of hard-failing the engine re-suspects among the new plan's
+/// devices (the replay traffic refreshed every healthy device's
+/// heartbeat), re-solves over the remaining survivors, and re-replays —
+/// once.  Detection stays self-healing without risking an unbounded
+/// blame-replan-replay loop.
+const DETECTION_ROUNDS: usize = 2;
 
 /// Knobs of the adaptive engine.
 #[derive(Debug, Clone)]
@@ -156,9 +180,11 @@ pub struct FailoverRecord {
     /// Whether KV was restored from a periodic checkpoint (`false` =
     /// re-prefilled from token history).
     pub via_checkpoint: bool,
-    /// Groups restored from the checkpoint snapshot.
+    /// Groups (or continuous-batching runs) restored from the checkpoint
+    /// snapshot.
     pub restored_groups: usize,
-    /// Decode iterations replayed (and verified) from token history.
+    /// Frames replayed (and verified) from token history: decode
+    /// iterations, plus per-row re-prefill admissions in slot mode.
     pub replayed_iters: usize,
     /// KV bytes shipped from the checkpoint store to the new stages.
     pub restore_kv_bytes: u64,
@@ -211,8 +237,10 @@ fn sim_now_ms(t0: Instant, time_scale: f64) -> f64 {
 }
 
 /// One collected KV checkpoint: every stage's resident caches flattened
-/// (keyed by global decoder layer), plus each unfinished group's
-/// dispatched-iteration watermark at snapshot time.  Conceptually the
+/// (keyed by global decoder layer), plus the restore watermark captured
+/// when the probe entered the send stream — each unfinished group's
+/// dispatched-iteration high-water mark in group mode, each live run's
+/// composition snapshot ([`RunSnap`]) in slot mode.  Conceptually the
 /// snapshot lives on the source node — restoring it onto a new plan
 /// charges `source → device` freight.
 struct Checkpoint {
@@ -220,6 +248,11 @@ struct Checkpoint {
     /// Per group: highest iteration dispatched before the export probe
     /// (every KV write up to it is inside the snapshot).
     sent: HashMap<u64, usize>,
+    /// Per run: the slot composition and per-row folded history length
+    /// at probe time.  Admits/evicts/compacts that happen *after* the
+    /// probe are reconciled at restore against the run's then-current
+    /// composition (see [`AdaptiveEngine::failover_slots`]).
+    run_marks: HashMap<u64, RunSnap>,
 }
 
 /// An [`StageMsg::Export`] probe in flight: replies are collected
@@ -230,17 +263,44 @@ struct Checkpoint {
 struct PendingCheckpoint {
     reply_rx: mpsc::Receiver<StageExport>,
     sent: HashMap<u64, usize>,
+    run_marks: HashMap<u64, RunSnap>,
     /// Stage replies still outstanding.
     expect: usize,
     entries: Vec<KvEntry>,
 }
 
 /// Detection context handed from the hooks into
-/// [`AdaptiveEngine::failover`].
+/// [`AdaptiveEngine::failover`] / [`AdaptiveEngine::failover_slots`].
 struct FailoverCtx {
     at_iter: u64,
     dead_device: usize,
     stalled_ms: f64,
+}
+
+/// Outcome of one recovery attempt.  `ReplayStalled` is the retryable
+/// case: the rebuilt pipeline also went silent while replaying served
+/// history — evidence the liveness blame was wrong (the real corpse is
+/// still inside the new plan) or that another device has died since —
+/// and [`DriveHooks::on_stall`] answers it with a bounded re-detection
+/// round instead of a hard failure.
+enum FailoverAttempt {
+    Recovered(Box<FailoverRecord>),
+    ReplayStalled,
+}
+
+/// What one adaptive drive serves: pre-packed groups through
+/// [`drive_groups`], or raw requests through the continuous-batching
+/// slot loop ([`drive_slots`]).
+#[derive(Clone, Copy)]
+enum DriveMode<'q> {
+    Groups {
+        groups: &'q [GroupRequest],
+        window: usize,
+    },
+    Slots {
+        requests: &'q [GenRequest],
+        ccfg: &'q ContinuousConfig,
+    },
 }
 
 /// The adaptive engine's interposition on the shared generation driver:
@@ -261,6 +321,10 @@ struct AdaptiveHooks<'h, 'a> {
     max_migrations: usize,
     checkpoint_every: usize,
     stall_poll_real_ms: f64,
+    /// Continuous batching ([`drive_slots`]): views and stalls carry
+    /// [`RunSnap`]s instead of groups, and recovery goes through
+    /// [`AdaptiveEngine::failover_slots`].
+    slot_mode: bool,
     pending: Option<(Plan, MigrationDiff, f64)>,
     checkpoint: Option<Checkpoint>,
     pending_ck: Option<PendingCheckpoint>,
@@ -303,6 +367,7 @@ impl AdaptiveHooks<'_, '_> {
             reply_rx,
             // the watermark is the probe's position in the send stream
             sent: view.groups.iter().map(|g| (g.group_id, g.sent)).collect(),
+            run_marks: view.runs.iter().map(|r| (r.run, r.clone())).collect(),
             expect: self.eng.plan.n_stages(),
             entries: Vec::new(),
         });
@@ -332,6 +397,7 @@ impl AdaptiveHooks<'_, '_> {
             self.checkpoint = Some(Checkpoint {
                 entries: done.entries,
                 sent: done.sent,
+                run_marks: done.run_marks,
             });
             self.checkpoints_taken += 1;
         }
@@ -350,11 +416,21 @@ impl DriveHooks for AdaptiveHooks<'_, '_> {
                 || self.pending_ck.is_some())
     }
 
+    fn wants_run_snapshot(&self, received: u64) -> bool {
+        // only a checkpoint start consumes the deep per-row snapshot
+        self.checkpoint_due(received)
+    }
+
     fn after_token(&mut self, wired: &Wired, view: &DriveView) -> Result<bool> {
         self.poll_checkpoint();
-        // both control loops wait until everything prefilled (a snapshot
-        // of a half-prefilled group would be unreplayable)
-        if !view.all_prefilled {
+        // In group mode both control loops wait until everything
+        // prefilled (a snapshot of a half-prefilled group would be
+        // unreplayable).  Slot mode has no such gate: an admission sent
+        // before the probe is fully inside the snapshot (FIFO), the
+        // restore reconciles composition changes, and a migration
+        // barrier drains every admission anyway — and with continuous
+        // admissions the gate would rarely open.
+        if !self.slot_mode && !view.all_prefilled {
             return Ok(false);
         }
         if self.checkpoint_due(view.received) {
@@ -456,60 +532,131 @@ impl DriveHooks for AdaptiveHooks<'_, '_> {
         self.pending = None;
         self.pending_ck = None;
 
-        // replan over the survivors on the observed state; if the pool
-        // has become unplannable, retract every verdict but the newest
-        // (an earlier blame may have been wrong) and retry once
-        let obs_cluster = self.monitor.observed_cluster();
-        let obs_traces = self
-            .monitor
-            .observed_traces(&self.eng.base_traces, &self.eng.plan);
-        let survivors = |det: &LivenessDetector| -> Vec<usize> {
-            (0..obs_cluster.len()).filter(|d| !det.is_dead(*d)).collect()
+        // In-flight KV these batches must fit on any failover plan
+        // (run batches are the conservative fully-padded bound).
+        let batches: Vec<usize> = if self.slot_mode {
+            view.runs.iter().map(|r| r.batch).collect()
+        } else {
+            view.groups.iter().map(|g| g.req.batch).collect()
         };
-        let new_plan = match self
-            .replanner
-            .solve_over(&obs_traces, &obs_cluster, &survivors(&self.detector))
-        {
-            Ok(p) => p,
-            Err(first_err) => {
-                self.detector.demote_to(1);
-                self.replanner
-                    .solve_over(&obs_traces, &obs_cluster, &survivors(&self.detector))
-                    .map_err(|e| {
-                        anyhow!(
-                            "no feasible plan on surviving devices after losing d{dead}: \
-                             {first_err}; retry excluding only d{dead}: {e}"
-                        )
-                    })?
-            }
-        };
-        let batches: Vec<usize> = view.groups.iter().map(|g| g.req.batch).collect();
-        anyhow::ensure!(
-            self.eng.preload_fits(&new_plan, &batches),
-            "failover plan {} cannot hold the in-flight KV within the per-stage budget",
-            new_plan.describe()
-        );
 
-        let record = self.eng.failover(
-            wired,
-            self.sinks,
-            self.shared_links,
-            &new_plan,
-            view,
-            self.checkpoint.as_ref(),
-            FailoverCtx {
+        let mut last_dead = dead;
+        for round in 0..DETECTION_ROUNDS {
+            // replan over the survivors on the observed state (refreshed
+            // each round — a failed replay produced new observations); if
+            // the pool has become unplannable, retract every verdict but
+            // the newest (an earlier blame may have been wrong) and retry
+            let obs_cluster = self.monitor.observed_cluster();
+            let obs_traces = self
+                .monitor
+                .observed_traces(&self.eng.base_traces, &self.eng.plan);
+            let survivors = |det: &LivenessDetector| -> Vec<usize> {
+                (0..obs_cluster.len()).filter(|d| !det.is_dead(*d)).collect()
+            };
+            let new_plan = match self
+                .replanner
+                .solve_over(&obs_traces, &obs_cluster, &survivors(&self.detector))
+            {
+                Ok(p) => p,
+                Err(first_err) => {
+                    self.detector.demote_to(1);
+                    self.replanner
+                        .solve_over(&obs_traces, &obs_cluster, &survivors(&self.detector))
+                        .map_err(|e| {
+                            anyhow!(
+                                "no feasible plan on surviving devices after losing \
+                                 d{last_dead}: {first_err}; retry excluding only \
+                                 d{last_dead}: {e}"
+                            )
+                        })?
+                }
+            };
+            anyhow::ensure!(
+                self.eng.preload_fits(&new_plan, &batches),
+                "failover plan {} cannot hold the in-flight KV within the per-stage budget",
+                new_plan.describe()
+            );
+
+            let ctx = FailoverCtx {
                 at_iter: self.received,
-                dead_device: dead,
+                dead_device: last_dead,
                 stalled_ms: stalled_sim_ms,
-            },
-        )?;
-        let baseline = self
-            .replanner
-            .predict_ms(&new_plan, &obs_traces, &obs_cluster);
-        self.replanner.adopt(baseline, now_ms);
-        self.failovers.push(record);
-        self.eng.plan = new_plan;
-        Ok(true)
+            };
+            let attempt = if self.slot_mode {
+                self.eng.failover_slots(
+                    wired,
+                    self.sinks,
+                    self.shared_links,
+                    &new_plan,
+                    &view.runs,
+                    self.checkpoint.as_ref(),
+                    ctx,
+                )?
+            } else {
+                self.eng.failover(
+                    wired,
+                    self.sinks,
+                    self.shared_links,
+                    &new_plan,
+                    view,
+                    self.checkpoint.as_ref(),
+                    ctx,
+                )?
+            };
+            match attempt {
+                FailoverAttempt::Recovered(record) => {
+                    let baseline = self
+                        .replanner
+                        .predict_ms(&new_plan, &obs_traces, &obs_cluster);
+                    self.replanner.adopt(baseline, sim_now_ms(self.t0, self.scale));
+                    self.failovers.push(*record);
+                    self.eng.plan = new_plan;
+                    return Ok(true);
+                }
+                FailoverAttempt::ReplayStalled => {
+                    anyhow::ensure!(
+                        round + 1 < DETECTION_ROUNDS,
+                        "failover replay onto {} stalled again after {} detection rounds \
+                         (another device down?)",
+                        new_plan.describe(),
+                        DETECTION_ROUNDS
+                    );
+                    // The blame was wrong (or another device died): the
+                    // rebuilt pipeline is stuck too.  Replay traffic
+                    // refreshed every healthy device's heartbeat, so
+                    // re-suspect among the new plan's devices and go
+                    // again — `wired` now holds the stuck attempt, which
+                    // the next round abandons like any corpse-bearing
+                    // pipeline.
+                    self.monitor.drain_at(sim_now_ms(self.t0, self.scale));
+                    let next = self
+                        .detector
+                        .suspect(
+                            &new_plan.devices(),
+                            self.monitor,
+                            // the replay timeout IS the stall evidence;
+                            // pass the detector's own gate value so the
+                            // ranking, not the clock, decides
+                            self.detector.timeout_ms.max(stalled_sim_ms),
+                        )
+                        .with_context(|| {
+                            format!(
+                                "replay onto {} stalled but every device of the plan has \
+                                 been heard from — cannot re-blame",
+                                new_plan.describe()
+                            )
+                        })?;
+                    anyhow::ensure!(
+                        next != source,
+                        "re-detection blames source device {source} after a stalled \
+                         failover replay — nothing to fail over to"
+                    );
+                    self.detector.mark_dead(next);
+                    last_dead = next;
+                }
+            }
+        }
+        unreachable!("detection loop returns on recovery and errors on exhaustion")
     }
 }
 
@@ -552,7 +699,7 @@ impl<'a> AdaptiveEngine<'a> {
         &mut self,
         groups: &[GroupRequest],
     ) -> Result<(Vec<GenResult>, AdaptiveStats)> {
-        self.run(groups, 1)
+        self.run(DriveMode::Groups { groups, window: 1 })
     }
 
     /// Serve all groups as a no-bubble micro-batched pipeline.
@@ -560,7 +707,24 @@ impl<'a> AdaptiveEngine<'a> {
         &mut self,
         groups: &[GroupRequest],
     ) -> Result<(Vec<GenResult>, AdaptiveStats)> {
-        self.run(groups, groups.len().max(1))
+        self.run(DriveMode::Groups {
+            groups,
+            window: groups.len().max(1),
+        })
+    }
+
+    /// Serve raw requests with **continuous batching** under the full
+    /// adaptive stack: the iteration-level slot scheduler runs inside the
+    /// same control loop as group serving — periodic KV checkpoints,
+    /// drift replanning with a drain-barrier migration, and device-loss
+    /// failover with per-row checkpoint restore + history replay
+    /// (`AdaptiveEngine::failover_slots`).
+    pub fn generate_continuous(
+        &mut self,
+        requests: &[GenRequest],
+        ccfg: &ContinuousConfig,
+    ) -> Result<(Vec<GenResult>, AdaptiveStats)> {
+        self.run(DriveMode::Slots { requests, ccfg })
     }
 
     /// Whether every stage of `plan` could hold the KV caches of groups
@@ -580,11 +744,7 @@ impl<'a> AdaptiveEngine<'a> {
         })
     }
 
-    fn run(
-        &mut self,
-        groups: &[GroupRequest],
-        window: usize,
-    ) -> Result<(Vec<GenResult>, AdaptiveStats)> {
+    fn run(&mut self, mode: DriveMode<'_>) -> Result<(Vec<GenResult>, AdaptiveStats)> {
         let driver_cfg =
             crate::coordinator::engine::driver_cfg(self.manifest, &self.plan, &self.cfg.engine);
         let believed = self.live.snapshot();
@@ -621,7 +781,24 @@ impl<'a> AdaptiveEngine<'a> {
             )
         });
 
-        let batch = groups.iter().map(|g| g.batch).max().unwrap_or(1);
+        // the batch size planning predictions assume: the largest group
+        // in flight, or the largest batch a run may actually reach —
+        // compiled sizes clipped by the configured cap, mirroring
+        // `SlotScheduler::new` (an uncapped maximum would skew every
+        // hysteresis baseline toward iterations that never occur)
+        let batch = match mode {
+            DriveMode::Groups { groups, .. } => groups.iter().map(|g| g.batch).max().unwrap_or(1),
+            DriveMode::Slots { ccfg, .. } => {
+                let cap = ccfg.max_batch.unwrap_or(usize::MAX);
+                driver_cfg
+                    .batch_sizes
+                    .iter()
+                    .copied()
+                    .filter(|&b| b <= cap)
+                    .max()
+                    .unwrap_or(1)
+            }
+        };
         let baseline = match self.cfg.objective {
             PlanObjective::Latency => {
                 sequential_latency_ms(&self.plan, &self.base_traces, &believed)
@@ -653,6 +830,7 @@ impl<'a> AdaptiveEngine<'a> {
             max_migrations,
             checkpoint_every,
             stall_poll_real_ms,
+            slot_mode: matches!(mode, DriveMode::Slots { .. }),
             pending: None,
             checkpoint: None,
             pending_ck: None,
@@ -661,16 +839,21 @@ impl<'a> AdaptiveEngine<'a> {
             failovers: Vec::new(),
             received: 0,
         };
-        // The shared drive loop owns admission, stats and the drain
+        // The shared drive loops own admission, stats and the drain
         // barrier; everything adaptive happens inside the hooks.
-        let drive = drive_groups(
-            &mut wired,
-            &driver_cfg,
-            groups,
-            window,
-            Strategy::NoBubble,
-            &mut hooks,
-        );
+        let drive = match mode {
+            DriveMode::Groups { groups, window } => drive_groups(
+                &mut wired,
+                &driver_cfg,
+                groups,
+                window,
+                Strategy::NoBubble,
+                &mut hooks,
+            ),
+            DriveMode::Slots { requests, ccfg } => {
+                drive_slots(&mut wired, &driver_cfg, requests, ccfg, &mut hooks)
+            }
+        };
         let migrations = std::mem::take(&mut hooks.migrations);
         let failovers = std::mem::take(&mut hooks.failovers);
         let checkpoints = hooks.checkpoints_taken;
@@ -897,6 +1080,51 @@ impl<'a> AdaptiveEngine<'a> {
         }
     }
 
+    /// Wire `new_plan` over `cluster_now` and swap it in, **abandoning**
+    /// the pipeline previously behind `wired`.  Unlike
+    /// [`AdaptiveEngine::migrate`] this never joins the old stage threads
+    /// — a dead host cannot acknowledge a shutdown.  The shared link set
+    /// is replaced first (so the dynamics driver stops re-shaping the old
+    /// links), then the old links are forced open so trapped frames flush
+    /// and every detached thread exits; any late token the corpse still
+    /// produces lands in the dropped channel.
+    #[allow(clippy::too_many_arguments)]
+    fn rewire_abandoned(
+        &self,
+        wired: &mut Wired,
+        sinks: &ObsSinks,
+        shared_links: &Arc<Mutex<Vec<RoutedLink>>>,
+        new_plan: &Plan,
+        cluster_now: &Cluster,
+        preloads: Vec<Vec<(u64, GroupCache)>>,
+    ) -> Result<()> {
+        let fresh = wire(
+            self.manifest,
+            self.weights,
+            self.exec.clone(),
+            new_plan,
+            cluster_now,
+            &self.cfg.engine,
+            Some(sinks),
+            self.liveness.as_ref(),
+            preloads,
+        )
+        .with_context(|| format!("wiring failover plan {}", new_plan.describe()))?;
+        let old = std::mem::replace(wired, fresh);
+        *shared_links.lock().expect("links lock poisoned") = wired.links.clone();
+        // Flushing can emit late TransferObs with stall-sized timings,
+        // but only for links that were actually *down* — i.e. links
+        // touching the dead device, whose estimates the detector has
+        // already excluded from planning.  Healthy↔healthy links never
+        // trap frames past normal pacing, so survivor estimates stay
+        // clean.
+        for rl in &old.links {
+            rl.link.set_bandwidth(f64::INFINITY);
+        }
+        drop(old);
+        Ok(())
+    }
+
     /// Execute one failover onto `new_plan`: abandon the dead pipeline,
     /// rewire over the survivors, restore KV from `checkpoint` for every
     /// group the snapshot covers, and replay the folded-but-unrestored
@@ -905,11 +1133,9 @@ impl<'a> AdaptiveEngine<'a> {
     /// re-prefilled here; groups without a first token are left to the
     /// driver, which re-prefills them live after this returns.
     ///
-    /// Unlike [`AdaptiveEngine::migrate`] this never joins the old stage
-    /// threads — a dead host cannot acknowledge a shutdown.  The old
-    /// pipeline is dropped (threads detach), its links forced open so
-    /// trapped frames flush and every detached thread exits; any late
-    /// token it still produces lands in the dropped channel.
+    /// Returns [`FailoverAttempt::ReplayStalled`] — retryable, see
+    /// [`DETECTION_ROUNDS`] — when the rebuilt pipeline goes silent
+    /// during the recovery replay.
     #[allow(clippy::too_many_arguments)]
     fn failover(
         &self,
@@ -920,7 +1146,7 @@ impl<'a> AdaptiveEngine<'a> {
         view: &StallView<'_>,
         checkpoint: Option<&Checkpoint>,
         ctx: FailoverCtx,
-    ) -> Result<FailoverRecord> {
+    ) -> Result<FailoverAttempt> {
         let cluster_now = self.live.snapshot();
         let source = cluster_now.source;
 
@@ -953,34 +1179,8 @@ impl<'a> AdaptiveEngine<'a> {
             (p, l, bytes)
         };
 
-        // 2. wire the replacement, then abandon the dead pipeline: swap
-        //    the shared link set first (so the dynamics driver stops
-        //    re-shaping the old links), then force the old links open so
-        //    trapped frames flush and the detached threads exit
-        let fresh = wire(
-            self.manifest,
-            self.weights,
-            self.exec.clone(),
-            new_plan,
-            &cluster_now,
-            &self.cfg.engine,
-            Some(sinks),
-            self.liveness.as_ref(),
-            preloads,
-        )
-        .with_context(|| format!("wiring failover plan {}", new_plan.describe()))?;
-        let old = std::mem::replace(wired, fresh);
-        *shared_links.lock().expect("links lock poisoned") = wired.links.clone();
-        // Flushing can emit late TransferObs with stall-sized timings,
-        // but only for links that were actually *down* — i.e. links
-        // touching the dead device, whose estimates the detector has
-        // already excluded from planning.  Healthy↔healthy links never
-        // trap frames past normal pacing, so survivor estimates stay
-        // clean.
-        for rl in &old.links {
-            rl.link.set_bandwidth(f64::INFINITY);
-        }
-        drop(old);
+        // 2. wire the replacement and abandon the dead pipeline
+        self.rewire_abandoned(wired, sinks, shared_links, new_plan, &cluster_now, preloads)?;
 
         // 3. charge the restore freight (per-link shipments overlap)
         let pause_ms = link_bytes
@@ -1016,12 +1216,11 @@ impl<'a> AdaptiveEngine<'a> {
         }
         let replayed_iters = expected.len();
         while !expected.is_empty() {
-            let tok = wired.token_rx.recv_timeout(REPLAY_REPLY_TIMEOUT).map_err(|_| {
-                anyhow!(
-                    "failover replay onto {} stalled (another device down?)",
-                    new_plan.describe()
-                )
-            })?;
+            let Ok(tok) = wired.token_rx.recv_timeout(REPLAY_REPLY_TIMEOUT) else {
+                // the rebuilt pipeline is stuck too — retryable (the
+                // blame was likely wrong, or another device just died)
+                return Ok(FailoverAttempt::ReplayStalled);
+            };
             let want = expected.remove(&(tok.group, tok.iter)).with_context(|| {
                 format!(
                     "unexpected frame (group {}, iter {}) during failover replay",
@@ -1036,7 +1235,7 @@ impl<'a> AdaptiveEngine<'a> {
             );
         }
 
-        Ok(FailoverRecord {
+        Ok(FailoverAttempt::Recovered(Box::new(FailoverRecord {
             at_iter: ctx.at_iter,
             dead_device: ctx.dead_device,
             from_plan: self.plan.describe(),
@@ -1047,7 +1246,263 @@ impl<'a> AdaptiveEngine<'a> {
             replayed_iters,
             restore_kv_bytes,
             pause_ms,
-        })
+        })))
+    }
+
+    /// Execute one failover of the **continuous-batching** path onto
+    /// `new_plan`.  The run composition is mutable between checkpoints —
+    /// rows are admitted, retired and compacted per iteration — so
+    /// recovery is per **row**, not per group:
+    ///
+    /// 1. match each run's checkpoint composition mark against its
+    ///    *current* composition (requests matched by id — a compact may
+    ///    have moved a row to another slot).  A run restores from the
+    ///    checkpoint iff at least one marked row is still decoding;
+    /// 2. rewire over the survivors with the restorable run caches
+    ///    preloaded at their checkpoint shape, and reconcile each to the
+    ///    current shape with one [`StageMsg::Compact`] (surviving rows
+    ///    move mark-slot → current-slot, rows retired since are dropped
+    ///    and their bytes freed);
+    /// 3. re-prefill every decoding row the restore does not cover with
+    ///    a batch-1 [`StageMsg::Admit`] (its reply must equal the row's
+    ///    served first token);
+    /// 4. replay the remaining history as composed [`StageMsg::Step`]s —
+    ///    each frame advances every behind row by one at its own absolute
+    ///    position, feeding *recorded* tokens, so replay streams through
+    ///    the pipeline back-to-back — verifying every reply byte-for-byte
+    ///    against what was already served.
+    ///
+    /// Rows whose admission is still in flight are left to the driver:
+    /// [`crate::coordinator::scheduler::SlotScheduler::on_failover`]
+    /// re-queues them live (their TTFT is still unmeasured).  Over-
+    /// coverage from a step that was in flight when the checkpoint probe
+    /// passed is harmless: KV rewrites are idempotent.
+    #[allow(clippy::too_many_arguments)]
+    fn failover_slots(
+        &self,
+        wired: &mut Wired,
+        sinks: &ObsSinks,
+        shared_links: &Arc<Mutex<Vec<RoutedLink>>>,
+        new_plan: &Plan,
+        runs: &[RunSnap],
+        checkpoint: Option<&Checkpoint>,
+        ctx: FailoverCtx,
+    ) -> Result<FailoverAttempt> {
+        let cluster_now = self.live.snapshot();
+        let source = cluster_now.source;
+        let prompt_len = self.manifest.config.prefill_len;
+
+        // 1. per run: which checkpoint-marked rows are still decoding?
+        //    `survivors` maps (mark slot → current slot) with the row's
+        //    folded-history length at the mark.
+        struct RunRecovery<'r> {
+            snap: &'r RunSnap,
+            /// (mark slot, current slot, folded at mark) per survivor.
+            survivors: Vec<(usize, usize, usize)>,
+        }
+        let mut recoveries: Vec<RunRecovery<'_>> = Vec::new();
+        let mut restore_runs: Vec<u64> = Vec::new();
+        for snap in runs {
+            let mut survivors = Vec::new();
+            if let Some(mark) = checkpoint.and_then(|ck| ck.run_marks.get(&snap.run)) {
+                for mrow in &mark.rows {
+                    if let Some(cur) = snap
+                        .rows
+                        .iter()
+                        .find(|r| r.req_id == mrow.req_id && !r.prefilling)
+                    {
+                        survivors.push((mrow.slot, cur.slot, mrow.generated.len()));
+                    }
+                }
+            }
+            if !survivors.is_empty() {
+                restore_runs.push(snap.run);
+            }
+            recoveries.push(RunRecovery { snap, survivors });
+        }
+
+        // 2. route the restorable caches onto the new plan (the snapshot
+        //    lives on the source node: restoring charges source → device
+        //    freight), then rewire and abandon the dead pipeline
+        let (preloads, link_bytes, restore_kv_bytes) = if restore_runs.is_empty() {
+            (Vec::new(), HashMap::new(), 0u64)
+        } else {
+            let ck = checkpoint.expect("restore_runs implies a checkpoint");
+            let flat: Vec<(usize, KvEntry)> = ck
+                .entries
+                .iter()
+                .filter(|e| restore_runs.contains(&e.group))
+                .map(|e| (source, e.clone()))
+                .collect();
+            let bytes: u64 = flat.iter().map(|(_, e)| e.k.bytes() + e.v.bytes()).sum();
+            let (p, l) = self.route_exports(&flat, new_plan)?;
+            (p, l, bytes)
+        };
+        self.rewire_abandoned(wired, sinks, shared_links, new_plan, &cluster_now, preloads)?;
+
+        // 3. charge the restore freight (per-link shipments overlap)
+        let pause_ms = link_bytes
+            .iter()
+            .map(|(&(f, t), &b)| cluster_now.comm_ms(f, t, b))
+            .fold(0.0, f64::max);
+        self.charge_pause(pause_ms);
+
+        // 4. reconcile + replay.  All frames stream first (FIFO makes a
+        //    run's Compact precede its Admits precede its Steps), then
+        //    every reply is verified against served history.
+        let mut expected_admits: HashMap<(u64, usize), i32> = HashMap::new();
+        let mut expected_steps: HashMap<(u64, usize), Vec<(usize, i32)>> = HashMap::new();
+        let mut replayed_iters = 0usize;
+        for rec in &recoveries {
+            let snap = rec.snap;
+            if !rec.survivors.is_empty() {
+                // reshape the restored cache (checkpoint batch) to the
+                // current composition: survivors move, everything else —
+                // rows retired since the mark, slots now re-prefilling —
+                // is dropped and its bytes freed
+                let moves: Vec<(usize, usize)> =
+                    rec.survivors.iter().map(|&(from, to, _)| (from, to)).collect();
+                let msg = StageMsg::Compact {
+                    run: snap.run,
+                    new_batch: snap.batch,
+                    moves,
+                };
+                let bytes = msg.wire_bytes();
+                wired.to_first.send(msg, bytes)?;
+            }
+            // replay start per restored slot: everything folded by the
+            // mark is inside the snapshot; generated[0] never replays
+            // (a row's prefill is either in the snapshot or re-admitted)
+            let restored_start: HashMap<usize, usize> = rec
+                .survivors
+                .iter()
+                .map(|&(_, to, folded)| (to, folded.max(1)))
+                .collect();
+            // per-row replay cursors over the rows currently decoding
+            let mut cursors: Vec<(usize, usize, &Vec<i32>)> = Vec::new();
+            for row in snap.rows.iter().filter(|r| !r.prefilling) {
+                anyhow::ensure!(
+                    !row.generated.is_empty(),
+                    "run {} slot {}: decoding row with empty history",
+                    snap.run,
+                    row.slot
+                );
+                let start = match restored_start.get(&row.slot) {
+                    Some(&s) => s,
+                    None => {
+                        // not covered by the restore: re-prefill the row
+                        // into its current slot and verify its first token
+                        let msg = StageMsg::Admit {
+                            run: snap.run,
+                            slot: row.slot,
+                            run_batch: snap.batch,
+                            prompt_len,
+                            payload: Payload::Tokens(row.prompt.clone()),
+                        };
+                        let bytes = msg.wire_bytes();
+                        wired.to_first.send(msg, bytes)?;
+                        expected_admits.insert((snap.run, row.slot), row.generated[0]);
+                        replayed_iters += 1;
+                        1
+                    }
+                };
+                if start < row.generated.len() {
+                    cursors.push((row.slot, start, &row.generated));
+                }
+            }
+            // composed replay steps: advance every behind row one
+            // iteration per frame, each at its own absolute position
+            let mut iter_tag = 0usize;
+            loop {
+                let mut pos = vec![-1i32; snap.batch];
+                let mut toks = vec![0i32; snap.batch];
+                let mut expect: Vec<(usize, i32)> = Vec::new();
+                for (slot, j, hist) in cursors.iter_mut() {
+                    if *j >= hist.len() {
+                        continue;
+                    }
+                    pos[*slot] = (prompt_len + *j - 1) as i32;
+                    toks[*slot] = hist[*j - 1];
+                    expect.push((*slot, hist[*j]));
+                    *j += 1;
+                }
+                if expect.is_empty() {
+                    break;
+                }
+                let msg = StageMsg::Step {
+                    run: snap.run,
+                    iter: iter_tag,
+                    batch: snap.batch,
+                    pos,
+                    payload: Payload::Tokens(toks),
+                };
+                let bytes = msg.wire_bytes();
+                wired.to_first.send(msg, bytes)?;
+                expected_steps.insert((snap.run, iter_tag), expect);
+                replayed_iters += 1;
+                iter_tag += 1;
+            }
+        }
+
+        // 5. collect and verify every reply
+        let total = expected_admits.len() + expected_steps.len();
+        for _ in 0..total {
+            let Ok(tok) = wired.token_rx.recv_timeout(REPLAY_REPLY_TIMEOUT) else {
+                return Ok(FailoverAttempt::ReplayStalled);
+            };
+            match tok.origin {
+                TokenOrigin::Admit { slot } => {
+                    let want =
+                        expected_admits.remove(&(tok.group, slot)).with_context(|| {
+                            format!(
+                                "unexpected admit reply (run {}, slot {slot}) during \
+                                 failover replay",
+                                tok.group
+                            )
+                        })?;
+                    anyhow::ensure!(
+                        tok.tokens.len() == 1 && tok.tokens[0] == want,
+                        "failover re-prefill diverged from served history at run {} \
+                         slot {slot}",
+                        tok.group
+                    );
+                }
+                TokenOrigin::Step => {
+                    let want =
+                        expected_steps.remove(&(tok.group, tok.iter)).with_context(|| {
+                            format!(
+                                "unexpected step reply (run {}, iter {}) during failover \
+                                 replay",
+                                tok.group, tok.iter
+                            )
+                        })?;
+                    for (slot, w) in want {
+                        anyhow::ensure!(
+                            tok.tokens.get(slot) == Some(&w),
+                            "failover replay diverged from served history at run {} \
+                             slot {slot}",
+                            tok.group
+                        );
+                    }
+                }
+                TokenOrigin::Group => {
+                    anyhow::bail!("classic group token during continuous failover replay")
+                }
+            }
+        }
+
+        Ok(FailoverAttempt::Recovered(Box::new(FailoverRecord {
+            at_iter: ctx.at_iter,
+            dead_device: ctx.dead_device,
+            from_plan: self.plan.describe(),
+            to_plan: new_plan.describe(),
+            stalled_ms: ctx.stalled_ms,
+            via_checkpoint: !restore_runs.is_empty(),
+            restored_groups: restore_runs.len(),
+            replayed_iters,
+            restore_kv_bytes,
+            pause_ms,
+        })))
     }
 }
 

@@ -323,9 +323,14 @@ impl Monitor {
 ///
 /// A verdict is a heuristic, not ground truth: failover stays correct
 /// under a wrong blame (the rebuilt pipeline re-derives every token
-/// deterministically), it just costs another detection round — which is
-/// why [`LivenessDetector::demote_to`] lets the engine retract stale
-/// verdicts when the surviving pool becomes unplannable.
+/// deterministically), it just costs another detection round.  The
+/// engine runs that round itself: a wrong blame surfaces as the
+/// recovery replay stalling against the corpse-bearing plan, after
+/// which it re-runs [`LivenessDetector::suspect`] over the *new* plan's
+/// devices (the replay traffic refreshed every healthy heartbeat) and
+/// re-solves — bounded to one retry — while
+/// [`LivenessDetector::demote_to`] retracts stale verdicts whenever the
+/// surviving pool becomes unplannable.
 #[derive(Debug, Clone)]
 pub struct LivenessDetector {
     /// Simulated ms of pipeline stall before a device may be declared dead.

@@ -28,6 +28,14 @@
 //! exact token stream of an uninterrupted run.  A static engine cannot
 //! serve this trace at all (it would block forever on the dead host), so
 //! the comparison is adaptive-under-churn vs. static-on-a-clean-network.
+//!
+//! [`continuous_churn_scenario`] repeats the crash experiment on the
+//! **continuous-batching** path: a ragged request mix keeps the slot
+//! scheduler admitting, retiring and recomposing rows, the crash lands
+//! mid-run, and recovery is per row — checkpoint restore reconciled
+//! against the mutated composition in one run, per-row re-prefill in the
+//! other — with the same byte-identical anchor against a clean
+//! continuous control run.
 
 use anyhow::{Context, Result};
 use std::sync::{Arc, Mutex};
@@ -35,7 +43,8 @@ use std::sync::{Arc, Mutex};
 use super::dynamics::{DeviceShape, DynamicsDriver, NetworkDynamics, ScheduleShape};
 use super::engine::{AdaptiveConfig, AdaptiveEngine, FailoverRecord, MigrationRecord};
 use crate::cluster::{Cluster, Device, DeviceClass, LiveCluster};
-use crate::coordinator::api::{GenResult, GroupRequest};
+use crate::coordinator::api::{GenRequest, GenResult, GroupRequest};
+use crate::coordinator::scheduler::ContinuousConfig;
 use crate::coordinator::{Engine, EngineConfig};
 use crate::planner::latency::algo1;
 use crate::planner::{Plan, PlanObjective, Stage};
@@ -481,6 +490,276 @@ pub fn device_churn_scenario(cfg: &ChurnConfig) -> Result<ChurnReport> {
         reprefilled_final_plan,
         static_clean,
     })
+}
+
+/// Knobs of the **continuous-batching** churn experiment (defaults are
+/// what the gating e2e tests in `tests/device_churn.rs` run).
+#[derive(Debug, Clone)]
+pub struct ContinuousChurnConfig {
+    /// Per-request generation lengths.  A ragged mix keeps the slot
+    /// scheduler churning — rows admit, retire and recompose throughout
+    /// the run — so the checkpoint restore must reconcile a composition
+    /// that mutated since the snapshot.
+    pub gen_lens: Vec<usize>,
+    /// Slot-scheduler pipeline depth (independent runs).
+    pub runs: usize,
+    pub max_batch: Option<usize>,
+    pub initial_batch: Option<usize>,
+    /// Which device crashes (never 0 — the source is pinned).
+    pub crash_device: usize,
+    /// When it crashes, simulated ms after serving starts.
+    pub crash_at_ms: f64,
+    pub heartbeat_timeout_ms: f64,
+    /// Checkpoint cadence (tokens) for the checkpoint-restore run; the
+    /// re-prefill run always disables checkpointing.
+    pub checkpoint_every: usize,
+    pub time_scale: f64,
+    pub seed: u64,
+}
+
+impl Default for ContinuousChurnConfig {
+    fn default() -> Self {
+        // Same timing regime as `ChurnConfig`: per-hop latency floors an
+        // iteration near 10 ms, so 192 total tokens over two runs keep
+        // the scheduler busy well past the 400 ms crash in any build
+        // profile, and the 4-token checkpoint cadence guarantees a
+        // committed snapshot by then.  Capacity (2 runs × batch 2) is
+        // half the request count, so admissions and retirements straddle
+        // whichever checkpoint ends up being the last one.
+        ContinuousChurnConfig {
+            gen_lens: vec![8, 24, 40, 40, 24, 8, 16, 32],
+            runs: 2,
+            max_batch: Some(2),
+            initial_batch: None,
+            crash_device: 1,
+            crash_at_ms: 400.0,
+            heartbeat_timeout_ms: 450.0,
+            checkpoint_every: 4,
+            time_scale: 1.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Everything the continuous-batching churn experiment produced.
+#[derive(Debug)]
+pub struct ContinuousChurnReport {
+    pub initial_plan: String,
+    /// Adaptive continuous run recovering via checkpoint restore +
+    /// per-row replay.
+    pub checkpointed: RunSummary,
+    pub checkpointed_failovers: Vec<FailoverRecord>,
+    pub checkpointed_final_plan: String,
+    pub checkpoints_taken: u64,
+    /// Adaptive continuous run recovering via per-row re-prefill.
+    pub reprefilled: RunSummary,
+    pub reprefilled_failovers: Vec<FailoverRecord>,
+    pub reprefilled_final_plan: String,
+    /// The control: a static engine serving the same requests
+    /// continuously on a clean network.
+    pub static_clean: RunSummary,
+}
+
+fn continuous_requests(cfg: &ContinuousChurnConfig, vocab: usize, prompt_len: usize) -> Vec<GenRequest> {
+    cfg.gen_lens
+        .iter()
+        .enumerate()
+        .map(|(r, &gen)| GenRequest {
+            id: 1 + r as u64,
+            prompt: (0..prompt_len)
+                .map(|i| ((i * 7 + r * 13 + cfg.seed as usize) % vocab) as i32)
+                .collect(),
+            max_new_tokens: gen,
+        })
+        .collect()
+}
+
+/// Run the continuous-batching device-crash experiment: the slot
+/// scheduler serves a ragged mix, a stage host dies mid-run, and the
+/// adaptive engine must fail over with per-row recovery — once via
+/// checkpoint restore (composition reconciled against the snapshot),
+/// once via re-prefill — and still emit per-request token streams
+/// byte-identical to an uninterrupted continuous run.
+pub fn continuous_churn_scenario(cfg: &ContinuousChurnConfig) -> Result<ContinuousChurnReport> {
+    anyhow::ensure!(
+        cfg.crash_device != 0,
+        "crash_device 0 is the source — there is nothing to fail over to"
+    );
+    anyhow::ensure!(!cfg.gen_lens.is_empty(), "no requests configured");
+    // compiled batches: admissions prefill at 1; 2 and 4 give the slot
+    // scheduler real grow/shrink decisions
+    let manifest = Manifest::synthetic(mini_config(), vec![1, 2, 4]);
+    let weights = WeightStore::synthetic(&manifest, cfg.seed);
+    let (_svc, exec) = ExecService::start_sim(&manifest)?;
+
+    let workload = Workload {
+        prompt_len: manifest.config.prefill_len,
+        gen_len: cfg.gen_lens.iter().copied().max().unwrap_or(1),
+        batch: 4,
+    };
+    let cluster = mini_cluster(&manifest, workload);
+
+    let mut profiler = MeasuredProfiler::new(&manifest, &weights, exec.clone());
+    profiler.reps = 2;
+    let traces = profiler.profile(&cluster, workload)?;
+
+    let plan = three_stage_plan(manifest.config.n_layers + 2);
+    let initial_plan = plan.describe();
+    let requests = continuous_requests(
+        cfg,
+        manifest.config.vocab_size,
+        manifest.config.prefill_len,
+    );
+    let ccfg = ContinuousConfig {
+        runs: cfg.runs,
+        max_batch: cfg.max_batch,
+        initial_batch: cfg.initial_batch,
+        ..ContinuousConfig::default()
+    };
+    let engine_cfg = EngineConfig {
+        time_scale: cfg.time_scale,
+        ..EngineConfig::default()
+    };
+    let dynamics =
+        NetworkDynamics::new().device(cfg.crash_device, DeviceShape::CrashAt(cfg.crash_at_ms));
+
+    type ChurnRun = (RunSummary, Vec<FailoverRecord>, String, u64);
+    let adaptive_run = |label: &str, checkpoint_every: usize| -> Result<ChurnRun> {
+        let adaptive_cfg = AdaptiveConfig {
+            engine: engine_cfg.clone(),
+            dynamics: Some(dynamics.clone()),
+            dynamics_tick_real_ms: 4.0,
+            heartbeat_timeout_ms: cfg.heartbeat_timeout_ms,
+            checkpoint_every,
+            // wide hysteresis: this experiment isolates failover
+            policy: crate::adaptive::replan::TriggerPolicy {
+                degrade_factor: 10.0,
+                ..Default::default()
+            },
+            ..AdaptiveConfig::default()
+        };
+        let mut engine = AdaptiveEngine::new(
+            &manifest,
+            &weights,
+            exec.clone(),
+            plan.clone(),
+            cluster.clone(),
+            traces.clone(),
+            adaptive_cfg,
+        );
+        let (results, mut stats) = engine
+            .generate_continuous(&requests, &ccfg)
+            .with_context(|| format!("continuous churn run `{label}`"))?;
+        let summary = summarize(
+            label,
+            results,
+            stats.tokens,
+            stats.makespan_ms,
+            &mut stats.iter_latency,
+            stats.padding_efficiency,
+        );
+        Ok((summary, stats.failovers, stats.final_plan, stats.checkpoints))
+    };
+
+    let (checkpointed, checkpointed_failovers, checkpointed_final_plan, checkpoints_taken) =
+        adaptive_run("continuous+crash (checkpoint)", cfg.checkpoint_every)?;
+    let (reprefilled, reprefilled_failovers, reprefilled_final_plan, _) =
+        adaptive_run("continuous+crash (re-prefill)", 0)?;
+
+    // the control: static continuous serving, no churn
+    let mut c_engine =
+        Engine::build(&manifest, &weights, exec.clone(), &plan, &cluster, &engine_cfg)?;
+    let (c_results, mut c_stats) = c_engine
+        .generate_continuous(&requests, &ccfg)
+        .context("static clean continuous run")?;
+    c_engine.shutdown()?;
+    let static_clean = summarize(
+        "static+clean",
+        c_results,
+        c_stats.tokens,
+        c_stats.makespan_ms,
+        &mut c_stats.iter_latency,
+        c_stats.padding_efficiency,
+    );
+
+    Ok(ContinuousChurnReport {
+        initial_plan,
+        checkpointed,
+        checkpointed_failovers,
+        checkpointed_final_plan,
+        checkpoints_taken,
+        reprefilled,
+        reprefilled_failovers,
+        reprefilled_final_plan,
+        static_clean,
+    })
+}
+
+/// Render the continuous-batching churn report as the markdown
+/// `edgeshard repro churn` appends.
+pub fn continuous_churn_markdown(r: &ContinuousChurnReport) -> String {
+    let mut out = String::new();
+    out.push_str("# Fault tolerance — device crash under continuous batching\n\n");
+    out.push_str(&format!("initial plan: `{}`\n", r.initial_plan));
+    out.push_str(&format!(
+        "final plan (checkpoint run):  `{}`\n",
+        r.checkpointed_final_plan
+    ));
+    out.push_str(&format!(
+        "final plan (re-prefill run):  `{}`\n\n",
+        r.reprefilled_final_plan
+    ));
+    let rows: Vec<Vec<String>> = [&r.checkpointed, &r.reprefilled, &r.static_clean]
+        .iter()
+        .map(|s| {
+            vec![
+                s.label.clone(),
+                format!("{:.1}", s.tokens_per_s),
+                format!("{:.2}", s.p95_iter_ms),
+                format!("{:.2}", s.padding_efficiency),
+                format!("{:.0}", s.makespan_ms),
+            ]
+        })
+        .collect();
+    out.push_str(&markdown_table(
+        &[
+            "engine",
+            "tokens/s",
+            "p95 inter-token (ms)",
+            "padding eff.",
+            "makespan (ms)",
+        ],
+        &rows,
+    ));
+    out.push('\n');
+    for (run, fos) in [
+        ("checkpoint", &r.checkpointed_failovers),
+        ("re-prefill", &r.reprefilled_failovers),
+    ] {
+        for f in fos.iter() {
+            out.push_str(&format!(
+                "failover ({run}) @token {}: d{} declared dead after {:.0} ms silence, \
+                 `{}` → `{}` ({} runs restored, {} frames replayed, {} KV bytes, \
+                 {:.1} ms restore pause)\n",
+                f.at_iter,
+                f.dead_device,
+                f.stalled_ms,
+                f.from_plan,
+                f.to_plan,
+                f.restored_groups,
+                f.replayed_iters,
+                f.restore_kv_bytes,
+                f.pause_ms,
+            ));
+        }
+    }
+    out.push_str(&format!(
+        "\ncheckpoints taken: {}; tokens identical across runs: {}\n",
+        r.checkpoints_taken,
+        r.checkpointed.token_rows() == r.static_clean.token_rows()
+            && r.reprefilled.token_rows() == r.static_clean.token_rows()
+    ));
+    out
 }
 
 /// Render the report as the markdown `edgeshard repro churn` emits.

@@ -31,15 +31,23 @@
 //! breaks that assumption.  When a hook opts in via
 //! [`DriveHooks::stall_poll_real_ms`], the driver polls the token channel
 //! with a timeout and reports silence through [`DriveHooks::on_stall`]
-//! with a [`StallView`] (each unfinished group's request + folded token
-//! history).  A hook that answers `true` has *replaced* the pipeline —
+//! with a [`StallView`]: each unfinished group's request + folded token
+//! history in group mode, each live run's per-row [`RunSnap`] in slot
+//! mode.  A hook that answers `true` has *replaced* the pipeline —
 //! detected the loss, replanned onto survivors, recovered KV (see
 //! [`crate::adaptive::engine`]) — and the driver re-derives the next live
-//! iteration of every unfinished group from its history (a group without
-//! a first token is re-prefilled), drops all barrier state, and resumes.
-//! Everything the old pipeline still owed is discarded: its late tokens
-//! can never fold, which is what keeps a false-positive failover merely
-//! wasteful instead of incorrect.
+//! work from served history: in group mode the next iteration of every
+//! unfinished group (a group without a first token is re-prefilled), in
+//! slot mode the scheduler recomposes every dead step and re-queues
+//! in-flight admissions ([`SlotScheduler::on_failover`]).  Barrier state
+//! is dropped, and everything the old pipeline still owed is discarded:
+//! its late tokens can never fold, which is what keeps a false-positive
+//! failover merely wasteful instead of incorrect.
+//!
+//! Even with hooks disabled (or a hook that never recovers) a dead stage
+//! must not wedge the server: both loops give up with an error once the
+//! pipeline has been silent for a generous dead-man interval
+//! ([`DEAD_PIPELINE_REAL_MS`]) — a hook recovery resets the clock.
 //!
 //! ## Stats
 //!
@@ -57,10 +65,18 @@ use std::time::{Duration, Instant};
 
 use super::api::{GenRequest, GenResult, GroupRequest};
 use super::engine::Wired;
-use super::scheduler::{Action, ContinuousConfig, SeqEvent, SlotScheduler};
-use super::stage::{Payload, Phase, StageMsg, TokenOrigin};
+use super::scheduler::{Action, ContinuousConfig, RunSnap, SeqEvent, SlotScheduler};
+use super::stage::{Payload, Phase, StageMsg, TokenMsg, TokenOrigin};
 use crate::metrics::Histogram;
 use crate::pipeline::Strategy;
+
+/// Dead-man interval, real ms: once the pipeline has delivered nothing
+/// for this long — across every stall-poll tick and hook consultation —
+/// the drive errors out instead of waiting forever.  Sized orders of
+/// magnitude above any legitimate iteration (including a failover
+/// recovery, which resets the clock); a hook that wants to keep waiting
+/// longer should recover or abort explicitly instead.
+pub const DEAD_PIPELINE_REAL_MS: f64 = 60_000.0;
 
 /// Compiled-shape contract the driver validates admissions against.
 #[derive(Debug, Clone)]
@@ -109,12 +125,18 @@ pub struct GroupProgress {
 #[derive(Debug)]
 pub struct DriveView {
     pub received: u64,
-    /// Batch sizes of the groups still generating.
+    /// Batch sizes of the groups still generating (run batches in slot
+    /// mode).
     pub unfinished_batches: Vec<usize>,
     /// Whether every active group got its first token (prefill settled).
+    /// Slot mode: no admission is currently in flight.
     pub all_prefilled: bool,
-    /// Per-group progress of the groups still generating.
+    /// Per-group progress of the groups still generating (group mode
+    /// only).
     pub groups: Vec<GroupProgress>,
+    /// Per-run composition + per-row served history (slot mode only) —
+    /// what a checkpoint records as its restore watermark.
+    pub runs: Vec<RunSnap>,
 }
 
 /// One still-unfinished group at a pipeline stall: the request plus its
@@ -128,13 +150,19 @@ pub struct StallGroup<'a> {
 }
 
 /// What the hooks see when the pipeline has delivered nothing for a full
-/// stall-poll tick.
+/// stall-poll tick.  Exactly one of `groups` / `runs` is populated:
+/// groups in group mode ([`drive_groups`]), per-row run snapshots in
+/// slot mode ([`drive_slots`]).
 #[derive(Debug)]
 pub struct StallView<'a> {
     pub received: u64,
     /// Real ms since the last delivered token (or drive start).
     pub stalled_real_ms: f64,
     pub groups: Vec<StallGroup<'a>>,
+    /// Slot mode: each live run's composition and served history —
+    /// everything a failover needs to rebuild, re-admit and replay rows
+    /// on a new pipeline.
+    pub runs: Vec<RunSnap>,
 }
 
 /// Interposition points for adaptive serving.  The default impls are
@@ -176,6 +204,17 @@ pub trait DriveHooks {
         Ok(())
     }
 
+    /// Whether this token's [`DriveView`] must include the full per-run
+    /// snapshot (slot mode only).  Deep-copying every row's prompt and
+    /// served history is the expensive part of a view, and only a
+    /// checkpoint start consumes it — the adaptive hook answers `true`
+    /// exactly on its checkpoint cadence.  Defaults to `true` so hooks
+    /// that don't implement the gate still see full views.
+    fn wants_run_snapshot(&self, received: u64) -> bool {
+        let _ = received;
+        true
+    }
+
     /// How long (real ms) the driver may block on the token channel
     /// before reporting a stall via [`DriveHooks::on_stall`].  `None`
     /// (the default) keeps the plain blocking receive — no stall
@@ -188,10 +227,11 @@ pub trait DriveHooks {
     /// Return `Ok(false)` to keep waiting.  Return `Ok(true)` to signal
     /// the hook **replaced the pipeline** (failover): any KV recovery and
     /// history replay must already have happened on the new `wired` —
-    /// the driver then re-dispatches the next live iteration (or the
-    /// prefill, for groups without a first token) of every unfinished
-    /// group, abandons all barrier state, and resumes folding.  An `Err`
-    /// aborts generation.
+    /// the driver then re-derives the dead in-flight work (group mode:
+    /// the next live iteration, or the prefill, of every unfinished
+    /// group; slot mode: the scheduler re-queues dead admissions and
+    /// recomposes dead steps), abandons all barrier state, and resumes
+    /// folding.  An `Err` aborts generation.
     fn on_stall(&mut self, wired: &mut Wired, view: &StallView<'_>) -> Result<bool> {
         let _ = (wired, view);
         Ok(false)
@@ -243,6 +283,78 @@ pub(crate) fn send_decode(
 fn send_control(wired: &Wired, msg: StageMsg) -> Result<()> {
     let bytes = msg.wire_bytes();
     wired.to_first.send(msg, bytes)
+}
+
+/// Outcome of one token-channel receive attempt ([`poll_token`]).
+enum Polled {
+    /// A head token frame arrived.
+    Token(TokenMsg),
+    /// A stall-poll tick elapsed with nothing delivered; the hook was
+    /// consulted — `recovered` means it replaced the pipeline and the
+    /// caller must re-derive the dead in-flight work.
+    Stalled { recovered: bool },
+}
+
+/// One receive attempt, shared by both drive loops.  With no stall hook
+/// active, blocks up to the dead-man interval and errors on silence — a
+/// dead stage must surface as an error, never a hang.  With a stall
+/// hook, blocks one poll tick; on a silent tick it builds a
+/// [`StallView`] from `make_view` (the caller populates the group or
+/// run side), consults [`DriveHooks::on_stall`], and enforces the
+/// dead-man backstop when the hook keeps declining to recover.
+fn poll_token<'v>(
+    wired: &mut Wired,
+    stall_poll: Option<f64>,
+    dead_man_real_ms: f64,
+    last_progress: &Instant,
+    received: u64,
+    hooks: &mut dyn DriveHooks,
+    make_view: impl FnOnce() -> (Vec<StallGroup<'v>>, Vec<RunSnap>),
+) -> Result<Polled> {
+    let tick_ms = match stall_poll {
+        None => {
+            return match wired
+                .token_rx
+                .recv_timeout(Duration::from_secs_f64(dead_man_real_ms / 1e3))
+            {
+                Ok(t) => Ok(Polled::Token(t)),
+                Err(RecvTimeoutError::Disconnected) => {
+                    Err(anyhow!("pipeline closed unexpectedly"))
+                }
+                Err(RecvTimeoutError::Timeout) => Err(anyhow!(
+                    "pipeline delivered nothing for {dead_man_real_ms:.0} real ms \
+                     (stage host dead?) and no stall/failover hook is active"
+                )),
+            }
+        }
+        Some(t) => t,
+    };
+    match wired
+        .token_rx
+        .recv_timeout(Duration::from_secs_f64(tick_ms.max(1.0) / 1e3))
+    {
+        Ok(t) => Ok(Polled::Token(t)),
+        Err(RecvTimeoutError::Disconnected) => Err(anyhow!("pipeline closed unexpectedly")),
+        Err(RecvTimeoutError::Timeout) => {
+            let stalled_real_ms = last_progress.elapsed().as_secs_f64() * 1e3;
+            let recovered = {
+                let (groups, runs) = make_view();
+                let view = StallView {
+                    received,
+                    stalled_real_ms,
+                    groups,
+                    runs,
+                };
+                hooks.on_stall(wired, &view)?
+            };
+            anyhow::ensure!(
+                recovered || stalled_real_ms < dead_man_real_ms,
+                "pipeline silent for {stalled_real_ms:.0} real ms and the stall hook \
+                 never recovered it"
+            );
+            Ok(Polled::Stalled { recovered })
+        }
+    }
 }
 
 /// Drive a set of pre-packed groups to completion: `window` groups in
@@ -337,66 +449,57 @@ pub fn drive_groups(
     };
 
     while in_flight_groups > 0 {
-        let tok = match stall_poll {
-            None => wired
-                .token_rx
-                .recv()
-                .map_err(|_| anyhow!("pipeline closed unexpectedly"))?,
-            Some(tick_ms) => {
-                match wired
-                    .token_rx
-                    .recv_timeout(Duration::from_secs_f64(tick_ms.max(1.0) / 1e3))
-                {
-                    Ok(t) => t,
-                    Err(RecvTimeoutError::Disconnected) => {
-                        anyhow::bail!("pipeline closed unexpectedly")
-                    }
-                    Err(RecvTimeoutError::Timeout) => {
-                        let recovered = {
-                            let view = StallView {
-                                received,
-                                stalled_real_ms: last_progress.elapsed().as_secs_f64() * 1e3,
-                                groups: active
-                                    .values()
-                                    .filter(|a| !a.done)
-                                    .map(|a| StallGroup {
-                                        req: a.req,
-                                        rows: &a.rows,
-                                    })
-                                    .collect(),
-                            };
-                            hooks.on_stall(wired, &view)?
-                        };
-                        if recovered {
-                            // Failover: the hook rebuilt the pipeline and
-                            // already replayed every *folded* iteration's
-                            // KV.  Whatever was in flight or held died
-                            // with the old pipeline — re-derive the next
-                            // live iteration of every unfinished group
-                            // from its token history and resume.
-                            pending_barrier = false;
-                            held.clear();
-                            bubble_barrier.clear();
-                            for a in active.values_mut().filter(|a| !a.done) {
-                                let folded = a.folded();
-                                if folded == 0 {
-                                    send_prefill(wired, a.req)?;
-                                    a.sent = 0;
-                                } else {
-                                    let toks: Vec<i32> =
-                                        a.rows.iter().map(|r| r[folded - 1]).collect();
-                                    send_decode(wired, a.req, folded, toks)?;
-                                    a.sent = folded;
-                                }
-                                rows_real += a.req.real() as u64;
-                                rows_total += a.req.batch as u64;
-                                a.in_flight = true;
-                            }
-                            last_progress = Instant::now();
+        let polled = poll_token(
+            wired,
+            stall_poll,
+            DEAD_PIPELINE_REAL_MS,
+            &last_progress,
+            received,
+            hooks,
+            || {
+                (
+                    active
+                        .values()
+                        .filter(|a| !a.done)
+                        .map(|a| StallGroup {
+                            req: a.req,
+                            rows: &a.rows,
+                        })
+                        .collect(),
+                    Vec::new(),
+                )
+            },
+        )?;
+        let tok = match polled {
+            Polled::Token(t) => t,
+            Polled::Stalled { recovered } => {
+                if recovered {
+                    // Failover: the hook rebuilt the pipeline and already
+                    // replayed every *folded* iteration's KV.  Whatever
+                    // was in flight or held died with the old pipeline —
+                    // re-derive the next live iteration of every
+                    // unfinished group from its token history and resume.
+                    pending_barrier = false;
+                    held.clear();
+                    bubble_barrier.clear();
+                    for a in active.values_mut().filter(|a| !a.done) {
+                        let folded = a.folded();
+                        if folded == 0 {
+                            send_prefill(wired, a.req)?;
+                            a.sent = 0;
+                        } else {
+                            let toks: Vec<i32> =
+                                a.rows.iter().map(|r| r[folded - 1]).collect();
+                            send_decode(wired, a.req, folded, toks)?;
+                            a.sent = folded;
                         }
-                        continue;
+                        rows_real += a.req.real() as u64;
+                        rows_total += a.req.batch as u64;
+                        a.in_flight = true;
                     }
+                    last_progress = Instant::now();
                 }
+                continue;
             }
         };
         anyhow::ensure!(
@@ -450,11 +553,16 @@ pub fn drive_groups(
             // are ordered and comparable across serving modes
             a.done = true;
             let total = now.duration_since(t0).as_secs_f64() * 1e3;
+            // the group's first fold recorded its TTFT; a missing entry
+            // is a folding bug and must not masquerade as a 0 ms TTFT
+            let group_ttft = a
+                .ttft_ms
+                .with_context(|| format!("group {} finished without a recorded TTFT", tok.group))?;
             for (i, &rid) in a.req.request_ids.iter().enumerate() {
                 results.push(GenResult {
                     id: rid,
                     tokens: a.rows[i].clone(),
-                    ttft_ms: a.ttft_ms.unwrap_or(0.0),
+                    ttft_ms: group_ttft,
                     total_ms: total,
                 });
             }
@@ -511,6 +619,7 @@ pub fn drive_groups(
                         folded: x.folded(),
                     })
                     .collect(),
+                runs: Vec::new(),
             };
             if hooks.after_token(wired, &view)? {
                 pending_barrier = true;
@@ -557,11 +666,21 @@ pub fn drive_groups(
 /// (continuous batching).  Requests are admitted into compiled batch
 /// slots as capacity frees up, retire individually, and every frame
 /// carries a per-iteration slot map.  See [`super::scheduler`].
+///
+/// `hooks` interpose exactly as in [`drive_groups`]: `after_token` may
+/// request a drain barrier (the loop stops pumping, lets every in-flight
+/// frame land, then calls `at_barrier` — KV migration works on runs the
+/// same as on groups), and `stall_poll_real_ms`/`on_stall` enable
+/// device-loss failover — the hook receives each live run's [`RunSnap`]
+/// and, on recovery, the scheduler re-queues dead admissions and
+/// recomposes dead steps ([`SlotScheduler::on_failover`]).  Static
+/// serving passes [`NoHooks`].
 pub fn drive_slots(
     wired: &mut Wired,
     cfg: &DriverCfg,
     requests: &[GenRequest],
     ccfg: &ContinuousConfig,
+    hooks: &mut dyn DriveHooks,
 ) -> Result<(Vec<GenResult>, DriveStats)> {
     // admissions prefill at batch 1, so that variant must be compiled
     anyhow::ensure!(
@@ -602,73 +721,129 @@ pub fn drive_slots(
     // closed-loop: every request is enqueued at t0, so TTFT includes
     // queue wait — the number a client of the serving system would see
     let mut ttft_by_req: HashMap<u64, f64> = HashMap::new();
+    // Per-run decode-gap baseline.  Run ids are stable across Compact
+    // recomposition (the scheduler recomposes in place), so the baseline
+    // carries through a grow/shrink and the cross-recomposition gap still
+    // lands in `iter_latency`; entries are pruned when the run is freed.
     let mut last_step_at: HashMap<u64, Instant> = HashMap::new();
     let mut expecting = 0usize;
+    let mut received = 0u64;
+    // hook-requested drain barrier: stop pumping new work, let every
+    // in-flight frame land, run `at_barrier` (e.g. a KV migration onto a
+    // better plan), resume pumping on whatever pipeline it left behind
+    let mut pending_barrier = false;
+
+    let stall_poll = if hooks.enabled() {
+        hooks.stall_poll_real_ms()
+    } else {
+        None
+    };
+    let dead_man_real_ms = ccfg.dead_man_real_ms.max(1.0);
+    let mut last_progress = Instant::now();
 
     loop {
-        for action in sched.pump() {
-            match action {
-                Action::Admit {
-                    run,
-                    slot,
-                    run_batch,
-                    prompt,
-                } => {
-                    let msg = StageMsg::Admit {
+        if !pending_barrier {
+            for action in sched.pump() {
+                match action {
+                    Action::Admit {
                         run,
                         slot,
                         run_batch,
-                        prompt_len: cfg.prompt_len,
-                        payload: Payload::Tokens(prompt),
-                    };
-                    let bytes = msg.wire_bytes();
-                    wired.to_first.send(msg, bytes)?;
-                    expecting += 1;
-                }
-                Action::Step {
-                    run,
-                    iter,
-                    batch,
-                    pos,
-                    tokens,
-                } => {
-                    let msg = StageMsg::Step {
+                        prompt,
+                    } => {
+                        let msg = StageMsg::Admit {
+                            run,
+                            slot,
+                            run_batch,
+                            prompt_len: cfg.prompt_len,
+                            payload: Payload::Tokens(prompt),
+                        };
+                        let bytes = msg.wire_bytes();
+                        wired.to_first.send(msg, bytes)?;
+                        expecting += 1;
+                    }
+                    Action::Step {
                         run,
                         iter,
                         batch,
                         pos,
-                        payload: Payload::Tokens(tokens),
-                    };
-                    let bytes = msg.wire_bytes();
-                    wired.to_first.send(msg, bytes)?;
-                    expecting += 1;
-                }
-                Action::Evict { run, slot } => {
-                    send_control(wired, StageMsg::Evict { run, slot })?
-                }
-                Action::Compact {
-                    run,
-                    new_batch,
-                    moves,
-                } => send_control(
-                    wired,
-                    StageMsg::Compact {
+                        tokens,
+                    } => {
+                        let msg = StageMsg::Step {
+                            run,
+                            iter,
+                            batch,
+                            pos,
+                            payload: Payload::Tokens(tokens),
+                        };
+                        let bytes = msg.wire_bytes();
+                        wired.to_first.send(msg, bytes)?;
+                        expecting += 1;
+                    }
+                    Action::Evict { run, slot } => {
+                        send_control(wired, StageMsg::Evict { run, slot })?
+                    }
+                    Action::Compact {
                         run,
                         new_batch,
                         moves,
-                    },
-                )?,
-                Action::FreeRun { run } => send_control(wired, StageMsg::Free { group: run })?,
+                    } => send_control(
+                        wired,
+                        StageMsg::Compact {
+                            run,
+                            new_batch,
+                            moves,
+                        },
+                    )?,
+                    Action::FreeRun { run } => {
+                        // a freed run can never step again: drop its
+                        // decode-gap baseline instead of leaking it
+                        last_step_at.remove(&run);
+                        send_control(wired, StageMsg::Free { group: run })?
+                    }
+                }
             }
         }
         if expecting == 0 {
+            if pending_barrier {
+                // no frame is in flight anywhere: the barrier is reached
+                hooks.at_barrier(wired)?;
+                pending_barrier = false;
+                // barrier work (a migration pause) is not pipeline silence
+                last_progress = Instant::now();
+                continue;
+            }
             break;
         }
-        let tok = wired
-            .token_rx
-            .recv()
-            .map_err(|_| anyhow!("pipeline closed unexpectedly"))?;
+        let polled = poll_token(
+            wired,
+            stall_poll,
+            dead_man_real_ms,
+            &last_progress,
+            received,
+            hooks,
+            || (Vec::new(), sched.snapshot()),
+        )?;
+        let tok = match polled {
+            Polled::Token(t) => t,
+            Polled::Stalled { recovered } => {
+                if recovered {
+                    // Failover: the hook rebuilt the pipeline and already
+                    // restored/replayed every folded row's KV.  Whatever
+                    // was in flight or held died with the old pipeline —
+                    // reset, and let the scheduler re-queue dead
+                    // admissions and recompose dead steps on the next
+                    // pump.
+                    pending_barrier = false;
+                    expecting = 0;
+                    sched.on_failover();
+                    last_progress = Instant::now();
+                }
+                continue;
+            }
+        };
         expecting -= 1;
+        received += 1;
         let now = Instant::now();
         for ev in sched.on_token(&tok)? {
             match ev {
@@ -687,15 +862,44 @@ pub fn drive_slots(
                     }
                 }
                 SeqEvent::Finished { req_id, tokens } => {
+                    // the sequence's First event recorded its TTFT; a
+                    // missing entry is a folding bug and must not
+                    // masquerade as a perfect 0 ms TTFT in the histogram
+                    let req_ttft = ttft_by_req.get(&req_id).copied().with_context(|| {
+                        format!("request {req_id} finished without a recorded first token")
+                    })?;
                     results.push(GenResult {
                         id: req_id,
                         tokens,
-                        ttft_ms: ttft_by_req.get(&req_id).copied().unwrap_or(0.0),
+                        ttft_ms: req_ttft,
                         total_ms: now.duration_since(t0).as_secs_f64() * 1e3,
                     });
                 }
             }
         }
+        // hooks: checkpointing and the replan control loop ride here,
+        // exactly as in group mode.  The deep per-row snapshot is built
+        // only when the hook will actually consume it (checkpoint start);
+        // every other gated token gets the cheap composition fields.
+        if hooks.enabled() && hooks.wants_view(received) {
+            let runs = if hooks.wants_run_snapshot(received) {
+                sched.snapshot()
+            } else {
+                Vec::new()
+            };
+            let view = DriveView {
+                received,
+                unfinished_batches: sched.run_batches(),
+                all_prefilled: !sched.any_prefilling(),
+                groups: Vec::new(),
+                runs,
+            };
+            if hooks.after_token(wired, &view)? {
+                pending_barrier = true;
+            }
+        }
+        // only the recv-timeout path above accumulates stall time
+        last_progress = Instant::now();
     }
     anyhow::ensure!(sched.done(), "slot scheduler stalled with work left");
 

@@ -327,7 +327,8 @@ impl Engine {
         requests: &[GenRequest],
         ccfg: &ContinuousConfig,
     ) -> Result<(Vec<GenResult>, EngineStats)> {
-        let (results, stats) = drive_slots(&mut self.wired, &self.driver_cfg, requests, ccfg)?;
+        let (results, stats) =
+            drive_slots(&mut self.wired, &self.driver_cfg, requests, ccfg, &mut NoHooks)?;
         Ok((results, stats.into()))
     }
 

@@ -232,6 +232,11 @@ impl KvPool {
     /// moving row `from` → `to` for each pair in `moves`.  Rows not named
     /// in `moves` are dropped — a live row left unnamed is released and
     /// its bytes freed.  Byte accounting follows the surviving live rows.
+    ///
+    /// Failover leans on exactly these semantics: a restored checkpoint
+    /// cache is reconciled to the run's current composition with one
+    /// compact — survivors move snapshot-slot → current-slot, and rows
+    /// retired (or re-admitted) since the snapshot are simply unnamed.
     pub fn compact(
         &mut self,
         run: u64,

@@ -40,5 +40,5 @@ pub use driver::{
 };
 pub use engine::{Engine, EngineConfig, EngineStats};
 pub use kvcache::{GroupCache, KvPool};
-pub use scheduler::{ContinuousConfig, SlotScheduler};
+pub use scheduler::{ContinuousConfig, RowSnap, RunSnap, SlotScheduler};
 pub use stage::{KvEntry, StageExport};

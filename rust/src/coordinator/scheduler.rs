@@ -40,7 +40,7 @@
 //!   ([`Action::Compact`]), and grow back (next compiled size) when
 //!   demand returns.
 //!
-//! ## Interaction with migration barriers
+//! ## Interaction with migration barriers and failover
 //!
 //! The scheduler is pure policy: it never touches channels or clocks, so
 //! the generation driver ([`super::driver`]) can stop pumping it at any
@@ -48,8 +48,16 @@
 //! barrier needs (drain in-flight iterations, move KV, resume).  Run
 //! caches are ordinary [`crate::coordinator::kvcache::GroupCache`]s, so
 //! [`crate::coordinator::stage::StageMsg::Export`] snapshots them like
-//! any group's; wiring continuous batching *through* a live migration is
-//! a ROADMAP follow-on.
+//! any group's, and the driver's slot loop drains to a real barrier for
+//! the adaptive engine's migration.
+//!
+//! Device-loss failover rides the same purity: [`SlotScheduler::snapshot`]
+//! re-derives every occupied slot's replay state (request, prompt, served
+//! history — position and last token fall out of the history length), and
+//! [`SlotScheduler::on_failover`] resets the in-flight bookkeeping after
+//! the pipeline has been replaced — dead steps are recomposed from the
+//! unchanged per-row state on the next pump, and admissions whose first
+//! token died in flight are re-queued verbatim.
 
 use std::collections::VecDeque;
 
@@ -84,6 +92,11 @@ pub struct ContinuousConfig {
     /// queue).  Mostly a test/bench knob: starting small exercises the
     /// grow path.
     pub initial_batch: Option<usize>,
+    /// Dead-man interval, real ms: with no stall hook (or a hook that
+    /// never recovers), a pipeline silent this long makes the drive
+    /// error out instead of hanging the server.  Defaults to
+    /// [`super::driver::DEAD_PIPELINE_REAL_MS`]; tests shrink it.
+    pub dead_man_real_ms: f64,
 }
 
 impl Default for ContinuousConfig {
@@ -92,6 +105,7 @@ impl Default for ContinuousConfig {
             runs: 2,
             max_batch: None,
             initial_batch: None,
+            dead_man_real_ms: super::driver::DEAD_PIPELINE_REAL_MS,
         }
     }
 }
@@ -146,6 +160,35 @@ struct SeqState {
     prompt: Vec<i32>,
     max_new: usize,
     generated: Vec<i32>,
+}
+
+/// Replay state of one occupied slot, as checkpointing and failover see
+/// it.  Everything a rebuilt pipeline needs to reconstruct the row:
+/// `generated` is the served history (its length pins the row's absolute
+/// position at `prompt_len + generated.len() - 1`, its last element is
+/// the next step's feedback token), and `prompt` is the fitted prompt an
+/// [`Action::Admit`] would carry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowSnap {
+    pub slot: usize,
+    pub req_id: u64,
+    /// Fitted prompt (exactly what the original admission sent).
+    pub prompt: Vec<i32>,
+    /// Folded tokens so far (empty while the admission is in flight).
+    pub generated: Vec<i32>,
+    /// Admission in flight — no first token yet; after a failover the
+    /// driver re-admits this row live (its TTFT is still unmeasured).
+    pub prefilling: bool,
+}
+
+/// One live run's composition: batch plus every occupied slot's
+/// [`RowSnap`].  Produced by [`SlotScheduler::snapshot`] for the driver's
+/// slot-mode stall view and for checkpoint watermarks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunSnap {
+    pub run: u64,
+    pub batch: usize,
+    pub rows: Vec<RowSnap>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -491,6 +534,89 @@ impl SlotScheduler {
         self.runs[ri].slots[slot] = Slot::Free;
     }
 
+    /// Every live run's composition and per-row replay state — what a
+    /// checkpoint records as its watermark and what failover reconstructs
+    /// from.  Runs with no occupied slot (drained or never allocated) are
+    /// omitted: there is nothing of theirs to rebuild.
+    pub fn snapshot(&self) -> Vec<RunSnap> {
+        self.runs
+            .iter()
+            .filter(|r| !r.freed)
+            .filter_map(|r| {
+                let rows: Vec<RowSnap> = r
+                    .slots
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(slot, s)| {
+                        let (seq, prefilling) = match s {
+                            Slot::Prefilling { seq } => (*seq, true),
+                            Slot::Active { seq, .. } => (*seq, false),
+                            Slot::Free => return None,
+                        };
+                        Some(RowSnap {
+                            slot,
+                            req_id: self.seqs[seq].id,
+                            prompt: self.seqs[seq].prompt.clone(),
+                            generated: self.seqs[seq].generated.clone(),
+                            prefilling,
+                        })
+                    })
+                    .collect();
+                (!rows.is_empty()).then_some(RunSnap {
+                    run: r.id,
+                    batch: r.batch,
+                    rows,
+                })
+            })
+            .collect()
+    }
+
+    /// Batch sizes of the runs still holding occupied slots — the cheap
+    /// (no history cloning) slice of [`SlotScheduler::snapshot`] the
+    /// per-token drive view needs.
+    pub fn run_batches(&self) -> Vec<usize> {
+        self.runs
+            .iter()
+            .filter(|r| !r.freed && r.slots.iter().any(|s| !matches!(s, Slot::Free)))
+            .map(|r| r.batch)
+            .collect()
+    }
+
+    /// Whether any admission is currently in flight.
+    pub fn any_prefilling(&self) -> bool {
+        self.runs.iter().any(|r| r.prefilling() > 0)
+    }
+
+    /// The pipeline was replaced under us (failover): every frame in
+    /// flight died with it.  Per-row state (position, last token, served
+    /// history) is untouched — it only ever advances on folds — so the
+    /// next [`SlotScheduler::pump`] recomposes each run's dead step
+    /// verbatim.  Admissions whose first token died are re-queued; queued
+    /// retirements are dropped, because the hook rebuilt the new
+    /// pipeline's caches from the *current* composition, which already
+    /// excludes retired rows.
+    pub fn on_failover(&mut self) {
+        self.outbox.clear();
+        for ri in 0..self.runs.len() {
+            self.runs[ri].step_live = None;
+            for slot in 0..self.runs[ri].batch {
+                let Slot::Prefilling { seq } = self.runs[ri].slots[slot] else {
+                    continue;
+                };
+                let run = &self.runs[ri];
+                self.outbox.push(Action::Admit {
+                    run: run.id,
+                    slot,
+                    run_batch: run.batch,
+                    prompt: self.seqs[seq].prompt.clone(),
+                });
+                // the re-sent frame carries a real row again
+                self.rows_real += 1;
+                self.rows_total += 1;
+            }
+        }
+    }
+
     /// All sequences served, all retirements flushed, all runs freed.
     pub fn done(&self) -> bool {
         self.waiting.is_empty()
@@ -593,7 +719,7 @@ mod tests {
             &ContinuousConfig {
                 runs: 1,
                 max_batch: Some(2),
-                initial_batch: None,
+                ..ContinuousConfig::default()
             },
             4,
             vec![1, 2],
@@ -610,8 +736,8 @@ mod tests {
         let mut s = SlotScheduler::new(
             &ContinuousConfig {
                 runs: 1,
-                max_batch: None,
                 initial_batch: Some(1),
+                ..ContinuousConfig::default()
             },
             4,
             vec![1, 2, 8],
@@ -662,6 +788,75 @@ mod tests {
         }
         assert!(s.done());
         assert!(saw_shrink, "tail never compacted to batch 1");
+    }
+
+    #[test]
+    fn snapshot_rederives_row_state_and_failover_requeues_prefills() {
+        let rs = reqs(&[4, 4, 4]);
+        let mut s =
+            SlotScheduler::new(&ContinuousConfig { runs: 1, ..Default::default() }, 4, vec![1, 4], &rs)
+                .unwrap();
+        // first pump: three admits (+ no step yet)
+        let acts = s.pump();
+        let admits: Vec<_> = acts
+            .iter()
+            .filter(|a| matches!(a, Action::Admit { .. }))
+            .cloned()
+            .collect();
+        assert_eq!(admits.len(), 3);
+        // fold two first tokens, leave slot 2 prefilling
+        s.on_token(&tok(RUN_ID_BASE, 0, vec![7], TokenOrigin::Admit { slot: 0 })).unwrap();
+        s.on_token(&tok(RUN_ID_BASE, 0, vec![8], TokenOrigin::Admit { slot: 1 })).unwrap();
+        // compose + fold one decode step over the two active rows
+        let acts = s.pump();
+        let Some(Action::Step { batch, .. }) =
+            acts.iter().find(|a| matches!(a, Action::Step { .. }))
+        else {
+            panic!("no step composed: {acts:?}")
+        };
+        s.on_token(&tok(RUN_ID_BASE, 0, vec![9; *batch], TokenOrigin::Step)).unwrap();
+
+        let snap = s.snapshot();
+        assert_eq!(snap.len(), 1);
+        let run = &snap[0];
+        assert_eq!(run.run, RUN_ID_BASE);
+        assert_eq!(run.rows.len(), 3);
+        let row0 = run.rows.iter().find(|r| r.slot == 0).unwrap();
+        assert_eq!(row0.req_id, 100);
+        assert_eq!(row0.generated, vec![7, 9]);
+        assert!(!row0.prefilling);
+        assert_eq!(row0.prompt.len(), 4, "prompt fitted to prompt_len");
+        let row2 = run.rows.iter().find(|r| r.slot == 2).unwrap();
+        assert!(row2.prefilling);
+        assert!(row2.generated.is_empty());
+
+        // kill the pipeline mid-step: compose a step, then fail over
+        let acts = s.pump();
+        assert!(acts.iter().any(|a| matches!(a, Action::Step { .. })));
+        s.on_failover();
+        let acts = s.pump();
+        // the dead admit is re-queued and the dead step recomposed with
+        // the identical feedback tokens/positions
+        let readmit = acts.iter().find(|a| matches!(a, Action::Admit { slot: 2, .. }));
+        assert!(readmit.is_some(), "prefilling row not re-admitted: {acts:?}");
+        let step = acts
+            .iter()
+            .find_map(|a| match a {
+                Action::Step { pos, tokens, .. } => Some((pos.clone(), tokens.clone())),
+                _ => None,
+            })
+            .expect("dead step not recomposed");
+        // rows 0 and 1 decode at absolute position prompt_len + 1 with
+        // their last folded token; slots 2/3 are dead in the map
+        assert_eq!(step.0, vec![5, 5, -1, -1]);
+        assert_eq!(step.1[0], 9);
+        assert_eq!(step.1[1], 9);
+        // answer the re-sent frames; the scheduler then drains normally
+        s.on_token(&tok(RUN_ID_BASE, 0, vec![9; 4], TokenOrigin::Step)).unwrap();
+        s.on_token(&tok(RUN_ID_BASE, 0, vec![7], TokenOrigin::Admit { slot: 2 })).unwrap();
+        let fin = drive(&mut s);
+        assert_eq!(fin.len(), 3);
+        assert!(fin.values().all(|&n| n == 4));
     }
 
     #[test]

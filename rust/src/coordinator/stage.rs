@@ -100,6 +100,11 @@ pub enum StageMsg {
     /// forwards the probe, so the driver collects exactly one export per
     /// stage.  The adaptive engine sends this both at a migration barrier
     /// and on a periodic token cadence to keep a failover checkpoint.
+    /// FIFO makes the snapshot consistent at the probe's position in the
+    /// send stream — in particular, an [`StageMsg::Admit`] sent before
+    /// the probe is fully inside the snapshot on every stage, which is
+    /// what lets continuous-batching failover restore rows that were
+    /// still prefilling when the checkpoint was taken.
     Export { reply: Sender<StageExport> },
     Shutdown,
 }

@@ -1,18 +1,109 @@
-//! `edgeshard repro churn` — the fault-tolerance experiment: a stage
+//! `edgeshard repro churn` — the fault-tolerance experiments: a stage
 //! host crashes mid-generation (its KV dies with it) and the adaptive
 //! engine must detect the loss from missing heartbeats, replan onto the
 //! survivors, recover the lost KV (checkpoint replay in one run,
 //! re-prefill from token history in the other) and finish with the exact
-//! token stream of an uninterrupted run.  Not a paper artifact — this is
-//! the reliability story EdgeShard's premise (edge devices come and go)
-//! demands of a serving system.
+//! token stream of an uninterrupted run.  Runs the experiment twice:
+//! once for classic group serving, once for **continuous batching**
+//! (per-row recovery through the slot scheduler).  Not a paper artifact
+//! — this is the reliability story EdgeShard's premise (edge devices
+//! come and go) demands of a serving system.
+//!
+//! Besides the markdown reports, writes `BENCH_churn_continuous.json` —
+//! the machine-readable recovery-overhead numbers (restore pause, KV
+//! freight, replayed frames, makespan overhead vs a clean run) that the
+//! non-gating serving-bench CI job uploads so the trajectory is recorded
+//! per PR.
 
-use crate::adaptive::scenario::{churn_report_markdown, device_churn_scenario, ChurnConfig};
+use std::collections::BTreeMap;
+
+use crate::adaptive::scenario::{
+    churn_report_markdown, continuous_churn_markdown, continuous_churn_scenario,
+    device_churn_scenario, ChurnConfig, ContinuousChurnConfig, ContinuousChurnReport, RunSummary,
+};
+use crate::adaptive::FailoverRecord;
+use crate::util::Json;
+use anyhow::Context;
+
+/// Machine-readable form of the continuous-batching churn report (the
+/// `BENCH_churn_continuous.json` CI artifact).
+pub fn continuous_churn_json(r: &ContinuousChurnReport) -> Json {
+    let num = |v: f64| Json::Num((v * 1000.0).round() / 1000.0);
+    let failover = |f: &FailoverRecord| {
+        let mut o = BTreeMap::new();
+        o.insert("at_iter".into(), Json::Num(f.at_iter as f64));
+        o.insert("dead_device".into(), Json::Num(f.dead_device as f64));
+        o.insert("stalled_ms".into(), num(f.stalled_ms));
+        o.insert("via_checkpoint".into(), Json::Bool(f.via_checkpoint));
+        o.insert("restored_runs".into(), Json::Num(f.restored_groups as f64));
+        o.insert("replayed_frames".into(), Json::Num(f.replayed_iters as f64));
+        o.insert(
+            "restore_kv_bytes".into(),
+            Json::Num(f.restore_kv_bytes as f64),
+        );
+        o.insert("restore_pause_ms".into(), num(f.pause_ms));
+        o.insert("to_plan".into(), Json::Str(f.to_plan.clone()));
+        Json::Obj(o)
+    };
+    let clean_makespan = r.static_clean.makespan_ms;
+    let run = |s: &RunSummary, fos: &[FailoverRecord]| {
+        let mut o = BTreeMap::new();
+        o.insert("label".into(), Json::Str(s.label.clone()));
+        o.insert("tokens_per_s".into(), num(s.tokens_per_s));
+        o.insert("makespan_ms".into(), num(s.makespan_ms));
+        // the headline recovery overhead: extra wall time vs the clean run
+        o.insert(
+            "makespan_overhead_ms".into(),
+            num(s.makespan_ms - clean_makespan),
+        );
+        o.insert("p95_iter_ms".into(), num(s.p95_iter_ms));
+        o.insert("padding_efficiency".into(), num(s.padding_efficiency));
+        o.insert(
+            "failovers".into(),
+            Json::Arr(fos.iter().map(failover).collect()),
+        );
+        Json::Obj(o)
+    };
+    let mut root = BTreeMap::new();
+    root.insert("initial_plan".into(), Json::Str(r.initial_plan.clone()));
+    root.insert(
+        "checkpointed".into(),
+        run(&r.checkpointed, &r.checkpointed_failovers),
+    );
+    root.insert(
+        "reprefilled".into(),
+        run(&r.reprefilled, &r.reprefilled_failovers),
+    );
+    root.insert("static_clean".into(), run(&r.static_clean, &[]));
+    root.insert(
+        "checkpoints_taken".into(),
+        Json::Num(r.checkpoints_taken as f64),
+    );
+    root.insert(
+        "tokens_identical".into(),
+        Json::Bool(
+            r.checkpointed.token_rows() == r.static_clean.token_rows()
+                && r.reprefilled.token_rows() == r.static_clean.token_rows(),
+        ),
+    );
+    Json::Obj(root)
+}
 
 pub fn run(seed: u64) -> anyhow::Result<()> {
     let report = device_churn_scenario(&ChurnConfig {
         seed,
         ..ChurnConfig::default()
     })?;
-    super::emit("device_churn", &churn_report_markdown(&report))
+    super::emit("device_churn", &churn_report_markdown(&report))?;
+
+    let cont = continuous_churn_scenario(&ContinuousChurnConfig {
+        seed,
+        ..ContinuousChurnConfig::default()
+    })?;
+    super::emit("device_churn_continuous", &continuous_churn_markdown(&cont))?;
+    let path = std::path::Path::new("BENCH_churn_continuous.json");
+    std::fs::write(path, continuous_churn_json(&cont).to_string())
+        .with_context(|| format!("writing {path:?}"))?;
+    println!("wrote {}", path.display());
+    Ok(())
 }

@@ -146,8 +146,8 @@ fn grow_shrink_and_readmission_preserve_tokens() {
     let reference = sequential_rows(&mut e, &reqs);
     let ccfg = ContinuousConfig {
         runs: 1,
-        max_batch: None,
         initial_batch: Some(1),
+        ..ContinuousConfig::default()
     };
     let first = continuous_rows(&mut e, &reqs, &ccfg);
     assert_eq!(first, reference, "grow/shrink changed tokens");

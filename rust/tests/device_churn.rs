@@ -15,11 +15,16 @@
 //! * a slow-but-alive pipeline (bandwidth jitter stalling frames well
 //!   below the timeout) never triggers a failover.
 
-use edgeshard::adaptive::scenario::{device_churn_scenario, ChurnConfig};
-use edgeshard::adaptive::{AdaptiveConfig, AdaptiveEngine, ScheduleShape, TriggerPolicy};
+use edgeshard::adaptive::scenario::{
+    continuous_churn_scenario, device_churn_scenario, ChurnConfig, ContinuousChurnConfig,
+    ContinuousChurnReport,
+};
+use edgeshard::adaptive::{
+    AdaptiveConfig, AdaptiveEngine, DeviceShape, NetworkDynamics, ScheduleShape, TriggerPolicy,
+};
 use edgeshard::cluster::presets;
-use edgeshard::coordinator::api::GroupRequest;
-use edgeshard::coordinator::{Engine, EngineConfig};
+use edgeshard::coordinator::api::{GenRequest, GroupRequest};
+use edgeshard::coordinator::{ContinuousConfig, Engine, EngineConfig};
 use edgeshard::planner::{Plan, PlanObjective, Stage};
 use edgeshard::profiler::Workload;
 use edgeshard::runtime::{ExecService, Manifest, MeasuredProfiler, WeightStore};
@@ -125,6 +130,238 @@ fn crashing_the_source_is_rejected_up_front() {
     })
     .unwrap_err();
     assert!(err.to_string().contains("source"), "{err}");
+}
+
+/// Shared invariants of a continuous-batching churn report: both
+/// adaptive runs recovered (checkpoint restore vs per-row re-prefill),
+/// blamed the crashed device, and served per-request token streams
+/// byte-identical to the clean continuous control run.
+fn assert_continuous_recovered(
+    report: &ContinuousChurnReport,
+    cfg: &ContinuousChurnConfig,
+    dead: usize,
+) {
+    assert_eq!(
+        report.checkpointed_failovers.len(),
+        1,
+        "checkpoint run: {:?}",
+        report.checkpointed_failovers
+    );
+    assert_eq!(
+        report.reprefilled_failovers.len(),
+        1,
+        "re-prefill run: {:?}",
+        report.reprefilled_failovers
+    );
+    let ck = &report.checkpointed_failovers[0];
+    let rp = &report.reprefilled_failovers[0];
+    assert_eq!(ck.dead_device, dead, "checkpoint run blamed {ck:?}");
+    assert_eq!(rp.dead_device, dead, "re-prefill run blamed {rp:?}");
+    for f in [ck, rp] {
+        assert!(
+            f.stalled_ms >= cfg.heartbeat_timeout_ms,
+            "declared dead too early: {f:?}"
+        );
+        assert!(
+            f.stalled_ms < cfg.heartbeat_timeout_ms * 4.0,
+            "detection took too long: {f:?}"
+        );
+        assert!(
+            !f.to_plan.contains(&format!("d{dead}:")),
+            "failover plan still uses the dead device: {f:?}"
+        );
+    }
+
+    // both recovery paths exercised
+    assert!(report.checkpoints_taken > 0, "no checkpoint was collected");
+    assert!(ck.via_checkpoint, "checkpoint run fell back: {ck:?}");
+    assert!(ck.restored_groups >= 1, "no run restored: {ck:?}");
+    assert!(ck.restore_kv_bytes > 0, "restore shipped no KV: {ck:?}");
+    assert!(!rp.via_checkpoint, "re-prefill run used a checkpoint: {rp:?}");
+    assert_eq!(rp.restored_groups, 0);
+    assert!(rp.replayed_iters > 0, "re-prefill run replayed nothing");
+
+    // the correctness anchor: byte-identical per-request streams, each
+    // honoring its own max_new_tokens
+    let clean = report.static_clean.token_rows();
+    assert_eq!(clean.len(), cfg.gen_lens.len());
+    let mut want: Vec<usize> = cfg.gen_lens.clone();
+    want.sort_unstable();
+    let mut got: Vec<usize> = clean.iter().map(|r| r.len()).collect();
+    got.sort_unstable();
+    assert_eq!(got, want, "clean control served wrong lengths");
+    assert_eq!(
+        report.checkpointed.token_rows(),
+        clean,
+        "checkpoint-restore recovery changed tokens"
+    );
+    assert_eq!(
+        report.reprefilled.token_rows(),
+        clean,
+        "re-prefill recovery changed tokens"
+    );
+}
+
+#[test]
+fn continuous_mid_decode_crash_recovers_byte_identical() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    // The tentpole invariant: a device crash mid-continuous-run — runs
+    // half-full, rows admitted/retired/recomposed since the last
+    // checkpoint — is detected, failed over, and every request's stream
+    // stays byte-identical to an uninterrupted continuous run.
+    let cfg = ContinuousChurnConfig::default();
+    let report = continuous_churn_scenario(&cfg).unwrap();
+    assert_continuous_recovered(&report, &cfg, 1);
+    // mid-decode: tokens had folded before the loss was declared
+    assert!(report.checkpointed_failovers[0].at_iter > 0);
+    assert!(report.reprefilled_failovers[0].at_iter > 0);
+}
+
+#[test]
+fn continuous_crash_during_admission_window_recovers() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    // Crash almost immediately: batch-1 prefill admissions are still in
+    // flight (few if any tokens folded), so recovery leans on re-sent
+    // admissions rather than history replay.  The streams must still be
+    // byte-identical — and with nothing folded there may be nothing to
+    // restore, so only the byte-identical anchor and the blame are
+    // asserted here.
+    let cfg = ContinuousChurnConfig {
+        crash_at_ms: 5.0,
+        ..ContinuousChurnConfig::default()
+    };
+    let report = continuous_churn_scenario(&cfg).unwrap();
+    for (label, fos) in [
+        ("checkpoint", &report.checkpointed_failovers),
+        ("re-prefill", &report.reprefilled_failovers),
+    ] {
+        // This early, the silence ranking may not yet separate the two
+        // non-source devices, so the first blame can be wrong — the
+        // bounded re-detection round (or a second stall) must converge
+        // on the real corpse, and the final plan must exclude it.
+        assert!(
+            (1..=2).contains(&fos.len()),
+            "{label} run did not converge: {fos:?}"
+        );
+        let last = fos.last().unwrap();
+        assert_eq!(last.dead_device, 1, "{label} run's final blame: {last:?}");
+        assert!(
+            !last.to_plan.contains("d1:"),
+            "{label} run's final plan still uses the corpse: {last:?}"
+        );
+    }
+    let clean = report.static_clean.token_rows();
+    assert_eq!(clean.len(), cfg.gen_lens.len());
+    assert_eq!(
+        report.checkpointed.token_rows(),
+        clean,
+        "admission-window recovery changed tokens (checkpoint cfg)"
+    );
+    assert_eq!(
+        report.reprefilled.token_rows(),
+        clean,
+        "admission-window recovery changed tokens (re-prefill cfg)"
+    );
+}
+
+#[test]
+fn continuous_checkpoint_straddling_recomposition_restores() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    // One run growing 1 → 2 → 4 with retirements throughout: admits,
+    // evicts and grow/shrink compacts land between the last committed
+    // checkpoint and the crash, so the restore must reconcile a
+    // composition (and possibly a batch shape) that no longer matches
+    // the snapshot.
+    let cfg = ContinuousChurnConfig {
+        gen_lens: vec![24, 8, 24, 8, 16, 24],
+        runs: 1,
+        max_batch: None,
+        initial_batch: Some(1),
+        checkpoint_every: 3,
+        ..ContinuousChurnConfig::default()
+    };
+    let report = continuous_churn_scenario(&cfg).unwrap();
+    assert_continuous_recovered(&report, &cfg, 1);
+}
+
+#[test]
+fn dead_stage_without_stall_hook_errors_instead_of_hanging() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    // Continuous serving with stall detection disabled (infinite
+    // heartbeat timeout → the driver takes the plain-receive path): a
+    // stage host dying must surface as an error within the dead-man
+    // interval, never wedge the serving loop.
+    let manifest = Manifest::synthetic_tiny();
+    let weights = WeightStore::synthetic(&manifest, 0);
+    let (_svc, exec) = ExecService::start_sim(&manifest).unwrap();
+    let cluster = presets::tiny_demo(0);
+    let mut profiler = MeasuredProfiler::new(&manifest, &weights, exec.clone());
+    profiler.reps = 2;
+    let traces = profiler
+        .profile(
+            &cluster,
+            Workload {
+                prompt_len: 32,
+                gen_len: 24,
+                batch: 1,
+            },
+        )
+        .unwrap();
+    let n = manifest.config.n_layers + 2;
+    let plan = Plan {
+        objective: PlanObjective::Latency,
+        stages: vec![
+            Stage { device: 0, start: 0, end: 3 },
+            Stage { device: 2, start: 3, end: n },
+        ],
+        predicted_ms: 0.0,
+    };
+    let requests: Vec<GenRequest> = (0..2)
+        .map(|i| GenRequest {
+            id: 1 + i as u64,
+            prompt: (0..32).map(|t| (t + i) % 256).collect(),
+            max_new_tokens: 24,
+        })
+        .collect();
+    let dynamics = NetworkDynamics::new().device(2, DeviceShape::CrashAt(60.0));
+    let mut adaptive = AdaptiveEngine::new(
+        &manifest,
+        &weights,
+        exec.clone(),
+        plan,
+        cluster,
+        traces,
+        AdaptiveConfig {
+            engine: EngineConfig::default(),
+            dynamics: Some(dynamics),
+            dynamics_tick_real_ms: 4.0,
+            // INFINITY = stall polling (and thus failover) disabled
+            heartbeat_timeout_ms: f64::INFINITY,
+            ..AdaptiveConfig::default()
+        },
+    );
+    let t0 = std::time::Instant::now();
+    let err = adaptive
+        .generate_continuous(
+            &requests,
+            &ContinuousConfig {
+                runs: 1,
+                dead_man_real_ms: 1_500.0,
+                ..ContinuousConfig::default()
+            },
+        )
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("delivered nothing"),
+        "unexpected error: {err}"
+    );
+    // errored out promptly (dead-man interval + slack), not after the
+    // default 60 s — and certainly not a hang
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(20),
+        "dead-man error took {:?}",
+        t0.elapsed()
+    );
 }
 
 #[test]
