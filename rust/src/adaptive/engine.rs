@@ -64,6 +64,7 @@ use super::dynamics::{DynamicsDriver, NetworkDynamics};
 use super::monitor::{LivenessDetector, Monitor};
 use super::replan::{Decision, MigrationDiff, Replanner, TriggerPolicy};
 use crate::cluster::{Cluster, DeviceLiveness, LiveCluster};
+use crate::coordinator::admission::AdmissionQueue;
 use crate::coordinator::api::{GenRequest, GenResult, GroupRequest};
 use crate::coordinator::driver::{
     drive_groups, drive_slots, send_decode, send_prefill, DriveHooks, DriveView, StallView,
@@ -133,6 +134,15 @@ pub struct AdaptiveConfig {
     /// checkpointing, in which case failover recovers by re-prefilling
     /// from token history instead of checkpoint replay.
     pub checkpoint_every: usize,
+    /// Simulated ms a device-death verdict stays standing before it
+    /// expires and the device re-enters the replanner's candidate pool
+    /// (`INFINITY`, the default, keeps the old exclude-forever
+    /// behavior).  An excluded device produces no observations, so
+    /// without a TTL a crashed-and-**rejoined** host could never win its
+    /// hardware back; with one, the replanner may re-adopt it — and if
+    /// the verdict was right after all, the next stall simply re-blames
+    /// it (one wasted failover round, never wrong tokens).
+    pub verdict_ttl_ms: f64,
 }
 
 impl Default for AdaptiveConfig {
@@ -149,6 +159,7 @@ impl Default for AdaptiveConfig {
             heartbeat_timeout_ms: f64::INFINITY,
             stall_poll_real_ms: 25.0,
             checkpoint_every: 0,
+            verdict_ttl_ms: f64::INFINITY,
         }
     }
 }
@@ -201,6 +212,8 @@ pub struct AdaptiveStats {
     pub ttft: Histogram,
     /// Decode-step latency (first tokens excluded — they are TTFT).
     pub iter_latency: Histogram,
+    /// Admission-queue wait per request (continuous serving only).
+    pub queue_delay: Histogram,
     /// Real rows / total rows over every frame sent.
     pub padding_efficiency: f64,
     /// Control-loop rounds that ran.
@@ -289,16 +302,15 @@ enum FailoverAttempt {
 }
 
 /// What one adaptive drive serves: pre-packed groups through
-/// [`drive_groups`], or raw requests through the continuous-batching
-/// slot loop ([`drive_slots`]).
-#[derive(Clone, Copy)]
+/// [`drive_groups`], or an admission queue through the
+/// continuous-batching slot loop ([`drive_slots`]).
 enum DriveMode<'q> {
     Groups {
         groups: &'q [GroupRequest],
         window: usize,
     },
     Slots {
-        requests: &'q [GenRequest],
+        queue: &'q mut AdmissionQueue,
         ccfg: &'q ContinuousConfig,
     },
 }
@@ -442,12 +454,17 @@ impl DriveHooks for AdaptiveHooks<'_, '_> {
         if !self.replan_due(view.received) {
             return Ok(false);
         }
-        self.monitor.drain_at(sim_now_ms(self.t0, self.scale));
+        let now_ms = sim_now_ms(self.t0, self.scale);
+        self.monitor.drain_at(now_ms);
         let obs_cluster = self.monitor.observed_cluster();
         let obs_traces = self
             .monitor
             .observed_traces(&self.eng.base_traces, &self.eng.plan);
-        // devices declared dead stay out of the candidate pool
+        // Devices declared dead stay out of the candidate pool — until
+        // their verdict's TTL expires (a rejoined host produces no
+        // observations while excluded, so only expiry can let the
+        // replanner win recovered hardware back).
+        self.detector.expire(now_ms);
         let pool: Vec<usize> = (0..obs_cluster.len())
             .filter(|d| !self.detector.is_dead(*d))
             .collect();
@@ -455,8 +472,9 @@ impl DriveHooks for AdaptiveHooks<'_, '_> {
             &self.eng.plan,
             &obs_traces,
             &obs_cluster,
-            sim_now_ms(self.t0, self.scale),
+            now_ms,
             &pool,
+            view.remaining_iters,
         );
         if let Decision::Migrate {
             plan,
@@ -511,6 +529,9 @@ impl DriveHooks for AdaptiveHooks<'_, '_> {
             view.stalled_real_ms
         };
         self.monitor.drain_at(now_ms);
+        // expired verdicts re-enter suspicion: if the host is genuinely
+        // still dead, the ranking below re-blames it right here
+        self.detector.expire(now_ms);
         let plan_devices = self.eng.plan.devices();
         let Some(dead) = self
             .detector
@@ -525,7 +546,7 @@ impl DriveHooks for AdaptiveHooks<'_, '_> {
              the source holds the prompts and the embedding (privacy pin) — nothing to fail \
              over to"
         );
-        self.detector.mark_dead(dead);
+        self.detector.mark_dead(dead, now_ms);
         // a pending migration's target may include the corpse, and an
         // in-flight checkpoint probe died with the pipeline — drop both
         // (the last *committed* checkpoint stays valid for recovery)
@@ -651,7 +672,7 @@ impl DriveHooks for AdaptiveHooks<'_, '_> {
                         "re-detection blames source device {source} after a stalled \
                          failover replay — nothing to fail over to"
                     );
-                    self.detector.mark_dead(next);
+                    self.detector.mark_dead(next, sim_now_ms(self.t0, self.scale));
                     last_dead = next;
                 }
             }
@@ -724,7 +745,25 @@ impl<'a> AdaptiveEngine<'a> {
         requests: &[GenRequest],
         ccfg: &ContinuousConfig,
     ) -> Result<(Vec<GenResult>, AdaptiveStats)> {
-        self.run(DriveMode::Slots { requests, ccfg })
+        let mut queue = AdmissionQueue::closed_loop(requests);
+        self.run(DriveMode::Slots {
+            queue: &mut queue,
+            ccfg,
+        })
+    }
+
+    /// Continuous batching over an arrival-driven [`AdmissionQueue`]
+    /// (open-loop serving) under the full adaptive stack.  Failover works
+    /// mid-stream: only in-flight frames die with a crashed pipeline —
+    /// queued arrivals simply wait out the recovery, and their TTFT
+    /// (measured from arrival) absorbs the stall, which is exactly the
+    /// open-loop recovery cost `repro churn` reports.
+    pub fn generate_from_source(
+        &mut self,
+        queue: &mut AdmissionQueue,
+        ccfg: &ContinuousConfig,
+    ) -> Result<(Vec<GenResult>, AdaptiveStats)> {
+        self.run(DriveMode::Slots { queue, ccfg })
     }
 
     /// Whether every stage of `plan` could hold the KV caches of groups
@@ -786,7 +825,7 @@ impl<'a> AdaptiveEngine<'a> {
         // compiled sizes clipped by the configured cap, mirroring
         // `SlotScheduler::new` (an uncapped maximum would skew every
         // hysteresis baseline toward iterations that never occur)
-        let batch = match mode {
+        let batch = match &mode {
             DriveMode::Groups { groups, .. } => groups.iter().map(|g| g.batch).max().unwrap_or(1),
             DriveMode::Slots { ccfg, .. } => {
                 let cap = ccfg.max_batch.unwrap_or(usize::MAX);
@@ -816,7 +855,8 @@ impl<'a> AdaptiveEngine<'a> {
         let max_migrations = self.cfg.max_migrations;
         let checkpoint_every = self.cfg.checkpoint_every;
         let stall_poll_real_ms = self.cfg.stall_poll_real_ms;
-        let detector = LivenessDetector::new(self.cfg.heartbeat_timeout_ms);
+        let detector =
+            LivenessDetector::with_ttl(self.cfg.heartbeat_timeout_ms, self.cfg.verdict_ttl_ms);
         let mut hooks = AdaptiveHooks {
             eng: self,
             monitor: &mut monitor,
@@ -830,7 +870,7 @@ impl<'a> AdaptiveEngine<'a> {
             max_migrations,
             checkpoint_every,
             stall_poll_real_ms,
-            slot_mode: matches!(mode, DriveMode::Slots { .. }),
+            slot_mode: matches!(&mode, DriveMode::Slots { .. }),
             pending: None,
             checkpoint: None,
             pending_ck: None,
@@ -850,8 +890,8 @@ impl<'a> AdaptiveEngine<'a> {
                 Strategy::NoBubble,
                 &mut hooks,
             ),
-            DriveMode::Slots { requests, ccfg } => {
-                drive_slots(&mut wired, &driver_cfg, requests, ccfg, &mut hooks)
+            DriveMode::Slots { queue, ccfg } => {
+                drive_slots(&mut wired, &driver_cfg, queue, ccfg, &mut hooks)
             }
         };
         let migrations = std::mem::take(&mut hooks.migrations);
@@ -879,6 +919,7 @@ impl<'a> AdaptiveEngine<'a> {
             throughput_tps: dstats.throughput_tps,
             ttft: dstats.ttft,
             iter_latency: dstats.iter_latency,
+            queue_delay: dstats.queue_delay,
             padding_efficiency: dstats.padding_efficiency,
             replan_evaluations: replanner.evaluations(),
             migrations,

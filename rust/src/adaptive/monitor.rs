@@ -335,37 +335,64 @@ impl Monitor {
 pub struct LivenessDetector {
     /// Simulated ms of pipeline stall before a device may be declared dead.
     pub timeout_ms: f64,
-    /// Devices declared dead, oldest verdict first.
-    dead: Vec<usize>,
+    /// Simulated ms a dead verdict stays standing before
+    /// [`LivenessDetector::expire`] retracts it (`INFINITY` = a verdict
+    /// never expires).  The TTL is what lets a crashed-and-rejoined
+    /// device be re-adopted: an *excluded* device produces no
+    /// observations, so no amount of healthy uptime can clear its
+    /// verdict — only expiry can.  A wrong expiry is cheap (the next
+    /// stall re-blames the corpse, costing one failover round), a
+    /// never-expiring verdict on recovered hardware is a permanent
+    /// capacity loss.
+    pub verdict_ttl_ms: f64,
+    /// Devices declared dead with their verdict times, oldest first.
+    dead: Vec<(usize, f64)>,
 }
 
 impl LivenessDetector {
     pub fn new(timeout_ms: f64) -> Self {
+        Self::with_ttl(timeout_ms, f64::INFINITY)
+    }
+
+    /// A detector whose verdicts expire after `verdict_ttl_ms` simulated
+    /// ms (see [`LivenessDetector::expire`]).
+    pub fn with_ttl(timeout_ms: f64, verdict_ttl_ms: f64) -> Self {
         LivenessDetector {
             timeout_ms,
+            verdict_ttl_ms,
             dead: Vec::new(),
         }
     }
 
     pub fn is_dead(&self, device: usize) -> bool {
-        self.dead.contains(&device)
+        self.dead.iter().any(|&(d, _)| d == device)
     }
 
     /// Devices currently declared dead, oldest verdict first.
-    pub fn dead(&self) -> &[usize] {
-        &self.dead
+    pub fn dead(&self) -> Vec<usize> {
+        self.dead.iter().map(|&(d, _)| d).collect()
     }
 
-    /// Record a verdict (idempotent).
-    pub fn mark_dead(&mut self, device: usize) {
-        if !self.dead.contains(&device) {
-            self.dead.push(device);
+    /// Record a verdict at `now_ms` (idempotent; the original verdict
+    /// time wins, so re-blaming cannot keep refreshing a TTL).
+    pub fn mark_dead(&mut self, device: usize, now_ms: f64) {
+        if !self.is_dead(device) {
+            self.dead.push((device, now_ms));
         }
     }
 
     /// Retract a verdict (e.g. fresh evidence of life).
     pub fn mark_alive(&mut self, device: usize) {
-        self.dead.retain(|&d| d != device);
+        self.dead.retain(|&(d, _)| d != device);
+    }
+
+    /// Retract every verdict older than the TTL.  Call sites pass the
+    /// same simulated clock they stamp observations with, so expiry and
+    /// heartbeats share a timeline.
+    pub fn expire(&mut self, now_ms: f64) {
+        if self.verdict_ttl_ms.is_finite() {
+            self.dead.retain(|&(_, at)| now_ms - at < self.verdict_ttl_ms);
+        }
     }
 
     /// Keep only the `n` most recent verdicts — the self-healing path
@@ -602,15 +629,35 @@ mod tests {
         // never-heard devices rank as silent forever
         assert_eq!(det.suspect(&[0, 7, 1], &m, 600.0), Some(7));
         // verdicts are excluded from later rounds, and demotable
-        det.mark_dead(1);
+        det.mark_dead(1, 700.0);
         assert!(det.is_dead(1));
         assert_eq!(det.suspect(&[0, 1, 2], &m, 600.0), Some(2));
-        det.mark_dead(2);
+        det.mark_dead(2, 710.0);
         assert_eq!(det.dead(), &[1, 2]);
         det.demote_to(1);
         assert_eq!(det.dead(), &[2]);
         det.mark_alive(2);
         assert!(!det.is_dead(2));
+    }
+
+    #[test]
+    fn verdicts_expire_after_ttl() {
+        let mut det = LivenessDetector::with_ttl(500.0, 1000.0);
+        det.mark_dead(1, 100.0);
+        assert!(det.is_dead(1));
+        // inside the TTL the verdict stands
+        det.expire(1099.0);
+        assert!(det.is_dead(1));
+        // re-blaming never refreshes the original verdict time
+        det.mark_dead(1, 1050.0);
+        det.expire(1100.0);
+        assert!(!det.is_dead(1), "verdict survived its TTL");
+        assert!(det.dead().is_empty());
+        // the default (infinite TTL) never expires
+        let mut det = LivenessDetector::new(500.0);
+        det.mark_dead(2, 0.0);
+        det.expire(f64::MAX);
+        assert!(det.is_dead(2));
     }
 
     #[test]

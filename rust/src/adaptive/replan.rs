@@ -33,6 +33,14 @@ pub struct TriggerPolicy {
     pub improve_factor: f64,
     /// Cooldown between migrations, simulated ms.
     pub min_interval_ms: f64,
+    /// Migration **cost awareness**: adopt a candidate only if its
+    /// predicted total savings over the remaining iterations,
+    /// `(cur − cand) × remaining`, exceed `migration_cost_factor ×` the
+    /// predicted migration pause (the KV freight's delivery time on the
+    /// observed network).  1.0 = break even over the remaining tokens;
+    /// higher demands the pause amortize with margin; 0 disables the
+    /// gate (the pre-cost-awareness behavior).
+    pub migration_cost_factor: f64,
 }
 
 impl Default for TriggerPolicy {
@@ -41,6 +49,7 @@ impl Default for TriggerPolicy {
             degrade_factor: 1.4,
             improve_factor: 1.15,
             min_interval_ms: 0.0,
+            migration_cost_factor: 1.0,
         }
     }
 }
@@ -198,8 +207,8 @@ impl Replanner {
         self.last_migrate_ms = now_ms;
     }
 
-    /// One control-loop round over the full device pool; see
-    /// [`Replanner::evaluate_pool`].
+    /// One control-loop round over the full device pool with an
+    /// unbounded amortization horizon; see [`Replanner::evaluate_pool`].
     pub fn evaluate(
         &mut self,
         current: &Plan,
@@ -208,14 +217,19 @@ impl Replanner {
         now_ms: f64,
     ) -> Decision {
         let pool: Vec<usize> = (0..cluster.len()).collect();
-        self.evaluate_pool(current, traces, cluster, now_ms, &pool)
+        self.evaluate_pool(current, traces, cluster, now_ms, &pool, u64::MAX)
     }
 
     /// One control-loop round: compare the current plan's prediction on
     /// the observed state against its baseline, and if it degraded past
     /// the band, try to find a plan — over `pool` only, so devices the
     /// liveness detector has declared dead stay out of candidates — that
-    /// is decisively better *on that same observed state*.
+    /// is decisively better *on that same observed state* **and** whose
+    /// migration pause amortizes over the `remaining_iters` decode
+    /// iterations this serve still owes (see
+    /// [`TriggerPolicy::migration_cost_factor`]): a cheaper steady state
+    /// is not worth adopting if the generation ends before the KV
+    /// freight pays for itself.
     pub fn evaluate_pool(
         &mut self,
         current: &Plan,
@@ -223,6 +237,7 @@ impl Replanner {
         cluster: &Cluster,
         now_ms: f64,
         pool: &[usize],
+        remaining_iters: u64,
     ) -> Decision {
         self.evaluations += 1;
         let cur = self.predict_ms(current, traces, cluster);
@@ -249,8 +264,15 @@ impl Replanner {
         {
             return keep;
         }
-        self.triggers += 1;
         let diff = migration_diff(current, &cand, &traces.kv_bytes_per_seq, self.batch);
+        // cost awareness: the pause is paid once, up front, on the
+        // observed network; the per-iteration savings accrue only over
+        // what is left to generate
+        let savings_ms = (cur - cand_pred) * remaining_iters as f64;
+        if savings_ms < self.policy.migration_cost_factor * diff.pause_ms(cluster) {
+            return keep;
+        }
+        self.triggers += 1;
         Decision::Migrate {
             plan: cand,
             diff,
@@ -348,6 +370,42 @@ mod tests {
             }
             Decision::Keep { .. } => panic!("expected migration"),
         }
+    }
+
+    #[test]
+    fn cost_awareness_blocks_unamortizable_migrations() {
+        let (traces, mut cluster, plan) = setup();
+        let baseline = sequential_latency_ms(&plan, &traces, &cluster);
+        let mut r = Replanner::new(
+            PlanObjective::Latency,
+            TriggerPolicy::default(),
+            1,
+            baseline,
+        );
+        let devs = plan.devices();
+        for w in devs.windows(2) {
+            cluster.set_bandwidth(w[0], w[1], 0.2);
+        }
+        let pool: Vec<usize> = (0..cluster.len()).collect();
+        // with an unbounded horizon the degraded state migrates, and the
+        // freight it would move is real (the pause is not free)
+        let d = r.evaluate_pool(&plan, &traces, &cluster, 0.0, &pool, u64::MAX);
+        let Decision::Migrate { diff, .. } = d else {
+            panic!("expected migration with unbounded horizon")
+        };
+        assert!(diff.pause_ms(&cluster) > 0.0, "test premise: freight is not free");
+        // with no runway left, the identical degraded state must keep:
+        // the serve ends before the pause pays for itself
+        assert!(matches!(
+            r.evaluate_pool(&plan, &traces, &cluster, 0.0, &pool, 0),
+            Decision::Keep { .. }
+        ));
+        // a zero cost factor disables the gate entirely
+        r.policy.migration_cost_factor = 0.0;
+        assert!(matches!(
+            r.evaluate_pool(&plan, &traces, &cluster, 0.0, &pool, 0),
+            Decision::Migrate { .. }
+        ));
     }
 
     #[test]

@@ -695,6 +695,289 @@ pub fn continuous_churn_scenario(cfg: &ContinuousChurnConfig) -> Result<Continuo
     })
 }
 
+/// Knobs of the **open-loop** churn experiment: the continuous-batching
+/// crash scenario served under Poisson arrivals, so a failover's real
+/// cost — queue growth during the stall — lands in client-observed TTFT
+/// instead of being invisible to a closed-loop queue.
+#[derive(Debug, Clone)]
+pub struct OpenLoopChurnConfig {
+    pub requests: usize,
+    /// Per-burst generation lengths (ragged mix).
+    pub gen_lens: Vec<usize>,
+    /// Mean Poisson interarrival gap, ms.  Sized so the offered load
+    /// stays below capacity — the TTFT inflation must come from the
+    /// recovery stall, not from steady-state saturation.
+    pub mean_interarrival_ms: f64,
+    pub runs: usize,
+    pub max_batch: Option<usize>,
+    /// Which device crashes (never 0 — the source is pinned).
+    pub crash_device: usize,
+    pub crash_at_ms: f64,
+    pub heartbeat_timeout_ms: f64,
+    pub checkpoint_every: usize,
+    pub time_scale: f64,
+    pub seed: u64,
+}
+
+impl Default for OpenLoopChurnConfig {
+    fn default() -> Self {
+        // ~160 requested tokens over a ~640 ms arrival span ≈ 250 tok/s
+        // offered, under the ~400 tok/s the 2×2-slot pipeline sustains:
+        // pre-crash requests see normal TTFT, requests arriving during
+        // the [crash, recovery] window absorb the stall, and the arrival
+        // span outlives the crash so both populations exist.
+        OpenLoopChurnConfig {
+            requests: 16,
+            gen_lens: vec![4, 8, 12, 16],
+            mean_interarrival_ms: 40.0,
+            runs: 2,
+            max_batch: Some(2),
+            crash_device: 1,
+            crash_at_ms: 250.0,
+            heartbeat_timeout_ms: 450.0,
+            checkpoint_every: 4,
+            time_scale: 1.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Everything the open-loop churn experiment produced.
+#[derive(Debug)]
+pub struct OpenLoopChurnReport {
+    pub initial_plan: String,
+    /// Adaptive open-loop run under the crash.
+    pub churn: RunSummary,
+    pub failovers: Vec<FailoverRecord>,
+    pub final_plan: String,
+    /// The control: a static engine serving the same arrivals on a
+    /// clean network.
+    pub clean: RunSummary,
+    /// The recovery window `[crash, post-recovery]` (drive-clock ms)
+    /// requests are classified into by their first-token time.
+    pub window_ms: (f64, f64),
+    /// p99 TTFT of requests whose first token landed inside the window.
+    pub ttft_p99_in_window_ms: f64,
+    /// p99 TTFT of everything outside it.
+    pub ttft_p99_outside_ms: f64,
+    /// `in / outside` — the headline open-loop recovery cost.
+    pub ttft_inflation: f64,
+    /// Requests inside / outside the window.
+    pub in_window: usize,
+    pub outside: usize,
+    /// Queue-delay p99 of the churn run, ms.
+    pub queue_p99_ms: f64,
+    pub tokens_identical: bool,
+}
+
+/// Slack added past `crash + stall + restore-pause` when bounding the
+/// recovery window: covers the replay of served history onto the new
+/// pipeline, whose duration the failover record does not carry.
+const RECOVERY_WINDOW_SLACK_MS: f64 = 150.0;
+
+/// Run the open-loop churn experiment; see [`OpenLoopChurnConfig`].
+pub fn open_loop_churn_scenario(cfg: &OpenLoopChurnConfig) -> Result<OpenLoopChurnReport> {
+    anyhow::ensure!(
+        cfg.crash_device != 0,
+        "crash_device 0 is the source — there is nothing to fail over to"
+    );
+    let manifest = Manifest::synthetic(mini_config(), vec![1, 2, 4]);
+    let weights = WeightStore::synthetic(&manifest, cfg.seed);
+    let (_svc, exec) = ExecService::start_sim(&manifest)?;
+
+    let workload = Workload {
+        prompt_len: manifest.config.prefill_len,
+        gen_len: cfg.gen_lens.iter().copied().max().unwrap_or(1),
+        batch: 4,
+    };
+    let cluster = mini_cluster(&manifest, workload);
+    let mut profiler = MeasuredProfiler::new(&manifest, &weights, exec.clone());
+    profiler.reps = 2;
+    let traces = profiler.profile(&cluster, workload)?;
+    let plan = three_stage_plan(manifest.config.n_layers + 2);
+    let initial_plan = plan.describe();
+
+    let trace = crate::workload::RaggedTraceGen {
+        mean_burst: 2,
+        mean_interarrival_ms: cfg.mean_interarrival_ms,
+        ..crate::workload::RaggedTraceGen::new(
+            manifest.config.prefill_len,
+            manifest.config.vocab_size as i32,
+            cfg.gen_lens.clone(),
+            cfg.seed,
+        )
+    }
+    .generate(cfg.requests);
+    let arrival: std::collections::HashMap<u64, f64> =
+        trace.iter().map(|r| (r.id, r.arrival_ms)).collect();
+
+    let ccfg = ContinuousConfig {
+        runs: cfg.runs,
+        max_batch: cfg.max_batch,
+        ..ContinuousConfig::default()
+    };
+    let engine_cfg = EngineConfig {
+        time_scale: cfg.time_scale,
+        ..EngineConfig::default()
+    };
+    let dynamics =
+        NetworkDynamics::new().device(cfg.crash_device, DeviceShape::CrashAt(cfg.crash_at_ms));
+
+    // 1. adaptive open-loop serving under the crash
+    let adaptive_cfg = AdaptiveConfig {
+        engine: engine_cfg.clone(),
+        dynamics: Some(dynamics),
+        dynamics_tick_real_ms: 4.0,
+        heartbeat_timeout_ms: cfg.heartbeat_timeout_ms,
+        checkpoint_every: cfg.checkpoint_every,
+        // wide hysteresis: this experiment isolates failover
+        policy: crate::adaptive::replan::TriggerPolicy {
+            degrade_factor: 10.0,
+            ..Default::default()
+        },
+        ..AdaptiveConfig::default()
+    };
+    let mut engine = AdaptiveEngine::new(
+        &manifest,
+        &weights,
+        exec.clone(),
+        plan.clone(),
+        cluster.clone(),
+        traces.clone(),
+        adaptive_cfg,
+    );
+    let mut queue = crate::coordinator::AdmissionQueue::replay(&trace);
+    let (results, mut stats) = engine
+        .generate_from_source(&mut queue, &ccfg)
+        .context("open-loop churn run")?;
+    let queue_p99_ms = stats.queue_delay.percentile(99.0);
+    let failovers = std::mem::take(&mut stats.failovers);
+    let final_plan = stats.final_plan.clone();
+    let churn = summarize(
+        "open-loop+crash",
+        results,
+        stats.tokens,
+        stats.makespan_ms,
+        &mut stats.iter_latency,
+        stats.padding_efficiency,
+    );
+
+    // 2. the control: static open-loop serving, clean network, same trace
+    let mut c_engine =
+        Engine::build(&manifest, &weights, exec.clone(), &plan, &cluster, &engine_cfg)?;
+    let mut c_queue = crate::coordinator::AdmissionQueue::replay(&trace);
+    let (c_results, mut c_stats) = c_engine
+        .generate_from_source(&mut c_queue, &ccfg)
+        .context("open-loop clean run")?;
+    c_engine.shutdown()?;
+    let clean = summarize(
+        "open-loop+clean",
+        c_results,
+        c_stats.tokens,
+        c_stats.makespan_ms,
+        &mut c_stats.iter_latency,
+        c_stats.padding_efficiency,
+    );
+
+    // 3. classify by first-token time: the recovery window spans the
+    //    crash through detection (stall), restore freight and replay
+    let win_hi = cfg.crash_at_ms
+        + failovers
+            .iter()
+            .map(|f| f.stalled_ms + f.pause_ms)
+            .fold(0.0, f64::max)
+        + RECOVERY_WINDOW_SLACK_MS;
+    let window_ms = (cfg.crash_at_ms, win_hi);
+    let mut in_hist = crate::metrics::Histogram::new();
+    let mut out_hist = crate::metrics::Histogram::new();
+    for r in &churn.results {
+        let first_tok_at = arrival.get(&r.id).copied().unwrap_or(0.0) + r.ttft_ms;
+        if first_tok_at >= window_ms.0 && first_tok_at <= window_ms.1 {
+            in_hist.record(r.ttft_ms);
+        } else {
+            out_hist.record(r.ttft_ms);
+        }
+    }
+    let ttft_p99_in_window_ms = in_hist.percentile(99.0);
+    let ttft_p99_outside_ms = out_hist.percentile(99.0);
+    let ttft_inflation = if ttft_p99_outside_ms > 0.0 {
+        ttft_p99_in_window_ms / ttft_p99_outside_ms
+    } else {
+        0.0
+    };
+    let tokens_identical = churn.token_rows() == clean.token_rows();
+
+    Ok(OpenLoopChurnReport {
+        initial_plan,
+        churn,
+        failovers,
+        final_plan,
+        clean,
+        window_ms,
+        ttft_p99_in_window_ms,
+        ttft_p99_outside_ms,
+        ttft_inflation,
+        in_window: in_hist.len(),
+        outside: out_hist.len(),
+        queue_p99_ms,
+        tokens_identical,
+    })
+}
+
+/// Render the open-loop churn report as the markdown `edgeshard repro
+/// churn` appends.
+pub fn open_loop_churn_markdown(r: &OpenLoopChurnReport) -> String {
+    let mut out = String::new();
+    out.push_str("# Open-loop failover — recovery-window TTFT inflation\n\n");
+    out.push_str(&format!("initial plan: `{}`\n", r.initial_plan));
+    out.push_str(&format!("final plan:   `{}`\n\n", r.final_plan));
+    let rows: Vec<Vec<String>> = [&r.churn, &r.clean]
+        .iter()
+        .map(|s| {
+            vec![
+                s.label.clone(),
+                format!("{:.1}", s.tokens_per_s),
+                format!("{:.2}", s.p95_iter_ms),
+                format!("{:.0}", s.makespan_ms),
+            ]
+        })
+        .collect();
+    out.push_str(&markdown_table(
+        &["engine", "tokens/s", "p95 inter-token (ms)", "makespan (ms)"],
+        &rows,
+    ));
+    out.push('\n');
+    for f in &r.failovers {
+        out.push_str(&format!(
+            "failover @token {}: d{} declared dead after {:.0} ms silence, `{}` → `{}` \
+             ({} runs restored, {} frames replayed, {:.1} ms restore pause)\n",
+            f.at_iter,
+            f.dead_device,
+            f.stalled_ms,
+            f.from_plan,
+            f.to_plan,
+            f.restored_groups,
+            f.replayed_iters,
+            f.pause_ms,
+        ));
+    }
+    out.push_str(&format!(
+        "\nrecovery window [{:.0}, {:.0}] ms: p99 TTFT {:.0} ms over {} in-window requests \
+         vs {:.0} ms over {} outside ({:.1}x inflation, confined to the window); \
+         queue-delay p99 {:.0} ms; tokens identical vs clean open-loop run: {}\n",
+        r.window_ms.0,
+        r.window_ms.1,
+        r.ttft_p99_in_window_ms,
+        r.in_window,
+        r.ttft_p99_outside_ms,
+        r.outside,
+        r.ttft_inflation,
+        r.queue_p99_ms,
+        r.tokens_identical
+    ));
+    out
+}
+
 /// Render the continuous-batching churn report as the markdown
 /// `edgeshard repro churn` appends.
 pub fn continuous_churn_markdown(r: &ContinuousChurnReport) -> String {

@@ -1,0 +1,526 @@
+//! Arrival-driven admission: how requests enter the serving stack.
+//!
+//! Before this layer existed the front door packed fixed groups behind a
+//! gather window and the continuous-batching engine only ever drained a
+//! pre-materialized closed-loop queue — offered load, queue delay and
+//! the cost of a failover under load were all invisible.  The admission
+//! layer splits "where requests come from" from "how slots are filled":
+//!
+//! * a [`RequestSource`] produces requests over the **drive clock**
+//!   (real milliseconds since the generation drive started).  Three
+//!   sources ship: [`QueueSource`] (the closed-loop fixed queue as the
+//!   degenerate everything-arrives-at-t=0 case), [`TraceSource`]
+//!   (deterministic replay of a [`crate::workload::TraceGen`] /
+//!   [`crate::workload::RaggedTraceGen`] Poisson trace), and
+//!   [`LiveSource`] (the TCP front door's connection handlers feeding an
+//!   mpsc channel);
+//! * an [`AdmissionQueue`] wraps the source with a pluggable
+//!   [`AdmissionPolicy`] — plain FIFO, or FIFO with a bound on how many
+//!   batch-1 prefills may be dispatched ahead of an in-flight decode
+//!   step (the prefill/decode interleaving knob that caps TTFT-induced
+//!   decode jitter);
+//! * the slot drive loop ([`super::driver::drive_slots`]) polls the
+//!   queue between iterations and pushes arrivals into the
+//!   [`super::scheduler::SlotScheduler`] as slots free up.  Arrival
+//!   timestamps flow into the stats, so TTFT decomposes into
+//!   **queue delay** (arrival → batch-1 prefill dispatch) plus
+//!   **prefill** (dispatch → first token).
+//!
+//! Token numerics are arrival-independent by construction: every row of
+//! a composed batch decodes at its own absolute position, so *when* a
+//! request was admitted never changes *what* it generates — the
+//! open-loop replay of a trace emits byte-identical tokens to serving
+//! the same requests closed-loop (asserted in `tests/open_loop.rs`).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::time::{Duration, Instant};
+
+use super::api::{GenRequest, GenResult};
+use crate::workload::Request;
+
+/// One request stamped with its arrival time (drive-clock ms).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrivedRequest {
+    pub req: GenRequest,
+    /// Arrival offset from drive start, milliseconds on the drive clock.
+    pub arrival_ms: f64,
+}
+
+/// Where requests come from.  Implementations are polled (never blocked
+/// on) by the slot drive loop between iterations.
+pub trait RequestSource: Send {
+    /// Every request that has arrived by `now_ms` (drive-clock ms) and
+    /// has not been returned before.  Must not block.
+    fn poll(&mut self, now_ms: f64) -> Vec<ArrivedRequest>;
+
+    /// Drive-clock ms of the next known arrival, if the source knows it
+    /// (trace replay does; a live socket does not).  Lets an idle drive
+    /// sleep until the next arrival instead of spinning.
+    fn next_arrival_ms(&self) -> Option<f64>;
+
+    /// `true` once no further request will ever arrive — everything the
+    /// source will ever produce has been returned by [`Self::poll`].
+    fn closed(&self) -> bool;
+
+    /// A request this source produced has finished.  Live sources use
+    /// this to answer their client immediately (mid-drive) instead of
+    /// waiting for the whole drive to return.
+    fn on_result(&mut self, result: &GenResult) {
+        let _ = result;
+    }
+
+    /// Block up to `timeout` waiting for the next arrival — called by an
+    /// *idle* drive (nothing queued or in flight).  The default sleeps
+    /// the whole timeout, which is exact for sources that know their
+    /// next arrival time (the drive sizes the timeout from
+    /// [`Self::next_arrival_ms`]); a live source should instead block on
+    /// its channel so an idle server neither spins nor adds latency.
+    fn wait(&mut self, timeout: Duration) {
+        std::thread::sleep(timeout);
+    }
+}
+
+/// The degenerate closed-loop source: a fixed queue, everything arrives
+/// at t = 0.
+#[derive(Debug)]
+pub struct QueueSource {
+    pending: VecDeque<GenRequest>,
+}
+
+impl QueueSource {
+    pub fn new(requests: &[GenRequest]) -> Self {
+        QueueSource {
+            pending: requests.iter().cloned().collect(),
+        }
+    }
+}
+
+impl RequestSource for QueueSource {
+    fn poll(&mut self, _now_ms: f64) -> Vec<ArrivedRequest> {
+        self.pending
+            .drain(..)
+            .map(|req| ArrivedRequest {
+                req,
+                arrival_ms: 0.0,
+            })
+            .collect()
+    }
+
+    fn next_arrival_ms(&self) -> Option<f64> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(0.0)
+        }
+    }
+
+    fn closed(&self) -> bool {
+        self.pending.is_empty()
+    }
+}
+
+/// Deterministic open-loop replay of a generated request trace
+/// ([`crate::workload::TraceGen`] / [`crate::workload::RaggedTraceGen`]):
+/// each request becomes visible exactly at its `arrival_ms` on the drive
+/// clock.  With the engine's `time_scale` at 1.0 the drive clock and the
+/// simulated clock coincide, so trace arrivals line up with scenario
+/// schedules (crash times, link drops).
+#[derive(Debug)]
+pub struct TraceSource {
+    /// Sorted by arrival.
+    trace: Vec<ArrivedRequest>,
+    next: usize,
+}
+
+impl TraceSource {
+    pub fn new(mut trace: Vec<ArrivedRequest>) -> Self {
+        trace.sort_by(|a, b| {
+            a.arrival_ms
+                .partial_cmp(&b.arrival_ms)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        TraceSource { trace, next: 0 }
+    }
+
+    /// Replay a [`crate::workload`] trace verbatim.
+    pub fn from_trace(trace: &[Request]) -> Self {
+        Self::new(
+            trace
+                .iter()
+                .map(|r| ArrivedRequest {
+                    req: GenRequest {
+                        id: r.id,
+                        prompt: r.prompt.clone(),
+                        max_new_tokens: r.max_new_tokens,
+                    },
+                    arrival_ms: r.arrival_ms.max(0.0),
+                })
+                .collect(),
+        )
+    }
+}
+
+impl RequestSource for TraceSource {
+    fn poll(&mut self, now_ms: f64) -> Vec<ArrivedRequest> {
+        let mut out = Vec::new();
+        while self.next < self.trace.len() && self.trace[self.next].arrival_ms <= now_ms {
+            out.push(self.trace[self.next].clone());
+            self.next += 1;
+        }
+        out
+    }
+
+    fn next_arrival_ms(&self) -> Option<f64> {
+        self.trace.get(self.next).map(|a| a.arrival_ms)
+    }
+
+    fn closed(&self) -> bool {
+        self.next >= self.trace.len()
+    }
+}
+
+/// One live request as the TCP connection handlers hand it over: the
+/// parsed request, the channel its reply rides back on, and the instant
+/// it arrived (stamped by the handler, so queueing inside the channel is
+/// part of the measured queue delay).
+pub struct IncomingRequest {
+    pub req: GenRequest,
+    pub reply: Sender<GenResult>,
+    pub at: Instant,
+}
+
+/// Live arrivals from the TCP front door: connection handler threads
+/// push [`IncomingRequest`]s into an mpsc channel; the drive loop polls
+/// it between iterations.  The source assigns its own dense request ids
+/// (client-supplied ids are ignored), clamps `max_new_tokens` to what
+/// the compiled shapes can hold, and answers each client the moment its
+/// request finishes ([`RequestSource::on_result`]).
+pub struct LiveSource {
+    rx: Receiver<IncomingRequest>,
+    start: Instant,
+    next_id: u64,
+    accepted: usize,
+    /// Stop accepting after this many requests (None = serve forever).
+    max_requests: Option<usize>,
+    /// Upper bound on `max_new_tokens` (compiled `max_seq - prompt_len`).
+    max_new_cap: usize,
+    replies: HashMap<u64, Sender<GenResult>>,
+    /// A request received by a blocking [`RequestSource::wait`], handed
+    /// to the next [`RequestSource::poll`].
+    stashed: Option<IncomingRequest>,
+    disconnected: bool,
+}
+
+impl LiveSource {
+    pub fn new(
+        rx: Receiver<IncomingRequest>,
+        max_requests: Option<usize>,
+        max_new_cap: usize,
+    ) -> Self {
+        LiveSource {
+            rx,
+            start: Instant::now(),
+            next_id: 1,
+            accepted: 0,
+            max_requests,
+            max_new_cap: max_new_cap.max(1),
+            replies: HashMap::new(),
+            stashed: None,
+            disconnected: false,
+        }
+    }
+
+    /// Accept one raw incoming request: assign the server-side id, clamp
+    /// the generation length, stamp the arrival.
+    fn accept(&mut self, mut inc: IncomingRequest) -> ArrivedRequest {
+        inc.req.id = self.next_id;
+        self.next_id += 1;
+        self.accepted += 1;
+        inc.req.max_new_tokens = inc.req.max_new_tokens.clamp(1, self.max_new_cap);
+        // saturates to 0 for requests racing the drive start
+        let arrival_ms = inc.at.duration_since(self.start).as_secs_f64() * 1e3;
+        self.replies.insert(inc.req.id, inc.reply);
+        ArrivedRequest {
+            req: inc.req,
+            arrival_ms,
+        }
+    }
+}
+
+impl RequestSource for LiveSource {
+    fn poll(&mut self, _now_ms: f64) -> Vec<ArrivedRequest> {
+        let mut out = Vec::new();
+        if let Some(inc) = self.stashed.take() {
+            if self.closed() {
+                // raced max_requests: the stash was never accepted; drop
+                // it so its handler gets "engine unavailable"
+                drop(inc);
+            } else {
+                out.push(self.accept(inc));
+            }
+        }
+        while !self.closed() {
+            match self.rx.try_recv() {
+                Ok(inc) => out.push(self.accept(inc)),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    self.disconnected = true;
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Block on the channel instead of sleeping: an idle front door
+    /// wakes the moment a request lands, with zero polling in between.
+    fn wait(&mut self, timeout: Duration) {
+        if self.stashed.is_some() || self.closed() {
+            return;
+        }
+        match self.rx.recv_timeout(timeout) {
+            Ok(inc) => self.stashed = Some(inc),
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => self.disconnected = true,
+        }
+    }
+
+    fn next_arrival_ms(&self) -> Option<f64> {
+        None
+    }
+
+    fn closed(&self) -> bool {
+        self.disconnected
+            || self
+                .max_requests
+                .map(|m| self.accepted >= m)
+                .unwrap_or(false)
+    }
+
+    fn on_result(&mut self, result: &GenResult) {
+        if let Some(tx) = self.replies.remove(&result.id) {
+            // a vanished client is not a serving error
+            let _ = tx.send(result.clone());
+        }
+    }
+}
+
+/// How waiting requests may be admitted into free slots.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Fill every free slot, oldest request first (unbounded: a burst of
+    /// arrivals may stack a whole batch of batch-1 prefills ahead of an
+    /// in-flight run's next decode step).
+    #[default]
+    Fifo,
+    /// FIFO, but at most this many batch-1 prefill admissions may be
+    /// dispatched ahead of any single decode step of a run that already
+    /// has live rows — bounding how long a prefill burst can delay
+    /// in-flight decodes (each admission costs one full pipeline pass
+    /// before the step behind it executes).  Runs with no live rows
+    /// admit freely: there is no decode step to delay.
+    BoundedPrefill(usize),
+}
+
+/// A [`RequestSource`] plus the [`AdmissionPolicy`] the slot scheduler
+/// must apply to it — the one handle [`super::driver::drive_slots`]
+/// serves from.
+pub struct AdmissionQueue {
+    source: Box<dyn RequestSource>,
+    policy: AdmissionPolicy,
+}
+
+impl AdmissionQueue {
+    pub fn new(source: Box<dyn RequestSource>, policy: AdmissionPolicy) -> Self {
+        AdmissionQueue { source, policy }
+    }
+
+    /// The degenerate closed-loop queue: everything arrives at t = 0,
+    /// FIFO admission — exactly the pre-admission-layer behavior.
+    pub fn closed_loop(requests: &[GenRequest]) -> Self {
+        Self::new(Box::new(QueueSource::new(requests)), AdmissionPolicy::Fifo)
+    }
+
+    /// Open-loop replay of a workload trace (FIFO admission).
+    pub fn replay(trace: &[Request]) -> Self {
+        Self::new(
+            Box::new(TraceSource::from_trace(trace)),
+            AdmissionPolicy::Fifo,
+        )
+    }
+
+    /// Swap the admission policy (builder style).
+    pub fn with_policy(mut self, policy: AdmissionPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn policy(&self) -> &AdmissionPolicy {
+        &self.policy
+    }
+
+    pub fn poll(&mut self, now_ms: f64) -> Vec<ArrivedRequest> {
+        self.source.poll(now_ms)
+    }
+
+    pub fn next_arrival_ms(&self) -> Option<f64> {
+        self.source.next_arrival_ms()
+    }
+
+    pub fn closed(&self) -> bool {
+        self.source.closed()
+    }
+
+    pub fn on_result(&mut self, result: &GenResult) {
+        self.source.on_result(result);
+    }
+
+    /// Block up to `timeout` for the next arrival (idle drive) — see
+    /// [`RequestSource::wait`].
+    pub fn wait(&mut self, timeout: Duration) {
+        self.source.wait(timeout);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn req(id: u64) -> GenRequest {
+        GenRequest {
+            id,
+            prompt: vec![1, 2, 3],
+            max_new_tokens: 4,
+        }
+    }
+
+    #[test]
+    fn queue_source_delivers_everything_at_zero() {
+        let mut s = QueueSource::new(&[req(1), req(2)]);
+        assert!(!s.closed());
+        assert_eq!(s.next_arrival_ms(), Some(0.0));
+        let got = s.poll(0.0);
+        assert_eq!(got.len(), 2);
+        assert!(got.iter().all(|a| a.arrival_ms == 0.0));
+        assert!(s.closed());
+        assert!(s.poll(100.0).is_empty());
+        assert_eq!(s.next_arrival_ms(), None);
+    }
+
+    #[test]
+    fn trace_source_releases_by_arrival() {
+        let trace = vec![
+            Request {
+                id: 1,
+                arrival_ms: 0.0,
+                prompt: vec![1],
+                max_new_tokens: 2,
+            },
+            Request {
+                id: 2,
+                arrival_ms: 50.0,
+                prompt: vec![2],
+                max_new_tokens: 2,
+            },
+            Request {
+                id: 3,
+                arrival_ms: 90.0,
+                prompt: vec![3],
+                max_new_tokens: 2,
+            },
+        ];
+        let mut s = TraceSource::from_trace(&trace);
+        let first = s.poll(0.0);
+        assert_eq!(first.len(), 1);
+        assert_eq!(first[0].req.id, 1);
+        assert!(!s.closed());
+        assert_eq!(s.next_arrival_ms(), Some(50.0));
+        // nothing between arrivals
+        assert!(s.poll(49.9).is_empty());
+        let mid = s.poll(90.0);
+        assert_eq!(mid.len(), 2);
+        assert_eq!(mid[1].arrival_ms, 90.0);
+        assert!(s.closed());
+    }
+
+    #[test]
+    fn live_source_assigns_ids_clamps_and_replies() {
+        let (tx, rx) = mpsc::channel();
+        let mut s = LiveSource::new(rx, Some(2), 8);
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(IncomingRequest {
+            req: GenRequest {
+                id: 999,
+                prompt: vec![5],
+                max_new_tokens: 1000,
+            },
+            reply: rtx,
+            at: Instant::now(),
+        })
+        .unwrap();
+        let got = s.poll(0.0);
+        assert_eq!(got.len(), 1);
+        // server-assigned id, clamped generation length
+        assert_eq!(got[0].req.id, 1);
+        assert_eq!(got[0].req.max_new_tokens, 8);
+        assert!(got[0].arrival_ms >= 0.0);
+        assert!(!s.closed());
+        // the reply rides back through on_result
+        let result = GenResult {
+            id: 1,
+            tokens: vec![7, 8],
+            ttft_ms: 1.0,
+            total_ms: 2.0,
+        };
+        s.on_result(&result);
+        assert_eq!(rrx.recv().unwrap(), result);
+        // second accept hits max_requests and closes the source
+        let (rtx2, _rrx2) = mpsc::channel();
+        tx.send(IncomingRequest {
+            req: req(7),
+            reply: rtx2,
+            at: Instant::now(),
+        })
+        .unwrap();
+        assert_eq!(s.poll(1.0).len(), 1);
+        assert!(s.closed());
+        assert!(s.poll(2.0).is_empty());
+    }
+
+    #[test]
+    fn live_source_wait_blocks_then_hands_over_via_poll() {
+        let (tx, rx) = mpsc::channel();
+        let mut s = LiveSource::new(rx, None, 8);
+        // nothing pending: wait times out without stashing
+        let t = Instant::now();
+        s.wait(Duration::from_millis(5));
+        assert!(t.elapsed() >= Duration::from_millis(5));
+        assert!(s.poll(0.0).is_empty());
+        // a pending request is picked up by wait and delivered by poll
+        tx.send(IncomingRequest {
+            req: req(1),
+            reply: mpsc::channel().0,
+            at: Instant::now(),
+        })
+        .unwrap();
+        s.wait(Duration::from_secs(5));
+        let got = s.poll(1.0);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].req.id, 1);
+        // sender gone: wait marks the source closed
+        drop(tx);
+        s.wait(Duration::from_secs(5));
+        assert!(s.closed());
+    }
+
+    #[test]
+    fn admission_queue_wraps_source_and_policy() {
+        let mut q = AdmissionQueue::closed_loop(&[req(1)])
+            .with_policy(AdmissionPolicy::BoundedPrefill(2));
+        assert_eq!(*q.policy(), AdmissionPolicy::BoundedPrefill(2));
+        assert_eq!(q.poll(0.0).len(), 1);
+        assert!(q.closed());
+    }
+}

@@ -52,9 +52,13 @@
 //! ## Stats
 //!
 //! TTFT is recorded per group/request on its first token, measured from
-//! drive start in every mode (client-observed: queue wait included); that
-//! first token's latency is *not* recorded into `iter_latency` (it
-//! includes prefill — mixing it in polluted the decode-step histogram).
+//! the request's **arrival** (drive start for the closed-loop sources,
+//! where every request arrives at t = 0) — client-observed, queue wait
+//! included.  In slot mode the queue wait is also recorded separately
+//! ([`DriveStats::queue_delay`]: arrival → batch-1 prefill dispatch), so
+//! TTFT decomposes into queue delay + prefill.  The first token's
+//! latency is *not* recorded into `iter_latency` (it includes prefill —
+//! mixing it in polluted the decode-step histogram).
 //! `padding_efficiency` = real rows / total rows carried by every frame:
 //! 1.0 means no compute or KV was spent on padding or dead slots.
 
@@ -63,7 +67,8 @@ use std::collections::HashMap;
 use std::sync::mpsc::RecvTimeoutError;
 use std::time::{Duration, Instant};
 
-use super::api::{GenRequest, GenResult, GroupRequest};
+use super::admission::AdmissionQueue;
+use super::api::{GenResult, GroupRequest};
 use super::engine::Wired;
 use super::scheduler::{Action, ContinuousConfig, RunSnap, SeqEvent, SlotScheduler};
 use super::stage::{Payload, Phase, StageMsg, TokenMsg, TokenOrigin};
@@ -77,6 +82,13 @@ use crate::pipeline::Strategy;
 /// recovery, which resets the clock); a hook that wants to keep waiting
 /// longer should recover or abort explicitly instead.
 pub const DEAD_PIPELINE_REAL_MS: f64 = 60_000.0;
+
+/// Upper bound (real ms) on one idle wait for arrivals.  Trace replays
+/// sleep exactly to their next arrival (clamped here); a live source
+/// *blocks* on its channel for up to this long and wakes the instant a
+/// request lands — so the bound never adds latency, it only caps how
+/// long the drive goes between source-closure checks.
+const IDLE_WAIT_REAL_MS: f64 = 250.0;
 
 /// Compiled-shape contract the driver validates admissions against.
 #[derive(Debug, Clone)]
@@ -104,6 +116,12 @@ pub struct DriveStats {
     pub ttft: Histogram,
     /// Decode-step latency (first tokens excluded — they are TTFT).
     pub iter_latency: Histogram,
+    /// Admission-queue wait, one sample per request: arrival → batch-1
+    /// prefill dispatch (slot mode; first dispatch only, so failover
+    /// re-admits don't re-record).  Together with the prefill time this
+    /// decomposes TTFT: `ttft ≈ queue_delay + prefill`.  Empty in group
+    /// mode (groups are packed before the drive starts).
+    pub queue_delay: Histogram,
     /// Real rows / total rows over every work frame sent.
     pub padding_efficiency: f64,
 }
@@ -137,6 +155,10 @@ pub struct DriveView {
     /// Per-run composition + per-row served history (slot mode only) —
     /// what a checkpoint records as its restore watermark.
     pub runs: Vec<RunSnap>,
+    /// Decode iterations still owed to the furthest-from-done admitted
+    /// (or queued) request — the conservative horizon replan
+    /// cost-awareness amortizes a migration pause over.
+    pub remaining_iters: u64,
 }
 
 /// One still-unfinished group at a pipeline stall: the request plus its
@@ -418,7 +440,9 @@ pub fn drive_groups(
     let mut iter_lat = Histogram::new();
     let mut results = Vec::new();
     let mut active: HashMap<u64, Active> = HashMap::new();
-    let mut queue = groups.iter();
+    // admission cursor into `groups` (an index, not an iterator, so the
+    // hook view can still see what is queued but not yet admitted)
+    let mut next_group = 0usize;
     let mut in_flight_groups = 0usize;
     let mut received = 0u64;
     let mut real_tokens = 0u64;
@@ -431,8 +455,9 @@ pub fn drive_groups(
     let mut held: Vec<(u64, usize, Vec<i32>)> = Vec::new();
 
     // prime the window
-    while in_flight_groups < window {
-        let Some(g) = queue.next() else { break };
+    while in_flight_groups < window && next_group < groups.len() {
+        let g = &groups[next_group];
+        next_group += 1;
         send_prefill(wired, g)?;
         rows_real += g.real() as u64;
         rows_total += g.batch as u64;
@@ -571,7 +596,8 @@ pub fn drive_groups(
             // admit the next queued group (deferred while a barrier is
             // pending: the window re-primes after the barrier)
             if !pending_barrier {
-                if let Some(g) = queue.next() {
+                if let Some(g) = groups.get(next_group) {
+                    next_group += 1;
                     send_prefill(wired, g)?;
                     rows_real += g.real() as u64;
                     rows_total += g.batch as u64;
@@ -620,6 +646,16 @@ pub fn drive_groups(
                     })
                     .collect(),
                 runs: Vec::new(),
+                // queued-but-unadmitted groups count toward the horizon
+                // too — they will be served on whatever plan this drive
+                // ends up on, so a migration amortizes over them as well
+                remaining_iters: active
+                    .values()
+                    .filter(|x| !x.done)
+                    .map(|x| x.req.max_new_tokens.saturating_sub(x.folded()) as u64)
+                    .chain(groups[next_group..].iter().map(|g| g.max_new_tokens as u64))
+                    .max()
+                    .unwrap_or(0),
             };
             if hooks.after_token(wired, &view)? {
                 pending_barrier = true;
@@ -642,8 +678,9 @@ pub fn drive_groups(
                 a.in_flight = true;
                 a.sent = it;
             }
-            while in_flight_groups < window {
-                let Some(g) = queue.next() else { break };
+            while in_flight_groups < window && next_group < groups.len() {
+                let g = &groups[next_group];
+                next_group += 1;
                 send_prefill(wired, g)?;
                 rows_real += g.real() as u64;
                 rows_total += g.batch as u64;
@@ -659,13 +696,32 @@ pub fn drive_groups(
         last_progress = Instant::now();
     }
 
-    Ok((results, finish_stats(t0, real_tokens, ttft, iter_lat, rows_real, rows_total)))
+    let stats = finish_stats(
+        t0,
+        real_tokens,
+        ttft,
+        iter_lat,
+        Histogram::new(),
+        rows_real,
+        rows_total,
+    );
+    Ok((results, stats))
 }
 
-/// Drive raw requests through the iteration-level slot scheduler
-/// (continuous batching).  Requests are admitted into compiled batch
-/// slots as capacity frees up, retire individually, and every frame
-/// carries a per-iteration slot map.  See [`super::scheduler`].
+/// Drive an [`AdmissionQueue`] through the iteration-level slot
+/// scheduler (continuous batching).  Requests are pulled from the queue
+/// as they arrive, admitted into compiled batch slots as capacity frees
+/// up, retire individually, and every frame carries a per-iteration slot
+/// map.  See [`super::scheduler`] and [`super::admission`].
+///
+/// The queue's source decides the serving regime: the closed-loop
+/// [`super::admission::QueueSource`] reproduces the old fixed-queue
+/// behavior exactly (everything arrives at t = 0), a
+/// [`super::admission::TraceSource`] replays Poisson arrivals open-loop
+/// on the drive clock, and a [`super::admission::LiveSource`] serves the
+/// TCP front door.  Arrival timestamps flow into the stats: TTFT and
+/// per-request completion are measured from *arrival*, and
+/// [`DriveStats::queue_delay`] records arrival → prefill dispatch.
 ///
 /// `hooks` interpose exactly as in [`drive_groups`]: `after_token` may
 /// request a drain barrier (the loop stops pumping, lets every in-flight
@@ -673,12 +729,13 @@ pub fn drive_groups(
 /// same as on groups), and `stall_poll_real_ms`/`on_stall` enable
 /// device-loss failover — the hook receives each live run's [`RunSnap`]
 /// and, on recovery, the scheduler re-queues dead admissions and
-/// recomposes dead steps ([`SlotScheduler::on_failover`]).  Static
-/// serving passes [`NoHooks`].
+/// recomposes dead steps ([`SlotScheduler::on_failover`]); queued
+/// arrivals ride out a failover untouched (only in-flight frames die).
+/// Static serving passes [`NoHooks`].
 pub fn drive_slots(
     wired: &mut Wired,
     cfg: &DriverCfg,
-    requests: &[GenRequest],
+    queue: &mut AdmissionQueue,
     ccfg: &ContinuousConfig,
     hooks: &mut dyn DriveHooks,
 ) -> Result<(Vec<GenResult>, DriveStats)> {
@@ -688,17 +745,40 @@ pub fn drive_slots(
         "continuous batching needs a compiled batch-1 prefill (have {:?})",
         cfg.batch_sizes
     );
-    for r in requests {
+    let t0 = Instant::now();
+    // Every arrived request's prompt must fit the compiled shapes.
+    let fits = |id: u64, max_new: usize| -> Result<()> {
         anyhow::ensure!(
-            cfg.prompt_len + r.max_new_tokens <= cfg.max_seq,
-            "request {}: {} prompt + {} new tokens exceeds compiled max_seq {}",
-            r.id,
+            cfg.prompt_len + max_new <= cfg.max_seq,
+            "request {id}: {} prompt + {max_new} new tokens exceeds compiled max_seq {}",
             cfg.prompt_len,
-            r.max_new_tokens,
             cfg.max_seq
         );
+        Ok(())
+    };
+    let mut arrival_by_req: HashMap<u64, f64> = HashMap::new();
+
+    // The degenerate closed-loop source delivers everything at t = 0:
+    // take the whole queue up front so the initial compiled batch is
+    // sized from it, exactly like pre-admission-layer serving.  An open
+    // source starts the scheduler empty (smallest batch, grows with
+    // demand).
+    let initial = queue.poll(0.0);
+    for a in &initial {
+        fits(a.req.id, a.req.max_new_tokens)?;
+        arrival_by_req.insert(a.req.id, a.arrival_ms.max(0.0));
     }
-    let mut sched = SlotScheduler::new(ccfg, cfg.prompt_len, cfg.batch_sizes.clone(), requests)?;
+    let mut sched = if queue.closed() {
+        let reqs: Vec<_> = initial.iter().map(|a| a.req.clone()).collect();
+        SlotScheduler::new(ccfg, cfg.prompt_len, cfg.batch_sizes.clone(), &reqs)?
+    } else {
+        let mut s = SlotScheduler::new_open(ccfg, cfg.prompt_len, cfg.batch_sizes.clone())?;
+        for a in &initial {
+            s.push_request(&a.req)?;
+        }
+        s
+    };
+    sched.set_policy(queue.policy().clone());
     // Reject up front a slot configuration whose fully-admitted state
     // could not fit the per-stage KV budget — failing here beats a stage
     // thread dying on an over-budget insert_row mid-generation.  (Demand
@@ -713,13 +793,17 @@ pub fn drive_slots(
         cfg.kv_budget_bytes
     );
 
-    let t0 = Instant::now();
     let mut ttft = Histogram::new();
     let mut iter_lat = Histogram::new();
+    let mut queue_delay = Histogram::new();
+    // requests whose queue delay is already recorded (failover re-admits
+    // must not re-record)
+    let mut delay_recorded: std::collections::HashSet<u64> = std::collections::HashSet::new();
     let mut results = Vec::new();
     let mut real_tokens = 0u64;
-    // closed-loop: every request is enqueued at t0, so TTFT includes
-    // queue wait — the number a client of the serving system would see
+    // TTFT is measured from each request's *arrival* (0 for the
+    // closed-loop source), so queue wait is included — the number a
+    // client of the serving system would see
     let mut ttft_by_req: HashMap<u64, f64> = HashMap::new();
     // Per-run decode-gap baseline.  Run ids are stable across Compact
     // recomposition (the scheduler recomposes in place), so the baseline
@@ -742,15 +826,39 @@ pub fn drive_slots(
     let mut last_progress = Instant::now();
 
     loop {
+        // ingest arrivals first: anything that has arrived by now is
+        // admissible in this very pump (the closed-loop source is
+        // already drained and returns nothing)
+        let now_ms = t0.elapsed().as_secs_f64() * 1e3;
+        for a in queue.poll(now_ms) {
+            fits(a.req.id, a.req.max_new_tokens)?;
+            arrival_by_req.insert(a.req.id, a.arrival_ms.max(0.0));
+            sched.push_request(&a.req)?;
+        }
+        if queue.closed() {
+            // no further arrivals: drained runs may free their caches
+            sched.close();
+        }
+        let mut pumped = 0usize;
         if !pending_barrier {
             for action in sched.pump() {
+                pumped += 1;
                 match action {
                     Action::Admit {
                         run,
                         slot,
                         run_batch,
+                        req,
                         prompt,
                     } => {
+                        // the request leaves the admission queue here:
+                        // its queue delay is now known (first dispatch
+                        // only — a failover re-admit is not queue wait)
+                        if delay_recorded.insert(req) {
+                            let arr = arrival_by_req.get(&req).copied().unwrap_or(0.0);
+                            let now = t0.elapsed().as_secs_f64() * 1e3;
+                            queue_delay.record((now - arr).max(0.0));
+                        }
                         let msg = StageMsg::Admit {
                             run,
                             slot,
@@ -813,7 +921,31 @@ pub fn drive_slots(
                 last_progress = Instant::now();
                 continue;
             }
-            break;
+            if sched.done() && queue.closed() {
+                break;
+            }
+            if sched.idle() {
+                // nothing queued or in flight, but the source is still
+                // open: wait for the next arrival — exactly (trace
+                // replay knows its next arrival time) or blocking on the
+                // live channel — bounded so closure is still noticed
+                let now_ms = t0.elapsed().as_secs_f64() * 1e3;
+                let wait_ms = match queue.next_arrival_ms() {
+                    Some(t) => (t - now_ms).clamp(0.0, IDLE_WAIT_REAL_MS),
+                    None => IDLE_WAIT_REAL_MS,
+                };
+                if wait_ms > 0.0 {
+                    queue.wait(Duration::from_secs_f64(wait_ms / 1e3));
+                }
+                // idle waiting for arrivals is not pipeline silence
+                last_progress = Instant::now();
+                continue;
+            }
+            // not idle with nothing in flight: this pump must have made
+            // progress (e.g. flushed retirements / frees) — a pump that
+            // emits nothing here means the scheduler wedged
+            anyhow::ensure!(pumped > 0, "slot scheduler stalled with work left");
+            continue;
         }
         let polled = poll_token(
             wired,
@@ -849,7 +981,8 @@ pub fn drive_slots(
             match ev {
                 SeqEvent::First { req_id } => {
                     real_tokens += 1;
-                    let ms = now.duration_since(t0).as_secs_f64() * 1e3;
+                    let arr = arrival_by_req.get(&req_id).copied().unwrap_or(0.0);
+                    let ms = (now.duration_since(t0).as_secs_f64() * 1e3 - arr).max(0.0);
                     ttft.record(ms);
                     ttft_by_req.insert(req_id, ms);
                 }
@@ -868,12 +1001,16 @@ pub fn drive_slots(
                     let req_ttft = ttft_by_req.get(&req_id).copied().with_context(|| {
                         format!("request {req_id} finished without a recorded first token")
                     })?;
+                    let arr = arrival_by_req.get(&req_id).copied().unwrap_or(0.0);
                     results.push(GenResult {
                         id: req_id,
                         tokens,
                         ttft_ms: req_ttft,
-                        total_ms: now.duration_since(t0).as_secs_f64() * 1e3,
+                        total_ms: (now.duration_since(t0).as_secs_f64() * 1e3 - arr).max(0.0),
                     });
+                    // live sources answer their client right here,
+                    // mid-drive, instead of at the end of the loop
+                    queue.on_result(results.last().expect("just pushed"));
                 }
             }
         }
@@ -893,6 +1030,7 @@ pub fn drive_slots(
                 all_prefilled: !sched.any_prefilling(),
                 groups: Vec::new(),
                 runs,
+                remaining_iters: sched.max_remaining(),
             };
             if hooks.after_token(wired, &view)? {
                 pending_barrier = true;
@@ -904,7 +1042,16 @@ pub fn drive_slots(
     anyhow::ensure!(sched.done(), "slot scheduler stalled with work left");
 
     let (rows_real, rows_total) = sched.rows();
-    Ok((results, finish_stats(t0, real_tokens, ttft, iter_lat, rows_real, rows_total)))
+    let stats = finish_stats(
+        t0,
+        real_tokens,
+        ttft,
+        iter_lat,
+        queue_delay,
+        rows_real,
+        rows_total,
+    );
+    Ok((results, stats))
 }
 
 fn finish_stats(
@@ -912,6 +1059,7 @@ fn finish_stats(
     tokens: u64,
     ttft: Histogram,
     iter_latency: Histogram,
+    queue_delay: Histogram,
     rows_real: u64,
     rows_total: u64,
 ) -> DriveStats {
@@ -926,6 +1074,7 @@ fn finish_stats(
         },
         ttft,
         iter_latency,
+        queue_delay,
         padding_efficiency: if rows_total > 0 {
             rows_real as f64 / rows_total as f64
         } else {

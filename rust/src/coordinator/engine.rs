@@ -24,6 +24,7 @@
 use anyhow::{Context, Result};
 use std::sync::mpsc::{Receiver, Sender};
 
+use super::admission::AdmissionQueue;
 use super::api::{GenRequest, GenResult, GroupRequest};
 use super::driver::{drive_groups, drive_slots, DriverCfg, NoHooks};
 use super::kvcache::{GroupCache, KvPool};
@@ -69,11 +70,15 @@ pub struct EngineStats {
     pub tokens: u64,
     pub throughput_tps: f64,
     /// Time-to-first-token, one sample per real request, measured from
-    /// drive start (queue wait included — the client-observed number).
+    /// the request's arrival (drive start for closed-loop serving; queue
+    /// wait included — the client-observed number).
     pub ttft: Histogram,
     /// Per-iteration latency samples (decode steps only; the first token
     /// of a group is TTFT, not an inter-token gap).
     pub iter_latency: Histogram,
+    /// Admission-queue wait per request (arrival → batch-1 prefill
+    /// dispatch; continuous serving only — empty in group modes).
+    pub queue_delay: Histogram,
     /// Real rows / total rows over every frame sent: 1.0 = no compute or
     /// KV spent on padding rows or dead slots.
     pub padding_efficiency: f64,
@@ -87,6 +92,7 @@ impl From<super::driver::DriveStats> for EngineStats {
             throughput_tps: d.throughput_tps,
             ttft: d.ttft,
             iter_latency: d.iter_latency,
+            queue_delay: d.queue_delay,
             padding_efficiency: d.padding_efficiency,
         }
     }
@@ -314,11 +320,13 @@ impl Engine {
         self.run(groups, groups.len().max(1), Strategy::from_pipeline(strategy))
     }
 
-    /// Serve raw requests with **continuous batching**: iteration-level
-    /// admission into compiled batch slots, per-row retirement and KV
-    /// accounting, batch recomposition between iterations.  Requests need
-    /// no pre-packing (the slot scheduler replaces the batcher); token
-    /// streams are byte-identical to sequential serving.
+    /// Serve a fixed request queue with **continuous batching**:
+    /// iteration-level admission into compiled batch slots, per-row
+    /// retirement and KV accounting, batch recomposition between
+    /// iterations.  Requests need no pre-packing (the slot scheduler
+    /// replaces the batcher); token streams are byte-identical to
+    /// sequential serving.  This is the closed-loop degenerate case of
+    /// [`Engine::generate_from_source`] — everything arrives at t = 0.
     ///
     /// Requires a backend with per-row-position decode support (the sim
     /// backend has it; PJRT artifacts need recompiled decode variants).
@@ -327,9 +335,33 @@ impl Engine {
         requests: &[GenRequest],
         ccfg: &ContinuousConfig,
     ) -> Result<(Vec<GenResult>, EngineStats)> {
+        let mut queue = AdmissionQueue::closed_loop(requests);
+        self.generate_from_source(&mut queue, ccfg)
+    }
+
+    /// Serve an [`AdmissionQueue`] with continuous batching: requests
+    /// are pulled from the queue's source as they arrive — a Poisson
+    /// trace replay, the TCP front door's live channel, or the
+    /// closed-loop fixed queue — and admitted into slots as capacity
+    /// frees up, under the queue's
+    /// [`super::admission::AdmissionPolicy`].  TTFT and
+    /// [`EngineStats::queue_delay`] are measured from each request's
+    /// arrival.
+    pub fn generate_from_source(
+        &mut self,
+        queue: &mut AdmissionQueue,
+        ccfg: &ContinuousConfig,
+    ) -> Result<(Vec<GenResult>, EngineStats)> {
         let (results, stats) =
-            drive_slots(&mut self.wired, &self.driver_cfg, requests, ccfg, &mut NoHooks)?;
+            drive_slots(&mut self.wired, &self.driver_cfg, queue, ccfg, &mut NoHooks)?;
         Ok((results, stats.into()))
+    }
+
+    /// Longest generation the compiled shapes can hold
+    /// (`max_seq - prompt_len`) — what a front door should clamp
+    /// client-requested `max_new_tokens` to.
+    pub fn max_new_cap(&self) -> usize {
+        self.driver_cfg.max_seq.saturating_sub(self.driver_cfg.prompt_len).max(1)
     }
 
     fn run(

@@ -2,6 +2,11 @@
 //! (paper §III "Collaborative inference").
 //!
 //! * [`api`] — request/response types shared by engine, batcher, server.
+//! * [`admission`] — how requests *enter*: [`admission::RequestSource`]s
+//!   (closed-loop queue, Poisson trace replay, live TCP channel) behind
+//!   an [`admission::AdmissionQueue`] with a pluggable admission policy
+//!   (FIFO / bounded prefill interleaving).  Arrival timestamps flow
+//!   into the stats, so TTFT decomposes into queue delay + prefill.
 //! * [`kvcache`] — per-stage KV-cache pool with byte accounting (the
 //!   paper pre-allocates KV space on each participating device).
 //! * [`stage`] — one device actor: runs its layer range through the PJRT
@@ -24,6 +29,7 @@
 //! [`stage::StageMsg::Export`] (KV snapshot for migration) these are the
 //! hooks the [`crate::adaptive`] runtime drives live replanning through.
 
+pub mod admission;
 pub mod api;
 pub mod batcher;
 pub mod driver;
@@ -33,6 +39,10 @@ pub mod scheduler;
 pub mod server;
 pub mod stage;
 
+pub use admission::{
+    AdmissionPolicy, AdmissionQueue, ArrivedRequest, LiveSource, QueueSource, RequestSource,
+    TraceSource,
+};
 pub use api::{GenRequest, GenResult, GroupRequest};
 pub use batcher::Batcher;
 pub use driver::{

@@ -22,9 +22,15 @@
 //!   waiting, the scheduler emits [`Action::Admit`] — a batch-1 prefill
 //!   that travels the pipeline and installs its KV as *one row* of the
 //!   run's cache ([`crate::coordinator::kvcache::KvPool::insert_row`]).
-//!   Admission is FIFO over the arrival queue; because stage channels are
-//!   FIFO too, an admission sent before a decode step is guaranteed to be
-//!   resident before that step executes.
+//!   Admission order over the arrival queue is governed by the
+//!   [`super::admission::AdmissionPolicy`] — FIFO, or FIFO with a bound
+//!   on how many batch-1 prefills may be dispatched ahead of an
+//!   in-flight decode step; because stage channels are FIFO too, an
+//!   admission sent before a decode step is guaranteed to be resident
+//!   before that step executes.  The queue itself may be fed live: an
+//!   **open** scheduler ([`SlotScheduler::new_open`]) accepts arrivals
+//!   via [`SlotScheduler::push_request`] and keeps drained runs
+//!   allocated until [`SlotScheduler::close`].
 //! * **Iteration**: each [`Action::Step`] carries the per-iteration slot
 //!   map — per-row absolute positions, `-1` for dead rows, which the
 //!   kernels skip — so a composed batch mixes sequences at unrelated
@@ -61,6 +67,7 @@
 
 use std::collections::VecDeque;
 
+use super::admission::AdmissionPolicy;
 use super::api::GenRequest;
 use super::batcher::fit_prompt;
 use super::stage::{TokenMsg, TokenOrigin};
@@ -114,11 +121,14 @@ impl Default for ContinuousConfig {
 #[derive(Debug, Clone, PartialEq)]
 pub enum Action {
     /// Prefill `prompt` (already fitted to the compiled length) at batch
-    /// 1 and install it as row `slot` of run `run`.
+    /// 1 and install it as row `slot` of run `run`.  `req` is the
+    /// admitted request's id — the driver stamps its queue delay
+    /// (arrival → this dispatch) off it.
     Admit {
         run: u64,
         slot: usize,
         run_batch: usize,
+        req: u64,
         prompt: Vec<i32>,
     },
     /// One decode iteration over run `run`'s composed batch: `tokens` is
@@ -245,14 +255,57 @@ pub struct SlotScheduler {
     outbox: Vec<Action>,
     rows_real: u64,
     rows_total: u64,
+    /// Admission-order policy ([`SlotScheduler::set_policy`]).
+    policy: AdmissionPolicy,
+    /// An open scheduler expects more arrivals ([`SlotScheduler::push_request`])
+    /// and therefore keeps drained runs allocated (no [`Action::FreeRun`])
+    /// until [`SlotScheduler::close`].
+    open: bool,
 }
 
 impl SlotScheduler {
+    /// Closed-loop construction: the whole request queue is known up
+    /// front (and sizes the initial compiled batch).
     pub fn new(
         cfg: &ContinuousConfig,
         prompt_len: usize,
-        mut batch_sizes: Vec<usize>,
+        batch_sizes: Vec<usize>,
         requests: &[GenRequest],
+    ) -> Result<Self> {
+        let seqs: Vec<SeqState> = requests
+            .iter()
+            .map(|r| {
+                ensure!(r.max_new_tokens >= 1, "request {}: zero max_new_tokens", r.id);
+                ensure!(!r.prompt.is_empty(), "request {}: empty prompt", r.id);
+                Ok(SeqState {
+                    id: r.id,
+                    prompt: fit_prompt(&r.prompt, prompt_len),
+                    max_new: r.max_new_tokens,
+                    generated: Vec::new(),
+                })
+            })
+            .collect::<Result<_>>()?;
+        Self::build(cfg, prompt_len, batch_sizes, seqs, false)
+    }
+
+    /// Open-loop construction: requests arrive later through
+    /// [`SlotScheduler::push_request`], so runs start at the smallest
+    /// compiled batch (or `initial_batch`) and grow with demand, and
+    /// drained runs stay allocated until [`SlotScheduler::close`].
+    pub fn new_open(
+        cfg: &ContinuousConfig,
+        prompt_len: usize,
+        batch_sizes: Vec<usize>,
+    ) -> Result<Self> {
+        Self::build(cfg, prompt_len, batch_sizes, Vec::new(), true)
+    }
+
+    fn build(
+        cfg: &ContinuousConfig,
+        prompt_len: usize,
+        mut batch_sizes: Vec<usize>,
+        seqs: Vec<SeqState>,
+        open: bool,
     ) -> Result<Self> {
         batch_sizes.sort_unstable();
         batch_sizes.dedup();
@@ -270,24 +323,19 @@ impl SlotScheduler {
             );
         }
 
-        let seqs: Vec<SeqState> = requests
-            .iter()
-            .map(|r| {
-                ensure!(r.max_new_tokens >= 1, "request {}: zero max_new_tokens", r.id);
-                ensure!(!r.prompt.is_empty(), "request {}: empty prompt", r.id);
-                Ok(SeqState {
-                    id: r.id,
-                    prompt: fit_prompt(&r.prompt, prompt_len),
-                    max_new: r.max_new_tokens,
-                    generated: Vec::new(),
-                })
-            })
-            .collect::<Result<_>>()?;
         let n = seqs.len();
-        let n_runs = cfg.runs.max(1).min(n.max(1));
-        let init = cfg
-            .initial_batch
-            .unwrap_or_else(|| fit_batch(&batch_sizes, n.div_ceil(n_runs).max(1)));
+        let n_runs = if open {
+            cfg.runs.max(1)
+        } else {
+            cfg.runs.max(1).min(n.max(1))
+        };
+        let init = cfg.initial_batch.unwrap_or_else(|| {
+            if open {
+                batch_sizes[0]
+            } else {
+                fit_batch(&batch_sizes, n.div_ceil(n_runs).max(1))
+            }
+        });
         let runs = (0..n_runs)
             .map(|i| Run {
                 id: RUN_ID_BASE + i as u64,
@@ -308,7 +356,36 @@ impl SlotScheduler {
             outbox: Vec::new(),
             rows_real: 0,
             rows_total: 0,
+            policy: AdmissionPolicy::Fifo,
+            open,
         })
+    }
+
+    /// Swap the admission policy (applies from the next pump).
+    pub fn set_policy(&mut self, policy: AdmissionPolicy) {
+        self.policy = policy;
+    }
+
+    /// Enqueue one more request (open-loop arrival).  Validation matches
+    /// [`SlotScheduler::new`]; ids must be unique per drive (the TTFT
+    /// and result bookkeeping is keyed by them).
+    pub fn push_request(&mut self, r: &GenRequest) -> Result<()> {
+        ensure!(r.max_new_tokens >= 1, "request {}: zero max_new_tokens", r.id);
+        ensure!(!r.prompt.is_empty(), "request {}: empty prompt", r.id);
+        self.seqs.push(SeqState {
+            id: r.id,
+            prompt: fit_prompt(&r.prompt, self.prompt_len),
+            max_new: r.max_new_tokens,
+            generated: Vec::new(),
+        });
+        self.waiting.push_back(self.seqs.len() - 1);
+        Ok(())
+    }
+
+    /// The source is exhausted: no further [`SlotScheduler::push_request`]
+    /// will come, so drained runs may free their caches.
+    pub fn close(&mut self) {
+        self.open = false;
     }
 
     /// Smallest compiled batch ≥ `want` (clamped to the largest allowed).
@@ -317,10 +394,35 @@ impl SlotScheduler {
     }
 
     /// Upper bound on rows ever resident at once — every run at the
-    /// largest allowed batch, but never more than there are sequences —
-    /// what admission control must budget for.
+    /// largest allowed batch (an open scheduler cannot bound by request
+    /// count: arrivals are unbounded; a closed one never exceeds its
+    /// queue) — what admission control must budget for.
     pub fn worst_case_rows(&self) -> usize {
-        (self.runs.len() * self.batch_sizes.last().copied().unwrap_or(1)).min(self.seqs.len())
+        let cap = self.runs.len() * self.batch_sizes.last().copied().unwrap_or(1);
+        if self.open {
+            cap
+        } else {
+            cap.min(self.seqs.len())
+        }
+    }
+
+    /// Decode iterations still owed to the furthest-from-done admitted or
+    /// waiting sequence — a conservative lower bound on how many more
+    /// iterations this drive will run, which is what replan
+    /// cost-awareness amortizes a migration pause over.
+    pub fn max_remaining(&self) -> u64 {
+        let occupied = self.runs.iter().flat_map(|r| &r.slots).filter_map(|s| match s {
+            Slot::Prefilling { seq } | Slot::Active { seq, .. } => Some(*seq),
+            Slot::Free => None,
+        });
+        occupied
+            .chain(self.waiting.iter().copied())
+            .map(|seq| {
+                let s = &self.seqs[seq];
+                s.max_new.saturating_sub(s.generated.len()) as u64
+            })
+            .max()
+            .unwrap_or(0)
     }
 
     /// Next compiled batch strictly above `b`, if any.
@@ -367,8 +469,26 @@ impl SlotScheduler {
             }
         }
 
-        // admissions: fill free slots FIFO from the arrival queue
+        // admissions: fill free slots FIFO from the arrival queue.  The
+        // BoundedPrefill policy caps how many batch-1 prefills may be
+        // dispatched ahead of this run's next decode step (each one is a
+        // full pipeline pass the step must wait behind); a run with no
+        // live rows has no decode step to delay and admits freely.
+        let cap = match self.policy {
+            AdmissionPolicy::Fifo => usize::MAX,
+            AdmissionPolicy::BoundedPrefill(k) => {
+                if self.runs[ri].live() > 0 {
+                    k
+                } else {
+                    usize::MAX
+                }
+            }
+        };
+        let mut admits = 0usize;
         for slot in 0..self.runs[ri].batch {
+            if admits >= cap {
+                break;
+            }
             if !matches!(self.runs[ri].slots[slot], Slot::Free) {
                 continue;
             }
@@ -378,10 +498,12 @@ impl SlotScheduler {
                 run: run.id,
                 slot,
                 run_batch: run.batch,
+                req: self.seqs[seq].id,
                 prompt: self.seqs[seq].prompt.clone(),
             });
             run.slots[slot] = Slot::Prefilling { seq };
             run.allocated = true;
+            admits += 1;
             self.rows_real += 1;
             self.rows_total += 1;
         }
@@ -450,7 +572,10 @@ impl SlotScheduler {
             run.iter += 1;
             self.rows_real += live as u64;
             self.rows_total += run.batch as u64;
-        } else if run.prefilling() == 0 && self.waiting.is_empty() && run.allocated {
+        } else if !self.open && run.prefilling() == 0 && self.waiting.is_empty() && run.allocated {
+            // an open scheduler keeps the drained run's (empty) cache
+            // allocation: the next arrival re-admits into it, whereas a
+            // freed run can never serve again
             out.push(Action::FreeRun { run: run.id });
             self.runs[ri].freed = true;
         }
@@ -608,6 +733,7 @@ impl SlotScheduler {
                     run: run.id,
                     slot,
                     run_batch: run.batch,
+                    req: self.seqs[seq].id,
                     prompt: self.seqs[seq].prompt.clone(),
                 });
                 // the re-sent frame carries a real row again
@@ -617,15 +743,20 @@ impl SlotScheduler {
         }
     }
 
-    /// All sequences served, all retirements flushed, all runs freed.
-    pub fn done(&self) -> bool {
+    /// Nothing queued, composed or in flight — though runs may still
+    /// hold idle cache allocations while the scheduler is open (an idle
+    /// open scheduler is waiting for arrivals, not finished).
+    pub fn idle(&self) -> bool {
         self.waiting.is_empty()
             && self.outbox.is_empty()
             && self.runs.iter().all(|r| {
-                r.step_live.is_none()
-                    && r.slots.iter().all(|s| matches!(s, Slot::Free))
-                    && (r.freed || !r.allocated)
+                r.step_live.is_none() && r.slots.iter().all(|s| matches!(s, Slot::Free))
             })
+    }
+
+    /// All sequences served, all retirements flushed, all runs freed.
+    pub fn done(&self) -> bool {
+        self.idle() && self.runs.iter().all(|r| r.freed || !r.allocated)
     }
 
     /// (real rows, total rows) carried by every frame sent so far — the
@@ -867,5 +998,127 @@ mod tests {
         let fin = drive(&mut s);
         assert_eq!(fin.len(), 3);
         assert!(fin.values().all(|&n| n == 1));
+    }
+
+    #[test]
+    fn open_scheduler_serves_arrivals_across_lulls() {
+        // An open scheduler must keep its runs alive through a drained
+        // queue (no FreeRun) so a later arrival can be admitted, and
+        // must free them only after close().
+        let mut s = SlotScheduler::new_open(
+            &ContinuousConfig { runs: 1, ..ContinuousConfig::default() },
+            4,
+            vec![1, 2],
+        )
+        .unwrap();
+        // drive() asserts done(), which an open scheduler never reaches:
+        // answer frames by hand until it goes idle instead
+        fn drive_to_idle(s: &mut SlotScheduler) -> std::collections::HashMap<u64, usize> {
+            let mut finished = std::collections::HashMap::new();
+            let mut pending: VecDeque<TokenMsg> = VecDeque::new();
+            let mut guard = 0;
+            loop {
+                guard += 1;
+                assert!(guard < 1000, "open scheduler did not go idle");
+                for a in s.pump() {
+                    match a {
+                        Action::Admit { run, slot, .. } => {
+                            pending.push_back(tok(run, 0, vec![7], TokenOrigin::Admit { slot }))
+                        }
+                        Action::Step { run, iter, batch, .. } => {
+                            pending.push_back(tok(run, iter, vec![9; batch], TokenOrigin::Step))
+                        }
+                        _ => {}
+                    }
+                }
+                let Some(t) = pending.pop_front() else { break };
+                for ev in s.on_token(&t).unwrap() {
+                    if let SeqEvent::Finished { req_id, tokens } = ev {
+                        assert!(finished.insert(req_id, tokens.len()).is_none());
+                    }
+                }
+            }
+            finished
+        }
+
+        assert!(s.idle() && s.done(), "fresh open scheduler is idle");
+        s.push_request(&reqs(&[2])[0]).unwrap();
+        let fin = drive_to_idle(&mut s);
+        assert_eq!(fin.len(), 1);
+        // drained, but open: idle yes, done no (the run stays allocated)
+        assert!(s.idle());
+        assert!(!s.done(), "open scheduler freed its run during a lull");
+        // a second wave after the lull is served by the same run
+        s.push_request(&GenRequest { id: 200, prompt: vec![4, 5], max_new_tokens: 3 })
+            .unwrap();
+        let fin = drive_to_idle(&mut s);
+        assert_eq!(fin[&200], 3);
+        assert!(!s.done());
+        // close(): the next pump frees the drained run and done() flips
+        s.close();
+        let acts = s.pump();
+        assert!(acts.iter().any(|a| matches!(a, Action::FreeRun { .. })));
+        assert!(s.done());
+    }
+
+    #[test]
+    fn bounded_prefill_policy_caps_admissions_ahead_of_a_decode_step() {
+        // 2 one-token requests retire at admission, freeing 2 slots while
+        // 6 active rows keep decoding and 2 more requests wait.  FIFO
+        // stacks both waiting prefills ahead of the next decode step; a
+        // BoundedPrefill(1) policy admits exactly one per step gap.
+        let lens = [1usize, 1, 4, 4, 4, 4, 4, 4, 4, 4];
+        let mk = |policy: AdmissionPolicy| {
+            let rs = reqs(&lens);
+            let mut s = SlotScheduler::new(
+                &ContinuousConfig { runs: 1, ..ContinuousConfig::default() },
+                4,
+                vec![1, 8],
+                &rs,
+            )
+            .unwrap();
+            s.set_policy(policy);
+            // first pump: 8 admissions (no decode step in flight yet —
+            // the bound only protects in-flight decodes)
+            let acts = s.pump();
+            assert_eq!(
+                acts.iter().filter(|a| matches!(a, Action::Admit { .. })).count(),
+                8
+            );
+            // slots 0 and 1 retire at admission (max_new 1); 2..8 decode
+            for slot in 0..8 {
+                s.on_token(&tok(RUN_ID_BASE, 0, vec![7], TokenOrigin::Admit { slot }))
+                    .unwrap();
+            }
+            // next pump: 2 free slots, 2 waiting, 6 live rows
+            s.pump()
+        };
+
+        let fifo = mk(AdmissionPolicy::Fifo);
+        assert_eq!(
+            fifo.iter().filter(|a| matches!(a, Action::Admit { .. })).count(),
+            2,
+            "FIFO fills every free slot: {fifo:?}"
+        );
+        let bounded = mk(AdmissionPolicy::BoundedPrefill(1));
+        assert_eq!(
+            bounded.iter().filter(|a| matches!(a, Action::Admit { .. })).count(),
+            1,
+            "bounded policy must admit exactly one prefill: {bounded:?}"
+        );
+        // the decode step still rides behind the single admission
+        assert!(bounded.iter().any(|a| matches!(a, Action::Step { .. })));
+        // and the bound starves nobody: the scheduler still drains fully
+        let rs = reqs(&lens);
+        let mut s = SlotScheduler::new(
+            &ContinuousConfig { runs: 1, ..ContinuousConfig::default() },
+            4,
+            vec![1, 8],
+            &rs,
+        )
+        .unwrap();
+        s.set_policy(AdmissionPolicy::BoundedPrefill(1));
+        let fin = drive(&mut s);
+        assert_eq!(fin.len(), lens.len());
     }
 }

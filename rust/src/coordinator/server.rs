@@ -7,155 +7,187 @@
 //! ← {"id": 1, "text": "…", "tokens": [..], "ttft_ms": 12.3, "total_ms": 87.0}
 //! ```
 //!
-//! Requests are byte-tokenized (the tiny model's 256-entry vocabulary),
-//! batched by [`super::Batcher`] with a small gather window, and executed
-//! on the pipelined engine.  This is the demo front door, not a hardened
-//! production server.
+//! Requests are byte-tokenized (the tiny model's 256-entry vocabulary)
+//! and served **continuously**: every connection handler feeds a shared
+//! [`LiveSource`], and one [`Engine::generate_from_source`] drive admits
+//! each request into a compiled batch slot the moment capacity frees up
+//! — no gather window, no fixed-group packing.  A request's reply is
+//! written the instant it retires (mid-drive), and its reported
+//! `ttft_ms` is measured from when the handler parsed it, so queue wait
+//! under load is visible to the client.  This is the demo front door,
+//! not a hardened production server.
+//!
+//! ## Lifecycle
+//!
+//! `serve` owns three kinds of thread: one **acceptor** (blocking
+//! `accept` loop), one **handler** per connection (blocking line reads
+//! with a short read timeout so it can observe shutdown), and the
+//! calling thread, which runs the serving drive itself.  When
+//! `max_requests` is reached the drive returns, the acceptor is woken
+//! with a loopback connection and joined, and every handler is joined —
+//! repeated in-process serves (tests) don't accumulate threads.
 
 use anyhow::{Context, Result};
-use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::{self, RecvTimeoutError, Sender};
-use std::time::Duration;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
+use super::admission::{AdmissionPolicy, AdmissionQueue, IncomingRequest, LiveSource};
 use super::api::{GenRequest, GenResult};
-use super::batcher::Batcher;
 use super::engine::Engine;
-use crate::pipeline::Strategy;
+use super::scheduler::ContinuousConfig;
 use crate::util::Json;
 use crate::workload::Corpus;
 
-/// A parsed client line.
-struct Incoming {
-    req: GenRequest,
-    reply: Sender<GenResult>,
-}
+/// How long a handler's blocking line read may sleep before it re-checks
+/// the shutdown flag.
+const HANDLER_READ_TIMEOUT: Duration = Duration::from_millis(100);
 
 /// Server tuning knobs.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct ServerConfig {
-    /// How long to gather requests into a batch before dispatching.
-    pub gather_window_ms: u64,
-    pub strategy: Strategy,
     /// Stop after serving this many requests (None = run forever).
     pub max_requests: Option<usize>,
-}
-
-impl Default for ServerConfig {
-    fn default() -> Self {
-        ServerConfig {
-            gather_window_ms: 20,
-            strategy: Strategy::NoBubble,
-            max_requests: None,
-        }
-    }
+    /// Continuous-batching knobs (runs, max batch, …).
+    pub continuous: ContinuousConfig,
+    /// Admission policy ([`AdmissionPolicy::Fifo`], or a bound on how
+    /// many prefills may delay an in-flight decode step).
+    pub policy: AdmissionPolicy,
 }
 
 /// Run the serving loop on `listener` until `max_requests` (if set) have
-/// been answered.  Returns the number served.
-pub fn serve(
-    listener: TcpListener,
-    engine: &mut Engine,
-    batcher: &mut Batcher,
-    cfg: &ServerConfig,
-) -> Result<usize> {
-    let (in_tx, in_rx) = mpsc::channel::<Incoming>();
+/// been answered, then tear every server thread down.  Returns the
+/// number served.
+pub fn serve(listener: TcpListener, engine: &mut Engine, cfg: &ServerConfig) -> Result<usize> {
+    let addr = listener.local_addr().context("listener addr")?;
+    let (in_tx, in_rx) = mpsc::channel::<IncomingRequest>();
+    let stop = Arc::new(AtomicBool::new(false));
+    let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
 
     // acceptor thread: one handler thread per connection
-    let accept_tx = in_tx.clone();
-    listener
-        .set_nonblocking(false)
-        .context("listener mode")?;
-    let listener2 = listener.try_clone()?;
-    std::thread::spawn(move || {
-        for stream in listener2.incoming() {
-            let Ok(stream) = stream else { continue };
-            let tx = accept_tx.clone();
-            std::thread::spawn(move || {
-                let _ = handle_conn(stream, tx);
-            });
-        }
-    });
+    listener.set_nonblocking(false).context("listener mode")?;
+    let acceptor = {
+        let stop = stop.clone();
+        let handlers = handlers.clone();
+        let in_tx = in_tx.clone();
+        std::thread::Builder::new()
+            .name("serve-accept".into())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let Ok(stream) = stream else { continue };
+                    let tx = in_tx.clone();
+                    let hstop = stop.clone();
+                    let Ok(h) = std::thread::Builder::new()
+                        .name("serve-conn".into())
+                        .spawn(move || {
+                            let _ = handle_conn(stream, tx, hstop);
+                        })
+                    else {
+                        continue;
+                    };
+                    let mut hs = handlers.lock().expect("handlers lock");
+                    // reap handlers whose connection already ended, so a
+                    // run-forever server under connection churn doesn't
+                    // accumulate finished threads (dropping a finished
+                    // handle detaches and reclaims it)
+                    hs.retain(|h| !h.is_finished());
+                    hs.push(h);
+                }
+            })
+            .context("spawning acceptor")?
+    };
     drop(in_tx);
 
-    let mut served = 0usize;
-    let mut next_id = 1u64;
-    loop {
-        if let Some(max) = cfg.max_requests {
-            if served >= max {
-                return Ok(served);
-            }
-        }
-        // block for the first request, then gather a window
-        let first = match in_rx.recv_timeout(Duration::from_millis(250)) {
-            Ok(x) => x,
-            Err(RecvTimeoutError::Timeout) => continue,
-            Err(RecvTimeoutError::Disconnected) => return Ok(served),
-        };
-        let mut pending = vec![first];
-        let deadline = std::time::Instant::now() + Duration::from_millis(cfg.gather_window_ms);
-        while pending.len() < batcher.max_batch() {
-            let left = deadline.saturating_duration_since(std::time::Instant::now());
-            if left.is_zero() {
-                break;
-            }
-            match in_rx.recv_timeout(left) {
-                Ok(x) => pending.push(x),
-                Err(_) => break,
-            }
-        }
-        // assign ids and pack
-        let mut replies: BTreeMap<u64, Sender<GenResult>> = BTreeMap::new();
-        let reqs: Vec<GenRequest> = pending
-            .into_iter()
-            .map(|mut inc| {
-                inc.req.id = next_id;
-                next_id += 1;
-                replies.insert(inc.req.id, inc.reply);
-                inc.req
-            })
-            .collect();
-        let groups = batcher.pack(&reqs);
-        let (results, _stats) = engine.generate_pipelined(&groups, cfg.strategy)?;
-        for r in results {
-            served += 1;
-            if let Some(tx) = replies.remove(&r.id) {
-                let _ = tx.send(r);
-            }
-        }
+    // the serving drive: continuous batching over the live source, until
+    // the source closes (max_requests accepted, all of them served)
+    let source = LiveSource::new(in_rx, cfg.max_requests, engine.max_new_cap());
+    let mut queue = AdmissionQueue::new(Box::new(source), cfg.policy.clone());
+    let drive = engine.generate_from_source(&mut queue, &cfg.continuous);
+
+    // tear down whether the drive succeeded or not: wake the acceptor
+    // out of its blocking accept with a loopback connection, then join
+    // it and every handler (handlers wake on their read timeout).
+    // Dropping the queue first is load-bearing: it drops every request
+    // the closed source never accepted, erroring their handlers' reply
+    // waits — otherwise those joins would deadlock.
+    stop.store(true, Ordering::Relaxed);
+    drop(queue);
+    let _ = TcpStream::connect(addr);
+    let _ = acceptor.join();
+    let hs = std::mem::take(&mut *handlers.lock().expect("handlers lock"));
+    for h in hs {
+        let _ = h.join();
     }
+
+    let (results, _stats) = drive?;
+    Ok(results.len())
 }
 
-fn handle_conn(stream: TcpStream, tx: Sender<Incoming>) -> Result<()> {
-    let peer = stream.peer_addr().ok();
+fn handle_conn(stream: TcpStream, tx: Sender<IncomingRequest>, stop: Arc<AtomicBool>) -> Result<()> {
+    // a short read timeout lets the handler observe server shutdown even
+    // while its client holds the connection open silently
+    stream.set_read_timeout(Some(HANDLER_READ_TIMEOUT))?;
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+    let mut reader = BufReader::new(stream);
+    // Accumulate raw bytes, not a String: `read_line` would *discard* a
+    // call's bytes when a timeout lands mid-way through a multi-byte
+    // UTF-8 character (its validity guard truncates on error), whereas
+    // `read_until` keeps everything appended — so a slow line survives
+    // any number of timeout wakeups intact.
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
         }
-        match parse_request(&line) {
-            Ok(req) => {
-                let (rtx, rrx) = mpsc::channel();
-                tx.send(Incoming { req, reply: rtx })
-                    .map_err(|_| anyhow::anyhow!("server stopped"))?;
-                match rrx.recv() {
-                    Ok(res) => {
-                        writeln!(writer, "{}", render_result(&res))?;
-                    }
-                    Err(_) => {
-                        writeln!(writer, "{{\"error\":\"engine unavailable\"}}")?;
+        match reader.read_until(b'\n', &mut line) {
+            Ok(0) => break, // client closed
+            Ok(_) => {
+                let text = String::from_utf8_lossy(&line);
+                let trimmed = text.trim();
+                if !trimmed.is_empty() {
+                    match parse_request(trimmed) {
+                        Ok(req) => {
+                            let (rtx, rrx) = mpsc::channel();
+                            let inc = IncomingRequest {
+                                req,
+                                reply: rtx,
+                                at: Instant::now(),
+                            };
+                            if tx.send(inc).is_err() {
+                                writeln!(writer, "{{\"error\":\"server stopped\"}}")?;
+                                break;
+                            }
+                            match rrx.recv() {
+                                Ok(res) => {
+                                    writeln!(writer, "{}", render_result(&res))?;
+                                }
+                                Err(_) => {
+                                    writeln!(writer, "{{\"error\":\"engine unavailable\"}}")?;
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            writeln!(writer, "{{\"error\":\"{e}\"}}")?;
+                        }
                     }
                 }
+                line.clear();
             }
-            Err(e) => {
-                writeln!(writer, "{{\"error\":\"{e}\"}}")?;
+            // read timeout: partial bytes stay buffered in `line`; go
+            // around and re-check the stop flag
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                continue;
             }
+            Err(_) => break,
         }
     }
-    let _ = peer;
     Ok(())
 }
 
@@ -175,6 +207,8 @@ pub fn parse_request(line: &str) -> Result<GenRequest> {
         .get("max_new_tokens")
         .and_then(|x| x.as_usize())
         .unwrap_or(16);
+    // the engine-specific cap (compiled max_seq − prompt_len) is applied
+    // at admission by the LiveSource; this only rejects nonsense
     Ok(GenRequest {
         id: 0,
         prompt,

@@ -6,13 +6,16 @@
 //! edgeshard plan --model <7b|13b|70b> [--bandwidth MBPS] [--objective latency|throughput] [--seed N]
 //! edgeshard profile --model <7b|13b|70b> [--bandwidth MBPS]
 //! edgeshard gantt --model <7b|13b|70b> [--strategy bubble|nobubble] [--micro N]
-//! edgeshard serve [--addr HOST:PORT] [--stages N] [--time-scale F]
+//! edgeshard serve [--addr HOST:PORT] [--backend sim|pjrt] [--stages N] [--time-scale F]
+//!                 [--max-requests N] [--prefill-bound K]
 //! edgeshard generate --prompt "text" [--max-new N] [--stages N]
 //! ```
 //!
 //! `repro` regenerates the paper's tables/figures (analytic testbed);
-//! `serve`/`generate` run the REAL tiny model through PJRT (needs
-//! `make artifacts`).
+//! `serve` runs the arrival-driven continuous-batching front door —
+//! `--backend sim` needs no artifacts, the default PJRT backend needs
+//! `make artifacts` — and `generate` runs the REAL tiny model through
+//! PJRT.
 
 use anyhow::{bail, Context, Result};
 use edgeshard::cluster::presets;
@@ -112,7 +115,7 @@ fn print_usage() {
          edgeshard plan --model 7b [--bandwidth 1] [--objective latency] [--seed N]\n  \
          edgeshard profile --model 7b [--bandwidth 1]\n  \
          edgeshard gantt --model 7b [--strategy nobubble] [--micro 4]\n  \
-         edgeshard serve [--addr 127.0.0.1:7077] [--stages 3] [--time-scale 0.001]\n  \
+         edgeshard serve [--addr 127.0.0.1:7077] [--backend sim] [--stages 3] [--max-requests N] [--prefill-bound K]\n  \
          edgeshard generate --prompt \"Today is a\" [--max-new 16] [--stages 3]"
     );
 }
@@ -293,18 +296,61 @@ fn build_engine(args: &Args) -> Result<(ExecService, Engine, Batcher)> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get("addr").unwrap_or("127.0.0.1:7077").to_string();
-    let (svc, mut engine, mut batcher) = build_engine(args)?;
+    // `--backend sim` serves the synthetic tiny model through the
+    // pure-rust sim backend — no AOT artifacts needed, and the one
+    // backend with the per-row decode support continuous batching
+    // requires today.  The default loads the real PJRT artifacts.
+    let (_svc_real, _svc_sim, mut engine) = match args.get("backend").unwrap_or("pjrt") {
+        "sim" => {
+            let (svc, engine) = build_sim_engine(args)?;
+            (None, Some(svc), engine)
+        }
+        "pjrt" => {
+            let (svc, engine, _batcher) = build_engine(args)?;
+            (Some(svc), None, engine)
+        }
+        other => bail!("backend must be sim|pjrt, got `{other}`"),
+    };
     let listener = std::net::TcpListener::bind(&addr)?;
     println!("serving on {addr} (JSON lines: {{\"prompt\": \"…\", \"max_new_tokens\": 16}})");
     let cfg = edgeshard::coordinator::server::ServerConfig {
         max_requests: args.get("max-requests").map(|v| v.parse()).transpose()?,
+        policy: match args.get_usize("prefill-bound", 0)? {
+            0 => edgeshard::coordinator::AdmissionPolicy::Fifo,
+            k => edgeshard::coordinator::AdmissionPolicy::BoundedPrefill(k),
+        },
         ..Default::default()
     };
-    let served = edgeshard::coordinator::server::serve(listener, &mut engine, &mut batcher, &cfg)?;
+    let served = edgeshard::coordinator::server::serve(listener, &mut engine, &cfg)?;
     println!("served {served} requests");
     engine.shutdown()?;
-    drop(svc);
     Ok(())
+}
+
+/// Sim-backend engine for the artifact-free serving demo: synthetic
+/// tiny model, demo cluster, measured-trace planning.
+fn build_sim_engine(args: &Args) -> Result<(ExecService, Engine)> {
+    let manifest = Manifest::synthetic_tiny();
+    let weights = WeightStore::synthetic(&manifest, args.get_usize("seed", 0)? as u64);
+    let (svc, handle) = ExecService::start_sim(&manifest)?;
+    let n = manifest.config.n_layers + 2;
+    let stages = args.get_usize("stages", 3)?.clamp(1, n);
+    let cluster = presets::tiny_demo(0);
+    let time_scale = args.get_f64("time-scale", 0.0)?;
+
+    let mprof = edgeshard::runtime::MeasuredProfiler::new(&manifest, &weights, handle.clone());
+    let traces = mprof.profile(&cluster, Workload::paper_default())?;
+    let pool: Vec<usize> = (0..cluster.len().min(stages)).collect();
+    let plan = edgeshard::planner::throughput::algo2_exact(&traces, &cluster, &pool, 1)
+        .or_else(|_| LatencyDp::restricted(pool.clone()).plan(&traces, &cluster))?;
+    println!("deployment plan: {} (sim backend)", plan.describe());
+
+    let cfg = EngineConfig {
+        time_scale,
+        ..Default::default()
+    };
+    let engine = Engine::build(&manifest, &weights, handle, &plan, &cluster, &cfg)?;
+    Ok((svc, engine))
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {

@@ -11,15 +11,18 @@
 //!
 //! Besides the markdown reports, writes `BENCH_churn_continuous.json` —
 //! the machine-readable recovery-overhead numbers (restore pause, KV
-//! freight, replayed frames, makespan overhead vs a clean run) that the
-//! non-gating serving-bench CI job uploads so the trajectory is recorded
-//! per PR.
+//! freight, replayed frames, makespan overhead vs a clean run, plus the
+//! **open-loop** section: p99 TTFT inflation confined to the recovery
+//! window under Poisson arrivals) that the non-gating serving-bench CI
+//! job uploads so the trajectory is recorded per PR.
 
 use std::collections::BTreeMap;
 
 use crate::adaptive::scenario::{
     churn_report_markdown, continuous_churn_markdown, continuous_churn_scenario,
-    device_churn_scenario, ChurnConfig, ContinuousChurnConfig, ContinuousChurnReport, RunSummary,
+    device_churn_scenario, open_loop_churn_markdown, open_loop_churn_scenario, ChurnConfig,
+    ContinuousChurnConfig, ContinuousChurnReport, OpenLoopChurnConfig, OpenLoopChurnReport,
+    RunSummary,
 };
 use crate::adaptive::FailoverRecord;
 use crate::util::Json;
@@ -89,6 +92,28 @@ pub fn continuous_churn_json(r: &ContinuousChurnReport) -> Json {
     Json::Obj(root)
 }
 
+/// Machine-readable form of the open-loop churn report — folded into
+/// `BENCH_churn_continuous.json` under `"open_loop"`.
+pub fn open_loop_churn_json(r: &OpenLoopChurnReport) -> Json {
+    let num = |v: f64| Json::Num((v * 1000.0).round() / 1000.0);
+    let mut o = BTreeMap::new();
+    o.insert("initial_plan".into(), Json::Str(r.initial_plan.clone()));
+    o.insert("final_plan".into(), Json::Str(r.final_plan.clone()));
+    o.insert(
+        "window_ms".into(),
+        Json::Arr(vec![num(r.window_ms.0), num(r.window_ms.1)]),
+    );
+    o.insert("ttft_p99_in_window_ms".into(), num(r.ttft_p99_in_window_ms));
+    o.insert("ttft_p99_outside_ms".into(), num(r.ttft_p99_outside_ms));
+    o.insert("ttft_inflation".into(), num(r.ttft_inflation));
+    o.insert("in_window_requests".into(), Json::Num(r.in_window as f64));
+    o.insert("outside_requests".into(), Json::Num(r.outside as f64));
+    o.insert("queue_delay_p99_ms".into(), num(r.queue_p99_ms));
+    o.insert("failovers".into(), Json::Num(r.failovers.len() as f64));
+    o.insert("tokens_identical".into(), Json::Bool(r.tokens_identical));
+    Json::Obj(o)
+}
+
 pub fn run(seed: u64) -> anyhow::Result<()> {
     let report = device_churn_scenario(&ChurnConfig {
         seed,
@@ -101,9 +126,21 @@ pub fn run(seed: u64) -> anyhow::Result<()> {
         ..ContinuousChurnConfig::default()
     })?;
     super::emit("device_churn_continuous", &continuous_churn_markdown(&cont))?;
+
+    // the open-loop variant: same crash, Poisson arrivals — the
+    // failover cost measured as client-observed TTFT inflation
+    let ol = open_loop_churn_scenario(&OpenLoopChurnConfig {
+        seed,
+        ..OpenLoopChurnConfig::default()
+    })?;
+    super::emit("device_churn_openloop", &open_loop_churn_markdown(&ol))?;
+
+    let mut json = continuous_churn_json(&cont);
+    if let Json::Obj(root) = &mut json {
+        root.insert("open_loop".into(), open_loop_churn_json(&ol));
+    }
     let path = std::path::Path::new("BENCH_churn_continuous.json");
-    std::fs::write(path, continuous_churn_json(&cont).to_string())
-        .with_context(|| format!("writing {path:?}"))?;
+    std::fs::write(path, json.to_string()).with_context(|| format!("writing {path:?}"))?;
     println!("wrote {}", path.display());
     Ok(())
 }

@@ -21,19 +21,28 @@
 //!
 //! Output: a markdown table under `results/serving.md` plus
 //! machine-readable `BENCH_serving.json` for the CI perf artifact.
+//!
+//! The **open-loop** section ([`run_openloop_bench`]) serves the same
+//! ragged mix under *Poisson arrivals* at several offered loads — the
+//! arrival-driven admission layer vs an emulation of the old
+//! gather-window front door — and reports the load-latency curve
+//! (offered tokens/s vs TTFT p50/p99, queue-delay percentiles), written
+//! to `results/serving_openloop.md` + `BENCH_serving_openloop.json`.
 
 use anyhow::{Context, Result};
+use std::collections::{HashMap, HashSet};
+use std::time::{Duration, Instant};
 
 use crate::cluster::{Cluster, Device, DeviceClass};
 use crate::coordinator::api::{GenRequest, GenResult};
 use crate::coordinator::scheduler::ContinuousConfig;
-use crate::coordinator::{Batcher, Engine, EngineConfig, EngineStats};
+use crate::coordinator::{AdmissionQueue, Batcher, Engine, EngineConfig, EngineStats};
 use crate::metrics::Histogram;
 use crate::pipeline::Strategy;
 use crate::runtime::manifest::ManifestConfig;
 use crate::runtime::{ExecService, Manifest, WeightStore};
 use crate::util::{markdown_table, Json};
-use crate::workload::RaggedTraceGen;
+use crate::workload::{offered_tokens_per_s, RaggedTraceGen, Request};
 
 /// Bench knobs (defaults are what CI runs).
 #[derive(Debug, Clone)]
@@ -347,13 +356,384 @@ pub fn report_json(r: &ServingBenchReport) -> Json {
     Json::Obj(root)
 }
 
-/// `edgeshard bench serving` entry: run, echo markdown, write the JSON
-/// artifact (and the markdown under `results/`).
+// ---------------------------------------------------------------------
+// Open-loop serving bench: load-latency curves under Poisson arrivals
+// ---------------------------------------------------------------------
+
+/// Knobs of the open-loop bench (defaults are what CI runs).
+#[derive(Debug, Clone)]
+pub struct OpenLoopBenchConfig {
+    /// Requests per load point.
+    pub requests: usize,
+    pub seed: u64,
+    /// Continuous-batching pipeline depth.
+    pub runs: usize,
+    pub gen_lens: Vec<usize>,
+    pub mean_burst: usize,
+    /// Offered-load sweep, one point per mean interarrival gap (ms):
+    /// small gap = high offered load.
+    pub interarrival_ms: Vec<f64>,
+    /// Gather window of the fixed-group baseline — the old front door's
+    /// batching latency, emulated faithfully (first request opens a
+    /// window; the batch dispatches when the window closes or the
+    /// compiled batch fills).
+    pub gather_window_ms: f64,
+}
+
+impl Default for OpenLoopBenchConfig {
+    fn default() -> Self {
+        OpenLoopBenchConfig {
+            requests: 24,
+            seed: 0,
+            runs: 2,
+            gen_lens: vec![4, 12, 24, 48],
+            mean_burst: 2,
+            interarrival_ms: vec![1.0, 6.0, 20.0],
+            gather_window_ms: 20.0,
+        }
+    }
+}
+
+/// One serving mode at one offered-load point.  All latency numbers are
+/// client-observed: measured from each request's *arrival*.
+#[derive(Debug)]
+pub struct OpenLoopMode {
+    pub tokens_per_s: f64,
+    pub makespan_ms: f64,
+    pub ttft_p50_ms: f64,
+    pub ttft_p99_ms: f64,
+    /// p95 TTFT over the short (shortest `gen_lens`) requests only.
+    pub ttft_p95_short_ms: f64,
+    /// Queue delay (arrival → dispatch into the engine).
+    pub queue_p50_ms: f64,
+    pub queue_p99_ms: f64,
+}
+
+/// One point of the load-latency curve.
+#[derive(Debug)]
+pub struct OpenLoopPoint {
+    pub interarrival_ms: f64,
+    /// Offered tokens/s (total requested tokens over the arrival span).
+    pub offered_tps: f64,
+    pub continuous: OpenLoopMode,
+    pub gather: OpenLoopMode,
+    /// Per-request token streams byte-identical across both modes.
+    pub tokens_identical: bool,
+}
+
+/// Everything the open-loop bench produced.
+#[derive(Debug)]
+pub struct OpenLoopBenchReport {
+    pub config: OpenLoopBenchConfig,
+    pub points: Vec<OpenLoopPoint>,
+}
+
+fn openloop_mode(
+    results: &[GenResult],
+    makespan_ms: f64,
+    short_ids: &HashSet<u64>,
+    queue_delay: &mut Histogram,
+) -> OpenLoopMode {
+    let mut ttft = Histogram::new();
+    let mut short = Histogram::new();
+    let mut tokens = 0u64;
+    for r in results {
+        tokens += r.tokens.len() as u64;
+        ttft.record(r.ttft_ms);
+        if short_ids.contains(&r.id) {
+            short.record(r.ttft_ms);
+        }
+    }
+    OpenLoopMode {
+        tokens_per_s: tokens as f64 / (makespan_ms / 1e3).max(1e-9),
+        makespan_ms,
+        ttft_p50_ms: ttft.percentile(50.0),
+        ttft_p99_ms: ttft.percentile(99.0),
+        ttft_p95_short_ms: short.percentile(95.0),
+        queue_p50_ms: queue_delay.percentile(50.0),
+        queue_p99_ms: queue_delay.percentile(99.0),
+    }
+}
+
+/// Emulate the old gather-window front door on an arrival trace,
+/// without sockets: the first waiting request opens a window; the batch
+/// dispatches (packed to compiled shapes, pipelined to completion —
+/// serving is blocking, exactly like the old `serve` loop) when the
+/// window closes or the compiled batch fills.  Backlogged requests pack
+/// immediately on the next cycle.  Returned results have `ttft_ms` /
+/// `total_ms` rebased to each request's arrival.
+fn gather_window_openloop(
+    engine: &mut Engine,
+    batcher: &mut Batcher,
+    trace: &[Request],
+    window_ms: f64,
+) -> Result<(Vec<GenResult>, f64, Histogram)> {
+    let t0 = Instant::now();
+    let now_ms = |t0: &Instant| t0.elapsed().as_secs_f64() * 1e3;
+    let arrival: HashMap<u64, f64> = trace.iter().map(|r| (r.id, r.arrival_ms)).collect();
+    let mut out = Vec::new();
+    let mut queue_delay = Histogram::new();
+    let mut i = 0usize;
+    while i < trace.len() {
+        // block until the window's first request arrives
+        let wait = trace[i].arrival_ms - now_ms(&t0);
+        if wait > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(wait / 1e3));
+        }
+        let start = now_ms(&t0);
+        let deadline = start + window_ms;
+        let lo = i;
+        while i < trace.len() && i - lo < batcher.max_batch() && trace[i].arrival_ms <= deadline {
+            i += 1;
+        }
+        // a full batch dispatches as soon as its last member arrives; an
+        // underfull one waits out the whole window (like the old server
+        // blocking on its gather deadline)
+        let dispatch_at = if i - lo == batcher.max_batch() {
+            start.max(trace[i - 1].arrival_ms)
+        } else {
+            deadline
+        };
+        let wait = dispatch_at - now_ms(&t0);
+        if wait > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(wait / 1e3));
+        }
+        let dispatch_ms = now_ms(&t0);
+        let reqs: Vec<GenRequest> = trace[lo..i]
+            .iter()
+            .map(|r| GenRequest {
+                id: r.id,
+                prompt: r.prompt.clone(),
+                max_new_tokens: r.max_new_tokens,
+            })
+            .collect();
+        let groups = batcher.pack(&reqs);
+        let (results, _stats) = engine
+            .generate_pipelined(&groups, Strategy::NoBubble)
+            .context("gather-window batch")?;
+        for mut r in results {
+            let arr = arrival[&r.id];
+            queue_delay.record((dispatch_ms - arr).max(0.0));
+            r.ttft_ms = (dispatch_ms + r.ttft_ms - arr).max(0.0);
+            r.total_ms = (dispatch_ms + r.total_ms - arr).max(0.0);
+            out.push(r);
+        }
+    }
+    Ok((out, now_ms(&t0), queue_delay))
+}
+
+/// Run the open-loop bench: the same Poisson trace served by the
+/// arrival-driven continuous-batching admission layer and by the old
+/// gather-window front door, at each offered-load point.  Token streams
+/// must agree byte-for-byte — arrivals change *when*, never *what*.
+pub fn run_openloop_bench(cfg: &OpenLoopBenchConfig) -> Result<OpenLoopBenchReport> {
+    let manifest = Manifest::synthetic(bench_config(), vec![1, 8]);
+    let weights = WeightStore::synthetic(&manifest, cfg.seed);
+    let (_svc, exec) = ExecService::start_sim(&manifest)?;
+    let cluster = bench_cluster();
+    let n_model_layers = manifest.config.n_layers + 2;
+    let plan = crate::planner::Plan {
+        objective: crate::planner::PlanObjective::Throughput,
+        stages: vec![
+            crate::planner::Stage {
+                device: 0,
+                start: 0,
+                end: 3,
+            },
+            crate::planner::Stage {
+                device: 1,
+                start: 3,
+                end: n_model_layers,
+            },
+        ],
+        predicted_ms: 0.0,
+    };
+    let engine_cfg = EngineConfig {
+        time_scale: 0.0,
+        ..EngineConfig::default()
+    };
+    let mut engine =
+        Engine::build(&manifest, &weights, exec.clone(), &plan, &cluster, &engine_cfg)?;
+    let short_gen = *cfg.gen_lens.iter().min().context("empty gen_lens")?;
+
+    let mut points = Vec::new();
+    for &gap in &cfg.interarrival_ms {
+        let gen = RaggedTraceGen {
+            mean_burst: cfg.mean_burst,
+            mean_interarrival_ms: gap,
+            ..RaggedTraceGen::new(
+                manifest.config.prefill_len,
+                manifest.config.vocab_size as i32,
+                cfg.gen_lens.clone(),
+                cfg.seed,
+            )
+        };
+        let trace = gen.generate(cfg.requests);
+        let offered_tps = offered_tokens_per_s(&trace);
+        let short_ids: HashSet<u64> = trace
+            .iter()
+            .filter(|r| r.max_new_tokens == short_gen)
+            .map(|r| r.id)
+            .collect();
+
+        // arrival-driven continuous batching (the admission layer)
+        let mut queue = AdmissionQueue::replay(&trace);
+        let ccfg = ContinuousConfig {
+            runs: cfg.runs,
+            ..ContinuousConfig::default()
+        };
+        let (c_results, mut c_stats) = engine
+            .generate_from_source(&mut queue, &ccfg)
+            .context("open-loop continuous")?;
+        let continuous = openloop_mode(
+            &c_results,
+            c_stats.makespan_ms,
+            &short_ids,
+            &mut c_stats.queue_delay,
+        );
+
+        // the old front door: gather-window packing on the same trace
+        let mut batcher =
+            Batcher::new(manifest.config.prefill_len, manifest.batch_sizes.clone());
+        let (g_results, g_makespan, mut g_queue) =
+            gather_window_openloop(&mut engine, &mut batcher, &trace, cfg.gather_window_ms)?;
+        let gather = openloop_mode(&g_results, g_makespan, &short_ids, &mut g_queue);
+
+        let tokens_identical = token_rows(&c_results) == token_rows(&g_results);
+        points.push(OpenLoopPoint {
+            interarrival_ms: gap,
+            offered_tps,
+            continuous,
+            gather,
+            tokens_identical,
+        });
+    }
+    engine.shutdown()?;
+    Ok(OpenLoopBenchReport {
+        config: cfg.clone(),
+        points,
+    })
+}
+
+/// Render the open-loop load-latency markdown.
+pub fn openloop_markdown(r: &OpenLoopBenchReport) -> String {
+    let mut out = String::new();
+    out.push_str("# Open-loop serving — load-latency under Poisson arrivals (sim backend)\n\n");
+    out.push_str(&format!(
+        "workload: {} requests per point, gen lengths {:?} in bursts of ~{}, \
+         gather window {} ms, seed {}\n\n",
+        r.config.requests,
+        r.config.gen_lens,
+        r.config.mean_burst,
+        r.config.gather_window_ms,
+        r.config.seed
+    ));
+    let mut rows = Vec::new();
+    for p in &r.points {
+        for (mode, m) in [("continuous", &p.continuous), ("gather", &p.gather)] {
+            rows.push(vec![
+                format!("{:.1}", p.interarrival_ms),
+                format!("{:.0}", p.offered_tps),
+                mode.to_string(),
+                format!("{:.1}", m.tokens_per_s),
+                format!("{:.1}", m.ttft_p50_ms),
+                format!("{:.1}", m.ttft_p99_ms),
+                format!("{:.1}", m.ttft_p95_short_ms),
+                format!("{:.1}", m.queue_p50_ms),
+                format!("{:.1}", m.queue_p99_ms),
+            ]);
+        }
+    }
+    out.push_str(&markdown_table(
+        &[
+            "interarrival (ms)",
+            "offered tok/s",
+            "mode",
+            "tok/s",
+            "TTFT p50",
+            "TTFT p99",
+            "TTFT p95 short",
+            "queue p50",
+            "queue p99",
+        ],
+        &rows,
+    ));
+    let identical = r.points.iter().all(|p| p.tokens_identical);
+    out.push_str(&format!(
+        "\nTTFT measured from arrival; queue = arrival → dispatch. \
+         tokens identical across modes at every load: {identical}\n"
+    ));
+    out
+}
+
+/// Machine-readable form (the `BENCH_serving_openloop.json` CI artifact).
+pub fn openloop_json(r: &OpenLoopBenchReport) -> Json {
+    use std::collections::BTreeMap;
+    let num = |v: f64| Json::Num((v * 1000.0).round() / 1000.0);
+    let mode = |m: &OpenLoopMode| {
+        let mut o = BTreeMap::new();
+        o.insert("tokens_per_s".into(), num(m.tokens_per_s));
+        o.insert("makespan_ms".into(), num(m.makespan_ms));
+        o.insert("ttft_p50_ms".into(), num(m.ttft_p50_ms));
+        o.insert("ttft_p99_ms".into(), num(m.ttft_p99_ms));
+        o.insert("ttft_p95_short_ms".into(), num(m.ttft_p95_short_ms));
+        o.insert("queue_p50_ms".into(), num(m.queue_p50_ms));
+        o.insert("queue_p99_ms".into(), num(m.queue_p99_ms));
+        Json::Obj(o)
+    };
+    let mut root = BTreeMap::new();
+    let mut workload = BTreeMap::new();
+    workload.insert("requests".into(), Json::Num(r.config.requests as f64));
+    workload.insert(
+        "gen_lens".into(),
+        Json::Arr(r.config.gen_lens.iter().map(|&g| Json::Num(g as f64)).collect()),
+    );
+    workload.insert(
+        "gather_window_ms".into(),
+        Json::Num(r.config.gather_window_ms),
+    );
+    workload.insert("seed".into(), Json::Num(r.config.seed as f64));
+    root.insert("workload".into(), Json::Obj(workload));
+    root.insert(
+        "points".into(),
+        Json::Arr(
+            r.points
+                .iter()
+                .map(|p| {
+                    let mut o = BTreeMap::new();
+                    o.insert("interarrival_ms".into(), num(p.interarrival_ms));
+                    o.insert("offered_tokens_per_s".into(), num(p.offered_tps));
+                    o.insert("continuous".into(), mode(&p.continuous));
+                    o.insert("gather".into(), mode(&p.gather));
+                    o.insert("tokens_identical".into(), Json::Bool(p.tokens_identical));
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    Json::Obj(root)
+}
+
+/// `edgeshard bench serving` entry: run the closed-loop mode comparison
+/// and the open-loop load-latency sweep, echo markdown, write both JSON
+/// artifacts (and the markdown under `results/`).
 pub fn run(cfg: &ServingBenchConfig, json_path: &std::path::Path) -> Result<()> {
     let report = run_bench(cfg)?;
     super::emit("serving", &report_markdown(&report))?;
     std::fs::write(json_path, report_json(&report).to_string())
         .with_context(|| format!("writing {json_path:?}"))?;
     println!("wrote {}", json_path.display());
+
+    let ol_cfg = OpenLoopBenchConfig {
+        seed: cfg.seed,
+        runs: cfg.runs,
+        ..OpenLoopBenchConfig::default()
+    };
+    let ol = run_openloop_bench(&ol_cfg)?;
+    super::emit("serving_openloop", &openloop_markdown(&ol))?;
+    let ol_path = json_path.with_file_name("BENCH_serving_openloop.json");
+    std::fs::write(&ol_path, openloop_json(&ol).to_string())
+        .with_context(|| format!("writing {ol_path:?}"))?;
+    println!("wrote {}", ol_path.display());
     Ok(())
 }

@@ -133,9 +133,38 @@ impl RaggedTraceGen {
     }
 }
 
+/// Offered load of a trace: total requested tokens over the arrival
+/// span (the open-loop x-axis).  A closed-loop trace (every arrival at
+/// t = 0) reads as its total tokens over 1 ms — effectively "all at
+/// once".
+pub fn offered_tokens_per_s(trace: &[Request]) -> f64 {
+    let total: usize = trace.iter().map(|r| r.max_new_tokens).sum();
+    let span_ms = trace
+        .iter()
+        .map(|r| r.arrival_ms)
+        .fold(0.0f64, f64::max)
+        .max(1.0);
+    total as f64 / (span_ms / 1e3)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn offered_load_spans_arrivals() {
+        let g = TraceGen {
+            mean_interarrival_ms: 10.0,
+            ..TraceGen::paper_default(256, 9)
+        };
+        let trace = g.generate(10);
+        let offered = offered_tokens_per_s(&trace);
+        let span_s = trace.iter().map(|r| r.arrival_ms).fold(0.0f64, f64::max) / 1e3;
+        assert!((offered - 10.0 * 96.0 / span_s).abs() < 1e-6);
+        // closed loop: span floors at 1 ms
+        let c = TraceGen::paper_default(256, 9).generate(3);
+        assert_eq!(offered_tokens_per_s(&c), 3.0 * 96.0 * 1000.0);
+    }
 
     #[test]
     fn ragged_trace_is_deterministic_and_bursty() {

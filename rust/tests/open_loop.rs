@@ -1,0 +1,316 @@
+//! Open-loop serving end-to-end: the arrival-driven admission layer on
+//! real stage actors + shaped links + the sim backend.
+//!
+//! The invariants:
+//!
+//! 1. **Determinism**: an open-loop Poisson replay emits byte-identical
+//!    per-request tokens to serving the same requests closed-loop —
+//!    arrivals change *when*, never *what*.
+//! 2. **Queue delay**: under offered load beyond slot capacity, the
+//!    admission queue reports real (non-zero) queue delay, and TTFT
+//!    decomposes into queue wait + prefill.
+//! 3. **Front-door win**: at moderate load the arrival-driven admission
+//!    layer beats the old gather-window packing on short-request p95
+//!    TTFT (a short request no longer waits out a 20 ms window).
+//! 4. **TCP server**: the JSON-lines front door serves continuously over
+//!    a live source, answers every client, and tears its acceptor and
+//!    handler threads down when `max_requests` is reached.
+//! 5. **Open-loop failover**: a mid-stream device crash inflates p99
+//!    TTFT only inside the recovery window, with byte-identical tokens.
+
+use edgeshard::adaptive::scenario::{open_loop_churn_scenario, OpenLoopChurnConfig};
+use edgeshard::cluster::presets;
+use edgeshard::coordinator::api::GenRequest;
+use edgeshard::coordinator::scheduler::ContinuousConfig;
+use edgeshard::coordinator::server::{serve, ServerConfig};
+use edgeshard::coordinator::{AdmissionQueue, Engine, EngineConfig};
+use edgeshard::metrics::Histogram;
+use edgeshard::planner::{Plan, PlanObjective, Stage};
+use edgeshard::repro::serving::{run_openloop_bench, OpenLoopBenchConfig};
+use edgeshard::runtime::manifest::ManifestConfig;
+use edgeshard::runtime::{ExecService, ExecServiceHandle, Manifest, WeightStore};
+use edgeshard::util::Json;
+use edgeshard::workload::Request;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Mutex;
+
+/// Wall-clock-sensitive tests run one at a time.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+struct Ctx {
+    manifest: Manifest,
+    weights: WeightStore,
+    _svc: ExecService,
+    exec: ExecServiceHandle,
+}
+
+fn ctx(batch_sizes: Vec<usize>) -> Ctx {
+    let manifest = Manifest::synthetic(
+        ManifestConfig::mini_sim("tinyllama-ol-sim", 8, 64),
+        batch_sizes,
+    );
+    let weights = WeightStore::synthetic(&manifest, 0);
+    let (_svc, exec) = ExecService::start_sim(&manifest).unwrap();
+    Ctx {
+        manifest,
+        weights,
+        _svc,
+        exec,
+    }
+}
+
+fn engine(c: &Ctx, stages: &[(usize, usize, usize)]) -> Engine {
+    let plan = Plan {
+        objective: PlanObjective::Latency,
+        stages: stages
+            .iter()
+            .map(|&(device, start, end)| Stage { device, start, end })
+            .collect(),
+        predicted_ms: 0.0,
+    };
+    let cluster = presets::tiny_demo(0);
+    let cfg = EngineConfig {
+        time_scale: 0.0,
+        ..EngineConfig::default()
+    };
+    Engine::build(&c.manifest, &c.weights, c.exec.clone(), &plan, &cluster, &cfg).unwrap()
+}
+
+/// Ragged requests with id-distinct in-vocab prompts.
+fn ragged_requests(c: &Ctx, max_news: &[usize]) -> Vec<GenRequest> {
+    let vocab = c.manifest.config.vocab_size as i32;
+    max_news
+        .iter()
+        .enumerate()
+        .map(|(i, &m)| GenRequest {
+            id: i as u64,
+            prompt: (0..8).map(|t| ((t * 5 + i * 11 + 3) as i32) % vocab).collect(),
+            max_new_tokens: m,
+        })
+        .collect()
+}
+
+fn rows(results: &[edgeshard::coordinator::GenResult]) -> Vec<(u64, Vec<i32>)> {
+    let mut rows: Vec<(u64, Vec<i32>)> =
+        results.iter().map(|r| (r.id, r.tokens.clone())).collect();
+    rows.sort_by_key(|(id, _)| *id);
+    rows
+}
+
+#[test]
+fn open_loop_replay_matches_closed_loop_tokens() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    // The acceptance invariant: same seed ⇒ byte-identical tokens
+    // between the open-loop virtual-clock replay and the equivalent
+    // closed-loop queue, whatever batch compositions the arrival timing
+    // produced along the way.
+    let c = ctx(vec![1, 4]);
+    let n = c.manifest.config.n_layers + 2;
+    let reqs = ragged_requests(&c, &[3, 9, 1, 6, 2, 12, 4, 1, 7, 5]);
+    let mut e = engine(&c, &[(0, 0, 2), (1, 2, 4), (2, 4, n)]);
+    let ccfg = ContinuousConfig::default();
+
+    let (closed, _) = e.generate_continuous(&reqs, &ccfg).unwrap();
+
+    // the same requests as a Poisson-ish arrival trace (3 ms gaps)
+    let trace: Vec<Request> = reqs
+        .iter()
+        .enumerate()
+        .map(|(i, r)| Request {
+            id: r.id,
+            arrival_ms: 3.0 * i as f64,
+            prompt: r.prompt.clone(),
+            max_new_tokens: r.max_new_tokens,
+        })
+        .collect();
+    let mut queue = AdmissionQueue::replay(&trace);
+    let (open, stats) = e.generate_from_source(&mut queue, &ccfg).unwrap();
+    e.shutdown().unwrap();
+
+    assert_eq!(rows(&open), rows(&closed), "arrival timing changed tokens");
+    assert_eq!(stats.tokens as usize, reqs.iter().map(|r| r.max_new_tokens).sum::<usize>());
+    // one queue-delay sample per request, and TTFT is arrival-relative
+    assert_eq!(stats.queue_delay.len(), reqs.len());
+    for r in &open {
+        assert!(r.ttft_ms >= 0.0 && r.ttft_ms <= r.total_ms);
+    }
+}
+
+#[test]
+fn queue_delay_is_real_under_burst_load() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    // Offered load far beyond slot capacity (1 run × batch 2, 8 nearly
+    // simultaneous arrivals): later requests must wait for retirements,
+    // and that wait must show up as non-zero queue delay — decomposing
+    // their TTFT into queue wait + prefill.
+    let c = ctx(vec![1, 2]);
+    let n = c.manifest.config.n_layers + 2;
+    let reqs = ragged_requests(&c, &[4, 4, 4, 4, 4, 4, 4, 4]);
+    let trace: Vec<Request> = reqs
+        .iter()
+        .enumerate()
+        .map(|(i, r)| Request {
+            id: r.id,
+            arrival_ms: 0.5 * i as f64,
+            prompt: r.prompt.clone(),
+            max_new_tokens: r.max_new_tokens,
+        })
+        .collect();
+    let mut e = engine(&c, &[(0, 0, 3), (2, 3, n)]);
+    let ccfg = ContinuousConfig {
+        runs: 1,
+        max_batch: Some(2),
+        ..ContinuousConfig::default()
+    };
+    let mut queue = AdmissionQueue::replay(&trace);
+    let (results, mut stats) = e.generate_from_source(&mut queue, &ccfg).unwrap();
+    e.shutdown().unwrap();
+
+    assert_eq!(results.len(), 8, "every request served");
+    assert_eq!(stats.queue_delay.len(), 8);
+    // capacity 2 < 8: the tail of the queue waited measurably
+    assert!(
+        stats.queue_delay.max() > 0.0,
+        "no queue delay under 4x oversubscription"
+    );
+    // queue wait is part of client-observed TTFT (ttft >= its queue
+    // delay would need per-request pairing; the aggregate bound is that
+    // the worst TTFT is at least the worst queue delay)
+    let worst_ttft = results.iter().map(|r| r.ttft_ms).fold(0.0f64, f64::max);
+    assert!(worst_ttft >= stats.queue_delay.max());
+}
+
+#[test]
+fn admission_layer_beats_gather_window_at_moderate_load() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    // The front-door claim: at moderate offered load, short requests no
+    // longer wait out a gather window, so their p95 TTFT beats the old
+    // packing front door — with byte-identical tokens.
+    let report = run_openloop_bench(&OpenLoopBenchConfig {
+        requests: 16,
+        gen_lens: vec![4, 24],
+        mean_burst: 2,
+        interarrival_ms: vec![15.0],
+        gather_window_ms: 20.0,
+        runs: 2,
+        seed: 0,
+    })
+    .unwrap();
+    let p = &report.points[0];
+    assert!(p.tokens_identical, "open-loop modes diverged");
+    // premise: the ragged mix actually produced short requests, and the
+    // gather window made them wait
+    assert!(
+        p.gather.ttft_p95_short_ms > 0.0,
+        "trace produced no short requests — change the seed"
+    );
+    assert!(
+        p.continuous.ttft_p95_short_ms < p.gather.ttft_p95_short_ms,
+        "short-request p95 TTFT: continuous {:.1} ms vs gather {:.1} ms",
+        p.continuous.ttft_p95_short_ms,
+        p.gather.ttft_p95_short_ms
+    );
+    // the window tax hits the whole population, not just shorts
+    assert!(
+        p.continuous.ttft_p50_ms < p.gather.ttft_p50_ms,
+        "overall p50 TTFT: continuous {:.1} ms vs gather {:.1} ms",
+        p.continuous.ttft_p50_ms,
+        p.gather.ttft_p50_ms
+    );
+}
+
+#[test]
+fn tcp_server_serves_continuously_and_tears_down() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    // The front door end-to-end: JSON lines over TCP, continuous
+    // batching over the live source, replies per request, full thread
+    // teardown at max_requests (serve() returning IS the teardown
+    // assertion — leaked handlers would hang the join inside it).
+    let c = ctx(vec![1, 4]);
+    let n = c.manifest.config.n_layers + 2;
+    let mut e = engine(&c, &[(0, 0, 3), (2, 3, n)]);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || -> anyhow::Result<usize> {
+        let cfg = ServerConfig {
+            max_requests: Some(3),
+            ..ServerConfig::default()
+        };
+        let served = serve(listener, &mut e, &cfg)?;
+        e.shutdown()?;
+        Ok(served)
+    });
+
+    let ask = |stream: &mut TcpStream, tokens: &[usize], max_new: usize| -> Json {
+        let toks: Vec<String> = tokens.iter().map(|t| t.to_string()).collect();
+        writeln!(
+            stream,
+            "{{\"tokens\": [{}], \"max_new_tokens\": {max_new}}}",
+            toks.join(", ")
+        )
+        .unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        Json::parse(line.trim()).unwrap()
+    };
+
+    // two connections, three requests; token prompts stay in-vocab
+    let mut c1 = TcpStream::connect(addr).unwrap();
+    let mut c2 = TcpStream::connect(addr).unwrap();
+    let r1 = ask(&mut c1, &[1, 2, 3], 4);
+    let r2 = ask(&mut c2, &[5, 6, 7, 8], 2);
+    let r3 = ask(&mut c1, &[9, 10], 3);
+    for (r, want) in [(&r1, 4), (&r2, 2), (&r3, 3)] {
+        let toks = r.get("tokens").expect("reply carries tokens").as_arr().unwrap();
+        assert_eq!(toks.len(), want, "reply: {r:?}");
+        assert!(r.get("ttft_ms").is_some());
+    }
+    drop(c1);
+    drop(c2);
+
+    let served = server.join().unwrap().unwrap();
+    assert_eq!(served, 3);
+}
+
+#[test]
+fn open_loop_churn_confines_ttft_inflation_to_recovery_window() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    // The acceptance scenario: a stage host crashes mid-stream under
+    // Poisson arrivals.  Failover must recover (byte-identical tokens vs
+    // a clean open-loop run), and the p99 TTFT hit must be confined to
+    // the recovery window — requests outside it see ordinary service.
+    let report = open_loop_churn_scenario(&OpenLoopChurnConfig::default()).unwrap();
+
+    assert!(!report.failovers.is_empty(), "no failover happened");
+    assert!(report.tokens_identical, "recovery changed tokens");
+    assert!(
+        report.in_window > 0 && report.outside > 0,
+        "degenerate split: {} in-window, {} outside",
+        report.in_window,
+        report.outside
+    );
+    // inflation inside the window (the stall is at least the heartbeat
+    // timeout, far above healthy TTFT)...
+    assert!(
+        report.ttft_p99_in_window_ms > report.ttft_p99_outside_ms,
+        "in-window p99 {:.0} ms vs outside {:.0} ms",
+        report.ttft_p99_in_window_ms,
+        report.ttft_p99_outside_ms
+    );
+    // ...and confinement outside it: outside requests look like the
+    // clean run's (generous slack for scheduling noise)
+    let mut clean_ttft = Histogram::new();
+    for r in &report.clean.results {
+        clean_ttft.record(r.ttft_ms);
+    }
+    let clean_p99 = clean_ttft.percentile(99.0);
+    assert!(
+        report.ttft_p99_outside_ms <= clean_p99 * 5.0 + 20.0,
+        "outside-window p99 {:.0} ms vs clean p99 {:.0} ms — inflation leaked",
+        report.ttft_p99_outside_ms,
+        clean_p99
+    );
+}
