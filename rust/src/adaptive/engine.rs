@@ -143,6 +143,19 @@ pub struct AdaptiveConfig {
     /// the verdict was right after all, the next stall simply re-blames
     /// it (one wasted failover round, never wrong tokens).
     pub verdict_ttl_ms: f64,
+    /// Tracer threaded into every pipeline this run wires (stage compute
+    /// + transfer taps) and into the drive loop (lifecycle spans), plus
+    /// control-plane instants for replans, migrations, checkpoints and
+    /// failover rounds.  Defaults to [`crate::obs::Tracer::off`].
+    pub trace: crate::obs::Tracer,
+    /// Live metrics the drive loop updates (tokens/s, TTFT, queue depth,
+    /// replan/failover counters).  Defaults to off.
+    pub metrics: crate::obs::MetricsRegistry,
+    /// When set, every completed failover dumps the tracer's flight ring
+    /// to `<prefix>_failover<K>.json` (K = 1-based failover count) — the
+    /// post-mortem artifact `repro churn` leaves per injected crash.
+    /// Needs a tracer that is at least [`crate::obs::Tracer::flight_only`].
+    pub flight_prefix: Option<std::path::PathBuf>,
 }
 
 impl Default for AdaptiveConfig {
@@ -160,6 +173,9 @@ impl Default for AdaptiveConfig {
             stall_poll_real_ms: 25.0,
             checkpoint_every: 0,
             verdict_ttl_ms: f64::INFINITY,
+            trace: crate::obs::Tracer::off(),
+            metrics: crate::obs::MetricsRegistry::off(),
+            flight_prefix: None,
         }
     }
 }
@@ -371,6 +387,13 @@ impl AdaptiveHooks<'_, '_> {
     /// on the critical path and is charged in
     /// [`AdaptiveEngine::failover`].
     fn start_checkpoint(&mut self, wired: &Wired, view: &DriveView) -> Result<()> {
+        self.eng
+            .cfg
+            .trace
+            .instant("checkpoint_begin", || format!("at token {}", view.received));
+        crate::obs::log::debug("adaptive", || {
+            format!("checkpoint probe launched at token {}", view.received)
+        });
         let (reply_tx, reply_rx) = mpsc::channel();
         let msg = StageMsg::Export { reply: reply_tx };
         let bytes = msg.wire_bytes();
@@ -406,12 +429,49 @@ impl AdaptiveHooks<'_, '_> {
         };
         if complete {
             let done = self.pending_ck.take().expect("completeness checked above");
-            self.checkpoint = Some(Checkpoint {
-                entries: done.entries,
-                sent: done.sent,
-                run_marks: done.run_marks,
-            });
-            self.checkpoints_taken += 1;
+            self.commit_checkpoint(done);
+        }
+    }
+
+    fn commit_checkpoint(&mut self, done: PendingCheckpoint) {
+        self.checkpoint = Some(Checkpoint {
+            entries: done.entries,
+            sent: done.sent,
+            run_marks: done.run_marks,
+        });
+        self.checkpoints_taken += 1;
+        let n = self.checkpoints_taken;
+        self.eng
+            .cfg
+            .trace
+            .instant("checkpoint_commit", || format!("checkpoint {n} committed"));
+        self.eng.cfg.metrics.inc("checkpoints_total", 1);
+        crate::obs::log::debug("adaptive", || format!("checkpoint {n} committed"));
+    }
+
+    /// Dump the flight ring after a completed failover when
+    /// [`AdaptiveConfig::flight_prefix`] is set — the per-crash
+    /// post-mortem artifact.  Best-effort: a dump failure is logged, not
+    /// fatal (recovery already succeeded).
+    fn dump_flight_record(&self) {
+        let Some(prefix) = &self.eng.cfg.flight_prefix else {
+            return;
+        };
+        let record = self.failovers.last().expect("dump follows a recorded failover");
+        let k = self.failovers.len();
+        let path = std::path::PathBuf::from(format!("{}_failover{k}.json", prefix.display()));
+        let reason = format!(
+            "device_loss: d{} dead, recovered onto {}",
+            record.dead_device, record.to_plan
+        );
+        match self.eng.cfg.trace.dump_flight(&path, &reason) {
+            Ok(true) => crate::obs::log::info("adaptive", || {
+                format!("flight record dumped to {}", path.display())
+            }),
+            Ok(false) => {}
+            Err(e) => crate::obs::log::warn("adaptive", || {
+                format!("flight record dump failed: {e:#}")
+            }),
         }
     }
 }
@@ -484,6 +544,13 @@ impl DriveHooks for AdaptiveHooks<'_, '_> {
         } = decision
         {
             if self.eng.preload_fits(&plan, &view.unfinished_batches) {
+                self.eng
+                    .cfg
+                    .trace
+                    .instant("migration_planned", || plan.describe());
+                crate::obs::log::info("adaptive", || {
+                    format!("replan: migrating to {}", plan.describe())
+                });
                 self.pending = Some((plan, diff, candidate_pred_ms));
                 return Ok(true);
             }
@@ -507,6 +574,17 @@ impl DriveHooks for AdaptiveHooks<'_, '_> {
         )? {
             self.replanner
                 .adopt(cand_pred, sim_now_ms(self.t0, self.scale));
+            self.eng
+                .cfg
+                .trace
+                .instant("migration_committed", || record.to_plan.clone());
+            self.eng.cfg.metrics.inc("migrations_total", 1);
+            crate::obs::log::info("adaptive", || {
+                format!(
+                    "migration committed: {} -> {} ({} KV bytes, {:.1} ms pause)",
+                    record.from_plan, record.to_plan, record.kv_bytes, record.pause_ms
+                )
+            });
             self.migrations.push(record);
             self.eng.plan = new_plan;
         }
@@ -539,6 +617,9 @@ impl DriveHooks for AdaptiveHooks<'_, '_> {
         else {
             return Ok(false);
         };
+        self.eng.cfg.trace.instant("device_suspect", || {
+            format!("d{dead} after {stalled_sim_ms:.0} ms of silence")
+        });
         let source = self.eng.live.with(|c| c.source);
         anyhow::ensure!(
             dead != source,
@@ -547,6 +628,10 @@ impl DriveHooks for AdaptiveHooks<'_, '_> {
              over to"
         );
         self.detector.mark_dead(dead, now_ms);
+        self.eng.cfg.trace.instant("device_dead", || format!("d{dead}"));
+        crate::obs::log::warn("adaptive", || {
+            format!("device d{dead} declared dead after {stalled_sim_ms:.0} ms of silence")
+        });
         // a pending migration's target may include the corpse, and an
         // in-flight checkpoint probe died with the pipeline — drop both
         // (the last *committed* checkpoint stays valid for recovery)
@@ -597,6 +682,15 @@ impl DriveHooks for AdaptiveHooks<'_, '_> {
                 "failover plan {} cannot hold the in-flight KV within the per-stage budget",
                 new_plan.describe()
             );
+            self.eng.cfg.trace.instant("failover_replan", || {
+                format!(
+                    "round {round}: d{last_dead} dead, replanning onto {}",
+                    new_plan.describe()
+                )
+            });
+            crate::obs::log::info("adaptive", || {
+                format!("failover replan onto {}", new_plan.describe())
+            });
 
             let ctx = FailoverCtx {
                 at_iter: self.received,
@@ -630,11 +724,33 @@ impl DriveHooks for AdaptiveHooks<'_, '_> {
                         .replanner
                         .predict_ms(&new_plan, &obs_traces, &obs_cluster);
                     self.replanner.adopt(baseline, sim_now_ms(self.t0, self.scale));
+                    self.eng.cfg.trace.instant("failover_recovered", || {
+                        format!(
+                            "onto {} ({} restored, {} replayed iters)",
+                            record.to_plan, record.restored_groups, record.replayed_iters
+                        )
+                    });
+                    self.eng.cfg.metrics.inc("failovers_total", 1);
+                    crate::obs::log::info("adaptive", || {
+                        format!(
+                            "failover recovered onto {} (checkpoint: {}, {} replayed iters)",
+                            record.to_plan, record.via_checkpoint, record.replayed_iters
+                        )
+                    });
                     self.failovers.push(*record);
                     self.eng.plan = new_plan;
+                    // the post-mortem artifact: detection → replan →
+                    // restore are all inside the ring at this point
+                    self.dump_flight_record();
                     return Ok(true);
                 }
                 FailoverAttempt::ReplayStalled => {
+                    self.eng.cfg.trace.instant("failover_replay_stalled", || {
+                        format!("replay onto {} stalled", new_plan.describe())
+                    });
+                    crate::obs::log::warn("adaptive", || {
+                        format!("failover replay onto {} stalled", new_plan.describe())
+                    });
                     anyhow::ensure!(
                         round + 1 < DETECTION_ROUNDS,
                         "failover replay onto {} stalled again after {} detection rounds \
@@ -784,8 +900,10 @@ impl<'a> AdaptiveEngine<'a> {
     }
 
     fn run(&mut self, mode: DriveMode<'_>) -> Result<(Vec<GenResult>, AdaptiveStats)> {
-        let driver_cfg =
+        let mut driver_cfg =
             crate::coordinator::engine::driver_cfg(self.manifest, &self.plan, &self.cfg.engine);
+        driver_cfg.trace = self.cfg.trace.clone();
+        driver_cfg.metrics = self.cfg.metrics.clone();
         let believed = self.live.snapshot();
         // ground-truth device flags, shared by the dynamics driver and
         // every pipeline wired during this run
@@ -796,7 +914,10 @@ impl<'a> AdaptiveEngine<'a> {
             .filter(|d| d.has_device_churn())
             .map(|_| DeviceLiveness::new(believed.len()));
         let (mut monitor, mon_handle) = Monitor::new(believed.clone(), self.cfg.monitor_alpha);
-        let sinks = mon_handle.sinks();
+        let mut sinks = mon_handle.sinks();
+        // the tracer taps the same compute/transfer streams the monitor
+        // estimates from (fan-out, not a tee — both obs types are Copy)
+        sinks.add_tracer(&self.cfg.trace);
         let mut wired = wire(
             self.manifest,
             self.weights,

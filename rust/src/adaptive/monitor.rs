@@ -83,8 +83,8 @@ impl MonitorHandle {
     /// wants.
     pub fn sinks(&self) -> ObsSinks {
         ObsSinks {
-            compute: self.compute.clone(),
-            transfer: self.transfer.clone(),
+            compute: vec![self.compute.clone()],
+            transfer: vec![self.transfer.clone()],
         }
     }
 }

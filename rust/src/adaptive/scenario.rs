@@ -324,6 +324,12 @@ pub struct ChurnConfig {
     pub checkpoint_every: usize,
     pub time_scale: f64,
     pub seed: u64,
+    /// Tracer threaded into the adaptive runs (off by default).
+    pub trace: crate::obs::Tracer,
+    /// Failover flight-dump prefix (see `AdaptiveConfig::flight_prefix`);
+    /// suffixed per run (`_ck` / `_reprefill`) so the two adaptive runs
+    /// don't overwrite each other's dumps.
+    pub flight_prefix: Option<std::path::PathBuf>,
 }
 
 impl Default for ChurnConfig {
@@ -343,6 +349,8 @@ impl Default for ChurnConfig {
             checkpoint_every: 4,
             time_scale: 1.0,
             seed: 0,
+            trace: crate::obs::Tracer::off(),
+            flight_prefix: None,
         }
     }
 }
@@ -433,6 +441,14 @@ pub fn device_churn_scenario(cfg: &ChurnConfig) -> Result<ChurnReport> {
                 degrade_factor: 10.0,
                 ..Default::default()
             },
+            trace: cfg.trace.clone(),
+            flight_prefix: cfg.flight_prefix.as_ref().map(|p| {
+                std::path::PathBuf::from(format!(
+                    "{}_{}",
+                    p.display(),
+                    if checkpoint_every > 0 { "ck" } else { "reprefill" }
+                ))
+            }),
             ..AdaptiveConfig::default()
         };
         let mut engine = AdaptiveEngine::new(
@@ -515,6 +531,12 @@ pub struct ContinuousChurnConfig {
     pub checkpoint_every: usize,
     pub time_scale: f64,
     pub seed: u64,
+    /// Tracer threaded into the adaptive runs (off by default).
+    pub trace: crate::obs::Tracer,
+    /// Failover flight-dump prefix (see `AdaptiveConfig::flight_prefix`);
+    /// suffixed per run (`_ck` / `_reprefill`) so the two adaptive runs
+    /// don't overwrite each other's dumps.
+    pub flight_prefix: Option<std::path::PathBuf>,
 }
 
 impl Default for ContinuousChurnConfig {
@@ -537,6 +559,8 @@ impl Default for ContinuousChurnConfig {
             checkpoint_every: 4,
             time_scale: 1.0,
             seed: 0,
+            trace: crate::obs::Tracer::off(),
+            flight_prefix: None,
         }
     }
 }
@@ -636,6 +660,14 @@ pub fn continuous_churn_scenario(cfg: &ContinuousChurnConfig) -> Result<Continuo
                 degrade_factor: 10.0,
                 ..Default::default()
             },
+            trace: cfg.trace.clone(),
+            flight_prefix: cfg.flight_prefix.as_ref().map(|p| {
+                std::path::PathBuf::from(format!(
+                    "{}_{}",
+                    p.display(),
+                    if checkpoint_every > 0 { "ck" } else { "reprefill" }
+                ))
+            }),
             ..AdaptiveConfig::default()
         };
         let mut engine = AdaptiveEngine::new(
@@ -717,6 +749,10 @@ pub struct OpenLoopChurnConfig {
     pub checkpoint_every: usize,
     pub time_scale: f64,
     pub seed: u64,
+    /// Tracer threaded into the adaptive run (off by default).
+    pub trace: crate::obs::Tracer,
+    /// Failover flight-dump prefix (see `AdaptiveConfig::flight_prefix`).
+    pub flight_prefix: Option<std::path::PathBuf>,
 }
 
 impl Default for OpenLoopChurnConfig {
@@ -738,6 +774,8 @@ impl Default for OpenLoopChurnConfig {
             checkpoint_every: 4,
             time_scale: 1.0,
             seed: 0,
+            trace: crate::obs::Tracer::off(),
+            flight_prefix: None,
         }
     }
 }
@@ -835,6 +873,8 @@ pub fn open_loop_churn_scenario(cfg: &OpenLoopChurnConfig) -> Result<OpenLoopChu
             degrade_factor: 10.0,
             ..Default::default()
         },
+        trace: cfg.trace.clone(),
+        flight_prefix: cfg.flight_prefix.clone(),
         ..AdaptiveConfig::default()
     };
     let mut engine = AdaptiveEngine::new(

@@ -73,6 +73,7 @@ use super::engine::Wired;
 use super::scheduler::{Action, ContinuousConfig, RunSnap, SeqEvent, SlotScheduler};
 use super::stage::{Payload, Phase, StageMsg, TokenMsg, TokenOrigin};
 use crate::metrics::Histogram;
+use crate::obs::{LifeKind, ReqPhase};
 use crate::pipeline::Strategy;
 
 /// Dead-man interval, real ms: once the pipeline has delivered nothing
@@ -103,6 +104,14 @@ pub struct DriverCfg {
     /// continuous-batching admission control budgets against this (0 =
     /// unknown, check skipped).
     pub row_bytes_worst: u64,
+    /// Tracer for request/group lifecycle spans, decode-step spans and
+    /// queue-depth counters.  Defaults to [`crate::obs::Tracer::off`]: the
+    /// disabled path costs one relaxed atomic increment per would-be
+    /// event (asserted by the CI overhead gate).
+    pub trace: crate::obs::Tracer,
+    /// Live serving metrics (tokens/s, TTFT, queue depth, …).  Defaults
+    /// to [`crate::obs::MetricsRegistry::off`]: a single branch per call.
+    pub metrics: crate::obs::MetricsRegistry,
 }
 
 /// Aggregate statistics of one drive, embedded into
@@ -406,7 +415,11 @@ pub fn drive_groups(
             self.rows.first().map(|r| r.len()).unwrap_or(0)
         }
     }
-    fn admit(g: &GroupRequest) -> Active<'_> {
+    fn admit<'a>(trace: &crate::obs::Tracer, g: &'a GroupRequest) -> Active<'a> {
+        // lifecycle spans open here, on first admission only — a failover
+        // re-prefill re-sends work for an already-open group
+        trace.begin(LifeKind::Group, g.group_id, ReqPhase::Whole);
+        trace.begin(LifeKind::Group, g.group_id, ReqPhase::Prefill);
         Active {
             req: g,
             rows: vec![Vec::new(); g.batch],
@@ -461,7 +474,7 @@ pub fn drive_groups(
         send_prefill(wired, g)?;
         rows_real += g.real() as u64;
         rows_total += g.batch as u64;
-        active.insert(g.group_id, admit(g));
+        active.insert(g.group_id, admit(&cfg.trace, g));
         in_flight_groups += 1;
     }
 
@@ -543,19 +556,26 @@ pub fn drive_groups(
             // weights clients equally across serving modes
             let ms = now.duration_since(t0).as_secs_f64() * 1e3;
             a.ttft_ms = Some(ms);
+            cfg.trace.end(LifeKind::Group, tok.group, ReqPhase::Prefill);
+            cfg.trace.begin(LifeKind::Group, tok.group, ReqPhase::Decode);
             for _ in 0..a.req.real() {
                 ttft.record(ms);
+                cfg.metrics.observe("ttft_ms", ms);
             }
         } else {
             // the first token's latency IS the TTFT (prefill included) —
             // only subsequent gaps are decode-step latency
-            iter_lat.record(now.duration_since(a.last_iter_at).as_secs_f64() * 1e3);
+            let gap = now.duration_since(a.last_iter_at).as_secs_f64() * 1e3;
+            iter_lat.record(gap);
+            cfg.metrics.observe("iter_ms", gap);
+            cfg.trace.step(tok.group as usize, a.req.batch, gap);
         }
         a.last_iter_at = now;
         for (row, &t) in a.rows.iter_mut().zip(&tok.tokens) {
             row.push(t);
         }
         real_tokens += a.req.real() as u64;
+        cfg.metrics.add_tokens(a.req.real() as u64);
         let next_iter = tok.iter + 1;
         if next_iter < a.req.max_new_tokens {
             if pending_barrier {
@@ -577,6 +597,9 @@ pub fn drive_groups(
             // baseline with ttft_ms (and with drive_slots), so the two
             // are ordered and comparable across serving modes
             a.done = true;
+            cfg.trace.end(LifeKind::Group, tok.group, ReqPhase::Decode);
+            cfg.trace.end(LifeKind::Group, tok.group, ReqPhase::Whole);
+            cfg.metrics.inc("requests_completed", a.req.real() as u64);
             let total = now.duration_since(t0).as_secs_f64() * 1e3;
             // the group's first fold recorded its TTFT; a missing entry
             // is a folding bug and must not masquerade as a 0 ms TTFT
@@ -601,7 +624,7 @@ pub fn drive_groups(
                     send_prefill(wired, g)?;
                     rows_real += g.real() as u64;
                     rows_total += g.batch as u64;
-                    active.insert(g.group_id, admit(g));
+                    active.insert(g.group_id, admit(&cfg.trace, g));
                     in_flight_groups += 1;
                 }
             }
@@ -684,7 +707,7 @@ pub fn drive_groups(
                 send_prefill(wired, g)?;
                 rows_real += g.real() as u64;
                 rows_total += g.batch as u64;
-                active.insert(g.group_id, admit(g));
+                active.insert(g.group_id, admit(&cfg.trace, g));
                 in_flight_groups += 1;
             }
         }
@@ -767,6 +790,8 @@ pub fn drive_slots(
     for a in &initial {
         fits(a.req.id, a.req.max_new_tokens)?;
         arrival_by_req.insert(a.req.id, a.arrival_ms.max(0.0));
+        cfg.trace.begin(LifeKind::Request, a.req.id, ReqPhase::Whole);
+        cfg.trace.begin(LifeKind::Request, a.req.id, ReqPhase::Queue);
     }
     let mut sched = if queue.closed() {
         let reqs: Vec<_> = initial.iter().map(|a| a.req.clone()).collect();
@@ -824,6 +849,8 @@ pub fn drive_slots(
     };
     let dead_man_real_ms = ccfg.dead_man_real_ms.max(1.0);
     let mut last_progress = Instant::now();
+    // (queue depth, admitted requests) at the last gauge emission
+    let mut last_queue_gauge = (usize::MAX, usize::MAX);
 
     loop {
         // ingest arrivals first: anything that has arrived by now is
@@ -833,6 +860,8 @@ pub fn drive_slots(
         for a in queue.poll(now_ms) {
             fits(a.req.id, a.req.max_new_tokens)?;
             arrival_by_req.insert(a.req.id, a.arrival_ms.max(0.0));
+            cfg.trace.begin(LifeKind::Request, a.req.id, ReqPhase::Whole);
+            cfg.trace.begin(LifeKind::Request, a.req.id, ReqPhase::Queue);
             sched.push_request(&a.req)?;
         }
         if queue.closed() {
@@ -857,7 +886,11 @@ pub fn drive_slots(
                         if delay_recorded.insert(req) {
                             let arr = arrival_by_req.get(&req).copied().unwrap_or(0.0);
                             let now = t0.elapsed().as_secs_f64() * 1e3;
-                            queue_delay.record((now - arr).max(0.0));
+                            let wait = (now - arr).max(0.0);
+                            queue_delay.record(wait);
+                            cfg.metrics.observe("queue_delay_ms", wait);
+                            cfg.trace.end(LifeKind::Request, req, ReqPhase::Queue);
+                            cfg.trace.begin(LifeKind::Request, req, ReqPhase::Prefill);
                         }
                         let msg = StageMsg::Admit {
                             run,
@@ -889,6 +922,8 @@ pub fn drive_slots(
                         expecting += 1;
                     }
                     Action::Evict { run, slot } => {
+                        cfg.trace
+                            .instant("slot_evict", || format!("run {run} slot {slot}"));
                         send_control(wired, StageMsg::Evict { run, slot })?
                     }
                     Action::Compact {
@@ -911,6 +946,19 @@ pub fn drive_slots(
                     }
                 }
             }
+        }
+        // queue depth (arrived, not yet dispatched) and admitted-KV
+        // pressure: emitted only on change so the trace stays compact
+        let depth = arrival_by_req.len() - delay_recorded.len();
+        let admitted = delay_recorded.len() - results.len();
+        if (depth, admitted) != last_queue_gauge {
+            last_queue_gauge = (depth, admitted);
+            cfg.trace.counter("queue_depth", depth as f64);
+            cfg.metrics.gauge("queue_depth", depth as f64);
+            cfg.metrics.gauge(
+                "kv_bytes_admitted",
+                (admitted as u64 * cfg.row_bytes_worst) as f64,
+            );
         }
         if expecting == 0 {
             if pending_barrier {
@@ -981,17 +1029,25 @@ pub fn drive_slots(
             match ev {
                 SeqEvent::First { req_id } => {
                     real_tokens += 1;
+                    cfg.metrics.add_tokens(1);
                     let arr = arrival_by_req.get(&req_id).copied().unwrap_or(0.0);
                     let ms = (now.duration_since(t0).as_secs_f64() * 1e3 - arr).max(0.0);
                     ttft.record(ms);
+                    cfg.metrics.observe("ttft_ms", ms);
+                    cfg.trace.end(LifeKind::Request, req_id, ReqPhase::Prefill);
+                    cfg.trace.begin(LifeKind::Request, req_id, ReqPhase::Decode);
                     ttft_by_req.insert(req_id, ms);
                 }
                 SeqEvent::StepDone { run, live } => {
                     real_tokens += live as u64;
+                    cfg.metrics.add_tokens(live as u64);
                     // gaps between a run's consecutive steps are the
                     // decode-step latency; the first has no predecessor
                     if let Some(prev) = last_step_at.insert(run, now) {
-                        iter_lat.record(now.duration_since(prev).as_secs_f64() * 1e3);
+                        let gap = now.duration_since(prev).as_secs_f64() * 1e3;
+                        iter_lat.record(gap);
+                        cfg.metrics.observe("iter_ms", gap);
+                        cfg.trace.step(run as usize, live, gap);
                     }
                 }
                 SeqEvent::Finished { req_id, tokens } => {
@@ -1001,6 +1057,9 @@ pub fn drive_slots(
                     let req_ttft = ttft_by_req.get(&req_id).copied().with_context(|| {
                         format!("request {req_id} finished without a recorded first token")
                     })?;
+                    cfg.trace.end(LifeKind::Request, req_id, ReqPhase::Decode);
+                    cfg.trace.end(LifeKind::Request, req_id, ReqPhase::Whole);
+                    cfg.metrics.inc("requests_completed", 1);
                     let arr = arrival_by_req.get(&req_id).copied().unwrap_or(0.0);
                     results.push(GenResult {
                         id: req_id,

@@ -98,12 +98,26 @@ impl From<super::driver::DriveStats> for EngineStats {
     }
 }
 
-/// Observation sinks threaded into a wired pipeline — the adaptive
-/// monitor's taps on stage compute and link transfers.
-#[derive(Clone)]
+/// Observation sinks threaded into a wired pipeline — taps on stage
+/// compute and link transfers.  Each observation fans out to *every*
+/// sender, so the adaptive monitor and the tracer can listen to the same
+/// streams independently (both obs types are `Copy`).
+#[derive(Clone, Default)]
 pub struct ObsSinks {
-    pub compute: Sender<ComputeObs>,
-    pub transfer: Sender<TransferObs>,
+    pub compute: Vec<Sender<ComputeObs>>,
+    pub transfer: Vec<Sender<TransferObs>>,
+}
+
+impl ObsSinks {
+    /// Add the tracer's taps (no-op when the tracer is off).
+    pub fn add_tracer(&mut self, tracer: &crate::obs::Tracer) {
+        if let Some(tx) = tracer.compute_sink() {
+            self.compute.push(tx);
+        }
+        if let Some(tx) = tracer.transfer_sink() {
+            self.transfer.push(tx);
+        }
+    }
 }
 
 /// A fully wired pipeline: stage actor threads connected by live shaped
@@ -146,7 +160,8 @@ pub fn wire(
     );
     let s_count = plan.n_stages();
     let mut links = Vec::new();
-    let transfer_tx = obs.map(|o| o.transfer.clone());
+    let transfer_txs: Vec<Sender<TransferObs>> =
+        obs.map(|o| o.transfer.clone()).unwrap_or_default();
 
     // token loopback: head device -> source
     let head_dev = plan.stages.last().unwrap().device;
@@ -160,7 +175,7 @@ pub fn wire(
         loop_link,
         cfg.time_scale,
         (head_dev, cluster.source),
-        transfer_tx.clone(),
+        transfer_txs.clone(),
     );
 
     // per-stage ingress links: stage i receives over the link
@@ -191,7 +206,7 @@ pub fn wire(
             live,
             cfg.time_scale,
             route,
-            if i > 0 { transfer_tx.clone() } else { None },
+            if i > 0 { transfer_txs.clone() } else { Vec::new() },
         );
         receivers[i] = Some(rx);
         senders[i] = Some(tx);
@@ -223,7 +238,7 @@ pub fn wire(
             pre,
         )?;
         actor.compute_scale = cfg.compute_scale.get(st.device).copied().unwrap_or(1.0);
-        actor.obs = obs.map(|o| o.compute.clone());
+        actor.obs = obs.map(|o| o.compute.clone()).unwrap_or_default();
         actor.liveness = liveness.cloned();
         let rx = receivers[i].take().unwrap();
         handles.push(
@@ -262,6 +277,8 @@ pub fn driver_cfg(manifest: &Manifest, plan: &Plan, cfg: &EngineConfig) -> Drive
         max_seq: c.max_seq,
         kv_budget_bytes: cfg.kv_budget_bytes,
         row_bytes_worst,
+        trace: crate::obs::Tracer::off(),
+        metrics: crate::obs::MetricsRegistry::off(),
     }
 }
 
@@ -282,11 +299,42 @@ impl Engine {
         cluster: &Cluster,
         cfg: &EngineConfig,
     ) -> Result<Self> {
-        let wired = wire(manifest, weights, exec, plan, cluster, cfg, None, None, Vec::new())?;
-        Ok(Engine {
-            wired,
-            driver_cfg: driver_cfg(manifest, plan, cfg),
-        })
+        Self::build_traced(
+            manifest,
+            weights,
+            exec,
+            plan,
+            cluster,
+            cfg,
+            &crate::obs::Tracer::off(),
+        )
+    }
+
+    /// Build with a [`crate::obs::Tracer`] tapping every stage and link,
+    /// and recording lifecycle/step spans in the drive loop.  With
+    /// `Tracer::off()` this is exactly [`Engine::build`].
+    pub fn build_traced(
+        manifest: &Manifest,
+        weights: &WeightStore,
+        exec: ExecServiceHandle,
+        plan: &Plan,
+        cluster: &Cluster,
+        cfg: &EngineConfig,
+        tracer: &crate::obs::Tracer,
+    ) -> Result<Self> {
+        let mut sinks = ObsSinks::default();
+        sinks.add_tracer(tracer);
+        let obs = if tracer.is_on() { Some(&sinks) } else { None };
+        let wired = wire(manifest, weights, exec, plan, cluster, cfg, obs, None, Vec::new())?;
+        let mut dc = driver_cfg(manifest, plan, cfg);
+        dc.trace = tracer.clone();
+        Ok(Engine { wired, driver_cfg: dc })
+    }
+
+    /// Attach a live [`crate::obs::MetricsRegistry`] that the drive loop
+    /// updates (tokens, TTFT, queue delay, queue depth, KV bytes).
+    pub fn set_metrics(&mut self, metrics: &crate::obs::MetricsRegistry) {
+        self.driver_cfg.metrics = metrics.clone();
     }
 
     /// The live inter-device links this engine's traffic flows over

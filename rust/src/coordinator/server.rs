@@ -7,6 +7,11 @@
 //! ← {"id": 1, "text": "…", "tokens": [..], "ttft_ms": 12.3, "total_ms": 87.0}
 //! ```
 //!
+//! Besides generation requests the protocol answers one control command:
+//! `{"cmd": "metrics"}` replies with a [`crate::obs::MetricsRegistry`]
+//! snapshot (counters, gauges, histogram summaries) without entering the
+//! serving queue — a live health probe under load.
+//!
 //! Requests are byte-tokenized (the tiny model's 256-entry vocabulary)
 //! and served **continuously**: every connection handler feeds a shared
 //! [`LiveSource`], and one [`Engine::generate_from_source`] drive admits
@@ -57,6 +62,11 @@ pub struct ServerConfig {
     /// Admission policy ([`AdmissionPolicy::Fifo`], or a bound on how
     /// many prefills may delay an in-flight decode step).
     pub policy: AdmissionPolicy,
+    /// Registry answering `{"cmd": "metrics"}` probes.  Share it with
+    /// the engine ([`Engine::set_metrics`]) so the snapshot carries the
+    /// serving counters; the default (off) registry answers
+    /// `{"enabled": false}`.
+    pub metrics: crate::obs::MetricsRegistry,
 }
 
 /// Run the serving loop on `listener` until `max_requests` (if set) have
@@ -66,6 +76,7 @@ pub fn serve(listener: TcpListener, engine: &mut Engine, cfg: &ServerConfig) -> 
     let addr = listener.local_addr().context("listener addr")?;
     let (in_tx, in_rx) = mpsc::channel::<IncomingRequest>();
     let stop = Arc::new(AtomicBool::new(false));
+    let metrics = cfg.metrics.clone();
     let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
 
     // acceptor thread: one handler thread per connection
@@ -84,10 +95,11 @@ pub fn serve(listener: TcpListener, engine: &mut Engine, cfg: &ServerConfig) -> 
                     let Ok(stream) = stream else { continue };
                     let tx = in_tx.clone();
                     let hstop = stop.clone();
+                    let hmetrics = metrics.clone();
                     let Ok(h) = std::thread::Builder::new()
                         .name("serve-conn".into())
                         .spawn(move || {
-                            let _ = handle_conn(stream, tx, hstop);
+                            let _ = handle_conn(stream, tx, hstop, hmetrics);
                         })
                     else {
                         continue;
@@ -130,7 +142,21 @@ pub fn serve(listener: TcpListener, engine: &mut Engine, cfg: &ServerConfig) -> 
     Ok(results.len())
 }
 
-fn handle_conn(stream: TcpStream, tx: Sender<IncomingRequest>, stop: Arc<AtomicBool>) -> Result<()> {
+/// True iff the line is the `{"cmd": "metrics"}` control command (any
+/// object with `cmd == "metrics"` qualifies).
+fn is_metrics_cmd(line: &str) -> bool {
+    Json::parse(line)
+        .ok()
+        .and_then(|j| j.get("cmd").and_then(|c| c.as_str().map(String::from)))
+        .is_some_and(|c| c == "metrics")
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    tx: Sender<IncomingRequest>,
+    stop: Arc<AtomicBool>,
+    metrics: crate::obs::MetricsRegistry,
+) -> Result<()> {
     // a short read timeout lets the handler observe server shutdown even
     // while its client holds the connection open silently
     stream.set_read_timeout(Some(HANDLER_READ_TIMEOUT))?;
@@ -151,7 +177,11 @@ fn handle_conn(stream: TcpStream, tx: Sender<IncomingRequest>, stop: Arc<AtomicB
             Ok(_) => {
                 let text = String::from_utf8_lossy(&line);
                 let trimmed = text.trim();
-                if !trimmed.is_empty() {
+                if is_metrics_cmd(trimmed) {
+                    // answered inline — a health probe must not queue
+                    // behind the serving drive
+                    writeln!(writer, "{}", metrics.snapshot())?;
+                } else if !trimmed.is_empty() {
                     match parse_request(trimmed) {
                         Ok(req) => {
                             let (rtx, rrx) = mpsc::channel();
@@ -266,6 +296,14 @@ mod tests {
     fn max_new_clamped() {
         let r = parse_request(r#"{"prompt": "x", "max_new_tokens": 10000}"#).unwrap();
         assert_eq!(r.max_new_tokens, 96);
+    }
+
+    #[test]
+    fn metrics_cmd_detected() {
+        assert!(is_metrics_cmd(r#"{"cmd": "metrics"}"#));
+        assert!(!is_metrics_cmd(r#"{"cmd": "shutdown"}"#));
+        assert!(!is_metrics_cmd(r#"{"prompt": "hi"}"#));
+        assert!(!is_metrics_cmd("not json"));
     }
 
     #[test]

@@ -228,8 +228,9 @@ pub struct StageActor {
     pub next: NextHop,
     /// Extra simulated compute slowdown (1.0 = run at real CPU speed).
     pub compute_scale: f64,
-    /// Optional sink for per-message compute timings (adaptive monitor).
-    pub obs: Option<Sender<ComputeObs>>,
+    /// Sinks for per-message compute timings (adaptive monitor, tracer);
+    /// every observation is fanned out to each sender.
+    pub obs: Vec<Sender<ComputeObs>>,
     /// Shared ground-truth device liveness (churn scenarios).  While this
     /// device is flagged dead every frame reaching it is dropped — no
     /// compute, no forwarding, no observations — exactly as if the host
@@ -315,7 +316,7 @@ impl StageActor {
             kv,
             next,
             compute_scale: 1.0,
-            obs: None,
+            obs: Vec::new(),
             liveness: None,
             embed_w,
             head_w,
@@ -570,16 +571,17 @@ impl StageActor {
     }
 
     fn record_obs(&self, decode: bool, exec_ms_before: f64) {
-        if !self.host_alive() {
+        if !self.host_alive() || self.obs.is_empty() {
             return;
         }
-        if let Some(tx) = &self.obs {
-            let _ = tx.send(ComputeObs {
-                device: self.device_id,
-                stage: self.stage_idx,
-                decode,
-                ms: self.exec_ms_total - exec_ms_before,
-            });
+        let o = ComputeObs {
+            device: self.device_id,
+            stage: self.stage_idx,
+            decode,
+            ms: self.exec_ms_total - exec_ms_before,
+        };
+        for tx in &self.obs {
+            let _ = tx.send(o);
         }
     }
 

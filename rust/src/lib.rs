@@ -26,6 +26,7 @@
 //! | [`adaptive`] | network dynamics, online monitoring, live replanning + KV-cache migration |
 //! | [`workload`] | synthetic corpus + request trace generators |
 //! | [`metrics`] | latency/throughput instrumentation, table rendering |
+//! | [`obs`] | tracing (Perfetto export), live metrics registry, leveled logging, flight recorder |
 //! | [`repro`] | regenerates every table and figure of the paper's evaluation |
 //!
 //! Python/JAX/Pallas exist only on the build path (`make artifacts`); the
@@ -39,6 +40,7 @@ pub mod coordinator;
 pub mod metrics;
 pub mod model;
 pub mod netsim;
+pub mod obs;
 pub mod pipeline;
 pub mod planner;
 pub mod profiler;

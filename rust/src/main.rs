@@ -2,14 +2,19 @@
 //!
 //! ```text
 //! edgeshard repro <table1|table4|fig7|fig8|fig9|fig10|adaptive|churn|serving|all> [--seed N]
-//! edgeshard bench serving [--requests N] [--runs N] [--seed N] [--out PATH]
+//! edgeshard bench serving [--requests N] [--runs N] [--seed N] [--out PATH] [--trace PATH]
 //! edgeshard plan --model <7b|13b|70b> [--bandwidth MBPS] [--objective latency|throughput] [--seed N]
 //! edgeshard profile --model <7b|13b|70b> [--bandwidth MBPS]
 //! edgeshard gantt --model <7b|13b|70b> [--strategy bubble|nobubble] [--micro N]
 //! edgeshard serve [--addr HOST:PORT] [--backend sim|pjrt] [--stages N] [--time-scale F]
-//!                 [--max-requests N] [--prefill-bound K]
+//!                 [--max-requests N] [--prefill-bound K] [--trace PATH]
 //! edgeshard generate --prompt "text" [--max-new N] [--stages N]
 //! ```
+//!
+//! `--trace PATH` (on `bench serving`, `repro churn|serving`, `serve`)
+//! records a Chrome/Perfetto trace of the run — see docs/OBSERVABILITY.md.
+//! `--log <off|error|warn|info|debug>` (any subcommand) turns on the
+//! diagnostic logger, overriding `EDGESHARD_LOG`.
 //!
 //! `repro` regenerates the paper's tables/figures (analytic testbed);
 //! `serve` runs the arrival-driven continuous-batching front door —
@@ -91,6 +96,13 @@ fn main() -> Result<()> {
         return Ok(());
     };
     let args = Args::parse(&argv[1..])?;
+    // `--log LEVEL` works on every subcommand and overrides the
+    // `EDGESHARD_LOG` environment variable
+    if let Some(lvl) = args.get("log") {
+        let level = edgeshard::obs::log::parse_level(lvl)
+            .with_context(|| format!("--log {lvl} (use off|error|warn|info|debug)"))?;
+        edgeshard::obs::log::set_level(level);
+    }
     match cmd {
         "repro" => cmd_repro(&args),
         "bench" => cmd_bench(&args),
@@ -111,12 +123,14 @@ fn print_usage() {
     println!(
         "edgeshard — EdgeShard reproduction (collaborative edge LLM inference)\n\n\
          USAGE:\n  edgeshard repro <table1|table4|fig7|fig8|fig9|fig10|adaptive|churn|serving|all> [--seed N]\n  \
-         edgeshard bench serving [--requests N] [--runs N] [--seed N] [--out BENCH_serving.json]\n  \
+         edgeshard bench serving [--requests N] [--runs N] [--seed N] [--out BENCH_serving.json] [--trace PATH]\n  \
          edgeshard plan --model 7b [--bandwidth 1] [--objective latency] [--seed N]\n  \
          edgeshard profile --model 7b [--bandwidth 1]\n  \
          edgeshard gantt --model 7b [--strategy nobubble] [--micro 4]\n  \
-         edgeshard serve [--addr 127.0.0.1:7077] [--backend sim] [--stages 3] [--max-requests N] [--prefill-bound K]\n  \
-         edgeshard generate --prompt \"Today is a\" [--max-new 16] [--stages 3]"
+         edgeshard serve [--addr 127.0.0.1:7077] [--backend sim] [--stages 3] [--max-requests N] [--prefill-bound K] [--trace PATH]\n  \
+         edgeshard generate --prompt \"Today is a\" [--max-new 16] [--stages 3]\n\n\
+         `--trace PATH` writes a Chrome/Perfetto trace (bench serving, repro churn|serving, serve);\n\
+         `--log off|error|warn|info|debug` enables diagnostics on any subcommand (or EDGESHARD_LOG)."
     );
 }
 
@@ -135,7 +149,9 @@ fn cmd_repro(args: &Args) -> Result<()> {
         "fig9" => edgeshard::repro::figs::fig9(seed),
         "fig10" => edgeshard::repro::figs::fig10(seed),
         "adaptive" => edgeshard::repro::adaptive::run(seed),
-        "churn" => edgeshard::repro::churn::run(seed),
+        "churn" => {
+            edgeshard::repro::churn::run(seed, args.get("trace").map(std::path::Path::new))
+        }
         // alias for `bench serving` so every row of the repro table is
         // reachable from `repro`
         "serving" => {
@@ -143,7 +159,11 @@ fn cmd_repro(args: &Args) -> Result<()> {
                 seed,
                 ..Default::default()
             };
-            edgeshard::repro::serving::run(&cfg, std::path::Path::new("BENCH_serving.json"))
+            edgeshard::repro::serving::run(
+                &cfg,
+                std::path::Path::new("BENCH_serving.json"),
+                args.get("trace").map(std::path::Path::new),
+            )
         }
         "all" => edgeshard::repro::run_all(seed),
         other => bail!("unknown experiment `{other}`"),
@@ -169,7 +189,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 ..Default::default()
             };
             let out = args.get("out").unwrap_or("BENCH_serving.json");
-            edgeshard::repro::serving::run(&cfg, std::path::Path::new(out))
+            edgeshard::repro::serving::run(
+                &cfg,
+                std::path::Path::new(out),
+                args.get("trace").map(std::path::Path::new),
+            )
         }
         other => bail!("unknown bench `{other}` (try `serving`)"),
     }
@@ -267,7 +291,10 @@ fn cmd_gantt(args: &Args) -> Result<()> {
 }
 
 /// Build the real-model engine shared by `serve` and `generate`.
-fn build_engine(args: &Args) -> Result<(ExecService, Engine, Batcher)> {
+fn build_engine(
+    args: &Args,
+    tracer: &edgeshard::obs::Tracer,
+) -> Result<(ExecService, Engine, Batcher)> {
     let manifest = Manifest::load(Manifest::default_dir())
         .context("loading artifacts (run `make artifacts` first)")?;
     let weights = WeightStore::load(&manifest)?;
@@ -289,28 +316,38 @@ fn build_engine(args: &Args) -> Result<(ExecService, Engine, Batcher)> {
         time_scale,
         ..Default::default()
     };
-    let engine = Engine::build(&manifest, &weights, handle, &plan, &cluster, &cfg)?;
+    let engine =
+        Engine::build_traced(&manifest, &weights, handle, &plan, &cluster, &cfg, tracer)?;
     let batcher = Batcher::new(manifest.config.prefill_len, manifest.batch_sizes.clone());
     Ok((svc, engine, batcher))
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.get("addr").unwrap_or("127.0.0.1:7077").to_string();
+    let trace_path = args.get("trace").map(std::path::Path::new);
+    let tracer = match trace_path {
+        Some(_) => edgeshard::obs::Tracer::on(),
+        None => edgeshard::obs::Tracer::off(),
+    };
     // `--backend sim` serves the synthetic tiny model through the
     // pure-rust sim backend — no AOT artifacts needed, and the one
     // backend with the per-row decode support continuous batching
     // requires today.  The default loads the real PJRT artifacts.
     let (_svc_real, _svc_sim, mut engine) = match args.get("backend").unwrap_or("pjrt") {
         "sim" => {
-            let (svc, engine) = build_sim_engine(args)?;
+            let (svc, engine) = build_sim_engine(args, &tracer)?;
             (None, Some(svc), engine)
         }
         "pjrt" => {
-            let (svc, engine, _batcher) = build_engine(args)?;
+            let (svc, engine, _batcher) = build_engine(args, &tracer)?;
             (Some(svc), None, engine)
         }
         other => bail!("backend must be sim|pjrt, got `{other}`"),
     };
+    // live metrics, shared between the serving drive and the
+    // `{"cmd": "metrics"}` protocol probe
+    let metrics = edgeshard::obs::MetricsRegistry::new();
+    engine.set_metrics(&metrics);
     let listener = std::net::TcpListener::bind(&addr)?;
     println!("serving on {addr} (JSON lines: {{\"prompt\": \"…\", \"max_new_tokens\": 16}})");
     let cfg = edgeshard::coordinator::server::ServerConfig {
@@ -319,17 +356,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
             0 => edgeshard::coordinator::AdmissionPolicy::Fifo,
             k => edgeshard::coordinator::AdmissionPolicy::BoundedPrefill(k),
         },
+        metrics,
         ..Default::default()
     };
     let served = edgeshard::coordinator::server::serve(listener, &mut engine, &cfg)?;
     println!("served {served} requests");
     engine.shutdown()?;
+    if let Some(path) = trace_path {
+        if tracer.export_chrome(path)? {
+            println!("wrote trace {}", path.display());
+        }
+    }
     Ok(())
 }
 
 /// Sim-backend engine for the artifact-free serving demo: synthetic
 /// tiny model, demo cluster, measured-trace planning.
-fn build_sim_engine(args: &Args) -> Result<(ExecService, Engine)> {
+fn build_sim_engine(
+    args: &Args,
+    tracer: &edgeshard::obs::Tracer,
+) -> Result<(ExecService, Engine)> {
     let manifest = Manifest::synthetic_tiny();
     let weights = WeightStore::synthetic(&manifest, args.get_usize("seed", 0)? as u64);
     let (svc, handle) = ExecService::start_sim(&manifest)?;
@@ -349,14 +395,15 @@ fn build_sim_engine(args: &Args) -> Result<(ExecService, Engine)> {
         time_scale,
         ..Default::default()
     };
-    let engine = Engine::build(&manifest, &weights, handle, &plan, &cluster, &cfg)?;
+    let engine =
+        Engine::build_traced(&manifest, &weights, handle, &plan, &cluster, &cfg, tracer)?;
     Ok((svc, engine))
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
     let prompt = args.get("prompt").unwrap_or("Today is a good day").to_string();
     let max_new = args.get_usize("max-new", 16)?;
-    let (svc, mut engine, mut batcher) = build_engine(args)?;
+    let (svc, mut engine, mut batcher) = build_engine(args, &edgeshard::obs::Tracer::off())?;
     let req = GenRequest {
         id: 1,
         prompt: prompt.bytes().map(|b| b as i32).collect(),

@@ -90,28 +90,23 @@ pub struct ComputeObs {
     pub ms: f64,
 }
 
-/// Counts events over a wall-clock window.
-#[derive(Debug)]
+/// Counts events over a wall-clock window.  The window opens at the
+/// *first* [`ThroughputMeter::add`], not at construction, so setup time
+/// between building the meter and the first event never dilutes
+/// [`ThroughputMeter::per_second`].
+#[derive(Debug, Default)]
 pub struct ThroughputMeter {
-    start: Instant,
+    start: Option<Instant>,
     count: u64,
-}
-
-impl Default for ThroughputMeter {
-    fn default() -> Self {
-        Self::new()
-    }
 }
 
 impl ThroughputMeter {
     pub fn new() -> Self {
-        ThroughputMeter {
-            start: Instant::now(),
-            count: 0,
-        }
+        ThroughputMeter::default()
     }
 
     pub fn add(&mut self, n: u64) {
+        self.start.get_or_insert_with(Instant::now);
         self.count += n;
     }
 
@@ -119,8 +114,11 @@ impl ThroughputMeter {
         self.count
     }
 
+    /// Seconds since the first event (0 before any event).
     pub fn elapsed_s(&self) -> f64 {
-        self.start.elapsed().as_secs_f64()
+        self.start
+            .map(|s| s.elapsed().as_secs_f64())
+            .unwrap_or(0.0)
     }
 
     pub fn per_second(&self) -> f64 {
@@ -200,6 +198,26 @@ mod tests {
         t.add(5);
         assert_eq!(t.count(), 15);
         assert!(t.per_second() > 0.0);
+    }
+
+    /// Regression: the window must start at the first `add`, not at
+    /// construction — otherwise setup time silently deflates the rate.
+    #[test]
+    fn throughput_window_starts_on_first_add() {
+        let mut t = ThroughputMeter::new();
+        assert_eq!(t.elapsed_s(), 0.0);
+        assert_eq!(t.per_second(), 0.0);
+        // construction-to-first-event gap must not count
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        t.add(100);
+        let elapsed = t.elapsed_s();
+        assert!(
+            elapsed < 0.050,
+            "window included setup time: elapsed {elapsed}s"
+        );
+        // 100 events over well under 50 ms is > 2000/s; the old
+        // construction-anchored window would report < 1700/s here
+        assert!(t.per_second() > 2000.0, "rate {}", t.per_second());
     }
 
     #[test]

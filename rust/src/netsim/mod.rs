@@ -168,19 +168,20 @@ pub fn shaped_channel<T: Send + 'static>(
     spec: LinkSpec,
     time_scale: f64,
 ) -> (ShapedSender<T>, Receiver<T>) {
-    shaped_channel_live(LiveLink::new(spec), time_scale, (0, 0), None)
+    shaped_channel_live(LiveLink::new(spec), time_scale, (0, 0), Vec::new())
 }
 
 /// Create a shaped link whose spec is read live from `link` — bandwidth
 /// changes apply to the *remaining* bits of any frame being serialized.
 ///
-/// `route` tags observations with the (from, to) device pair; when `obs`
-/// is set, every delivered frame reports a [`TransferObs`].
+/// `route` tags observations with the (from, to) device pair; every
+/// delivered frame reports a [`TransferObs`] to each sender in `obs`
+/// (fan-out: the adaptive monitor and the tracer can both listen).
 pub fn shaped_channel_live<T: Send + 'static>(
     link: LiveLink,
     time_scale: f64,
     route: (usize, usize),
-    obs: Option<Sender<TransferObs>>,
+    obs: Vec<Sender<TransferObs>>,
 ) -> (ShapedSender<T>, Receiver<T>) {
     let (in_tx, in_rx) = mpsc::channel::<Frame<T>>();
     let (out_tx, out_rx) = mpsc::channel::<T>();
@@ -228,19 +229,22 @@ pub fn shaped_channel_live<T: Send + 'static>(
                     remaining_bits -= PACER_SLICE_REAL_MS / time_scale * bw * 1e3;
                 }
             }
-            if let Some(tx) = &obs {
+            if !obs.is_empty() {
                 let real_ms = frame.enqueued.elapsed().as_secs_f64() * 1e3;
                 let ser_sim_ms = if time_scale > 0.0 {
                     real_ms / time_scale
                 } else {
                     spec.transfer_ms(frame.bytes)
                 };
-                let _ = tx.send(TransferObs {
+                let o = TransferObs {
                     from: route.0,
                     to: route.1,
                     bytes: frame.bytes,
                     sim_ms: ser_sim_ms + spec.latency_ms,
-                });
+                };
+                for tx in &obs {
+                    let _ = tx.send(o);
+                }
             }
             let lat = spec.latency_ms * time_scale;
             let due = if lat.is_finite() && lat > 0.0 {
@@ -375,7 +379,7 @@ mod tests {
         // A frame that would take ~400 ms real at the initial rate speeds
         // up when the link is re-shaped 10× faster shortly after send.
         let link = LiveLink::new(LinkSpec::new(2.0, 0.0));
-        let (tx, rx) = shaped_channel_live::<u32>(link.clone(), 0.1, (0, 1), None);
+        let (tx, rx) = shaped_channel_live::<u32>(link.clone(), 0.1, (0, 1), Vec::new());
         let start = Instant::now();
         tx.send(1, 1_000_000).unwrap(); // 4000 ms sim → 400 ms real
         thread::sleep(Duration::from_millis(40));
@@ -390,7 +394,7 @@ mod tests {
     fn observations_report_bytes_and_time() {
         let link = LiveLink::new(LinkSpec::new(8.0, 3.0));
         let (obs_tx, obs_rx) = mpsc::channel();
-        let (tx, rx) = shaped_channel_live::<u32>(link, 0.05, (2, 4), Some(obs_tx));
+        let (tx, rx) = shaped_channel_live::<u32>(link, 0.05, (2, 4), vec![obs_tx]);
         tx.send(9, 100_000).unwrap(); // 100 ms sim serialization
         rx.recv().unwrap();
         let o = obs_rx.recv().unwrap();
@@ -401,9 +405,23 @@ mod tests {
     }
 
     #[test]
+    fn observations_fan_out_to_every_sink() {
+        let link = LiveLink::new(LinkSpec::new(1000.0, 0.0));
+        let (a_tx, a_rx) = mpsc::channel();
+        let (b_tx, b_rx) = mpsc::channel();
+        let (tx, rx) = shaped_channel_live::<u32>(link, 0.0, (1, 2), vec![a_tx, b_tx]);
+        tx.send(1, 4096).unwrap();
+        rx.recv().unwrap();
+        let a = a_rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        let b = b_rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(a, b);
+        assert_eq!((a.from, a.to, a.bytes), (1, 2, 4096));
+    }
+
+    #[test]
     fn down_link_holds_frames_until_recovery() {
         let link = LiveLink::new(LinkSpec::new(1000.0, 0.0));
-        let (tx, rx) = shaped_channel_live::<u32>(link.clone(), 0.05, (0, 1), None);
+        let (tx, rx) = shaped_channel_live::<u32>(link.clone(), 0.05, (0, 1), Vec::new());
         link.set_bandwidth(0.0);
         tx.send(5, 1000).unwrap();
         assert!(rx

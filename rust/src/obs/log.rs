@@ -1,0 +1,130 @@
+//! Tiny leveled logger — opt-in diagnostics for the adaptive runtime and
+//! the coordinator, quiet by default.
+//!
+//! The level comes from the `EDGESHARD_LOG` environment variable
+//! (`off|error|warn|info|debug`, or `0..=4`) or from [`set_level`] (the
+//! CLI's `--log` flag).  Call sites pass a closure so a disabled level
+//! costs one relaxed atomic load and never formats:
+//!
+//! ```
+//! edgeshard::obs::log::debug("replan", || format!("evaluated {} plans", 3));
+//! ```
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Verbosity levels, ordered: a configured level enables itself and
+/// everything below it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+}
+
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Off => "off",
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// Parse a level name or digit; `None` on anything unrecognized.
+pub fn parse_level(s: &str) -> Option<Level> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "off" | "0" | "none" => Some(Level::Off),
+        "error" | "1" => Some(Level::Error),
+        "warn" | "warning" | "2" => Some(Level::Warn),
+        "info" | "3" => Some(Level::Info),
+        "debug" | "4" => Some(Level::Debug),
+        _ => None,
+    }
+}
+
+/// 255 = "not initialized yet: consult the environment on first read".
+const UNSET: u8 = 255;
+static LEVEL: AtomicU8 = AtomicU8::new(UNSET);
+
+fn from_u8(v: u8) -> Level {
+    match v {
+        1 => Level::Error,
+        2 => Level::Warn,
+        3 => Level::Info,
+        4 => Level::Debug,
+        _ => Level::Off,
+    }
+}
+
+/// Force the level (CLI flag / tests) — wins over the environment.
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// The active level (reads `EDGESHARD_LOG` on first call).
+pub fn level() -> Level {
+    let v = LEVEL.load(Ordering::Relaxed);
+    if v != UNSET {
+        return from_u8(v);
+    }
+    let init = std::env::var("EDGESHARD_LOG")
+        .ok()
+        .and_then(|s| parse_level(&s))
+        .unwrap_or(Level::Off);
+    // racing initializers agree (env is stable), so a plain store is fine
+    LEVEL.store(init as u8, Ordering::Relaxed);
+    init
+}
+
+/// Is `l` currently enabled?
+pub fn enabled(l: Level) -> bool {
+    l <= level() && l != Level::Off
+}
+
+/// Log at `l` under a short target tag; the closure runs only when the
+/// level is enabled.
+pub fn log(l: Level, target: &str, msg: impl FnOnce() -> String) {
+    if enabled(l) {
+        eprintln!("[{:<5} {target}] {}", l.tag(), msg());
+    }
+}
+
+pub fn error(target: &str, msg: impl FnOnce() -> String) {
+    log(Level::Error, target, msg);
+}
+
+pub fn warn(target: &str, msg: impl FnOnce() -> String) {
+    log(Level::Warn, target, msg);
+}
+
+pub fn info(target: &str, msg: impl FnOnce() -> String) {
+    log(Level::Info, target, msg);
+}
+
+pub fn debug(target: &str, msg: impl FnOnce() -> String) {
+    log(Level::Debug, target, msg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_names_and_digits() {
+        assert_eq!(parse_level("info"), Some(Level::Info));
+        assert_eq!(parse_level("DEBUG"), Some(Level::Debug));
+        assert_eq!(parse_level("2"), Some(Level::Warn));
+        assert_eq!(parse_level("nope"), None);
+    }
+
+    #[test]
+    fn levels_order() {
+        assert!(Level::Error < Level::Debug);
+        assert!(Level::Off < Level::Error);
+    }
+}

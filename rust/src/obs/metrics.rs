@@ -1,0 +1,365 @@
+//! Live metrics: a bounded-memory log-bucket histogram and a process-wide
+//! [`MetricsRegistry`] of counters / gauges / histograms.
+//!
+//! The exact [`crate::metrics::Histogram`] keeps every sample — right for
+//! bounded experiments, wrong for a long-running `serve` loop.
+//! [`BucketHistogram`] buckets values geometrically (ratio
+//! [`BUCKET_GAMMA`]), so memory is bounded by the dynamic range of the
+//! data (a few hundred buckets over ns→hours) and percentiles carry a
+//! bounded *relative* error of `√γ − 1` (< 5%).  Buckets of two
+//! histograms align exactly, so merging is count addition.
+//!
+//! [`MetricsRegistry`] is a cheap cloneable handle; a disabled registry
+//! (`MetricsRegistry::off()`, the default) makes every operation a no-op
+//! so the serving hot path pays nothing when metrics are off.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::ThroughputMeter;
+use crate::util::Json;
+
+/// Geometric bucket ratio: each bucket's upper bound is γ× the previous.
+/// γ = 1.1 keeps the worst-case percentile error under `√1.1 − 1 ≈ 4.9%`.
+pub const BUCKET_GAMMA: f64 = 1.1;
+
+/// Bounded-memory log-bucket histogram (mergeable).
+///
+/// Bucket `i` covers `(γ^(i−1), γ^i]`; a recorded value lands in bucket
+/// `ceil(ln v / ln γ)` and is reported back as the bucket's geometric
+/// midpoint `γ^(i−1/2)`.  Zero and negative values count in a dedicated
+/// zero bucket (reported as 0).
+#[derive(Debug, Clone, Default)]
+pub struct BucketHistogram {
+    counts: BTreeMap<i32, u64>,
+    zero: u64,
+    count: u64,
+    sum: f64,
+}
+
+impl BucketHistogram {
+    pub fn new() -> Self {
+        BucketHistogram::default()
+    }
+
+    fn bucket_of(v: f64) -> i32 {
+        (v.ln() / BUCKET_GAMMA.ln()).ceil() as i32
+    }
+
+    /// Geometric midpoint of bucket `i` — the representative value.
+    fn midpoint(i: i32) -> f64 {
+        BUCKET_GAMMA.powf(i as f64 - 0.5)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.count += 1;
+        if v > 0.0 && v.is_finite() {
+            self.sum += v;
+            *self.counts.entry(Self::bucket_of(v)).or_insert(0) += 1;
+        } else {
+            self.zero += 1;
+        }
+    }
+
+    pub fn len(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Distinct buckets in use — the memory bound.
+    pub fn buckets(&self) -> usize {
+        self.counts.len() + usize::from(self.zero > 0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Nearest-rank percentile over the bucketed distribution; the value
+    /// returned is the holding bucket's geometric midpoint, so it is
+    /// within `√γ` of the exact-sample percentile.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        if rank <= self.zero {
+            return 0.0;
+        }
+        let mut seen = self.zero;
+        for (&i, &c) in &self.counts {
+            seen += c;
+            if seen >= rank {
+                return Self::midpoint(i);
+            }
+        }
+        // rank beyond the last bucket (p > 100): clamp to the max bucket
+        self.counts
+            .keys()
+            .next_back()
+            .map(|&i| Self::midpoint(i))
+            .unwrap_or(0.0)
+    }
+
+    /// Merge another histogram in; bucket boundaries are identical by
+    /// construction, so this is exact.
+    pub fn merge(&mut self, other: &BucketHistogram) {
+        self.count += other.count;
+        self.zero += other.zero;
+        self.sum += other.sum;
+        for (&i, &c) in &other.counts {
+            *self.counts.entry(i).or_insert(0) += c;
+        }
+    }
+
+    /// Snapshot as JSON (count / mean / p50 / p95 / p99 / buckets).
+    pub fn to_json(&self) -> Json {
+        let num = |v: f64| Json::Num((v * 1000.0).round() / 1000.0);
+        let mut o = BTreeMap::new();
+        o.insert("count".into(), Json::Num(self.count as f64));
+        o.insert("mean".into(), num(self.mean()));
+        o.insert("p50".into(), num(self.percentile(50.0)));
+        o.insert("p95".into(), num(self.percentile(95.0)));
+        o.insert("p99".into(), num(self.percentile(99.0)));
+        o.insert("buckets".into(), Json::Num(self.buckets() as f64));
+        Json::Obj(o)
+    }
+}
+
+#[derive(Debug, Default)]
+struct Reg {
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, f64>,
+    hists: BTreeMap<&'static str, BucketHistogram>,
+    tokens: ThroughputMeter,
+}
+
+/// Cloneable registry handle.  `off()` (the `Default`) is a no-op on
+/// every path; `new()` shares one mutex-guarded map set between clones.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry(Option<Arc<Mutex<Reg>>>);
+
+impl MetricsRegistry {
+    /// The disabled registry — every operation is a no-op.
+    pub fn off() -> Self {
+        MetricsRegistry(None)
+    }
+
+    /// A live registry.
+    pub fn new() -> Self {
+        MetricsRegistry(Some(Arc::new(Mutex::new(Reg::default()))))
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.0.is_some()
+    }
+
+    fn with(&self, f: impl FnOnce(&mut Reg)) {
+        if let Some(m) = &self.0 {
+            if let Ok(mut reg) = m.lock() {
+                f(&mut reg);
+            }
+        }
+    }
+
+    /// Add `n` to a monotonic counter.
+    pub fn inc(&self, name: &'static str, n: u64) {
+        self.with(|r| *r.counters.entry(name).or_insert(0) += n);
+    }
+
+    /// Set a gauge to its latest value.
+    pub fn gauge(&self, name: &'static str, v: f64) {
+        self.with(|r| {
+            r.gauges.insert(name, v);
+        });
+    }
+
+    /// Record a sample into a named [`BucketHistogram`].
+    pub fn observe(&self, name: &'static str, v: f64) {
+        self.with(|r| r.hists.entry(name).or_default().record(v));
+    }
+
+    /// Count generated tokens (feeds both the `tokens_total` counter and
+    /// the live tokens/s meter, whose window starts at the first token).
+    pub fn add_tokens(&self, n: u64) {
+        self.with(|r| {
+            *r.counters.entry("tokens_total").or_insert(0) += n;
+            r.tokens.add(n);
+        });
+    }
+
+    /// Snapshot everything as one JSON object (the `{"cmd":"metrics"}`
+    /// server reply).
+    pub fn snapshot(&self) -> Json {
+        let mut root = BTreeMap::new();
+        match &self.0 {
+            None => {
+                root.insert("enabled".into(), Json::Bool(false));
+            }
+            Some(m) => {
+                let reg = m.lock().expect("metrics registry poisoned");
+                root.insert("enabled".into(), Json::Bool(true));
+                root.insert(
+                    "tokens_per_s".into(),
+                    Json::Num((reg.tokens.per_second() * 1000.0).round() / 1000.0),
+                );
+                root.insert(
+                    "counters".into(),
+                    Json::Obj(
+                        reg.counters
+                            .iter()
+                            .map(|(k, v)| (k.to_string(), Json::Num(*v as f64)))
+                            .collect(),
+                    ),
+                );
+                root.insert(
+                    "gauges".into(),
+                    Json::Obj(
+                        reg.gauges
+                            .iter()
+                            .map(|(k, v)| (k.to_string(), Json::Num(*v)))
+                            .collect(),
+                    ),
+                );
+                root.insert(
+                    "histograms".into(),
+                    Json::Obj(
+                        reg.hists
+                            .iter()
+                            .map(|(k, h)| (k.to_string(), h.to_json()))
+                            .collect(),
+                    ),
+                );
+            }
+        }
+        Json::Obj(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Histogram;
+    use crate::util::Rng;
+
+    #[test]
+    fn bucket_histogram_empty_safe() {
+        let h = BucketHistogram::new();
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn bucket_histogram_zero_and_negative_values() {
+        let mut h = BucketHistogram::new();
+        h.record(0.0);
+        h.record(-3.0);
+        h.record(10.0);
+        assert_eq!(h.len(), 3);
+        assert_eq!(h.percentile(10.0), 0.0);
+        assert!(h.percentile(99.0) > 9.0);
+    }
+
+    /// Property test (satellite): against the exact sample-vector
+    /// histogram, bucket percentiles stay within the `√γ` relative
+    /// bucket-error bound across seeds, sizes and dynamic ranges.
+    #[test]
+    fn bucket_percentiles_match_exact_within_bucket_error() {
+        // √1.1 − 1 plus float slack
+        let tol = BUCKET_GAMMA.sqrt() - 1.0 + 1e-9;
+        for seed in 0..20u64 {
+            let mut rng = Rng::new(seed + 1);
+            let n = 50 + (rng.next_below(2000) as usize);
+            let mut exact = Histogram::new();
+            let mut bucketed = BucketHistogram::new();
+            for _ in 0..n {
+                // span several orders of magnitude: 10^[−2, 4)
+                let v = 10f64.powf(rng.uniform(-2.0, 4.0));
+                exact.record(v);
+                bucketed.record(v);
+            }
+            for p in [1.0, 10.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+                let e = exact.percentile(p);
+                let b = bucketed.percentile(p);
+                let rel = (b - e).abs() / e.abs().max(1e-12);
+                assert!(
+                    rel <= tol,
+                    "seed {seed} n {n} p{p}: exact {e} bucketed {b} rel {rel}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_histogram_merge_equals_combined() {
+        let mut rng = Rng::new(7);
+        let mut a = BucketHistogram::new();
+        let mut b = BucketHistogram::new();
+        let mut both = BucketHistogram::new();
+        for i in 0..500 {
+            let v = rng.uniform(0.1, 500.0);
+            if i % 2 == 0 { a.record(v) } else { b.record(v) }
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.len(), both.len());
+        for p in [5.0, 50.0, 95.0, 99.0] {
+            assert_eq!(a.percentile(p), both.percentile(p), "p{p}");
+        }
+        assert!((a.mean() - both.mean()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bucket_memory_is_bounded() {
+        let mut h = BucketHistogram::new();
+        let mut rng = Rng::new(3);
+        for _ in 0..100_000 {
+            h.record(10f64.powf(rng.uniform(-3.0, 5.0))); // 8 decades
+        }
+        // 8 decades at γ=1.1 is ~194 buckets; leave slack
+        assert!(h.buckets() < 250, "buckets = {}", h.buckets());
+        assert_eq!(h.len(), 100_000);
+    }
+
+    #[test]
+    fn registry_off_is_noop_and_snapshot_says_so() {
+        let r = MetricsRegistry::off();
+        r.inc("a", 1);
+        r.observe("h", 5.0);
+        r.add_tokens(10);
+        let snap = r.snapshot();
+        assert_eq!(snap.get("enabled").and_then(|j| j.as_bool()), Some(false));
+        assert!(snap.get("counters").is_none());
+    }
+
+    #[test]
+    fn registry_snapshot_carries_counters_gauges_hists() {
+        let r = MetricsRegistry::new();
+        let clone = r.clone(); // clones share the store
+        clone.inc("replans_total", 2);
+        r.gauge("queue_depth", 7.0);
+        for v in [1.0, 2.0, 100.0] {
+            r.observe("ttft_ms", v);
+        }
+        r.add_tokens(12);
+        let snap = r.snapshot();
+        assert_eq!(snap.get("enabled").and_then(|j| j.as_bool()), Some(true));
+        let counters = snap.get("counters").unwrap();
+        assert_eq!(counters.get("replans_total").and_then(|j| j.as_f64()), Some(2.0));
+        assert_eq!(counters.get("tokens_total").and_then(|j| j.as_f64()), Some(12.0));
+        assert_eq!(
+            snap.get("gauges").unwrap().get("queue_depth").and_then(|j| j.as_f64()),
+            Some(7.0)
+        );
+        let h = snap.get("histograms").unwrap().get("ttft_ms").unwrap();
+        assert_eq!(h.get("count").and_then(|j| j.as_f64()), Some(3.0));
+    }
+}

@@ -1,0 +1,38 @@
+//! Observability: end-to-end tracing, live metrics, leveled logging and
+//! the failover flight recorder.
+//!
+//! EdgeShard's argument is about *where time goes* — per-device compute
+//! vs inter-device transfer under time-varying links.  This subsystem
+//! makes that visible on a timeline instead of only in post-hoc
+//! aggregates:
+//!
+//! * [`trace`] — a lock-cheap [`trace::Tracer`] (mpsc into a collector
+//!   thread) recording request/group lifecycle spans, per-stage compute
+//!   and per-hop transfer spans (fanning out the same
+//!   [`crate::metrics::ComputeObs`] / [`crate::netsim::TransferObs`]
+//!   streams the adaptive monitor consumes), decode-step spans, counters,
+//!   and control-plane instants (replans, migrations, checkpoints,
+//!   liveness verdicts, failover rounds).  Exports Chrome trace-event
+//!   JSON (`--trace out.json`, openable in Perfetto) and keeps a bounded
+//!   flight-recorder ring that the failover path dumps automatically.
+//! * [`metrics`] — [`metrics::MetricsRegistry`]: counters, gauges and
+//!   bounded-memory log-bucket [`metrics::BucketHistogram`]s behind a
+//!   cloneable handle; snapshot served by the TCP server's
+//!   `{"cmd":"metrics"}` command.
+//! * [`log`] — a tiny leveled logger (`EDGESHARD_LOG` / `--log`), off by
+//!   default, so adaptive-runtime diagnostics are opt-in and test output
+//!   stays quiet.
+//!
+//! Everything here has a no-op fast path: a disabled [`trace::Tracer`]
+//! or [`metrics::MetricsRegistry`] costs one relaxed atomic increment
+//! (asserted by the CI overhead gate via [`trace::events_suppressed`])
+//! or a single branch per call.
+//!
+//! See `docs/OBSERVABILITY.md` for the event taxonomy and workflows.
+
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{BucketHistogram, MetricsRegistry};
+pub use trace::{LifeKind, ReqPhase, Tracer};

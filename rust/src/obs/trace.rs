@@ -1,0 +1,698 @@
+//! Lock-cheap tracing: spans and events from the serving stack, exported
+//! as Chrome trace-event JSON (openable in Perfetto) — plus a bounded
+//! flight-recorder ring dumped on failure.
+//!
+//! A [`Tracer`] is a cheap cloneable handle.  The disabled tracer
+//! ([`Tracer::off`], the `Default`) makes every emission a single relaxed
+//! atomic increment — **no allocation, no lock, no channel** — which is
+//! what the CI overhead gate asserts via [`events_suppressed`] /
+//! [`events_recorded`].  An enabled tracer stamps a monotonic timestamp
+//! at the emit site and sends the event over an mpsc channel to a
+//! collector thread; hot paths never contend on a lock.
+//!
+//! Event sources:
+//! * **compute spans** — the per-stage [`ComputeObs`] stream stage actors
+//!   already emit for the adaptive monitor (fan-out, not stolen);
+//! * **transfer spans** — the per-hop [`TransferObs`] stream from the
+//!   shaped links;
+//! * **lifecycle spans** — request (continuous/open-loop serving) and
+//!   group (fixed/sequential serving) phases emitted by the drive loop:
+//!   queue → prefill → decode;
+//! * **decode-step spans** and **counters** from the drive loop;
+//! * **instant events** from the adaptive runtime: replans, migrations,
+//!   checkpoints, liveness verdicts, failover rounds.
+//!
+//! Span durations are **simulated** milliseconds placed on the real-time
+//! axis at the moment the observation arrived (span end = arrival), so a
+//! trace shows both where sim-time went and when the runtime learned it.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::ComputeObs;
+use crate::netsim::TransferObs;
+use crate::util::Json;
+
+/// Events recorded by enabled tracers (allocation happened).
+static RECORDED: AtomicU64 = AtomicU64::new(0);
+/// Events suppressed by disabled tracers (the no-op fast path: one
+/// relaxed increment, nothing else).
+static SUPPRESSED: AtomicU64 = AtomicU64::new(0);
+
+/// Total events recorded by enabled tracers since process start.
+pub fn events_recorded() -> u64 {
+    RECORDED.load(Ordering::Relaxed)
+}
+
+/// Total events suppressed by disabled tracers since process start.
+pub fn events_suppressed() -> u64 {
+    SUPPRESSED.load(Ordering::Relaxed)
+}
+
+/// Flight-recorder capacity (most recent events kept).
+pub const FLIGHT_CAPACITY: usize = 1024;
+
+/// Lifecycle span owner: a client request (continuous serving) or a
+/// compiled group (fixed / sequential serving).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LifeKind {
+    Request,
+    Group,
+}
+
+impl LifeKind {
+    fn cat(self) -> &'static str {
+        match self {
+            LifeKind::Request => "request",
+            LifeKind::Group => "group",
+        }
+    }
+}
+
+/// Lifecycle phase of a request/group span.  `Whole` is the outermost
+/// span (arrival → completion); the rest nest inside it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReqPhase {
+    Whole,
+    Queue,
+    Prefill,
+    Decode,
+}
+
+impl ReqPhase {
+    fn name(self) -> &'static str {
+        match self {
+            ReqPhase::Whole => "lifetime",
+            ReqPhase::Queue => "queue",
+            ReqPhase::Prefill => "prefill",
+            ReqPhase::Decode => "decode",
+        }
+    }
+}
+
+/// One traced event (also the flight-recorder element).
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// Per-stage compute span from [`ComputeObs`] (sim-ms duration).
+    Compute {
+        device: usize,
+        stage: usize,
+        decode: bool,
+        ms: f64,
+        end_us: u64,
+    },
+    /// Per-hop transfer span from [`TransferObs`] (sim-ms duration).
+    Transfer {
+        from: usize,
+        to: usize,
+        bytes: u64,
+        sim_ms: f64,
+        end_us: u64,
+    },
+    /// One decode iteration of a pipeline run/group in the drive loop.
+    Step {
+        run: usize,
+        rows: usize,
+        dur_ms: f64,
+        end_us: u64,
+    },
+    /// Request/group lifecycle edge (async span begin/end).
+    Life {
+        kind: LifeKind,
+        id: u64,
+        phase: ReqPhase,
+        begin: bool,
+        at_us: u64,
+    },
+    /// Control-plane instant: replan, migration, checkpoint, liveness
+    /// verdict, failover round.
+    Instant {
+        name: &'static str,
+        detail: String,
+        at_us: u64,
+    },
+    /// Named counter sample (queue depth, KV bytes, ...).
+    Counter {
+        name: &'static str,
+        value: f64,
+        at_us: u64,
+    },
+}
+
+impl Event {
+    fn ts_us(&self) -> u64 {
+        match self {
+            Event::Compute { ms, end_us, .. } | Event::Transfer { sim_ms: ms, end_us, .. } => {
+                end_us.saturating_sub((ms.max(0.0) * 1e3) as u64)
+            }
+            Event::Step { dur_ms, end_us, .. } => {
+                end_us.saturating_sub((dur_ms.max(0.0) * 1e3) as u64)
+            }
+            Event::Life { at_us, .. } | Event::Instant { at_us, .. } | Event::Counter { at_us, .. } => *at_us,
+        }
+    }
+}
+
+enum Msg {
+    Event(Event),
+    Flush(Sender<()>),
+}
+
+struct Shared {
+    /// The full event log (kept only when the tracer exports).
+    events: Mutex<Vec<Event>>,
+    /// Bounded ring of the most recent events (the flight recorder).
+    flight: Mutex<VecDeque<Event>>,
+}
+
+struct Inner {
+    t0: Instant,
+    tx: Sender<Msg>,
+    shared: Arc<Shared>,
+}
+
+/// Cheap cloneable tracing handle; see the module docs.
+#[derive(Clone, Default)]
+pub struct Tracer(Option<Arc<Inner>>);
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(if self.0.is_some() { "Tracer(on)" } else { "Tracer(off)" })
+    }
+}
+
+impl Tracer {
+    /// The disabled tracer: every emission is one relaxed atomic add.
+    pub fn off() -> Tracer {
+        Tracer(None)
+    }
+
+    /// Full tracer: keeps every event for Chrome-trace export, plus the
+    /// flight ring.
+    pub fn on() -> Tracer {
+        Tracer::start(true)
+    }
+
+    /// Flight-recorder-only tracer: bounded memory (the ring), no full
+    /// export — what `repro churn` runs by default so crashes still
+    /// leave a post-mortem artifact.
+    pub fn flight_only() -> Tracer {
+        Tracer::start(false)
+    }
+
+    fn start(keep_full: bool) -> Tracer {
+        let (tx, rx) = channel::<Msg>();
+        let shared = Arc::new(Shared {
+            events: Mutex::new(Vec::new()),
+            flight: Mutex::new(VecDeque::with_capacity(FLIGHT_CAPACITY)),
+        });
+        let worker = Arc::clone(&shared);
+        std::thread::spawn(move || {
+            for msg in rx {
+                match msg {
+                    Msg::Event(e) => {
+                        {
+                            let mut ring = worker.flight.lock().expect("flight ring poisoned");
+                            if ring.len() == FLIGHT_CAPACITY {
+                                ring.pop_front();
+                            }
+                            ring.push_back(e.clone());
+                        }
+                        if keep_full {
+                            worker.events.lock().expect("trace log poisoned").push(e);
+                        }
+                    }
+                    Msg::Flush(ack) => {
+                        let _ = ack.send(());
+                    }
+                }
+            }
+        });
+        Tracer(Some(Arc::new(Inner {
+            t0: Instant::now(),
+            tx,
+            shared,
+        })))
+    }
+
+    pub fn is_on(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Microseconds since the tracer started (0 when disabled).
+    pub fn now_us(&self) -> u64 {
+        self.0
+            .as_ref()
+            .map(|i| i.t0.elapsed().as_micros() as u64)
+            .unwrap_or(0)
+    }
+
+    #[inline]
+    fn emit(&self, build: impl FnOnce(u64) -> Event) {
+        match &self.0 {
+            None => {
+                SUPPRESSED.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(inner) => {
+                RECORDED.fetch_add(1, Ordering::Relaxed);
+                let at = inner.t0.elapsed().as_micros() as u64;
+                let _ = inner.tx.send(Msg::Event(build(at)));
+            }
+        }
+    }
+
+    /// Begin a lifecycle phase span for a request/group.
+    pub fn begin(&self, kind: LifeKind, id: u64, phase: ReqPhase) {
+        self.emit(|at_us| Event::Life { kind, id, phase, begin: true, at_us });
+    }
+
+    /// End a lifecycle phase span for a request/group.
+    pub fn end(&self, kind: LifeKind, id: u64, phase: ReqPhase) {
+        self.emit(|at_us| Event::Life { kind, id, phase, begin: false, at_us });
+    }
+
+    /// Record one decode iteration of run/group `run` covering `rows`
+    /// live rows, `dur_ms` after the previous one.
+    pub fn step(&self, run: usize, rows: usize, dur_ms: f64) {
+        self.emit(|end_us| Event::Step { run, rows, dur_ms, end_us });
+    }
+
+    /// Control-plane instant; the detail closure runs only when enabled.
+    pub fn instant(&self, name: &'static str, detail: impl FnOnce() -> String) {
+        self.emit(|at_us| Event::Instant { name, detail: detail(), at_us });
+    }
+
+    /// Sample a named counter track.
+    pub fn counter(&self, name: &'static str, value: f64) {
+        self.emit(|at_us| Event::Counter { name, value, at_us });
+    }
+
+    /// A sender to fan [`ComputeObs`] into this tracer (None when off).
+    /// A forwarder thread stamps arrival time per observation.
+    pub fn compute_sink(&self) -> Option<Sender<ComputeObs>> {
+        self.0.as_ref()?;
+        let tracer = self.clone();
+        let (tx, rx) = channel::<ComputeObs>();
+        std::thread::spawn(move || {
+            for o in rx {
+                tracer.emit(|end_us| Event::Compute {
+                    device: o.device,
+                    stage: o.stage,
+                    decode: o.decode,
+                    ms: o.ms,
+                    end_us,
+                });
+            }
+        });
+        Some(tx)
+    }
+
+    /// A sender to fan [`TransferObs`] into this tracer (None when off).
+    pub fn transfer_sink(&self) -> Option<Sender<TransferObs>> {
+        self.0.as_ref()?;
+        let tracer = self.clone();
+        let (tx, rx) = channel::<TransferObs>();
+        std::thread::spawn(move || {
+            for o in rx {
+                tracer.emit(|end_us| Event::Transfer {
+                    from: o.from,
+                    to: o.to,
+                    bytes: o.bytes,
+                    sim_ms: o.sim_ms,
+                    end_us,
+                });
+            }
+        });
+        Some(tx)
+    }
+
+    /// Wait until every event sent so far has reached the collector.
+    pub fn flush(&self) {
+        if let Some(inner) = &self.0 {
+            let (ack_tx, ack_rx) = channel();
+            if inner.tx.send(Msg::Flush(ack_tx)).is_ok() {
+                let _ = ack_rx.recv();
+            }
+        }
+    }
+
+    /// The full trace as a Chrome trace-event JSON array (None when the
+    /// tracer is off).  Events are sorted by timestamp.
+    pub fn chrome_json(&self) -> Option<Json> {
+        let inner = self.0.as_ref()?;
+        self.flush();
+        let events = inner.shared.events.lock().expect("trace log poisoned");
+        Some(chrome_array(&events))
+    }
+
+    /// Write the Chrome trace to `path`; returns false when the tracer
+    /// is off (nothing written).
+    pub fn export_chrome(&self, path: &std::path::Path) -> Result<bool> {
+        match self.chrome_json() {
+            None => Ok(false),
+            Some(j) => {
+                std::fs::write(path, j.to_string())
+                    .with_context(|| format!("writing trace {path:?}"))?;
+                Ok(true)
+            }
+        }
+    }
+
+    /// Snapshot the flight ring as a post-mortem JSON object (None when
+    /// the tracer is off).
+    pub fn flight_json(&self, reason: &str) -> Option<Json> {
+        let inner = self.0.as_ref()?;
+        self.flush();
+        let ring = inner.shared.flight.lock().expect("flight ring poisoned");
+        let mut root = BTreeMap::new();
+        root.insert("reason".into(), Json::Str(reason.to_string()));
+        root.insert("captured_events".into(), Json::Num(ring.len() as f64));
+        root.insert("dumped_at_us".into(), Json::Num(self.now_us() as f64));
+        root.insert(
+            "events".into(),
+            Json::Arr(ring.iter().map(flight_obj).collect()),
+        );
+        Some(Json::Obj(root))
+    }
+
+    /// Dump the flight ring to `path`; returns false when the tracer is
+    /// off (nothing written).
+    pub fn dump_flight(&self, path: &std::path::Path, reason: &str) -> Result<bool> {
+        match self.flight_json(reason) {
+            None => Ok(false),
+            Some(j) => {
+                std::fs::write(path, j.to_string())
+                    .with_context(|| format!("writing flight record {path:?}"))?;
+                Ok(true)
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Chrome trace-event rendering
+// ---------------------------------------------------------------------
+
+const PID_PIPELINE: f64 = 1.0;
+const PID_NETWORK: f64 = 2.0;
+const PID_DRIVER: f64 = 3.0;
+const PID_REQUESTS: f64 = 4.0;
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+struct TrackAlloc {
+    /// (pid, track name) → tid, assigned in first-seen order per pid.
+    tids: BTreeMap<(u64, String), u64>,
+}
+
+impl TrackAlloc {
+    fn new() -> Self {
+        TrackAlloc { tids: BTreeMap::new() }
+    }
+
+    fn tid(&mut self, pid: f64, name: String) -> f64 {
+        let next = self
+            .tids
+            .keys()
+            .filter(|(p, _)| *p == pid as u64)
+            .count() as u64;
+        *self.tids.entry((pid as u64, name)).or_insert(next) as f64
+    }
+
+    /// `thread_name` / `process_name` metadata events for Perfetto.
+    fn metadata(&self) -> Vec<Json> {
+        let mut out = vec![];
+        for (pid, pname) in [
+            (PID_PIPELINE, "pipeline stages"),
+            (PID_NETWORK, "network links"),
+            (PID_DRIVER, "drive loop"),
+            (PID_REQUESTS, "requests"),
+        ] {
+            out.push(obj(vec![
+                ("ph", Json::Str("M".into())),
+                ("name", Json::Str("process_name".into())),
+                ("pid", Json::Num(pid)),
+                ("tid", Json::Num(0.0)),
+                ("ts", Json::Num(0.0)),
+                ("args", obj(vec![("name", Json::Str(pname.into()))])),
+            ]));
+        }
+        for ((pid, name), tid) in &self.tids {
+            out.push(obj(vec![
+                ("ph", Json::Str("M".into())),
+                ("name", Json::Str("thread_name".into())),
+                ("pid", Json::Num(*pid as f64)),
+                ("tid", Json::Num(*tid as f64)),
+                ("ts", Json::Num(0.0)),
+                ("args", obj(vec![("name", Json::Str(name.clone()))])),
+            ]));
+        }
+        out
+    }
+}
+
+fn chrome_event(e: &Event, tracks: &mut TrackAlloc) -> Json {
+    let ts = Json::Num(e.ts_us() as f64);
+    match e {
+        Event::Compute { device, stage, decode, ms, .. } => {
+            let tid = tracks.tid(PID_PIPELINE, format!("stage{stage} d{device}"));
+            obj(vec![
+                ("ph", Json::Str("X".into())),
+                ("cat", Json::Str("compute".into())),
+                ("name", Json::Str(if *decode { "decode" } else { "prefill" }.into())),
+                ("pid", Json::Num(PID_PIPELINE)),
+                ("tid", Json::Num(tid)),
+                ("ts", ts),
+                ("dur", Json::Num((ms.max(0.0) * 1e3).round())),
+                ("args", obj(vec![
+                    ("device", Json::Num(*device as f64)),
+                    ("stage", Json::Num(*stage as f64)),
+                    ("sim_ms", Json::Num(*ms)),
+                ])),
+            ])
+        }
+        Event::Transfer { from, to, bytes, sim_ms, .. } => {
+            let tid = tracks.tid(PID_NETWORK, format!("link d{from}->d{to}"));
+            obj(vec![
+                ("ph", Json::Str("X".into())),
+                ("cat", Json::Str("transfer".into())),
+                ("name", Json::Str("transfer".into())),
+                ("pid", Json::Num(PID_NETWORK)),
+                ("tid", Json::Num(tid)),
+                ("ts", ts),
+                ("dur", Json::Num((sim_ms.max(0.0) * 1e3).round())),
+                ("args", obj(vec![
+                    ("bytes", Json::Num(*bytes as f64)),
+                    ("sim_ms", Json::Num(*sim_ms)),
+                ])),
+            ])
+        }
+        Event::Step { run, rows, dur_ms, .. } => {
+            let tid = tracks.tid(PID_DRIVER, format!("run{run}"));
+            obj(vec![
+                ("ph", Json::Str("X".into())),
+                ("cat", Json::Str("step".into())),
+                ("name", Json::Str("decode step".into())),
+                ("pid", Json::Num(PID_DRIVER)),
+                ("tid", Json::Num(tid)),
+                ("ts", ts),
+                ("dur", Json::Num((dur_ms.max(0.0) * 1e3).round())),
+                ("args", obj(vec![("rows", Json::Num(*rows as f64))])),
+            ])
+        }
+        Event::Life { kind, id, phase, begin, .. } => {
+            let name = match phase {
+                ReqPhase::Whole => format!(
+                    "{} {id}",
+                    if *kind == LifeKind::Request { "req" } else { "group" }
+                ),
+                p => p.name().to_string(),
+            };
+            obj(vec![
+                ("ph", Json::Str(if *begin { "b" } else { "e" }.into())),
+                ("cat", Json::Str(kind.cat().into())),
+                ("id", Json::Str(format!("{id}"))),
+                ("name", Json::Str(name)),
+                ("pid", Json::Num(PID_REQUESTS)),
+                ("tid", Json::Num(0.0)),
+                ("ts", ts),
+            ])
+        }
+        Event::Instant { name, detail, .. } => obj(vec![
+            ("ph", Json::Str("i".into())),
+            ("cat", Json::Str("control".into())),
+            ("s", Json::Str("g".into())),
+            ("name", Json::Str((*name).into())),
+            ("pid", Json::Num(PID_DRIVER)),
+            ("tid", Json::Num(tracks.tid(PID_DRIVER, "control".into()))),
+            ("ts", ts),
+            ("args", obj(vec![("detail", Json::Str(detail.clone()))])),
+        ]),
+        Event::Counter { name, value, .. } => obj(vec![
+            ("ph", Json::Str("C".into())),
+            ("name", Json::Str((*name).into())),
+            ("pid", Json::Num(PID_DRIVER)),
+            ("tid", Json::Num(0.0)),
+            ("ts", ts),
+            ("args", obj(vec![("value", Json::Num(*value))])),
+        ]),
+    }
+}
+
+/// Render events as a ts-sorted Chrome trace array with track metadata.
+pub fn chrome_array(events: &[Event]) -> Json {
+    let mut tracks = TrackAlloc::new();
+    let mut sorted: Vec<&Event> = events.iter().collect();
+    sorted.sort_by_key(|e| e.ts_us());
+    let body: Vec<Json> = sorted.iter().map(|e| chrome_event(e, &mut tracks)).collect();
+    let mut out = tracks.metadata();
+    out.extend(body);
+    Json::Arr(out)
+}
+
+/// Flat flight-recorder rendering of one event (kind + fields).
+fn flight_obj(e: &Event) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![("ts_us", Json::Num(e.ts_us() as f64))];
+    match e {
+        Event::Compute { device, stage, decode, ms, .. } => {
+            pairs.push(("kind", Json::Str("compute".into())));
+            pairs.push(("device", Json::Num(*device as f64)));
+            pairs.push(("stage", Json::Num(*stage as f64)));
+            pairs.push(("decode", Json::Bool(*decode)));
+            pairs.push(("sim_ms", Json::Num(*ms)));
+        }
+        Event::Transfer { from, to, bytes, sim_ms, .. } => {
+            pairs.push(("kind", Json::Str("transfer".into())));
+            pairs.push(("from", Json::Num(*from as f64)));
+            pairs.push(("to", Json::Num(*to as f64)));
+            pairs.push(("bytes", Json::Num(*bytes as f64)));
+            pairs.push(("sim_ms", Json::Num(*sim_ms)));
+        }
+        Event::Step { run, rows, dur_ms, .. } => {
+            pairs.push(("kind", Json::Str("step".into())));
+            pairs.push(("run", Json::Num(*run as f64)));
+            pairs.push(("rows", Json::Num(*rows as f64)));
+            pairs.push(("dur_ms", Json::Num(*dur_ms)));
+        }
+        Event::Life { kind, id, phase, begin, .. } => {
+            pairs.push(("kind", Json::Str("life".into())));
+            pairs.push(("cat", Json::Str(kind.cat().into())));
+            pairs.push(("id", Json::Num(*id as f64)));
+            pairs.push(("phase", Json::Str(phase.name().into())));
+            pairs.push(("begin", Json::Bool(*begin)));
+        }
+        Event::Instant { name, detail, .. } => {
+            pairs.push(("kind", Json::Str("instant".into())));
+            pairs.push(("name", Json::Str((*name).into())));
+            pairs.push(("detail", Json::Str(detail.clone())));
+        }
+        Event::Counter { name, value, .. } => {
+            pairs.push(("kind", Json::Str("counter".into())));
+            pairs.push(("name", Json::Str((*name).into())));
+            pairs.push(("value", Json::Num(*value)));
+        }
+    }
+    obj(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_tracer_only_counts() {
+        // the counters are global, so parallel tests may also bump them:
+        // assert only the lower bound this tracer contributes
+        let before_sup = events_suppressed();
+        let t = Tracer::off();
+        t.begin(LifeKind::Request, 1, ReqPhase::Whole);
+        t.step(0, 2, 1.0);
+        t.instant("x", || unreachable!("detail closure must not run when off"));
+        t.counter("c", 1.0);
+        assert!(events_suppressed() >= before_sup + 4);
+        assert!(t.compute_sink().is_none());
+        assert!(t.transfer_sink().is_none());
+        assert!(t.chrome_json().is_none());
+        assert!(t.flight_json("r").is_none());
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let t = Tracer::on();
+        t.begin(LifeKind::Request, 7, ReqPhase::Whole);
+        t.begin(LifeKind::Request, 7, ReqPhase::Queue);
+        t.end(LifeKind::Request, 7, ReqPhase::Queue);
+        t.step(0, 1, 0.5);
+        t.instant("replan_decided", || "plan A -> plan B".into());
+        t.counter("queue_depth", 3.0);
+        t.end(LifeKind::Request, 7, ReqPhase::Whole);
+        if let Some(tx) = t.compute_sink() {
+            tx.send(ComputeObs { device: 0, stage: 0, decode: true, ms: 1.0 }).unwrap();
+            drop(tx);
+        }
+        if let Some(tx) = t.transfer_sink() {
+            tx.send(TransferObs { from: 0, to: 1, bytes: 64, sim_ms: 2.0 }).unwrap();
+            drop(tx);
+        }
+        // forwarder threads hop once; give them a beat before flushing
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let j = t.chrome_json().unwrap();
+        let arr = j.as_arr().unwrap();
+        // round-trips through the parser
+        let re = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(&re, &j);
+        let phases: Vec<&str> = arr
+            .iter()
+            .filter_map(|e| e.get("ph").and_then(|p| p.as_str()))
+            .collect();
+        for want in ["M", "X", "b", "e", "i", "C"] {
+            assert!(phases.contains(&want), "missing ph {want}");
+        }
+        // ts monotone non-negative, dur non-negative
+        let mut last = -1.0;
+        for e in arr.iter().filter(|e| e.get("ph").and_then(|p| p.as_str()) != Some("M")) {
+            let ts = e.get("ts").and_then(|t| t.as_f64()).unwrap();
+            assert!(ts >= 0.0 && ts >= last, "ts not monotone: {ts} after {last}");
+            last = ts;
+            if let Some(d) = e.get("dur").and_then(|d| d.as_f64()) {
+                assert!(d >= 0.0);
+            }
+        }
+        // request async span balanced
+        let b = phases.iter().filter(|p| **p == "b").count();
+        let e = phases.iter().filter(|p| **p == "e").count();
+        assert_eq!(b, e);
+    }
+
+    #[test]
+    fn flight_ring_is_bounded_and_keeps_recent() {
+        let t = Tracer::flight_only();
+        for i in 0..(FLIGHT_CAPACITY as u64 + 100) {
+            t.counter("i", i as f64);
+        }
+        let j = t.flight_json("test").unwrap();
+        let events = j.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), FLIGHT_CAPACITY);
+        let last = events.last().unwrap();
+        assert_eq!(
+            last.get("value").and_then(|v| v.as_f64()),
+            Some(FLIGHT_CAPACITY as f64 + 99.0)
+        );
+        // flight-only keeps no full log
+        let full = t.chrome_json().unwrap();
+        let n_non_meta = full
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) != Some("M"))
+            .count();
+        assert_eq!(n_non_meta, 0);
+    }
+}

@@ -114,15 +114,30 @@ pub fn open_loop_churn_json(r: &OpenLoopChurnReport) -> Json {
     Json::Obj(o)
 }
 
-pub fn run(seed: u64) -> anyhow::Result<()> {
+/// Run the churn experiments.  Every adaptive run carries at least a
+/// flight-only tracer, so each injected crash leaves a post-mortem
+/// `FLIGHT_churn_*_failover<K>.json` next to the reports; passing
+/// `trace_path` upgrades to full tracing and additionally exports the
+/// whole run as a Chrome/Perfetto trace there.
+pub fn run(seed: u64, trace_path: Option<&std::path::Path>) -> anyhow::Result<()> {
+    // one tracer across all three scenarios: the flight ring is bounded,
+    // and a single Chrome export then covers the full repro
+    let tracer = match trace_path {
+        Some(_) => crate::obs::Tracer::on(),
+        None => crate::obs::Tracer::flight_only(),
+    };
     let report = device_churn_scenario(&ChurnConfig {
         seed,
+        trace: tracer.clone(),
+        flight_prefix: Some("FLIGHT_churn_device".into()),
         ..ChurnConfig::default()
     })?;
     super::emit("device_churn", &churn_report_markdown(&report))?;
 
     let cont = continuous_churn_scenario(&ContinuousChurnConfig {
         seed,
+        trace: tracer.clone(),
+        flight_prefix: Some("FLIGHT_churn_continuous".into()),
         ..ContinuousChurnConfig::default()
     })?;
     super::emit("device_churn_continuous", &continuous_churn_markdown(&cont))?;
@@ -131,9 +146,17 @@ pub fn run(seed: u64) -> anyhow::Result<()> {
     // failover cost measured as client-observed TTFT inflation
     let ol = open_loop_churn_scenario(&OpenLoopChurnConfig {
         seed,
+        trace: tracer.clone(),
+        flight_prefix: Some("FLIGHT_churn_openloop".into()),
         ..OpenLoopChurnConfig::default()
     })?;
     super::emit("device_churn_openloop", &open_loop_churn_markdown(&ol))?;
+
+    if let Some(path) = trace_path {
+        if tracer.export_chrome(path)? {
+            println!("wrote trace {}", path.display());
+        }
+    }
 
     let mut json = continuous_churn_json(&cont);
     if let Json::Obj(root) = &mut json {

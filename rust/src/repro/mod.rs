@@ -52,13 +52,14 @@ pub fn run_all(seed: u64) -> anyhow::Result<()> {
     figs::fig9(seed)?;
     figs::fig10(seed)?;
     adaptive::run(seed)?;
-    churn::run(seed)?;
+    churn::run(seed, None)?;
     serving::run(
         &serving::ServingBenchConfig {
             seed,
             ..Default::default()
         },
         Path::new("BENCH_serving.json"),
+        None,
     )?;
     Ok(())
 }

@@ -160,6 +160,16 @@ fn token_rows(results: &[GenResult]) -> Vec<(u64, Vec<i32>)> {
 
 /// Run the serving bench; see the module docs.
 pub fn run_bench(cfg: &ServingBenchConfig) -> Result<ServingBenchReport> {
+    run_bench_traced(cfg, &crate::obs::Tracer::off())
+}
+
+/// [`run_bench`] with a tracer threaded through the engine: request
+/// lifecycle spans from the drive loops plus per-stage compute and
+/// per-hop transfer spans from the pipeline actors land in the trace.
+pub fn run_bench_traced(
+    cfg: &ServingBenchConfig,
+    tracer: &crate::obs::Tracer,
+) -> Result<ServingBenchReport> {
     let manifest = Manifest::synthetic(bench_config(), vec![1, 8]);
     let weights = WeightStore::synthetic(&manifest, cfg.seed);
     let (_svc, exec) = ExecService::start_sim(&manifest)?;
@@ -211,8 +221,15 @@ pub fn run_bench(cfg: &ServingBenchConfig) -> Result<ServingBenchReport> {
         .map(|r| r.id)
         .collect();
 
-    let mut engine =
-        Engine::build(&manifest, &weights, exec.clone(), &plan, &cluster, &engine_cfg)?;
+    let mut engine = Engine::build_traced(
+        &manifest,
+        &weights,
+        exec.clone(),
+        &plan,
+        &cluster,
+        &engine_cfg,
+        tracer,
+    )?;
     let mut modes: Vec<ModeSummary> = Vec::new();
 
     if cfg.sequential {
@@ -716,13 +733,28 @@ pub fn openloop_json(r: &OpenLoopBenchReport) -> Json {
 
 /// `edgeshard bench serving` entry: run the closed-loop mode comparison
 /// and the open-loop load-latency sweep, echo markdown, write both JSON
-/// artifacts (and the markdown under `results/`).
-pub fn run(cfg: &ServingBenchConfig, json_path: &std::path::Path) -> Result<()> {
-    let report = run_bench(cfg)?;
+/// artifacts (and the markdown under `results/`).  With `trace_path` the
+/// closed-loop comparison additionally runs under a live tracer and the
+/// whole run is exported as a Chrome/Perfetto trace there.
+pub fn run(
+    cfg: &ServingBenchConfig,
+    json_path: &std::path::Path,
+    trace_path: Option<&std::path::Path>,
+) -> Result<()> {
+    let tracer = match trace_path {
+        Some(_) => crate::obs::Tracer::on(),
+        None => crate::obs::Tracer::off(),
+    };
+    let report = run_bench_traced(cfg, &tracer)?;
     super::emit("serving", &report_markdown(&report))?;
     std::fs::write(json_path, report_json(&report).to_string())
         .with_context(|| format!("writing {json_path:?}"))?;
     println!("wrote {}", json_path.display());
+    if let Some(path) = trace_path {
+        if tracer.export_chrome(path)? {
+            println!("wrote trace {}", path.display());
+        }
+    }
 
     let ol_cfg = OpenLoopBenchConfig {
         seed: cfg.seed,

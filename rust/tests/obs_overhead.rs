@@ -1,0 +1,33 @@
+//! Disabled-tracing overhead gate: driving the full serving bench with
+//! the tracer off must not record a single event — the per-iteration hot
+//! path stays allocation-free (each suppressed emission is exactly one
+//! relaxed atomic add, no event construction, no channel send).
+//!
+//! This lives in its own test binary on purpose: the recorded/suppressed
+//! counters are process-global, and a live tracer in a concurrently
+//! running test would void the zero-recorded assertion.
+
+use edgeshard::obs::trace::{events_recorded, events_suppressed};
+use edgeshard::repro::serving::{run_bench, ServingBenchConfig};
+
+#[test]
+fn disabled_tracing_records_nothing() {
+    let recorded_before = events_recorded();
+    let suppressed_before = events_suppressed();
+    let report = run_bench(&ServingBenchConfig {
+        requests: 8,
+        sequential: false,
+        ..Default::default()
+    })
+    .expect("bench");
+    assert!(report.tokens_identical);
+    assert_eq!(
+        events_recorded(),
+        recorded_before,
+        "disabled tracer recorded events — the no-op fast path leaked"
+    );
+    assert!(
+        events_suppressed() > suppressed_before,
+        "the drive never hit a tracing point — the gate is vacuous"
+    );
+}

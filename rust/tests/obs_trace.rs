@@ -1,0 +1,139 @@
+//! Trace-export gates: the serving bench under a live tracer must
+//! produce a schema-valid Chrome/Perfetto trace (every span closed,
+//! timestamps sane, all three span families present), and the churn
+//! scenario must leave a flight-recorder post-mortem per injected crash
+//! whose events tell the detection → replan → restore story in order.
+
+use std::collections::HashMap;
+
+use edgeshard::adaptive::scenario::{device_churn_scenario, ChurnConfig};
+use edgeshard::obs::Tracer;
+use edgeshard::repro::serving::{run_bench_traced, ServingBenchConfig};
+use edgeshard::util::Json;
+
+fn ph<'a>(e: &'a Json) -> Option<&'a str> {
+    e.get("ph").and_then(|p| p.as_str())
+}
+
+#[test]
+fn serving_trace_is_schema_valid() {
+    let tracer = Tracer::on();
+    let cfg = ServingBenchConfig {
+        requests: 8,
+        sequential: false,
+        ..Default::default()
+    };
+    let report = run_bench_traced(&cfg, &tracer).expect("bench");
+    assert!(report.tokens_identical);
+    // the compute/transfer forwarder threads drain after the engine's
+    // actors drop their senders on shutdown; give them a beat
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    let j = tracer.chrome_json().expect("tracer is on");
+
+    // valid JSON: survives a round-trip through the parser
+    let re = Json::parse(&j.to_string()).expect("trace parses");
+    assert_eq!(re, j);
+
+    let arr = j.as_arr().expect("trace is an array");
+    assert!(!arr.is_empty());
+
+    // timestamps non-negative and monotone (excluding ts-0 metadata)
+    let mut last_ts = -1.0;
+    for e in arr {
+        let p = ph(e).expect("every event has ph");
+        let ts = e.get("ts").and_then(|t| t.as_f64()).expect("every event has ts");
+        assert!(ts >= 0.0, "negative ts in {e:?}");
+        if p != "M" {
+            assert!(ts >= last_ts, "ts went backwards at {e:?}");
+            last_ts = ts;
+        }
+        if p == "X" {
+            let dur = e.get("dur").and_then(|d| d.as_f64()).expect("X has dur");
+            assert!(dur >= 0.0, "negative dur in {e:?}");
+        }
+    }
+
+    // all three span families made it into the trace: per-stage compute,
+    // per-hop transfer, per-iteration decode steps
+    for want in ["compute", "transfer", "step"] {
+        assert!(
+            arr.iter().any(|e| {
+                ph(e) == Some("X") && e.get("cat").and_then(|c| c.as_str()) == Some(want)
+            }),
+            "no `{want}` spans in the trace"
+        );
+    }
+    // counter track samples (queue depth) from the continuous drive
+    assert!(arr.iter().any(|e| ph(e) == Some("C")));
+
+    // every request/group lifecycle span that opened also closed
+    let mut open: HashMap<(String, String), i64> = HashMap::new();
+    let mut begins = 0usize;
+    for e in arr {
+        let delta = match ph(e) {
+            Some("b") => 1,
+            Some("e") => -1,
+            _ => continue,
+        };
+        let cat = e.get("cat").and_then(|c| c.as_str()).expect("async has cat");
+        let id = e.get("id").and_then(|i| i.as_str()).expect("async has id");
+        *open.entry((cat.to_string(), id.to_string())).or_insert(0) += delta;
+        begins += delta.max(0) as usize;
+    }
+    assert!(begins > 0, "no lifecycle spans recorded");
+    let unbalanced: Vec<_> = open.iter().filter(|(_, &n)| n != 0).collect();
+    assert!(unbalanced.is_empty(), "unclosed spans: {unbalanced:?}");
+    // both drive loops contributed: fixed groups + continuous requests
+    for want in ["group", "request"] {
+        assert!(
+            open.keys().any(|(cat, _)| cat == want),
+            "no `{want}` lifecycle spans"
+        );
+    }
+}
+
+#[test]
+fn churn_crash_dumps_flight_record() {
+    let dir = std::env::temp_dir().join(format!("edgeshard_flight_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let prefix = dir.join("FLIGHT_test");
+    let report = device_churn_scenario(&ChurnConfig {
+        trace: Tracer::flight_only(),
+        flight_prefix: Some(prefix.clone()),
+        ..ChurnConfig::default()
+    })
+    .expect("churn scenario");
+    assert!(!report.checkpointed_failovers.is_empty());
+    assert!(!report.reprefilled_failovers.is_empty());
+
+    // one dump per failover per run, suffixed by recovery mode
+    for run in ["ck", "reprefill"] {
+        let path = dir.join(format!("FLIGHT_test_{run}_failover1.json"));
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("missing flight dump {}: {e}", path.display()));
+        let j = Json::parse(&text).expect("flight dump parses");
+        let reason = j.get("reason").and_then(|r| r.as_str()).expect("has reason");
+        assert!(reason.starts_with("device_loss"), "reason: {reason}");
+        let events = j.get("events").and_then(|e| e.as_arr()).expect("has events");
+        assert!(!events.is_empty());
+
+        // the post-mortem tells the story in causal order; take the
+        // *last* occurrence of each marker — the ring is bounded and
+        // shared across runs, so only the crash that triggered this dump
+        // is guaranteed to sit complete at the tail
+        let instants: Vec<&str> = events
+            .iter()
+            .filter(|e| e.get("kind").and_then(|k| k.as_str()) == Some("instant"))
+            .filter_map(|e| e.get("name").and_then(|n| n.as_str()))
+            .collect();
+        let pos = |name: &str| {
+            instants
+                .iter()
+                .rposition(|&n| n == name)
+                .unwrap_or_else(|| panic!("no `{name}` in flight record ({run}): {instants:?}"))
+        };
+        assert!(pos("device_dead") < pos("failover_replan"));
+        assert!(pos("failover_replan") < pos("failover_recovered"));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
