@@ -83,11 +83,7 @@ fn main() -> anyhow::Result<()> {
     let requests: Vec<GenRequest> = trace
         .generate(8)
         .into_iter()
-        .map(|r| GenRequest {
-            id: r.id,
-            prompt: r.prompt,
-            max_new_tokens: r.max_new_tokens,
-        })
+        .map(|r| GenRequest::new(r.id, r.prompt, r.max_new_tokens))
         .collect();
     let groups = batcher.pack(&requests);
     println!(

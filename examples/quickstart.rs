@@ -58,14 +58,14 @@ fn main() -> anyhow::Result<()> {
         },
     )?;
     let mut batcher = Batcher::new(manifest.config.prefill_len, manifest.batch_sizes.clone());
-    let req = GenRequest {
-        id: 1,
-        prompt: "Today is a good day to build systems."
+    let req = GenRequest::new(
+        1,
+        "Today is a good day to build systems."
             .bytes()
             .map(|b| b as i32)
             .collect(),
-        max_new_tokens: 16,
-    };
+        16,
+    );
     let groups = batcher.pack(&[req]);
     let (results, stats) = engine.generate_sequential(&groups)?;
     println!("generated: {:?}", Corpus::detokenize(&results[0].tokens));

@@ -90,11 +90,7 @@ fn main() -> anyhow::Result<()> {
         "play something quiet in the kitchen",
     ];
     for (i, prompt) in prompts.iter().enumerate() {
-        let req = GenRequest {
-            id: i as u64 + 1,
-            prompt: prompt.bytes().map(|b| b as i32).collect(),
-            max_new_tokens: 12,
-        };
+        let req = GenRequest::new(i as u64 + 1, prompt.bytes().map(|b| b as i32).collect(), 12);
         let groups = batcher.pack(&[req]);
         let (results, _) = engine.generate_sequential(&groups)?;
         let r = &results[0];

@@ -91,6 +91,11 @@ const MAX_MIGRATION_SLEEP_REAL_MS: f64 = 30_000.0;
 /// recovery before declaring the rebuilt pipeline broken too.
 const REPLAY_REPLY_TIMEOUT: Duration = Duration::from_secs(20);
 
+/// Hard cap on the real time one active liveness probe may sleep (a
+/// probe is a control frame charged one link round trip, not a data
+/// transfer — it must never stall the control loop for long).
+const MAX_PROBE_SLEEP_REAL_MS: f64 = 250.0;
+
 /// Detection rounds one stall may consume: the initial verdict plus one
 /// bounded re-detection round.  A wrong blame leaves the real corpse
 /// inside the failover plan, the recovery replay stalls against it, and
@@ -156,6 +161,10 @@ pub struct AdaptiveConfig {
     /// post-mortem artifact `repro churn` leaves per injected crash.
     /// Needs a tracer that is at least [`crate::obs::Tracer::flight_only`].
     pub flight_prefix: Option<std::path::PathBuf>,
+    /// How the checkpoint cadence evolves as the run observes failures
+    /// (see [`CheckpointPolicy`]); `Fixed` keeps
+    /// [`AdaptiveConfig::checkpoint_every`] for the whole run.
+    pub checkpoint_policy: CheckpointPolicy,
 }
 
 impl Default for AdaptiveConfig {
@@ -176,8 +185,88 @@ impl Default for AdaptiveConfig {
             trace: crate::obs::Tracer::off(),
             metrics: crate::obs::MetricsRegistry::off(),
             flight_prefix: None,
+            checkpoint_policy: CheckpointPolicy::Fixed,
         }
     }
+}
+
+/// How the periodic KV-checkpoint cadence adapts to observed failures.
+///
+/// Checkpointing trades steady-state overhead (every probe rides the
+/// links as a control frame) against rework at failover (every folded
+/// iteration since the last committed snapshot must be replayed).
+/// Young's first-order optimum balances the two: interval ≈
+/// `sqrt(2 · C · MTBF)` where `C` is the per-checkpoint cost and MTBF
+/// the mean time between failures, both here in *received-token* units —
+/// the clock every cadence in this engine already ticks on.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum CheckpointPolicy {
+    /// Keep [`AdaptiveConfig::checkpoint_every`] for the whole run.
+    #[default]
+    Fixed,
+    /// Re-derive the cadence from Young's criterion after every observed
+    /// failure, using the run's own failover history as the MTBF
+    /// estimate.  Until the first failure there is no estimate, so the
+    /// configured `checkpoint_every` stands as the fixed fallback.
+    Young {
+        /// Per-checkpoint cost in token-equivalents (how many tokens'
+        /// worth of pipeline work one export probe + commit displaces).
+        cost_tokens: f64,
+        /// Cadence clamp, tokens: never checkpoint more often than this.
+        min_every: usize,
+        /// Cadence clamp, tokens: never checkpoint more rarely than this.
+        max_every: usize,
+    },
+}
+
+impl CheckpointPolicy {
+    /// The cadence to run with given the configured fallback and the
+    /// token counts at which failures have been observed so far.  Pure —
+    /// the engine calls it after each recorded failover, tests call it
+    /// directly.  A `fallback` of 0 means checkpointing is disabled and
+    /// stays disabled regardless of policy.
+    pub fn effective_every(&self, fallback: usize, failure_iters: &[u64]) -> usize {
+        match self {
+            CheckpointPolicy::Fixed => fallback,
+            CheckpointPolicy::Young {
+                cost_tokens,
+                min_every,
+                max_every,
+            } => {
+                if fallback == 0 {
+                    return 0;
+                }
+                let Some(mtbf) = mean_tokens_between_failures(failure_iters) else {
+                    return fallback;
+                };
+                let lo = (*min_every).max(1);
+                let hi = (*max_every).max(lo);
+                (young_interval(*cost_tokens, mtbf).round() as usize).clamp(lo, hi)
+            }
+        }
+    }
+}
+
+/// Young's criterion: the checkpoint interval minimizing overhead +
+/// expected rework, ≈ `sqrt(2 · cost · MTBF)` (same units in, same out).
+pub fn young_interval(cost: f64, mtbf: f64) -> f64 {
+    (2.0 * cost.max(0.0) * mtbf.max(0.0)).sqrt()
+}
+
+/// Mean gap between consecutive failure points (the first gap runs from
+/// token 0); `None` until the first failure.  Clamped to ≥ 1 token so a
+/// pathological burst of failures cannot drive the cadence to zero.
+pub fn mean_tokens_between_failures(failure_iters: &[u64]) -> Option<f64> {
+    if failure_iters.is_empty() {
+        return None;
+    }
+    let mut prev = 0u64;
+    let mut sum = 0.0f64;
+    for &at in failure_iters {
+        sum += at.saturating_sub(prev) as f64;
+        prev = at;
+    }
+    Some((sum / failure_iters.len() as f64).max(1.0))
 }
 
 /// One completed migration.
@@ -449,6 +538,90 @@ impl AdaptiveHooks<'_, '_> {
         crate::obs::log::debug("adaptive", || format!("checkpoint {n} committed"));
     }
 
+    /// Re-derive the checkpoint cadence from
+    /// [`AdaptiveConfig::checkpoint_policy`] and the failover history so
+    /// far — under [`CheckpointPolicy::Young`] every recorded failure
+    /// refines the MTBF estimate and with it the interval.
+    fn retune_checkpoint_cadence(&mut self) {
+        let iters: Vec<u64> = self.failovers.iter().map(|f| f.at_iter).collect();
+        let every = self
+            .eng
+            .cfg
+            .checkpoint_policy
+            .effective_every(self.eng.cfg.checkpoint_every, &iters);
+        if every != self.checkpoint_every {
+            let (from, to) = (self.checkpoint_every, every);
+            self.eng
+                .cfg
+                .trace
+                .instant("checkpoint_cadence", || format!("retuned: every {from} -> {to} tokens"));
+            crate::obs::log::info("adaptive", || {
+                format!("checkpoint cadence retuned: every {from} -> {to} tokens")
+            });
+            self.checkpoint_every = every;
+        }
+    }
+
+    /// TTL expiry gated by an **active probe**: a verdict whose TTL has
+    /// lapsed does not silently re-admit the device — before the
+    /// replanner may commit hardware to it again, the engine pings it
+    /// with a probe frame (emulated as one round trip of the current
+    /// source↔device link latency; the ground-truth
+    /// [`DeviceLiveness`] flag stands in for the reply, since a dead
+    /// emulated host answers nothing).  Only an answered probe re-admits
+    /// the device to the candidate pool; a silent one re-arms the
+    /// verdict at `now_ms`, so a still-dead host costs one probe per TTL
+    /// instead of a wasted failover round.
+    fn expire_verdicts(&mut self, now_ms: f64) {
+        for d in self.detector.take_expired(now_ms) {
+            if self.probe_alive(d) {
+                self.eng
+                    .cfg
+                    .trace
+                    .instant("probe_ok", || format!("d{d} answered, re-admitted to pool"));
+                self.eng.cfg.metrics.inc("probes_ok", 1);
+                crate::obs::log::info("adaptive", || {
+                    format!("probe: d{d} answered after verdict TTL, re-admitted")
+                });
+            } else {
+                self.detector.mark_dead(d, now_ms);
+                self.eng
+                    .cfg
+                    .trace
+                    .instant("probe_failed", || format!("d{d} silent, verdict re-armed"));
+                self.eng.cfg.metrics.inc("probes_failed", 1);
+                crate::obs::log::warn("adaptive", || {
+                    format!("probe: d{d} still silent, verdict re-armed for another TTL")
+                });
+            }
+        }
+    }
+
+    /// One emulated probe round trip: sleep the scaled source↔device
+    /// latency both ways (capped — a control frame, not a transfer),
+    /// then read the ground-truth liveness flag.  Runs without a churn
+    /// schedule have no flags and every device counts as answering.
+    fn probe_alive(&self, device: usize) -> bool {
+        let rtt_sim_ms = self.eng.live.with(|c| {
+            2.0 * c
+                .latency_ms
+                .get(c.source)
+                .and_then(|row| row.get(device))
+                .copied()
+                .unwrap_or(0.0)
+        });
+        let real_ms = if self.scale > 0.0 {
+            rtt_sim_ms * self.scale
+        } else {
+            rtt_sim_ms
+        }
+        .min(MAX_PROBE_SLEEP_REAL_MS);
+        if real_ms > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(real_ms / 1e3));
+        }
+        self.eng.liveness.as_ref().map(|l| l.is_alive(device)).unwrap_or(true)
+    }
+
     /// Dump the flight ring after a completed failover when
     /// [`AdaptiveConfig::flight_prefix`] is set — the per-crash
     /// post-mortem artifact.  Best-effort: a dump failure is logged, not
@@ -523,8 +696,9 @@ impl DriveHooks for AdaptiveHooks<'_, '_> {
         // Devices declared dead stay out of the candidate pool — until
         // their verdict's TTL expires (a rejoined host produces no
         // observations while excluded, so only expiry can let the
-        // replanner win recovered hardware back).
-        self.detector.expire(now_ms);
+        // replanner win recovered hardware back) AND an active probe
+        // confirms the host actually answers.
+        self.expire_verdicts(now_ms);
         let pool: Vec<usize> = (0..obs_cluster.len())
             .filter(|d| !self.detector.is_dead(*d))
             .collect();
@@ -607,9 +781,10 @@ impl DriveHooks for AdaptiveHooks<'_, '_> {
             view.stalled_real_ms
         };
         self.monitor.drain_at(now_ms);
-        // expired verdicts re-enter suspicion: if the host is genuinely
-        // still dead, the ranking below re-blames it right here
-        self.detector.expire(now_ms);
+        // expired verdicts re-enter suspicion only past an active probe:
+        // a still-silent host is re-armed right here instead of wasting
+        // a detection round on it
+        self.expire_verdicts(now_ms);
         let plan_devices = self.eng.plan.devices();
         let Some(dead) = self
             .detector
@@ -742,6 +917,9 @@ impl DriveHooks for AdaptiveHooks<'_, '_> {
                     // the post-mortem artifact: detection → replan →
                     // restore are all inside the ring at this point
                     self.dump_flight_record();
+                    // the failure history just grew — let the cadence
+                    // policy re-derive its Young interval from it
+                    self.retune_checkpoint_cadence();
                     return Ok(true);
                 }
                 FailoverAttempt::ReplayStalled => {
@@ -1685,6 +1863,42 @@ mod tests {
             ],
             predicted_ms: 0.0,
         }
+    }
+
+    #[test]
+    fn young_cadence_follows_sqrt_law_with_fixed_fallback() {
+        // no failures yet → the configured cadence stands
+        let young = CheckpointPolicy::Young {
+            cost_tokens: 4.0,
+            min_every: 2,
+            max_every: 1000,
+        };
+        assert_eq!(young.effective_every(16, &[]), 16);
+        // Fixed never moves regardless of history
+        assert_eq!(CheckpointPolicy::Fixed.effective_every(16, &[100, 300]), 16);
+        // failures at tokens 100 and 300 → gaps 100, 200 → MTBF 150 →
+        // sqrt(2·4·150) = sqrt(1200) ≈ 34.6 → 35
+        assert_eq!(young.effective_every(16, &[100, 300]), 35);
+        assert!((young_interval(4.0, 150.0) - 1200f64.sqrt()).abs() < 1e-9);
+        assert_eq!(mean_tokens_between_failures(&[100, 300]), Some(150.0));
+        assert_eq!(mean_tokens_between_failures(&[]), None);
+        // the clamp bounds both directions
+        let tight = CheckpointPolicy::Young {
+            cost_tokens: 4.0,
+            min_every: 40,
+            max_every: 50,
+        };
+        assert_eq!(tight.effective_every(16, &[100, 300]), 40);
+        let wide = CheckpointPolicy::Young {
+            cost_tokens: 4.0,
+            min_every: 2,
+            max_every: 20,
+        };
+        assert_eq!(wide.effective_every(16, &[100, 300]), 20);
+        // checkpointing disabled stays disabled under any policy
+        assert_eq!(young.effective_every(0, &[100, 300]), 0);
+        // a burst of same-token failures cannot drive the cadence to 0
+        assert_eq!(mean_tokens_between_failures(&[0, 0, 0]), Some(1.0));
     }
 
     /// Routing a half-full run's export onto a new plan must preserve the

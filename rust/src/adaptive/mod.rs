@@ -61,6 +61,9 @@ pub mod scenario;
 pub use dynamics::{
     DeviceSchedule, DeviceShape, DynamicsDriver, LinkSchedule, NetworkDynamics, ScheduleShape,
 };
-pub use engine::{AdaptiveConfig, AdaptiveEngine, AdaptiveStats, FailoverRecord, MigrationRecord};
+pub use engine::{
+    AdaptiveConfig, AdaptiveEngine, AdaptiveStats, CheckpointPolicy, FailoverRecord,
+    MigrationRecord,
+};
 pub use monitor::{Ewma, LivenessDetector, Monitor, MonitorHandle};
 pub use replan::{Decision, MigrationDiff, Replanner, StageMove, TriggerPolicy};

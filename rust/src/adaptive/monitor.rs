@@ -395,6 +395,21 @@ impl LivenessDetector {
         }
     }
 
+    /// Remove and return every verdict older than the TTL, oldest first —
+    /// the active-probe variant of [`LivenessDetector::expire`]: the
+    /// caller decides re-admission (e.g. after probing the device) and
+    /// re-arms a still-dead host with [`LivenessDetector::mark_dead`].
+    pub fn take_expired(&mut self, now_ms: f64) -> Vec<usize> {
+        if !self.verdict_ttl_ms.is_finite() {
+            return Vec::new();
+        }
+        let ttl = self.verdict_ttl_ms;
+        let (expired, standing): (Vec<_>, Vec<_>) =
+            self.dead.drain(..).partition(|&(_, at)| now_ms - at >= ttl);
+        self.dead = standing;
+        expired.into_iter().map(|(d, _)| d).collect()
+    }
+
     /// Keep only the `n` most recent verdicts — the self-healing path
     /// when an earlier blame was wrong and the shrunken pool has become
     /// unplannable.
@@ -658,6 +673,26 @@ mod tests {
         det.mark_dead(2, 0.0);
         det.expire(f64::MAX);
         assert!(det.is_dead(2));
+    }
+
+    #[test]
+    fn take_expired_hands_back_only_lapsed_verdicts() {
+        let mut det = LivenessDetector::with_ttl(500.0, 1000.0);
+        det.mark_dead(1, 100.0);
+        det.mark_dead(2, 800.0);
+        // only device 1's verdict has lapsed at t=1100
+        assert_eq!(det.take_expired(1100.0), vec![1]);
+        assert!(!det.is_dead(1));
+        assert!(det.is_dead(2));
+        // the caller may re-arm a still-dead host with a fresh verdict time
+        det.mark_dead(1, 1100.0);
+        assert!(det.is_dead(1));
+        assert!(det.take_expired(1100.0).is_empty());
+        // infinite TTL never hands anything back
+        let mut det = LivenessDetector::new(500.0);
+        det.mark_dead(3, 0.0);
+        assert!(det.take_expired(f64::MAX).is_empty());
+        assert!(det.is_dead(3));
     }
 
     #[test]

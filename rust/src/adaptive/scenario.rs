@@ -584,16 +584,22 @@ pub struct ContinuousChurnReport {
     pub static_clean: RunSummary,
 }
 
-fn continuous_requests(cfg: &ContinuousChurnConfig, vocab: usize, prompt_len: usize) -> Vec<GenRequest> {
+fn continuous_requests(
+    cfg: &ContinuousChurnConfig,
+    vocab: usize,
+    prompt_len: usize,
+) -> Vec<GenRequest> {
     cfg.gen_lens
         .iter()
         .enumerate()
-        .map(|(r, &gen)| GenRequest {
-            id: 1 + r as u64,
-            prompt: (0..prompt_len)
-                .map(|i| ((i * 7 + r * 13 + cfg.seed as usize) % vocab) as i32)
-                .collect(),
-            max_new_tokens: gen,
+        .map(|(r, &gen)| {
+            GenRequest::new(
+                1 + r as u64,
+                (0..prompt_len)
+                    .map(|i| ((i * 7 + r * 13 + cfg.seed as usize) % vocab) as i32)
+                    .collect(),
+                gen,
+            )
         })
         .collect()
 }

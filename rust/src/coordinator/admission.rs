@@ -15,10 +15,11 @@
 //!   [`LiveSource`] (the TCP front door's connection handlers feeding an
 //!   mpsc channel);
 //! * an [`AdmissionQueue`] wraps the source with a pluggable
-//!   [`AdmissionPolicy`] — plain FIFO, or FIFO with a bound on how many
-//!   batch-1 prefills may be dispatched ahead of an in-flight decode
-//!   step (the prefill/decode interleaving knob that caps TTFT-induced
-//!   decode jitter);
+//!   [`AdmissionPolicy`] — plain FIFO, FIFO with a bound on prefills
+//!   dispatched ahead of an in-flight decode step, or the SLO-class
+//!   priority policy ([`SloPolicy`]): **per-class bounded queues**,
+//!   interactive-first admission with anti-starvation aging, and
+//!   graceful shedding at the bound;
 //! * the slot drive loop ([`super::driver::drive_slots`]) polls the
 //!   queue between iterations and pushes arrivals into the
 //!   [`super::scheduler::SlotScheduler`] as slots free up.  Arrival
@@ -26,17 +27,38 @@
 //!   **queue delay** (arrival → batch-1 prefill dispatch) plus
 //!   **prefill** (dispatch → first token).
 //!
+//! ## Admission states under SLO-class serving
+//!
+//! ```text
+//! arrival ──▶ queued ──▶ admitted (prefill dispatched) ──▶ served
+//!               │
+//!               ├─▶ shed     (class queue at its bound at arrival)
+//!               └─▶ expired  (TTFT deadline passed while queued)
+//! ```
+//!
+//! A shed happens the instant its class queue is full — the client is
+//! answered with a structured reject immediately, which *is* the
+//! backpressure: at most `interactive_bound + batch_bound` requests are
+//! ever buffered inside the serving stack, so queue memory and queue
+//! delay are both bounded no matter the offered load.  The bound counts
+//! **queued** requests (accepted but no prefill dispatched yet); the
+//! drive reports dispatches back via [`AdmissionQueue::on_dispatched`]
+//! and rejects via [`AdmissionQueue::on_reject`], which is what moves a
+//! slot of the bound back to "available".
+//!
 //! Token numerics are arrival-independent by construction: every row of
 //! a composed batch decodes at its own absolute position, so *when* a
 //! request was admitted never changes *what* it generates — the
 //! open-loop replay of a trace emits byte-identical tokens to serving
-//! the same requests closed-loop (asserted in `tests/open_loop.rs`).
+//! the same requests closed-loop (asserted in `tests/open_loop.rs`), and
+//! SLO-priority reordering leaves every served token stream byte-equal
+//! to FIFO (asserted in `tests/admission_slo.rs`).
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::time::{Duration, Instant};
 
-use super::api::{GenRequest, GenResult};
+use super::api::{GenRequest, GenResult, ServeReply, SloClass};
 use crate::workload::Request;
 
 /// One request stamped with its arrival time (drive-clock ms).
@@ -68,6 +90,15 @@ pub trait RequestSource: Send {
     /// waiting for the whole drive to return.
     fn on_result(&mut self, result: &GenResult) {
         let _ = result;
+    }
+
+    /// A request this source produced was rejected — shed at the
+    /// admission bound or expired in the queue.  Live sources answer
+    /// their client with the structured reject right away; replay
+    /// sources default to ignoring it (the drive stats carry the
+    /// counts).
+    fn on_reject(&mut self, reply: &ServeReply) {
+        let _ = reply;
     }
 
     /// Block up to `timeout` waiting for the next arrival — called by an
@@ -143,17 +174,15 @@ impl TraceSource {
         TraceSource { trace, next: 0 }
     }
 
-    /// Replay a [`crate::workload`] trace verbatim.
+    /// Replay a [`crate::workload`] trace verbatim (every request
+    /// interactive, no deadline — callers layer classes on top with
+    /// [`TraceSource::new`]).
     pub fn from_trace(trace: &[Request]) -> Self {
         Self::new(
             trace
                 .iter()
                 .map(|r| ArrivedRequest {
-                    req: GenRequest {
-                        id: r.id,
-                        prompt: r.prompt.clone(),
-                        max_new_tokens: r.max_new_tokens,
-                    },
+                    req: GenRequest::new(r.id, r.prompt.clone(), r.max_new_tokens),
                     arrival_ms: r.arrival_ms.max(0.0),
                 })
                 .collect(),
@@ -186,7 +215,7 @@ impl RequestSource for TraceSource {
 /// part of the measured queue delay).
 pub struct IncomingRequest {
     pub req: GenRequest,
-    pub reply: Sender<GenResult>,
+    pub reply: Sender<ServeReply>,
     pub at: Instant,
 }
 
@@ -195,7 +224,10 @@ pub struct IncomingRequest {
 /// it between iterations.  The source assigns its own dense request ids
 /// (client-supplied ids are ignored), clamps `max_new_tokens` to what
 /// the compiled shapes can hold, and answers each client the moment its
-/// request finishes ([`RequestSource::on_result`]).
+/// request finishes ([`RequestSource::on_result`]) or is rejected
+/// ([`RequestSource::on_reject`]) — a shed or expiry reply rides the
+/// same per-request channel, so overload rejects reach the client even
+/// while the serving queue is saturated.
 pub struct LiveSource {
     rx: Receiver<IncomingRequest>,
     start: Instant,
@@ -205,7 +237,7 @@ pub struct LiveSource {
     max_requests: Option<usize>,
     /// Upper bound on `max_new_tokens` (compiled `max_seq - prompt_len`).
     max_new_cap: usize,
-    replies: HashMap<u64, Sender<GenResult>>,
+    replies: HashMap<u64, Sender<ServeReply>>,
     /// A request received by a blocking [`RequestSource::wait`], handed
     /// to the next [`RequestSource::poll`].
     stashed: Option<IncomingRequest>,
@@ -301,13 +333,53 @@ impl RequestSource for LiveSource {
     fn on_result(&mut self, result: &GenResult) {
         if let Some(tx) = self.replies.remove(&result.id) {
             // a vanished client is not a serving error
-            let _ = tx.send(result.clone());
+            let _ = tx.send(ServeReply::Done(result.clone()));
+        }
+    }
+
+    fn on_reject(&mut self, reply: &ServeReply) {
+        if let Some(tx) = self.replies.remove(&reply.id()) {
+            let _ = tx.send(reply.clone());
+        }
+    }
+}
+
+/// Knobs of the SLO-class priority policy
+/// ([`AdmissionPolicy::SloPriority`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloPolicy {
+    /// Max interactive requests queued (accepted, no prefill dispatched
+    /// yet) before further interactive arrivals are shed.
+    pub interactive_bound: usize,
+    /// Max batch requests queued before further batch arrivals are shed.
+    pub batch_bound: usize,
+    /// Anti-starvation aging: a batch request queued this long is
+    /// promoted ahead of interactive admissions (one per promotion), so
+    /// sustained interactive load can delay batch work by at most this
+    /// plus one admission round per batch request.
+    pub aging_ms: f64,
+    /// Class-aware prefill/decode interleaving: at most this many
+    /// *batch* prefills may be dispatched ahead of an in-flight decode
+    /// step per pump (interactive prefills are never capped — they are
+    /// the latency-sensitive class the cap protects).  A run with no
+    /// live rows admits freely, as under
+    /// [`AdmissionPolicy::BoundedPrefill`].
+    pub batch_prefill_cap: usize,
+}
+
+impl Default for SloPolicy {
+    fn default() -> Self {
+        SloPolicy {
+            interactive_bound: 64,
+            batch_bound: 64,
+            aging_ms: 500.0,
+            batch_prefill_cap: 1,
         }
     }
 }
 
 /// How waiting requests may be admitted into free slots.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub enum AdmissionPolicy {
     /// Fill every free slot, oldest request first (unbounded: a burst of
     /// arrivals may stack a whole batch of batch-1 prefills ahead of an
@@ -321,19 +393,54 @@ pub enum AdmissionPolicy {
     /// before the step behind it executes).  Runs with no live rows
     /// admit freely: there is no decode step to delay.
     BoundedPrefill(usize),
+    /// SLO-class serving: per-class bounded queues with shedding at the
+    /// bound, interactive-first admission with anti-starvation aging,
+    /// and a class-aware prefill cap.  See [`SloPolicy`].
+    SloPriority(SloPolicy),
+}
+
+/// One admission-layer rejection, reported to the drive loop so it can
+/// count it ([`crate::obs::MetricsRegistry`]) and trace it (obs
+/// instants).  The client-facing reply already went out through
+/// [`RequestSource::on_reject`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum AdmissionEvent {
+    /// Arrival shed at its class bound.
+    Shed { id: u64, class: SloClass },
 }
 
 /// A [`RequestSource`] plus the [`AdmissionPolicy`] the slot scheduler
 /// must apply to it — the one handle [`super::driver::drive_slots`]
-/// serves from.
+/// serves from.  Under [`AdmissionPolicy::SloPriority`] it also owns the
+/// per-class bound accounting: [`AdmissionQueue::poll`] sheds arrivals
+/// whose class queue is full, and the drive reports queue departures
+/// back through [`AdmissionQueue::on_dispatched`] /
+/// [`AdmissionQueue::on_reject`].
 pub struct AdmissionQueue {
     source: Box<dyn RequestSource>,
     policy: AdmissionPolicy,
+    /// Queued (accepted, not yet prefill-dispatched) per class:
+    /// `[interactive, batch]`.  Only maintained under `SloPriority`.
+    queued: [usize; 2],
+    /// Rejections since the last [`AdmissionQueue::take_events`].
+    events: Vec<AdmissionEvent>,
+}
+
+fn class_ix(c: SloClass) -> usize {
+    match c {
+        SloClass::Interactive => 0,
+        SloClass::Batch => 1,
+    }
 }
 
 impl AdmissionQueue {
     pub fn new(source: Box<dyn RequestSource>, policy: AdmissionPolicy) -> Self {
-        AdmissionQueue { source, policy }
+        AdmissionQueue {
+            source,
+            policy,
+            queued: [0, 0],
+            events: Vec::new(),
+        }
     }
 
     /// The degenerate closed-loop queue: everything arrives at t = 0,
@@ -360,8 +467,54 @@ impl AdmissionQueue {
         &self.policy
     }
 
+    /// Pull every arrival up to `now_ms`, shedding past-bound arrivals
+    /// under [`AdmissionPolicy::SloPriority`] (the shed client is
+    /// answered immediately via [`RequestSource::on_reject`]; the drive
+    /// collects the counts via [`AdmissionQueue::take_events`]).  Only
+    /// accepted requests are returned.
     pub fn poll(&mut self, now_ms: f64) -> Vec<ArrivedRequest> {
-        self.source.poll(now_ms)
+        let arrivals = self.source.poll(now_ms);
+        let AdmissionPolicy::SloPriority(p) = &self.policy else {
+            return arrivals;
+        };
+        let bounds = [p.interactive_bound, p.batch_bound];
+        let mut accepted = Vec::with_capacity(arrivals.len());
+        for a in arrivals {
+            let ix = class_ix(a.req.class);
+            if self.queued[ix] >= bounds[ix] {
+                let reply = ServeReply::Shed {
+                    id: a.req.id,
+                    class: a.req.class,
+                };
+                self.source.on_reject(&reply);
+                self.events.push(AdmissionEvent::Shed {
+                    id: a.req.id,
+                    class: a.req.class,
+                });
+            } else {
+                self.queued[ix] += 1;
+                accepted.push(a);
+            }
+        }
+        accepted
+    }
+
+    /// Rejections (sheds) since the last call — the drive loop's hook
+    /// for metrics counters and trace instants.
+    pub fn take_events(&mut self) -> Vec<AdmissionEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Queued (accepted, not yet dispatched) requests of `class`.
+    pub fn queued(&self, class: SloClass) -> usize {
+        self.queued[class_ix(class)]
+    }
+
+    /// A queued request's prefill was dispatched: it left the bounded
+    /// queue, freeing one slot of its class bound.
+    pub fn on_dispatched(&mut self, class: SloClass) {
+        let ix = class_ix(class);
+        self.queued[ix] = self.queued[ix].saturating_sub(1);
     }
 
     pub fn next_arrival_ms(&self) -> Option<f64> {
@@ -374,6 +527,17 @@ impl AdmissionQueue {
 
     pub fn on_result(&mut self, result: &GenResult) {
         self.source.on_result(result);
+    }
+
+    /// A queued request was rejected after acceptance (deadline expiry,
+    /// detected by the drive loop, which owns the clock): answer the
+    /// client and release its slot of the class bound.
+    pub fn on_reject(&mut self, reply: &ServeReply) {
+        if let ServeReply::Expired { class, .. } | ServeReply::Shed { class, .. } = reply {
+            let ix = class_ix(*class);
+            self.queued[ix] = self.queued[ix].saturating_sub(1);
+        }
+        self.source.on_reject(reply);
     }
 
     /// Block up to `timeout` for the next arrival (idle drive) — see
@@ -389,11 +553,7 @@ mod tests {
     use std::sync::mpsc;
 
     fn req(id: u64) -> GenRequest {
-        GenRequest {
-            id,
-            prompt: vec![1, 2, 3],
-            max_new_tokens: 4,
-        }
+        GenRequest::new(id, vec![1, 2, 3], 4)
     }
 
     #[test]
@@ -435,6 +595,7 @@ mod tests {
         let first = s.poll(0.0);
         assert_eq!(first.len(), 1);
         assert_eq!(first[0].req.id, 1);
+        assert_eq!(first[0].req.class, SloClass::Interactive);
         assert!(!s.closed());
         assert_eq!(s.next_arrival_ms(), Some(50.0));
         // nothing between arrivals
@@ -451,11 +612,7 @@ mod tests {
         let mut s = LiveSource::new(rx, Some(2), 8);
         let (rtx, rrx) = mpsc::channel();
         tx.send(IncomingRequest {
-            req: GenRequest {
-                id: 999,
-                prompt: vec![5],
-                max_new_tokens: 1000,
-            },
+            req: GenRequest::new(999, vec![5], 1000),
             reply: rtx,
             at: Instant::now(),
         })
@@ -475,7 +632,7 @@ mod tests {
             total_ms: 2.0,
         };
         s.on_result(&result);
-        assert_eq!(rrx.recv().unwrap(), result);
+        assert_eq!(rrx.recv().unwrap(), ServeReply::Done(result));
         // second accept hits max_requests and closes the source
         let (rtx2, _rrx2) = mpsc::channel();
         tx.send(IncomingRequest {
@@ -487,6 +644,27 @@ mod tests {
         assert_eq!(s.poll(1.0).len(), 1);
         assert!(s.closed());
         assert!(s.poll(2.0).is_empty());
+    }
+
+    #[test]
+    fn live_source_answers_rejects_on_the_reply_channel() {
+        let (tx, rx) = mpsc::channel();
+        let mut s = LiveSource::new(rx, None, 8);
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(IncomingRequest {
+            req: req(1).with_class(SloClass::Batch),
+            reply: rtx,
+            at: Instant::now(),
+        })
+        .unwrap();
+        let got = s.poll(0.0);
+        assert_eq!(got.len(), 1);
+        let reply = ServeReply::Shed {
+            id: got[0].req.id,
+            class: SloClass::Batch,
+        };
+        s.on_reject(&reply);
+        assert_eq!(rrx.recv().unwrap(), reply);
     }
 
     #[test]
@@ -522,5 +700,44 @@ mod tests {
         assert_eq!(*q.policy(), AdmissionPolicy::BoundedPrefill(2));
         assert_eq!(q.poll(0.0).len(), 1);
         assert!(q.closed());
+    }
+
+    #[test]
+    fn slo_queue_sheds_past_the_class_bound() {
+        // bounds: 2 interactive, 1 batch — a burst of 4 + 3 sheds 2 + 2
+        let reqs: Vec<GenRequest> = (1..=4)
+            .map(req)
+            .chain((5..=7).map(|i| req(i).with_class(SloClass::Batch)))
+            .collect();
+        let mut q = AdmissionQueue::new(
+            Box::new(QueueSource::new(&reqs)),
+            AdmissionPolicy::SloPriority(SloPolicy {
+                interactive_bound: 2,
+                batch_bound: 1,
+                ..SloPolicy::default()
+            }),
+        );
+        let accepted = q.poll(0.0);
+        assert_eq!(accepted.len(), 3);
+        assert_eq!(q.queued(SloClass::Interactive), 2);
+        assert_eq!(q.queued(SloClass::Batch), 1);
+        let events = q.take_events();
+        assert_eq!(events.len(), 4);
+        let shed_batch = events
+            .iter()
+            .filter(|e| matches!(e, AdmissionEvent::Shed { class: SloClass::Batch, .. }))
+            .count();
+        assert_eq!(shed_batch, 2);
+        assert!(q.take_events().is_empty(), "events drained");
+        // a dispatch frees one slot of the interactive bound
+        q.on_dispatched(SloClass::Interactive);
+        assert_eq!(q.queued(SloClass::Interactive), 1);
+        // an expiry reject frees its class slot too
+        q.on_reject(&ServeReply::Expired {
+            id: 2,
+            class: SloClass::Interactive,
+            waited_ms: 9.0,
+        });
+        assert_eq!(q.queued(SloClass::Interactive), 0);
     }
 }

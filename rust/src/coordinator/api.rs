@@ -1,11 +1,73 @@
 //! Request/response types of the serving path.
 
+/// Service-level-objective class of a request: which admission queue it
+/// waits in and how the scheduler trades it off under load.
+///
+/// Admission is class-aware end to end (see [`super::admission`]): each
+/// class has its own bounded queue, `Interactive` requests are admitted
+/// ahead of `Batch` ones (with anti-starvation aging so batch work is
+/// never starved outright), and under saturation shedding is confined to
+/// whichever class overflows its own bound.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub enum SloClass {
+    /// Latency-sensitive: admitted first, may carry a TTFT deadline.
+    #[default]
+    Interactive,
+    /// Throughput work: admitted into spare capacity, deferred or
+    /// preempted when interactive queue depth rises, shed first.
+    Batch,
+}
+
+impl SloClass {
+    /// Stable lowercase name (wire protocol, metrics keys, reports).
+    pub fn name(&self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Batch => "batch",
+        }
+    }
+}
+
 /// One user request (already tokenized).
 #[derive(Debug, Clone, PartialEq)]
 pub struct GenRequest {
     pub id: u64,
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
+    /// SLO class ([`SloClass::Interactive`] unless the client says
+    /// otherwise).
+    pub class: SloClass,
+    /// TTFT deadline, milliseconds from *arrival*: a request still
+    /// queued this long past its arrival is dropped (answered with an
+    /// expiry reject) instead of wasting a prefill it can no longer use.
+    /// `None` = wait forever.
+    pub deadline_ms: Option<f64>,
+}
+
+impl GenRequest {
+    /// An interactive request with no deadline — the default shape every
+    /// pre-SLO call site used.
+    pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Self {
+        GenRequest {
+            id,
+            prompt,
+            max_new_tokens,
+            class: SloClass::Interactive,
+            deadline_ms: None,
+        }
+    }
+
+    /// Builder-style class override.
+    pub fn with_class(mut self, class: SloClass) -> Self {
+        self.class = class;
+        self
+    }
+
+    /// Builder-style TTFT deadline (ms from arrival).
+    pub fn with_deadline_ms(mut self, deadline_ms: f64) -> Self {
+        self.deadline_ms = Some(deadline_ms);
+        self
+    }
 }
 
 /// A batched group the engine executes as one unit: `batch` sequences,
@@ -56,6 +118,36 @@ impl GenResult {
     }
 }
 
+/// Everything a request's client can hear back: a completed generation,
+/// or one of the two structured admission rejects.  Admission states:
+/// `queued → admitted (Done)` / `shed` / `expired`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeReply {
+    /// The request was served to completion.
+    Done(GenResult),
+    /// Rejected at admission: its class queue was at its bound.  Sent
+    /// the moment the bound is hit — the client sees backpressure
+    /// immediately instead of silent unbounded buffering.
+    Shed { id: u64, class: SloClass },
+    /// Dropped from the queue: its TTFT deadline passed before a prefill
+    /// was dispatched (`waited_ms` = how long it sat queued).
+    Expired {
+        id: u64,
+        class: SloClass,
+        waited_ms: f64,
+    },
+}
+
+impl ServeReply {
+    /// The request id this reply answers.
+    pub fn id(&self) -> u64 {
+        match self {
+            ServeReply::Done(r) => r.id,
+            ServeReply::Shed { id, .. } | ServeReply::Expired { id, .. } => *id,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -93,5 +185,46 @@ mod tests {
             max_new_tokens: 96,
         };
         assert_eq!(g.real(), 2);
+    }
+
+    #[test]
+    fn request_defaults_interactive_no_deadline() {
+        let r = GenRequest::new(1, vec![1], 4);
+        assert_eq!(r.class, SloClass::Interactive);
+        assert_eq!(r.deadline_ms, None);
+        let b = GenRequest::new(2, vec![1], 4)
+            .with_class(SloClass::Batch)
+            .with_deadline_ms(50.0);
+        assert_eq!(b.class, SloClass::Batch);
+        assert_eq!(b.deadline_ms, Some(50.0));
+        assert_eq!(b.class.name(), "batch");
+    }
+
+    #[test]
+    fn reply_id_covers_every_variant() {
+        let done = ServeReply::Done(GenResult {
+            id: 7,
+            tokens: vec![],
+            ttft_ms: 0.0,
+            total_ms: 0.0,
+        });
+        assert_eq!(done.id(), 7);
+        assert_eq!(
+            ServeReply::Shed {
+                id: 8,
+                class: SloClass::Batch
+            }
+            .id(),
+            8
+        );
+        assert_eq!(
+            ServeReply::Expired {
+                id: 9,
+                class: SloClass::Interactive,
+                waited_ms: 10.0
+            }
+            .id(),
+            9
+        );
     }
 }

@@ -102,11 +102,7 @@ mod tests {
     use super::*;
 
     fn req(id: u64, len: usize, max_new: usize) -> GenRequest {
-        GenRequest {
-            id,
-            prompt: (0..len as i32).collect(),
-            max_new_tokens: max_new,
-        }
+        GenRequest::new(id, (0..len as i32).collect(), max_new)
     }
 
     #[test]

@@ -67,8 +67,8 @@ use std::collections::HashMap;
 use std::sync::mpsc::RecvTimeoutError;
 use std::time::{Duration, Instant};
 
-use super::admission::AdmissionQueue;
-use super::api::{GenResult, GroupRequest};
+use super::admission::{AdmissionEvent, AdmissionPolicy, AdmissionQueue};
+use super::api::{GenResult, GroupRequest, ServeReply, SloClass};
 use super::engine::Wired;
 use super::scheduler::{Action, ContinuousConfig, RunSnap, SeqEvent, SlotScheduler};
 use super::stage::{Payload, Phase, StageMsg, TokenMsg, TokenOrigin};
@@ -133,6 +133,16 @@ pub struct DriveStats {
     pub queue_delay: Histogram,
     /// Real rows / total rows over every work frame sent.
     pub padding_efficiency: f64,
+    /// Arrivals shed at their class bound (slot mode, SLO policy only):
+    /// `[interactive, batch]`.
+    pub shed: [u64; 2],
+    /// Queued requests dropped at their TTFT deadline before a prefill
+    /// was dispatched: `[interactive, batch]`.
+    pub expired: [u64; 2],
+    /// Highest arrived-not-yet-dispatched queue depth observed — under a
+    /// bounded SLO policy this can never exceed the sum of the class
+    /// bounds (the bench gates on it).
+    pub peak_queue_depth: usize,
 }
 
 /// Progress of one still-unfinished group, as the hooks see it.
@@ -780,6 +790,21 @@ pub fn drive_slots(
         Ok(())
     };
     let mut arrival_by_req: HashMap<u64, f64> = HashMap::new();
+    // SLO bookkeeping: class per accepted request, absolute expiry (ms
+    // on the drive clock) for deadlined ones, and the queued batch
+    // requests in arrival order (aging scans its front; entries are
+    // lazily discarded once dispatched or expired)
+    let mut class_by_req: HashMap<u64, SloClass> = HashMap::new();
+    let mut deadline_by_req: HashMap<u64, f64> = HashMap::new();
+    let mut pending_batch: std::collections::VecDeque<(u64, f64)> =
+        std::collections::VecDeque::new();
+    let mut shed = [0u64; 2];
+    let mut expired = [0u64; 2];
+    let mut peak_queue_depth = 0usize;
+    let slo_policy = match queue.policy() {
+        AdmissionPolicy::SloPriority(p) => Some(p.clone()),
+        _ => None,
+    };
 
     // The degenerate closed-loop source delivers everything at t = 0:
     // take the whole queue up front so the initial compiled batch is
@@ -789,7 +814,15 @@ pub fn drive_slots(
     let initial = queue.poll(0.0);
     for a in &initial {
         fits(a.req.id, a.req.max_new_tokens)?;
-        arrival_by_req.insert(a.req.id, a.arrival_ms.max(0.0));
+        let arr = a.arrival_ms.max(0.0);
+        arrival_by_req.insert(a.req.id, arr);
+        class_by_req.insert(a.req.id, a.req.class);
+        if let Some(d) = a.req.deadline_ms {
+            deadline_by_req.insert(a.req.id, arr + d);
+        }
+        if a.req.class == SloClass::Batch {
+            pending_batch.push_back((a.req.id, arr));
+        }
         cfg.trace.begin(LifeKind::Request, a.req.id, ReqPhase::Whole);
         cfg.trace.begin(LifeKind::Request, a.req.id, ReqPhase::Queue);
     }
@@ -859,10 +892,90 @@ pub fn drive_slots(
         let now_ms = t0.elapsed().as_secs_f64() * 1e3;
         for a in queue.poll(now_ms) {
             fits(a.req.id, a.req.max_new_tokens)?;
-            arrival_by_req.insert(a.req.id, a.arrival_ms.max(0.0));
+            let arr = a.arrival_ms.max(0.0);
+            arrival_by_req.insert(a.req.id, arr);
+            class_by_req.insert(a.req.id, a.req.class);
+            if let Some(d) = a.req.deadline_ms {
+                deadline_by_req.insert(a.req.id, arr + d);
+            }
+            if a.req.class == SloClass::Batch {
+                pending_batch.push_back((a.req.id, arr));
+            }
             cfg.trace.begin(LifeKind::Request, a.req.id, ReqPhase::Whole);
             cfg.trace.begin(LifeKind::Request, a.req.id, ReqPhase::Queue);
             sched.push_request(&a.req)?;
+        }
+        // arrivals the admission queue shed at their class bound: the
+        // client was already answered (structured reject through the
+        // source); count and trace them here
+        for ev in queue.take_events() {
+            let AdmissionEvent::Shed { id, class } = ev;
+            shed[class_ix(class)] += 1;
+            cfg.metrics.inc("requests_shed", 1);
+            cfg.metrics.inc(shed_key(class), 1);
+            cfg.trace
+                .instant("request_shed", || format!("req {id} ({})", class.name()));
+        }
+        // deadline expiry: a queued request past its TTFT deadline can
+        // no longer be served in time — drop it before wasting a prefill
+        // on it.  Only never-dispatched requests are eligible (an
+        // admitted row's prefill is already paid for).
+        if !deadline_by_req.is_empty() {
+            let overdue: std::collections::HashSet<u64> = deadline_by_req
+                .iter()
+                .filter(|(id, &exp)| now_ms >= exp && !delay_recorded.contains(id))
+                .map(|(&id, _)| id)
+                .collect();
+            if !overdue.is_empty() {
+                for id in sched.drop_waiting(|id| overdue.contains(&id)) {
+                    let class = class_by_req.get(&id).copied().unwrap_or_default();
+                    let arr = arrival_by_req.remove(&id).unwrap_or(0.0);
+                    deadline_by_req.remove(&id);
+                    expired[class_ix(class)] += 1;
+                    cfg.metrics.inc("requests_expired", 1);
+                    cfg.metrics.inc(expired_key(class), 1);
+                    cfg.trace
+                        .instant("request_expired", || format!("req {id} ({})", class.name()));
+                    cfg.trace.end(LifeKind::Request, id, ReqPhase::Queue);
+                    cfg.trace.end(LifeKind::Request, id, ReqPhase::Whole);
+                    queue.on_reject(&ServeReply::Expired {
+                        id,
+                        class,
+                        waited_ms: (now_ms - arr).max(0.0),
+                    });
+                }
+            }
+        }
+        if let Some(p) = &slo_policy {
+            // anti-starvation aging: arm the scheduler's one-shot batch
+            // promotion when the oldest still-queued batch request has
+            // waited past aging_ms
+            while let Some(&(id, _)) = pending_batch.front() {
+                if delay_recorded.contains(&id) || !arrival_by_req.contains_key(&id) {
+                    pending_batch.pop_front();
+                } else {
+                    break;
+                }
+            }
+            let aged = pending_batch
+                .front()
+                .map(|&(_, arr)| now_ms - arr >= p.aging_ms)
+                .unwrap_or(false);
+            sched.set_batch_aged(aged);
+            // interactive pressure: if waiting interactive requests
+            // outnumber free slots, preempt in-flight *batch* prefills
+            // (evict + re-queue; the stale first token is ghost-swallowed
+            // by the scheduler) so the next pump admits interactive work
+            let need = sched.waiting_interactive();
+            let free = sched.free_slots();
+            if need > free {
+                let n = sched.preempt_batch_prefills(need - free);
+                if n > 0 {
+                    cfg.metrics.inc("batch_prefills_preempted", n as u64);
+                    cfg.trace
+                        .instant("batch_preempt", || format!("{n} prefill(s) evicted"));
+                }
+            }
         }
         if queue.closed() {
             // no further arrivals: drained runs may free their caches
@@ -891,6 +1004,13 @@ pub fn drive_slots(
                             cfg.metrics.observe("queue_delay_ms", wait);
                             cfg.trace.end(LifeKind::Request, req, ReqPhase::Queue);
                             cfg.trace.begin(LifeKind::Request, req, ReqPhase::Prefill);
+                            // the request leaves the bounded class queue:
+                            // its slot of the bound frees up (first
+                            // dispatch only — failover/preemption
+                            // re-admits are not queue departures)
+                            queue.on_dispatched(
+                                class_by_req.get(&req).copied().unwrap_or_default(),
+                            );
                         }
                         let msg = StageMsg::Admit {
                             run,
@@ -949,7 +1069,8 @@ pub fn drive_slots(
         }
         // queue depth (arrived, not yet dispatched) and admitted-KV
         // pressure: emitted only on change so the trace stays compact
-        let depth = arrival_by_req.len() - delay_recorded.len();
+        let depth = arrival_by_req.len().saturating_sub(delay_recorded.len());
+        peak_queue_depth = peak_queue_depth.max(depth);
         let admitted = delay_recorded.len() - results.len();
         if (depth, admitted) != last_queue_gauge {
             last_queue_gauge = (depth, admitted);
@@ -1101,7 +1222,7 @@ pub fn drive_slots(
     anyhow::ensure!(sched.done(), "slot scheduler stalled with work left");
 
     let (rows_real, rows_total) = sched.rows();
-    let stats = finish_stats(
+    let mut stats = finish_stats(
         t0,
         real_tokens,
         ttft,
@@ -1110,6 +1231,9 @@ pub fn drive_slots(
         rows_real,
         rows_total,
     );
+    stats.shed = shed;
+    stats.expired = expired;
+    stats.peak_queue_depth = peak_queue_depth;
     Ok((results, stats))
 }
 
@@ -1139,5 +1263,31 @@ fn finish_stats(
         } else {
             1.0
         },
+        shed: [0, 0],
+        expired: [0, 0],
+        peak_queue_depth: 0,
+    }
+}
+
+fn class_ix(c: SloClass) -> usize {
+    match c {
+        SloClass::Interactive => 0,
+        SloClass::Batch => 1,
+    }
+}
+
+/// Per-class metrics key for sheds (static strings: the registry is
+/// keyed by `&'static str`).
+fn shed_key(c: SloClass) -> &'static str {
+    match c {
+        SloClass::Interactive => "requests_shed_interactive",
+        SloClass::Batch => "requests_shed_batch",
+    }
+}
+
+fn expired_key(c: SloClass) -> &'static str {
+    match c {
+        SloClass::Interactive => "requests_expired_interactive",
+        SloClass::Batch => "requests_expired_batch",
     }
 }

@@ -82,6 +82,15 @@ pub struct EngineStats {
     /// Real rows / total rows over every frame sent: 1.0 = no compute or
     /// KV spent on padding rows or dead slots.
     pub padding_efficiency: f64,
+    /// Arrivals shed at their class bound (`[interactive, batch]`; SLO
+    /// admission policy only — always zero otherwise).
+    pub shed: [u64; 2],
+    /// Queued requests dropped at their TTFT deadline before a prefill
+    /// was dispatched (`[interactive, batch]`).
+    pub expired: [u64; 2],
+    /// Highest arrived-not-yet-dispatched queue depth observed during the
+    /// drive — bounded by the class bounds under the SLO policy.
+    pub peak_queue_depth: usize,
 }
 
 impl From<super::driver::DriveStats> for EngineStats {
@@ -94,6 +103,9 @@ impl From<super::driver::DriveStats> for EngineStats {
             iter_latency: d.iter_latency,
             queue_delay: d.queue_delay,
             padding_efficiency: d.padding_efficiency,
+            shed: d.shed,
+            expired: d.expired,
+            peak_queue_depth: d.peak_queue_depth,
         }
     }
 }

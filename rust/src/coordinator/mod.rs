@@ -5,7 +5,8 @@
 //! * [`admission`] — how requests *enter*: [`admission::RequestSource`]s
 //!   (closed-loop queue, Poisson trace replay, live TCP channel) behind
 //!   an [`admission::AdmissionQueue`] with a pluggable admission policy
-//!   (FIFO / bounded prefill interleaving).  Arrival timestamps flow
+//!   (FIFO / bounded prefill interleaving / SLO-class priority with
+//!   bounded per-class queues and shedding).  Arrival timestamps flow
 //!   into the stats, so TTFT decomposes into queue delay + prefill.
 //! * [`kvcache`] — per-stage KV-cache pool with byte accounting (the
 //!   paper pre-allocates KV space on each participating device).
@@ -41,9 +42,9 @@ pub mod stage;
 
 pub use admission::{
     AdmissionPolicy, AdmissionQueue, ArrivedRequest, LiveSource, QueueSource, RequestSource,
-    TraceSource,
+    SloPolicy, TraceSource,
 };
-pub use api::{GenRequest, GenResult, GroupRequest};
+pub use api::{GenRequest, GenResult, GroupRequest, ServeReply, SloClass};
 pub use batcher::Batcher;
 pub use driver::{
     DriveHooks, DriveStats, DriveView, DriverCfg, GroupProgress, NoHooks, StallGroup, StallView,

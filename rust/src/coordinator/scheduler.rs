@@ -65,10 +65,10 @@
 //! unchanged per-row state on the next pump, and admissions whose first
 //! token died in flight are re-queued verbatim.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 use super::admission::AdmissionPolicy;
-use super::api::GenRequest;
+use super::api::{GenRequest, SloClass};
 use super::batcher::fit_prompt;
 use super::stage::{TokenMsg, TokenOrigin};
 use anyhow::{bail, ensure, Result};
@@ -170,6 +170,7 @@ struct SeqState {
     prompt: Vec<i32>,
     max_new: usize,
     generated: Vec<i32>,
+    class: SloClass,
 }
 
 /// Replay state of one occupied slot, as checkpointing and failover see
@@ -261,6 +262,17 @@ pub struct SlotScheduler {
     /// and therefore keeps drained runs allocated (no [`Action::FreeRun`])
     /// until [`SlotScheduler::close`].
     open: bool,
+    /// Anti-starvation flag ([`SlotScheduler::set_batch_aged`]): the next
+    /// pump promotes one aged batch request ahead of interactive
+    /// admissions, exempt from the batch prefill cap.  Consumed on use.
+    batch_aged: bool,
+    /// Stale in-flight admissions per `(run, slot)`: a preempted
+    /// prefill's first token is still traveling the pipeline and must be
+    /// swallowed, not folded.  Stage channels are FIFO, so the stale
+    /// token is guaranteed to arrive before any later admission's token
+    /// for the same slot — [`SlotScheduler::on_token`] drops exactly
+    /// this many admit tokens per slot.
+    ghosts: HashMap<(u64, usize), u32>,
 }
 
 impl SlotScheduler {
@@ -282,6 +294,7 @@ impl SlotScheduler {
                     prompt: fit_prompt(&r.prompt, prompt_len),
                     max_new: r.max_new_tokens,
                     generated: Vec::new(),
+                    class: r.class,
                 })
             })
             .collect::<Result<_>>()?;
@@ -358,6 +371,8 @@ impl SlotScheduler {
             rows_total: 0,
             policy: AdmissionPolicy::Fifo,
             open,
+            batch_aged: false,
+            ghosts: HashMap::new(),
         })
     }
 
@@ -377,9 +392,86 @@ impl SlotScheduler {
             prompt: fit_prompt(&r.prompt, self.prompt_len),
             max_new: r.max_new_tokens,
             generated: Vec::new(),
+            class: r.class,
         });
         self.waiting.push_back(self.seqs.len() - 1);
         Ok(())
+    }
+
+    /// Arm (or clear) the anti-starvation promotion: when armed, the
+    /// next pump admits one waiting batch request ahead of interactive
+    /// ones, exempt from [`super::admission::SloPolicy::batch_prefill_cap`].
+    /// The driver arms it when the oldest queued batch request has waited
+    /// past `aging_ms`.
+    pub fn set_batch_aged(&mut self, aged: bool) {
+        self.batch_aged = aged;
+    }
+
+    /// Waiting (not yet admitted) interactive requests.
+    pub fn waiting_interactive(&self) -> usize {
+        self.waiting
+            .iter()
+            .filter(|&&seq| self.seqs[seq].class == SloClass::Interactive)
+            .count()
+    }
+
+    /// Free slots across live runs — admission capacity of the next pump.
+    pub fn free_slots(&self) -> usize {
+        self.runs.iter().filter(|r| !r.freed).map(|r| r.free()).sum()
+    }
+
+    /// Drop waiting requests whose id matches `pred` (deadline expiry):
+    /// they leave the queue without ever dispatching a prefill.  Returns
+    /// the dropped request ids.  Admitted requests are never touched —
+    /// their prefill is already paid for.
+    pub fn drop_waiting(&mut self, pred: impl Fn(u64) -> bool) -> Vec<u64> {
+        let mut dropped = Vec::new();
+        self.waiting.retain(|&seq| {
+            if pred(self.seqs[seq].id) {
+                dropped.push(self.seqs[seq].id);
+                false
+            } else {
+                true
+            }
+        });
+        dropped
+    }
+
+    /// Preempt up to `max_n` in-flight *batch* prefills (admitted, first
+    /// token not yet back) to make room for waiting interactive work:
+    /// each one is evicted (reusing the failover evict/re-queue path),
+    /// its slot freed for the next pump's admission, and the request
+    /// put back at the front of the waiting queue.  The stale first
+    /// token still traveling the pipeline is ghost-swallowed by
+    /// [`SlotScheduler::on_token`].  Returns how many were preempted.
+    pub fn preempt_batch_prefills(&mut self, max_n: usize) -> usize {
+        let mut preempted = 0usize;
+        for ri in 0..self.runs.len() {
+            if preempted >= max_n {
+                break;
+            }
+            if self.runs[ri].freed {
+                continue;
+            }
+            for slot in 0..self.runs[ri].batch {
+                if preempted >= max_n {
+                    break;
+                }
+                let Slot::Prefilling { seq } = self.runs[ri].slots[slot] else {
+                    continue;
+                };
+                if self.seqs[seq].class != SloClass::Batch {
+                    continue;
+                }
+                let run_id = self.runs[ri].id;
+                self.outbox.push(Action::Evict { run: run_id, slot });
+                self.runs[ri].slots[slot] = Slot::Free;
+                *self.ghosts.entry((run_id, slot)).or_insert(0) += 1;
+                self.waiting.push_front(seq);
+                preempted += 1;
+            }
+        }
+        preempted
     }
 
     /// The source is exhausted: no further [`SlotScheduler::push_request`]
@@ -469,22 +561,28 @@ impl SlotScheduler {
             }
         }
 
-        // admissions: fill free slots FIFO from the arrival queue.  The
+        // admissions: fill free slots from the arrival queue.  The
         // BoundedPrefill policy caps how many batch-1 prefills may be
         // dispatched ahead of this run's next decode step (each one is a
         // full pipeline pass the step must wait behind); a run with no
-        // live rows has no decode step to delay and admits freely.
-        let cap = match self.policy {
-            AdmissionPolicy::Fifo => usize::MAX,
+        // live rows has no decode step to delay and admits freely.  The
+        // SloPriority policy admits interactive-first and applies the
+        // prefill cap to batch admissions only (one aged batch request
+        // may jump the line cap-free — anti-starvation).
+        let decoding = self.runs[ri].live() > 0;
+        let (cap, batch_cap) = match &self.policy {
+            AdmissionPolicy::Fifo => (usize::MAX, usize::MAX),
             AdmissionPolicy::BoundedPrefill(k) => {
-                if self.runs[ri].live() > 0 {
-                    k
-                } else {
-                    usize::MAX
-                }
+                (if decoding { *k } else { usize::MAX }, usize::MAX)
             }
+            AdmissionPolicy::SloPriority(p) => (
+                usize::MAX,
+                if decoding { p.batch_prefill_cap } else { usize::MAX },
+            ),
         };
+        let slo = matches!(self.policy, AdmissionPolicy::SloPriority(_));
         let mut admits = 0usize;
+        let mut batch_admits = 0usize;
         for slot in 0..self.runs[ri].batch {
             if admits >= cap {
                 break;
@@ -492,7 +590,12 @@ impl SlotScheduler {
             if !matches!(self.runs[ri].slots[slot], Slot::Free) {
                 continue;
             }
-            let Some(seq) = self.waiting.pop_front() else { break };
+            let picked = if slo {
+                self.pick_waiting_slo(batch_cap, &mut batch_admits)
+            } else {
+                self.waiting.pop_front()
+            };
+            let Some(seq) = picked else { break };
             let run = &mut self.runs[ri];
             out.push(Action::Admit {
                 run: run.id,
@@ -581,6 +684,35 @@ impl SlotScheduler {
         }
     }
 
+    /// Pick the next admissible waiting request under SloPriority:
+    /// one aged batch request first (cap-free, consumes the flag), then
+    /// oldest interactive, then oldest batch while under `batch_cap`.
+    fn pick_waiting_slo(&mut self, batch_cap: usize, batch_admits: &mut usize) -> Option<usize> {
+        if self.batch_aged {
+            if let Some(ix) = self
+                .waiting
+                .iter()
+                .position(|&seq| self.seqs[seq].class == SloClass::Batch)
+            {
+                self.batch_aged = false;
+                return self.waiting.remove(ix);
+            }
+        }
+        if let Some(ix) = self
+            .waiting
+            .iter()
+            .position(|&seq| self.seqs[seq].class == SloClass::Interactive)
+        {
+            return self.waiting.remove(ix);
+        }
+        if *batch_admits >= batch_cap {
+            return None;
+        }
+        let seq = self.waiting.pop_front()?;
+        *batch_admits += 1;
+        Some(seq)
+    }
+
     /// Fold one head token message; returns what it meant per sequence.
     pub fn on_token(&mut self, msg: &TokenMsg) -> Result<Vec<SeqEvent>> {
         let ri = self
@@ -591,6 +723,16 @@ impl SlotScheduler {
         let mut events = Vec::new();
         match msg.origin {
             TokenOrigin::Admit { slot } => {
+                // a preempted prefill's stale first token: swallow it
+                // (FIFO channels guarantee it precedes any later
+                // admission's token for this slot)
+                if let Some(n) = self.ghosts.get_mut(&(msg.group, slot)) {
+                    *n -= 1;
+                    if *n == 0 {
+                        self.ghosts.remove(&(msg.group, slot));
+                    }
+                    return Ok(events);
+                }
                 let Slot::Prefilling { seq } = self.runs[ri].slots[slot] else {
                     bail!("admit token for run {} slot {slot} not prefilling", msg.group);
                 };
@@ -722,6 +864,10 @@ impl SlotScheduler {
     /// excludes retired rows.
     pub fn on_failover(&mut self) {
         self.outbox.clear();
+        // ghost (preempted) admit tokens died with the pipeline: a
+        // surviving ghost entry would swallow a *re-sent* admission's
+        // real first token
+        self.ghosts.clear();
         for ri in 0..self.runs.len() {
             self.runs[ri].step_live = None;
             for slot in 0..self.runs[ri].batch {
@@ -774,11 +920,7 @@ mod tests {
         max_news
             .iter()
             .enumerate()
-            .map(|(i, &m)| GenRequest {
-                id: 100 + i as u64,
-                prompt: vec![1, 2, 3],
-                max_new_tokens: m,
-            })
+            .map(|(i, &m)| GenRequest::new(100 + i as u64, vec![1, 2, 3], m))
             .collect()
     }
 
@@ -1049,8 +1191,7 @@ mod tests {
         assert!(s.idle());
         assert!(!s.done(), "open scheduler freed its run during a lull");
         // a second wave after the lull is served by the same run
-        s.push_request(&GenRequest { id: 200, prompt: vec![4, 5], max_new_tokens: 3 })
-            .unwrap();
+        s.push_request(&GenRequest::new(200, vec![4, 5], 3)).unwrap();
         let fin = drive_to_idle(&mut s);
         assert_eq!(fin[&200], 3);
         assert!(!s.done());
@@ -1120,5 +1261,158 @@ mod tests {
         s.set_policy(AdmissionPolicy::BoundedPrefill(1));
         let fin = drive(&mut s);
         assert_eq!(fin.len(), lens.len());
+    }
+
+    use super::super::admission::SloPolicy;
+
+    /// Interleaved batch/interactive arrivals: one slot free per pump,
+    /// SLO admission must pull every interactive request first.
+    #[test]
+    fn slo_priority_admits_interactive_first() {
+        // ids 100 (batch), 101 (int), 102 (batch), 103 (int)
+        let rs: Vec<GenRequest> = reqs(&[2, 2, 2, 2])
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| {
+                r.with_class(if i % 2 == 0 { SloClass::Batch } else { SloClass::Interactive })
+            })
+            .collect();
+        let mut s = SlotScheduler::new(
+            &ContinuousConfig { runs: 1, max_batch: Some(1), ..Default::default() },
+            4,
+            vec![1],
+            &rs,
+        )
+        .unwrap();
+        s.set_policy(AdmissionPolicy::SloPriority(SloPolicy::default()));
+        let acts = s.pump();
+        let first = acts
+            .iter()
+            .find_map(|a| match a {
+                Action::Admit { req, .. } => Some(*req),
+                _ => None,
+            })
+            .expect("no admission");
+        assert_eq!(first, 101, "oldest interactive jumps the batch head");
+        // everything still drains (batch is not starved once interactive
+        // work is done)
+        let fin = drive(&mut s);
+        assert_eq!(fin.len(), 4);
+    }
+
+    /// The aged-batch flag promotes exactly one batch request ahead of
+    /// interactive admissions, then clears.
+    #[test]
+    fn slo_aged_batch_promotion_jumps_the_line_once() {
+        let rs: Vec<GenRequest> = vec![
+            reqs(&[2])[0].clone().with_class(SloClass::Batch),
+            GenRequest::new(200, vec![1, 2], 2),
+            GenRequest::new(201, vec![1, 2], 2),
+        ];
+        let mut s = SlotScheduler::new(
+            &ContinuousConfig { runs: 1, max_batch: Some(2), ..Default::default() },
+            4,
+            vec![2],
+            &rs,
+        )
+        .unwrap();
+        s.set_policy(AdmissionPolicy::SloPriority(SloPolicy::default()));
+        s.set_batch_aged(true);
+        let acts = s.pump();
+        let admitted: Vec<u64> = acts
+            .iter()
+            .filter_map(|a| match a {
+                Action::Admit { req, .. } => Some(*req),
+                _ => None,
+            })
+            .collect();
+        // aged batch request first, then the oldest interactive
+        assert_eq!(admitted, vec![100, 200]);
+        let fin = drive(&mut s);
+        assert_eq!(fin.len(), 3);
+    }
+
+    /// Preempting an in-flight batch prefill evicts the slot, re-queues
+    /// the request, and ghost-swallows the stale first token so a later
+    /// admission into the same slot folds correctly.
+    #[test]
+    fn preempted_batch_prefill_requeues_and_swallows_stale_token() {
+        let rs: Vec<GenRequest> = vec![
+            reqs(&[3])[0].clone().with_class(SloClass::Batch),
+            GenRequest::new(200, vec![4, 5], 3),
+        ];
+        let mut s = SlotScheduler::new(
+            &ContinuousConfig { runs: 1, max_batch: Some(1), ..Default::default() },
+            4,
+            vec![1],
+            &rs,
+        )
+        .unwrap();
+        s.set_policy(AdmissionPolicy::SloPriority(SloPolicy::default()));
+        // interactive 200 admitted first (priority), batch 100 waits;
+        // serve 200 out of the way so the batch prefill goes in flight
+        let acts = s.pump();
+        assert!(matches!(acts[0], Action::Admit { req: 200, .. }), "{acts:?}");
+        s.on_token(&tok(RUN_ID_BASE, 0, vec![7], TokenOrigin::Admit { slot: 0 })).unwrap();
+        for _ in 0..2 {
+            let acts = s.pump();
+            assert!(acts.iter().any(|a| matches!(a, Action::Step { .. })), "{acts:?}");
+            s.on_token(&tok(RUN_ID_BASE, 0, vec![9], TokenOrigin::Step)).unwrap();
+        }
+        // 200 retired; batch 100's prefill dispatches now
+        let acts = s.pump();
+        assert!(
+            acts.iter().any(|a| matches!(a, Action::Admit { req: 100, .. })),
+            "{acts:?}"
+        );
+        assert!(s.any_prefilling());
+        // preempt it while its first token is in flight
+        assert_eq!(s.preempt_batch_prefills(4), 1);
+        let acts = s.pump();
+        // the eviction flushes, and the request is re-admitted (nothing
+        // else waits) — a second Admit for the same slot
+        assert!(acts.iter().any(|a| matches!(a, Action::Evict { slot: 0, .. })), "{acts:?}");
+        assert!(
+            acts.iter().any(|a| matches!(a, Action::Admit { req: 100, .. })),
+            "{acts:?}"
+        );
+        // stale first token (from the preempted admission) is swallowed
+        let evs = s
+            .on_token(&tok(RUN_ID_BASE, 0, vec![7], TokenOrigin::Admit { slot: 0 }))
+            .unwrap();
+        assert!(evs.is_empty(), "ghost token must fold to nothing: {evs:?}");
+        // the re-sent admission's token folds normally
+        let evs = s
+            .on_token(&tok(RUN_ID_BASE, 0, vec![8], TokenOrigin::Admit { slot: 0 }))
+            .unwrap();
+        assert!(
+            evs.iter().any(|e| matches!(e, SeqEvent::First { req_id: 100 })),
+            "{evs:?}"
+        );
+        let fin = drive(&mut s);
+        assert_eq!(fin[&100], 3);
+    }
+
+    /// drop_waiting removes only matching queued requests and reports
+    /// their ids; admitted requests are untouched.
+    #[test]
+    fn drop_waiting_expires_queued_only() {
+        let rs = reqs(&[2, 2, 2]);
+        let mut s = SlotScheduler::new(
+            &ContinuousConfig { runs: 1, max_batch: Some(1), ..Default::default() },
+            4,
+            vec![1],
+            &rs,
+        )
+        .unwrap();
+        let acts = s.pump();
+        assert!(matches!(acts[0], Action::Admit { req: 100, .. }));
+        // 100 is admitted; expire 101 but not 102
+        let dropped = s.drop_waiting(|id| id == 101 || id == 100);
+        assert_eq!(dropped, vec![101]);
+        s.on_token(&tok(RUN_ID_BASE, 0, vec![7], TokenOrigin::Admit { slot: 0 })).unwrap();
+        let fin = drive(&mut s);
+        assert_eq!(fin.len(), 2, "100 and 102 served, 101 expired: {fin:?}");
+        assert!(fin.contains_key(&100) && fin.contains_key(&102));
     }
 }

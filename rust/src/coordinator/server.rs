@@ -7,10 +7,29 @@
 //! ← {"id": 1, "text": "…", "tokens": [..], "ttft_ms": 12.3, "total_ms": 87.0}
 //! ```
 //!
+//! Requests may carry an SLO class and a TTFT deadline:
+//! `{"prompt": "…", "class": "batch"}` queues in the batch class (default
+//! `"interactive"`), and `{"prompt": "…", "deadline_ms": 150}` asks the
+//! server to drop the request rather than serve a first token later than
+//! 150 ms after arrival.  Under an SLO admission policy
+//! ([`AdmissionPolicy::SloPriority`]) overload is answered with
+//! **structured rejects** instead of unbounded queueing:
+//!
+//! ```text
+//! ← {"id": 7, "shed": true, "class": "batch", "error": "shed: batch queue at bound"}
+//! ← {"id": 9, "expired": true, "class": "interactive", "waited_ms": 162.1, "error": "…"}
+//! ```
+//!
+//! A shed reply is written the moment the class queue is at its bound —
+//! that is the backpressure: a client sees the reject immediately (the
+//! serving stack never buffers more than the class bounds), instead of
+//! its request silently queueing forever.
+//!
 //! Besides generation requests the protocol answers one control command:
 //! `{"cmd": "metrics"}` replies with a [`crate::obs::MetricsRegistry`]
 //! snapshot (counters, gauges, histogram summaries) without entering the
-//! serving queue — a live health probe under load.
+//! serving queue — a live health probe that stays answerable even while
+//! the serving queue is saturated (asserted by `tests/overload.rs`).
 //!
 //! Requests are byte-tokenized (the tiny model's 256-entry vocabulary)
 //! and served **continuously**: every connection handler feeds a shared
@@ -42,7 +61,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::admission::{AdmissionPolicy, AdmissionQueue, IncomingRequest, LiveSource};
-use super::api::{GenRequest, GenResult};
+use super::api::{GenRequest, GenResult, ServeReply, SloClass};
 use super::engine::Engine;
 use super::scheduler::ContinuousConfig;
 use crate::util::Json;
@@ -195,8 +214,8 @@ fn handle_conn(
                                 break;
                             }
                             match rrx.recv() {
-                                Ok(res) => {
-                                    writeln!(writer, "{}", render_result(&res))?;
+                                Ok(reply) => {
+                                    writeln!(writer, "{}", render_reply(&reply))?;
                                 }
                                 Err(_) => {
                                     writeln!(writer, "{{\"error\":\"engine unavailable\"}}")?;
@@ -237,13 +256,20 @@ pub fn parse_request(line: &str) -> Result<GenRequest> {
         .get("max_new_tokens")
         .and_then(|x| x.as_usize())
         .unwrap_or(16);
+    let class = match j.get("class").and_then(|c| c.as_str()) {
+        None | Some("interactive") => SloClass::Interactive,
+        Some("batch") => SloClass::Batch,
+        Some(other) => anyhow::bail!("unknown class `{other}` (interactive|batch)"),
+    };
+    let deadline_ms = j.get("deadline_ms").and_then(|x| x.as_f64());
+    if let Some(d) = deadline_ms {
+        anyhow::ensure!(d.is_finite() && d > 0.0, "deadline_ms must be positive");
+    }
     // the engine-specific cap (compiled max_seq − prompt_len) is applied
     // at admission by the LiveSource; this only rejects nonsense
-    Ok(GenRequest {
-        id: 0,
-        prompt,
-        max_new_tokens: max_new.clamp(1, 96),
-    })
+    let mut req = GenRequest::new(0, prompt, max_new.clamp(1, 96)).with_class(class);
+    req.deadline_ms = deadline_ms;
+    Ok(req)
 }
 
 /// Render a result line.
@@ -265,6 +291,46 @@ pub fn render_result(r: &GenResult) -> String {
         Json::Num((r.total_ms * 100.0).round() / 100.0),
     );
     Json::Obj(obj).to_string()
+}
+
+/// Render any serve reply: completion, or one of the structured
+/// admission rejects (`shed` / `expired`, each also carrying `error` so
+/// naive clients that only look for an error key still see the reject).
+pub fn render_reply(reply: &ServeReply) -> String {
+    use std::collections::BTreeMap;
+    match reply {
+        ServeReply::Done(r) => render_result(r),
+        ServeReply::Shed { id, class } => {
+            let mut obj = BTreeMap::new();
+            obj.insert("id".to_string(), Json::Num(*id as f64));
+            obj.insert("shed".to_string(), Json::Bool(true));
+            obj.insert("class".to_string(), Json::Str(class.name().to_string()));
+            obj.insert(
+                "error".to_string(),
+                Json::Str(format!("shed: {} queue at bound", class.name())),
+            );
+            Json::Obj(obj).to_string()
+        }
+        ServeReply::Expired {
+            id,
+            class,
+            waited_ms,
+        } => {
+            let mut obj = BTreeMap::new();
+            obj.insert("id".to_string(), Json::Num(*id as f64));
+            obj.insert("expired".to_string(), Json::Bool(true));
+            obj.insert("class".to_string(), Json::Str(class.name().to_string()));
+            obj.insert(
+                "waited_ms".to_string(),
+                Json::Num((waited_ms * 100.0).round() / 100.0),
+            );
+            obj.insert(
+                "error".to_string(),
+                Json::Str("expired: TTFT deadline passed while queued".to_string()),
+            );
+            Json::Obj(obj).to_string()
+        }
+    }
 }
 
 #[cfg(test)]
@@ -296,6 +362,48 @@ mod tests {
     fn max_new_clamped() {
         let r = parse_request(r#"{"prompt": "x", "max_new_tokens": 10000}"#).unwrap();
         assert_eq!(r.max_new_tokens, 96);
+    }
+
+    #[test]
+    fn parse_class_and_deadline() {
+        let r = parse_request(r#"{"prompt": "x"}"#).unwrap();
+        assert_eq!(r.class, SloClass::Interactive);
+        assert_eq!(r.deadline_ms, None);
+        let r = parse_request(r#"{"prompt": "x", "class": "batch"}"#).unwrap();
+        assert_eq!(r.class, SloClass::Batch);
+        let r = parse_request(r#"{"prompt": "x", "deadline_ms": 150}"#).unwrap();
+        assert_eq!(r.deadline_ms, Some(150.0));
+        assert!(parse_request(r#"{"prompt": "x", "class": "gold"}"#).is_err());
+        assert!(parse_request(r#"{"prompt": "x", "deadline_ms": -5}"#).is_err());
+    }
+
+    #[test]
+    fn render_rejects_carry_structure_and_error() {
+        let shed = render_reply(&ServeReply::Shed {
+            id: 7,
+            class: SloClass::Batch,
+        });
+        let j = Json::parse(&shed).unwrap();
+        assert_eq!(j.get("id").unwrap().as_usize(), Some(7));
+        assert_eq!(j.get("shed").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("class").unwrap().as_str(), Some("batch"));
+        assert!(j.get("error").is_some());
+        let exp = render_reply(&ServeReply::Expired {
+            id: 9,
+            class: SloClass::Interactive,
+            waited_ms: 162.128,
+        });
+        let j = Json::parse(&exp).unwrap();
+        assert_eq!(j.get("expired").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("waited_ms").unwrap().as_f64(), Some(162.13));
+        // a Done reply renders exactly like render_result
+        let res = GenResult {
+            id: 1,
+            tokens: vec![104],
+            ttft_ms: 1.0,
+            total_ms: 2.0,
+        };
+        assert_eq!(render_reply(&ServeReply::Done(res.clone())), render_result(&res));
     }
 
     #[test]

@@ -7,7 +7,9 @@
 //! edgeshard profile --model <7b|13b|70b> [--bandwidth MBPS]
 //! edgeshard gantt --model <7b|13b|70b> [--strategy bubble|nobubble] [--micro N]
 //! edgeshard serve [--addr HOST:PORT] [--backend sim|pjrt] [--stages N] [--time-scale F]
-//!                 [--max-requests N] [--prefill-bound K] [--trace PATH]
+//!                 [--max-requests N] [--prefill-bound K] [--slo on]
+//!                 [--interactive-bound N] [--batch-bound N] [--aging-ms F]
+//!                 [--batch-prefill-cap K] [--trace PATH]
 //! edgeshard generate --prompt "text" [--max-new N] [--stages N]
 //! ```
 //!
@@ -127,7 +129,8 @@ fn print_usage() {
          edgeshard plan --model 7b [--bandwidth 1] [--objective latency] [--seed N]\n  \
          edgeshard profile --model 7b [--bandwidth 1]\n  \
          edgeshard gantt --model 7b [--strategy nobubble] [--micro 4]\n  \
-         edgeshard serve [--addr 127.0.0.1:7077] [--backend sim] [--stages 3] [--max-requests N] [--prefill-bound K] [--trace PATH]\n  \
+         edgeshard serve [--addr 127.0.0.1:7077] [--backend sim] [--stages 3] [--max-requests N] [--prefill-bound K]\n                  \
+[--slo on --interactive-bound 64 --batch-bound 64 --aging-ms 500 --batch-prefill-cap 1] [--trace PATH]\n  \
          edgeshard generate --prompt \"Today is a\" [--max-new 16] [--stages 3]\n\n\
          `--trace PATH` writes a Chrome/Perfetto trace (bench serving, repro churn|serving, serve);\n\
          `--log off|error|warn|info|debug` enables diagnostics on any subcommand (or EDGESHARD_LOG)."
@@ -350,12 +353,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
     engine.set_metrics(&metrics);
     let listener = std::net::TcpListener::bind(&addr)?;
     println!("serving on {addr} (JSON lines: {{\"prompt\": \"…\", \"max_new_tokens\": 16}})");
-    let cfg = edgeshard::coordinator::server::ServerConfig {
-        max_requests: args.get("max-requests").map(|v| v.parse()).transpose()?,
-        policy: match args.get_usize("prefill-bound", 0)? {
+    // `--slo on` turns on SLO-class serving: per-class bounded queues
+    // with shedding, interactive-first admission, aging, and a
+    // batch-only prefill cap.  Mutually exclusive with --prefill-bound
+    // (the SLO policy subsumes it via --batch-prefill-cap).
+    let slo = args.get("slo").map(|v| v == "on" || v == "true").unwrap_or(false);
+    let policy = if slo {
+        let defaults = edgeshard::coordinator::admission::SloPolicy::default();
+        edgeshard::coordinator::AdmissionPolicy::SloPriority(
+            edgeshard::coordinator::admission::SloPolicy {
+                interactive_bound: args
+                    .get_usize("interactive-bound", defaults.interactive_bound)?,
+                batch_bound: args.get_usize("batch-bound", defaults.batch_bound)?,
+                aging_ms: args.get_f64("aging-ms", defaults.aging_ms)?,
+                batch_prefill_cap: args
+                    .get_usize("batch-prefill-cap", defaults.batch_prefill_cap)?,
+            },
+        )
+    } else {
+        match args.get_usize("prefill-bound", 0)? {
             0 => edgeshard::coordinator::AdmissionPolicy::Fifo,
             k => edgeshard::coordinator::AdmissionPolicy::BoundedPrefill(k),
-        },
+        }
+    };
+    let cfg = edgeshard::coordinator::server::ServerConfig {
+        max_requests: args.get("max-requests").map(|v| v.parse()).transpose()?,
+        policy,
         metrics,
         ..Default::default()
     };
@@ -404,11 +427,11 @@ fn cmd_generate(args: &Args) -> Result<()> {
     let prompt = args.get("prompt").unwrap_or("Today is a good day").to_string();
     let max_new = args.get_usize("max-new", 16)?;
     let (svc, mut engine, mut batcher) = build_engine(args, &edgeshard::obs::Tracer::off())?;
-    let req = GenRequest {
-        id: 1,
-        prompt: prompt.bytes().map(|b| b as i32).collect(),
-        max_new_tokens: max_new.clamp(1, 96),
-    };
+    let req = GenRequest::new(
+        1,
+        prompt.bytes().map(|b| b as i32).collect(),
+        max_new.clamp(1, 96),
+    );
     let groups = batcher.pack(&[req]);
     let (results, stats) = engine.generate_sequential(&groups)?;
     let r = &results[0];

@@ -28,13 +28,23 @@
 //! gather-window front door — and reports the load-latency curve
 //! (offered tokens/s vs TTFT p50/p99, queue-delay percentiles), written
 //! to `results/serving_openloop.md` + `BENCH_serving_openloop.json`.
+//!
+//! The **overload** section ([`run_overload_bench`]) pushes offered load
+//! far past capacity and compares the SLO-class priority front door
+//! (bounded per-class queues, interactive-first, graceful shedding)
+//! against the saturated FIFO baseline: interactive p99 TTFT must stay
+//! within its SLO while shedding stays confined to the batch class —
+//! written to `results/serving_overload.md` +
+//! `BENCH_serving_overload.json` (the CI gate in `tests/overload.rs`
+//! asserts exactly these).
 
 use anyhow::{Context, Result};
 use std::collections::{HashMap, HashSet};
 use std::time::{Duration, Instant};
 
 use crate::cluster::{Cluster, Device, DeviceClass};
-use crate::coordinator::api::{GenRequest, GenResult};
+use crate::coordinator::admission::{ArrivedRequest, SloPolicy, TraceSource};
+use crate::coordinator::api::{GenRequest, GenResult, SloClass};
 use crate::coordinator::scheduler::ContinuousConfig;
 use crate::coordinator::{AdmissionQueue, Batcher, Engine, EngineConfig, EngineStats};
 use crate::metrics::Histogram;
@@ -209,11 +219,7 @@ pub fn run_bench_traced(
     let trace = gen.generate(cfg.requests);
     let requests: Vec<GenRequest> = trace
         .iter()
-        .map(|r| GenRequest {
-            id: r.id,
-            prompt: r.prompt.clone(),
-            max_new_tokens: r.max_new_tokens,
-        })
+        .map(|r| GenRequest::new(r.id, r.prompt.clone(), r.max_new_tokens))
         .collect();
     let short_ids: std::collections::HashSet<u64> = requests
         .iter()
@@ -518,11 +524,7 @@ fn gather_window_openloop(
         let dispatch_ms = now_ms(&t0);
         let reqs: Vec<GenRequest> = trace[lo..i]
             .iter()
-            .map(|r| GenRequest {
-                id: r.id,
-                prompt: r.prompt.clone(),
-                max_new_tokens: r.max_new_tokens,
-            })
+            .map(|r| GenRequest::new(r.id, r.prompt.clone(), r.max_new_tokens))
             .collect();
         let groups = batcher.pack(&reqs);
         let (results, _stats) = engine
@@ -731,11 +733,373 @@ pub fn openloop_json(r: &OpenLoopBenchReport) -> Json {
     Json::Obj(root)
 }
 
-/// `edgeshard bench serving` entry: run the closed-loop mode comparison
-/// and the open-loop load-latency sweep, echo markdown, write both JSON
-/// artifacts (and the markdown under `results/`).  With `trace_path` the
-/// closed-loop comparison additionally runs under a live tracer and the
-/// whole run is exported as a Chrome/Perfetto trace there.
+// ---------------------------------------------------------------------
+// Overload sweep: SLO-class admission under offered load ≫ capacity
+// ---------------------------------------------------------------------
+
+/// Knobs of the overload sweep (defaults are what CI runs).  The sweep
+/// drives one Poisson trace at an offered load far above pipeline
+/// capacity through two front doors: plain FIFO (the saturated
+/// single-class baseline — everything queues, nothing sheds) and
+/// [`AdmissionPolicy::SloPriority`] (bounded per-class queues,
+/// interactive-first, shed at the bound).
+#[derive(Debug, Clone)]
+pub struct OverloadBenchConfig {
+    pub requests: usize,
+    pub seed: u64,
+    /// Continuous-batching pipeline depth.
+    pub runs: usize,
+    pub gen_lens: Vec<usize>,
+    pub mean_burst: usize,
+    /// Mean interarrival gap (ms) — far below the service rate, so the
+    /// queue grows without bound unless something sheds.
+    pub interarrival_ms: f64,
+    /// Every k-th request (by trace order) is interactive; the rest are
+    /// batch.
+    pub interactive_every: usize,
+    /// Interactive TTFT budget (ms, measured from arrival) the sweep
+    /// judges the priority policy against.
+    pub slo_ttft_ms: f64,
+    /// The admission policy under test.
+    pub policy: SloPolicy,
+}
+
+impl Default for OverloadBenchConfig {
+    fn default() -> Self {
+        OverloadBenchConfig {
+            requests: 48,
+            seed: 0,
+            runs: 2,
+            gen_lens: vec![4, 12, 24, 48],
+            mean_burst: 2,
+            interarrival_ms: 0.5,
+            interactive_every: 4,
+            slo_ttft_ms: 1000.0,
+            policy: SloPolicy {
+                interactive_bound: 64,
+                batch_bound: 12,
+                aging_ms: 250.0,
+                batch_prefill_cap: 1,
+            },
+        }
+    }
+}
+
+/// One SLO class under overload, summarized.
+#[derive(Debug)]
+pub struct OverloadClassStats {
+    /// Requests of this class in the trace.
+    pub offered: usize,
+    /// Requests that finished generation.
+    pub completed: usize,
+    pub shed: u64,
+    pub expired: u64,
+    pub ttft_p50_ms: f64,
+    pub ttft_p99_ms: f64,
+}
+
+/// Everything the overload sweep produced.  `interactive` / `batch`
+/// describe the [`AdmissionPolicy::SloPriority`] run; the baseline
+/// fields describe the same trace served FIFO with no bounds.
+#[derive(Debug)]
+pub struct OverloadBenchReport {
+    pub offered_tps: f64,
+    /// Completed tokens/s of the saturated FIFO baseline (= capacity).
+    pub baseline_goodput_tps: f64,
+    /// Interactive-class p99 TTFT under FIFO — what overload does to
+    /// latency-sensitive traffic without classes.
+    pub baseline_interactive_p99_ms: f64,
+    /// offered ÷ capacity (≥ 2 means a genuine overload sweep).
+    pub overload_factor: f64,
+    /// Completed tokens/s under the SLO policy.
+    pub goodput_tps: f64,
+    pub interactive: OverloadClassStats,
+    pub batch: OverloadClassStats,
+    /// Peak accepted-but-not-dispatched depth under the SLO policy —
+    /// bounded by `interactive_bound + batch_bound` by construction.
+    pub peak_queue_depth: usize,
+    /// Interactive p99 TTFT ≤ the configured SLO budget.
+    pub within_slo: bool,
+    /// No interactive request was shed (shedding confined to batch).
+    pub shed_confined_to_batch: bool,
+    /// Every request served by the SLO run generated byte-identical
+    /// tokens to the same request under FIFO (admission reordering and
+    /// shedding never change row math).
+    pub served_tokens_match_baseline: bool,
+    pub slo_ttft_ms: f64,
+    pub interactive_bound: usize,
+    pub batch_bound: usize,
+}
+
+/// The class a trace position maps to under the sweep's striping.
+fn overload_class(ix: usize, interactive_every: usize) -> SloClass {
+    if ix % interactive_every.max(1) == 0 {
+        SloClass::Interactive
+    } else {
+        SloClass::Batch
+    }
+}
+
+fn overload_class_stats(
+    class: SloClass,
+    class_by_id: &HashMap<u64, SloClass>,
+    results: &[GenResult],
+    shed: u64,
+    expired: u64,
+) -> OverloadClassStats {
+    let mut ttft = Histogram::new();
+    let mut completed = 0usize;
+    for r in results {
+        if class_by_id.get(&r.id) == Some(&class) {
+            ttft.record(r.ttft_ms);
+            completed += 1;
+        }
+    }
+    OverloadClassStats {
+        offered: class_by_id.values().filter(|&&c| c == class).count(),
+        completed,
+        shed,
+        expired,
+        ttft_p50_ms: ttft.percentile(50.0),
+        ttft_p99_ms: ttft.percentile(99.0),
+    }
+}
+
+/// Run the overload sweep; see [`OverloadBenchConfig`].
+pub fn run_overload_bench(cfg: &OverloadBenchConfig) -> Result<OverloadBenchReport> {
+    let manifest = Manifest::synthetic(bench_config(), vec![1, 8]);
+    let weights = WeightStore::synthetic(&manifest, cfg.seed);
+    let (_svc, exec) = ExecService::start_sim(&manifest)?;
+    let cluster = bench_cluster();
+    let n_model_layers = manifest.config.n_layers + 2;
+    let plan = crate::planner::Plan {
+        objective: crate::planner::PlanObjective::Throughput,
+        stages: vec![
+            crate::planner::Stage {
+                device: 0,
+                start: 0,
+                end: 3,
+            },
+            crate::planner::Stage {
+                device: 1,
+                start: 3,
+                end: n_model_layers,
+            },
+        ],
+        predicted_ms: 0.0,
+    };
+    let engine_cfg = EngineConfig {
+        time_scale: 0.0,
+        ..EngineConfig::default()
+    };
+    let mut engine =
+        Engine::build(&manifest, &weights, exec.clone(), &plan, &cluster, &engine_cfg)?;
+
+    let gen = RaggedTraceGen {
+        mean_burst: cfg.mean_burst,
+        mean_interarrival_ms: cfg.interarrival_ms,
+        ..RaggedTraceGen::new(
+            manifest.config.prefill_len,
+            manifest.config.vocab_size as i32,
+            cfg.gen_lens.clone(),
+            cfg.seed,
+        )
+    };
+    let trace = gen.generate(cfg.requests);
+    let offered_tps = offered_tokens_per_s(&trace);
+    let class_by_id: HashMap<u64, SloClass> = trace
+        .iter()
+        .enumerate()
+        .map(|(ix, r)| (r.id, overload_class(ix, cfg.interactive_every)))
+        .collect();
+    let arrived: Vec<ArrivedRequest> = trace
+        .iter()
+        .enumerate()
+        .map(|(ix, r)| ArrivedRequest {
+            req: GenRequest::new(r.id, r.prompt.clone(), r.max_new_tokens)
+                .with_class(overload_class(ix, cfg.interactive_every)),
+            arrival_ms: r.arrival_ms.max(0.0),
+        })
+        .collect();
+    let ccfg = ContinuousConfig {
+        runs: cfg.runs,
+        ..ContinuousConfig::default()
+    };
+
+    // the saturated single-class baseline: same classes, FIFO, no bounds
+    let mut fifo = AdmissionQueue::new(
+        Box::new(TraceSource::new(arrived.clone())),
+        crate::coordinator::AdmissionPolicy::Fifo,
+    );
+    let (base_results, base_stats) = engine
+        .generate_from_source(&mut fifo, &ccfg)
+        .context("overload FIFO baseline")?;
+    let mut base_interactive = Histogram::new();
+    for r in &base_results {
+        if class_by_id.get(&r.id) == Some(&SloClass::Interactive) {
+            base_interactive.record(r.ttft_ms);
+        }
+    }
+
+    // the same trace behind the SLO-class priority front door
+    let mut slo = AdmissionQueue::new(
+        Box::new(TraceSource::new(arrived.clone())),
+        crate::coordinator::AdmissionPolicy::SloPriority(cfg.policy.clone()),
+    );
+    let (results, stats) = engine
+        .generate_from_source(&mut slo, &ccfg)
+        .context("overload SLO run")?;
+    engine.shutdown()?;
+
+    // every request the SLO run served must match its FIFO tokens
+    let base_rows: HashMap<u64, Vec<i32>> =
+        base_results.iter().map(|r| (r.id, r.tokens.clone())).collect();
+    let served_tokens_match_baseline = results
+        .iter()
+        .all(|r| base_rows.get(&r.id) == Some(&r.tokens));
+
+    let interactive = overload_class_stats(
+        SloClass::Interactive,
+        &class_by_id,
+        &results,
+        stats.shed[0],
+        stats.expired[0],
+    );
+    let batch = overload_class_stats(
+        SloClass::Batch,
+        &class_by_id,
+        &results,
+        stats.shed[1],
+        stats.expired[1],
+    );
+    let baseline_goodput_tps = base_stats.throughput_tps;
+    Ok(OverloadBenchReport {
+        offered_tps,
+        baseline_goodput_tps,
+        baseline_interactive_p99_ms: base_interactive.percentile(99.0),
+        overload_factor: if baseline_goodput_tps > 0.0 {
+            offered_tps / baseline_goodput_tps
+        } else {
+            0.0
+        },
+        goodput_tps: stats.throughput_tps,
+        within_slo: interactive.ttft_p99_ms <= cfg.slo_ttft_ms,
+        shed_confined_to_batch: interactive.shed == 0 && interactive.expired == 0,
+        interactive,
+        batch,
+        peak_queue_depth: stats.peak_queue_depth,
+        served_tokens_match_baseline,
+        slo_ttft_ms: cfg.slo_ttft_ms,
+        interactive_bound: cfg.policy.interactive_bound,
+        batch_bound: cfg.policy.batch_bound,
+    })
+}
+
+/// Render the overload-sweep markdown.
+pub fn overload_markdown(r: &OverloadBenchReport) -> String {
+    let mut out = String::new();
+    out.push_str("# Overload sweep — SLO-class admission vs saturated FIFO (sim backend)\n\n");
+    out.push_str(&format!(
+        "offered {:.0} tok/s vs capacity {:.0} tok/s ({:.1}x overload); \
+         bounds: {} interactive / {} batch queued\n\n",
+        r.offered_tps,
+        r.baseline_goodput_tps,
+        r.overload_factor,
+        r.interactive_bound,
+        r.batch_bound
+    ));
+    let class_row = |name: &str, c: &OverloadClassStats| {
+        vec![
+            name.to_string(),
+            format!("{}", c.offered),
+            format!("{}", c.completed),
+            format!("{}", c.shed),
+            format!("{}", c.expired),
+            format!("{:.1}", c.ttft_p50_ms),
+            format!("{:.1}", c.ttft_p99_ms),
+        ]
+    };
+    out.push_str(&markdown_table(
+        &[
+            "class",
+            "offered",
+            "completed",
+            "shed",
+            "expired",
+            "TTFT p50 (ms)",
+            "TTFT p99 (ms)",
+        ],
+        &[
+            class_row("interactive", &r.interactive),
+            class_row("batch", &r.batch),
+        ],
+    ));
+    out.push_str(&format!(
+        "\ninteractive p99 TTFT {:.1} ms vs SLO {:.0} ms (within: {}); FIFO would give \
+         interactive p99 {:.1} ms.  goodput {:.1} tok/s vs baseline {:.1}; shed confined \
+         to batch: {}; peak queue depth {} (bound {}); served tokens match baseline: {}\n",
+        r.interactive.ttft_p99_ms,
+        r.slo_ttft_ms,
+        r.within_slo,
+        r.baseline_interactive_p99_ms,
+        r.goodput_tps,
+        r.baseline_goodput_tps,
+        r.shed_confined_to_batch,
+        r.peak_queue_depth,
+        r.interactive_bound + r.batch_bound,
+        r.served_tokens_match_baseline,
+    ));
+    out
+}
+
+/// Machine-readable form (the `BENCH_serving_overload.json` CI artifact).
+pub fn overload_json(r: &OverloadBenchReport) -> Json {
+    use std::collections::BTreeMap;
+    let num = |v: f64| Json::Num((v * 1000.0).round() / 1000.0);
+    let class = |c: &OverloadClassStats| {
+        let mut o = BTreeMap::new();
+        o.insert("offered".into(), Json::Num(c.offered as f64));
+        o.insert("completed".into(), Json::Num(c.completed as f64));
+        o.insert("shed".into(), Json::Num(c.shed as f64));
+        o.insert("expired".into(), Json::Num(c.expired as f64));
+        o.insert("ttft_p50_ms".into(), num(c.ttft_p50_ms));
+        o.insert("ttft_p99_ms".into(), num(c.ttft_p99_ms));
+        Json::Obj(o)
+    };
+    let mut root = BTreeMap::new();
+    root.insert("offered_tokens_per_s".into(), num(r.offered_tps));
+    root.insert("baseline_goodput_tps".into(), num(r.baseline_goodput_tps));
+    root.insert(
+        "baseline_interactive_p99_ms".into(),
+        num(r.baseline_interactive_p99_ms),
+    );
+    root.insert("overload_factor".into(), num(r.overload_factor));
+    root.insert("goodput_tps".into(), num(r.goodput_tps));
+    root.insert("interactive".into(), class(&r.interactive));
+    root.insert("batch".into(), class(&r.batch));
+    root.insert(
+        "peak_queue_depth".into(),
+        Json::Num(r.peak_queue_depth as f64),
+    );
+    root.insert("slo_ttft_ms".into(), num(r.slo_ttft_ms));
+    root.insert("within_slo".into(), Json::Bool(r.within_slo));
+    root.insert(
+        "shed_confined_to_batch".into(),
+        Json::Bool(r.shed_confined_to_batch),
+    );
+    root.insert(
+        "served_tokens_match_baseline".into(),
+        Json::Bool(r.served_tokens_match_baseline),
+    );
+    Json::Obj(root)
+}
+
+/// `edgeshard bench serving` entry: run the closed-loop mode comparison,
+/// the open-loop load-latency sweep and the overload sweep, echo
+/// markdown, write the JSON artifacts (and the markdown under
+/// `results/`).  With `trace_path` the closed-loop comparison
+/// additionally runs under a live tracer and the whole run is exported
+/// as a Chrome/Perfetto trace there.
 pub fn run(
     cfg: &ServingBenchConfig,
     json_path: &std::path::Path,
@@ -767,5 +1131,17 @@ pub fn run(
     std::fs::write(&ol_path, openloop_json(&ol).to_string())
         .with_context(|| format!("writing {ol_path:?}"))?;
     println!("wrote {}", ol_path.display());
+
+    let ov_cfg = OverloadBenchConfig {
+        seed: cfg.seed,
+        runs: cfg.runs,
+        ..OverloadBenchConfig::default()
+    };
+    let ov = run_overload_bench(&ov_cfg)?;
+    super::emit("serving_overload", &overload_markdown(&ov))?;
+    let ov_path = json_path.with_file_name("BENCH_serving_overload.json");
+    std::fs::write(&ov_path, overload_json(&ov).to_string())
+        .with_context(|| format!("writing {ov_path:?}"))?;
+    println!("wrote {}", ov_path.display());
     Ok(())
 }

@@ -80,13 +80,6 @@ impl Json {
             .ok_or_else(|| JsonError(format!("missing key `{key}`")))
     }
 
-    /// Serialize back to compact JSON (used by the serving protocol).
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -138,6 +131,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Serialize back to compact JSON (the serving protocol's wire format);
+/// also gives `Json` a `.to_string()` through the `ToString` blanket.
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

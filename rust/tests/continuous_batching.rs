@@ -74,10 +74,12 @@ fn ragged_requests(max_news: &[usize]) -> Vec<GenRequest> {
     max_news
         .iter()
         .enumerate()
-        .map(|(i, &m)| GenRequest {
-            id: i as u64,
-            prompt: (0..8).map(|t| ((t * 5 + i * 11 + 3) % 64) as i32).collect(),
-            max_new_tokens: m,
+        .map(|(i, &m)| {
+            GenRequest::new(
+                i as u64,
+                (0..8).map(|t| ((t * 5 + i * 11 + 3) % 64) as i32).collect(),
+                m,
+            )
         })
         .collect()
 }

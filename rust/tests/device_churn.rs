@@ -317,11 +317,7 @@ fn dead_stage_without_stall_hook_errors_instead_of_hanging() {
         predicted_ms: 0.0,
     };
     let requests: Vec<GenRequest> = (0..2)
-        .map(|i| GenRequest {
-            id: 1 + i as u64,
-            prompt: (0..32).map(|t| (t + i) % 256).collect(),
-            max_new_tokens: 24,
-        })
+        .map(|i| GenRequest::new(1 + i as u64, (0..32).map(|t| (t + i) % 256).collect(), 24))
         .collect();
     let dynamics = NetworkDynamics::new().device(2, DeviceShape::CrashAt(60.0));
     let mut adaptive = AdaptiveEngine::new(

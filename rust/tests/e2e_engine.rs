@@ -228,10 +228,12 @@ fn batcher_to_engine_roundtrip() {
     let mut e = engine(&c, &plan(&[(0, 0, n)]), 0.0);
     let mut b = Batcher::new(c.manifest.config.prefill_len, c.manifest.batch_sizes.clone());
     let reqs: Vec<GenRequest> = (0..3)
-        .map(|i| GenRequest {
-            id: 10 + i,
-            prompt: "the river crossed the northern valley".bytes().map(|x| x as i32).collect(),
-            max_new_tokens: 3,
+        .map(|i| {
+            GenRequest::new(
+                10 + i,
+                "the river crossed the northern valley".bytes().map(|x| x as i32).collect(),
+                3,
+            )
         })
         .collect();
     let groups = b.pack(&reqs);
