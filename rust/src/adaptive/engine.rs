@@ -70,7 +70,7 @@ use crate::coordinator::driver::{
     drive_groups, drive_slots, send_decode, send_prefill, DriveHooks, DriveView, StallView,
 };
 use crate::coordinator::engine::{wire, EngineConfig, ObsSinks, Wired};
-use crate::coordinator::kvcache::{GroupCache, KvPool};
+use crate::coordinator::kvcache::{GroupCache, KvPool, ELEM_BYTES_F32};
 use crate::coordinator::scheduler::{ContinuousConfig, RunSnap};
 use crate::coordinator::stage::{
     stage_decoders, KvEntry, Payload, StageExport, StageMsg, TokenOrigin,
@@ -1071,7 +1071,16 @@ impl<'a> AdaptiveEngine<'a> {
             let n_local = stage_decoders(&(s.start..s.end), n_model_layers).len();
             let total: u64 = batches
                 .iter()
-                .map(|&b| KvPool::group_bytes(n_local, b, c.n_kv_heads, c.max_seq, c.head_dim()))
+                .map(|&b| {
+                    KvPool::group_bytes(
+                        n_local,
+                        b,
+                        c.n_kv_heads,
+                        c.max_seq,
+                        c.head_dim(),
+                        ELEM_BYTES_F32,
+                    )
+                })
                 .sum();
             total <= self.cfg.engine.kv_budget_bytes
         })
@@ -1261,7 +1270,10 @@ impl<'a> AdaptiveEngine<'a> {
                 .with_context(|| format!("decoder layer {} homeless in plan", e.layer))?;
             let new_dev = plan.stages[si].device;
             if new_dev != *from_dev {
-                *link_bytes.entry((*from_dev, new_dev)).or_insert(0) += e.k.bytes() + e.v.bytes();
+                // paged layout ships only the live blocks, padded the
+                // whole slab — freight_bytes knows which
+                *link_bytes.entry((*from_dev, new_dev)).or_insert(0) +=
+                    e.freight_bytes(self.cfg.engine.kv_layout.block_size());
             }
             per_stage[si].entry(e.group).or_default().push(e.clone());
         }
@@ -1279,10 +1291,16 @@ impl<'a> AdaptiveEngine<'a> {
                 let first = entries.first().expect("n_local > 0 if entries exist");
                 let batch = first.batch;
                 let live = first.live.clone();
+                let written = first.written.clone();
                 anyhow::ensure!(
                     live.len() == batch,
                     "group {gid}: liveness mask has {} flags for batch {batch}",
                     live.len()
+                );
+                anyhow::ensure!(
+                    written.len() == batch,
+                    "group {gid}: written watermarks have {} entries for batch {batch}",
+                    written.len()
                 );
                 let full: u64 = entries.iter().map(|e| e.k.bytes() + e.v.bytes()).sum();
                 let row_bytes = if batch > 0 { full / batch as u64 } else { 0 };
@@ -1295,6 +1313,7 @@ impl<'a> AdaptiveEngine<'a> {
                         batch,
                         bytes,
                         live,
+                        written,
                     },
                 ));
             }
@@ -1514,7 +1533,10 @@ impl<'a> AdaptiveEngine<'a> {
                 .filter(|e| restore_ids.contains(&e.group))
                 .map(|e| (source, e.clone()))
                 .collect();
-            let bytes: u64 = flat.iter().map(|(_, e)| e.k.bytes() + e.v.bytes()).sum();
+            let bytes: u64 = flat
+                .iter()
+                .map(|(_, e)| e.freight_bytes(self.cfg.engine.kv_layout.block_size()))
+                .sum();
             let (p, l) = self.route_exports(&flat, new_plan)?;
             (p, l, bytes)
         };
@@ -1674,7 +1696,10 @@ impl<'a> AdaptiveEngine<'a> {
                 .filter(|e| restore_runs.contains(&e.group))
                 .map(|e| (source, e.clone()))
                 .collect();
-            let bytes: u64 = flat.iter().map(|(_, e)| e.k.bytes() + e.v.bytes()).sum();
+            let bytes: u64 = flat
+                .iter()
+                .map(|(_, e)| e.freight_bytes(self.cfg.engine.kv_layout.block_size()))
+                .sum();
             let (p, l) = self.route_exports(&flat, new_plan)?;
             (p, l, bytes)
         };
@@ -1953,6 +1978,7 @@ mod tests {
                         v: TensorData::f32(vec![2.0; elems], dims.clone()),
                         batch,
                         live: live.clone(),
+                        written: vec![c.max_seq; batch],
                     },
                 )
             })

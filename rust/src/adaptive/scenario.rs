@@ -64,6 +64,10 @@ pub struct ScenarioConfig {
     pub drop_to_mbps: f64,
     pub time_scale: f64,
     pub seed: u64,
+    /// KV layout every engine in the scenario runs under (padded rows or
+    /// the paged block pool) — differential tests flip this and compare
+    /// token streams byte-for-byte.
+    pub kv_layout: crate::coordinator::KvLayout,
 }
 
 impl Default for ScenarioConfig {
@@ -75,6 +79,7 @@ impl Default for ScenarioConfig {
             drop_to_mbps: 0.4,
             time_scale: 1.0,
             seed: 0,
+            kv_layout: crate::coordinator::KvLayout::default(),
         }
     }
 }
@@ -222,6 +227,7 @@ pub fn link_drop_scenario(cfg: &ScenarioConfig) -> Result<ScenarioReport> {
     );
     let engine_cfg = EngineConfig {
         time_scale: cfg.time_scale,
+        kv_layout: cfg.kv_layout,
         ..EngineConfig::default()
     };
 
@@ -330,6 +336,8 @@ pub struct ChurnConfig {
     /// suffixed per run (`_ck` / `_reprefill`) so the two adaptive runs
     /// don't overwrite each other's dumps.
     pub flight_prefix: Option<std::path::PathBuf>,
+    /// KV layout every engine in the experiment runs under.
+    pub kv_layout: crate::coordinator::KvLayout,
 }
 
 impl Default for ChurnConfig {
@@ -351,6 +359,7 @@ impl Default for ChurnConfig {
             seed: 0,
             trace: crate::obs::Tracer::off(),
             flight_prefix: None,
+            kv_layout: crate::coordinator::KvLayout::default(),
         }
     }
 }
@@ -422,6 +431,7 @@ pub fn device_churn_scenario(cfg: &ChurnConfig) -> Result<ChurnReport> {
     );
     let engine_cfg = EngineConfig {
         time_scale: cfg.time_scale,
+        kv_layout: cfg.kv_layout,
         ..EngineConfig::default()
     };
     let dynamics =
@@ -537,6 +547,8 @@ pub struct ContinuousChurnConfig {
     /// suffixed per run (`_ck` / `_reprefill`) so the two adaptive runs
     /// don't overwrite each other's dumps.
     pub flight_prefix: Option<std::path::PathBuf>,
+    /// KV layout every engine in the experiment runs under.
+    pub kv_layout: crate::coordinator::KvLayout,
 }
 
 impl Default for ContinuousChurnConfig {
@@ -561,6 +573,7 @@ impl Default for ContinuousChurnConfig {
             seed: 0,
             trace: crate::obs::Tracer::off(),
             flight_prefix: None,
+            kv_layout: crate::coordinator::KvLayout::default(),
         }
     }
 }
@@ -648,6 +661,7 @@ pub fn continuous_churn_scenario(cfg: &ContinuousChurnConfig) -> Result<Continuo
     };
     let engine_cfg = EngineConfig {
         time_scale: cfg.time_scale,
+        kv_layout: cfg.kv_layout,
         ..EngineConfig::default()
     };
     let dynamics =
@@ -759,6 +773,8 @@ pub struct OpenLoopChurnConfig {
     pub trace: crate::obs::Tracer,
     /// Failover flight-dump prefix (see `AdaptiveConfig::flight_prefix`).
     pub flight_prefix: Option<std::path::PathBuf>,
+    /// KV layout every engine in the experiment runs under.
+    pub kv_layout: crate::coordinator::KvLayout,
 }
 
 impl Default for OpenLoopChurnConfig {
@@ -782,6 +798,7 @@ impl Default for OpenLoopChurnConfig {
             seed: 0,
             trace: crate::obs::Tracer::off(),
             flight_prefix: None,
+            kv_layout: crate::coordinator::KvLayout::default(),
         }
     }
 }
@@ -862,6 +879,7 @@ pub fn open_loop_churn_scenario(cfg: &OpenLoopChurnConfig) -> Result<OpenLoopChu
     };
     let engine_cfg = EngineConfig {
         time_scale: cfg.time_scale,
+        kv_layout: cfg.kv_layout,
         ..EngineConfig::default()
     };
     let dynamics =

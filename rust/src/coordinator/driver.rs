@@ -91,6 +91,18 @@ pub const DEAD_PIPELINE_REAL_MS: f64 = 60_000.0;
 /// long the drive goes between source-closure checks.
 const IDLE_WAIT_REAL_MS: f64 = 250.0;
 
+/// Paged KV layout parameters, as admission control sees them
+/// ([`DriverCfg::paged`]): block-granular occupancy replaces the padded
+/// worst-case row bound.
+#[derive(Debug, Clone, Copy)]
+pub struct PagedCfg {
+    /// Positions per block.
+    pub block_size: usize,
+    /// Blocks the tightest stage's pool holds under the KV budget —
+    /// what the scheduler admits against.
+    pub pool_blocks: usize,
+}
+
 /// Compiled-shape contract the driver validates admissions against.
 #[derive(Debug, Clone)]
 pub struct DriverCfg {
@@ -100,6 +112,11 @@ pub struct DriverCfg {
     pub max_seq: usize,
     /// Per-stage KV budget, bytes.
     pub kv_budget_bytes: u64,
+    /// Paged KV layout (None = padded): continuous-batching admission
+    /// gates on live block occupancy instead of worst-case rows, and
+    /// pool exhaustion preempts via swap-out/recompute instead of
+    /// refusing up front.
+    pub paged: Option<PagedCfg>,
     /// Padded KV bytes one sequence row costs on the *heaviest* stage —
     /// continuous-batching admission control budgets against this (0 =
     /// unknown, check skipped).
@@ -143,6 +160,10 @@ pub struct DriveStats {
     /// bounded SLO policy this can never exceed the sum of the class
     /// bounds (the bench gates on it).
     pub peak_queue_depth: usize,
+    /// Highest number of sequences simultaneously holding KV rows (slot
+    /// mode) — the concurrency the KV budget actually supported, which
+    /// is the paged layout's headline win over padded admission.
+    pub peak_live_rows: usize,
 }
 
 /// Progress of one still-unfinished group, as the hooks see it.
@@ -837,19 +858,40 @@ pub fn drive_slots(
         s
     };
     sched.set_policy(queue.policy().clone());
-    // Reject up front a slot configuration whose fully-admitted state
-    // could not fit the per-stage KV budget — failing here beats a stage
-    // thread dying on an over-budget insert_row mid-generation.  (Demand
-    // paging / deferred admission under budget pressure is a ROADMAP
-    // follow-on.)
-    let worst = sched.worst_case_rows() as u64 * cfg.row_bytes_worst;
-    anyhow::ensure!(
-        cfg.row_bytes_worst == 0 || worst <= cfg.kv_budget_bytes,
-        "continuous-batching slots need up to {} KV bytes on the heaviest stage \
-         (budget {}): lower `runs`/`max_batch` or raise the KV budget",
-        worst,
-        cfg.kv_budget_bytes
-    );
+    if let Some(p) = &cfg.paged {
+        // Paged layout: admission gates on live block occupancy, pump
+        // by pump, and pool exhaustion preempts (swap-out / recompute)
+        // instead of refusing — the worst-case row bound below would
+        // defeat the whole point.  The only hard floor is that one
+        // fully-grown row plus a block of headroom must fit, or a lone
+        // sequence could wedge against its own footprint.
+        anyhow::ensure!(
+            p.pool_blocks > cfg.max_seq.div_ceil(p.block_size),
+            "paged KV pool ({} blocks x {} positions) cannot hold one max_seq={} \
+             row plus decode headroom: raise the KV budget",
+            p.pool_blocks,
+            p.block_size,
+            cfg.max_seq
+        );
+        sched.set_paged(p.block_size, p.pool_blocks)?;
+    } else {
+        // Padded layout: reject up front a slot configuration whose
+        // fully-admitted state could not fit the per-stage KV budget —
+        // failing here beats a stage thread dying on an over-budget
+        // insert_row mid-generation.
+        let worst = sched.worst_case_rows() as u64 * cfg.row_bytes_worst;
+        anyhow::ensure!(
+            cfg.row_bytes_worst == 0 || worst <= cfg.kv_budget_bytes,
+            "continuous-batching slots need up to {} KV bytes on the heaviest stage \
+             (budget {}): lower `runs`/`max_batch` or raise the KV budget",
+            worst,
+            cfg.kv_budget_bytes
+        );
+    }
+    // Swapped-out KV freight, keyed by request id.  Held here — not in
+    // the pipeline — so it survives a failover teardown; the matching
+    // SwapIn re-installs it into whatever pipeline is wired then.
+    let mut swapped: HashMap<u64, Vec<super::stage::KvEntry>> = HashMap::new();
 
     let mut ttft = Histogram::new();
     let mut iter_lat = Histogram::new();
@@ -1064,6 +1106,71 @@ pub fn drive_slots(
                         last_step_at.remove(&run);
                         send_control(wired, StageMsg::Free { group: run })?
                     }
+                    Action::SwapOut { run, slot, req } => {
+                        // Pool pressure: extract the victim row's live
+                        // blocks from every stage (compact freight over
+                        // the Export reply path) and hold them here
+                        // until the scheduler resumes the row.  The
+                        // collect blocks the pump, not the pipeline —
+                        // stages keep draining their FIFO inboxes and
+                        // the token channel is unbounded, so frames in
+                        // front of the swap-out land normally.
+                        cfg.trace
+                            .instant("kv_swap_out", || format!("run {run} slot {slot} req {req}"));
+                        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+                        send_control(
+                            wired,
+                            StageMsg::SwapOut {
+                                run,
+                                slot,
+                                reply: reply_tx,
+                            },
+                        )?;
+                        let mut entries = Vec::new();
+                        for _ in 0..wired.handles.len() {
+                            let ex = reply_rx
+                                .recv_timeout(Duration::from_secs_f64(dead_man_real_ms / 1e3))
+                                .map_err(|_| {
+                                    anyhow!(
+                                        "swap-out freight for request {req} lost \
+                                         (stage died mid-swap?)"
+                                    )
+                                })?;
+                            entries.extend(ex.entries);
+                        }
+                        let bytes: u64 =
+                            entries.iter().map(|e| e.k.bytes() + e.v.bytes()).sum();
+                        cfg.metrics.inc("kv_swaps_out", 1);
+                        cfg.metrics.inc("kv_swap_bytes_out", bytes);
+                        anyhow::ensure!(
+                            swapped.insert(req, entries).is_none(),
+                            "request {req} swapped out twice without a swap-in"
+                        );
+                    }
+                    Action::SwapIn {
+                        run,
+                        slot,
+                        run_batch,
+                        req,
+                        written,
+                    } => {
+                        let entries = swapped.remove(&req).with_context(|| {
+                            format!("swap-in for request {req} with no stored freight")
+                        })?;
+                        cfg.trace
+                            .instant("kv_swap_in", || format!("run {run} slot {slot} req {req}"));
+                        cfg.metrics.inc("kv_swaps_in", 1);
+                        send_control(
+                            wired,
+                            StageMsg::SwapIn {
+                                run,
+                                slot,
+                                run_batch,
+                                written,
+                                layers: entries.into_iter().map(|e| (e.layer, e.k, e.v)).collect(),
+                            },
+                        )?;
+                    }
                 }
             }
         }
@@ -1076,10 +1183,15 @@ pub fn drive_slots(
             last_queue_gauge = (depth, admitted);
             cfg.trace.counter("queue_depth", depth as f64);
             cfg.metrics.gauge("queue_depth", depth as f64);
-            cfg.metrics.gauge(
-                "kv_bytes_admitted",
-                (admitted as u64 * cfg.row_bytes_worst) as f64,
-            );
+            if cfg.paged.is_some() {
+                // block-granular truth beats the padded worst case
+                cfg.metrics.gauge("kv_blocks_used", sched.used_blocks() as f64);
+            } else {
+                cfg.metrics.gauge(
+                    "kv_bytes_admitted",
+                    (admitted as u64 * cfg.row_bytes_worst) as f64,
+                );
+            }
         }
         if expecting == 0 {
             if pending_barrier {
@@ -1234,6 +1346,7 @@ pub fn drive_slots(
     stats.shed = shed;
     stats.expired = expired;
     stats.peak_queue_depth = peak_queue_depth;
+    stats.peak_live_rows = sched.peak_live_rows();
     Ok((results, stats))
 }
 
@@ -1266,6 +1379,7 @@ fn finish_stats(
         shed: [0, 0],
         expired: [0, 0],
         peak_queue_depth: 0,
+        peak_live_rows: 0,
     }
 }
 

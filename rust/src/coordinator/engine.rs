@@ -27,7 +27,9 @@ use std::sync::mpsc::{Receiver, Sender};
 use super::admission::AdmissionQueue;
 use super::api::{GenRequest, GenResult, GroupRequest};
 use super::driver::{drive_groups, drive_slots, DriverCfg, NoHooks};
-use super::kvcache::{GroupCache, KvPool};
+use super::kvcache::{
+    GroupCache, KvLayout, KvPool, PagedPool, ELEM_BYTES_F32, PAGED_MAX_POOL_POSITIONS,
+};
 use super::scheduler::ContinuousConfig;
 use super::stage::{stage_decoders, NextHop, StageActor, StageMsg, TokenMsg};
 use crate::cluster::Cluster;
@@ -50,6 +52,10 @@ pub struct EngineConfig {
     pub compute_scale: Vec<f64>,
     /// KV budget per stage, bytes (generous default for the tiny model).
     pub kv_budget_bytes: u64,
+    /// KV cache layout — padded worst-case slabs (default) or the
+    /// block-granular paged pool.  Token streams are byte-identical
+    /// either way; what changes is how capacity is charged.
+    pub kv_layout: KvLayout,
 }
 
 impl Default for EngineConfig {
@@ -58,6 +64,7 @@ impl Default for EngineConfig {
             time_scale: 1.0,
             compute_scale: Vec::new(),
             kv_budget_bytes: 1 << 30,
+            kv_layout: KvLayout::default(),
         }
     }
 }
@@ -91,6 +98,11 @@ pub struct EngineStats {
     /// Highest arrived-not-yet-dispatched queue depth observed during the
     /// drive — bounded by the class bounds under the SLO policy.
     pub peak_queue_depth: usize,
+    /// Highest number of sequences simultaneously holding KV (prefilling
+    /// + active rows across runs; continuous serving only).  Under a tight
+    /// budget this is the concurrency the layout actually achieved —
+    /// paged serving's headline win over padded worst-case admission.
+    pub peak_live_rows: usize,
 }
 
 impl From<super::driver::DriveStats> for EngineStats {
@@ -106,6 +118,7 @@ impl From<super::driver::DriveStats> for EngineStats {
             shed: d.shed,
             expired: d.expired,
             peak_queue_depth: d.peak_queue_depth,
+            peak_live_rows: d.peak_live_rows,
         }
     }
 }
@@ -246,6 +259,7 @@ pub fn wire(
             n_model_layers,
             exec.clone(),
             cfg.kv_budget_bytes,
+            cfg.kv_layout,
             next,
             pre,
         )?;
@@ -279,16 +293,47 @@ pub fn driver_cfg(manifest: &Manifest, plan: &Plan, cfg: &EngineConfig) -> Drive
         .iter()
         .map(|s| {
             let n_local = stage_decoders(&(s.start..s.end), n_model_layers).len();
-            KvPool::group_bytes(n_local, 1, c.n_kv_heads, c.max_seq, c.head_dim())
+            KvPool::group_bytes(n_local, 1, c.n_kv_heads, c.max_seq, c.head_dim(), ELEM_BYTES_F32)
         })
         .max()
         .unwrap_or(0);
+    // Paged serving: every stage allocates the same *count* of blocks, so
+    // the schedulable pool is the tightest stage's — the one whose
+    // per-block bytes (∝ local layer count) divide the budget fewest
+    // times.  Clamped by PAGED_MAX_POOL_POSITIONS exactly as each stage
+    // clamps its own slab allocation, so the scheduler's view of the
+    // pool never exceeds what the stages actually built.
+    let paged = cfg.kv_layout.block_size().map(|block_size| {
+        let pool_blocks = plan
+            .stages
+            .iter()
+            .filter_map(|s| {
+                let n_local = stage_decoders(&(s.start..s.end), n_model_layers).len();
+                (n_local > 0).then(|| {
+                    let bb = PagedPool::block_bytes_for(
+                        n_local,
+                        c.n_kv_heads,
+                        block_size,
+                        c.head_dim(),
+                    );
+                    ((cfg.kv_budget_bytes / bb) as usize)
+                        .min(PAGED_MAX_POOL_POSITIONS / block_size)
+                })
+            })
+            .min()
+            .unwrap_or(0);
+        super::driver::PagedCfg {
+            block_size,
+            pool_blocks,
+        }
+    });
     DriverCfg {
         prompt_len: c.prefill_len,
         batch_sizes: manifest.batch_sizes.clone(),
         max_seq: c.max_seq,
         kv_budget_bytes: cfg.kv_budget_bytes,
         row_bytes_worst,
+        paged,
         trace: crate::obs::Tracer::off(),
         metrics: crate::obs::MetricsRegistry::off(),
     }

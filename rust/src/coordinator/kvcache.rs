@@ -36,6 +36,13 @@ pub struct GroupCache {
     /// fully live; row-granular caches toggle rows as sequences are
     /// admitted and retired.
     pub live: Vec<bool>,
+    /// Positions filled per row (0 for dead rows).  Exact for caches
+    /// reconstructed from a paged pool (export/checkpoint) — that is
+    /// what lets a paged stage re-chop a preloaded padded cache into
+    /// exactly the live blocks it held before the trip.  Padded-mode
+    /// caches track the prefill watermark only (decode steps do not
+    /// advance it); their consumers never read it.
+    pub written: Vec<usize>,
 }
 
 impl GroupCache {
@@ -111,15 +118,19 @@ impl KvPool {
     }
 
     /// Bytes one group needs on this stage: `layers × 2 × batch × kv_heads
-    /// × max_seq × head_dim × 4`.
+    /// × max_seq × head_dim × elem_bytes`.  The element size is a
+    /// parameter (4 for the fp32 sim wire) so the paged pool and any
+    /// future quantized cache share one accounting path instead of a
+    /// hardcoded fp32 assumption.
     pub fn group_bytes(
         n_layers: usize,
         batch: usize,
         kv_heads: usize,
         max_seq: usize,
         head_dim: usize,
+        elem_bytes: usize,
     ) -> u64 {
-        (n_layers * 2 * batch * kv_heads * max_seq * head_dim * 4) as u64
+        (n_layers * 2 * batch * kv_heads * max_seq * head_dim * elem_bytes) as u64
     }
 
     /// Whether a group of this size can be admitted right now.
@@ -158,12 +169,14 @@ impl KvPool {
     /// Continuous batching: install one prefilled sequence as row `row`
     /// of run `run`'s cache, allocating a zeroed `run_batch`-row cache on
     /// the first admission.  `layer_rows` is one `[1, …]` (k, v) pair per
-    /// local layer.  Only the admitted row is charged against the budget.
+    /// local layer, `written` the positions the prefill filled.  Only the
+    /// admitted row is charged against the budget.
     pub fn insert_row(
         &mut self,
         run: u64,
         row: usize,
         run_batch: usize,
+        written: usize,
         layer_rows: Vec<(TensorData, TensorData)>,
     ) -> anyhow::Result<()> {
         let row_bytes: u64 = layer_rows.iter().map(|(k, v)| k.bytes() + v.bytes()).sum();
@@ -183,6 +196,7 @@ impl KvPool {
             batch: run_batch,
             bytes: 0,
             live: vec![false; run_batch],
+            written: vec![0; run_batch],
         });
         anyhow::ensure!(
             cache.batch == run_batch,
@@ -201,6 +215,7 @@ impl KvPool {
             copy_row(dv, row, sv, 0);
         }
         cache.live[row] = true;
+        cache.written[row] = written;
         cache.bytes += row_bytes;
         self.used_bytes += row_bytes;
         self.peak_bytes = self.peak_bytes.max(self.used_bytes);
@@ -223,6 +238,7 @@ impl KvPool {
             zero_row(v, row);
         }
         cache.live[row] = false;
+        cache.written[row] = 0;
         cache.bytes = cache.bytes.saturating_sub(row_bytes);
         self.used_bytes = self.used_bytes.saturating_sub(row_bytes);
         Ok(row_bytes)
@@ -249,6 +265,7 @@ impl KvPool {
             .ok_or_else(|| anyhow::anyhow!("compact: run {run} has no cache"))?;
         let row_bytes = cache.row_bytes();
         let mut new_live = vec![false; new_batch];
+        let mut new_written = vec![0usize; new_batch];
         for &(from, to) in moves {
             anyhow::ensure!(
                 from < cache.batch && to < new_batch,
@@ -258,6 +275,7 @@ impl KvPool {
             anyhow::ensure!(cache.live[from], "compact: moving dead row {from}");
             anyhow::ensure!(!new_live[to], "compact: duplicate target row {to}");
             new_live[to] = true;
+            new_written[to] = cache.written[from];
         }
         let mut new_layers = Vec::with_capacity(cache.layers.len());
         for (k, v) in &cache.layers {
@@ -276,6 +294,7 @@ impl KvPool {
         cache.batch = new_batch;
         cache.bytes = new_bytes;
         cache.live = new_live;
+        cache.written = new_written;
         Ok(())
     }
 
@@ -321,6 +340,699 @@ impl KvPool {
     }
 }
 
+/// Element size of the fp32 sim wire — the one concrete element width
+/// the pure-Rust backend ships today.  Every accounting call site passes
+/// this instead of hardcoding `4`.
+pub const ELEM_BYTES_F32: usize = 4;
+
+/// Pre-allocation clamp on paged pools: slabs are zero-allocated up
+/// front, so a generous byte budget (the 1 GiB default) must not turn
+/// into a gigabyte of resident zeros per stage.  Capacity is capped at
+/// `PAGED_MAX_POOL_POSITIONS / block_size` blocks — the same clamp is
+/// applied by the engine when sizing the scheduler's pool view
+/// (`coordinator::engine::driver_cfg`) and by each stage when building
+/// its [`PagedPool`], so the two can never disagree.  65536 positions ≈
+/// a thousand max-length rows on the sim models — far past what slot
+/// admission can keep in flight.
+pub const PAGED_MAX_POOL_POSITIONS: usize = 1 << 16;
+
+/// Which KV cache layout an engine serves with.  Engine-global: every
+/// stage, the scheduler's occupancy mirror, and the freight accounting
+/// all key off the same choice, and the two layouts produce byte-identical
+/// tokens (`rust/tests/paged_kv.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KvLayout {
+    /// Padded per-row slabs `[batch, kv_heads, max_seq, head_dim]` —
+    /// capacity is charged at worst case up front.
+    #[default]
+    Padded,
+    /// Block-granular paged pool: rows allocate `block_size`-position
+    /// blocks on demand, capacity is charged at the live working set.
+    Paged {
+        block_size: usize,
+    },
+}
+
+impl KvLayout {
+    /// The paged block size, if paged.
+    pub fn block_size(&self) -> Option<usize> {
+        match self {
+            KvLayout::Padded => None,
+            KvLayout::Paged { block_size } => Some(*block_size),
+        }
+    }
+}
+
+/// Mutable f32 view of a cache tensor (copy-on-write via `Arc::make_mut`).
+fn slab_mut(t: &mut TensorData) -> anyhow::Result<&mut [f32]> {
+    match t {
+        TensorData::F32 { data, .. } => Ok(Arc::make_mut(data)),
+        _ => anyhow::bail!("KV slabs are f32"),
+    }
+}
+
+/// One sequence's block table: the ordered physical blocks holding its
+/// positions, plus the write watermark.
+#[derive(Debug, Clone)]
+struct PagedRow {
+    blocks: Vec<u32>,
+    written: usize,
+}
+
+#[derive(Debug)]
+struct PagedRun {
+    batch: usize,
+    rows: Vec<Option<PagedRow>>,
+}
+
+/// Block-granular paged KV pool (vLLM PagedAttention style).
+///
+/// One *block* spans [`block_size`](Self::block_size) consecutive token
+/// positions across **all** of a stage's local layers: per layer, the K
+/// and V slabs are `[capacity, kv_heads, block_size, head_dim]` tensors,
+/// and a row maps position `p` to slab row `blocks[p / block_size]`.
+/// Capacity is fixed at construction; rows allocate blocks on demand
+/// from a LIFO free list as their sequences extend, so pool occupancy
+/// tracks the *working set* (live blocks), not the `max_seq` padding the
+/// padded layout charges per row.
+///
+/// The sim decode kernel gathers K/V through the block table
+/// (`runtime::sim`, 14-input decode form), reading exactly the same f32
+/// values in exactly the same order as the padded slab — which is what
+/// keeps paged serving byte-identical to padded serving
+/// (`rust/tests/paged_kv.rs`).
+#[derive(Debug)]
+pub struct PagedPool {
+    block_size: usize,
+    kv_heads: usize,
+    head_dim: usize,
+    max_seq: usize,
+    capacity: usize,
+    free: Vec<u32>,
+    /// Per local layer: (k, v) slabs `[capacity, kv_heads, block_size,
+    /// head_dim]`.
+    slabs: Vec<(TensorData, TensorData)>,
+    runs: HashMap<u64, PagedRun>,
+    peak_blocks: usize,
+}
+
+impl PagedPool {
+    /// Bytes one block occupies across `n_layers` local layers (K + V).
+    pub fn block_bytes_for(
+        n_layers: usize,
+        kv_heads: usize,
+        block_size: usize,
+        head_dim: usize,
+    ) -> u64 {
+        KvPool::group_bytes(n_layers, 1, kv_heads, block_size, head_dim, ELEM_BYTES_F32)
+    }
+
+    /// A pool of `capacity` blocks over `n_layers` local layers.  The
+    /// slabs are allocated zeroed up front — pre-allocation is the
+    /// paper's own KV story, paging just changes the granularity.
+    pub fn new(
+        block_size: usize,
+        n_layers: usize,
+        kv_heads: usize,
+        head_dim: usize,
+        max_seq: usize,
+        capacity: usize,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(block_size > 0, "paged pool needs a nonzero block size");
+        anyhow::ensure!(capacity > 0, "paged pool needs a nonzero block capacity");
+        anyhow::ensure!(
+            u32::try_from(capacity).is_ok(),
+            "paged pool capacity {capacity} overflows block ids"
+        );
+        let dims = vec![
+            capacity as i64,
+            kv_heads as i64,
+            block_size as i64,
+            head_dim as i64,
+        ];
+        let len = capacity * kv_heads * block_size * head_dim;
+        let slabs = (0..n_layers)
+            .map(|_| {
+                (
+                    TensorData::f32(vec![0.0; len], dims.clone()),
+                    TensorData::f32(vec![0.0; len], dims.clone()),
+                )
+            })
+            .collect();
+        Ok(PagedPool {
+            block_size,
+            kv_heads,
+            head_dim,
+            max_seq,
+            capacity,
+            free: (0..capacity as u32).rev().collect(),
+            slabs,
+            runs: HashMap::new(),
+            peak_blocks: 0,
+        })
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Bytes one block occupies on this stage.
+    pub fn block_bytes(&self) -> u64 {
+        Self::block_bytes_for(self.slabs.len(), self.kv_heads, self.block_size, self.head_dim)
+    }
+
+    pub fn capacity_blocks(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Blocks currently held by rows (the complement of the free list).
+    pub fn occupied_blocks(&self) -> usize {
+        self.runs
+            .values()
+            .flat_map(|r| r.rows.iter().flatten())
+            .map(|row| row.blocks.len())
+            .sum()
+    }
+
+    /// Live bytes: occupied blocks × block bytes.
+    pub fn used_bytes(&self) -> u64 {
+        self.occupied_blocks() as u64 * self.block_bytes()
+    }
+
+    pub fn peak_blocks(&self) -> usize {
+        self.peak_blocks
+    }
+
+    /// Blocks a row holding `written` positions occupies.
+    pub fn blocks_for(&self, written: usize) -> usize {
+        written.div_ceil(self.block_size)
+    }
+
+    /// Positions filled by row `slot` of run `run` (None if not live).
+    pub fn row_written(&self, run: u64, slot: usize) -> Option<usize> {
+        self.runs
+            .get(&run)?
+            .rows
+            .get(slot)?
+            .as_ref()
+            .map(|r| r.written)
+    }
+
+    /// Row liveness + write watermarks of run `run`, or None if the run
+    /// holds no rows here.
+    pub fn run_occupancy(&self, run: u64) -> Option<(usize, Vec<bool>, Vec<usize>)> {
+        let r = self.runs.get(&run)?;
+        let live: Vec<bool> = r.rows.iter().map(|x| x.is_some()).collect();
+        let written: Vec<usize> = r
+            .rows
+            .iter()
+            .map(|x| x.as_ref().map(|row| row.written).unwrap_or(0))
+            .collect();
+        Some((r.batch, live, written))
+    }
+
+    /// Resident run ids (export walks the pool through this).
+    pub fn run_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.runs.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.runs.is_empty()
+    }
+
+    fn alloc_block(&mut self) -> anyhow::Result<u32> {
+        let blk = self
+            .free
+            .pop()
+            .ok_or_else(|| anyhow::anyhow!("paged pool dry: all {} blocks occupied", self.capacity))?;
+        self.peak_blocks = self.peak_blocks.max(self.capacity - self.free.len());
+        Ok(blk)
+    }
+
+    /// Zero block `blk` in every layer slab and return it to the free
+    /// list (hygiene: a reallocated block starts clean, exactly like the
+    /// padded pool's `evict_row`).
+    fn release_block(&mut self, blk: u32) -> anyhow::Result<()> {
+        let span = self.kv_heads * self.block_size * self.head_dim;
+        let off = blk as usize * span;
+        for (k, v) in self.slabs.iter_mut() {
+            slab_mut(k)?[off..off + span].fill(0.0);
+            slab_mut(v)?[off..off + span].fill(0.0);
+        }
+        self.free.push(blk);
+        Ok(())
+    }
+
+    /// Install one prefilled (or swapped-back-in) sequence as row `slot`
+    /// of run `run`, chopping the padded `[1, kv_heads, src_seq,
+    /// head_dim]` per-layer tensors into `ceil(written / block_size)`
+    /// blocks.  Returns the bytes the row now charges.
+    pub fn admit_row(
+        &mut self,
+        run: u64,
+        slot: usize,
+        run_batch: usize,
+        written: usize,
+        layer_rows: &[(TensorData, TensorData)],
+    ) -> anyhow::Result<u64> {
+        anyhow::ensure!(slot < run_batch, "row {slot} outside run batch {run_batch}");
+        anyhow::ensure!(
+            layer_rows.len() == self.slabs.len(),
+            "run {run}: {} layer rows for a {}-layer pool",
+            layer_rows.len(),
+            self.slabs.len()
+        );
+        anyhow::ensure!(
+            written >= 1 && written <= self.max_seq,
+            "run {run} row {slot}: written {written} outside 1..={}",
+            self.max_seq
+        );
+        let n_blocks = self.blocks_for(written);
+        anyhow::ensure!(
+            self.free.len() >= n_blocks,
+            "paged pool dry: admit needs {n_blocks} blocks, {} free of {}",
+            self.free.len(),
+            self.capacity_blocks()
+        );
+        {
+            let r = self.runs.entry(run).or_insert_with(|| PagedRun {
+                batch: run_batch,
+                rows: vec![None; run_batch],
+            });
+            anyhow::ensure!(
+                r.batch == run_batch,
+                "run {run} pool has batch {}, admit says {run_batch}",
+                r.batch
+            );
+            anyhow::ensure!(r.rows[slot].is_none(), "run {run} row {slot} already live");
+        }
+        let mut blocks = Vec::with_capacity(n_blocks);
+        for _ in 0..n_blocks {
+            blocks.push(self.alloc_block()?);
+        }
+        for (li, (sk, sv)) in layer_rows.iter().enumerate() {
+            self.chop_row(li, sk, sv, 0, written, &blocks)?;
+        }
+        let row = PagedRow { blocks, written };
+        self.runs.get_mut(&run).unwrap().rows[slot] = Some(row);
+        Ok(n_blocks as u64 * self.block_bytes())
+    }
+
+    /// Copy positions `0..written` of row `src_row` out of a padded
+    /// `[batch, kv_heads, src_seq, head_dim]` (k, v) pair into `blocks`
+    /// of layer `li`'s slabs.
+    fn chop_row(
+        &mut self,
+        li: usize,
+        src_k: &TensorData,
+        src_v: &TensorData,
+        src_row: usize,
+        written: usize,
+        blocks: &[u32],
+    ) -> anyhow::Result<()> {
+        let dims = src_k.dims().to_vec();
+        anyhow::ensure!(
+            dims.len() == 4
+                && src_row < dims[0] as usize
+                && dims[1] as usize == self.kv_heads
+                && written <= dims[2] as usize
+                && dims[3] as usize == self.head_dim,
+            "chop: source dims {dims:?} can't hold row {src_row} × {written} positions"
+        );
+        let src_seq = dims[2] as usize;
+        let (sk, sv) = (src_k.as_f32()?, src_v.as_f32()?);
+        let (hd, bs, kv) = (self.head_dim, self.block_size, self.kv_heads);
+        let (k, v) = &mut self.slabs[li];
+        let dk = slab_mut(k)?;
+        for p in 0..written {
+            let blk = blocks[p / bs] as usize;
+            for kh in 0..kv {
+                let s = ((src_row * kv + kh) * src_seq + p) * hd;
+                let d = ((blk * kv + kh) * bs + p % bs) * hd;
+                dk[d..d + hd].copy_from_slice(&sk[s..s + hd]);
+            }
+        }
+        let dv = slab_mut(v)?;
+        for p in 0..written {
+            let blk = blocks[p / bs] as usize;
+            for kh in 0..kv {
+                let s = ((src_row * kv + kh) * src_seq + p) * hd;
+                let d = ((blk * kv + kh) * bs + p % bs) * hd;
+                dv[d..d + hd].copy_from_slice(&sv[s..s + hd]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Install a padded [`GroupCache`] wholesale (group prefill, stage
+    /// preload at migration): every live row is chopped at its own
+    /// watermark.  Returns the bytes charged.
+    pub fn admit_cache(&mut self, run: u64, cache: &GroupCache) -> anyhow::Result<u64> {
+        anyhow::ensure!(
+            cache.layers.len() == self.slabs.len(),
+            "run {run}: {} cache layers for a {}-layer pool",
+            cache.layers.len(),
+            self.slabs.len()
+        );
+        anyhow::ensure!(
+            cache.live.len() == cache.batch && cache.written.len() == cache.batch,
+            "run {run}: liveness/watermark vectors don't match batch {}",
+            cache.batch
+        );
+        anyhow::ensure!(!self.runs.contains_key(&run), "run {run} already resident");
+        let mut need = 0usize;
+        for b in 0..cache.batch {
+            if cache.live[b] {
+                anyhow::ensure!(
+                    cache.written[b] >= 1 && cache.written[b] <= self.max_seq,
+                    "run {run} row {b}: watermark {} outside 1..={}",
+                    cache.written[b],
+                    self.max_seq
+                );
+                need += self.blocks_for(cache.written[b]);
+            }
+        }
+        anyhow::ensure!(
+            self.free.len() >= need,
+            "paged pool dry: run {run} needs {need} blocks, {} free of {}",
+            self.free.len(),
+            self.capacity
+        );
+        let mut rows: Vec<Option<PagedRow>> = vec![None; cache.batch];
+        for b in 0..cache.batch {
+            if !cache.live[b] {
+                continue;
+            }
+            let written = cache.written[b];
+            let n_blocks = self.blocks_for(written);
+            let mut blocks = Vec::with_capacity(n_blocks);
+            for _ in 0..n_blocks {
+                blocks.push(self.alloc_block()?);
+            }
+            for (li, (sk, sv)) in cache.layers.iter().enumerate() {
+                self.chop_row(li, sk, sv, b, written, &blocks)?;
+            }
+            rows[b] = Some(PagedRow { blocks, written });
+        }
+        self.runs.insert(
+            run,
+            PagedRun {
+                batch: cache.batch,
+                rows,
+            },
+        );
+        Ok(need as u64 * self.block_bytes())
+    }
+
+    /// Extend every stepping row's block table to cover its write
+    /// position — called once per decode iteration, *before* the layer
+    /// loop, so one block allocation serves all layers.  `pos[i] < 0`
+    /// marks a dead row; replay rewrites (`pos < written`) are
+    /// idempotent and allocate nothing.
+    pub fn prepare_step(&mut self, run: u64, pos: &[i32]) -> anyhow::Result<()> {
+        for (slot, &p) in pos.iter().enumerate() {
+            if p < 0 {
+                continue;
+            }
+            let p = p as usize;
+            anyhow::ensure!(p < self.max_seq, "run {run} row {slot}: pos {p} >= max_seq");
+            let (needs_block, stale) = {
+                let r = self
+                    .runs
+                    .get(&run)
+                    .ok_or_else(|| anyhow::anyhow!("step: run {run} has no pool rows"))?;
+                let row = r.rows[slot]
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("step: run {run} row {slot} not live"))?;
+                anyhow::ensure!(
+                    p <= row.written,
+                    "run {run} row {slot}: write at {p} skips past watermark {}",
+                    row.written
+                );
+                (p == row.written && p % self.block_size == 0, p < row.written)
+            };
+            if stale {
+                continue; // replay rewrite into an existing block
+            }
+            let blk = if needs_block { Some(self.alloc_block()?) } else { None };
+            let row = self.runs.get_mut(&run).unwrap().rows[slot].as_mut().unwrap();
+            if let Some(b) = blk {
+                row.blocks.push(b);
+            }
+            row.written = p + 1;
+        }
+        Ok(())
+    }
+
+    /// Write one row's freshly computed K/V head vectors at position `p`
+    /// of layer `layer` (the block must already exist — see
+    /// [`Self::prepare_step`]).  `k_new`/`v_new` are `kv_heads × head_dim`
+    /// slices of the kernel's `[batch, kv_heads, head_dim]` outputs.
+    pub fn write_pos(
+        &mut self,
+        layer: usize,
+        run: u64,
+        slot: usize,
+        p: usize,
+        k_new: &[f32],
+        v_new: &[f32],
+    ) -> anyhow::Result<()> {
+        let blk = {
+            let r = self
+                .runs
+                .get(&run)
+                .ok_or_else(|| anyhow::anyhow!("write: run {run} has no pool rows"))?;
+            let row = r.rows[slot]
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("write: run {run} row {slot} not live"))?;
+            anyhow::ensure!(p < row.written, "write at {p} beyond watermark {}", row.written);
+            row.blocks[p / self.block_size] as usize
+        };
+        let (k, v) = &mut self.slabs[layer];
+        let dk = slab_mut(k)?;
+        for kh in 0..self.kv_heads {
+            let d = ((blk * self.kv_heads + kh) * self.block_size + (p % self.block_size))
+                * self.head_dim;
+            dk[d..d + self.head_dim]
+                .copy_from_slice(&k_new[kh * self.head_dim..(kh + 1) * self.head_dim]);
+        }
+        let dv = slab_mut(v)?;
+        for kh in 0..self.kv_heads {
+            let d = ((blk * self.kv_heads + kh) * self.block_size + (p % self.block_size))
+                * self.head_dim;
+            dv[d..d + self.head_dim]
+                .copy_from_slice(&v_new[kh * self.head_dim..(kh + 1) * self.head_dim]);
+        }
+        Ok(())
+    }
+
+    /// The (k, v) slab pair of layer `layer` (cheap `Arc` clones for a
+    /// kernel call).
+    pub fn layer_slabs(&self, layer: usize) -> (TensorData, TensorData) {
+        let (k, v) = &self.slabs[layer];
+        (k.clone(), v.clone())
+    }
+
+    /// Block table of run `run` as an i32 `[batch, ceil(max_seq /
+    /// block_size)]` tensor, `-1`-filled past each row's blocks (and for
+    /// dead rows — the kernel never dereferences them).
+    pub fn table(&self, run: u64) -> anyhow::Result<TensorData> {
+        let r = self
+            .runs
+            .get(&run)
+            .ok_or_else(|| anyhow::anyhow!("table: run {run} has no pool rows"))?;
+        let width = self.max_seq.div_ceil(self.block_size);
+        let mut t = vec![-1i32; r.batch * width];
+        for (slot, row) in r.rows.iter().enumerate() {
+            if let Some(row) = row {
+                for (bi, &blk) in row.blocks.iter().enumerate() {
+                    t[slot * width + bi] = blk as i32;
+                }
+            }
+        }
+        Ok(TensorData::i32(t, vec![r.batch as i64, width as i64]))
+    }
+
+    /// Retire row `slot` of run `run`: zero + free its blocks.  Returns
+    /// the freed bytes.
+    pub fn evict_row(&mut self, run: u64, slot: usize) -> anyhow::Result<u64> {
+        let row = {
+            let r = self
+                .runs
+                .get_mut(&run)
+                .ok_or_else(|| anyhow::anyhow!("evict: run {run} has no pool rows"))?;
+            anyhow::ensure!(slot < r.batch, "evict: row {slot} outside batch {}", r.batch);
+            r.rows[slot]
+                .take()
+                .ok_or_else(|| anyhow::anyhow!("evict: run {run} row {slot} not live"))?
+        };
+        let freed = row.blocks.len() as u64 * self.block_bytes();
+        for blk in row.blocks {
+            self.release_block(blk)?;
+        }
+        Ok(freed)
+    }
+
+    /// Recompose run `run` at `new_batch` rows, moving `from → to` for
+    /// each pair.  A pure block-table remap — **no KV bytes move**, which
+    /// is the paged layout's win over the padded `compact`'s full-tensor
+    /// rebuild.  Live rows left unnamed are released, matching the padded
+    /// semantics failover leans on.
+    pub fn compact(
+        &mut self,
+        run: u64,
+        new_batch: usize,
+        moves: &[(usize, usize)],
+    ) -> anyhow::Result<()> {
+        let mut new_rows: Vec<Option<PagedRow>> = vec![None; new_batch];
+        let dropped: Vec<PagedRow> = {
+            let r = self
+                .runs
+                .get_mut(&run)
+                .ok_or_else(|| anyhow::anyhow!("compact: run {run} has no pool rows"))?;
+            for &(from, to) in moves {
+                anyhow::ensure!(
+                    from < r.batch && to < new_batch,
+                    "compact: move {from}→{to} outside {}→{new_batch}",
+                    r.batch
+                );
+                anyhow::ensure!(r.rows[from].is_some(), "compact: moving dead row {from}");
+                anyhow::ensure!(new_rows[to].is_none(), "compact: duplicate target row {to}");
+                new_rows[to] = r.rows[from].take();
+            }
+            let dropped = r.rows.iter_mut().filter_map(|x| x.take()).collect();
+            r.rows = new_rows;
+            r.batch = new_batch;
+            dropped
+        };
+        for row in dropped {
+            for blk in row.blocks {
+                self.release_block(blk)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Release every row of run `run` (the `Free` frame / run teardown).
+    pub fn remove_run(&mut self, run: u64) -> anyhow::Result<u64> {
+        let Some(r) = self.runs.remove(&run) else {
+            return Ok(0);
+        };
+        let mut freed = 0u64;
+        for row in r.rows.into_iter().flatten() {
+            freed += row.blocks.len() as u64 * self.block_bytes();
+            for blk in row.blocks {
+                self.release_block(blk)?;
+            }
+        }
+        Ok(freed)
+    }
+
+    /// Reconstruct run `run` as a padded [`GroupCache`] — byte-identical
+    /// to what a padded pool would hold (positions past each row's
+    /// watermark zeroed) — for the `Export` snapshot path.  `bytes` is
+    /// the run's **live-block** footprint, so checkpoint/migration
+    /// freight is charged for what actually moves, not the padding.
+    pub fn reconstruct_padded(&self, run: u64) -> anyhow::Result<GroupCache> {
+        let r = self
+            .runs
+            .get(&run)
+            .ok_or_else(|| anyhow::anyhow!("export: run {run} has no pool rows"))?;
+        let mut layers = Vec::with_capacity(self.slabs.len());
+        for (k, v) in &self.slabs {
+            let (sk, sv) = (k.as_f32()?, v.as_f32()?);
+            let dims = vec![
+                r.batch as i64,
+                self.kv_heads as i64,
+                self.max_seq as i64,
+                self.head_dim as i64,
+            ];
+            let len = r.batch * self.kv_heads * self.max_seq * self.head_dim;
+            let (mut dk, mut dv) = (vec![0.0f32; len], vec![0.0f32; len]);
+            for (slot, row) in r.rows.iter().enumerate() {
+                let Some(row) = row else { continue };
+                for p in 0..row.written {
+                    let blk = row.blocks[p / self.block_size] as usize;
+                    for kh in 0..self.kv_heads {
+                        let s = ((blk * self.kv_heads + kh) * self.block_size
+                            + (p % self.block_size))
+                            * self.head_dim;
+                        let d = ((slot * self.kv_heads + kh) * self.max_seq + p) * self.head_dim;
+                        dk[d..d + self.head_dim].copy_from_slice(&sk[s..s + self.head_dim]);
+                        dv[d..d + self.head_dim].copy_from_slice(&sv[s..s + self.head_dim]);
+                    }
+                }
+            }
+            layers.push((TensorData::f32(dk, dims.clone()), TensorData::f32(dv, dims)));
+        }
+        let live: Vec<bool> = r.rows.iter().map(|x| x.is_some()).collect();
+        let written: Vec<usize> = r
+            .rows
+            .iter()
+            .map(|x| x.as_ref().map(|row| row.written).unwrap_or(0))
+            .collect();
+        let blocks: u64 = r
+            .rows
+            .iter()
+            .flatten()
+            .map(|row| row.blocks.len() as u64)
+            .sum();
+        Ok(GroupCache {
+            layers,
+            batch: r.batch,
+            bytes: blocks * self.block_bytes(),
+            live,
+            written,
+        })
+    }
+
+    /// Extract row `slot` of run `run` as compact per-layer `[1,
+    /// kv_heads, blocks × block_size, head_dim]` tensors (the swap-out
+    /// freight: exactly the live blocks, no `max_seq` padding).  The row
+    /// stays resident — pair with [`Self::evict_row`] to complete the
+    /// swap-out.
+    pub fn extract_row(
+        &self,
+        run: u64,
+        slot: usize,
+    ) -> anyhow::Result<(usize, Vec<(TensorData, TensorData)>)> {
+        let r = self
+            .runs
+            .get(&run)
+            .ok_or_else(|| anyhow::anyhow!("extract: run {run} has no pool rows"))?;
+        let row = r.rows[slot]
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("extract: run {run} row {slot} not live"))?;
+        let seq = row.blocks.len() * self.block_size;
+        let dims = vec![1, self.kv_heads as i64, seq as i64, self.head_dim as i64];
+        let len = self.kv_heads * seq * self.head_dim;
+        let mut out = Vec::with_capacity(self.slabs.len());
+        for (k, v) in &self.slabs {
+            let (sk, sv) = (k.as_f32()?, v.as_f32()?);
+            let (mut dk, mut dv) = (vec![0.0f32; len], vec![0.0f32; len]);
+            for p in 0..row.written {
+                let blk = row.blocks[p / self.block_size] as usize;
+                for kh in 0..self.kv_heads {
+                    let s = ((blk * self.kv_heads + kh) * self.block_size
+                        + (p % self.block_size))
+                        * self.head_dim;
+                    let d = (kh * seq + p) * self.head_dim;
+                    dk[d..d + self.head_dim].copy_from_slice(&sk[s..s + self.head_dim]);
+                    dv[d..d + self.head_dim].copy_from_slice(&sv[s..s + self.head_dim]);
+                }
+            }
+            out.push((TensorData::f32(dk, dims.clone()), TensorData::f32(dv, dims.clone())));
+        }
+        Ok((row.written, out))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -331,6 +1043,7 @@ mod tests {
             batch: 1,
             bytes,
             live: vec![true],
+            written: vec![0],
         }
     }
 
@@ -368,6 +1081,7 @@ mod tests {
             batch: 4,
             bytes: 10,
             live: vec![true], // 1 flag for 4 rows
+            written: vec![0; 4],
         };
         assert!(p.insert(1, bad).is_err());
         assert_eq!(p.used_bytes(), 0);
@@ -390,7 +1104,19 @@ mod tests {
     fn group_bytes_formula() {
         // 4 layers, batch 8, 4 kv heads, 128 seq, 32 dim, f32:
         // 4*2*8*4*128*32*4 = 4 MiB
-        assert_eq!(KvPool::group_bytes(4, 8, 4, 128, 32), 4 * 1024 * 1024);
+        assert_eq!(KvPool::group_bytes(4, 8, 4, 128, 32, ELEM_BYTES_F32), 4 * 1024 * 1024);
+    }
+
+    /// Regression for the hardcoded `* 4` the formula used to bake in:
+    /// element size must scale the result, so a 2-byte (fp16) wire
+    /// charges exactly half the fp32 bytes and a 1-byte (int8) wire a
+    /// quarter.
+    #[test]
+    fn group_bytes_scales_with_element_size() {
+        let f32_bytes = KvPool::group_bytes(4, 8, 4, 128, 32, 4);
+        assert_eq!(KvPool::group_bytes(4, 8, 4, 128, 32, 2), f32_bytes / 2);
+        assert_eq!(KvPool::group_bytes(4, 8, 4, 128, 32, 1), f32_bytes / 4);
+        assert_eq!(ELEM_BYTES_F32, 4);
     }
 
     #[test]
@@ -398,10 +1124,10 @@ mod tests {
         let (kv, seq, hd) = (2, 4, 2);
         let row_bytes = (2 * 2 * kv * seq * hd * 4) as u64; // 2 layers × (k+v)
         let mut p = KvPool::new(10 * row_bytes);
-        p.insert_row(9, 0, 4, vec![row(kv, seq, hd, 1.0), row(kv, seq, hd, 2.0)])
+        p.insert_row(9, 0, 4, seq, vec![row(kv, seq, hd, 1.0), row(kv, seq, hd, 2.0)])
             .unwrap();
         assert_eq!(p.used_bytes(), row_bytes);
-        p.insert_row(9, 2, 4, vec![row(kv, seq, hd, 3.0), row(kv, seq, hd, 4.0)])
+        p.insert_row(9, 2, 4, seq, vec![row(kv, seq, hd, 3.0), row(kv, seq, hd, 4.0)])
             .unwrap();
         assert_eq!(p.used_bytes(), 2 * row_bytes);
         let c = p.get(9).unwrap();
@@ -416,7 +1142,7 @@ mod tests {
 
         // double-admit and dead-evict are rejected
         assert!(p
-            .insert_row(9, 0, 4, vec![row(kv, seq, hd, 9.0), row(kv, seq, hd, 9.0)])
+            .insert_row(9, 0, 4, seq, vec![row(kv, seq, hd, 9.0), row(kv, seq, hd, 9.0)])
             .is_err());
         assert!(p.evict_row(9, 1).is_err());
 
@@ -425,7 +1151,7 @@ mod tests {
         // evicted row zeroed; slot can be re-admitted
         let c = p.get(9).unwrap();
         assert!(c.layers[0].0.as_f32().unwrap()[..row_len].iter().all(|&x| x == 0.0));
-        p.insert_row(9, 0, 4, vec![row(kv, seq, hd, 5.0), row(kv, seq, hd, 5.0)])
+        p.insert_row(9, 0, 4, seq, vec![row(kv, seq, hd, 5.0), row(kv, seq, hd, 5.0)])
             .unwrap();
         assert_eq!(p.used_bytes(), 2 * row_bytes);
         p.evict_row(9, 0).unwrap();
@@ -441,8 +1167,8 @@ mod tests {
         let (kv, seq, hd) = (2, 4, 2);
         let row_len = kv * seq * hd;
         let mut p = KvPool::new(1 << 20);
-        p.insert_row(5, 1, 8, vec![row(kv, seq, hd, 1.0)]).unwrap();
-        p.insert_row(5, 6, 8, vec![row(kv, seq, hd, 2.0)]).unwrap();
+        p.insert_row(5, 1, 8, seq, vec![row(kv, seq, hd, 1.0)]).unwrap();
+        p.insert_row(5, 6, 8, seq, vec![row(kv, seq, hd, 2.0)]).unwrap();
         let row_bytes = p.get(5).unwrap().row_bytes();
         assert_eq!(p.used_bytes(), 2 * row_bytes);
         p.compact(5, 2, &[(1, 0), (6, 1)]).unwrap();
@@ -458,5 +1184,279 @@ mod tests {
         assert_eq!(p.used_bytes(), row_bytes);
         // duplicate targets are rejected
         assert!(p.compact(5, 1, &[(0, 0), (0, 0)]).is_err());
+    }
+
+    // ---- paged pool ----
+
+    /// A `[1, kv, seq, hd]` row pair whose element at (kh, p, d) encodes
+    /// its own coordinates — catches any index shuffle in the chop /
+    /// gather / reconstruct paths.
+    fn coded_row(kv: usize, seq: usize, hd: usize, tag: f32) -> (TensorData, TensorData) {
+        let dims = vec![1, kv as i64, seq as i64, hd as i64];
+        let mut k = vec![0.0f32; kv * seq * hd];
+        for kh in 0..kv {
+            for p in 0..seq {
+                for d in 0..hd {
+                    k[(kh * seq + p) * hd + d] = tag + (kh * 1000 + p * 10 + d) as f32;
+                }
+            }
+        }
+        let v: Vec<f32> = k.iter().map(|x| -x).collect();
+        (TensorData::f32(k, dims.clone()), TensorData::f32(v, dims))
+    }
+
+    #[test]
+    fn paged_admit_roundtrips_through_padded_reconstruction() {
+        let (bs, kv, hd, ms) = (4usize, 2usize, 3usize, 16usize);
+        let mut p = PagedPool::new(bs, 2, kv, hd, ms, 8).unwrap();
+        let written = 6; // 2 blocks: one full, one half
+        let rows = vec![coded_row(kv, ms, hd, 100.0), coded_row(kv, ms, hd, 5000.0)];
+        let charged = p.admit_row(7, 1, 4, written, &rows).unwrap();
+        assert_eq!(charged, 2 * p.block_bytes());
+        assert_eq!(p.occupied_blocks(), 2);
+        assert_eq!(p.used_bytes(), 2 * p.block_bytes());
+
+        let c = p.reconstruct_padded(7).unwrap();
+        assert_eq!(c.batch, 4);
+        assert_eq!(c.live, vec![false, true, false, false]);
+        assert_eq!(c.written, vec![0, written, 0, 0]);
+        assert_eq!(c.bytes, 2 * p.block_bytes());
+        for (li, (src_k, _)) in rows.iter().enumerate() {
+            let (sk, rk) = (src_k.as_f32().unwrap(), c.layers[li].0.as_f32().unwrap());
+            for kh in 0..kv {
+                for pos in 0..ms {
+                    for d in 0..hd {
+                        let got = rk[((kv + kh) * ms + pos) * hd + d]; // row 1
+                        let want = if pos < written { sk[(kh * ms + pos) * hd + d] } else { 0.0 };
+                        assert_eq!(got, want, "layer {li} kh {kh} pos {pos} d {d}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paged_step_allocates_only_on_block_boundaries() {
+        let (bs, kv, hd, ms) = (4usize, 1usize, 2usize, 16usize);
+        let mut p = PagedPool::new(bs, 1, kv, hd, ms, 4).unwrap();
+        p.admit_row(1, 0, 1, 3, &[row(kv, ms, hd, 1.0)]).unwrap();
+        assert_eq!(p.occupied_blocks(), 1);
+        // pos 3 fits the half-full block
+        p.prepare_step(1, &[3]).unwrap();
+        assert_eq!(p.occupied_blocks(), 1);
+        assert_eq!(p.row_written(1, 0), Some(4));
+        // pos 4 crosses a boundary → new block
+        p.prepare_step(1, &[4]).unwrap();
+        assert_eq!(p.occupied_blocks(), 2);
+        p.write_pos(0, 1, 0, 4, &[7.0, 8.0], &[-7.0, -8.0]).unwrap();
+        // replay rewrite at an old position allocates nothing
+        p.prepare_step(1, &[2]).unwrap();
+        assert_eq!(p.occupied_blocks(), 2);
+        assert_eq!(p.row_written(1, 0), Some(5));
+        // skipping past the watermark is rejected
+        assert!(p.prepare_step(1, &[9]).is_err());
+        // dead rows are ignored
+        p.prepare_step(1, &[-1]).unwrap();
+
+        let c = p.reconstruct_padded(1).unwrap();
+        let k = c.layers[0].0.as_f32().unwrap();
+        assert_eq!(&k[4 * hd..5 * hd], &[7.0, 8.0]);
+        assert!(k[..3 * hd].iter().all(|&x| x == 1.0));
+        assert!(k[5 * hd..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn paged_compact_remaps_tables_without_moving_bytes() {
+        let (bs, kv, hd, ms) = (4usize, 1usize, 2usize, 8usize);
+        let mut p = PagedPool::new(bs, 1, kv, hd, ms, 6).unwrap();
+        p.admit_row(3, 1, 4, 5, &[row(kv, ms, hd, 1.0)]).unwrap();
+        p.admit_row(3, 3, 4, 2, &[row(kv, ms, hd, 2.0)]).unwrap();
+        assert_eq!(p.occupied_blocks(), 3);
+        p.compact(3, 2, &[(1, 0), (3, 1)]).unwrap();
+        assert_eq!(p.occupied_blocks(), 3); // nothing freed, nothing copied
+        let (batch, live, written) = p.run_occupancy(3).unwrap();
+        assert_eq!((batch, live, written), (2, vec![true, true], vec![5, 2]));
+        let c = p.reconstruct_padded(3).unwrap();
+        let k = c.layers[0].0.as_f32().unwrap();
+        assert!(k[..5 * hd].iter().all(|&x| x == 1.0)); // row 0 = old row 1
+        let r1 = &k[ms * hd..];
+        assert!(r1[..2 * hd].iter().all(|&x| x == 2.0)); // row 1 = old row 3
+        // unnamed live rows are released by compact
+        p.compact(3, 1, &[(0, 0)]).unwrap();
+        assert_eq!(p.occupied_blocks(), 2);
+        assert_eq!(p.free_blocks(), 4);
+    }
+
+    #[test]
+    fn paged_extract_row_carries_exactly_the_live_blocks() {
+        let (bs, kv, hd, ms) = (4usize, 2usize, 2usize, 16usize);
+        let mut p = PagedPool::new(bs, 1, kv, hd, ms, 8).unwrap();
+        let src = coded_row(kv, ms, hd, 0.0);
+        p.admit_row(2, 0, 2, 6, &[src.clone()]).unwrap();
+        let (written, freight) = p.extract_row(2, 0).unwrap();
+        assert_eq!(written, 6);
+        // freight is 2 blocks = 8 positions, not max_seq = 16
+        assert_eq!(freight[0].0.dims(), &[1, kv as i64, 8, hd as i64]);
+        // swap back in to a fresh pool: byte-identical reconstruction
+        let mut p2 = PagedPool::new(bs, 1, kv, hd, ms, 8).unwrap();
+        p2.admit_row(2, 0, 2, written, &freight).unwrap();
+        let (a, b) = (p.reconstruct_padded(2).unwrap(), p2.reconstruct_padded(2).unwrap());
+        assert_eq!(a.layers[0].0.as_f32().unwrap(), b.layers[0].0.as_f32().unwrap());
+        assert_eq!(a.layers[0].1.as_f32().unwrap(), b.layers[0].1.as_f32().unwrap());
+    }
+
+    #[test]
+    fn paged_admission_fails_closed_when_dry() {
+        let (bs, kv, hd, ms) = (4usize, 1usize, 2usize, 16usize);
+        let mut p = PagedPool::new(bs, 1, kv, hd, ms, 2).unwrap();
+        p.admit_row(1, 0, 2, 8, &[row(kv, ms, hd, 1.0)]).unwrap();
+        assert_eq!(p.free_blocks(), 0);
+        // admit with zero free blocks: rejected, state untouched
+        assert!(p.admit_row(1, 1, 2, 1, &[row(kv, ms, hd, 2.0)]).is_err());
+        assert_eq!(p.occupied_blocks(), 2);
+        // step onto a boundary with zero free blocks: rejected
+        assert!(p.prepare_step(1, &[8]).is_err());
+        assert_eq!(p.row_written(1, 0), Some(8));
+        // eviction recovers the blocks and they are clean on reuse
+        p.evict_row(1, 0).unwrap();
+        assert_eq!(p.free_blocks(), 2);
+        p.admit_row(1, 0, 2, 1, &[row(kv, ms, hd, 3.0)]).unwrap();
+        let c = p.reconstruct_padded(1).unwrap();
+        let k = c.layers[0].0.as_f32().unwrap();
+        assert!(k[hd..ms * hd].iter().all(|&x| x == 0.0));
+    }
+
+    /// Block-pool invariants under randomized admit/append/evict/compact
+    /// sequences (hand-rolled property test — no proptest crate in the
+    /// vendored set).  After every operation:
+    ///   1. no block id is ever held by two rows or by a row and the
+    ///      free list (never double-allocate),
+    ///   2. free-list + occupied blocks sum to pool capacity,
+    ///   3. `used_bytes` equals live blocks × block bytes.
+    #[test]
+    fn paged_pool_invariants_under_random_ops() {
+        let (bs, kv, hd, ms) = (4usize, 2usize, 2usize, 32usize);
+        for seed in 0..20u64 {
+            let mut rng = crate::util::Rng::new(0xB10C + seed);
+            let capacity = 4 + rng.next_below(28) as usize;
+            let mut p = PagedPool::new(bs, 2, kv, hd, ms, capacity).unwrap();
+            // mirror: run → rows → written (None = dead)
+            let mut mirror: HashMap<u64, Vec<Option<usize>>> = HashMap::new();
+            let check = |p: &PagedPool, mirror: &HashMap<u64, Vec<Option<usize>>>| {
+                let mut seen: Vec<u32> = p
+                    .runs
+                    .values()
+                    .flat_map(|r| r.rows.iter().flatten())
+                    .flat_map(|row| row.blocks.iter().copied())
+                    .chain(p.free.iter().copied())
+                    .collect();
+                seen.sort_unstable();
+                let all: Vec<u32> = (0..capacity as u32).collect();
+                assert_eq!(seen, all, "seed {seed}: block ids not a permutation of the pool");
+                assert_eq!(
+                    p.free_blocks() + p.occupied_blocks(),
+                    capacity,
+                    "seed {seed}: free + occupied != capacity"
+                );
+                assert_eq!(
+                    p.used_bytes(),
+                    p.occupied_blocks() as u64 * p.block_bytes(),
+                    "seed {seed}: used_bytes drifted from live blocks"
+                );
+                let expect_occ: usize = mirror
+                    .values()
+                    .flat_map(|rows| rows.iter().flatten())
+                    .map(|w| w.div_ceil(bs))
+                    .sum();
+                assert_eq!(p.occupied_blocks(), expect_occ, "seed {seed}: mirror drift");
+            };
+            for _ in 0..300 {
+                let run = 1 + rng.next_below(3);
+                match rng.next_below(10) {
+                    // admit into a free slot of a batch-4 run
+                    0..=3 => {
+                        let rows = mirror.entry(run).or_insert_with(|| vec![None; 4]);
+                        let slot = rng.next_below(4) as usize;
+                        if rows[slot].is_none() {
+                            let written = 1 + rng.next_below(ms as u64 - 1) as usize;
+                            let need = written.div_ceil(bs);
+                            let lr =
+                                vec![row(kv, ms, hd, 1.0), row(kv, ms, hd, 2.0)];
+                            let free_before = p.free_blocks();
+                            let res = p.admit_row(run, slot, 4, written, &lr);
+                            if need <= free_before {
+                                res.unwrap_or_else(|e| {
+                                    panic!("seed {seed}: admit failed with room to spare: {e}")
+                                });
+                                rows[slot] = Some(written);
+                            } else {
+                                assert!(res.is_err(), "seed {seed}: admit succeeded past budget");
+                            }
+                        }
+                    }
+                    // append: step one live row at its watermark (or replay below it)
+                    4..=6 => {
+                        if let Some(rows) = mirror.get_mut(&run) {
+                            let slot = rng.next_below(4) as usize;
+                            if let Some(w) = rows[slot] {
+                                let replay = w > 1 && rng.next_below(4) == 0;
+                                let pos = if replay {
+                                    rng.next_below(w as u64) as usize
+                                } else {
+                                    w
+                                };
+                                if pos >= ms {
+                                    continue;
+                                }
+                                let mut pv = vec![-1i32; 4];
+                                pv[slot] = pos as i32;
+                                let needs = pos == w && pos % bs == 0;
+                                let res = p.prepare_step(run, &pv);
+                                if res.is_ok() {
+                                    rows[slot] = Some(w.max(pos + 1));
+                                } else {
+                                    assert!(
+                                        needs && p.free_blocks() == 0,
+                                        "seed {seed}: step failed with free blocks"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                    // evict one live row
+                    7..=8 => {
+                        if let Some(rows) = mirror.get_mut(&run) {
+                            let slot = rng.next_below(4) as usize;
+                            if rows[slot].is_some() {
+                                p.evict_row(run, slot).unwrap();
+                                rows[slot] = None;
+                            }
+                        }
+                    }
+                    // compact the run down to its live rows (or drop it)
+                    _ => {
+                        if let Some(rows) = mirror.get_mut(&run) {
+                            let live: Vec<usize> = (0..rows.len())
+                                .filter(|&i| rows[i].is_some())
+                                .collect();
+                            if live.is_empty() {
+                                p.remove_run(run).unwrap();
+                                mirror.remove(&run);
+                            } else {
+                                let moves: Vec<(usize, usize)> =
+                                    live.iter().enumerate().map(|(to, &from)| (from, to)).collect();
+                                p.compact(run, live.len().max(4), &moves).unwrap();
+                                let mut nr = vec![None; live.len().max(4)];
+                                for (to, &from) in live.iter().enumerate() {
+                                    nr[to] = rows[from];
+                                }
+                                *rows = nr;
+                            }
+                        }
+                    }
+                }
+                check(&p, &mirror);
+            }
+        }
     }
 }

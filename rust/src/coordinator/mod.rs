@@ -50,6 +50,6 @@ pub use driver::{
     DriveHooks, DriveStats, DriveView, DriverCfg, GroupProgress, NoHooks, StallGroup, StallView,
 };
 pub use engine::{Engine, EngineConfig, EngineStats};
-pub use kvcache::{GroupCache, KvPool};
-pub use scheduler::{ContinuousConfig, RowSnap, RunSnap, SlotScheduler};
+pub use kvcache::{GroupCache, KvLayout, KvPool, PagedPool, ELEM_BYTES_F32};
+pub use scheduler::{ContinuousConfig, PreemptMode, RowSnap, RunSnap, SlotScheduler};
 pub use stage::{KvEntry, StageExport};

@@ -18,7 +18,9 @@
 use anyhow::{anyhow, Context, Result};
 use std::sync::mpsc::Sender;
 
-use super::kvcache::{GroupCache, KvPool};
+use super::kvcache::{
+    GroupCache, KvLayout, KvPool, PagedPool, ELEM_BYTES_F32, PAGED_MAX_POOL_POSITIONS,
+};
 use crate::cluster::DeviceLiveness;
 use crate::metrics::ComputeObs;
 use crate::netsim::ShapedSender;
@@ -106,6 +108,28 @@ pub enum StageMsg {
     /// what lets continuous-batching failover restore rows that were
     /// still prefilling when the checkpoint was taken.
     Export { reply: Sender<StageExport> },
+    /// Pressure preemption (paged pools only): extract row `slot` of run
+    /// `run` as compact live-block freight to `reply`, free its blocks,
+    /// and forward — every stage answers once, like [`StageMsg::Export`].
+    /// FIFO ordering makes the extraction consistent: a `Step` sent
+    /// before the swap-out has fully landed on every stage the frame
+    /// passes.
+    SwapOut {
+        run: u64,
+        slot: usize,
+        reply: Sender<StageExport>,
+    },
+    /// Re-install a previously swapped-out row as row `slot` of run
+    /// `run`.  `layers` is keyed by **global** decoder index; each stage
+    /// installs the layers in its own decoder range and forwards only
+    /// the remainder, so the re-entry freight drains as it travels.
+    SwapIn {
+        run: u64,
+        slot: usize,
+        run_batch: usize,
+        written: usize,
+        layers: Vec<(usize, TensorData, TensorData)>,
+    },
     Shutdown,
 }
 
@@ -124,6 +148,33 @@ pub struct KvEntry {
     /// occupancy (and per-live-row byte accounting) intact.  Group caches
     /// are fully live.
     pub live: Vec<bool>,
+    /// Positions actually written per row.  Exact when the exporting
+    /// stage serves paged (the pool tracks every write); in padded mode
+    /// it is the prefill watermark only and is not consumed.
+    pub written: Vec<usize>,
+}
+
+impl KvEntry {
+    /// Bytes this entry actually moves as checkpoint / migration /
+    /// swap freight.  Paged serving (`block_size` given) charges the
+    /// live blocks of live rows; padded serving charges the full padded
+    /// tensors, exactly as before.
+    pub fn freight_bytes(&self, block_size: Option<usize>) -> u64 {
+        match block_size {
+            None => self.k.bytes() + self.v.bytes(),
+            Some(bs) => {
+                let dims = self.k.dims();
+                // [batch, kv_heads, seq, head_dim] → bytes per position
+                let pos_bytes = (dims[1] * dims[3]) as u64 * ELEM_BYTES_F32 as u64;
+                self.live
+                    .iter()
+                    .zip(&self.written)
+                    .filter(|(l, _)| **l)
+                    .map(|(_, w)| (w.div_ceil(bs) * bs) as u64 * pos_bytes * 2)
+                    .sum()
+            }
+        }
+    }
 }
 
 /// A stage's KV snapshot, produced in response to [`StageMsg::Export`].
@@ -154,10 +205,22 @@ impl StageMsg {
                 payload.wire_bytes()
             }
             StageMsg::Step { payload, pos, .. } => payload.wire_bytes() + pos.len() as u64 * 4,
+            // Swap-in carries the row's live-block KV back up the
+            // pipeline: the freight is the tensors themselves (compact,
+            // no max_seq padding), shrinking as stages strip their
+            // layers.
+            StageMsg::SwapIn { layers, .. } => {
+                CONTROL_FRAME_BYTES
+                    + layers
+                        .iter()
+                        .map(|(_, k, v)| k.bytes() + v.bytes())
+                        .sum::<u64>()
+            }
             StageMsg::Evict { .. }
             | StageMsg::Compact { .. }
             | StageMsg::Free { .. }
             | StageMsg::Export { .. }
+            | StageMsg::SwapOut { .. }
             | StageMsg::Shutdown => CONTROL_FRAME_BYTES,
         }
     }
@@ -225,6 +288,10 @@ pub struct StageActor {
     pub has_head: bool,
     pub exec: ExecServiceHandle,
     pub kv: KvPool,
+    /// Block-granular pool when serving paged (and this stage hosts
+    /// decoder layers); `None` means the padded [`KvPool`] above is
+    /// authoritative.
+    pub paged: Option<PagedPool>,
     pub next: NextHop,
     /// Extra simulated compute slowdown (1.0 = run at real CPU speed).
     pub compute_scale: f64,
@@ -262,6 +329,7 @@ impl StageActor {
         n_model_layers: usize,
         exec: ExecServiceHandle,
         kv_budget_bytes: u64,
+        layout: KvLayout,
         next: NextHop,
         preload: Vec<(u64, GroupCache)>,
     ) -> Result<Self> {
@@ -301,9 +369,42 @@ impl StageActor {
         // Migration hands a stage its predecessors' KV state before any
         // message flows; admission rules are the same as at prefill.
         let mut kv = KvPool::new(kv_budget_bytes);
+        let mut paged = match layout {
+            KvLayout::Paged { block_size } if !layer_w.is_empty() => {
+                let bb = PagedPool::block_bytes_for(
+                    layer_w.len(),
+                    c.n_kv_heads,
+                    block_size,
+                    c.head_dim(),
+                );
+                // Same clamp as `engine::driver_cfg` applies to the
+                // scheduler's pool view — keep them in lockstep.
+                let capacity =
+                    ((kv_budget_bytes / bb) as usize).min(PAGED_MAX_POOL_POSITIONS / block_size);
+                anyhow::ensure!(
+                    capacity >= c.max_seq.div_ceil(block_size),
+                    "stage {stage_idx}: paged budget {kv_budget_bytes} holds {capacity} \
+                     blocks, fewer than one max_seq row"
+                );
+                Some(PagedPool::new(
+                    block_size,
+                    layer_w.len(),
+                    c.n_kv_heads,
+                    c.head_dim(),
+                    c.max_seq,
+                    capacity,
+                )?)
+            }
+            _ => None,
+        };
         for (gid, cache) in preload {
-            kv.insert(gid, cache)
-                .with_context(|| format!("preloading migrated KV for group {gid}"))?;
+            if let Some(pool) = paged.as_mut() {
+                pool.admit_cache(gid, &cache)
+                    .with_context(|| format!("preloading migrated KV for group {gid}"))?;
+            } else {
+                kv.insert(gid, cache)
+                    .with_context(|| format!("preloading migrated KV for group {gid}"))?;
+            }
         }
 
         Ok(StageActor {
@@ -314,6 +415,7 @@ impl StageActor {
             has_head,
             exec,
             kv,
+            paged,
             next,
             compute_scale: 1.0,
             obs: Vec::new(),
@@ -363,14 +465,22 @@ impl StageActor {
                     break;
                 }
                 StageMsg::Free { group } => {
-                    self.kv.remove(group);
+                    if let Some(pool) = self.paged.as_mut() {
+                        pool.remove_run(group)?;
+                    } else {
+                        self.kv.remove(group);
+                    }
                     self.forward_control(StageMsg::Free { group })?;
                 }
                 StageMsg::Evict { run, slot } => {
                     // Stages hosting no decoder layers never allocated a
                     // run cache; everyone else must have one.
                     if !self.layer_w.is_empty() {
-                        self.kv.evict_row(run, slot)?;
+                        if let Some(pool) = self.paged.as_mut() {
+                            pool.evict_row(run, slot)?;
+                        } else {
+                            self.kv.evict_row(run, slot)?;
+                        }
                     }
                     self.forward_control(StageMsg::Evict { run, slot })?;
                 }
@@ -380,12 +490,89 @@ impl StageActor {
                     moves,
                 } => {
                     if !self.layer_w.is_empty() {
-                        self.kv.compact(run, new_batch, &moves)?;
+                        if let Some(pool) = self.paged.as_mut() {
+                            pool.compact(run, new_batch, &moves)?;
+                        } else {
+                            self.kv.compact(run, new_batch, &moves)?;
+                        }
                     }
                     self.forward_control(StageMsg::Compact {
                         run,
                         new_batch,
                         moves,
+                    })?;
+                }
+                StageMsg::SwapOut { run, slot, reply } => {
+                    let entries = if self.layer_w.is_empty() {
+                        Vec::new()
+                    } else {
+                        let pool = self
+                            .paged
+                            .as_mut()
+                            .context("swap-out reached a padded stage")?;
+                        let (written, freight) = pool.extract_row(run, slot)?;
+                        pool.evict_row(run, slot)?;
+                        freight
+                            .into_iter()
+                            .enumerate()
+                            .map(|(li, (k, v))| KvEntry {
+                                group: run,
+                                layer: self.decoders.start + li,
+                                k,
+                                v,
+                                batch: 1,
+                                live: vec![true],
+                                written: vec![written],
+                            })
+                            .collect()
+                    };
+                    let _ = reply.send(StageExport {
+                        stage_idx: self.stage_idx,
+                        device: self.device_id,
+                        entries,
+                    });
+                    self.forward_control(StageMsg::SwapOut { run, slot, reply })?;
+                }
+                StageMsg::SwapIn {
+                    run,
+                    slot,
+                    run_batch,
+                    written,
+                    layers,
+                } => {
+                    let (mine, rest): (Vec<_>, Vec<_>) = layers
+                        .into_iter()
+                        .partition(|(gl, _, _)| self.decoders.contains(gl));
+                    if !self.layer_w.is_empty() {
+                        let pool = self
+                            .paged
+                            .as_mut()
+                            .context("swap-in reached a padded stage")?;
+                        let mut mine = mine;
+                        mine.sort_by_key(|e| e.0);
+                        anyhow::ensure!(
+                            mine.len() == self.layer_w.len(),
+                            "stage {} swap-in: {} layers for {} local",
+                            self.stage_idx,
+                            mine.len(),
+                            self.layer_w.len()
+                        );
+                        let rows: Vec<(TensorData, TensorData)> =
+                            mine.into_iter().map(|(_, k, v)| (k, v)).collect();
+                        pool.admit_row(run, slot, run_batch, written, &rows)
+                            .with_context(|| {
+                                format!(
+                                    "stage {} (device {}) swapping run {run} slot {slot} back in",
+                                    self.stage_idx, self.device_id
+                                )
+                            })?;
+                    }
+                    self.forward_control(StageMsg::SwapIn {
+                        run,
+                        slot,
+                        run_batch,
+                        written,
+                        layers: rest,
                     })?;
                 }
                 StageMsg::Admit {
@@ -400,14 +587,19 @@ impl StageActor {
                     let hidden = self.input_hidden(Phase::Prefill, 1, prompt_len, payload)?;
                     let (hidden, layers) = self.prefill_compute(1, hidden)?;
                     if !layers.is_empty() {
-                        self.kv
-                            .insert_row(run, slot, run_batch, layers)
-                            .with_context(|| {
-                                format!(
-                                    "stage {} (device {}) admitting run {run} slot {slot}",
-                                    self.stage_idx, self.device_id
-                                )
-                            })?;
+                        if let Some(pool) = self.paged.as_mut() {
+                            pool.admit_row(run, slot, run_batch, prompt_len, &layers)
+                        } else {
+                            self.kv
+                                .insert_row(run, slot, run_batch, prompt_len, layers)
+                                .map(|_| 0)
+                        }
+                        .with_context(|| {
+                            format!(
+                                "stage {} (device {}) admitting run {run} slot {slot}",
+                                self.stage_idx, self.device_id
+                            )
+                        })?;
                     }
                     self.record_obs(false, exec_ms_before);
                     if self.has_head {
@@ -460,7 +652,22 @@ impl StageActor {
                 }
                 StageMsg::Export { reply } => {
                     let mut entries = Vec::new();
-                    for (gid, cache) in self.kv.iter() {
+                    // Paged stages snapshot by reconstructing each run as
+                    // a padded cache — byte-identical to what a padded
+                    // stage would export — with exact per-row watermarks
+                    // so freight is charged at live-block bytes.
+                    let snapshots: Vec<(u64, GroupCache)> = if let Some(pool) = &self.paged {
+                        pool.run_ids()
+                            .into_iter()
+                            .map(|gid| Ok((gid, pool.reconstruct_padded(gid)?)))
+                            .collect::<Result<_>>()?
+                    } else {
+                        self.kv
+                            .iter()
+                            .map(|(gid, cache)| (*gid, cache.clone()))
+                            .collect()
+                    };
+                    for (gid, cache) in &snapshots {
                         for (li, (k, v)) in cache.layers.iter().enumerate() {
                             entries.push(KvEntry {
                                 group: *gid,
@@ -469,6 +676,7 @@ impl StageActor {
                                 v: v.clone(),
                                 batch: cache.batch,
                                 live: cache.live.clone(),
+                                written: cache.written.clone(),
                             });
                         }
                     }
@@ -637,7 +845,39 @@ impl StageActor {
 
     fn run_prefill(&mut self, group: u64, batch: usize, h: TensorData) -> Result<TensorData> {
         let n_local = self.layer_w.len();
-        let bytes = KvPool::group_bytes(n_local, batch, self.kv_heads, self.max_seq, self.head_dim);
+        let prompt = h.dims()[1] as usize;
+        if self.paged.is_some() {
+            // Paged group admission charges the working set, not the
+            // padded worst case: prompt blocks now, one block at a time
+            // as rows extend.
+            let (h, layers) = self.prefill_compute(batch, h)?;
+            let cache = GroupCache {
+                layers,
+                batch,
+                bytes: 0,
+                live: vec![true; batch],
+                written: vec![prompt; batch],
+            };
+            self.paged
+                .as_mut()
+                .unwrap()
+                .admit_cache(group, &cache)
+                .with_context(|| {
+                    format!(
+                        "stage {} (device {}) admitting group {group}",
+                        self.stage_idx, self.device_id
+                    )
+                })?;
+            return Ok(h);
+        }
+        let bytes = KvPool::group_bytes(
+            n_local,
+            batch,
+            self.kv_heads,
+            self.max_seq,
+            self.head_dim,
+            ELEM_BYTES_F32,
+        );
         anyhow::ensure!(
             self.kv.can_admit(bytes),
             "stage {} (device {}) KV pool full: admit {} used {} budget {}",
@@ -656,6 +896,7 @@ impl StageActor {
                     batch,
                     bytes,
                     live: vec![true; batch],
+                    written: vec![prompt; batch],
                 },
             )?;
         }
@@ -676,6 +917,9 @@ impl StageActor {
         let n_local = self.layer_w.len();
         if n_local == 0 {
             return Ok(h);
+        }
+        if self.paged.is_some() {
+            return self.paged_step(run, batch, pos, h);
         }
         let variant = format!("layer_decode_b{batch}");
         let pos_t = TensorData::i32(pos.to_vec(), vec![batch as i64]);
@@ -705,6 +949,56 @@ impl StageActor {
         Ok(h)
     }
 
+    /// One paged decode iteration, shared by group decode and
+    /// continuous-batching steps: extend the block tables once, then run
+    /// every local layer through the table-gather kernel and write the
+    /// returned K/V head vectors into the pool.
+    fn paged_step(
+        &mut self,
+        run: u64,
+        batch: usize,
+        pos: &[i32],
+        mut h: TensorData,
+    ) -> Result<TensorData> {
+        let pool = self.paged.as_mut().unwrap();
+        pool.prepare_step(run, pos).with_context(|| {
+            format!(
+                "stage {} (device {}) stepping run {run}",
+                self.stage_idx, self.device_id
+            )
+        })?;
+        let table = pool.table(run)?;
+        let pos_t = TensorData::i32(pos.to_vec(), vec![batch as i64]);
+        let variant = format!("layer_decode_b{batch}");
+        let row_len = self.kv_heads * self.head_dim;
+        for li in 0..self.layer_w.len() {
+            let (ks, vs) = self.paged.as_ref().unwrap().layer_slabs(li);
+            let w = self.layer_w[li];
+            let inputs = vec![h, ks, vs, table.clone(), pos_t.clone()];
+            let mut out = self.exec_scaled(Some(w), &variant, inputs)?;
+            anyhow::ensure!(out.len() == 3, "paged layer_decode must return 3 outputs");
+            let v_new = out.pop().unwrap();
+            let k_new = out.pop().unwrap();
+            h = out.pop().unwrap();
+            let (kf, vf) = (k_new.as_f32()?, v_new.as_f32()?);
+            let pool = self.paged.as_mut().unwrap();
+            for (b, &p) in pos.iter().enumerate() {
+                if p < 0 {
+                    continue;
+                }
+                pool.write_pos(
+                    li,
+                    run,
+                    b,
+                    p as usize,
+                    &kf[b * row_len..(b + 1) * row_len],
+                    &vf[b * row_len..(b + 1) * row_len],
+                )?;
+            }
+        }
+        Ok(h)
+    }
+
     fn run_decode(
         &mut self,
         group: u64,
@@ -712,6 +1006,9 @@ impl StageActor {
         pos: i32,
         mut h: TensorData,
     ) -> Result<TensorData> {
+        if self.paged.is_some() {
+            return self.paged_step(group, batch, &vec![pos; batch], h);
+        }
         let variant = format!("layer_decode_b{batch}");
         let n_local = self.layer_w.len();
         for li in 0..n_local {

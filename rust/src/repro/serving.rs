@@ -37,6 +37,14 @@
 //! written to `results/serving_overload.md` +
 //! `BENCH_serving_overload.json` (the CI gate in `tests/overload.rs`
 //! asserts exactly these).
+//!
+//! The **paged-KV** section ([`run_paged_bench`]) fixes one per-stage KV
+//! byte budget and serves the same ragged Poisson trace under padded
+//! worst-case admission vs the paged block pool
+//! ([`crate::coordinator::KvLayout`]): byte-identical tokens, ≥ 2× the
+//! concurrent rows, written to `results/serving_paged_kv.md` +
+//! `BENCH_paged_kv.json` (the gate in `tests/paged_kv.rs` asserts the
+//! same 2× at engine level).
 
 use anyhow::{Context, Result};
 use std::collections::{HashMap, HashSet};
@@ -1094,10 +1102,306 @@ pub fn overload_json(r: &OverloadBenchReport) -> Json {
     Json::Obj(root)
 }
 
+/// Knobs of the paged-KV memory-pressure sweep (defaults are what CI
+/// runs).  One ragged Poisson trace is served twice at the *same*
+/// per-stage KV byte budget: once with padded worst-case admission
+/// (concurrency hard-capped at `budget_rows` rows) and once with the
+/// paged block pool (admission against live block occupancy, swap-out
+/// preemption when the pool runs dry).  Tokens must stay byte-identical;
+/// what the sweep measures is how many rows each layout keeps in flight
+/// and what that does to TTFT under the queue the cap creates.
+#[derive(Debug, Clone)]
+pub struct PagedBenchConfig {
+    pub requests: usize,
+    pub seed: u64,
+    /// Continuous-batching pipeline depth.
+    pub runs: usize,
+    pub gen_lens: Vec<usize>,
+    pub mean_burst: usize,
+    /// Mean interarrival gap (ms) — tight enough that demand always
+    /// exceeds the padded row cap, so the cap is what queues requests.
+    pub interarrival_ms: f64,
+    /// Paged block granularity, positions.
+    pub block_size: usize,
+    /// The shared KV budget, expressed in padded worst-case rows (so the
+    /// padded run's admission cap is exactly this many rows).
+    pub budget_rows: usize,
+}
+
+impl Default for PagedBenchConfig {
+    fn default() -> Self {
+        PagedBenchConfig {
+            requests: 48,
+            seed: 0,
+            runs: 2,
+            gen_lens: vec![4, 12, 24, 48],
+            mean_burst: 2,
+            interarrival_ms: 0.5,
+            block_size: 16,
+            budget_rows: 4,
+        }
+    }
+}
+
+/// Everything the paged-pressure sweep produced.
+#[derive(Debug)]
+pub struct PagedBenchReport {
+    /// The per-stage KV byte budget both runs share.
+    pub budget_bytes: u64,
+    pub block_size: usize,
+    /// Blocks that budget buys on the tightest stage.
+    pub pool_blocks: usize,
+    /// Rows the padded worst-case bound admits at this budget.
+    pub padded_max_rows: usize,
+    /// Measured peak concurrent KV-holding rows, per layout.
+    pub padded_peak_rows: usize,
+    pub paged_peak_rows: usize,
+    /// paged ÷ padded peak concurrency — the acceptance gate is ≥ 2.
+    pub concurrency_gain: f64,
+    pub padded_goodput_tps: f64,
+    pub paged_goodput_tps: f64,
+    pub padded_ttft_p50_ms: f64,
+    pub padded_ttft_p99_ms: f64,
+    pub paged_ttft_p50_ms: f64,
+    pub paged_ttft_p99_ms: f64,
+    /// Swap-out / swap-in preemptions the paged run absorbed (0 is fine
+    /// — it means the pool never ran fully dry).
+    pub swaps_out: u64,
+    pub swaps_in: u64,
+    /// Per-request token streams byte-identical across the two layouts.
+    pub tokens_identical: bool,
+}
+
+fn metrics_counter(snap: &Json, name: &str) -> u64 {
+    snap.get("counters")
+        .and_then(|c| c.get(name))
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0) as u64
+}
+
+/// Run the paged-KV pressure sweep; see [`PagedBenchConfig`].
+pub fn run_paged_bench(cfg: &PagedBenchConfig) -> Result<PagedBenchReport> {
+    let manifest = Manifest::synthetic(bench_config(), vec![1, 2, 8]);
+    let weights = WeightStore::synthetic(&manifest, cfg.seed);
+    let (_svc, exec) = ExecService::start_sim(&manifest)?;
+    let cluster = bench_cluster();
+    let mc = manifest.config.clone();
+    let n_model_layers = mc.n_layers + 2;
+    let plan = crate::planner::Plan {
+        objective: crate::planner::PlanObjective::Throughput,
+        stages: vec![
+            crate::planner::Stage {
+                device: 0,
+                start: 0,
+                end: 3,
+            },
+            crate::planner::Stage {
+                device: 1,
+                start: 3,
+                end: n_model_layers,
+            },
+        ],
+        predicted_ms: 0.0,
+    };
+    // both stages hold 2 decoder layers, so the worst-case padded row and
+    // the per-block bytes are the same on each
+    let n_local = 2usize;
+    let row_worst = crate::coordinator::KvPool::group_bytes(
+        n_local,
+        1,
+        mc.n_kv_heads,
+        mc.max_seq,
+        mc.head_dim(),
+        crate::coordinator::ELEM_BYTES_F32,
+    );
+    let budget_bytes = cfg.budget_rows as u64 * row_worst;
+    let pool_blocks = (budget_bytes
+        / crate::coordinator::PagedPool::block_bytes_for(
+            n_local,
+            mc.n_kv_heads,
+            cfg.block_size,
+            mc.head_dim(),
+        )) as usize;
+
+    let gen = RaggedTraceGen {
+        mean_burst: cfg.mean_burst,
+        mean_interarrival_ms: cfg.interarrival_ms,
+        ..RaggedTraceGen::new(
+            mc.prefill_len,
+            mc.vocab_size as i32,
+            cfg.gen_lens.clone(),
+            cfg.seed,
+        )
+    };
+    let trace = gen.generate(cfg.requests);
+    let arrived: Vec<ArrivedRequest> = trace
+        .iter()
+        .map(|r| ArrivedRequest {
+            req: GenRequest::new(r.id, r.prompt.clone(), r.max_new_tokens),
+            arrival_ms: r.arrival_ms.max(0.0),
+        })
+        .collect();
+
+    let serve = |layout: crate::coordinator::KvLayout,
+                     max_batch: usize,
+                     metrics: &crate::obs::MetricsRegistry|
+     -> Result<(Vec<GenResult>, EngineStats)> {
+        let engine_cfg = EngineConfig {
+            time_scale: 0.0,
+            kv_budget_bytes: budget_bytes,
+            kv_layout: layout,
+            ..EngineConfig::default()
+        };
+        let mut engine =
+            Engine::build(&manifest, &weights, exec.clone(), &plan, &cluster, &engine_cfg)?;
+        engine.set_metrics(metrics);
+        let mut queue = AdmissionQueue::new(
+            Box::new(TraceSource::new(arrived.clone())),
+            crate::coordinator::AdmissionPolicy::Fifo,
+        );
+        let ccfg = ContinuousConfig {
+            runs: cfg.runs,
+            max_batch: Some(max_batch),
+            ..ContinuousConfig::default()
+        };
+        let out = engine.generate_from_source(&mut queue, &ccfg)?;
+        engine.shutdown()?;
+        Ok(out)
+    };
+
+    // padded: worst-case admission — budget_rows rows total, split
+    // across the pipeline depth
+    let (padded_results, padded_stats) = serve(
+        crate::coordinator::KvLayout::Padded,
+        (cfg.budget_rows / cfg.runs).max(1),
+        &crate::obs::MetricsRegistry::off(),
+    )
+    .context("paged bench: padded baseline")?;
+    // paged: same bytes as blocks, batch shapes allowed to fill
+    let metrics = crate::obs::MetricsRegistry::new();
+    let (paged_results, paged_stats) = serve(
+        crate::coordinator::KvLayout::Paged {
+            block_size: cfg.block_size,
+        },
+        8,
+        &metrics,
+    )
+    .context("paged bench: paged run")?;
+    let snap = metrics.snapshot();
+
+    let rows = |results: &[GenResult]| -> Vec<(u64, Vec<i32>)> {
+        let mut v: Vec<(u64, Vec<i32>)> =
+            results.iter().map(|r| (r.id, r.tokens.clone())).collect();
+        v.sort_by_key(|(id, _)| *id);
+        v
+    };
+    let ttft = |results: &[GenResult]| -> Histogram {
+        let mut h = Histogram::new();
+        for r in results {
+            h.record(r.ttft_ms);
+        }
+        h
+    };
+    let mut padded_ttft = ttft(&padded_results);
+    let mut paged_ttft = ttft(&paged_results);
+    let padded_peak = padded_stats.peak_live_rows;
+    let paged_peak = paged_stats.peak_live_rows;
+    Ok(PagedBenchReport {
+        budget_bytes,
+        block_size: cfg.block_size,
+        pool_blocks,
+        padded_max_rows: cfg.budget_rows,
+        padded_peak_rows: padded_peak,
+        paged_peak_rows: paged_peak,
+        concurrency_gain: if padded_peak > 0 {
+            paged_peak as f64 / padded_peak as f64
+        } else {
+            0.0
+        },
+        padded_goodput_tps: padded_stats.throughput_tps,
+        paged_goodput_tps: paged_stats.throughput_tps,
+        padded_ttft_p50_ms: padded_ttft.percentile(50.0),
+        padded_ttft_p99_ms: padded_ttft.percentile(99.0),
+        paged_ttft_p50_ms: paged_ttft.percentile(50.0),
+        paged_ttft_p99_ms: paged_ttft.percentile(99.0),
+        swaps_out: metrics_counter(&snap, "kv_swaps_out"),
+        swaps_in: metrics_counter(&snap, "kv_swaps_in"),
+        tokens_identical: rows(&padded_results) == rows(&paged_results),
+    })
+}
+
+/// Render the paged-pressure markdown.
+pub fn paged_markdown(r: &PagedBenchReport) -> String {
+    let mut out = String::new();
+    out.push_str("# Paged KV under memory pressure — blocks vs padded rows (sim backend)\n\n");
+    out.push_str(&format!(
+        "shared KV budget {} bytes/stage = {} padded rows = {} blocks of {} positions\n\n",
+        r.budget_bytes, r.padded_max_rows, r.pool_blocks, r.block_size
+    ));
+    out.push_str(&markdown_table(
+        &[
+            "layout",
+            "peak rows",
+            "tok/s",
+            "TTFT p50 (ms)",
+            "TTFT p99 (ms)",
+        ],
+        &[
+            vec![
+                "padded".into(),
+                format!("{}", r.padded_peak_rows),
+                format!("{:.1}", r.padded_goodput_tps),
+                format!("{:.1}", r.padded_ttft_p50_ms),
+                format!("{:.1}", r.padded_ttft_p99_ms),
+            ],
+            vec![
+                "paged".into(),
+                format!("{}", r.paged_peak_rows),
+                format!("{:.1}", r.paged_goodput_tps),
+                format!("{:.1}", r.paged_ttft_p50_ms),
+                format!("{:.1}", r.paged_ttft_p99_ms),
+            ],
+        ],
+    ));
+    out.push_str(&format!(
+        "\nconcurrency gain {:.2}x at the same budget; swaps out/in {}/{}; \
+         tokens identical across layouts: {}\n",
+        r.concurrency_gain, r.swaps_out, r.swaps_in, r.tokens_identical
+    ));
+    out
+}
+
+/// Machine-readable form (the `BENCH_paged_kv.json` CI artifact).
+pub fn paged_json(r: &PagedBenchReport) -> Json {
+    use std::collections::BTreeMap;
+    let num = |v: f64| Json::Num((v * 1000.0).round() / 1000.0);
+    let mut root = BTreeMap::new();
+    root.insert("budget_bytes".into(), Json::Num(r.budget_bytes as f64));
+    root.insert("block_size".into(), Json::Num(r.block_size as f64));
+    root.insert("pool_blocks".into(), Json::Num(r.pool_blocks as f64));
+    root.insert("padded_max_rows".into(), Json::Num(r.padded_max_rows as f64));
+    root.insert(
+        "padded_peak_rows".into(),
+        Json::Num(r.padded_peak_rows as f64),
+    );
+    root.insert("paged_peak_rows".into(), Json::Num(r.paged_peak_rows as f64));
+    root.insert("concurrency_gain".into(), num(r.concurrency_gain));
+    root.insert("padded_goodput_tps".into(), num(r.padded_goodput_tps));
+    root.insert("paged_goodput_tps".into(), num(r.paged_goodput_tps));
+    root.insert("padded_ttft_p50_ms".into(), num(r.padded_ttft_p50_ms));
+    root.insert("padded_ttft_p99_ms".into(), num(r.padded_ttft_p99_ms));
+    root.insert("paged_ttft_p50_ms".into(), num(r.paged_ttft_p50_ms));
+    root.insert("paged_ttft_p99_ms".into(), num(r.paged_ttft_p99_ms));
+    root.insert("swaps_out".into(), Json::Num(r.swaps_out as f64));
+    root.insert("swaps_in".into(), Json::Num(r.swaps_in as f64));
+    root.insert("tokens_identical".into(), Json::Bool(r.tokens_identical));
+    Json::Obj(root)
+}
+
 /// `edgeshard bench serving` entry: run the closed-loop mode comparison,
-/// the open-loop load-latency sweep and the overload sweep, echo
-/// markdown, write the JSON artifacts (and the markdown under
-/// `results/`).  With `trace_path` the closed-loop comparison
+/// the open-loop load-latency sweep, the overload sweep and the paged-KV
+/// pressure sweep, echo markdown, write the JSON artifacts (and the
+/// markdown under `results/`).  With `trace_path` the closed-loop comparison
 /// additionally runs under a live tracer and the whole run is exported
 /// as a Chrome/Perfetto trace there.
 pub fn run(
@@ -1143,5 +1447,17 @@ pub fn run(
     std::fs::write(&ov_path, overload_json(&ov).to_string())
         .with_context(|| format!("writing {ov_path:?}"))?;
     println!("wrote {}", ov_path.display());
+
+    let pg_cfg = PagedBenchConfig {
+        seed: cfg.seed,
+        runs: cfg.runs,
+        ..PagedBenchConfig::default()
+    };
+    let pg = run_paged_bench(&pg_cfg)?;
+    super::emit("serving_paged_kv", &paged_markdown(&pg))?;
+    let pg_path = json_path.with_file_name("BENCH_paged_kv.json");
+    std::fs::write(&pg_path, paged_json(&pg).to_string())
+        .with_context(|| format!("writing {pg_path:?}"))?;
+    println!("wrote {}", pg_path.display());
     Ok(())
 }

@@ -336,6 +336,134 @@ fn run_layer(
             TensorData::f32(kc, cache_dims.clone()),
             TensorData::f32(vc, cache_dims),
         ])
+    } else if inputs.len() == 14 {
+        // Paged decode: same math as the padded branch below, but K/V
+        // for positions `< pos` are gathered through a per-row block
+        // table out of `[capacity, kv_heads, block_size, head_dim]`
+        // slabs, and the freshly computed K/V head vectors are
+        // *returned* (`[batch, kv_heads, head_dim]`) for the stage
+        // actor to write into its pool — the kernel never mutates the
+        // slabs.  Position `pos` itself attends through the locally
+        // roped k/v, which is bitwise what the padded branch reads back
+        // after its own cache write, so paged and padded serving stay
+        // byte-identical (`rust/tests/paged_kv.rs`).
+        let (h_in, h_dims) = f32_input(&inputs[9], "h")?;
+        ensure!(
+            h_dims == [batch as i64, 1, d as i64],
+            "sim paged decode: h dims {h_dims:?}"
+        );
+        let (ks, ks_dims) = f32_input(&inputs[10], "k_slab")?;
+        let (vs, vs_dims) = f32_input(&inputs[11], "v_slab")?;
+        ensure!(
+            ks_dims == vs_dims
+                && ks_dims.len() == 4
+                && ks_dims[1] == nkv as i64
+                && ks_dims[3] == hd as i64,
+            "sim paged decode: slab dims {ks_dims:?}/{vs_dims:?}"
+        );
+        let (cap, bs) = (ks_dims[0] as usize, ks_dims[2] as usize);
+        ensure!(bs > 0, "sim paged decode: zero block size");
+        let table = inputs[12].as_i32()?;
+        let t_dims = inputs[12].dims();
+        ensure!(
+            t_dims.len() == 2 && t_dims[0] == batch as i64,
+            "sim paged decode: table dims {t_dims:?}"
+        );
+        let mb = t_dims[1] as usize;
+        let pos_raw = inputs[13].as_i32()?;
+        ensure!(
+            !inputs[13].dims().is_empty() && pos_raw.len() == batch,
+            "sim paged decode: pos must be a [batch] vector"
+        );
+        let pos_rows = pos_raw.to_vec();
+        for &p in &pos_rows {
+            ensure!(
+                p < ms as i32 && (p < 0 || (p as usize / bs) < mb),
+                "sim paged decode: pos {p} out of range"
+            );
+        }
+        let slab_at = |blk: usize, kh: usize, s: usize| ((blk * nkv + kh) * bs + s) * hd;
+        let mut x = rms_norm(h_in, w.attn_norm, batch, d);
+        for (b, &p) in pos_rows.iter().enumerate() {
+            if p < 0 {
+                x[b * d..(b + 1) * d].fill(0.0);
+            }
+        }
+        let mut q = matmul(&x, w.wq, batch, d, nh * hd);
+        let mut k = matmul(&x, w.wk, batch, d, nkv * hd);
+        let v = matmul(&x, w.wv, batch, d, nkv * hd);
+        for (b, &p) in pos_rows.iter().enumerate() {
+            if p < 0 {
+                continue;
+            }
+            for hh in 0..nh {
+                let off = b * nh * hd + hh * hd;
+                rope_rotate(&mut q[off..off + hd], p as usize, 10000.0);
+            }
+            for kh in 0..nkv {
+                let off = b * nkv * hd + kh * hd;
+                rope_rotate(&mut k[off..off + hd], p as usize, 10000.0);
+            }
+        }
+        let mut attn = vec![0f32; batch * nh * hd];
+        for (b, &p) in pos_rows.iter().enumerate() {
+            if p < 0 {
+                continue;
+            }
+            let pos = p as usize;
+            let mut scores = vec![0f32; pos + 1];
+            for hh in 0..nh {
+                let kh = hh / reps.max(1);
+                let qoff = b * nh * hd + hh * hd;
+                let qv = &q[qoff..qoff + hd];
+                let self_off = b * nkv * hd + kh * hd;
+                for (ki, sc) in scores.iter_mut().enumerate() {
+                    let krow = if ki == pos {
+                        &k[self_off..self_off + hd]
+                    } else {
+                        let blk = table[b * mb + ki / bs];
+                        ensure!(
+                            blk >= 0 && (blk as usize) < cap,
+                            "sim paged decode: row {b} position {ki} unmapped"
+                        );
+                        let koff = slab_at(blk as usize, kh, ki % bs);
+                        &ks[koff..koff + hd]
+                    };
+                    let mut dot = 0f32;
+                    for (a, b_) in qv.iter().zip(krow) {
+                        dot += a * b_;
+                    }
+                    *sc = dot * scale;
+                }
+                softmax(&mut scores);
+                let arow = &mut attn[qoff..qoff + hd];
+                for (ki, &sp) in scores.iter().enumerate() {
+                    let vrow = if ki == pos {
+                        &v[self_off..self_off + hd]
+                    } else {
+                        let blk = table[b * mb + ki / bs] as usize;
+                        let voff = slab_at(blk, kh, ki % bs);
+                        &vs[voff..voff + hd]
+                    };
+                    for (a, b_) in arow.iter_mut().zip(vrow) {
+                        *a += sp * b_;
+                    }
+                }
+            }
+        }
+        let mut h = h_in.to_vec();
+        for (b, &p) in pos_rows.iter().enumerate() {
+            if p < 0 {
+                h[b * d..(b + 1) * d].fill(0.0);
+            }
+        }
+        attn_out_and_mlp(cfg, &w, &mut h, &attn, batch);
+        let kv_dims = vec![batch as i64, nkv as i64, hd as i64];
+        Ok(vec![
+            TensorData::f32(h, vec![batch as i64, 1, d as i64]),
+            TensorData::f32(k, kv_dims.clone()),
+            TensorData::f32(v, kv_dims),
+        ])
     } else {
         ensure!(
             inputs.len() == 13,
@@ -670,6 +798,77 @@ mod tests {
             "live cache row diverged"
         );
         assert!(kc_out[..cache_len].iter().all(|&x| x == 7.0), "dead cache row touched");
+    }
+
+    #[test]
+    fn paged_decode_is_bitwise_identical_to_padded() {
+        // The paged branch must read exactly the same f32 values in
+        // exactly the same order as the padded branch — scattering the
+        // blocks non-contiguously through the slab proves the table
+        // indirection, and bitwise equality (==, not approx) proves the
+        // accumulation order never changed.
+        let (m, w) = setup();
+        let c = &m.config;
+        let (d, nkv, ms, hd) = (c.d_model, c.n_kv_heads, c.max_seq, c.head_dim());
+        let prompt = 6usize;
+        let bs = 4usize; // prompt spans 2 blocks, the second half-full
+
+        // prefill a row to get a real padded cache
+        let h_pre: Vec<f32> = (0..prompt * d).map(|i| ((i % 11) as f32 - 5.0) * 0.03).collect();
+        let mut inputs = layer_inputs(&m, &w, 0);
+        inputs.push(as_td(&h_pre, &[1, prompt, d]));
+        let pre = run_variant(c, "layer_prefill_b1", &inputs).unwrap();
+
+        // padded decode at pos = prompt
+        let h_row: Vec<f32> = (0..d).map(|i| ((i % 5) as f32 - 2.0) * 0.05).collect();
+        let mut inputs = layer_inputs(&m, &w, 0);
+        inputs.push(as_td(&h_row, &[1, 1, d]));
+        inputs.push(pre[1].clone());
+        inputs.push(pre[2].clone());
+        inputs.push(TensorData::i32(vec![prompt as i32], vec![1]));
+        let padded = run_variant(c, "layer_decode_b1", &inputs).unwrap();
+
+        // chop the prefill cache into scattered slab blocks [5, 2]
+        let blocks = [5usize, 2usize];
+        let cap = 7usize;
+        let (kc, vc) = (pre[1].as_f32().unwrap(), pre[2].as_f32().unwrap());
+        let slab_len = cap * nkv * bs * hd;
+        let (mut ks, mut vs) = (vec![0f32; slab_len], vec![0f32; slab_len]);
+        for p in 0..prompt {
+            let blk = blocks[p / bs];
+            for kh in 0..nkv {
+                let s = (kh * ms + p) * hd;
+                let dst = ((blk * nkv + kh) * bs + p % bs) * hd;
+                ks[dst..dst + hd].copy_from_slice(&kc[s..s + hd]);
+                vs[dst..dst + hd].copy_from_slice(&vc[s..s + hd]);
+            }
+        }
+        let mb = ms.div_ceil(bs);
+        let mut table = vec![-1i32; mb];
+        table[0] = blocks[0] as i32;
+        table[1] = blocks[1] as i32;
+
+        let mut inputs = layer_inputs(&m, &w, 0);
+        inputs.push(as_td(&h_row, &[1, 1, d]));
+        inputs.push(as_td(&ks, &[cap, nkv, bs, hd]));
+        inputs.push(as_td(&vs, &[cap, nkv, bs, hd]));
+        inputs.push(TensorData::i32(table, vec![1, mb as i64]));
+        inputs.push(TensorData::i32(vec![prompt as i32], vec![1]));
+        let paged = run_variant(c, "layer_decode_b1", &inputs).unwrap();
+
+        assert_eq!(
+            paged[0].as_f32().unwrap(),
+            padded[0].as_f32().unwrap(),
+            "paged hidden diverged from padded"
+        );
+        // returned k/v head vectors == what the padded branch wrote at pos
+        assert_eq!(paged[1].dims(), &[1, nkv as i64, hd as i64]);
+        let kc_out = padded[1].as_f32().unwrap();
+        let k_new = paged[1].as_f32().unwrap();
+        for kh in 0..nkv {
+            let s = (kh * ms + prompt) * hd;
+            assert_eq!(&k_new[kh * hd..(kh + 1) * hd], &kc_out[s..s + hd]);
+        }
     }
 
     #[test]

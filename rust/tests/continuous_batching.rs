@@ -238,7 +238,7 @@ fn kv_pool_row_accounting_never_corrupts() {
                 0 => {
                     // admit into a random free slot
                     if let Some(slot) = (0..batch).find(|&s| !live[s]) {
-                        pool.insert_row(run, slot, batch, row_layers(n_layers, 1.0))
+                        pool.insert_row(run, slot, batch, 8, row_layers(n_layers, 1.0))
                             .unwrap();
                         live[slot] = true;
                     }
@@ -275,7 +275,7 @@ fn kv_pool_row_accounting_never_corrupts() {
                     }
                     if let Some(slot) = (0..batch).find(|&s| live[s]) {
                         assert!(pool
-                            .insert_row(run, slot, batch, row_layers(n_layers, 2.0))
+                            .insert_row(run, slot, batch, 8, row_layers(n_layers, 2.0))
                             .is_err());
                     }
                     assert_eq!(pool.used_bytes(), before);

@@ -1,0 +1,368 @@
+//! Paged KV cache: differential byte-identity + pressure suite.
+//!
+//! The contract under test: switching [`KvLayout::Padded`] →
+//! [`KvLayout::Paged`] changes *capacity accounting only* — every token
+//! stream stays byte-identical, on every serving path that touches KV:
+//!
+//! 1. **Group serving** — batched prefill + group decode gathers through
+//!    the block table instead of the padded slab.
+//! 2. **Continuous batching** — per-row admission/retirement/recompose
+//!    over block tables.
+//! 3. **Mid-run migration** — Export ships live blocks, the new stage
+//!    re-materializes the tables.
+//! 4. **Checkpoint-restore failover** — snapshots and per-row replay
+//!    reconcile against paged pools.
+//!
+//! Plus the pressure story: under a tight block budget, admission defers
+//! and the scheduler preempts (swap-out or recompute) — but every request
+//! is still served, byte-identical to an unconstrained padded run, and
+//! occupancy never exceeds the budget.  The headline win is gated too:
+//! at the *same* KV byte budget a paged engine sustains ≥ 2× the
+//! concurrent rows of padded worst-case admission.
+
+use edgeshard::adaptive::scenario::{
+    continuous_churn_scenario, link_drop_scenario, ContinuousChurnConfig, ScenarioConfig,
+};
+use edgeshard::cluster::presets;
+use edgeshard::coordinator::api::GenRequest;
+use edgeshard::coordinator::scheduler::ContinuousConfig;
+use edgeshard::coordinator::{
+    Batcher, Engine, EngineConfig, KvLayout, KvPool, PagedPool, PreemptMode, ELEM_BYTES_F32,
+};
+use edgeshard::planner::{Plan, PlanObjective, Stage};
+use edgeshard::runtime::manifest::ManifestConfig;
+use edgeshard::runtime::{ExecService, ExecServiceHandle, Manifest, WeightStore};
+use edgeshard::util::Rng;
+use std::sync::Mutex;
+
+/// Wall-clock-sensitive scenario tests run one at a time.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+const PROMPT_LEN: usize = 8;
+const MAX_SEQ: usize = 64;
+
+fn mini_config() -> ManifestConfig {
+    ManifestConfig::mini_sim("tinyllama-paged-sim", PROMPT_LEN, MAX_SEQ)
+}
+
+struct Ctx {
+    manifest: Manifest,
+    weights: WeightStore,
+    _svc: ExecService,
+    exec: ExecServiceHandle,
+}
+
+fn ctx(batch_sizes: Vec<usize>) -> Ctx {
+    let manifest = Manifest::synthetic(mini_config(), batch_sizes);
+    let weights = WeightStore::synthetic(&manifest, 0);
+    let (_svc, exec) = ExecService::start_sim(&manifest).unwrap();
+    Ctx {
+        manifest,
+        weights,
+        _svc,
+        exec,
+    }
+}
+
+/// Two-stage split of the 6-layer mini model (2 decoder layers local to
+/// each stage — block tables live on both sides of a link).
+fn two_stage_engine(c: &Ctx, cfg: &EngineConfig) -> Engine {
+    let n = c.manifest.config.n_layers + 2;
+    let plan = Plan {
+        objective: PlanObjective::Latency,
+        stages: vec![
+            Stage {
+                device: 0,
+                start: 0,
+                end: n / 2,
+            },
+            Stage {
+                device: 1,
+                start: n / 2,
+                end: n,
+            },
+        ],
+        predicted_ms: 0.0,
+    };
+    let cluster = presets::tiny_demo(0);
+    Engine::build(&c.manifest, &c.weights, c.exec.clone(), &plan, &cluster, cfg).unwrap()
+}
+
+fn engine_cfg(layout: KvLayout, budget: u64) -> EngineConfig {
+    EngineConfig {
+        time_scale: 0.0,
+        kv_layout: layout,
+        kv_budget_bytes: budget,
+        ..EngineConfig::default()
+    }
+}
+
+/// Ragged requests with id-distinct in-vocab prompts.
+fn ragged_requests(max_news: &[usize]) -> Vec<GenRequest> {
+    max_news
+        .iter()
+        .enumerate()
+        .map(|(i, &m)| {
+            GenRequest::new(
+                i as u64,
+                (0..PROMPT_LEN).map(|t| ((t * 5 + i * 11 + 3) % 64) as i32).collect(),
+                m,
+            )
+        })
+        .collect()
+}
+
+fn sorted_rows(results: Vec<edgeshard::coordinator::GenResult>) -> Vec<(u64, Vec<i32>)> {
+    let mut rows: Vec<(u64, Vec<i32>)> = results.into_iter().map(|r| (r.id, r.tokens)).collect();
+    rows.sort_by_key(|(id, _)| *id);
+    rows
+}
+
+/// Serve uniform-length requests as compiled batch-`batch` groups.
+fn group_rows(engine: &mut Engine, reqs: &[GenRequest], batch: usize) -> Vec<(u64, Vec<i32>)> {
+    let mut batcher = Batcher::new(PROMPT_LEN, vec![batch]);
+    let groups = batcher.pack(reqs);
+    assert!(!groups.is_empty());
+    let (results, _) = engine.generate_sequential(&groups).unwrap();
+    sorted_rows(results)
+}
+
+fn continuous_rows(
+    engine: &mut Engine,
+    reqs: &[GenRequest],
+    ccfg: &ContinuousConfig,
+) -> (Vec<(u64, Vec<i32>)>, edgeshard::coordinator::EngineStats) {
+    let (results, stats) = engine.generate_continuous(reqs, ccfg).unwrap();
+    assert_eq!(results.len(), reqs.len(), "every request must be served");
+    let expect: usize = reqs.iter().map(|r| r.max_new_tokens).sum();
+    assert_eq!(stats.tokens as usize, expect, "every token must be served");
+    (sorted_rows(results), stats)
+}
+
+/// Per-block KV bytes on each stage of the two-stage split (2 local
+/// decoder layers per stage).
+fn block_bytes(c: &Ctx, block_size: usize) -> u64 {
+    let mc = &c.manifest.config;
+    PagedPool::block_bytes_for(2, mc.n_kv_heads, block_size, mc.head_dim())
+}
+
+// ---------------------------------------------------------------------
+// 1. group serving
+// ---------------------------------------------------------------------
+
+#[test]
+fn group_serving_paged_matches_padded() {
+    let c = ctx(vec![1, 4]);
+    let reqs = ragged_requests(&[10, 10, 10, 10]);
+    let mut padded = two_stage_engine(&c, &engine_cfg(KvLayout::Padded, 1 << 30));
+    let reference = group_rows(&mut padded, &reqs, 4);
+    padded.shutdown().unwrap();
+    // block sizes that divide, straddle and exceed the sequence lengths
+    for block_size in [1usize, 4, 16, 64] {
+        let mut paged =
+            two_stage_engine(&c, &engine_cfg(KvLayout::Paged { block_size }, 1 << 30));
+        let rows = group_rows(&mut paged, &reqs, 4);
+        paged.shutdown().unwrap();
+        assert_eq!(
+            rows, reference,
+            "group tokens diverged at block_size {block_size}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. continuous batching
+// ---------------------------------------------------------------------
+
+#[test]
+fn continuous_paged_matches_padded() {
+    let c = ctx(vec![1, 2, 4]);
+    let reqs = ragged_requests(&[9, 2, 6, 12, 4, 7, 1, 10]);
+    let ccfg = ContinuousConfig {
+        runs: 2,
+        max_batch: Some(4),
+        ..ContinuousConfig::default()
+    };
+    let mut padded = two_stage_engine(&c, &engine_cfg(KvLayout::Padded, 1 << 30));
+    let (reference, _) = continuous_rows(&mut padded, &reqs, &ccfg);
+    padded.shutdown().unwrap();
+    for block_size in [1usize, 4, 16] {
+        let mut paged =
+            two_stage_engine(&c, &engine_cfg(KvLayout::Paged { block_size }, 1 << 30));
+        let (rows, _) = continuous_rows(&mut paged, &reqs, &ccfg);
+        paged.shutdown().unwrap();
+        assert_eq!(
+            rows, reference,
+            "continuous tokens diverged at block_size {block_size}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// 3. mid-run migration
+// ---------------------------------------------------------------------
+
+#[test]
+fn migration_paged_matches_padded() {
+    let _guard = SERIAL.lock().unwrap();
+    let padded = link_drop_scenario(&ScenarioConfig::default()).unwrap();
+    let paged = link_drop_scenario(&ScenarioConfig {
+        kv_layout: KvLayout::Paged { block_size: 16 },
+        ..ScenarioConfig::default()
+    })
+    .unwrap();
+    assert!(
+        !paged.migrations.is_empty(),
+        "the link drop must force a migration under the paged layout"
+    );
+    // paged adaptive == paged clean control == padded adaptive: migrating
+    // block tables over the Export path changes nothing byte-wise
+    assert_eq!(
+        paged.adaptive.token_rows(),
+        paged.static_clean.token_rows(),
+        "paged migration changed tokens vs its clean control"
+    );
+    assert_eq!(
+        paged.adaptive.token_rows(),
+        padded.adaptive.token_rows(),
+        "paged vs padded migration tokens diverged"
+    );
+}
+
+// ---------------------------------------------------------------------
+// 4. checkpoint-restore failover
+// ---------------------------------------------------------------------
+
+#[test]
+fn failover_paged_matches_padded() {
+    let _guard = SERIAL.lock().unwrap();
+    let padded = continuous_churn_scenario(&ContinuousChurnConfig::default()).unwrap();
+    let paged = continuous_churn_scenario(&ContinuousChurnConfig {
+        kv_layout: KvLayout::Paged { block_size: 16 },
+        ..ContinuousChurnConfig::default()
+    })
+    .unwrap();
+    assert!(
+        !paged.checkpointed_failovers.is_empty(),
+        "the crash must force a failover in the paged checkpoint run"
+    );
+    assert!(
+        !paged.reprefilled_failovers.is_empty(),
+        "the crash must force a failover in the paged re-prefill run"
+    );
+    // both paged recovery paths == paged clean control == padded control
+    assert_eq!(
+        paged.checkpointed.token_rows(),
+        paged.static_clean.token_rows(),
+        "paged checkpoint-restore changed tokens vs its clean control"
+    );
+    assert_eq!(
+        paged.reprefilled.token_rows(),
+        paged.static_clean.token_rows(),
+        "paged re-prefill recovery changed tokens vs its clean control"
+    );
+    assert_eq!(
+        paged.static_clean.token_rows(),
+        padded.static_clean.token_rows(),
+        "paged vs padded continuous tokens diverged"
+    );
+}
+
+// ---------------------------------------------------------------------
+// 5. pressure: tight random block budgets never change tokens
+// ---------------------------------------------------------------------
+
+#[test]
+fn pressure_random_budgets_serve_all_byte_identical() {
+    let c = ctx(vec![1, 2, 4, 8]);
+    let mut rng = Rng::new(0x9A6ED);
+    for trial in 0..6u64 {
+        let n_reqs = 6 + rng.next_below(5) as usize;
+        let gens: Vec<usize> = (0..n_reqs).map(|_| 1 + rng.next_below(10) as usize).collect();
+        let reqs = ragged_requests(&gens);
+        let ccfg = ContinuousConfig {
+            runs: 1 + rng.next_below(2) as usize,
+            max_batch: Some([2usize, 4, 8][rng.next_below(3) as usize]),
+            preempt: if trial % 2 == 0 {
+                PreemptMode::SwapOut
+            } else {
+                PreemptMode::Recompute
+            },
+            ..ContinuousConfig::default()
+        };
+
+        let mut padded = two_stage_engine(&c, &engine_cfg(KvLayout::Padded, 1 << 30));
+        let (reference, _) = continuous_rows(&mut padded, &reqs, &ccfg);
+        padded.shutdown().unwrap();
+
+        // a tight-but-feasible pool: just past the driver's one-row
+        // floor, plus 0–11 blocks of slack
+        let block_size = [2usize, 4, 8][rng.next_below(3) as usize];
+        let pool_blocks = MAX_SEQ / block_size + 2 + rng.next_below(12) as usize;
+        let budget = pool_blocks as u64 * block_bytes(&c, block_size);
+        let mut paged =
+            two_stage_engine(&c, &engine_cfg(KvLayout::Paged { block_size }, budget));
+        let (rows, _) = continuous_rows(&mut paged, &reqs, &ccfg);
+        paged.shutdown().unwrap();
+        assert_eq!(
+            rows, reference,
+            "trial {trial}: tokens diverged under pressure \
+             (block_size {block_size}, pool {pool_blocks} blocks, {:?})",
+            ccfg.preempt
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// 6. the headline: ≥ 2× concurrent rows at the same KV byte budget
+// ---------------------------------------------------------------------
+
+#[test]
+fn paged_doubles_concurrent_rows_at_fixed_budget() {
+    let c = ctx(vec![1, 2, 8]);
+    let mc = &c.manifest.config;
+    // exactly two padded worst-case rows per stage
+    let row_worst = KvPool::group_bytes(
+        2,
+        1,
+        mc.n_kv_heads,
+        MAX_SEQ,
+        mc.head_dim(),
+        ELEM_BYTES_F32,
+    );
+    let budget = 2 * row_worst;
+    let reqs = ragged_requests(&[8; 8]);
+
+    // padded worst-case admission caps the engine at 2 concurrent rows
+    let mut padded = two_stage_engine(&c, &engine_cfg(KvLayout::Padded, budget));
+    let padded_ccfg = ContinuousConfig {
+        runs: 1,
+        max_batch: Some(2),
+        ..ContinuousConfig::default()
+    };
+    let (reference, padded_stats) = continuous_rows(&mut padded, &reqs, &padded_ccfg);
+    padded.shutdown().unwrap();
+    assert_eq!(
+        padded_stats.peak_live_rows, 2,
+        "padded baseline should saturate its 2-row budget"
+    );
+
+    // the same bytes as blocks: short rows stop paying for max_seq
+    let mut paged =
+        two_stage_engine(&c, &engine_cfg(KvLayout::Paged { block_size: 4 }, budget));
+    let paged_ccfg = ContinuousConfig {
+        runs: 1,
+        max_batch: Some(8),
+        ..ContinuousConfig::default()
+    };
+    let (rows, paged_stats) = continuous_rows(&mut paged, &reqs, &paged_ccfg);
+    paged.shutdown().unwrap();
+    assert_eq!(rows, reference, "concurrency gain must not change tokens");
+    assert!(
+        paged_stats.peak_live_rows >= 2 * padded_stats.peak_live_rows,
+        "paged peak {} rows < 2x padded peak {} at the same {} byte budget",
+        paged_stats.peak_live_rows,
+        padded_stats.peak_live_rows,
+        budget
+    );
+}
