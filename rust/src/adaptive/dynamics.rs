@@ -158,13 +158,28 @@ impl ScheduleShape {
     }
 }
 
-/// One link's schedule (applied symmetrically, like
-/// [`crate::cluster::Cluster::set_bandwidth`]).
+/// Which direction(s) of a link a [`LinkSchedule`] shapes.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum LinkDirection {
+    /// Symmetric: the schedule shapes both `a→b` and `b→a` (like
+    /// [`crate::cluster::Cluster::set_bandwidth`]) — the historical
+    /// behavior and the default.
+    #[default]
+    Both,
+    /// Asymmetric: the schedule shapes only `a→b`, leaving `b→a` to its
+    /// own schedule (or the ground truth).  Two `OneWay` schedules give a
+    /// link the cellular shape — an uplink an order of magnitude slower
+    /// than the downlink.
+    OneWay,
+}
+
+/// One link's schedule (symmetric unless `direction` says otherwise).
 #[derive(Debug, Clone)]
 pub struct LinkSchedule {
     pub a: usize,
     pub b: usize,
     pub shape: ScheduleShape,
+    pub direction: LinkDirection,
 }
 
 /// Liveness-over-time shape of one device (pure `sim_time_ms → alive?`,
@@ -198,6 +213,18 @@ impl DeviceShape {
     }
 }
 
+impl LinkSchedule {
+    /// Whether this schedule shapes the `from→to` direction.
+    fn covers(&self, from: usize, to: usize) -> bool {
+        match self.direction {
+            LinkDirection::Both => {
+                (self.a == from && self.b == to) || (self.a == to && self.b == from)
+            }
+            LinkDirection::OneWay => self.a == from && self.b == to,
+        }
+    }
+}
+
 /// One device's churn schedule.
 #[derive(Debug, Clone)]
 pub struct DeviceSchedule {
@@ -220,7 +247,24 @@ impl NetworkDynamics {
 
     /// Add a schedule for the (symmetric) link `a↔b`.
     pub fn link(mut self, a: usize, b: usize, shape: ScheduleShape) -> Self {
-        self.links.push(LinkSchedule { a, b, shape });
+        self.links.push(LinkSchedule {
+            a,
+            b,
+            shape,
+            direction: LinkDirection::Both,
+        });
+        self
+    }
+
+    /// Add a schedule for the `a→b` direction only (the `b→a` direction
+    /// keeps its ground truth, or its own one-way schedule).
+    pub fn link_oneway(mut self, a: usize, b: usize, shape: ScheduleShape) -> Self {
+        self.links.push(LinkSchedule {
+            a,
+            b,
+            shape,
+            direction: LinkDirection::OneWay,
+        });
         self
     }
 
@@ -230,11 +274,13 @@ impl NetworkDynamics {
         self
     }
 
-    /// Scheduled bandwidth of `a↔b` at `t_ms`, if a schedule exists.
+    /// Scheduled bandwidth of the `a→b` direction at `t_ms`, if a
+    /// schedule covers it (a symmetric schedule covers both directions;
+    /// a one-way schedule only its own).
     pub fn mbps_at(&self, a: usize, b: usize, t_ms: f64) -> Option<f64> {
         self.links
             .iter()
-            .find(|l| (l.a == a && l.b == b) || (l.a == b && l.b == a))
+            .find(|l| l.covers(a, b))
             .map(|l| l.shape.mbps_at(t_ms))
     }
 
@@ -276,9 +322,12 @@ impl NetworkDynamics {
     ) {
         for l in &self.links {
             let mbps = l.shape.mbps_at(t_ms);
-            cluster.set_bandwidth(l.a, l.b, mbps);
+            match l.direction {
+                LinkDirection::Both => cluster.set_bandwidth(l.a, l.b, mbps),
+                LinkDirection::OneWay => cluster.set_bandwidth_oneway(l.a, l.b, mbps),
+            }
             for rl in links {
-                if (rl.from == l.a && rl.to == l.b) || (rl.from == l.b && rl.to == l.a) {
+                if l.covers(rl.from, rl.to) {
                     rl.link.set_bandwidth(mbps);
                 }
             }
@@ -508,6 +557,54 @@ mod tests {
         assert_eq!(rl.link.get().bandwidth_mbps, 2.0);
         assert_eq!(dynamics.mbps_at(1, 0, 200.0), Some(2.0));
         assert_eq!(dynamics.mbps_at(0, 2, 200.0), None);
+    }
+
+    #[test]
+    fn oneway_schedules_shape_directions_independently() {
+        // cellular shape: slow uplink 1→0, fast downlink 0→1
+        let live = LiveCluster::new(presets::tiny_demo(0));
+        let dynamics = NetworkDynamics::new()
+            .link_oneway(1, 0, ScheduleShape::Constant(4.0))
+            .link_oneway(0, 1, ScheduleShape::Constant(400.0));
+        let up = RoutedLink {
+            from: 1,
+            to: 0,
+            link: crate::netsim::LiveLink::new(crate::netsim::LinkSpec::new(100.0, 0.5)),
+        };
+        let down = RoutedLink {
+            from: 0,
+            to: 1,
+            link: crate::netsim::LiveLink::new(crate::netsim::LinkSpec::new(100.0, 0.5)),
+        };
+        let links = [up, down];
+        dynamics.apply(&live, &links, 0.0);
+        assert_eq!(live.bandwidth(1, 0), 4.0);
+        assert_eq!(live.bandwidth(0, 1), 400.0);
+        assert_eq!(links[0].link.get().bandwidth_mbps, 4.0);
+        assert_eq!(links[1].link.get().bandwidth_mbps, 400.0);
+        assert_eq!(dynamics.mbps_at(1, 0, 0.0), Some(4.0));
+        assert_eq!(dynamics.mbps_at(0, 1, 0.0), Some(400.0));
+    }
+
+    #[test]
+    fn oneway_schedule_leaves_reverse_direction_alone() {
+        let live = LiveCluster::new(presets::tiny_demo(0));
+        let base = live.bandwidth(0, 1);
+        let dynamics = NetworkDynamics::new().link_oneway(1, 0, ScheduleShape::Constant(4.0));
+        let reverse = RoutedLink {
+            from: 0,
+            to: 1,
+            link: crate::netsim::LiveLink::new(crate::netsim::LinkSpec::new(base, 0.5)),
+        };
+        dynamics.apply(&live, std::slice::from_ref(&reverse), 50.0);
+        assert_eq!(live.bandwidth(1, 0), 4.0);
+        assert_eq!(live.bandwidth(0, 1), base, "reverse ground truth untouched");
+        assert_eq!(
+            reverse.link.get().bandwidth_mbps,
+            base,
+            "reverse pacer untouched"
+        );
+        assert_eq!(dynamics.mbps_at(0, 1, 50.0), None);
     }
 
     #[test]

@@ -59,7 +59,8 @@ pub mod replan;
 pub mod scenario;
 
 pub use dynamics::{
-    DeviceSchedule, DeviceShape, DynamicsDriver, LinkSchedule, NetworkDynamics, ScheduleShape,
+    DeviceSchedule, DeviceShape, DynamicsDriver, LinkDirection, LinkSchedule, NetworkDynamics,
+    ScheduleShape,
 };
 pub use engine::{
     AdaptiveConfig, AdaptiveEngine, AdaptiveStats, CheckpointPolicy, FailoverRecord,

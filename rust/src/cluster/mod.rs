@@ -149,6 +149,18 @@ impl Cluster {
         self.bandwidth_mbps[b][a] = mbps;
     }
 
+    /// One-directional variant of [`Cluster::set_bandwidth`]: writes only
+    /// the `a→b` entry, leaving `b→a` untouched.  This is how asymmetric
+    /// last-mile links are modelled (a cellular uplink is typically an
+    /// order of magnitude slower than its downlink).
+    pub fn set_bandwidth_oneway(&mut self, a: usize, b: usize, mbps: f64) {
+        assert!(
+            mbps > 0.0 && !mbps.is_nan(),
+            "link {a}->{b}: bandwidth must be positive, got {mbps} Mbps"
+        );
+        self.bandwidth_mbps[a][b] = mbps;
+    }
+
     pub fn set_latency(&mut self, a: usize, b: usize, ms: f64) {
         assert!(
             ms >= 0.0 && ms.is_finite(),
@@ -235,6 +247,15 @@ impl LiveCluster {
             .write()
             .expect("cluster lock poisoned")
             .set_bandwidth(a, b, mbps);
+    }
+
+    /// One-directional live update (see
+    /// [`Cluster::set_bandwidth_oneway`]).
+    pub fn set_bandwidth_oneway(&self, a: usize, b: usize, mbps: f64) {
+        self.inner
+            .write()
+            .expect("cluster lock poisoned")
+            .set_bandwidth_oneway(a, b, mbps);
     }
 
     pub fn bandwidth(&self, a: usize, b: usize) -> f64 {

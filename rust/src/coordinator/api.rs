@@ -42,6 +42,10 @@ pub struct GenRequest {
     /// expiry reject) instead of wasting a prefill it can no longer use.
     /// `None` = wait forever.
     pub deadline_ms: Option<f64>,
+    /// Multi-turn conversation handle.  The replica router keeps every
+    /// request of a session on the replica whose pipeline already holds
+    /// the session's KV rows (affinity); `None` = free to route anywhere.
+    pub session: Option<u64>,
 }
 
 impl GenRequest {
@@ -54,6 +58,7 @@ impl GenRequest {
             max_new_tokens,
             class: SloClass::Interactive,
             deadline_ms: None,
+            session: None,
         }
     }
 
@@ -66,6 +71,12 @@ impl GenRequest {
     /// Builder-style TTFT deadline (ms from arrival).
     pub fn with_deadline_ms(mut self, deadline_ms: f64) -> Self {
         self.deadline_ms = Some(deadline_ms);
+        self
+    }
+
+    /// Builder-style session handle for router affinity.
+    pub fn with_session(mut self, session: u64) -> Self {
+        self.session = Some(session);
         self
     }
 }

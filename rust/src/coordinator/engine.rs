@@ -26,7 +26,7 @@ use std::sync::mpsc::{Receiver, Sender};
 
 use super::admission::AdmissionQueue;
 use super::api::{GenRequest, GenResult, GroupRequest};
-use super::driver::{drive_groups, drive_slots, DriverCfg, NoHooks};
+use super::driver::{drive_groups, drive_slots, DriveHooks, DriverCfg, NoHooks};
 use super::kvcache::{
     GroupCache, KvLayout, KvPool, PagedPool, ELEM_BYTES_F32, PAGED_MAX_POOL_POSITIONS,
 };
@@ -459,6 +459,20 @@ impl Engine {
     ) -> Result<(Vec<GenResult>, EngineStats)> {
         let (results, stats) =
             drive_slots(&mut self.wired, &self.driver_cfg, queue, ccfg, &mut NoHooks)?;
+        Ok((results, stats.into()))
+    }
+
+    /// [`Engine::generate_from_source`] with caller-supplied
+    /// [`DriveHooks`] — the replica router uses this to plant its abort
+    /// switch (a hook error stops the drive mid-flight, simulating a
+    /// replica death).
+    pub fn generate_from_source_hooked(
+        &mut self,
+        queue: &mut AdmissionQueue,
+        ccfg: &ContinuousConfig,
+        hooks: &mut dyn DriveHooks,
+    ) -> Result<(Vec<GenResult>, EngineStats)> {
+        let (results, stats) = drive_slots(&mut self.wired, &self.driver_cfg, queue, ccfg, hooks)?;
         Ok((results, stats.into()))
     }
 

@@ -23,6 +23,10 @@
 //!   [`engine::Engine::generate_continuous`]: per-iteration admission,
 //!   per-row retirement, batch recomposition.
 //! * [`batcher`] — groups incoming requests into the compiled batch sizes.
+//! * [`router`] — the front door over K pipeline replicas: least-work /
+//!   session-affinity routing, per-replica admission queues, and
+//!   cross-replica failover (a dead replica's queued + in-flight
+//!   requests re-enter routing).
 //! * [`server`] — a JSON-lines TCP front-end over the engine.
 //!
 //! Stages report per-message compute timings and links report per-frame
@@ -36,6 +40,7 @@ pub mod batcher;
 pub mod driver;
 pub mod engine;
 pub mod kvcache;
+pub mod router;
 pub mod scheduler;
 pub mod server;
 pub mod stage;
@@ -51,5 +56,8 @@ pub use driver::{
 };
 pub use engine::{Engine, EngineConfig, EngineStats};
 pub use kvcache::{GroupCache, KvLayout, KvPool, PagedPool, ELEM_BYTES_F32};
+pub use router::{
+    drive_replicated, ReplicaOutcome, ReplicatedOutcome, Router, RouterConfig, RouterSource,
+};
 pub use scheduler::{ContinuousConfig, PreemptMode, RowSnap, RunSnap, SlotScheduler};
 pub use stage::{KvEntry, StageExport};

@@ -1,0 +1,628 @@
+//! Front-door router over K pipeline replicas.
+//!
+//! The [`crate::planner::ReplicaPlanner`] decides *how many* pipelines to
+//! run and over which devices; this module runs them.  One shared
+//! [`RequestSource`] (trace replay, live TCP channel, closed-loop queue)
+//! feeds a [`Router`], which scores every arrival onto a replica —
+//! least-outstanding-work first, with **session affinity**: a multi-turn
+//! request carries [`crate::coordinator::GenRequest::session`] and is
+//! pinned to the replica whose pipeline already holds that session's KV
+//! rows.  Each replica then runs the *existing*
+//! [`drive_slots`](super::driver::drive_slots) loop in its own thread,
+//! over its own [`Engine`], behind its own [`AdmissionQueue`] (so
+//! SLO-class bounds and shedding stay per-replica).
+//!
+//! **Cross-replica failover.**  Every assignment is remembered until it
+//! resolves (result or reject).  When a replica dies — its drive loop
+//! returns an error, here simulated with an abort hook killable
+//! per-replica — the router immediately re-enters its queued *and*
+//! in-flight requests into routing ([`Router::kill`] /
+//! [`drive_replicated`]'s death path), keeping their original arrival
+//! stamps so the recovery window shows up in TTFT.  Requests are
+//! deduplicated by id at the result boundary, so a request that was
+//! racing through a dying pipeline while its reroute finished elsewhere
+//! is still answered exactly once (token streams are position-encoded
+//! and byte-identical on every replica, so either copy is correct).  An
+//! optional respawn factory may rebuild the dead replica (typically via
+//! [`crate::planner::ReplicaPlanner::plan_subset`] over its surviving
+//! devices) and re-enter it into rotation — the rebalance lifecycle.
+//!
+//! Router decisions surface as trace instants: `route_assign` (every
+//! placement, reroutes included), `replica_drain` (death: how many
+//! requests re-entered routing), `replica_rebalance` (respawn).
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::admission::{AdmissionPolicy, AdmissionQueue, ArrivedRequest, RequestSource};
+use super::api::{GenResult, ServeReply};
+use super::driver::{DriveHooks, DriveView};
+use super::engine::{Engine, EngineStats, Wired};
+use super::scheduler::ContinuousConfig;
+use crate::obs::{MetricsRegistry, Tracer};
+
+/// How [`drive_replicated`] runs its fleet.
+pub struct RouterConfig {
+    /// Admission policy instantiated per replica (bounds and shedding
+    /// are per-replica, matching its own capacity).
+    pub policy: AdmissionPolicy,
+    /// Pin sessions to the replica that first served them.
+    pub affinity: bool,
+    /// Tracer for router instants (`route_assign`, `replica_drain`,
+    /// `replica_rebalance`).
+    pub trace: Tracer,
+    /// Per-replica metrics registries; index r is installed on replica
+    /// r's engine (empty = keep whatever the engines carry).
+    pub metrics: Vec<MetricsRegistry>,
+    /// Deterministic kill switches: `(replica, token_budget)` — replica
+    /// r aborts its drive after producing `token_budget` folded token
+    /// frames.  Used by failover tests and the capacity bench.
+    pub kill_after_tokens: Vec<(usize, u64)>,
+    /// Rebuild a dead replica: called with the replica index after its
+    /// requests were rerouted; returning an engine re-enters the replica
+    /// into rotation (`replica_rebalance`).
+    pub respawn: Option<RespawnFn>,
+}
+
+/// Factory that rebuilds a dead replica's engine (e.g. re-planning its
+/// surviving devices with [`crate::planner::ReplicaPlanner::plan_subset`]).
+pub type RespawnFn = Box<dyn Fn(usize) -> Option<Engine> + Send + Sync>;
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            policy: AdmissionPolicy::Fifo,
+            affinity: true,
+            trace: Tracer::default(),
+            metrics: Vec::new(),
+            kill_after_tokens: Vec::new(),
+            respawn: None,
+        }
+    }
+}
+
+/// What one replica did over the whole run.
+#[derive(Debug)]
+pub struct ReplicaOutcome {
+    pub replica: usize,
+    /// Stats of the replica's final, successfully completed drive
+    /// (`None` if it died and was not respawned).
+    pub stats: Option<EngineStats>,
+    /// Times this replica's drive loop died.
+    pub deaths: u32,
+    /// Requests this replica resolved with a result.
+    pub served: u64,
+}
+
+/// Everything [`drive_replicated`] hands back.
+#[derive(Debug)]
+pub struct ReplicatedOutcome {
+    /// One result per served request, deduplicated by id, sorted by id.
+    pub results: Vec<GenResult>,
+    pub replicas: Vec<ReplicaOutcome>,
+    /// Every placement in order, `(request id, replica)` — reroutes
+    /// append a second entry for the same id.
+    pub assignments: Vec<(u64, usize)>,
+    /// Requests left unresolved because every replica was dead.
+    pub stranded: usize,
+}
+
+/// Router state shared by every replica's [`RouterSource`].
+struct Shared {
+    front: Box<dyn RequestSource>,
+    /// Assigned but not yet handed to the replica's admission queue.
+    pending: Vec<VecDeque<ArrivedRequest>>,
+    /// Handed to the replica (queued or in flight), awaiting resolution.
+    outstanding: Vec<HashMap<u64, ArrivedRequest>>,
+    /// Σ max_new_tokens over pending + outstanding — the routing score.
+    work: Vec<f64>,
+    /// session id → pinned replica.
+    affinity: HashMap<u64, usize>,
+    alive: Vec<bool>,
+    /// Requests answered (result or reject) — the exactly-once boundary.
+    resolved: HashSet<u64>,
+    results: Vec<GenResult>,
+    served_by: Vec<u64>,
+    assignments: Vec<(u64, usize)>,
+    /// Assigned and not yet resolved, across all replicas.
+    unresolved: usize,
+    /// Orphans with no live replica to go to.
+    stranded: Vec<ArrivedRequest>,
+    use_affinity: bool,
+    trace: Tracer,
+}
+
+impl Shared {
+    /// Route one request: affinity pin if live, else least outstanding
+    /// work (ties: fewest requests, lowest index).  `None` if no replica
+    /// is alive.
+    fn place(&mut self, a: ArrivedRequest, count_new: bool) {
+        let n = self.pending.len();
+        let mut choice: Option<usize> = None;
+        if self.use_affinity {
+            if let Some(s) = a.req.session {
+                match self.affinity.get(&s) {
+                    Some(&r) if self.alive[r] => choice = Some(r),
+                    _ => {}
+                }
+            }
+        }
+        if choice.is_none() {
+            let mut best_key = (f64::INFINITY, usize::MAX);
+            for r in 0..n {
+                if !self.alive[r] {
+                    continue;
+                }
+                let key = (self.work[r], self.pending[r].len() + self.outstanding[r].len());
+                let better = match choice {
+                    None => true,
+                    Some(_) => key.0 < best_key.0 || (key.0 == best_key.0 && key.1 < best_key.1),
+                };
+                if better {
+                    choice = Some(r);
+                    best_key = key;
+                }
+            }
+        }
+        if count_new {
+            self.unresolved += 1;
+        }
+        let Some(r) = choice else {
+            self.stranded.push(a);
+            return;
+        };
+        if self.use_affinity {
+            if let Some(s) = a.req.session {
+                self.affinity.insert(s, r);
+            }
+        }
+        let id = a.req.id;
+        self.work[r] += a.req.max_new_tokens as f64;
+        self.assignments.push((id, r));
+        self.pending[r].push_back(a);
+        self.trace
+            .instant("route_assign", || format!("req={id} replica={r}"));
+    }
+
+    /// A request of replica `r` resolved (result or reject).  Returns
+    /// `true` the first time this id resolves.
+    fn resolve(&mut self, r: usize, id: u64) -> bool {
+        if let Some(a) = self.outstanding[r].remove(&id) {
+            self.work[r] -= a.req.max_new_tokens as f64;
+        }
+        if !self.resolved.insert(id) {
+            return false;
+        }
+        self.unresolved -= 1;
+        true
+    }
+}
+
+/// Shared front door: clones are handles onto the same routing state.
+#[derive(Clone)]
+pub struct Router {
+    shared: Arc<Mutex<Shared>>,
+    kill_flags: Vec<Arc<AtomicBool>>,
+}
+
+impl Router {
+    /// A router over `n_replicas` fed by `front`.
+    pub fn new(
+        front: Box<dyn RequestSource>,
+        n_replicas: usize,
+        affinity: bool,
+        trace: Tracer,
+    ) -> Self {
+        assert!(n_replicas >= 1, "router needs at least one replica");
+        Router {
+            shared: Arc::new(Mutex::new(Shared {
+                front,
+                pending: vec![VecDeque::new(); n_replicas],
+                outstanding: vec![HashMap::new(); n_replicas],
+                work: vec![0.0; n_replicas],
+                affinity: HashMap::new(),
+                alive: vec![true; n_replicas],
+                resolved: HashSet::new(),
+                results: Vec::new(),
+                served_by: vec![0; n_replicas],
+                assignments: Vec::new(),
+                unresolved: 0,
+                stranded: Vec::new(),
+                use_affinity: affinity,
+                trace,
+            })),
+            kill_flags: (0..n_replicas).map(|_| Arc::new(AtomicBool::new(false))).collect(),
+        }
+    }
+
+    /// The per-replica [`RequestSource`] to put behind replica `r`'s
+    /// [`AdmissionQueue`].
+    pub fn source(&self, replica: usize) -> RouterSource {
+        RouterSource {
+            shared: Arc::clone(&self.shared),
+            replica,
+        }
+    }
+
+    /// Kill replica `r`: its queued and in-flight requests re-enter
+    /// routing immediately and its drive loop aborts at the next token
+    /// (via [`Router::abort_hooks`]).  Idempotent.
+    pub fn kill(&self, replica: usize) {
+        self.kill_flags[replica].store(true, Ordering::SeqCst);
+        self.drain_dead(replica);
+    }
+
+    /// Mark `r` dead and reroute everything it owned.  Called by
+    /// [`Router::kill`] and by [`drive_replicated`] when a drive loop
+    /// dies on its own.  Idempotent.
+    pub fn drain_dead(&self, replica: usize) {
+        let mut sh = self.shared.lock().unwrap();
+        if !sh.alive[replica] {
+            return;
+        }
+        sh.alive[replica] = false;
+        let mut orphans: Vec<ArrivedRequest> = sh.pending[replica].drain(..).collect();
+        orphans.extend(sh.outstanding[replica].drain().map(|(_, a)| a));
+        sh.work[replica] = 0.0;
+        sh.affinity.retain(|_, r| *r != replica);
+        let n = orphans.len();
+        sh.trace
+            .instant("replica_drain", || format!("replica={replica} rerouted={n}"));
+        for a in orphans {
+            if sh.resolved.contains(&a.req.id) {
+                continue;
+            }
+            sh.place(a, false);
+        }
+    }
+
+    /// Re-enter a respawned replica into rotation and hand it any
+    /// stranded requests.
+    pub fn revive(&self, replica: usize) {
+        self.kill_flags[replica].store(false, Ordering::SeqCst);
+        let mut sh = self.shared.lock().unwrap();
+        sh.alive[replica] = true;
+        sh.trace
+            .instant("replica_rebalance", || format!("replica={replica} revived"));
+        let stranded = std::mem::take(&mut sh.stranded);
+        for a in stranded {
+            sh.place(a, false);
+        }
+    }
+
+    /// Abort hooks for replica `r`'s drive: trip on [`Router::kill`] or
+    /// after a deterministic token budget.
+    pub fn abort_hooks(&self, replica: usize, kill_after_tokens: Option<u64>) -> AbortHooks {
+        AbortHooks {
+            router: self.clone(),
+            replica,
+            flag: Arc::clone(&self.kill_flags[replica]),
+            budget: kill_after_tokens,
+        }
+    }
+
+    fn killed(&self, replica: usize) -> bool {
+        self.kill_flags[replica].load(Ordering::SeqCst)
+    }
+
+    /// Results so far (insertion order), deduplicated by id.
+    pub fn results(&self) -> Vec<GenResult> {
+        self.shared.lock().unwrap().results.clone()
+    }
+
+    /// Every placement in order, `(request id, replica)`.
+    pub fn assignments(&self) -> Vec<(u64, usize)> {
+        self.shared.lock().unwrap().assignments.clone()
+    }
+
+    fn served_by(&self, replica: usize) -> u64 {
+        self.shared.lock().unwrap().served_by[replica]
+    }
+
+    fn stranded(&self) -> usize {
+        self.shared.lock().unwrap().stranded.len()
+    }
+}
+
+/// Replica r's view of the shared router — a [`RequestSource`] that
+/// pumps the front door and drains its own assignment queue.
+pub struct RouterSource {
+    shared: Arc<Mutex<Shared>>,
+    replica: usize,
+}
+
+impl RequestSource for RouterSource {
+    fn poll(&mut self, now_ms: f64) -> Vec<ArrivedRequest> {
+        let mut sh = self.shared.lock().unwrap();
+        let arrivals = sh.front.poll(now_ms);
+        for a in arrivals {
+            sh.place(a, true);
+        }
+        if !sh.alive[self.replica] {
+            return Vec::new();
+        }
+        let mine: Vec<ArrivedRequest> = sh.pending[self.replica].drain(..).collect();
+        for a in &mine {
+            sh.outstanding[self.replica].insert(a.req.id, a.clone());
+        }
+        mine
+    }
+
+    fn next_arrival_ms(&self) -> Option<f64> {
+        let sh = self.shared.lock().unwrap();
+        if !sh.pending[self.replica].is_empty() {
+            // work already assigned: poll immediately
+            return Some(0.0);
+        }
+        sh.front.next_arrival_ms()
+    }
+
+    fn closed(&self) -> bool {
+        let sh = self.shared.lock().unwrap();
+        if !sh.alive[self.replica] {
+            return true;
+        }
+        sh.front.closed() && sh.unresolved == 0
+    }
+
+    fn on_result(&mut self, result: &GenResult) {
+        let mut sh = self.shared.lock().unwrap();
+        if !sh.resolve(self.replica, result.id) {
+            return; // late duplicate from a drained replica
+        }
+        sh.served_by[self.replica] += 1;
+        sh.results.push(result.clone());
+        sh.front.on_result(result);
+    }
+
+    fn on_reject(&mut self, reply: &ServeReply) {
+        let mut sh = self.shared.lock().unwrap();
+        if !sh.resolve(self.replica, reply.id()) {
+            return;
+        }
+        sh.front.on_reject(reply);
+    }
+
+    fn wait(&mut self, timeout: Duration) {
+        // Sleep in short slices *outside* the lock: another replica's
+        // poll may route work to us meanwhile, and the front door is
+        // shared — blocking inside it would stall the whole fleet.
+        let deadline = Instant::now() + timeout;
+        loop {
+            {
+                let sh = self.shared.lock().unwrap();
+                if !sh.pending[self.replica].is_empty() || !sh.alive[self.replica] {
+                    return;
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return;
+            }
+            std::thread::sleep((deadline - now).min(Duration::from_millis(2)));
+        }
+    }
+}
+
+/// Drive hooks that abort a replica's drive loop when its kill flag
+/// trips — externally via [`Router::kill`], or on its own after a
+/// deterministic token budget (the failover tests' kill switch).
+pub struct AbortHooks {
+    router: Router,
+    replica: usize,
+    flag: Arc<AtomicBool>,
+    budget: Option<u64>,
+}
+
+impl DriveHooks for AbortHooks {
+    fn wants_view(&mut self, received: u64) -> bool {
+        if let Some(b) = self.budget {
+            if received >= b && !self.flag.load(Ordering::SeqCst) {
+                // reroutes this replica's work, then trips our flag
+                self.router.kill(self.replica);
+            }
+        }
+        self.flag.load(Ordering::SeqCst)
+    }
+
+    fn after_token(&mut self, _wired: &Wired, _view: &DriveView) -> Result<bool> {
+        // only reached when the flag is set (wants_view gates the call)
+        anyhow::bail!("replica {} killed", self.replica)
+    }
+}
+
+/// Run `engines` as pipeline replicas behind one router fed by `front`.
+///
+/// Each replica runs [`Engine::generate_from_source_hooked`] in its own
+/// thread over its own [`AdmissionQueue`] (policy cloned from
+/// `cfg.policy`).  A replica whose drive dies has its requests rerouted
+/// to survivors; with `cfg.respawn` it may then be rebuilt and revived.
+/// Returns once every replica's drive loop has exited — i.e. the front
+/// source is closed and every accepted request was resolved (or no
+/// replica is left to resolve it).
+pub fn drive_replicated(
+    engines: Vec<Engine>,
+    front: Box<dyn RequestSource>,
+    ccfg: &ContinuousConfig,
+    cfg: &RouterConfig,
+) -> Result<ReplicatedOutcome> {
+    let n = engines.len();
+    anyhow::ensure!(n >= 1, "drive_replicated needs at least one engine");
+    let router = Router::new(front, n, cfg.affinity, cfg.trace.clone());
+    let budgets: Vec<Option<u64>> = (0..n)
+        .map(|r| {
+            cfg.kill_after_tokens
+                .iter()
+                .find(|(kr, _)| *kr == r)
+                .map(|(_, b)| *b)
+        })
+        .collect();
+    let respawn = &cfg.respawn;
+    let mut outcomes: Vec<ReplicaOutcome> = Vec::with_capacity(n);
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(n);
+        for (r, mut engine) in engines.into_iter().enumerate() {
+            if let Some(m) = cfg.metrics.get(r) {
+                engine.set_metrics(m);
+            }
+            let router = router.clone();
+            let policy = cfg.policy.clone();
+            let budget = budgets[r];
+            handles.push(s.spawn(move || {
+                let mut deaths = 0u32;
+                let mut stats = None;
+                let mut engine_opt = Some(engine);
+                while let Some(mut engine) = engine_opt.take() {
+                    let mut queue =
+                        AdmissionQueue::new(Box::new(router.source(r)), policy.clone());
+                    // budget applies to the first life only — a respawned
+                    // replica is not re-killed
+                    let budget = if deaths == 0 { budget } else { None };
+                    let mut hooks = router.abort_hooks(r, budget);
+                    match engine.generate_from_source_hooked(&mut queue, ccfg, &mut hooks) {
+                        Ok((_, st)) => {
+                            stats = Some(st);
+                            let _ = engine.shutdown();
+                            if router.killed(r) {
+                                // killed while idle: nothing was lost, but
+                                // make sure the replica is out of rotation
+                                router.drain_dead(r);
+                            }
+                        }
+                        Err(_) => {
+                            deaths += 1;
+                            drop(queue);
+                            let _ = engine.shutdown();
+                            router.drain_dead(r);
+                            if let Some(f) = respawn {
+                                if let Some(fresh) = f(r) {
+                                    router.revive(r);
+                                    engine_opt = Some(fresh);
+                                }
+                            }
+                        }
+                    }
+                }
+                ReplicaOutcome {
+                    replica: r,
+                    stats,
+                    deaths,
+                    served: router.served_by(r),
+                }
+            }));
+        }
+        for h in handles {
+            match h.join() {
+                Ok(o) => outcomes.push(o),
+                Err(_) => outcomes.push(ReplicaOutcome {
+                    replica: outcomes.len(),
+                    stats: None,
+                    deaths: 1,
+                    served: 0,
+                }),
+            }
+        }
+    });
+    let mut results = router.results();
+    results.sort_by_key(|r| r.id);
+    Ok(ReplicatedOutcome {
+        results,
+        replicas: outcomes,
+        assignments: router.assignments(),
+        stranded: router.stranded(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::admission::QueueSource;
+    use crate::coordinator::api::GenRequest;
+
+    fn reqs(n: u64) -> Vec<GenRequest> {
+        (1..=n).map(|i| GenRequest::new(i, vec![1, 2, 3], 8)).collect()
+    }
+
+    #[test]
+    fn least_loaded_placement_balances() {
+        let front = Box::new(QueueSource::new(&reqs(6)));
+        let router = Router::new(front, 3, true, Tracer::default());
+        let mut s0 = router.source(0);
+        let got = s0.poll(0.0);
+        // all six arrive at once; least-work routing deals them 2-2-2
+        assert_eq!(got.len(), 2, "replica 0 should get a third of the burst");
+        let mut s1 = router.source(1);
+        let mut s2 = router.source(2);
+        assert_eq!(s1.poll(0.0).len(), 2);
+        assert_eq!(s2.poll(0.0).len(), 2);
+    }
+
+    #[test]
+    fn affinity_pins_sessions() {
+        let rs: Vec<GenRequest> = (1..=4u64)
+            .map(|i| GenRequest::new(i, vec![1], 8).with_session(7))
+            .collect();
+        let front = Box::new(QueueSource::new(&rs));
+        let router = Router::new(front, 2, true, Tracer::default());
+        let mut s0 = router.source(0);
+        let mut s1 = router.source(1);
+        let a = s0.poll(0.0).len() + s1.poll(0.0).len();
+        assert_eq!(a, 4);
+        let by_replica: HashSet<usize> =
+            router.assignments().iter().map(|&(_, r)| r).collect();
+        assert_eq!(by_replica.len(), 1, "one session must stay on one replica");
+    }
+
+    #[test]
+    fn drain_dead_reroutes_pending_and_outstanding() {
+        let front = Box::new(QueueSource::new(&reqs(4)));
+        let router = Router::new(front, 2, false, Tracer::default());
+        let mut s0 = router.source(0);
+        let mut s1 = router.source(1);
+        let mine0 = s0.poll(0.0); // 0's share moves to outstanding
+        assert!(!mine0.is_empty());
+        router.kill(0);
+        // everything replica 0 owned is re-assigned to replica 1
+        let mine1 = s1.poll(0.0);
+        assert_eq!(mine1.len(), 4, "survivor owns the whole queue");
+        assert!(s0.closed(), "dead replica's source reports closed");
+        // resolve all on replica 1 → router closes for everyone
+        for a in &mine1 {
+            s1.on_result(&GenResult {
+                id: a.req.id,
+                tokens: vec![1],
+                ttft_ms: 1.0,
+                total_ms: 2.0,
+            });
+        }
+        assert!(s1.closed());
+        assert_eq!(router.results().len(), 4);
+    }
+
+    #[test]
+    fn duplicate_results_resolve_once() {
+        let front = Box::new(QueueSource::new(&reqs(1)));
+        let router = Router::new(front, 2, false, Tracer::default());
+        let mut s0 = router.source(0);
+        let mut s1 = router.source(1);
+        let got = s0.poll(0.0);
+        assert_eq!(got.len(), 1);
+        router.kill(0); // reroutes req 1 to replica 1
+        let got1 = s1.poll(0.0);
+        assert_eq!(got1.len(), 1);
+        let res = GenResult {
+            id: 1,
+            tokens: vec![5],
+            ttft_ms: 1.0,
+            total_ms: 2.0,
+        };
+        s0.on_result(&res); // late completion from the dying pipeline
+        s1.on_result(&res);
+        assert_eq!(router.results().len(), 1, "exactly one answer per id");
+        assert!(s1.closed());
+    }
+}

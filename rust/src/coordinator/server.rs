@@ -63,6 +63,7 @@ use std::time::{Duration, Instant};
 use super::admission::{AdmissionPolicy, AdmissionQueue, IncomingRequest, LiveSource};
 use super::api::{GenRequest, GenResult, ServeReply, SloClass};
 use super::engine::Engine;
+use super::router::{drive_replicated, RouterConfig};
 use super::scheduler::ContinuousConfig;
 use crate::util::Json;
 use crate::workload::Corpus;
@@ -95,46 +96,8 @@ pub fn serve(listener: TcpListener, engine: &mut Engine, cfg: &ServerConfig) -> 
     let addr = listener.local_addr().context("listener addr")?;
     let (in_tx, in_rx) = mpsc::channel::<IncomingRequest>();
     let stop = Arc::new(AtomicBool::new(false));
-    let metrics = cfg.metrics.clone();
     let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
-
-    // acceptor thread: one handler thread per connection
-    listener.set_nonblocking(false).context("listener mode")?;
-    let acceptor = {
-        let stop = stop.clone();
-        let handlers = handlers.clone();
-        let in_tx = in_tx.clone();
-        std::thread::Builder::new()
-            .name("serve-accept".into())
-            .spawn(move || {
-                for stream in listener.incoming() {
-                    if stop.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    let Ok(stream) = stream else { continue };
-                    let tx = in_tx.clone();
-                    let hstop = stop.clone();
-                    let hmetrics = metrics.clone();
-                    let Ok(h) = std::thread::Builder::new()
-                        .name("serve-conn".into())
-                        .spawn(move || {
-                            let _ = handle_conn(stream, tx, hstop, hmetrics);
-                        })
-                    else {
-                        continue;
-                    };
-                    let mut hs = handlers.lock().expect("handlers lock");
-                    // reap handlers whose connection already ended, so a
-                    // run-forever server under connection churn doesn't
-                    // accumulate finished threads (dropping a finished
-                    // handle detaches and reclaims it)
-                    hs.retain(|h| !h.is_finished());
-                    hs.push(h);
-                }
-            })
-            .context("spawning acceptor")?
-    };
-    drop(in_tx);
+    let acceptor = spawn_acceptor(listener, &stop, &handlers, in_tx, cfg.metrics.clone())?;
 
     // the serving drive: continuous batching over the live source, until
     // the source closes (max_requests accepted, all of them served)
@@ -150,15 +113,105 @@ pub fn serve(listener: TcpListener, engine: &mut Engine, cfg: &ServerConfig) -> 
     // waits — otherwise those joins would deadlock.
     stop.store(true, Ordering::Relaxed);
     drop(queue);
+    join_server_threads(addr, acceptor, &handlers);
+
+    let (results, _stats) = drive?;
+    Ok(results.len())
+}
+
+/// [`serve`] over K pipeline replicas behind a
+/// [`super::router::Router`]: every connection feeds one shared
+/// [`LiveSource`]; the router scores each request onto a replica
+/// (least outstanding work, session affinity via the request's
+/// `"session"` field) and each replica runs its own serving drive.
+/// `cfg.policy` governs the per-replica admission queues (the
+/// `rcfg.policy` field is overwritten); `rcfg` controls routing,
+/// failover, and respawn.  Returns the number of requests answered with
+/// a result.
+pub fn serve_replicated(
+    listener: TcpListener,
+    engines: Vec<Engine>,
+    cfg: &ServerConfig,
+    mut rcfg: RouterConfig,
+) -> Result<usize> {
+    anyhow::ensure!(!engines.is_empty(), "serve_replicated needs at least one engine");
+    let addr = listener.local_addr().context("listener addr")?;
+    let (in_tx, in_rx) = mpsc::channel::<IncomingRequest>();
+    let stop = Arc::new(AtomicBool::new(false));
+    let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+    let acceptor = spawn_acceptor(listener, &stop, &handlers, in_tx, cfg.metrics.clone())?;
+
+    // every replica clamps to the tightest compiled shape so any replica
+    // can serve any request
+    let max_new_cap = engines.iter().map(|e| e.max_new_cap()).min().unwrap_or(1);
+    let source = LiveSource::new(in_rx, cfg.max_requests, max_new_cap);
+    rcfg.policy = cfg.policy.clone();
+    let outcome = drive_replicated(engines, Box::new(source), &cfg.continuous, &rcfg);
+
+    // same teardown as `serve`: by the time `drive_replicated` returns
+    // the router (and with it the live source) is dropped, so pending
+    // reply waits have already errored out.
+    stop.store(true, Ordering::Relaxed);
+    join_server_threads(addr, acceptor, &handlers);
+
+    Ok(outcome?.results.len())
+}
+
+/// Acceptor thread: one handler thread per connection.
+fn spawn_acceptor(
+    listener: TcpListener,
+    stop: &Arc<AtomicBool>,
+    handlers: &Arc<Mutex<Vec<JoinHandle<()>>>>,
+    in_tx: Sender<IncomingRequest>,
+    metrics: crate::obs::MetricsRegistry,
+) -> Result<JoinHandle<()>> {
+    listener.set_nonblocking(false).context("listener mode")?;
+    let stop = stop.clone();
+    let handlers = handlers.clone();
+    std::thread::Builder::new()
+        .name("serve-accept".into())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let tx = in_tx.clone();
+                let hstop = stop.clone();
+                let hmetrics = metrics.clone();
+                let Ok(h) = std::thread::Builder::new()
+                    .name("serve-conn".into())
+                    .spawn(move || {
+                        let _ = handle_conn(stream, tx, hstop, hmetrics);
+                    })
+                else {
+                    continue;
+                };
+                let mut hs = handlers.lock().expect("handlers lock");
+                // reap handlers whose connection already ended, so a
+                // run-forever server under connection churn doesn't
+                // accumulate finished threads (dropping a finished
+                // handle detaches and reclaims it)
+                hs.retain(|h| !h.is_finished());
+                hs.push(h);
+            }
+        })
+        .context("spawning acceptor")
+}
+
+/// Wake the acceptor with a loopback connection, then join it and every
+/// handler (handlers wake on their read timeout).
+fn join_server_threads(
+    addr: std::net::SocketAddr,
+    acceptor: JoinHandle<()>,
+    handlers: &Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
     let _ = TcpStream::connect(addr);
     let _ = acceptor.join();
     let hs = std::mem::take(&mut *handlers.lock().expect("handlers lock"));
     for h in hs {
         let _ = h.join();
     }
-
-    let (results, _stats) = drive?;
-    Ok(results.len())
 }
 
 /// True iff the line is the `{"cmd": "metrics"}` control command (any
@@ -269,6 +322,9 @@ pub fn parse_request(line: &str) -> Result<GenRequest> {
     // at admission by the LiveSource; this only rejects nonsense
     let mut req = GenRequest::new(0, prompt, max_new.clamp(1, 96)).with_class(class);
     req.deadline_ms = deadline_ms;
+    if let Some(s) = j.get("session").and_then(|x| x.as_usize()) {
+        req = req.with_session(s as u64);
+    }
     Ok(req)
 }
 
@@ -342,6 +398,14 @@ mod tests {
         let r = parse_request(r#"{"prompt": "hello", "max_new_tokens": 8}"#).unwrap();
         assert_eq!(r.prompt, vec![104, 101, 108, 108, 111]);
         assert_eq!(r.max_new_tokens, 8);
+    }
+
+    #[test]
+    fn parse_session_handle() {
+        let r = parse_request(r#"{"prompt": "hi", "session": 42}"#).unwrap();
+        assert_eq!(r.session, Some(42));
+        let r = parse_request(r#"{"prompt": "hi"}"#).unwrap();
+        assert_eq!(r.session, None);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! ```text
 //! edgeshard repro <table1|table4|fig7|fig8|fig9|fig10|adaptive|churn|serving|all> [--seed N]
 //! edgeshard bench serving [--requests N] [--runs N] [--seed N] [--out PATH] [--trace PATH]
+//! edgeshard bench replicas [--requests N] [--runs N] [--seed N] [--k-max K] [--out PATH]
 //! edgeshard plan --model <7b|13b|70b> [--bandwidth MBPS] [--objective latency|throughput] [--seed N]
 //! edgeshard profile --model <7b|13b|70b> [--bandwidth MBPS]
 //! edgeshard gantt --model <7b|13b|70b> [--strategy bubble|nobubble] [--micro N]
@@ -126,6 +127,7 @@ fn print_usage() {
         "edgeshard — EdgeShard reproduction (collaborative edge LLM inference)\n\n\
          USAGE:\n  edgeshard repro <table1|table4|fig7|fig8|fig9|fig10|adaptive|churn|serving|all> [--seed N]\n  \
          edgeshard bench serving [--requests N] [--runs N] [--seed N] [--out BENCH_serving.json] [--trace PATH]\n  \
+         edgeshard bench replicas [--requests N] [--runs N] [--seed N] [--k-max K] [--out BENCH_replicas.json]\n  \
          edgeshard plan --model 7b [--bandwidth 1] [--objective latency] [--seed N]\n  \
          edgeshard profile --model 7b [--bandwidth 1]\n  \
          edgeshard gantt --model 7b [--strategy nobubble] [--micro 4]\n  \
@@ -198,7 +200,18 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 args.get("trace").map(std::path::Path::new),
             )
         }
-        other => bail!("unknown bench `{other}` (try `serving`)"),
+        "replicas" => {
+            let cfg = edgeshard::repro::replicas::ReplicasBenchConfig {
+                requests: args.get_usize("requests", 24)?,
+                seed: args.get_usize("seed", 0)? as u64,
+                runs: args.get_usize("runs", 2)?,
+                k_max: args.get_usize("k-max", 3)?,
+                ..Default::default()
+            };
+            let out = args.get("out").unwrap_or("BENCH_replicas.json");
+            edgeshard::repro::replicas::run(&cfg, std::path::Path::new(out))
+        }
+        other => bail!("unknown bench `{other}` (try `serving`, `replicas`)"),
     }
 }
 

@@ -17,10 +17,12 @@
 
 pub mod baselines;
 pub mod latency;
+pub mod replicas;
 pub mod throughput;
 
 pub use baselines::{CloudEdgeEven, CloudEdgeOpt, EdgeShardEven, EdgeSolo};
 pub use latency::LatencyDp;
+pub use replicas::{ReplicaPlan, ReplicaPlanner};
 pub use throughput::ThroughputDp;
 
 use crate::cluster::Cluster;

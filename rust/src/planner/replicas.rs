@@ -1,0 +1,541 @@
+//! Replica-aware joint planning: how many parallel pipelines, over which
+//! devices, with which partition each.
+//!
+//! The paper's Algorithm 2 maximizes the throughput of a *single*
+//! pipeline over the device pool.  With a big pool the optimal serving
+//! configuration is often **K parallel pipeline replicas**, each with its
+//! own device subset and partition, behind one front-door router (see
+//! [`crate::coordinator::router`]): depth stops paying once the
+//! per-boundary communication floor dominates, while replicas multiply
+//! aggregate tokens/s almost linearly.
+//!
+//! [`ReplicaPlanner`] solves the joint problem by reusing the existing
+//! throughput DP as the inner solve:
+//!
+//! 1. every replica's pool **shares the source device** — the privacy
+//!    constraint (Eq. 4) pins the embedding layer where prompts arrive,
+//!    so each replica's first stage lives on the source and the
+//!    remaining devices are partitioned **disjointly** across replicas.
+//!    For K ≥ 2 the source is kept *thin*: layers past the pinned
+//!    prefix are priced out on it (the source's compute is shared by
+//!    every replica, so piling model layers onto it would let K fake
+//!    pipelines time-share one physical device);
+//! 2. for each candidate replica count K, the non-source pool is split
+//!    by two deterministic strategies (class-balanced round-robin and
+//!    contiguous blocks over the class-sorted device list), each subset
+//!    is solved with [`algo2_exact`] / [`algo2_classes`], and a bounded
+//!    local search migrates single devices from the fastest replica to
+//!    the slowest while that improves the aggregate;
+//! 3. candidates are scored by **aggregate tokens/s** with the source
+//!    modeled as a shared serial server: replica `i` consumes
+//!    `src_ms[i]` of source time per token, so admissible rates satisfy
+//!    `Σ rate_i · src_ms[i] ≤ 1000 ms/s` — a waterfill over that budget
+//!    (cheapest source users first) yields the score.  The source's
+//!    memory is likewise charged once across *all* replica front
+//!    stages;
+//! 4. K = 1 runs the unmodified single-pipeline DP, so the degenerate
+//!    case reproduces [`crate::planner::ThroughputDp`] exactly and
+//!    existing plans are unchanged.
+
+use super::throughput::{algo2_classes, algo2_exact};
+use super::{pipeline_bottleneck_ms, Plan, PlanError};
+use crate::cluster::Cluster;
+use crate::profiler::ProfiledTraces;
+
+/// Per-layer cost planted on the source for layers past the pinned
+/// prefix when K ≥ 2 — high enough that the inner DP only places them
+/// there when memory leaves no alternative (and the candidate then
+/// scores ≈ 0, losing to smaller K).
+const THIN_SOURCE_PENALTY_MS: f64 = 1e12;
+
+/// A joint replica configuration: K per-replica plans over disjoint
+/// device subsets (plus the shared source), scored by aggregate
+/// throughput.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplicaPlan {
+    /// One plan per replica; every plan's first stage is on the source.
+    pub replicas: Vec<Plan>,
+    /// Pipeline bottleneck per replica, ms/token (its solo rate).
+    pub per_replica_ms: Vec<f64>,
+    /// Source time consumed per token of each replica, ms — the shared
+    /// front-door work (embedding stage and any other source-resident
+    /// layers).
+    pub source_ms: Vec<f64>,
+    /// Predicted aggregate throughput, tokens/s, after waterfilling the
+    /// shared source budget.
+    pub predicted_tps: f64,
+}
+
+impl ReplicaPlan {
+    /// Replica count K.
+    pub fn k(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Human-readable strategy, e.g.
+    /// `K=2: [d0:0..5 → d3:5..34] | [d0:0..2 → d7:2..34]`.
+    pub fn describe(&self) -> String {
+        let parts: Vec<String> = self.replicas.iter().map(|p| p.describe()).collect();
+        format!("K={}: {}", self.k(), parts.join(" | "))
+    }
+}
+
+/// Joint replica-count / device-partition / layer-partition solver.
+#[derive(Debug, Clone)]
+pub struct ReplicaPlanner {
+    /// Upper bound on the replica count explored.
+    pub max_replicas: usize,
+    /// Batch size the inner throughput DP sizes memory for.
+    pub batch: usize,
+    /// Local-search budget: single-device migrations tried per candidate.
+    pub refine_moves: usize,
+}
+
+impl Default for ReplicaPlanner {
+    fn default() -> Self {
+        ReplicaPlanner {
+            max_replicas: 4,
+            batch: 1,
+            refine_moves: 4,
+        }
+    }
+}
+
+/// One replica pool's inner solve — the same exact/class-compressed
+/// switch as [`crate::planner::ThroughputDp`], so K = 1 reproduces the
+/// single-pipeline planner bit for bit.
+fn inner_solve(
+    traces: &ProfiledTraces,
+    cluster: &Cluster,
+    pool: &[usize],
+    batch: usize,
+) -> Result<Plan, PlanError> {
+    if pool.len() <= 8 {
+        algo2_exact(traces, cluster, pool, batch)
+    } else {
+        algo2_classes(traces, cluster, pool, batch)
+    }
+}
+
+/// Traces where every layer past the pinned prefix is priced out on the
+/// source (memory footprints untouched, so feasibility is unchanged).
+fn thin_source_traces(traces: &ProfiledTraces, source: usize) -> ProfiledTraces {
+    let mut t = traces.clone();
+    for i in 1..t.n_layers {
+        t.avg_ms[i][source] = THIN_SOURCE_PENALTY_MS;
+        t.prefill_ms[i][source] = THIN_SOURCE_PENALTY_MS;
+        t.decode_ms[i][source] = THIN_SOURCE_PENALTY_MS;
+    }
+    t
+}
+
+/// Waterfill the shared source budget: replicas want their solo rate
+/// `1000 / per_ms[i]` but each token costs `src_ms[i]` on the source,
+/// which has 1000 ms of time per second.  Cheapest source users are
+/// served first; the return value is the admissible aggregate tokens/s.
+fn waterfill_tps(per_ms: &[f64], src_ms: &[f64]) -> f64 {
+    let mut order: Vec<usize> = (0..per_ms.len()).collect();
+    order.sort_by(|&a, &b| src_ms[a].total_cmp(&src_ms[b]));
+    let mut budget = 1000.0;
+    let mut total = 0.0;
+    for &i in &order {
+        let want = if per_ms[i] > 0.0 { 1000.0 / per_ms[i] } else { 0.0 };
+        let granted = if src_ms[i] <= 1e-12 {
+            want
+        } else {
+            want.min((budget / src_ms[i]).max(0.0))
+        };
+        total += granted;
+        budget -= granted * src_ms[i];
+    }
+    total
+}
+
+impl ReplicaPlanner {
+    pub fn new() -> Self {
+        ReplicaPlanner::default()
+    }
+
+    /// Solve the joint problem over `pool` (must contain the source).
+    /// Returns the best configuration found across K = 1..=`max_replicas`;
+    /// K = 1 is always a candidate, so the result is never worse than the
+    /// single-pipeline plan.
+    pub fn solve(
+        &self,
+        traces: &ProfiledTraces,
+        cluster: &Cluster,
+        pool: &[usize],
+    ) -> Result<ReplicaPlan, PlanError> {
+        let batch = self.batch.max(1);
+        if !pool.contains(&cluster.source) {
+            return Err(PlanError::Infeasible("pool must contain source".into()));
+        }
+        // Non-source devices.  `others` keeps the caller's order (the K=1
+        // degenerate case must enumerate exactly like ThroughputDp);
+        // `sorted` is class-ordered so K >= 2 partitions are deterministic
+        // and class-balanced (identical hardware is interchangeable).
+        let others: Vec<usize> = pool
+            .iter()
+            .copied()
+            .filter(|&d| d != cluster.source)
+            .collect();
+        let mut sorted = others.clone();
+        sorted.sort_by(|&a, &b| {
+            let da = &cluster.devices[a];
+            let db = &cluster.devices[b];
+            (&da.class.name, da.usable_mem_bytes, a).cmp(&(&db.class.name, db.usable_mem_bytes, b))
+        });
+
+        let k_max = self.max_replicas.max(1).min(others.len().max(1));
+        let thin = if k_max >= 2 {
+            Some(thin_source_traces(traces, cluster.source))
+        } else {
+            None
+        };
+        let mut best: Option<ReplicaPlan> = None;
+        let mut first_err: Option<PlanError> = None;
+        for k in 1..=k_max {
+            let candidates: Vec<Vec<Vec<usize>>> = if k == 1 {
+                vec![vec![others.clone()]]
+            } else {
+                vec![split_round_robin(&sorted, k), split_blocks(&sorted, k)]
+            };
+            // K = 1 keeps the source fully usable (single-pipeline DP);
+            // K >= 2 sees the thinned source.
+            let inner_traces = match &thin {
+                Some(t) if k >= 2 => t,
+                _ => traces,
+            };
+            for mut subsets in candidates {
+                match self.solve_partition(traces, inner_traces, cluster, &mut subsets, batch) {
+                    Ok(rp) => {
+                        let better = best
+                            .as_ref()
+                            .map(|b| rp.predicted_tps > b.predicted_tps * (1.0 + 1e-9))
+                            .unwrap_or(true);
+                        if better {
+                            best = Some(rp);
+                        }
+                    }
+                    Err(e) => {
+                        first_err.get_or_insert(e);
+                    }
+                }
+            }
+        }
+        best.ok_or_else(|| {
+            first_err.unwrap_or_else(|| PlanError::Infeasible("no feasible replica split".into()))
+        })
+    }
+
+    /// Plan a single replica over `subset` ∪ {source} — used by the
+    /// router's rebalance path to re-plan a dead replica's surviving
+    /// devices into a fresh pipeline.  The source stays thin (other
+    /// replicas are still running on it).
+    pub fn plan_subset(
+        &self,
+        traces: &ProfiledTraces,
+        cluster: &Cluster,
+        subset: &[usize],
+    ) -> Result<Plan, PlanError> {
+        let thin = thin_source_traces(traces, cluster.source);
+        let mut pool = vec![cluster.source];
+        pool.extend(subset.iter().copied().filter(|&d| d != cluster.source));
+        inner_solve(&thin, cluster, &pool, self.batch.max(1))
+    }
+
+    /// Solve one concrete partition, refine it with bounded single-device
+    /// migrations, and enforce the shared-source memory budget.
+    fn solve_partition(
+        &self,
+        traces: &ProfiledTraces,
+        inner_traces: &ProfiledTraces,
+        cluster: &Cluster,
+        subsets: &mut [Vec<usize>],
+        batch: usize,
+    ) -> Result<ReplicaPlan, PlanError> {
+        let mut plans = solve_subsets(inner_traces, cluster, subsets, batch)?;
+        let mut score = self.score(&plans, traces, cluster, batch)?;
+        // Local search: move one device from the fastest replica (lowest
+        // bottleneck — the one with capacity to spare) to the slowest,
+        // keep the move iff the waterfilled aggregate improves.
+        if subsets.len() > 1 {
+            for _ in 0..self.refine_moves {
+                let worst = argmax(&score.per_replica_ms);
+                let donor = argmin(&score.per_replica_ms);
+                if donor == worst || subsets[donor].len() <= 1 {
+                    break;
+                }
+                let mut improved = false;
+                for di in 0..subsets[donor].len() {
+                    let mut trial: Vec<Vec<usize>> = subsets.to_vec();
+                    let dev = trial[donor].remove(di);
+                    trial[worst].push(dev);
+                    let trial_plans = match solve_subsets(inner_traces, cluster, &trial, batch) {
+                        Ok(p) => p,
+                        Err(_) => continue,
+                    };
+                    let trial_score = match self.score(&trial_plans, traces, cluster, batch) {
+                        Ok(s) => s,
+                        Err(_) => continue,
+                    };
+                    if trial_score.predicted_tps > score.predicted_tps * (1.0 + 1e-9) {
+                        subsets[donor].remove(di);
+                        subsets[worst].push(dev);
+                        plans = trial_plans;
+                        score = trial_score;
+                        improved = true;
+                        break;
+                    }
+                }
+                if !improved {
+                    break;
+                }
+            }
+        }
+        Ok(ReplicaPlan {
+            replicas: plans,
+            per_replica_ms: score.per_replica_ms,
+            source_ms: score.source_ms,
+            predicted_tps: score.predicted_tps,
+        })
+    }
+
+    /// Score a set of replica plans against the *real* traces: per-replica
+    /// bottleneck, shared-source waterfill, shared-source memory budget.
+    fn score(
+        &self,
+        plans: &[Plan],
+        traces: &ProfiledTraces,
+        cluster: &Cluster,
+        batch: usize,
+    ) -> Result<Score, PlanError> {
+        let src = cluster.source;
+        let mut source_bytes = 0u64;
+        let mut per_replica_ms = Vec::with_capacity(plans.len());
+        let mut source_ms = Vec::with_capacity(plans.len());
+        for p in plans {
+            per_replica_ms.push(pipeline_bottleneck_ms(p, traces, cluster));
+            let mut c = 0.0;
+            for s in p.stages.iter().filter(|s| s.device == src) {
+                c += traces.range_avg_ms(s.start, s.end, src);
+                source_bytes += traces.range_mem_bytes(s.start, s.end, batch);
+            }
+            source_ms.push(c);
+        }
+        // Every replica's source-resident stages charge the same physical
+        // device, so the sum must fit.
+        if source_bytes > cluster.devices[src].usable_mem_bytes {
+            return Err(PlanError::Oom);
+        }
+        let predicted_tps = waterfill_tps(&per_replica_ms, &source_ms);
+        Ok(Score {
+            per_replica_ms,
+            source_ms,
+            predicted_tps,
+        })
+    }
+}
+
+struct Score {
+    per_replica_ms: Vec<f64>,
+    source_ms: Vec<f64>,
+    predicted_tps: f64,
+}
+
+fn solve_subsets(
+    traces: &ProfiledTraces,
+    cluster: &Cluster,
+    subsets: &[Vec<usize>],
+    batch: usize,
+) -> Result<Vec<Plan>, PlanError> {
+    let mut plans = Vec::with_capacity(subsets.len());
+    for subset in subsets {
+        let mut pool = vec![cluster.source];
+        pool.extend(subset.iter().copied());
+        plans.push(inner_solve(traces, cluster, &pool, batch)?);
+    }
+    Ok(plans)
+}
+
+/// Deal the class-sorted devices round-robin into K subsets — each
+/// replica gets a near-identical class mix.
+fn split_round_robin(others: &[usize], k: usize) -> Vec<Vec<usize>> {
+    let mut subsets = vec![Vec::new(); k];
+    for (i, &d) in others.iter().enumerate() {
+        subsets[i % k].push(d);
+    }
+    subsets
+}
+
+/// Contiguous blocks over the class-sorted list — replicas of
+/// homogeneous hardware (useful when classes differ a lot and mixing
+/// them would drag every replica down to the weakest device).
+fn split_blocks(others: &[usize], k: usize) -> Vec<Vec<usize>> {
+    let mut subsets = vec![Vec::new(); k];
+    let per = others.len().div_ceil(k);
+    for (i, &d) in others.iter().enumerate() {
+        subsets[(i / per).min(k - 1)].push(d);
+    }
+    subsets
+}
+
+fn argmax(v: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn argmin(v: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x < v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::presets;
+    use crate::model::llama2_7b;
+    use crate::planner::{validate_plan, Planner, ThroughputDp};
+    use crate::profiler::{AnalyticProfiler, Workload};
+
+    fn setup() -> (ProfiledTraces, Cluster) {
+        let cluster = presets::paper_testbed(1.0, 0);
+        let traces =
+            AnalyticProfiler::default().profile(&llama2_7b(), &cluster, Workload::paper_default());
+        (traces, cluster)
+    }
+
+    #[test]
+    fn k1_reproduces_throughput_dp_exactly() {
+        let (t, c) = setup();
+        let pool: Vec<usize> = (0..6).collect();
+        let single = ThroughputDp::restricted(pool.clone()).plan(&t, &c).unwrap();
+        let rp = ReplicaPlanner {
+            max_replicas: 1,
+            ..ReplicaPlanner::default()
+        }
+        .solve(&t, &c, &pool)
+        .unwrap();
+        assert_eq!(rp.k(), 1);
+        assert_eq!(rp.replicas[0], single);
+        let solo = 1000.0 / pipeline_bottleneck_ms(&single, &t, &c);
+        assert!((rp.predicted_tps - solo).abs() < 1e-9);
+    }
+
+    #[test]
+    fn big_pool_prefers_multiple_replicas() {
+        let (t, c) = setup();
+        let pool: Vec<usize> = (0..c.len()).collect();
+        let rp = ReplicaPlanner::default().solve(&t, &c, &pool).unwrap();
+        let single = ThroughputDp::new().plan(&t, &c).unwrap();
+        let single_tps = 1000.0 / pipeline_bottleneck_ms(&single, &t, &c);
+        assert!(
+            rp.k() >= 2,
+            "expected K >= 2 on a {}-device pool, got {}",
+            c.len(),
+            rp.describe()
+        );
+        assert!(
+            rp.predicted_tps > single_tps,
+            "aggregate {} <= single-pipeline {}",
+            rp.predicted_tps,
+            single_tps
+        );
+    }
+
+    #[test]
+    fn every_replica_plan_is_valid_and_subsets_disjoint() {
+        let (t, c) = setup();
+        let pool: Vec<usize> = (0..c.len()).collect();
+        let rp = ReplicaPlanner::default().solve(&t, &c, &pool).unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for p in &rp.replicas {
+            validate_plan(p, &t, &c, 1).unwrap();
+            assert_eq!(p.stages[0].device, c.source, "first stage on source");
+            for s in p.stages.iter().filter(|s| s.device != c.source) {
+                assert!(
+                    seen.insert(s.device),
+                    "device {} used by two replicas: {}",
+                    s.device,
+                    rp.describe()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pool_without_source_is_infeasible() {
+        let (t, c) = setup();
+        let err = ReplicaPlanner::default()
+            .solve(&t, &c, &[1, 2, 3])
+            .unwrap_err();
+        assert!(matches!(err, PlanError::Infeasible(_)));
+    }
+
+    #[test]
+    fn shared_source_memory_is_charged_once_across_replicas() {
+        let (t, mut c) = setup();
+        // source can hold ~1.5 front stages: any K >= 2 over-subscribes it
+        let front = t.range_mem_bytes(0, 1, 1);
+        c.devices[0].usable_mem_bytes = front + front / 2;
+        let pool: Vec<usize> = (0..c.len()).collect();
+        let rp = ReplicaPlanner::default().solve(&t, &c, &pool).unwrap();
+        assert_eq!(rp.k(), 1, "source memory admits one front stage only");
+        let mut source_bytes = 0u64;
+        for p in &rp.replicas {
+            for s in p.stages.iter().filter(|s| s.device == 0) {
+                source_bytes += t.range_mem_bytes(s.start, s.end, 1);
+            }
+        }
+        assert!(source_bytes <= c.devices[0].usable_mem_bytes);
+    }
+
+    #[test]
+    fn waterfill_throttles_source_hogs() {
+        // two replicas wholly on the source (c == b) cannot beat one
+        let solo = waterfill_tps(&[10.0], &[10.0]);
+        let two = waterfill_tps(&[10.0, 10.0], &[10.0, 10.0]);
+        assert!((solo - 100.0).abs() < 1e-9);
+        assert!((two - 100.0).abs() < 1e-6, "got {}", two);
+        // thin front door (tiny c): replicas add up
+        let thin = waterfill_tps(&[10.0, 10.0], &[0.1, 0.1]);
+        assert!((thin - 200.0).abs() < 1e-6, "got {}", thin);
+    }
+
+    #[test]
+    fn plan_subset_plans_over_subset_plus_source() {
+        let (t, c) = setup();
+        let p = ReplicaPlanner::default()
+            .plan_subset(&t, &c, &[3, 4, 5])
+            .unwrap();
+        validate_plan(&p, &t, &c, 1).unwrap();
+        for s in &p.stages {
+            assert!([c.source, 3, 4, 5].contains(&s.device), "{}", p.describe());
+        }
+    }
+
+    #[test]
+    fn splits_are_deterministic_and_cover() {
+        let others = vec![5, 1, 9, 2, 7];
+        for k in 1..=3 {
+            for split in [split_round_robin(&others, k), split_blocks(&others, k)] {
+                let mut flat: Vec<usize> = split.iter().flatten().copied().collect();
+                flat.sort_unstable();
+                let mut want = others.clone();
+                want.sort_unstable();
+                assert_eq!(flat, want);
+                assert_eq!(split.len(), k);
+            }
+        }
+    }
+}

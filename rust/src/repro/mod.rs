@@ -12,6 +12,7 @@
 //! | adaptive | mid-generation link drop: static vs adaptive engine | [`adaptive::run`] |
 //! | churn | mid-generation device crash: failover + KV recovery | [`churn::run`] |
 //! | serving | continuous batching vs fixed groups (`edgeshard bench`) | [`serving::run`] |
+//! | replicas | capacity vs replica count K behind the router | [`replicas::run`] |
 //!
 //! Numbers come from the analytic profiler + the planners + the pipeline
 //! simulator (the paper's physical testbed is simulated per DESIGN.md);
@@ -24,6 +25,7 @@ pub mod adaptive;
 pub mod churn;
 pub mod figs;
 pub mod methods;
+pub mod replicas;
 pub mod serving;
 pub mod table1;
 pub mod table4;
@@ -60,6 +62,13 @@ pub fn run_all(seed: u64) -> anyhow::Result<()> {
         },
         Path::new("BENCH_serving.json"),
         None,
+    )?;
+    replicas::run(
+        &replicas::ReplicasBenchConfig {
+            seed,
+            ..Default::default()
+        },
+        Path::new("BENCH_replicas.json"),
     )?;
     Ok(())
 }

@@ -1,0 +1,499 @@
+//! Replicated-pipeline capacity bench: aggregate tokens/s and tail TTFT
+//! vs replica count K at a *fixed* device pool — the artifact behind
+//! `edgeshard bench replicas` and the serving CI job.
+//!
+//! Three sections:
+//!
+//! 1. **Planner** — the analytic testbed's joint replica-count /
+//!    partition solve ([`crate::planner::ReplicaPlanner`]) over a pool of
+//!    one source + six workers, against the best *single* pipeline the
+//!    throughput DP finds on the same pool.  The acceptance shape: the
+//!    planner picks K ≥ 2 and its predicted aggregate beats the best
+//!    single-pipeline plan.
+//! 2. **Capacity curve** — the same closed-loop ragged request mix served
+//!    on the sim backend at K = 1..k_max replicas partitioning the same
+//!    six devices: measured aggregate tokens/s, TTFT p50/p99, and
+//!    byte-identity of every per-request token stream against the K=1
+//!    run (routing changes *where*, never *what*).
+//! 3. **Failover** — K = 2 with a deterministic kill switch on replica 0
+//!    ([`RouterConfig::kill_after_tokens`]): the dead replica's queued
+//!    and in-flight requests re-enter routing, the trace completes on the
+//!    survivor, and per-replica metrics show the recovery window.
+//!
+//! Output: markdown under `results/replicas.md` plus machine-readable
+//! `BENCH_replicas.json` for the CI artifact.
+
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+use crate::cluster::{presets, Cluster, Device, DeviceClass};
+use crate::coordinator::admission::QueueSource;
+use crate::coordinator::api::{GenRequest, GenResult};
+use crate::coordinator::router::{drive_replicated, RouterConfig};
+use crate::coordinator::scheduler::ContinuousConfig;
+use crate::coordinator::{Engine, EngineConfig};
+use crate::metrics::Histogram;
+use crate::planner::{
+    pipeline_bottleneck_ms, Plan, PlanObjective, Planner, ReplicaPlanner, Stage, ThroughputDp,
+};
+use crate::profiler::{AnalyticProfiler, Workload};
+use crate::runtime::manifest::ManifestConfig;
+use crate::runtime::{ExecService, Manifest, WeightStore};
+use crate::util::{markdown_table, Json};
+use crate::workload::RaggedTraceGen;
+
+/// Bench knobs (defaults are what CI runs).
+#[derive(Debug, Clone)]
+pub struct ReplicasBenchConfig {
+    pub requests: usize,
+    pub seed: u64,
+    /// Continuous-batching pipeline depth per replica.
+    pub runs: usize,
+    pub gen_lens: Vec<usize>,
+    pub mean_burst: usize,
+    /// Replica counts swept: K = 1..=k_max over the fixed pool.
+    pub k_max: usize,
+    /// Failover section: kill replica 0 after this many folded token
+    /// frames.
+    pub kill_after_tokens: u64,
+}
+
+impl Default for ReplicasBenchConfig {
+    fn default() -> Self {
+        ReplicasBenchConfig {
+            requests: 24,
+            seed: 0,
+            runs: 2,
+            gen_lens: vec![4, 12, 24, 48],
+            mean_burst: 2,
+            k_max: 3,
+            kill_after_tokens: 8,
+        }
+    }
+}
+
+/// What the replica-aware planner said about the analytic pool.
+#[derive(Debug)]
+pub struct PlannerVerdict {
+    /// Pool size (source included).
+    pub pool: usize,
+    /// Replica count the joint solve picked.
+    pub k: usize,
+    /// Predicted aggregate tokens/s of the chosen replica set.
+    pub predicted_tps: f64,
+    /// Predicted tokens/s of the best *single* pipeline on the same pool.
+    pub single_tps: f64,
+    /// Devices per replica (source-shared stage 0 included).
+    pub replica_sizes: Vec<usize>,
+}
+
+/// One measured point of the capacity curve.
+#[derive(Debug)]
+pub struct CurvePoint {
+    pub k: usize,
+    pub tokens_per_s: f64,
+    pub makespan_ms: f64,
+    pub ttft_p50_ms: f64,
+    pub ttft_p99_ms: f64,
+    /// Per-request token streams byte-identical to the K=1 run.
+    pub tokens_identical: bool,
+    /// Results each replica resolved.
+    pub served_by: Vec<u64>,
+}
+
+/// What the kill-mid-run section measured.
+#[derive(Debug)]
+pub struct FailoverSummary {
+    pub requests: usize,
+    /// Requests answered with a result (must equal `requests`).
+    pub completed: usize,
+    /// Total drive-loop deaths across replicas (expect 1).
+    pub deaths: u32,
+    /// Placements made — reroutes append, so this exceeds `requests`.
+    pub placements: usize,
+    pub stranded: usize,
+    pub served_by: Vec<u64>,
+    /// `requests_completed` from each replica's own metrics registry —
+    /// the per-replica labels the recovery window shows up in.
+    pub metrics_completed: Vec<u64>,
+    pub ttft_p99_ms: f64,
+    /// Token streams byte-identical to the K=1 run despite the kill.
+    pub tokens_identical: bool,
+}
+
+/// Everything the bench produced.
+#[derive(Debug)]
+pub struct ReplicasBenchReport {
+    pub config: ReplicasBenchConfig,
+    pub planner: PlannerVerdict,
+    pub curve: Vec<CurvePoint>,
+    /// K of the highest measured aggregate tokens/s.
+    pub best_k: usize,
+    pub failover: FailoverSummary,
+}
+
+/// The bench model: the scenario-sized mini model compiled at [1, 8].
+fn bench_config() -> ManifestConfig {
+    ManifestConfig::mini_sim("tinyllama-replicas-sim", 16, 128)
+}
+
+/// Six identical sim workers — the fixed pool every K partitions.
+const POOL: usize = 6;
+
+fn bench_cluster() -> Cluster {
+    let devices = (0..POOL)
+        .map(|id| Device::new(id, DeviceClass::agx_orin()))
+        .collect();
+    Cluster::new(devices, 1000.0, 0.5)
+}
+
+/// Partition the pool into K contiguous device groups and split the
+/// model's layers evenly across each group's stages.
+fn replica_plans(k: usize, n_model_layers: usize) -> Vec<Plan> {
+    let per = POOL / k;
+    (0..k)
+        .map(|r| {
+            let devices: Vec<usize> = (r * per..(r + 1) * per).collect();
+            let s = devices.len();
+            let stages = devices
+                .iter()
+                .enumerate()
+                .map(|(i, &device)| Stage {
+                    device,
+                    start: i * n_model_layers / s,
+                    end: (i + 1) * n_model_layers / s,
+                })
+                .collect();
+            Plan {
+                objective: PlanObjective::Throughput,
+                stages,
+                predicted_ms: 0.0,
+            }
+        })
+        .collect()
+}
+
+fn token_rows(results: &[GenResult]) -> Vec<(u64, Vec<i32>)> {
+    let mut rows: Vec<(u64, Vec<i32>)> =
+        results.iter().map(|r| (r.id, r.tokens.clone())).collect();
+    rows.sort_by_key(|(id, _)| *id);
+    rows
+}
+
+fn ttft_histogram(results: &[GenResult]) -> Histogram {
+    let mut h = Histogram::new();
+    for r in results {
+        h.record(r.ttft_ms);
+    }
+    h
+}
+
+/// Section 1: the joint solve on the analytic testbed.
+fn planner_verdict(seed: u64) -> Result<PlannerVerdict> {
+    let cluster = presets::paper_testbed(1.0, seed);
+    let traces = AnalyticProfiler::default().profile(
+        &crate::model::llama2_7b(),
+        &cluster,
+        Workload::paper_default(),
+    );
+    // one source + six AGX workers — the pool the issue's acceptance
+    // criterion names
+    let pool: Vec<usize> = (0..7).collect();
+    let single_plan = ThroughputDp::restricted(pool.clone())
+        .plan(&traces, &cluster)
+        .context("single-pipeline baseline")?;
+    let single_tps = 1000.0 / pipeline_bottleneck_ms(&single_plan, &traces, &cluster);
+    let rp = ReplicaPlanner::new()
+        .solve(&traces, &cluster, &pool)
+        .context("replica solve")?;
+    Ok(PlannerVerdict {
+        pool: pool.len(),
+        k: rp.k(),
+        predicted_tps: rp.predicted_tps,
+        single_tps,
+        replica_sizes: rp.replicas.iter().map(|p| p.stages.len()).collect(),
+    })
+}
+
+/// Run the replicas bench; see the module docs.
+pub fn run_bench(cfg: &ReplicasBenchConfig) -> Result<ReplicasBenchReport> {
+    let planner = planner_verdict(cfg.seed)?;
+
+    let manifest = Manifest::synthetic(bench_config(), vec![1, 8]);
+    let weights = WeightStore::synthetic(&manifest, cfg.seed);
+    let (_svc, exec) = ExecService::start_sim(&manifest)?;
+    let cluster = bench_cluster();
+    let n_model_layers = manifest.config.n_layers + 2;
+    let engine_cfg = EngineConfig {
+        time_scale: 0.0,
+        ..EngineConfig::default()
+    };
+    let ccfg = ContinuousConfig {
+        runs: cfg.runs,
+        ..ContinuousConfig::default()
+    };
+
+    let gen = RaggedTraceGen {
+        mean_burst: cfg.mean_burst,
+        ..RaggedTraceGen::new(
+            manifest.config.prefill_len,
+            manifest.config.vocab_size as i32,
+            cfg.gen_lens.clone(),
+            cfg.seed,
+        )
+    };
+    let trace = gen.generate(cfg.requests);
+    let requests: Vec<GenRequest> = trace
+        .iter()
+        .map(|r| GenRequest::new(r.id, r.prompt.clone(), r.max_new_tokens))
+        .collect();
+
+    let build_engines = |k: usize| -> Result<Vec<Engine>> {
+        replica_plans(k, n_model_layers)
+            .iter()
+            .map(|plan| {
+                Engine::build(&manifest, &weights, exec.clone(), plan, &cluster, &engine_cfg)
+            })
+            .collect()
+    };
+
+    // section 2: the capacity curve — same pool, same trace, K sweep
+    let mut curve: Vec<CurvePoint> = Vec::new();
+    let mut reference: Vec<(u64, Vec<i32>)> = Vec::new();
+    for k in 1..=cfg.k_max.min(POOL) {
+        let engines = build_engines(k)?;
+        let front = Box::new(QueueSource::new(&requests));
+        let t0 = Instant::now();
+        let outcome = drive_replicated(engines, front, &ccfg, &RouterConfig::default())
+            .with_context(|| format!("capacity point k={k}"))?;
+        let makespan_ms = t0.elapsed().as_secs_f64() * 1e3;
+        anyhow::ensure!(
+            outcome.results.len() == requests.len(),
+            "k={k}: {} of {} requests served",
+            outcome.results.len(),
+            requests.len()
+        );
+        let rows = token_rows(&outcome.results);
+        if k == 1 {
+            reference = rows.clone();
+        }
+        let tokens: u64 = outcome.results.iter().map(|r| r.tokens.len() as u64).sum();
+        let mut ttft = ttft_histogram(&outcome.results);
+        curve.push(CurvePoint {
+            k,
+            tokens_per_s: tokens as f64 / (makespan_ms / 1e3).max(1e-9),
+            makespan_ms,
+            ttft_p50_ms: ttft.percentile(50.0),
+            ttft_p99_ms: ttft.percentile(99.0),
+            tokens_identical: rows == reference,
+            served_by: outcome.replicas.iter().map(|r| r.served).collect(),
+        });
+    }
+    let best_k = curve
+        .iter()
+        .max_by(|a, b| a.tokens_per_s.total_cmp(&b.tokens_per_s))
+        .map(|p| p.k)
+        .unwrap_or(1);
+
+    // section 3: kill replica 0 mid-run at K=2, no respawn — the
+    // survivor must absorb the dead replica's queued + in-flight work
+    let engines = build_engines(2)?;
+    let metrics: Vec<crate::obs::MetricsRegistry> =
+        (0..2).map(|_| crate::obs::MetricsRegistry::new()).collect();
+    let rcfg = RouterConfig {
+        metrics: metrics.clone(),
+        kill_after_tokens: vec![(0, cfg.kill_after_tokens)],
+        ..RouterConfig::default()
+    };
+    let front = Box::new(QueueSource::new(&requests));
+    let outcome =
+        drive_replicated(engines, front, &ccfg, &rcfg).context("failover run")?;
+    let mut ttft = ttft_histogram(&outcome.results);
+    let metrics_completed = metrics
+        .iter()
+        .map(|m| {
+            m.snapshot()
+                .get("counters")
+                .and_then(|c| c.get("requests_completed"))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0) as u64
+        })
+        .collect();
+    let failover = FailoverSummary {
+        requests: requests.len(),
+        completed: outcome.results.len(),
+        deaths: outcome.replicas.iter().map(|r| r.deaths).sum(),
+        placements: outcome.assignments.len(),
+        stranded: outcome.stranded,
+        served_by: outcome.replicas.iter().map(|r| r.served).collect(),
+        metrics_completed,
+        ttft_p99_ms: ttft.percentile(99.0),
+        tokens_identical: token_rows(&outcome.results) == reference,
+    };
+
+    Ok(ReplicasBenchReport {
+        config: cfg.clone(),
+        planner,
+        curve,
+        best_k,
+        failover,
+    })
+}
+
+/// Render the markdown `edgeshard bench replicas` emits.
+pub fn report_markdown(r: &ReplicasBenchReport) -> String {
+    let mut out = String::new();
+    out.push_str("# Replicated pipelines — capacity vs replica count (sim backend)\n\n");
+    out.push_str(&format!(
+        "planner (analytic testbed, pool of {}): picked K={} ({:?} stages/replica), \
+         predicted {:.2} tok/s vs best single pipeline {:.2} tok/s\n\n",
+        r.planner.pool,
+        r.planner.k,
+        r.planner.replica_sizes,
+        r.planner.predicted_tps,
+        r.planner.single_tps
+    ));
+    out.push_str(&format!(
+        "workload: {} requests, gen lengths {:?} in bursts of ~{}, seed {}\n\n",
+        r.config.requests, r.config.gen_lens, r.config.mean_burst, r.config.seed
+    ));
+    let rows: Vec<Vec<String>> = r
+        .curve
+        .iter()
+        .map(|p| {
+            vec![
+                format!("{}", p.k),
+                format!("{:.1}", p.tokens_per_s),
+                format!("{:.1}", p.ttft_p50_ms),
+                format!("{:.1}", p.ttft_p99_ms),
+                format!("{:.0}", p.makespan_ms),
+                format!("{:?}", p.served_by),
+                format!("{}", p.tokens_identical),
+            ]
+        })
+        .collect();
+    out.push_str(&markdown_table(
+        &[
+            "K",
+            "tokens/s",
+            "TTFT p50 (ms)",
+            "TTFT p99 (ms)",
+            "makespan (ms)",
+            "served by",
+            "tokens = K1",
+        ],
+        &rows,
+    ));
+    let f = &r.failover;
+    out.push_str(&format!(
+        "\nbest measured K = {}.  failover (K=2, kill replica 0 after {} tokens): \
+         {}/{} completed, {} deaths, {} placements ({} rerouted), stranded {}, \
+         served by {:?} (metrics {:?}), TTFT p99 {:.1} ms, tokens = K1: {}\n",
+        r.best_k,
+        r.config.kill_after_tokens,
+        f.completed,
+        f.requests,
+        f.deaths,
+        f.placements,
+        f.placements.saturating_sub(f.requests),
+        f.stranded,
+        f.served_by,
+        f.metrics_completed,
+        f.ttft_p99_ms,
+        f.tokens_identical,
+    ));
+    out
+}
+
+/// Machine-readable form (the `BENCH_replicas.json` CI artifact).
+pub fn report_json(r: &ReplicasBenchReport) -> Json {
+    use std::collections::BTreeMap;
+    let num = |v: f64| Json::Num((v * 1000.0).round() / 1000.0);
+    let mut root = BTreeMap::new();
+    let mut planner = BTreeMap::new();
+    planner.insert("pool".into(), Json::Num(r.planner.pool as f64));
+    planner.insert("k".into(), Json::Num(r.planner.k as f64));
+    planner.insert("predicted_tps".into(), num(r.planner.predicted_tps));
+    planner.insert("single_tps".into(), num(r.planner.single_tps));
+    planner.insert(
+        "replica_sizes".into(),
+        Json::Arr(
+            r.planner
+                .replica_sizes
+                .iter()
+                .map(|&s| Json::Num(s as f64))
+                .collect(),
+        ),
+    );
+    planner.insert(
+        "beats_single".into(),
+        Json::Bool(r.planner.k >= 2 && r.planner.predicted_tps > r.planner.single_tps),
+    );
+    root.insert("planner".into(), Json::Obj(planner));
+    let mut workload = BTreeMap::new();
+    workload.insert("requests".into(), Json::Num(r.config.requests as f64));
+    workload.insert(
+        "gen_lens".into(),
+        Json::Arr(r.config.gen_lens.iter().map(|&g| Json::Num(g as f64)).collect()),
+    );
+    workload.insert("seed".into(), Json::Num(r.config.seed as f64));
+    root.insert("workload".into(), Json::Obj(workload));
+    root.insert(
+        "curve".into(),
+        Json::Arr(
+            r.curve
+                .iter()
+                .map(|p| {
+                    let mut o = BTreeMap::new();
+                    o.insert("k".into(), Json::Num(p.k as f64));
+                    o.insert("tokens_per_s".into(), num(p.tokens_per_s));
+                    o.insert("makespan_ms".into(), num(p.makespan_ms));
+                    o.insert("ttft_p50_ms".into(), num(p.ttft_p50_ms));
+                    o.insert("ttft_p99_ms".into(), num(p.ttft_p99_ms));
+                    o.insert("tokens_identical".into(), Json::Bool(p.tokens_identical));
+                    o.insert(
+                        "served_by".into(),
+                        Json::Arr(p.served_by.iter().map(|&s| Json::Num(s as f64)).collect()),
+                    );
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    root.insert("best_k".into(), Json::Num(r.best_k as f64));
+    let f = &r.failover;
+    let mut fo = BTreeMap::new();
+    fo.insert("requests".into(), Json::Num(f.requests as f64));
+    fo.insert("completed".into(), Json::Num(f.completed as f64));
+    fo.insert("deaths".into(), Json::Num(f.deaths as f64));
+    fo.insert("placements".into(), Json::Num(f.placements as f64));
+    fo.insert("stranded".into(), Json::Num(f.stranded as f64));
+    fo.insert(
+        "served_by".into(),
+        Json::Arr(f.served_by.iter().map(|&s| Json::Num(s as f64)).collect()),
+    );
+    fo.insert(
+        "metrics_completed".into(),
+        Json::Arr(
+            f.metrics_completed
+                .iter()
+                .map(|&s| Json::Num(s as f64))
+                .collect(),
+        ),
+    );
+    fo.insert("ttft_p99_ms".into(), num(f.ttft_p99_ms));
+    fo.insert("tokens_identical".into(), Json::Bool(f.tokens_identical));
+    root.insert("failover".into(), Json::Obj(fo));
+    Json::Obj(root)
+}
+
+/// `edgeshard bench replicas` entry: run the bench, echo markdown, write
+/// the JSON artifact (and the markdown under `results/`).
+pub fn run(cfg: &ReplicasBenchConfig, json_path: &std::path::Path) -> Result<()> {
+    let report = run_bench(cfg)?;
+    super::emit("replicas", &report_markdown(&report))?;
+    std::fs::write(json_path, report_json(&report).to_string())
+        .with_context(|| format!("writing {json_path:?}"))?;
+    println!("wrote {}", json_path.display());
+    Ok(())
+}

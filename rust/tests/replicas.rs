@@ -1,0 +1,348 @@
+//! Replicated-pipeline router end-to-end: the gates behind
+//! `coordinator::router` + `planner::replicas`.
+//!
+//! The invariants:
+//!
+//! 1. **Exactly-once**: every request of a trace is answered exactly
+//!    once, however many replicas it was routed (or re-routed) across.
+//! 2. **Determinism**: serving over K replicas emits byte-identical
+//!    per-request token streams vs the same trace on K=1 — routing
+//!    changes *where* a request runs, never *what* it generates.
+//! 3. **Affinity**: all requests of one session land on one replica.
+//! 4. **Shed conservation**: under per-replica SLO bounds, every offered
+//!    request is completed, shed, or expired — per class, nothing lost.
+//! 5. **Failover (the gating test)**: killing a replica mid-run reroutes
+//!    its queued + in-flight requests and the trace completes, with the
+//!    recovery window visible in the per-replica metrics.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Mutex;
+
+use edgeshard::cluster::{Cluster, Device, DeviceClass};
+use edgeshard::coordinator::admission::{ArrivedRequest, QueueSource, SloPolicy, TraceSource};
+use edgeshard::coordinator::api::{GenRequest, GenResult, SloClass};
+use edgeshard::coordinator::router::{drive_replicated, RouterConfig};
+use edgeshard::coordinator::scheduler::ContinuousConfig;
+use edgeshard::coordinator::{AdmissionPolicy, Engine, EngineConfig};
+use edgeshard::obs::MetricsRegistry;
+use edgeshard::planner::{Plan, PlanObjective, Stage};
+use edgeshard::runtime::manifest::ManifestConfig;
+use edgeshard::runtime::{ExecService, ExecServiceHandle, Manifest, WeightStore};
+
+// Each replica runs its drive loop plus per-stage actor threads;
+// serialize the tests so concurrent fleets don't oversubscribe CI.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+struct Ctx {
+    manifest: Manifest,
+    weights: WeightStore,
+    _svc: ExecService,
+    exec: ExecServiceHandle,
+    cluster: Cluster,
+}
+
+fn ctx() -> Ctx {
+    let manifest = Manifest::synthetic(
+        ManifestConfig::mini_sim("tinyllama-replicas-test", 8, 64),
+        vec![1, 4],
+    );
+    let weights = WeightStore::synthetic(&manifest, 0);
+    let (_svc, exec) = ExecService::start_sim(&manifest).unwrap();
+    // four identical workers: K=1 uses {0,1}, K=2 adds {2,3}
+    let cluster = Cluster::new(
+        (0..4).map(|id| Device::new(id, DeviceClass::agx_orin())).collect(),
+        1000.0,
+        0.5,
+    );
+    Ctx {
+        manifest,
+        weights,
+        _svc,
+        exec,
+        cluster,
+    }
+}
+
+/// K engines, each a two-stage pipeline over its own device pair.
+fn engines(c: &Ctx, k: usize) -> Vec<Engine> {
+    assert!(k <= 2, "test cluster has four devices");
+    let n = c.manifest.config.n_layers + 2;
+    let ecfg = EngineConfig {
+        time_scale: 0.0,
+        ..EngineConfig::default()
+    };
+    (0..k)
+        .map(|r| {
+            let plan = Plan {
+                objective: PlanObjective::Throughput,
+                stages: vec![
+                    Stage {
+                        device: 2 * r,
+                        start: 0,
+                        end: 3,
+                    },
+                    Stage {
+                        device: 2 * r + 1,
+                        start: 3,
+                        end: n,
+                    },
+                ],
+                predicted_ms: 0.0,
+            };
+            Engine::build(&c.manifest, &c.weights, c.exec.clone(), &plan, &c.cluster, &ecfg)
+                .unwrap()
+        })
+        .collect()
+}
+
+/// Ragged requests with id-distinct in-vocab prompts.
+fn requests(c: &Ctx, max_news: &[usize]) -> Vec<GenRequest> {
+    let vocab = c.manifest.config.vocab_size as i32;
+    max_news
+        .iter()
+        .enumerate()
+        .map(|(i, &m)| {
+            GenRequest::new(
+                i as u64,
+                (0..8).map(|t| ((t * 5 + i * 11 + 3) as i32) % vocab).collect(),
+                m,
+            )
+        })
+        .collect()
+}
+
+fn rows(results: &[GenResult]) -> Vec<(u64, Vec<i32>)> {
+    let mut rows: Vec<(u64, Vec<i32>)> =
+        results.iter().map(|r| (r.id, r.tokens.clone())).collect();
+    rows.sort_by_key(|(id, _)| *id);
+    rows
+}
+
+#[test]
+fn every_request_served_exactly_once_across_replicas() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let c = ctx();
+    let reqs = requests(&c, &[3, 9, 1, 6, 2, 12, 4, 1, 7, 5, 2, 8]);
+    let outcome = drive_replicated(
+        engines(&c, 2),
+        Box::new(QueueSource::new(&reqs)),
+        &ContinuousConfig::default(),
+        &RouterConfig::default(),
+    )
+    .unwrap();
+    assert_eq!(outcome.results.len(), reqs.len(), "every request answered");
+    let ids: HashSet<u64> = outcome.results.iter().map(|r| r.id).collect();
+    assert_eq!(ids.len(), reqs.len(), "no id answered twice");
+    assert_eq!(outcome.stranded, 0);
+    // both replicas pulled their share of a 12-request burst
+    for r in &outcome.replicas {
+        assert!(r.served > 0, "replica {} sat idle", r.replica);
+        assert_eq!(r.deaths, 0);
+    }
+    let served: u64 = outcome.replicas.iter().map(|r| r.served).sum();
+    assert_eq!(served as usize, reqs.len());
+}
+
+#[test]
+fn replicated_tokens_byte_identical_to_single_pipeline() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let c = ctx();
+    let reqs = requests(&c, &[3, 9, 1, 6, 2, 12, 4, 1, 7, 5, 2, 8]);
+    let ccfg = ContinuousConfig::default();
+    let single = drive_replicated(
+        engines(&c, 1),
+        Box::new(QueueSource::new(&reqs)),
+        &ccfg,
+        &RouterConfig::default(),
+    )
+    .unwrap();
+    assert_eq!(single.results.len(), reqs.len());
+    let replicated = drive_replicated(
+        engines(&c, 2),
+        Box::new(QueueSource::new(&reqs)),
+        &ccfg,
+        &RouterConfig::default(),
+    )
+    .unwrap();
+    assert_eq!(
+        rows(&replicated.results),
+        rows(&single.results),
+        "routing changed what a request generated"
+    );
+}
+
+#[test]
+fn affinity_keeps_each_session_on_one_replica() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let c = ctx();
+    // three sessions, four requests each, interleaved arrival order
+    let reqs: Vec<GenRequest> = requests(&c, &[2; 12])
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| r.with_session((i % 3) as u64))
+        .collect();
+    let session_of: HashMap<u64, u64> =
+        reqs.iter().map(|r| (r.id, r.session.unwrap())).collect();
+    let outcome = drive_replicated(
+        engines(&c, 2),
+        Box::new(QueueSource::new(&reqs)),
+        &ContinuousConfig::default(),
+        &RouterConfig::default(), // affinity on by default
+    )
+    .unwrap();
+    assert_eq!(outcome.results.len(), reqs.len());
+    let mut replica_of_session: HashMap<u64, usize> = HashMap::new();
+    for &(id, replica) in &outcome.assignments {
+        let s = session_of[&id];
+        let pinned = replica_of_session.entry(s).or_insert(replica);
+        assert_eq!(
+            *pinned, replica,
+            "session {s} split across replicas: {:?}",
+            outcome.assignments
+        );
+    }
+    assert_eq!(replica_of_session.len(), 3, "all three sessions routed");
+}
+
+#[test]
+fn shed_accounting_conserved_per_class_across_replicas() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let c = ctx();
+    // a burst far over the tiny batch bound: batch work sheds at each
+    // replica's own queue, interactive completes
+    let reqs: Vec<GenRequest> = requests(&c, &[2; 16])
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| {
+            r.with_class(if i % 4 == 0 {
+                SloClass::Interactive
+            } else {
+                SloClass::Batch
+            })
+        })
+        .collect();
+    let offered = [
+        reqs.iter().filter(|r| r.class == SloClass::Interactive).count() as u64,
+        reqs.iter().filter(|r| r.class == SloClass::Batch).count() as u64,
+    ];
+    let trace: Vec<ArrivedRequest> = reqs
+        .iter()
+        .map(|r| ArrivedRequest {
+            req: r.clone(),
+            arrival_ms: 0.0,
+        })
+        .collect();
+    let rcfg = RouterConfig {
+        policy: AdmissionPolicy::SloPriority(SloPolicy {
+            interactive_bound: 16,
+            batch_bound: 1,
+            aging_ms: 100.0,
+            batch_prefill_cap: 1,
+        }),
+        ..RouterConfig::default()
+    };
+    let outcome = drive_replicated(
+        engines(&c, 2),
+        Box::new(TraceSource::new(trace)),
+        &ContinuousConfig::default(),
+        &rcfg,
+    )
+    .unwrap();
+    let class_of: HashMap<u64, SloClass> = reqs.iter().map(|r| (r.id, r.class)).collect();
+    let mut completed = [0u64; 2];
+    for r in &outcome.results {
+        completed[(class_of[&r.id] == SloClass::Batch) as usize] += 1;
+    }
+    let mut shed = [0u64; 2];
+    let mut expired = [0u64; 2];
+    for rep in &outcome.replicas {
+        if let Some(stats) = &rep.stats {
+            for ix in 0..2 {
+                shed[ix] += stats.shed[ix];
+                expired[ix] += stats.expired[ix];
+            }
+        }
+    }
+    for ix in 0..2 {
+        assert_eq!(
+            completed[ix] + shed[ix] + expired[ix],
+            offered[ix],
+            "class {ix} lost requests: completed {completed:?} shed {shed:?} expired {expired:?}"
+        );
+    }
+    assert_eq!(shed[0], 0, "interactive must not shed at bound 16");
+    assert_eq!(completed[0], offered[0], "every interactive request served");
+    assert!(shed[1] > 0, "batch bound 1 must shed under a 12-request burst");
+}
+
+#[test]
+fn killing_a_replica_mid_run_reroutes_and_completes() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let c = ctx();
+    let reqs = requests(&c, &[8; 12]);
+    let ccfg = ContinuousConfig::default();
+    // K=1 reference for byte-identity through the failover
+    let reference = drive_replicated(
+        engines(&c, 1),
+        Box::new(QueueSource::new(&reqs)),
+        &ccfg,
+        &RouterConfig::default(),
+    )
+    .unwrap();
+
+    let metrics: Vec<MetricsRegistry> = (0..2).map(|_| MetricsRegistry::new()).collect();
+    let rcfg = RouterConfig {
+        metrics: metrics.clone(),
+        // kill replica 0 after 4 folded token frames — mid-generation,
+        // with most of its share still queued or in flight
+        kill_after_tokens: vec![(0, 4)],
+        ..RouterConfig::default()
+    };
+    let outcome = drive_replicated(
+        engines(&c, 2),
+        Box::new(QueueSource::new(&reqs)),
+        &ccfg,
+        &rcfg,
+    )
+    .unwrap();
+
+    // the trace completes despite the death
+    assert_eq!(outcome.results.len(), reqs.len(), "failover lost requests");
+    assert_eq!(outcome.stranded, 0);
+    let deaths: u32 = outcome.replicas.iter().map(|r| r.deaths).sum();
+    assert_eq!(deaths, 1, "exactly the killed replica died");
+    assert!(
+        outcome.assignments.len() > reqs.len(),
+        "no reroute placements recorded: {:?}",
+        outcome.assignments
+    );
+    // the dead replica's drive never completed; the survivor's did
+    assert!(outcome.replicas[0].stats.is_none());
+    assert!(outcome.replicas[1].stats.is_some());
+    // recovery window in the per-replica metrics: the survivor absorbed
+    // the dead replica's share on top of its own
+    let completed: Vec<u64> = metrics
+        .iter()
+        .map(|m| {
+            m.snapshot()
+                .get("counters")
+                .and_then(|c| c.get("requests_completed"))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0) as u64
+        })
+        .collect();
+    assert!(
+        completed[1] as usize > reqs.len() / 2,
+        "survivor must absorb the dead replica's share: {completed:?}"
+    );
+    assert!(
+        (completed[0] as usize) < reqs.len() / 2,
+        "killed replica reported too many completions: {completed:?}"
+    );
+    // and the answers are still byte-identical to the single pipeline
+    assert_eq!(
+        rows(&outcome.results),
+        rows(&reference.results),
+        "failover changed what a request generated"
+    );
+}
