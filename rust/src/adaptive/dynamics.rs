@@ -83,6 +83,19 @@ pub enum ScheduleShape {
 impl ScheduleShape {
     /// Bandwidth at simulated time `t_ms` (clamped to [`MIN_MBPS`]).
     pub fn mbps_at(&self, t_ms: f64) -> f64 {
+        self.value_at(t_ms, MIN_MBPS)
+    }
+
+    /// One-way latency at simulated time `t_ms` (clamped at 0 — a zero
+    /// propagation delay is legitimate, unlike a zero bandwidth).  The
+    /// shape vocabulary is unit-agnostic; latency schedules read the
+    /// `*_mbps` fields as milliseconds.
+    pub fn latency_ms_at(&self, t_ms: f64) -> f64 {
+        self.value_at(t_ms, 0.0)
+    }
+
+    /// Raw scheduled value at `t_ms`, floored at `floor`.
+    fn value_at(&self, t_ms: f64, floor: f64) -> f64 {
         let t = t_ms.max(0.0);
         let raw = match self {
             ScheduleShape::Constant(v) => *v,
@@ -152,9 +165,9 @@ impl ScheduleShape {
                 .last()
                 .or(points.first())
                 .map(|(_, v)| *v)
-                .unwrap_or(MIN_MBPS),
+                .unwrap_or(floor),
         };
-        raw.max(MIN_MBPS)
+        raw.max(floor)
     }
 }
 
@@ -174,11 +187,17 @@ pub enum LinkDirection {
 }
 
 /// One link's schedule (symmetric unless `direction` says otherwise).
+/// A schedule may shape bandwidth, one-way latency, or both — the two
+/// dimensions degrade independently on real paths (a congested bottleneck
+/// queue inflates delay long before it caps throughput, and vice versa).
 #[derive(Debug, Clone)]
 pub struct LinkSchedule {
     pub a: usize,
     pub b: usize,
-    pub shape: ScheduleShape,
+    /// Bandwidth over time (Mbps), if this schedule shapes bandwidth.
+    pub bandwidth: Option<ScheduleShape>,
+    /// One-way propagation delay over time (ms), if shaped.
+    pub latency: Option<ScheduleShape>,
     pub direction: LinkDirection,
 }
 
@@ -245,24 +264,53 @@ impl NetworkDynamics {
         NetworkDynamics::default()
     }
 
-    /// Add a schedule for the (symmetric) link `a↔b`.
+    /// Add a bandwidth schedule for the (symmetric) link `a↔b`.
     pub fn link(mut self, a: usize, b: usize, shape: ScheduleShape) -> Self {
         self.links.push(LinkSchedule {
             a,
             b,
-            shape,
+            bandwidth: Some(shape),
+            latency: None,
             direction: LinkDirection::Both,
         });
         self
     }
 
-    /// Add a schedule for the `a→b` direction only (the `b→a` direction
-    /// keeps its ground truth, or its own one-way schedule).
+    /// Add a bandwidth schedule for the `a→b` direction only (the `b→a`
+    /// direction keeps its ground truth, or its own one-way schedule).
     pub fn link_oneway(mut self, a: usize, b: usize, shape: ScheduleShape) -> Self {
         self.links.push(LinkSchedule {
             a,
             b,
-            shape,
+            bandwidth: Some(shape),
+            latency: None,
+            direction: LinkDirection::OneWay,
+        });
+        self
+    }
+
+    /// Add a one-way-latency schedule for the (symmetric) link `a↔b` —
+    /// the shape's values are read as milliseconds.
+    pub fn link_latency(mut self, a: usize, b: usize, shape: ScheduleShape) -> Self {
+        self.links.push(LinkSchedule {
+            a,
+            b,
+            bandwidth: None,
+            latency: Some(shape),
+            direction: LinkDirection::Both,
+        });
+        self
+    }
+
+    /// Add a latency schedule for the `a→b` direction only — how
+    /// bufferbloat is modelled: one direction's queueing delay balloons
+    /// while the reverse path stays flat.
+    pub fn link_latency_oneway(mut self, a: usize, b: usize, shape: ScheduleShape) -> Self {
+        self.links.push(LinkSchedule {
+            a,
+            b,
+            bandwidth: None,
+            latency: Some(shape),
             direction: LinkDirection::OneWay,
         });
         self
@@ -275,13 +323,22 @@ impl NetworkDynamics {
     }
 
     /// Scheduled bandwidth of the `a→b` direction at `t_ms`, if a
-    /// schedule covers it (a symmetric schedule covers both directions;
-    /// a one-way schedule only its own).
+    /// bandwidth schedule covers it (a symmetric schedule covers both
+    /// directions; a one-way schedule only its own).
     pub fn mbps_at(&self, a: usize, b: usize, t_ms: f64) -> Option<f64> {
         self.links
             .iter()
-            .find(|l| l.covers(a, b))
-            .map(|l| l.shape.mbps_at(t_ms))
+            .filter(|l| l.covers(a, b))
+            .find_map(|l| l.bandwidth.as_ref().map(|s| s.mbps_at(t_ms)))
+    }
+
+    /// Scheduled one-way latency of the `a→b` direction at `t_ms`, if a
+    /// latency schedule covers it.
+    pub fn latency_ms_at(&self, a: usize, b: usize, t_ms: f64) -> Option<f64> {
+        self.links
+            .iter()
+            .filter(|l| l.covers(a, b))
+            .find_map(|l| l.latency.as_ref().map(|s| s.latency_ms_at(t_ms)))
     }
 
     /// Scheduled liveness of `device` at `t_ms` (`None` = no schedule,
@@ -321,14 +378,28 @@ impl NetworkDynamics {
         t_ms: f64,
     ) {
         for l in &self.links {
-            let mbps = l.shape.mbps_at(t_ms);
-            match l.direction {
-                LinkDirection::Both => cluster.set_bandwidth(l.a, l.b, mbps),
-                LinkDirection::OneWay => cluster.set_bandwidth_oneway(l.a, l.b, mbps),
+            if let Some(shape) = &l.bandwidth {
+                let mbps = shape.mbps_at(t_ms);
+                match l.direction {
+                    LinkDirection::Both => cluster.set_bandwidth(l.a, l.b, mbps),
+                    LinkDirection::OneWay => cluster.set_bandwidth_oneway(l.a, l.b, mbps),
+                }
+                for rl in links {
+                    if l.covers(rl.from, rl.to) {
+                        rl.link.set_bandwidth(mbps);
+                    }
+                }
             }
-            for rl in links {
-                if l.covers(rl.from, rl.to) {
-                    rl.link.set_bandwidth(mbps);
+            if let Some(shape) = &l.latency {
+                let ms = shape.latency_ms_at(t_ms);
+                match l.direction {
+                    LinkDirection::Both => cluster.set_latency(l.a, l.b, ms),
+                    LinkDirection::OneWay => cluster.set_latency_oneway(l.a, l.b, ms),
+                }
+                for rl in links {
+                    if l.covers(rl.from, rl.to) {
+                        rl.link.set_latency(ms);
+                    }
                 }
             }
         }
@@ -361,6 +432,7 @@ impl NetworkDynamics {
                     // link schedule applied above)
                     rl.link
                         .set_bandwidth(cluster.bandwidth(rl.from, rl.to));
+                    rl.link.set_latency(cluster.latency(rl.from, rl.to));
                 }
             }
         }
@@ -605,6 +677,68 @@ mod tests {
             "reverse pacer untouched"
         );
         assert_eq!(dynamics.mbps_at(0, 1, 50.0), None);
+    }
+
+    #[test]
+    fn latency_schedules_shape_delay_independently_of_bandwidth() {
+        let live = LiveCluster::new(presets::tiny_demo(0));
+        let base_bw = live.bandwidth(0, 1);
+        let base_rev_lat = live.latency(2, 0);
+        let dynamics = NetworkDynamics::new()
+            .link_latency(
+                0,
+                1,
+                ScheduleShape::Step {
+                    at_ms: 100.0,
+                    before_mbps: 2.0, // read as ms
+                    after_mbps: 40.0,
+                },
+            )
+            .link_latency_oneway(0, 2, ScheduleShape::Constant(15.0));
+        let covered = RoutedLink {
+            from: 1,
+            to: 0,
+            link: crate::netsim::LiveLink::new(crate::netsim::LinkSpec::new(base_bw, 0.5)),
+        };
+        let reverse = RoutedLink {
+            from: 2,
+            to: 0,
+            link: crate::netsim::LiveLink::new(crate::netsim::LinkSpec::new(300.0, 0.5)),
+        };
+        let links = [covered, reverse];
+        dynamics.apply(&live, &links, 0.0);
+        // symmetric latency schedule lands in ground truth and pacers
+        assert_eq!(live.latency(0, 1), 2.0);
+        assert_eq!(live.latency(1, 0), 2.0);
+        assert_eq!(links[0].link.get().latency_ms, 2.0);
+        // bandwidth untouched by a latency-only schedule
+        assert_eq!(live.bandwidth(0, 1), base_bw);
+        assert_eq!(links[0].link.get().bandwidth_mbps, base_bw);
+        // one-way schedule leaves the reverse direction alone
+        assert_eq!(live.latency(0, 2), 15.0);
+        assert_eq!(live.latency(2, 0), base_rev_lat);
+        assert_eq!(links[1].link.get().latency_ms, 0.5);
+        dynamics.apply(&live, &links, 200.0);
+        assert_eq!(live.latency(0, 1), 40.0);
+        assert_eq!(links[0].link.get().latency_ms, 40.0);
+        // query surface mirrors the bandwidth one
+        assert_eq!(dynamics.latency_ms_at(1, 0, 0.0), Some(2.0));
+        assert_eq!(dynamics.latency_ms_at(2, 0, 0.0), None);
+        assert_eq!(dynamics.mbps_at(1, 0, 0.0), None);
+    }
+
+    #[test]
+    fn latency_floors_at_zero_not_min_mbps() {
+        let s = ScheduleShape::Constant(0.0);
+        assert_eq!(s.latency_ms_at(5.0), 0.0);
+        assert_eq!(s.mbps_at(5.0), MIN_MBPS);
+        let s = ScheduleShape::Ramp {
+            start_ms: 0.0,
+            end_ms: 100.0,
+            from_mbps: -5.0,
+            to_mbps: 5.0,
+        };
+        assert_eq!(s.latency_ms_at(0.0), 0.0);
     }
 
     #[test]

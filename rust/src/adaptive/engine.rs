@@ -67,13 +67,14 @@ use crate::cluster::{Cluster, DeviceLiveness, LiveCluster};
 use crate::coordinator::admission::AdmissionQueue;
 use crate::coordinator::api::{GenRequest, GenResult, GroupRequest};
 use crate::coordinator::driver::{
-    drive_groups, drive_slots, send_decode, send_prefill, DriveHooks, DriveView, StallView,
+    drive_groups, drive_slots, send_decode, send_prefill, send_prefill_ext, DriveHooks, DriveView,
+    StallView,
 };
 use crate::coordinator::engine::{wire, EngineConfig, ObsSinks, Wired};
 use crate::coordinator::kvcache::{GroupCache, KvPool, ELEM_BYTES_F32};
 use crate::coordinator::scheduler::{ContinuousConfig, RunSnap};
 use crate::coordinator::stage::{
-    stage_decoders, KvEntry, Payload, StageExport, StageMsg, TokenOrigin,
+    stage_decoders, KvEntry, Payload, PrefillChunk, StageExport, StageMsg, TokenOrigin,
 };
 use crate::metrics::Histogram;
 use crate::netsim::RoutedLink;
@@ -988,6 +989,16 @@ impl<'a> AdaptiveEngine<'a> {
         base_traces: ProfiledTraces,
         cfg: AdaptiveConfig,
     ) -> Self {
+        // the planner's cost model must price activation frames at what
+        // the wire actually carries: a quantized wire shrinks act_bytes,
+        // so latency/throughput DPs re-partition toward plans the smaller
+        // frames make viable
+        let mut base_traces = base_traces;
+        base_traces.scale_act_bytes(
+            cfg.engine
+                .wire_format
+                .act_scale(manifest.config.d_model),
+        );
         AdaptiveEngine {
             manifest,
             weights,
@@ -1565,8 +1576,18 @@ impl<'a> AdaptiveEngine<'a> {
                 // it (idempotent rewrites make over-coverage harmless)
                 let sent = checkpoint.expect("restored from a checkpoint").sent[&gid];
                 sent + 1
+            } else if self.cfg.engine.prefill_chunk > 0 {
+                // replay compression: fold the served history into the
+                // prompt and re-prefill `prompt ++ generated[..folded-1]`
+                // in one chunked pass.  KV lands for the same positions
+                // the per-Step replay would write, and the head's single
+                // reply re-derives the last served token — pinning the
+                // rebuilt caches to history without `folded` round trips.
+                send_prefill_ext(wired, self.cfg.engine.prefill_chunk, g.req, &g.rows, folded - 1)?;
+                expected.insert((gid, 0), g.rows.iter().map(|r| r[folded - 1]).collect());
+                folded
             } else {
-                send_prefill(wired, g.req)?;
+                send_prefill(wired, self.cfg.engine.prefill_chunk, g.req)?;
                 expected.insert((gid, 0), g.rows.iter().map(|r| r[0]).collect());
                 1
             };
@@ -1756,19 +1777,36 @@ impl<'a> AdaptiveEngine<'a> {
                     Some(&s) => s,
                     None => {
                         // not covered by the restore: re-prefill the row
-                        // into its current slot and verify its first token
-                        let msg = StageMsg::Admit {
-                            run: snap.run,
-                            slot: row.slot,
-                            run_batch: snap.batch,
-                            prompt_len,
-                            payload: Payload::Tokens(row.prompt.clone()),
-                        };
-                        let bytes = msg.wire_bytes();
-                        wired.to_first.send(msg, bytes)?;
-                        expected_admits.insert((snap.run, row.slot), row.generated[0]);
+                        // into its current slot.  With chunked prefill on,
+                        // the row's served history folds into the prompt —
+                        // one extended Admit replaces its per-Step replay,
+                        // and the reply re-derives the last served token.
+                        let chunking = self.cfg.engine.prefill_chunk;
+                        let extra = if chunking > 0 { row.generated.len() - 1 } else { 0 };
+                        let p = prompt_len + extra;
+                        let mut toks = row.prompt.clone();
+                        toks.extend_from_slice(&row.generated[..extra]);
+                        for span in PrefillChunk::spans(p, chunking) {
+                            let payload = match span {
+                                None => Payload::Tokens(toks.clone()),
+                                Some(c) => {
+                                    Payload::Tokens(toks[c.start..c.start + c.len].to_vec())
+                                }
+                            };
+                            let msg = StageMsg::Admit {
+                                run: snap.run,
+                                slot: row.slot,
+                                run_batch: snap.batch,
+                                prompt_len: p,
+                                chunk: span,
+                                payload,
+                            };
+                            let bytes = msg.wire_bytes();
+                            wired.to_first.send(msg, bytes)?;
+                        }
+                        expected_admits.insert((snap.run, row.slot), row.generated[extra]);
                         replayed_iters += 1;
-                        1
+                        extra + 1
                     }
                 };
                 if start < row.generated.len() {

@@ -85,6 +85,7 @@ impl MonitorHandle {
         ObsSinks {
             compute: vec![self.compute.clone()],
             transfer: vec![self.transfer.clone()],
+            tracer: crate::obs::Tracer::off(),
         }
     }
 }
@@ -109,6 +110,14 @@ pub struct Monitor {
     /// plain Mbps-averaging would need ~log₂(1000) samples to halve its
     /// way down — far too slow to react to a link drop.
     link_inv: HashMap<(usize, usize), Ewma>,
+    /// **Directed** per-link one-way latency EWMAs (ms).  Fed by the
+    /// frames too small to carry a bandwidth signal: a control frame
+    /// serializes in negligible time, so its delivery timing is almost
+    /// pure propagation delay — the control traffic doubles as latency
+    /// probes, and latency drift is estimated separately from bandwidth
+    /// drift.  Keyed by direction because one-way shaping (bufferbloat)
+    /// makes delay asymmetric.
+    link_lat: HashMap<(usize, usize), Ewma>,
     /// Keyed by (device, is_decode).
     stage_ms: HashMap<(usize, bool), Ewma>,
     /// Last evidence of life per device (a compute timing, or sending a
@@ -134,6 +143,7 @@ impl Monitor {
                 transfer_rx,
                 compute_rx,
                 link_inv: HashMap::new(),
+                link_lat: HashMap::new(),
                 stage_ms: HashMap::new(),
                 last_seen: HashMap::new(),
                 obs_seq: 0,
@@ -195,17 +205,39 @@ impl Monitor {
         self.last_seen.get(&device).map(|&(s, _)| s)
     }
 
-    /// Fold one transfer timing into the link estimate.  Public so tests
+    /// Fold one transfer timing into the link estimates.  Public so tests
     /// and offline replays can feed observations directly.
+    ///
+    /// Big frames update the bandwidth estimate, small frames the latency
+    /// estimate: below [`Monitor::min_sample_bytes`] a frame's timing is
+    /// dominated by propagation delay, above it by serialization, so each
+    /// frame feeds whichever quantity it actually measures.
     pub fn ingest_transfer(&mut self, o: TransferObs) {
-        if o.from == o.to || o.bytes < self.min_sample_bytes || !o.sim_ms.is_finite() {
+        if o.from == o.to || !o.sim_ms.is_finite() {
             return;
         }
-        // Serialization time ≈ total − propagation (the base latency is a
-        // measurable, stable quantity; bandwidth is what drifts).  Clamp
-        // so a timing at or below the latency floor still yields a
-        // (large) finite estimate instead of a division blow-up.
-        let latency = self.base.latency_ms[o.from][o.to];
+        if o.bytes < self.min_sample_bytes {
+            // Latency probe: subtract the (negligible) serialization the
+            // nominal rate predicts and attribute the rest to one-way
+            // delay.  Queueing behind a data frame inflates a sample, but
+            // the EWMA rides it out the same way it rides out congestion
+            // in the bandwidth estimate.
+            let ser_est = self.base.link(o.from, o.to).transfer_ms(o.bytes);
+            let lat = (o.sim_ms - ser_est).max(0.0);
+            self.link_lat
+                .entry((o.from, o.to))
+                .or_insert_with(|| Ewma::new(self.alpha))
+                .observe(lat);
+            return;
+        }
+        // Serialization time ≈ total − propagation.  Prefer the *live*
+        // latency estimate (the probes above track drift); fall back to
+        // the prior belief.  Clamp so a timing at or below the latency
+        // floor still yields a (large) finite estimate instead of a
+        // division blow-up.
+        let latency = self
+            .latency_estimate_ms(o.from, o.to)
+            .unwrap_or(self.base.latency_ms[o.from][o.to]);
         let ser_ms = (o.sim_ms - latency).max(o.sim_ms * 0.02).max(1e-3);
         let ms_per_bit = ser_ms / (o.bytes as f64 * 8.0);
         let key = (o.from.min(o.to), o.from.max(o.to));
@@ -234,6 +266,12 @@ impl Monitor {
             .map(|ms_per_bit| 1.0 / (ms_per_bit * 1e3))
     }
 
+    /// Current one-way latency estimate for the **directed** link `a→b`
+    /// (ms), if any probe frames have crossed it.
+    pub fn latency_estimate_ms(&self, a: usize, b: usize) -> Option<f64> {
+        self.link_lat.get(&(a, b)).and_then(|e| e.get())
+    }
+
     /// Observed per-iteration compute for `device` (decode phase).
     pub fn stage_estimate_ms(&self, device: usize, decode: bool) -> Option<f64> {
         self.stage_ms.get(&(device, decode)).and_then(|e| e.get())
@@ -245,12 +283,19 @@ impl Monitor {
     }
 
     /// The cluster as currently observed: prior beliefs overridden by
-    /// every link estimate the traffic has produced.
+    /// every bandwidth *and* one-way latency estimate the traffic has
+    /// produced (latency overrides are directed — asymmetric delay
+    /// survives into the replanner's view).
     pub fn observed_cluster(&self) -> Cluster {
         let mut c = self.base.clone();
         for &(a, b) in self.link_inv.keys() {
             if let Some(mbps) = self.link_estimate_mbps(a, b) {
                 c.set_bandwidth(a, b, mbps.max(crate::adaptive::dynamics::MIN_MBPS));
+            }
+        }
+        for &(a, b) in self.link_lat.keys() {
+            if let Some(ms) = self.latency_estimate_ms(a, b) {
+                c.set_latency_oneway(a, b, ms.max(0.0));
             }
         }
         c
@@ -528,12 +573,45 @@ mod tests {
     }
 
     #[test]
-    fn tiny_frames_and_self_links_ignored() {
+    fn tiny_frames_probe_latency_not_bandwidth() {
         let c = presets::tiny_demo(0);
         let (mut m, _h) = Monitor::new(c, 0.5);
         m.ingest_transfer(obs(0, 1, 32, 0.6)); // below min_sample_bytes
         m.ingest_transfer(obs(1, 1, 1 << 20, 4.0)); // self link
+        // a control frame carries no bandwidth signal…
         assert!(m.link_estimate_mbps(0, 1).is_none());
+        // …but it is a latency probe for its own direction
+        let lat = m.latency_estimate_ms(0, 1).unwrap();
+        assert!((0.0..=0.6).contains(&lat), "lat={lat}");
+        assert!(m.latency_estimate_ms(1, 0).is_none());
+        // self links feed nothing at all
+        assert!(m.latency_estimate_ms(1, 1).is_none());
+    }
+
+    #[test]
+    fn latency_probes_track_drift_and_sharpen_bandwidth() {
+        let mut c = presets::tiny_demo(0);
+        c.set_latency(0, 1, 0.5);
+        let (mut m, _h) = Monitor::new(c, 0.5);
+        // control-frame probes see 4 ms one-way delay (up from 0.5 base)
+        for _ in 0..10 {
+            m.ingest_transfer(obs(0, 1, 16, 4.0));
+        }
+        let lat = m.latency_estimate_ms(0, 1).unwrap();
+        assert!((lat - 4.0).abs() < 0.1, "lat={lat}");
+        // directed: the reverse path keeps its prior
+        assert!(m.latency_estimate_ms(1, 0).is_none());
+        let oc = m.observed_cluster();
+        assert!((oc.latency_ms[0][1] - lat).abs() < 1e-9);
+        assert_eq!(oc.latency_ms[1][0], 0.5);
+        // data frames subtract the *drifted* latency, not the stale base:
+        // 1 KB in 5 ms = 1 ms serialization at 4 ms delay → ~8 Mbps (the
+        // stale 0.5 ms prior would have read the link at ~1.8 Mbps)
+        for _ in 0..10 {
+            m.ingest_transfer(obs(0, 1, 1000, 5.0));
+        }
+        let bw = m.link_estimate_mbps(0, 1).unwrap();
+        assert!((bw - 8.0).abs() < 0.5, "bw={bw}");
     }
 
     #[test]

@@ -68,6 +68,11 @@ pub struct ScenarioConfig {
     /// the paged block pool) — differential tests flip this and compare
     /// token streams byte-for-byte.
     pub kv_layout: crate::coordinator::KvLayout,
+    /// Wire format every engine in the scenario runs under — the int8
+    /// greedy-match gate flips this and compares against fp32 streams.
+    pub wire_format: crate::coordinator::WireFormat,
+    /// Chunked-prefill size every engine runs under (0 = monolithic).
+    pub prefill_chunk: usize,
 }
 
 impl Default for ScenarioConfig {
@@ -80,6 +85,8 @@ impl Default for ScenarioConfig {
             time_scale: 1.0,
             seed: 0,
             kv_layout: crate::coordinator::KvLayout::default(),
+            wire_format: crate::coordinator::WireFormat::F32,
+            prefill_chunk: 0,
         }
     }
 }
@@ -228,6 +235,8 @@ pub fn link_drop_scenario(cfg: &ScenarioConfig) -> Result<ScenarioReport> {
     let engine_cfg = EngineConfig {
         time_scale: cfg.time_scale,
         kv_layout: cfg.kv_layout,
+        wire_format: cfg.wire_format,
+        prefill_chunk: cfg.prefill_chunk,
         ..EngineConfig::default()
     };
 
@@ -338,6 +347,12 @@ pub struct ChurnConfig {
     pub flight_prefix: Option<std::path::PathBuf>,
     /// KV layout every engine in the experiment runs under.
     pub kv_layout: crate::coordinator::KvLayout,
+    /// Wire format every engine in the experiment runs under.
+    pub wire_format: crate::coordinator::WireFormat,
+    /// Chunked-prefill size every engine runs under (0 = monolithic).
+    /// With chunking on, re-prefill recovery folds the served history
+    /// into one extended prefill instead of per-token Step replays.
+    pub prefill_chunk: usize,
 }
 
 impl Default for ChurnConfig {
@@ -360,6 +375,8 @@ impl Default for ChurnConfig {
             trace: crate::obs::Tracer::off(),
             flight_prefix: None,
             kv_layout: crate::coordinator::KvLayout::default(),
+            wire_format: crate::coordinator::WireFormat::F32,
+            prefill_chunk: 0,
         }
     }
 }
@@ -432,6 +449,8 @@ pub fn device_churn_scenario(cfg: &ChurnConfig) -> Result<ChurnReport> {
     let engine_cfg = EngineConfig {
         time_scale: cfg.time_scale,
         kv_layout: cfg.kv_layout,
+        wire_format: cfg.wire_format,
+        prefill_chunk: cfg.prefill_chunk,
         ..EngineConfig::default()
     };
     let dynamics =
@@ -549,6 +568,12 @@ pub struct ContinuousChurnConfig {
     pub flight_prefix: Option<std::path::PathBuf>,
     /// KV layout every engine in the experiment runs under.
     pub kv_layout: crate::coordinator::KvLayout,
+    /// Wire format every engine in the experiment runs under.
+    pub wire_format: crate::coordinator::WireFormat,
+    /// Chunked-prefill size every engine runs under (0 = monolithic).
+    /// With chunking on, per-row re-prefill recovery folds each row's
+    /// served history into one extended Admit instead of Step replays.
+    pub prefill_chunk: usize,
 }
 
 impl Default for ContinuousChurnConfig {
@@ -574,6 +599,8 @@ impl Default for ContinuousChurnConfig {
             trace: crate::obs::Tracer::off(),
             flight_prefix: None,
             kv_layout: crate::coordinator::KvLayout::default(),
+            wire_format: crate::coordinator::WireFormat::F32,
+            prefill_chunk: 0,
         }
     }
 }
@@ -662,6 +689,8 @@ pub fn continuous_churn_scenario(cfg: &ContinuousChurnConfig) -> Result<Continuo
     let engine_cfg = EngineConfig {
         time_scale: cfg.time_scale,
         kv_layout: cfg.kv_layout,
+        wire_format: cfg.wire_format,
+        prefill_chunk: cfg.prefill_chunk,
         ..EngineConfig::default()
     };
     let dynamics =

@@ -170,6 +170,18 @@ impl Cluster {
         self.latency_ms[b][a] = ms;
     }
 
+    /// One-directional variant of [`Cluster::set_latency`]: writes only
+    /// the `a→b` entry.  Propagation delay is frequently asymmetric on
+    /// last-mile paths (bufferbloat inflates one direction's queueing
+    /// delay while the reverse path stays flat).
+    pub fn set_latency_oneway(&mut self, a: usize, b: usize, ms: f64) {
+        assert!(
+            ms >= 0.0 && ms.is_finite(),
+            "link {a}->{b}: latency must be finite and non-negative, got {ms} ms"
+        );
+        self.latency_ms[a][b] = ms;
+    }
+
     /// The directed link a→b as a [`LinkSpec`].
     pub fn link(&self, a: usize, b: usize) -> LinkSpec {
         LinkSpec::new(self.bandwidth_mbps[a][b], self.latency_ms[a][b])
@@ -258,8 +270,30 @@ impl LiveCluster {
             .set_bandwidth_oneway(a, b, mbps);
     }
 
+    /// Re-shape one symmetric link's propagation delay (validated like
+    /// [`Cluster::set_latency`]).
+    pub fn set_latency(&self, a: usize, b: usize, ms: f64) {
+        self.inner
+            .write()
+            .expect("cluster lock poisoned")
+            .set_latency(a, b, ms);
+    }
+
+    /// One-directional live latency update (see
+    /// [`Cluster::set_latency_oneway`]).
+    pub fn set_latency_oneway(&self, a: usize, b: usize, ms: f64) {
+        self.inner
+            .write()
+            .expect("cluster lock poisoned")
+            .set_latency_oneway(a, b, ms);
+    }
+
     pub fn bandwidth(&self, a: usize, b: usize) -> f64 {
         self.with(|c| c.bandwidth_mbps[a][b])
+    }
+
+    pub fn latency(&self, a: usize, b: usize) -> f64 {
+        self.with(|c| c.latency_ms[a][b])
     }
 
     pub fn comm_ms(&self, a: usize, b: usize, bytes: u64) -> f64 {

@@ -71,7 +71,7 @@ use super::admission::{AdmissionEvent, AdmissionPolicy, AdmissionQueue};
 use super::api::{GenResult, GroupRequest, ServeReply, SloClass};
 use super::engine::Wired;
 use super::scheduler::{Action, ContinuousConfig, RunSnap, SeqEvent, SlotScheduler};
-use super::stage::{Payload, Phase, StageMsg, TokenMsg, TokenOrigin};
+use super::stage::{Payload, Phase, PrefillChunk, StageMsg, TokenMsg, TokenOrigin};
 use crate::metrics::Histogram;
 use crate::obs::{LifeKind, ReqPhase};
 use crate::pipeline::Strategy;
@@ -107,6 +107,11 @@ pub struct PagedCfg {
 #[derive(Debug, Clone)]
 pub struct DriverCfg {
     pub prompt_len: usize,
+    /// Chunked prefill: dispatch each prefill as successive partial
+    /// frames of at most this many tokens, overlapping stage compute
+    /// with transfer (`0` = monolithic).  Token streams are identical
+    /// either way — the head answers on the final chunk.
+    pub prefill_chunk: usize,
     pub batch_sizes: Vec<usize>,
     /// Longest absolute position the compiled caches hold.
     pub max_seq: usize,
@@ -308,18 +313,88 @@ impl DriveHooks for NoHooks {
     }
 }
 
-pub(crate) fn send_prefill(wired: &Wired, g: &GroupRequest) -> Result<()> {
-    let msg = StageMsg::Work {
-        group: g.group_id,
-        iter: 0,
-        pos: 0,
-        phase: Phase::Prefill,
-        batch: g.batch,
-        prompt_len: g.prompt_len,
-        payload: Payload::Tokens(g.tokens.clone()),
-    };
-    let bytes = msg.wire_bytes();
-    wired.to_first.send(msg, bytes)
+/// Dispatch a group prefill: one monolithic frame (`prefill_chunk == 0`)
+/// or a stream of chunk frames released back-to-back, so stage *i+1*
+/// computes chunk *k* while stage *i* computes chunk *k+1*.  The head
+/// answers once, on the final chunk, either way.
+pub(crate) fn send_prefill(wired: &Wired, prefill_chunk: usize, g: &GroupRequest) -> Result<()> {
+    let p = g.prompt_len;
+    for span in PrefillChunk::spans(p, prefill_chunk) {
+        let tokens = match span {
+            None => g.tokens.clone(),
+            Some(c) => {
+                // row-major [batch, prompt] → the chunk's columns of
+                // every row
+                let mut t = Vec::with_capacity(g.batch * c.len);
+                for b in 0..g.batch {
+                    t.extend_from_slice(&g.tokens[b * p + c.start..b * p + c.start + c.len]);
+                }
+                t
+            }
+        };
+        let msg = StageMsg::Work {
+            group: g.group_id,
+            iter: 0,
+            pos: 0,
+            phase: Phase::Prefill,
+            batch: g.batch,
+            prompt_len: p,
+            chunk: span,
+            payload: Payload::Tokens(tokens),
+        };
+        let bytes = msg.wire_bytes();
+        wired.to_first.send(msg, bytes)?;
+    }
+    Ok(())
+}
+
+/// Replay-compressed re-prefill: extend each row's prompt with its first
+/// `extra` served tokens (from `rows`) and prefill the whole span in one
+/// pass — chunked per `prefill_chunk` like any other prefill.  KV lands
+/// for positions `0..prompt_len+extra-1` and the head's single reply
+/// re-derives served token index `extra` per row, replacing `extra`
+/// per-[`Phase::Decode`] replay frames with one pipelined prefill.
+pub(crate) fn send_prefill_ext(
+    wired: &Wired,
+    prefill_chunk: usize,
+    g: &GroupRequest,
+    rows: &[Vec<i32>],
+    extra: usize,
+) -> Result<()> {
+    let p0 = g.prompt_len;
+    let p = p0 + extra;
+    let mut all = Vec::with_capacity(g.batch * p);
+    for b in 0..g.batch {
+        all.extend_from_slice(&g.tokens[b * p0..(b + 1) * p0]);
+        if extra > 0 {
+            all.extend_from_slice(&rows[b][..extra]);
+        }
+    }
+    for span in PrefillChunk::spans(p, prefill_chunk) {
+        let tokens = match span {
+            None => all.clone(),
+            Some(c) => {
+                let mut t = Vec::with_capacity(g.batch * c.len);
+                for b in 0..g.batch {
+                    t.extend_from_slice(&all[b * p + c.start..b * p + c.start + c.len]);
+                }
+                t
+            }
+        };
+        let msg = StageMsg::Work {
+            group: g.group_id,
+            iter: 0,
+            pos: 0,
+            phase: Phase::Prefill,
+            batch: g.batch,
+            prompt_len: p,
+            chunk: span,
+            payload: Payload::Tokens(tokens),
+        };
+        let bytes = msg.wire_bytes();
+        wired.to_first.send(msg, bytes)?;
+    }
+    Ok(())
 }
 
 pub(crate) fn send_decode(
@@ -336,6 +411,7 @@ pub(crate) fn send_decode(
         phase: Phase::Decode,
         batch: g.batch,
         prompt_len: g.prompt_len,
+        chunk: None,
         payload: Payload::Tokens(tokens),
     };
     let bytes = msg.wire_bytes();
@@ -502,7 +578,7 @@ pub fn drive_groups(
     while in_flight_groups < window && next_group < groups.len() {
         let g = &groups[next_group];
         next_group += 1;
-        send_prefill(wired, g)?;
+        send_prefill(wired, cfg.prefill_chunk, g)?;
         rows_real += g.real() as u64;
         rows_total += g.batch as u64;
         active.insert(g.group_id, admit(&cfg.trace, g));
@@ -554,7 +630,7 @@ pub fn drive_groups(
                     for a in active.values_mut().filter(|a| !a.done) {
                         let folded = a.folded();
                         if folded == 0 {
-                            send_prefill(wired, a.req)?;
+                            send_prefill(wired, cfg.prefill_chunk, a.req)?;
                             a.sent = 0;
                         } else {
                             let toks: Vec<i32> =
@@ -652,7 +728,7 @@ pub fn drive_groups(
             if !pending_barrier {
                 if let Some(g) = groups.get(next_group) {
                     next_group += 1;
-                    send_prefill(wired, g)?;
+                    send_prefill(wired, cfg.prefill_chunk, g)?;
                     rows_real += g.real() as u64;
                     rows_total += g.batch as u64;
                     active.insert(g.group_id, admit(&cfg.trace, g));
@@ -735,7 +811,7 @@ pub fn drive_groups(
             while in_flight_groups < window && next_group < groups.len() {
                 let g = &groups[next_group];
                 next_group += 1;
-                send_prefill(wired, g)?;
+                send_prefill(wired, cfg.prefill_chunk, g)?;
                 rows_real += g.real() as u64;
                 rows_total += g.batch as u64;
                 active.insert(g.group_id, admit(&cfg.trace, g));
@@ -1054,15 +1130,26 @@ pub fn drive_slots(
                                 class_by_req.get(&req).copied().unwrap_or_default(),
                             );
                         }
-                        let msg = StageMsg::Admit {
-                            run,
-                            slot,
-                            run_batch,
-                            prompt_len: cfg.prompt_len,
-                            payload: Payload::Tokens(prompt),
-                        };
-                        let bytes = msg.wire_bytes();
-                        wired.to_first.send(msg, bytes)?;
+                        // Chunked prefill streams the admission as
+                        // successive partial frames; exactly one token
+                        // comes back (on the final chunk), so the
+                        // in-flight count still increments once.
+                        for span in PrefillChunk::spans(cfg.prompt_len, cfg.prefill_chunk) {
+                            let tokens = match span {
+                                None => prompt.clone(),
+                                Some(c) => prompt[c.start..c.start + c.len].to_vec(),
+                            };
+                            let msg = StageMsg::Admit {
+                                run,
+                                slot,
+                                run_batch,
+                                prompt_len: cfg.prompt_len,
+                                chunk: span,
+                                payload: Payload::Tokens(tokens),
+                            };
+                            let bytes = msg.wire_bytes();
+                            wired.to_first.send(msg, bytes)?;
+                        }
                         expecting += 1;
                     }
                     Action::Step {

@@ -31,7 +31,7 @@ use super::kvcache::{
     GroupCache, KvLayout, KvPool, PagedPool, ELEM_BYTES_F32, PAGED_MAX_POOL_POSITIONS,
 };
 use super::scheduler::ContinuousConfig;
-use super::stage::{stage_decoders, NextHop, StageActor, StageMsg, TokenMsg};
+use super::stage::{stage_decoders, NextHop, StageActor, StageMsg, TokenMsg, WireFormat};
 use crate::cluster::Cluster;
 use crate::metrics::{ComputeObs, Histogram};
 use crate::netsim::{
@@ -56,6 +56,16 @@ pub struct EngineConfig {
     /// block-granular paged pool.  Token streams are byte-identical
     /// either way; what changes is how capacity is charged.
     pub kv_layout: KvLayout,
+    /// Encoding of inter-stage activation frames.  [`WireFormat::F32`]
+    /// (default) is byte-identical to the historical wire;
+    /// [`WireFormat::Int8`] quantizes hidden states with per-row scales,
+    /// shrinking every activation frame ~4× on the shaped links.
+    pub wire_format: WireFormat,
+    /// Chunked prefill: split each prompt into chunks of at most this
+    /// many tokens and stream them through the pipeline as successive
+    /// partial frames, so stage *i+1* computes chunk *k* while stage *i*
+    /// computes chunk *k+1*.  `0` (default) = monolithic prefill.
+    pub prefill_chunk: usize,
 }
 
 impl Default for EngineConfig {
@@ -65,6 +75,8 @@ impl Default for EngineConfig {
             compute_scale: Vec::new(),
             kv_budget_bytes: 1 << 30,
             kv_layout: KvLayout::default(),
+            wire_format: WireFormat::F32,
+            prefill_chunk: 0,
         }
     }
 }
@@ -131,6 +143,10 @@ impl From<super::driver::DriveStats> for EngineStats {
 pub struct ObsSinks {
     pub compute: Vec<Sender<ComputeObs>>,
     pub transfer: Vec<Sender<TransferObs>>,
+    /// Tracer handed to each stage actor for `wire_compress` /
+    /// `chunk_flush` instants and per-hop `wire_bytes_sent` counters
+    /// (`Tracer::off()` by default — zero cost).
+    pub tracer: crate::obs::Tracer,
 }
 
 impl ObsSinks {
@@ -142,6 +158,7 @@ impl ObsSinks {
         if let Some(tx) = tracer.transfer_sink() {
             self.transfer.push(tx);
         }
+        self.tracer = tracer.clone();
     }
 }
 
@@ -266,6 +283,8 @@ pub fn wire(
         actor.compute_scale = cfg.compute_scale.get(st.device).copied().unwrap_or(1.0);
         actor.obs = obs.map(|o| o.compute.clone()).unwrap_or_default();
         actor.liveness = liveness.cloned();
+        actor.wire = cfg.wire_format;
+        actor.trace = obs.map(|o| o.tracer.clone()).unwrap_or_default();
         let rx = receivers[i].take().unwrap();
         handles.push(
             std::thread::Builder::new()
@@ -329,6 +348,7 @@ pub fn driver_cfg(manifest: &Manifest, plan: &Plan, cfg: &EngineConfig) -> Drive
     });
     DriverCfg {
         prompt_len: c.prefill_len,
+        prefill_chunk: cfg.prefill_chunk,
         batch_sizes: manifest.batch_sizes.clone(),
         max_seq: c.max_seq,
         kv_budget_bytes: cfg.kv_budget_bytes,

@@ -60,4 +60,4 @@ pub use router::{
     drive_replicated, ReplicaOutcome, ReplicatedOutcome, Router, RouterConfig, RouterSource,
 };
 pub use scheduler::{ContinuousConfig, PreemptMode, RowSnap, RunSnap, SlotScheduler};
-pub use stage::{KvEntry, StageExport};
+pub use stage::{KvEntry, StageExport, WireFormat};

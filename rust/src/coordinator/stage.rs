@@ -16,7 +16,9 @@
 //! step executes on every stage it passes.
 
 use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
 use std::sync::mpsc::Sender;
+use std::sync::Arc;
 
 use super::kvcache::{
     GroupCache, KvLayout, KvPool, PagedPool, ELEM_BYTES_F32, PAGED_MAX_POOL_POSITIONS,
@@ -24,8 +26,10 @@ use super::kvcache::{
 use crate::cluster::DeviceLiveness;
 use crate::metrics::ComputeObs;
 use crate::netsim::ShapedSender;
+use crate::obs::Tracer;
 use crate::runtime::manifest::Manifest;
 use crate::runtime::shard::RegId;
+use crate::runtime::sim::{dequantize_rows_i8, quantize_rows_i8};
 use crate::runtime::{ExecServiceHandle, TensorData, WeightStore};
 
 /// Phase of a token iteration.
@@ -35,6 +39,85 @@ pub enum Phase {
     Decode,
 }
 
+/// On-the-wire encoding of inter-stage activation frames.
+///
+/// `F32` ships full-precision hidden states (byte-identical to the
+/// historical wire).  `Int8` quantizes each hidden-state frame with
+/// per-row (= per-token) symmetric scales at the sending stage and
+/// dequantizes on receipt — the frame shrinks ~4×, and because every
+/// token row carries its own scale the encoding is independent of how
+/// the prompt is chunked across frames.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum WireFormat {
+    #[default]
+    F32,
+    Int8,
+}
+
+impl WireFormat {
+    /// Multiplier this format applies to profiled activation byte counts
+    /// (`act_bytes_*` in [`crate::profiler::ProfiledTraces`]): an f32 row
+    /// of `d_model` values becomes `d_model` int8 values plus one f32
+    /// scale.
+    pub fn act_scale(self, d_model: usize) -> f64 {
+        match self {
+            WireFormat::F32 => 1.0,
+            WireFormat::Int8 => {
+                let d = d_model.max(1) as f64;
+                (d + 4.0) / (4.0 * d)
+            }
+        }
+    }
+}
+
+/// A hidden-state tensor quantized for the wire: int8 values plus one
+/// f32 scale per row (trailing-axis slice).  Logical dims are the f32
+/// tensor's, so receivers reconstruct the exact shape.
+#[derive(Debug, Clone)]
+pub struct QuantTensor {
+    pub data: Arc<Vec<i8>>,
+    pub scales: Vec<f32>,
+    pub dims: Vec<i64>,
+}
+
+impl QuantTensor {
+    /// Bytes this tensor occupies on the wire.
+    pub fn wire_bytes(&self) -> u64 {
+        self.data.len() as u64 + self.scales.len() as u64 * 4
+    }
+
+    /// Quantize a hidden-state tensor (rows = everything but the last
+    /// axis).
+    pub fn quantize(h: &TensorData) -> Result<QuantTensor> {
+        let data = h.as_f32()?;
+        let dims = h.dims().to_vec();
+        let d = dims.last().copied().unwrap_or(1).max(1) as usize;
+        anyhow::ensure!(data.len() % d == 0, "quantize: ragged tensor {dims:?}");
+        if data.is_empty() {
+            return Ok(QuantTensor {
+                data: Arc::new(Vec::new()),
+                scales: Vec::new(),
+                dims,
+            });
+        }
+        let (q, scales) = quantize_rows_i8(data, data.len() / d);
+        Ok(QuantTensor {
+            data: Arc::new(q),
+            scales,
+            dims,
+        })
+    }
+
+    /// Reconstruct the f32 tensor.
+    pub fn dequantize(&self) -> TensorData {
+        if self.data.is_empty() {
+            return TensorData::f32(Vec::new(), self.dims.clone());
+        }
+        let f = dequantize_rows_i8(&self.data, &self.scales, self.scales.len());
+        TensorData::f32(f, self.dims.clone())
+    }
+}
+
 /// Payload entering a stage.
 #[derive(Debug, Clone)]
 pub enum Payload {
@@ -42,6 +125,47 @@ pub enum Payload {
     Tokens(Vec<i32>),
     /// Hidden activations from the previous stage.
     Hidden(TensorData),
+    /// Hidden activations quantized per [`WireFormat::Int8`].
+    Quant(QuantTensor),
+}
+
+/// Position of one prefill chunk within a chunked (streamed) prefill.
+/// `None` chunk on a Work/Admit frame = the whole prompt in one frame
+/// (the historical monolithic path, byte-identical to before).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefillChunk {
+    /// Absolute position of the chunk's first token.
+    pub start: usize,
+    /// Tokens in this chunk.
+    pub len: usize,
+    /// Final chunk: the stage installs the accumulated KV and the head
+    /// emits the admission's token.
+    pub last: bool,
+}
+
+impl PrefillChunk {
+    /// Split a prompt of `total` tokens into chunk spans of at most
+    /// `chunk` tokens each.  `chunk == 0` (chunking disabled) or a chunk
+    /// covering the whole prompt yields the single monolithic span
+    /// (`None`), which keeps the wire byte-identical to the unchunked
+    /// path.
+    pub fn spans(total: usize, chunk: usize) -> Vec<Option<PrefillChunk>> {
+        if chunk == 0 || chunk >= total || total == 0 {
+            return vec![None];
+        }
+        let mut out = Vec::with_capacity(total.div_ceil(chunk));
+        let mut start = 0;
+        while start < total {
+            let len = chunk.min(total - start);
+            out.push(Some(PrefillChunk {
+                start,
+                len,
+                last: start + len == total,
+            }));
+            start += len;
+        }
+        out
+    }
 }
 
 /// Wire size of a control frame (Free/Evict/Compact/Export/Shutdown) on
@@ -59,6 +183,10 @@ pub enum StageMsg {
         phase: Phase,
         batch: usize,
         prompt_len: usize,
+        /// Chunked prefill: which slice of the prompt this frame carries
+        /// (`None` = whole prompt, the monolithic path).  Decode frames
+        /// never chunk.
+        chunk: Option<PrefillChunk>,
         payload: Payload,
     },
     /// Continuous batching: prefill one sequence at batch 1 and install
@@ -71,6 +199,10 @@ pub enum StageMsg {
         slot: usize,
         run_batch: usize,
         prompt_len: usize,
+        /// Chunked prefill: which slice of the prompt this frame carries
+        /// (`None` = whole prompt).  The head answers only on the final
+        /// chunk.
+        chunk: Option<PrefillChunk>,
         payload: Payload,
     },
     /// Continuous batching: one decode iteration over run `run`'s
@@ -190,6 +322,7 @@ impl Payload {
         match self {
             Payload::Tokens(t) => t.len() as u64 * 4,
             Payload::Hidden(h) => h.bytes(),
+            Payload::Quant(q) => q.wire_bytes(),
         }
     }
 }
@@ -303,6 +436,11 @@ pub struct StageActor {
     /// compute, no forwarding, no observations — exactly as if the host
     /// vanished with its KV state.
     pub liveness: Option<DeviceLiveness>,
+    /// Encoding applied to outgoing hidden-state frames.
+    pub wire: WireFormat,
+    /// Trace sink for `wire_compress` / `chunk_flush` instants and the
+    /// per-hop `wire_bytes_sent` counter (off by default: zero cost).
+    pub trace: Tracer,
     // weights registered inside the exec service (converted to literals
     // once — the per-token decode loop never copies weights again)
     embed_w: Option<RegId>,
@@ -316,6 +454,15 @@ pub struct StageActor {
     // telemetry
     pub exec_ms_total: f64,
     pub msgs_processed: u64,
+    /// Total bytes this stage has pushed onto its outgoing link.
+    pub wire_bytes_sent: u64,
+    /// `wire_bytes_sent[s{idx}]` — Tracer counters key on `&'static str`,
+    /// so the per-stage name is leaked once at construction.
+    wire_counter: &'static str,
+    /// In-flight chunked prefills: accumulated per-layer padded caches,
+    /// keyed `(group, None)` for Work frames and `(run, Some(slot))` for
+    /// Admit frames.  Installed into the pool on the final chunk.
+    pending: HashMap<(u64, Option<usize>), Vec<(TensorData, TensorData)>>,
 }
 
 impl StageActor {
@@ -420,6 +567,8 @@ impl StageActor {
             compute_scale: 1.0,
             obs: Vec::new(),
             liveness: None,
+            wire: WireFormat::F32,
+            trace: Tracer::default(),
             embed_w,
             head_w,
             layer_w,
@@ -429,6 +578,11 @@ impl StageActor {
             vocab: c.vocab_size,
             exec_ms_total: 0.0,
             msgs_processed: 0,
+            wire_bytes_sent: 0,
+            wire_counter: Box::leak(
+                format!("wire_bytes_sent[s{stage_idx}]").into_boxed_str(),
+            ),
+            pending: HashMap::new(),
         })
     }
 
@@ -580,43 +734,67 @@ impl StageActor {
                     slot,
                     run_batch,
                     prompt_len,
+                    chunk,
                     payload,
                 } => {
                     self.msgs_processed += 1;
                     let exec_ms_before = self.exec_ms_total;
-                    let hidden = self.input_hidden(Phase::Prefill, 1, prompt_len, payload)?;
-                    let (hidden, layers) = self.prefill_compute(1, hidden)?;
-                    if !layers.is_empty() {
-                        if let Some(pool) = self.paged.as_mut() {
-                            pool.admit_row(run, slot, run_batch, prompt_len, &layers)
-                        } else {
-                            self.kv
-                                .insert_row(run, slot, run_batch, prompt_len, layers)
-                                .map(|_| 0)
+                    let seg = chunk.map(|c| c.len).unwrap_or(prompt_len);
+                    let hidden = self.input_hidden(Phase::Prefill, 1, seg, payload)?;
+                    let (hidden, layers, written) = match chunk {
+                        None => {
+                            let (h, layers) = self.prefill_compute(1, hidden)?;
+                            (h, layers, Some(prompt_len))
                         }
-                        .with_context(|| {
-                            format!(
-                                "stage {} (device {}) admitting run {run} slot {slot}",
-                                self.stage_idx, self.device_id
-                            )
-                        })?;
+                        Some(c) => {
+                            let (h, layers) =
+                                self.chunk_compute(1, hidden, (run, Some(slot)), c)?;
+                            (h, layers, c.last.then(|| c.start + c.len))
+                        }
+                    };
+                    if let Some(written) = written {
+                        if !layers.is_empty() {
+                            if let Some(pool) = self.paged.as_mut() {
+                                pool.admit_row(run, slot, run_batch, written, &layers)
+                            } else {
+                                self.kv
+                                    .insert_row(run, slot, run_batch, written, layers)
+                                    .map(|_| 0)
+                            }
+                            .with_context(|| {
+                                format!(
+                                    "stage {} (device {}) admitting run {run} slot {slot}",
+                                    self.stage_idx, self.device_id
+                                )
+                            })?;
+                            if chunk.is_some() {
+                                self.trace.instant("chunk_flush", || {
+                                    format!("run {run} slot {slot} written {written}")
+                                });
+                            }
+                        }
                     }
                     self.record_obs(false, exec_ms_before);
+                    let last = chunk.map(|c| c.last).unwrap_or(true);
                     if self.has_head {
-                        let tokens = self.head_tokens(1, Phase::Prefill, hidden)?;
-                        self.send_tokens(TokenMsg {
-                            group: run,
-                            iter: 0,
-                            tokens,
-                            origin: TokenOrigin::Admit { slot },
-                        })?;
+                        if last {
+                            let tokens = self.head_tokens(1, Phase::Prefill, hidden)?;
+                            self.send_tokens(TokenMsg {
+                                group: run,
+                                iter: 0,
+                                tokens,
+                                origin: TokenOrigin::Admit { slot },
+                            })?;
+                        }
                     } else {
+                        let payload = self.encode_hidden(hidden)?;
                         self.forward_work(StageMsg::Admit {
                             run,
                             slot,
                             run_batch,
                             prompt_len,
-                            payload: Payload::Hidden(hidden),
+                            chunk,
+                            payload,
                         })?;
                     }
                 }
@@ -641,12 +819,13 @@ impl StageActor {
                             origin: TokenOrigin::Step,
                         })?;
                     } else {
+                        let payload = self.encode_hidden(hidden)?;
                         self.forward_work(StageMsg::Step {
                             run,
                             iter,
                             batch,
                             pos,
-                            payload: Payload::Hidden(hidden),
+                            payload,
                         })?;
                     }
                 }
@@ -694,25 +873,45 @@ impl StageActor {
                     phase,
                     batch,
                     prompt_len,
+                    chunk,
                     payload,
                 } => {
                     self.msgs_processed += 1;
                     let exec_ms_before = self.exec_ms_total;
-                    let hidden = self.input_hidden(phase, batch, prompt_len, payload)?;
-                    let hidden = match phase {
-                        Phase::Prefill => self.run_prefill(group, batch, hidden)?,
-                        Phase::Decode => self.run_decode(group, batch, pos, hidden)?,
+                    let seg = match (phase, chunk) {
+                        (Phase::Prefill, Some(c)) => c.len,
+                        _ => prompt_len,
+                    };
+                    let hidden = self.input_hidden(phase, batch, seg, payload)?;
+                    let hidden = match (phase, chunk) {
+                        (Phase::Prefill, Some(c)) => {
+                            let (h, layers) =
+                                self.chunk_compute(batch, hidden, (group, None), c)?;
+                            if c.last {
+                                self.install_group(group, batch, c.start + c.len, layers)?;
+                                self.trace.instant("chunk_flush", || {
+                                    format!("group {group} written {}", c.start + c.len)
+                                });
+                            }
+                            h
+                        }
+                        (Phase::Prefill, None) => self.run_prefill(group, batch, hidden)?,
+                        (Phase::Decode, _) => self.run_decode(group, batch, pos, hidden)?,
                     };
                     self.record_obs(phase == Phase::Decode, exec_ms_before);
+                    let last = phase == Phase::Decode || chunk.map(|c| c.last).unwrap_or(true);
                     if self.has_head {
-                        let tokens = self.head_tokens(batch, phase, hidden)?;
-                        self.send_tokens(TokenMsg {
-                            group,
-                            iter,
-                            tokens,
-                            origin: TokenOrigin::Group,
-                        })?;
+                        if last {
+                            let tokens = self.head_tokens(batch, phase, hidden)?;
+                            self.send_tokens(TokenMsg {
+                                group,
+                                iter,
+                                tokens,
+                                origin: TokenOrigin::Group,
+                            })?;
+                        }
                     } else {
+                        let payload = self.encode_hidden(hidden)?;
                         self.forward_work(StageMsg::Work {
                             group,
                             iter,
@@ -720,7 +919,8 @@ impl StageActor {
                             phase,
                             batch,
                             prompt_len,
-                            payload: Payload::Hidden(hidden),
+                            chunk,
+                            payload,
                         })?;
                     }
                 }
@@ -739,42 +939,65 @@ impl StageActor {
             .unwrap_or(true)
     }
 
-    fn forward_control(&self, msg: StageMsg) -> Result<()> {
+    /// Charge `bytes` to the per-hop telemetry counter.
+    fn note_sent(&mut self, bytes: u64) {
+        self.wire_bytes_sent += bytes;
+        self.trace.counter(self.wire_counter, self.wire_bytes_sent as f64);
+    }
+
+    fn forward_control(&mut self, msg: StageMsg) -> Result<()> {
         if !self.host_alive() {
             return Ok(());
         }
         if let NextHop::Stage(tx) = &self.next {
             let bytes = msg.wire_bytes();
             tx.send(msg, bytes)?;
+            self.note_sent(bytes);
         }
         Ok(())
     }
 
     /// Forward a work-bearing frame to the next stage.
-    fn forward_work(&self, msg: StageMsg) -> Result<()> {
+    fn forward_work(&mut self, msg: StageMsg) -> Result<()> {
         if !self.host_alive() {
             return Ok(());
         }
+        let bytes = msg.wire_bytes();
         match &self.next {
-            NextHop::Stage(tx) => {
-                let bytes = msg.wire_bytes();
-                tx.send(msg, bytes)
-            }
+            NextHop::Stage(tx) => tx.send(msg, bytes)?,
             NextHop::Driver(_) => anyhow::bail!("non-head stage wired to driver"),
         }
+        self.note_sent(bytes);
+        Ok(())
     }
 
     /// Send sampled tokens to the driver (head stage only).
-    fn send_tokens(&self, msg: TokenMsg) -> Result<()> {
+    fn send_tokens(&mut self, msg: TokenMsg) -> Result<()> {
         if !self.host_alive() {
             return Ok(());
         }
+        let bytes = msg.wire_bytes();
         match &self.next {
-            NextHop::Driver(tx) => {
-                let bytes = msg.wire_bytes();
-                tx.send(msg, bytes)
-            }
+            NextHop::Driver(tx) => tx.send(msg, bytes)?,
             NextHop::Stage(_) => anyhow::bail!("head stage wired to another stage"),
+        }
+        self.note_sent(bytes);
+        Ok(())
+    }
+
+    /// Encode an outgoing hidden-state frame per the configured wire
+    /// format.
+    fn encode_hidden(&mut self, h: TensorData) -> Result<Payload> {
+        match self.wire {
+            WireFormat::F32 => Ok(Payload::Hidden(h)),
+            WireFormat::Int8 => {
+                let raw = h.bytes();
+                let q = QuantTensor::quantize(&h)?;
+                let packed = q.wire_bytes();
+                self.trace
+                    .instant("wire_compress", || format!("{raw}B -> {packed}B"));
+                Ok(Payload::Quant(q))
+            }
         }
     }
 
@@ -803,6 +1026,7 @@ impl StageActor {
     ) -> Result<TensorData> {
         match payload {
             Payload::Hidden(h) => Ok(h),
+            Payload::Quant(q) => Ok(q.dequantize()),
             Payload::Tokens(tokens) => {
                 anyhow::ensure!(self.has_embed, "tokens sent to a non-source stage");
                 let emb = self.embed_w.context("missing tok_emb")?;
@@ -841,6 +1065,117 @@ impl StageActor {
             layers.push((kc, vc));
         }
         Ok((h, layers))
+    }
+
+    /// One chunk of a streamed prefill through this stage's layers.
+    /// Chunk 0 runs the ordinary fresh-prefill kernel; later chunks run
+    /// the append kernel against the caches accumulated in `pending`.
+    /// Returns the chunk's outgoing hidden plus — on the final chunk
+    /// only — the complete per-layer caches ready for installation
+    /// (empty `Vec` otherwise, or when this stage hosts no decoders).
+    fn chunk_compute(
+        &mut self,
+        batch: usize,
+        mut h: TensorData,
+        key: (u64, Option<usize>),
+        c: PrefillChunk,
+    ) -> Result<(TensorData, Vec<(TensorData, TensorData)>)> {
+        anyhow::ensure!(c.len > 0, "empty prefill chunk");
+        let layers = if c.start == 0 {
+            anyhow::ensure!(
+                !self.pending.contains_key(&key),
+                "stage {}: chunk 0 for {key:?} over a live chunked prefill",
+                self.stage_idx
+            );
+            let (h2, layers) = self.prefill_compute(batch, h)?;
+            h = h2;
+            layers
+        } else {
+            let prev = self.pending.remove(&key).with_context(|| {
+                format!(
+                    "stage {}: chunk at {} for {key:?} without prior chunks",
+                    self.stage_idx, c.start
+                )
+            })?;
+            let variant = format!("layer_prefill_b{batch}");
+            let start_t = TensorData::scalar_i32(c.start as i32);
+            let mut layers = Vec::with_capacity(prev.len());
+            for (w, (kc, vc)) in self.layer_w.clone().into_iter().zip(prev) {
+                let inputs = vec![h, kc, vc, start_t.clone()];
+                let mut out = self.exec_scaled(Some(w), &variant, inputs)?;
+                anyhow::ensure!(out.len() == 3, "layer_prefill append must return 3 outputs");
+                let vc = out.pop().unwrap();
+                let kc = out.pop().unwrap();
+                h = out.pop().unwrap();
+                layers.push((kc, vc));
+            }
+            layers
+        };
+        if c.last {
+            Ok((h, layers))
+        } else {
+            if !layers.is_empty() {
+                self.pending.insert(key, layers);
+            }
+            Ok((h, Vec::new()))
+        }
+    }
+
+    /// Install a fully accumulated chunked group prefill, mirroring the
+    /// admission rules of the monolithic [`Self::run_prefill`] path.
+    fn install_group(
+        &mut self,
+        group: u64,
+        batch: usize,
+        written: usize,
+        layers: Vec<(TensorData, TensorData)>,
+    ) -> Result<()> {
+        if layers.is_empty() {
+            return Ok(());
+        }
+        if let Some(pool) = self.paged.as_mut() {
+            let cache = GroupCache {
+                layers,
+                batch,
+                bytes: 0,
+                live: vec![true; batch],
+                written: vec![written; batch],
+            };
+            return pool.admit_cache(group, &cache).with_context(|| {
+                format!(
+                    "stage {} (device {}) admitting chunked group {group}",
+                    self.stage_idx, self.device_id
+                )
+            });
+        }
+        let bytes = KvPool::group_bytes(
+            self.layer_w.len(),
+            batch,
+            self.kv_heads,
+            self.max_seq,
+            self.head_dim,
+            ELEM_BYTES_F32,
+        );
+        anyhow::ensure!(
+            self.kv.can_admit(bytes),
+            "stage {} (device {}) KV pool full: admit {} used {} budget {}",
+            self.stage_idx,
+            self.device_id,
+            bytes,
+            self.kv.used_bytes(),
+            self.kv.budget_bytes()
+        );
+        self.kv.insert(
+            group,
+            GroupCache {
+                layers,
+                batch,
+                bytes,
+                live: vec![true; batch],
+                written: vec![written; batch],
+            },
+        )?;
+        Ok(())
     }
 
     fn run_prefill(&mut self, group: u64, batch: usize, h: TensorData) -> Result<TensorData> {
@@ -1067,6 +1402,7 @@ mod tests {
             phase: Phase::Prefill,
             batch: 1,
             prompt_len: 4,
+            chunk: None,
             payload: Payload::Tokens(vec![1, 2, 3, 4]),
         };
         assert_eq!(m.wire_bytes(), 16);
@@ -1092,5 +1428,48 @@ mod tests {
             origin: TokenOrigin::Group,
         };
         assert_eq!(t.wire_bytes(), 32);
+    }
+
+    #[test]
+    fn quant_frames_charge_compressed_bytes() {
+        // [2, 3, 4] f32 hidden = 96B raw; int8 wire = 24 values + 6
+        // row scales = 48B.
+        let h = TensorData::f32((0..24).map(|i| i as f32 - 11.5).collect(), vec![2, 3, 4]);
+        assert_eq!(Payload::Hidden(h.clone()).wire_bytes(), 96);
+        let q = QuantTensor::quantize(&h).unwrap();
+        assert_eq!(q.wire_bytes(), 24 + 6 * 4);
+        let m = StageMsg::Admit {
+            run: 0,
+            slot: 0,
+            run_batch: 1,
+            prompt_len: 3,
+            chunk: Some(PrefillChunk {
+                start: 0,
+                len: 3,
+                last: false,
+            }),
+            payload: Payload::Quant(q.clone()),
+        };
+        assert_eq!(m.wire_bytes(), 48);
+        // round trip reconstructs shape and stays within the per-row
+        // quantization error bound
+        let back = q.dequantize();
+        assert_eq!(back.dims(), h.dims());
+        let (a, b) = (h.as_f32().unwrap(), back.as_f32().unwrap());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() <= 11.5 / 127.0 * 0.5 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn act_scale_matches_wire_ratio() {
+        // one row of d f32 values vs d int8 values + one f32 scale
+        for d in [16usize, 64, 4096] {
+            let f32_bytes = (d * 4) as f64;
+            let int8_bytes = (d + 4) as f64;
+            let ratio = int8_bytes / f32_bytes;
+            assert!((WireFormat::Int8.act_scale(d) - ratio).abs() < 1e-12);
+            assert_eq!(WireFormat::F32.act_scale(d), 1.0);
+        }
     }
 }

@@ -95,6 +95,10 @@ impl LiveLink {
     pub fn set_bandwidth(&self, mbps: f64) {
         self.spec.lock().expect("link spec lock poisoned").bandwidth_mbps = mbps;
     }
+
+    pub fn set_latency(&self, ms: f64) {
+        self.spec.lock().expect("link spec lock poisoned").latency_ms = ms;
+    }
 }
 
 /// A live link annotated with the device pair it connects, so dynamics

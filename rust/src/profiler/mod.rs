@@ -99,6 +99,20 @@ impl ProfiledTraces {
         w + kv * batch as u64
     }
 
+    /// Rescale every activation-bytes trace by `factor` — how a
+    /// quantized wire format teaches the partition DPs that inter-stage
+    /// frames shrank (e.g. int8+scale ≈ 0.25× of f32).  Weights and KV
+    /// stay untouched: only what crosses the wire compresses.
+    pub fn scale_act_bytes(&mut self, factor: f64) {
+        if factor == 1.0 {
+            return;
+        }
+        let scale = |b: &mut u64| *b = ((*b as f64) * factor).round().max(0.0) as u64;
+        self.act_bytes_decode.iter_mut().for_each(scale);
+        self.act_bytes_prefill.iter_mut().for_each(scale);
+        self.act_bytes_avg.iter_mut().for_each(scale);
+    }
+
     /// Largest batch size such that layers `[lo, hi)` fit in `mem` bytes
     /// (0 if even the weights don't fit).
     pub fn max_batch_for(&self, lo: usize, hi: usize, mem: u64) -> usize {
@@ -160,5 +174,24 @@ mod tests {
     #[test]
     fn workload_iterations() {
         assert_eq!(Workload::paper_default().iterations(), 96);
+    }
+
+    #[test]
+    fn scale_act_bytes_touches_only_wire_traces() {
+        let mut t = traces();
+        let weights = t.weight_bytes.clone();
+        let kv = t.kv_bytes_per_seq.clone();
+        let avg = t.act_bytes_avg.clone();
+        t.scale_act_bytes(0.25);
+        for (before, after) in avg.iter().zip(&t.act_bytes_avg) {
+            assert_eq!(*after, ((*before as f64) * 0.25).round() as u64);
+        }
+        // weights and KV never cross the wire per token — untouched
+        assert_eq!(t.weight_bytes, weights);
+        assert_eq!(t.kv_bytes_per_seq, kv);
+        // factor 1.0 is the identity fast path
+        let snapshot = t.act_bytes_avg.clone();
+        t.scale_act_bytes(1.0);
+        assert_eq!(t.act_bytes_avg, snapshot);
     }
 }

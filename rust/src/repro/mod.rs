@@ -12,6 +12,7 @@
 //! | adaptive | mid-generation link drop: static vs adaptive engine | [`adaptive::run`] |
 //! | churn | mid-generation device crash: failover + KV recovery | [`churn::run`] |
 //! | serving | continuous batching vs fixed groups (`edgeshard bench`) | [`serving::run`] |
+//! | wire | int8 wire × chunked prefill vs bandwidth (part of `bench serving`) | [`wire::run_wire_overlap_bench`] |
 //! | replicas | capacity vs replica count K behind the router | [`replicas::run`] |
 //!
 //! Numbers come from the analytic profiler + the planners + the pipeline
@@ -29,6 +30,7 @@ pub mod replicas;
 pub mod serving;
 pub mod table1;
 pub mod table4;
+pub mod wire;
 
 pub use methods::{evaluate_latency, evaluate_throughput, Method, ThroughputEval};
 

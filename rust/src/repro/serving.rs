@@ -45,6 +45,10 @@
 //! concurrent rows, written to `results/serving_paged_kv.md` +
 //! `BENCH_paged_kv.json` (the gate in `tests/paged_kv.rs` asserts the
 //! same 2× at engine level).
+//!
+//! The **wire/overlap** section ([`super::wire`]) sweeps the int8 wire
+//! format and chunked prefill against tightening inter-stage bandwidth —
+//! written to `results/wire_overlap.md` + `BENCH_wire_overlap.json`.
 
 use anyhow::{Context, Result};
 use std::collections::{HashMap, HashSet};
@@ -1459,5 +1463,16 @@ pub fn run(
     std::fs::write(&pg_path, paged_json(&pg).to_string())
         .with_context(|| format!("writing {pg_path:?}"))?;
     println!("wrote {}", pg_path.display());
+
+    let w_cfg = super::wire::WireOverlapConfig {
+        seed: cfg.seed,
+        ..super::wire::WireOverlapConfig::default()
+    };
+    let w = super::wire::run_wire_overlap_bench(&w_cfg)?;
+    super::emit("wire_overlap", &super::wire::wire_overlap_markdown(&w))?;
+    let w_path = json_path.with_file_name("BENCH_wire_overlap.json");
+    std::fs::write(&w_path, super::wire::wire_overlap_json(&w).to_string())
+        .with_context(|| format!("writing {w_path:?}"))?;
+    println!("wrote {}", w_path.display());
     Ok(())
 }

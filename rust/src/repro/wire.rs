@@ -1,0 +1,396 @@
+//! Wire-format × prefill-overlap sweep: how much the quantized int8
+//! wire and chunked prefill buy as inter-stage bandwidth tightens.
+//!
+//! The same ragged request mix is served by four pipeline variants —
+//! {fp32, int8} wire × {monolithic, chunked} prefill — at several
+//! inter-stage bandwidth points.  Each point's cluster is shaped through
+//! [`crate::adaptive::NetworkDynamics`] (a `Constant` bandwidth schedule
+//! applied to the ground truth, then snapshotted), so the bench exercises
+//! the exact shaping path the adaptive runtime uses, and the engine runs
+//! with `time_scale > 0` so the netsim pacers actually serialize frames
+//! at the scheduled rate.
+//!
+//! What the sweep shows (the perf claim of the wire-format work):
+//!
+//! * **int8** shrinks every hidden-state frame ~4×, so its win over fp32
+//!   grows as the wire gets slower — at the tightest point the transfer
+//!   term dominates and tokens/s approaches the 4× frame ratio's bound;
+//! * **chunked prefill** overlaps stage *i+1*'s chunk *k* with stage
+//!   *i*'s chunk *k+1*, cutting TTFT (the prompt no longer crosses each
+//!   hop as one monolithic frame before the next stage may start);
+//! * the two compose: int8+chunked is the hot-path configuration.
+//!
+//! Correctness anchors carried in the artifact: the fp32 variants must
+//! produce **byte-identical** token streams at every bandwidth
+//! (bandwidth changes *when*, never *what*; chunking changes frame
+//! boundaries, never row math), and the int8 variants must agree with
+//! each other and greedy-match the fp32 streams on the sim manifest
+//! (the bounded-divergence gate `tests/wire_format.rs` enforces).
+//!
+//! Output: `results/wire_overlap.md` + the `BENCH_wire_overlap.json`
+//! CI artifact.
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+use crate::adaptive::{NetworkDynamics, ScheduleShape};
+use crate::cluster::{Cluster, Device, DeviceClass, LiveCluster};
+use crate::coordinator::api::{GenRequest, GenResult};
+use crate::coordinator::{Batcher, Engine, EngineConfig, WireFormat};
+use crate::pipeline::Strategy;
+use crate::runtime::manifest::ManifestConfig;
+use crate::runtime::{ExecService, Manifest, WeightStore};
+use crate::util::{markdown_table, Json};
+use crate::workload::RaggedTraceGen;
+
+/// Bench knobs (defaults are what CI runs).
+#[derive(Debug, Clone)]
+pub struct WireOverlapConfig {
+    pub requests: usize,
+    pub seed: u64,
+    /// Generation lengths the ragged mix draws from.
+    pub gen_lens: Vec<usize>,
+    pub mean_burst: usize,
+    /// Inter-stage bandwidth points (Mbps), descending: the win must
+    /// widen as the wire tightens.
+    pub bandwidths_mbps: Vec<f64>,
+    /// Chunk size of the chunked variants (tokens; the prompt is longer,
+    /// so chunking genuinely splits it).
+    pub prefill_chunk: usize,
+    /// Link-delay pacing factor.  Must be > 0 — at 0 the pacers don't
+    /// serialize and every bandwidth point measures the same thing.
+    pub time_scale: f64,
+}
+
+impl Default for WireOverlapConfig {
+    fn default() -> Self {
+        WireOverlapConfig {
+            requests: 12,
+            seed: 0,
+            gen_lens: vec![4, 8, 16],
+            mean_burst: 2,
+            bandwidths_mbps: vec![200.0, 50.0, 8.0],
+            prefill_chunk: 16,
+            time_scale: 0.05,
+        }
+    }
+}
+
+/// One variant at one bandwidth point.
+#[derive(Debug)]
+pub struct WireVariant {
+    /// "f32" / "int8".
+    pub wire: String,
+    /// 0 = monolithic.
+    pub prefill_chunk: usize,
+    pub tokens_per_s: f64,
+    pub ttft_p50_ms: f64,
+    pub ttft_p99_ms: f64,
+    pub makespan_ms: f64,
+    pub results: Vec<GenResult>,
+}
+
+impl WireVariant {
+    fn key(&self) -> String {
+        let overlap = if self.prefill_chunk > 0 {
+            "chunked"
+        } else {
+            "mono"
+        };
+        format!("{}_{overlap}", self.wire)
+    }
+}
+
+/// One bandwidth point: the four variants plus the win of the hot-path
+/// configuration (int8+chunked) over the fp32 monolithic baseline.
+#[derive(Debug)]
+pub struct WirePoint {
+    pub bandwidth_mbps: f64,
+    pub variants: Vec<WireVariant>,
+    /// int8+chunked tokens/s ÷ fp32 monolithic tokens/s (> 1 = win).
+    pub speedup_tps: f64,
+    /// int8+chunked TTFT p99 ÷ fp32 monolithic TTFT p99 (< 1 = win).
+    pub ttft_p99_ratio: f64,
+}
+
+impl WirePoint {
+    pub fn variant(&self, key: &str) -> Option<&WireVariant> {
+        self.variants.iter().find(|v| v.key() == key)
+    }
+}
+
+/// Everything the sweep produced.
+#[derive(Debug)]
+pub struct WireOverlapReport {
+    pub config: WireOverlapConfig,
+    pub points: Vec<WirePoint>,
+    /// Every fp32 variant at every bandwidth emitted byte-identical
+    /// per-request token streams (the chunked-prefill identity).
+    pub fp32_identical: bool,
+    /// Every int8 variant greedy-matched the fp32 streams (bounded
+    /// divergence on the sim manifest).
+    pub int8_tokens_match: bool,
+}
+
+/// The bench model: the mini sim model with a prompt long enough
+/// (64 tokens) that a 16-token chunk genuinely splits the prefill.
+fn wire_config() -> ManifestConfig {
+    ManifestConfig::mini_sim("tinyllama-wire-sim", 64, 128)
+}
+
+fn wire_cluster(bandwidth_mbps: f64) -> Cluster {
+    let devices = vec![
+        Device::new(0, DeviceClass::agx_orin()),
+        Device::new(1, DeviceClass::agx_orin()),
+    ];
+    // shape the inter-stage link through the adaptive dynamics path —
+    // the same Constant schedule a scenario would replay — then
+    // snapshot the shaped ground truth for the engine build
+    let live = LiveCluster::new(Cluster::new(devices, 1000.0, 0.5));
+    NetworkDynamics::new()
+        .link(0, 1, ScheduleShape::Constant(bandwidth_mbps))
+        .apply(&live, &[], 0.0);
+    live.snapshot()
+}
+
+/// Token rows keyed by request id — the cross-variant comparison key.
+fn token_rows(results: &[GenResult]) -> Vec<(u64, Vec<i32>)> {
+    let mut rows: Vec<(u64, Vec<i32>)> =
+        results.iter().map(|r| (r.id, r.tokens.clone())).collect();
+    rows.sort_by_key(|(id, _)| *id);
+    rows
+}
+
+/// Run the wire/overlap sweep; see the module docs.
+pub fn run_wire_overlap_bench(cfg: &WireOverlapConfig) -> Result<WireOverlapReport> {
+    let manifest = Manifest::synthetic(wire_config(), vec![1, 8]);
+    let weights = WeightStore::synthetic(&manifest, cfg.seed);
+    let (_svc, exec) = ExecService::start_sim(&manifest)?;
+    let n_model_layers = manifest.config.n_layers + 2;
+    let plan = crate::planner::Plan {
+        objective: crate::planner::PlanObjective::Throughput,
+        stages: vec![
+            crate::planner::Stage {
+                device: 0,
+                start: 0,
+                end: 3,
+            },
+            crate::planner::Stage {
+                device: 1,
+                start: 3,
+                end: n_model_layers,
+            },
+        ],
+        predicted_ms: 0.0,
+    };
+
+    let gen = RaggedTraceGen {
+        mean_burst: cfg.mean_burst,
+        ..RaggedTraceGen::new(
+            manifest.config.prefill_len,
+            manifest.config.vocab_size as i32,
+            cfg.gen_lens.clone(),
+            cfg.seed,
+        )
+    };
+    let trace = gen.generate(cfg.requests);
+    let requests: Vec<GenRequest> = trace
+        .iter()
+        .map(|r| GenRequest::new(r.id, r.prompt.clone(), r.max_new_tokens))
+        .collect();
+    let mut batcher = Batcher::new(manifest.config.prefill_len, manifest.batch_sizes.clone());
+    let groups = batcher.pack(&requests);
+
+    let variants: [(WireFormat, usize); 4] = [
+        (WireFormat::F32, 0),
+        (WireFormat::F32, cfg.prefill_chunk),
+        (WireFormat::Int8, 0),
+        (WireFormat::Int8, cfg.prefill_chunk),
+    ];
+
+    let mut points = Vec::new();
+    for &bw in &cfg.bandwidths_mbps {
+        let cluster = wire_cluster(bw);
+        let mut out = Vec::new();
+        for &(wire, chunk) in &variants {
+            let engine_cfg = EngineConfig {
+                time_scale: cfg.time_scale,
+                wire_format: wire,
+                prefill_chunk: chunk,
+                ..EngineConfig::default()
+            };
+            let mut engine = Engine::build(
+                &manifest,
+                &weights,
+                exec.clone(),
+                &plan,
+                &cluster,
+                &engine_cfg,
+            )?;
+            let (results, mut stats) = engine
+                .generate_pipelined(&groups, Strategy::NoBubble)
+                .with_context(|| format!("wire sweep: {wire:?} chunk={chunk} @ {bw} Mbps"))?;
+            engine.shutdown()?;
+            out.push(WireVariant {
+                wire: match wire {
+                    WireFormat::F32 => "f32".into(),
+                    WireFormat::Int8 => "int8".into(),
+                },
+                prefill_chunk: chunk,
+                tokens_per_s: stats.throughput_tps,
+                ttft_p50_ms: stats.ttft.percentile(50.0),
+                ttft_p99_ms: stats.ttft.percentile(99.0),
+                makespan_ms: stats.makespan_ms,
+                results,
+            });
+        }
+        let base = out.iter().find(|v| v.key() == "f32_mono").unwrap();
+        let hot = out.iter().find(|v| v.key() == "int8_chunked").unwrap();
+        let speedup_tps = if base.tokens_per_s > 0.0 {
+            hot.tokens_per_s / base.tokens_per_s
+        } else {
+            0.0
+        };
+        let ttft_p99_ratio = if base.ttft_p99_ms > 0.0 {
+            hot.ttft_p99_ms / base.ttft_p99_ms
+        } else {
+            0.0
+        };
+        points.push(WirePoint {
+            bandwidth_mbps: bw,
+            variants: out,
+            speedup_tps,
+            ttft_p99_ratio,
+        });
+    }
+
+    // correctness anchors: fp32 identical everywhere, int8 greedy-matches
+    let reference = token_rows(&points[0].variants[0].results);
+    let fp32_identical = points.iter().all(|p| {
+        p.variants
+            .iter()
+            .filter(|v| v.wire == "f32")
+            .all(|v| token_rows(&v.results) == reference)
+    });
+    let int8_tokens_match = points.iter().all(|p| {
+        p.variants
+            .iter()
+            .filter(|v| v.wire == "int8")
+            .all(|v| token_rows(&v.results) == reference)
+    });
+    Ok(WireOverlapReport {
+        config: cfg.clone(),
+        points,
+        fp32_identical,
+        int8_tokens_match,
+    })
+}
+
+/// Render the wire/overlap markdown.
+pub fn wire_overlap_markdown(r: &WireOverlapReport) -> String {
+    let mut out = String::new();
+    out.push_str("# Wire format × prefill overlap — win vs inter-stage bandwidth (sim backend)\n\n");
+    out.push_str(&format!(
+        "workload: {} requests, gen lengths {:?}, prompt {} tokens, chunk {} tokens, \
+         time_scale {}, seed {}\n\n",
+        r.config.requests,
+        r.config.gen_lens,
+        wire_config().prefill_len,
+        r.config.prefill_chunk,
+        r.config.time_scale,
+        r.config.seed
+    ));
+    let mut rows = Vec::new();
+    for p in &r.points {
+        for v in &p.variants {
+            rows.push(vec![
+                format!("{:.0}", p.bandwidth_mbps),
+                v.key(),
+                format!("{:.1}", v.tokens_per_s),
+                format!("{:.1}", v.ttft_p50_ms),
+                format!("{:.1}", v.ttft_p99_ms),
+                format!("{:.0}", v.makespan_ms),
+            ]);
+        }
+    }
+    out.push_str(&markdown_table(
+        &[
+            "bandwidth (Mbps)",
+            "variant",
+            "tokens/s",
+            "TTFT p50 (ms)",
+            "TTFT p99 (ms)",
+            "makespan (ms)",
+        ],
+        &rows,
+    ));
+    out.push_str("\nint8+chunked vs f32 monolithic, per bandwidth point:\n\n");
+    let win_rows: Vec<Vec<String>> = r
+        .points
+        .iter()
+        .map(|p| {
+            vec![
+                format!("{:.0}", p.bandwidth_mbps),
+                format!("{:.2}x", p.speedup_tps),
+                format!("{:.2}x", p.ttft_p99_ratio),
+            ]
+        })
+        .collect();
+    out.push_str(&markdown_table(
+        &["bandwidth (Mbps)", "tokens/s speedup", "TTFT p99 ratio"],
+        &win_rows,
+    ));
+    out.push_str(&format!(
+        "\nfp32 streams byte-identical across chunking and bandwidth: {}; \
+         int8 greedy-matches fp32 on the sim manifest: {}\n",
+        r.fp32_identical, r.int8_tokens_match
+    ));
+    out
+}
+
+/// Machine-readable form (the `BENCH_wire_overlap.json` CI artifact).
+pub fn wire_overlap_json(r: &WireOverlapReport) -> Json {
+    let num = |v: f64| Json::Num((v * 1000.0).round() / 1000.0);
+    let mut root = BTreeMap::new();
+    let mut workload = BTreeMap::new();
+    workload.insert("requests".into(), Json::Num(r.config.requests as f64));
+    workload.insert(
+        "gen_lens".into(),
+        Json::Arr(r.config.gen_lens.iter().map(|&g| Json::Num(g as f64)).collect()),
+    );
+    workload.insert(
+        "prefill_chunk".into(),
+        Json::Num(r.config.prefill_chunk as f64),
+    );
+    workload.insert("time_scale".into(), num(r.config.time_scale));
+    workload.insert("seed".into(), Json::Num(r.config.seed as f64));
+    root.insert("workload".into(), Json::Obj(workload));
+    root.insert(
+        "points".into(),
+        Json::Arr(
+            r.points
+                .iter()
+                .map(|p| {
+                    let mut o = BTreeMap::new();
+                    o.insert("bandwidth_mbps".into(), num(p.bandwidth_mbps));
+                    let mut vs = BTreeMap::new();
+                    for v in &p.variants {
+                        let mut vo = BTreeMap::new();
+                        vo.insert("tokens_per_s".into(), num(v.tokens_per_s));
+                        vo.insert("ttft_p50_ms".into(), num(v.ttft_p50_ms));
+                        vo.insert("ttft_p99_ms".into(), num(v.ttft_p99_ms));
+                        vo.insert("makespan_ms".into(), num(v.makespan_ms));
+                        vs.insert(v.key(), Json::Obj(vo));
+                    }
+                    o.insert("variants".into(), Json::Obj(vs));
+                    o.insert("speedup_tps".into(), num(p.speedup_tps));
+                    o.insert("ttft_p99_ratio".into(), num(p.ttft_p99_ratio));
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    root.insert("fp32_identical".into(), Json::Bool(r.fp32_identical));
+    root.insert("int8_tokens_match".into(), Json::Bool(r.int8_tokens_match));
+    Json::Obj(root)
+}

@@ -130,6 +130,55 @@ fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
+/// Symmetric per-row int8 quantization: each of `rows` rows gets its own
+/// scale `max|x| / 127`, values are rounded to the nearest step and
+/// clamped to `[-127, 127]`.  An all-zero row stores scale 0 and
+/// dequantizes back to exact zeros.  Per-*row* (= per-token) scales are
+/// what make chunked transmission equal monolithic transmission: a row's
+/// scale depends only on that row, never on its neighbors in the frame.
+pub fn quantize_rows_i8(data: &[f32], rows: usize) -> (Vec<i8>, Vec<f32>) {
+    assert!(rows > 0 && data.len() % rows == 0, "quantize: ragged rows");
+    let row_len = data.len() / rows;
+    let mut q = vec![0i8; data.len()];
+    let mut scales = vec![0f32; rows];
+    for r in 0..rows {
+        let src = &data[r * row_len..(r + 1) * row_len];
+        let mut max_abs = 0f32;
+        for &v in src {
+            max_abs = max_abs.max(v.abs());
+        }
+        if max_abs == 0.0 || !max_abs.is_finite() {
+            continue; // scale stays 0, row stays 0
+        }
+        let scale = max_abs / 127.0;
+        scales[r] = scale;
+        let dst = &mut q[r * row_len..(r + 1) * row_len];
+        for (o, &v) in dst.iter_mut().zip(src) {
+            *o = (v / scale).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+    (q, scales)
+}
+
+/// Inverse of [`quantize_rows_i8`]: `x̂ = q · scale` per row.
+pub fn dequantize_rows_i8(data: &[i8], scales: &[f32], rows: usize) -> Vec<f32> {
+    assert!(rows > 0 && data.len() % rows == 0 && scales.len() == rows);
+    let row_len = data.len() / rows;
+    let mut out = vec![0f32; data.len()];
+    for r in 0..rows {
+        let scale = scales[r];
+        if scale == 0.0 {
+            continue;
+        }
+        let src = &data[r * row_len..(r + 1) * row_len];
+        let dst = &mut out[r * row_len..(r + 1) * row_len];
+        for (o, &v) in dst.iter_mut().zip(src) {
+            *o = v as f32 * scale;
+        }
+    }
+    out
+}
+
 /// Execute one shard variant. `inputs` is registered weights (prefix)
 /// followed by the dynamic activations, exactly as the PJRT path would
 /// receive them.
@@ -260,6 +309,107 @@ fn run_layer(
     let cache_dims = vec![batch as i64, nkv as i64, ms as i64, hd as i64];
     let cache_at = |b: usize, kh: usize, s: usize| ((b * nkv + kh) * ms + s) * hd;
 
+    if prefill && inputs.len() == 13 {
+        // Chunked-prefill append: like the fresh branch below but the
+        // chunk starts at absolute position `start` with the positions
+        // `0..start` already resident in the passed-in padded caches
+        // (written by earlier chunks).  Every query attends through the
+        // cache in ascending `ki` order — the same f32 values in the same
+        // accumulation order as a monolithic prefill, so chunked serving
+        // stays bitwise identical (the same argument that keeps
+        // decode-after-prefill equal to a longer prefill).
+        let (h_in, h_dims) = f32_input(&inputs[9], "h")?;
+        ensure!(
+            h_dims.len() == 3 && h_dims[0] == batch as i64 && h_dims[2] == d as i64,
+            "sim layer prefill append: h dims {h_dims:?}"
+        );
+        let s = h_dims[1] as usize;
+        let (kc_in, kc_dims) = f32_input(&inputs[10], "k_cache")?;
+        let (vc_in, vc_dims) = f32_input(&inputs[11], "v_cache")?;
+        ensure!(
+            kc_dims == cache_dims.as_slice() && vc_dims == cache_dims.as_slice(),
+            "sim layer prefill append: cache dims {kc_dims:?}/{vc_dims:?}"
+        );
+        let start_raw = inputs[12].as_i32()?;
+        ensure!(
+            inputs[12].dims().is_empty() && start_raw[0] >= 0,
+            "sim layer prefill append: start must be a non-negative scalar"
+        );
+        let start = start_raw[0] as usize;
+        ensure!(
+            start + s <= ms,
+            "sim layer prefill append: start {start} + chunk {s} > max_seq {ms}"
+        );
+        let tokens = batch * s;
+        let x = rms_norm(h_in, w.attn_norm, tokens, d);
+        let mut q = matmul(&x, w.wq, tokens, d, nh * hd);
+        let mut k = matmul(&x, w.wk, tokens, d, nkv * hd);
+        let v = matmul(&x, w.wv, tokens, d, nkv * hd);
+        // RoPE at absolute positions start..start+s
+        for b in 0..batch {
+            for si in 0..s {
+                let t = b * s + si;
+                for hh in 0..nh {
+                    let off = t * nh * hd + hh * hd;
+                    rope_rotate(&mut q[off..off + hd], start + si, 10000.0);
+                }
+                for kh in 0..nkv {
+                    let off = t * nkv * hd + kh * hd;
+                    rope_rotate(&mut k[off..off + hd], start + si, 10000.0);
+                }
+            }
+        }
+        // write the chunk's K/V into the caches first, then attend purely
+        // through the caches (ascending ki covers earlier chunks and the
+        // causal part of this one)
+        let mut kc = kc_in.to_vec();
+        let mut vc = vc_in.to_vec();
+        for b in 0..batch {
+            for si in 0..s {
+                for kh in 0..nkv {
+                    let src = (b * s + si) * nkv * hd + kh * hd;
+                    let dst = cache_at(b, kh, start + si);
+                    kc[dst..dst + hd].copy_from_slice(&k[src..src + hd]);
+                    vc[dst..dst + hd].copy_from_slice(&v[src..src + hd]);
+                }
+            }
+        }
+        let mut attn = vec![0f32; tokens * nh * hd];
+        for b in 0..batch {
+            for hh in 0..nh {
+                let kh = hh / reps.max(1);
+                for qi in 0..s {
+                    let pos = start + qi;
+                    let qoff = (b * s + qi) * nh * hd + hh * hd;
+                    let qv = &q[qoff..qoff + hd];
+                    let mut scores = vec![0f32; pos + 1];
+                    for (ki, sc) in scores.iter_mut().enumerate() {
+                        let koff = cache_at(b, kh, ki);
+                        let mut dot = 0f32;
+                        for (a, b_) in qv.iter().zip(&kc[koff..koff + hd]) {
+                            dot += a * b_;
+                        }
+                        *sc = dot * scale;
+                    }
+                    softmax(&mut scores);
+                    let arow = &mut attn[qoff..qoff + hd];
+                    for (ki, &p) in scores.iter().enumerate() {
+                        let voff = cache_at(b, kh, ki);
+                        for (a, b_) in arow.iter_mut().zip(&vc[voff..voff + hd]) {
+                            *a += p * b_;
+                        }
+                    }
+                }
+            }
+        }
+        let mut h = h_in.to_vec();
+        attn_out_and_mlp(cfg, &w, &mut h, &attn, tokens);
+        return Ok(vec![
+            TensorData::f32(h, vec![batch as i64, s as i64, d as i64]),
+            TensorData::f32(kc, cache_dims.clone()),
+            TensorData::f32(vc, cache_dims),
+        ]);
+    }
     if prefill {
         ensure!(inputs.len() == 10, "sim layer prefill: want 9 weights + h");
         let (h_in, h_dims) = f32_input(&inputs[9], "h")?;
@@ -895,6 +1045,108 @@ mod tests {
             out[1].dims(),
             &[1, c.n_kv_heads as i64, c.max_seq as i64, c.head_dim() as i64]
         );
+    }
+
+    #[test]
+    fn chunked_prefill_matches_monolithic_bitwise() {
+        // Splitting a prompt into chunks streamed through the append
+        // branch must reproduce the monolithic prefill exactly (==, not
+        // approx): hidden rows and final caches.
+        let (m, w) = setup();
+        let c = &m.config;
+        let d = c.d_model;
+        let s = 9usize;
+        let h_full: Vec<f32> = (0..s * d).map(|i| ((i % 13) as f32 - 6.0) * 0.04).collect();
+        let mut inputs = layer_inputs(&m, &w, 0);
+        inputs.push(as_td(&h_full, &[1, s, d]));
+        let mono = run_variant(c, "layer_prefill_b1", &inputs).unwrap();
+
+        for chunk in [1usize, 2, 4, 5, 8] {
+            // chunk 0 through the fresh branch
+            let c0 = chunk.min(s);
+            let mut inputs = layer_inputs(&m, &w, 0);
+            inputs.push(as_td(&h_full[..c0 * d], &[1, c0, d]));
+            let mut out = run_variant(c, "layer_prefill_b1", &inputs).unwrap();
+            let mut h_parts: Vec<f32> = out[0].as_f32().unwrap().to_vec();
+            let mut start = c0;
+            while start < s {
+                let len = chunk.min(s - start);
+                let mut inputs = layer_inputs(&m, &w, 0);
+                inputs.push(as_td(&h_full[start * d..(start + len) * d], &[1, len, d]));
+                inputs.push(out[1].clone());
+                inputs.push(out[2].clone());
+                inputs.push(TensorData::scalar_i32(start as i32));
+                out = run_variant(c, "layer_prefill_b1", &inputs).unwrap();
+                h_parts.extend_from_slice(out[0].as_f32().unwrap());
+                start += len;
+            }
+            assert_eq!(h_parts, mono[0].as_f32().unwrap(), "chunk={chunk} hidden diverged");
+            assert_eq!(out[1].as_f32().unwrap(), mono[1].as_f32().unwrap(), "chunk={chunk} k cache");
+            assert_eq!(out[2].as_f32().unwrap(), mono[2].as_f32().unwrap(), "chunk={chunk} v cache");
+        }
+    }
+
+    #[test]
+    fn chunk_append_rejects_overflow_and_bad_start() {
+        let (m, w) = setup();
+        let c = &m.config;
+        let (d, nkv, ms, hd) = (c.d_model, c.n_kv_heads, c.max_seq, c.head_dim());
+        let cache_len = nkv * ms * hd;
+        let mut base = layer_inputs(&m, &w, 0);
+        base.push(as_td(&vec![0.1; 2 * d], &[1, 2, d]));
+        base.push(as_td(&vec![0.0; cache_len], &[1, nkv, ms, hd]));
+        base.push(as_td(&vec![0.0; cache_len], &[1, nkv, ms, hd]));
+        let mut over = base.clone();
+        over.push(TensorData::scalar_i32(ms as i32 - 1)); // start+2 > max_seq
+        assert!(run_variant(c, "layer_prefill_b1", &over).is_err());
+        let mut neg = base.clone();
+        neg.push(TensorData::scalar_i32(-1));
+        assert!(run_variant(c, "layer_prefill_b1", &neg).is_err());
+    }
+
+    #[test]
+    fn quantize_round_trip_error_bounded() {
+        // Property over seeded pseudo-random tensors: per-row round trip
+        // stays within half a quantization step of each row's own scale.
+        let mut state = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            // uniform-ish in [-8, 8) with varying magnitude per draw
+            ((state >> 11) as f64 / (1u64 << 53) as f64 * 16.0 - 8.0) as f32
+        };
+        for (rows, row_len) in [(1usize, 64usize), (7, 33), (16, 128), (3, 1)] {
+            let mut data = vec![0f32; rows * row_len];
+            for v in data.iter_mut() {
+                *v = next();
+            }
+            // exercise wildly different scales per row
+            for r in 0..rows {
+                let amp = 10f32.powi(r as i32 % 7 - 3);
+                for v in data[r * row_len..(r + 1) * row_len].iter_mut() {
+                    *v *= amp;
+                }
+            }
+            let (q, scales) = quantize_rows_i8(&data, rows);
+            assert_eq!(scales.len(), rows);
+            let back = dequantize_rows_i8(&q, &scales, rows);
+            for r in 0..rows {
+                let row = &data[r * row_len..(r + 1) * row_len];
+                let max_abs = row.iter().fold(0f32, |m, v| m.max(v.abs()));
+                let bound = max_abs / 127.0 * 0.5 + 1e-12;
+                for (a, b) in row.iter().zip(&back[r * row_len..(r + 1) * row_len]) {
+                    assert!(
+                        (a - b).abs() <= bound * 1.001,
+                        "rows={rows} row={r}: {a} vs {b} (bound {bound})"
+                    );
+                }
+            }
+        }
+        // zero rows survive exactly
+        let (q, s) = quantize_rows_i8(&[0.0; 8], 2);
+        assert!(q.iter().all(|&x| x == 0) && s.iter().all(|&x| x == 0.0));
+        assert_eq!(dequantize_rows_i8(&q, &s, 2), vec![0.0; 8]);
     }
 
     #[test]

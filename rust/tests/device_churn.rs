@@ -285,6 +285,64 @@ fn continuous_checkpoint_straddling_recomposition_restores() {
 }
 
 #[test]
+fn chunked_replay_compresses_group_recovery() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    // Recovery-window regression: with chunked prefill on, the re-prefill
+    // failover folds the served history into ONE extended chunked prefill
+    // (a single verified head reply) instead of replaying every folded
+    // iteration as its own decode Step — the recovery window shrinks from
+    // O(folded) round trips to O(1).
+    let legacy = device_churn_scenario(&ChurnConfig::default()).unwrap();
+    let chunked = device_churn_scenario(&ChurnConfig {
+        prefill_chunk: 8,
+        ..ChurnConfig::default()
+    })
+    .unwrap();
+
+    // byte-identical streams in both regimes, and identical to each other
+    let clean = legacy.static_clean.token_rows();
+    assert_eq!(
+        chunked.static_clean.token_rows(),
+        clean,
+        "chunked prefill changed the clean stream"
+    );
+    assert_eq!(
+        chunked.reprefilled.token_rows(),
+        clean,
+        "chunked re-prefill recovery changed tokens"
+    );
+    assert_eq!(
+        chunked.checkpointed.token_rows(),
+        clean,
+        "chunked checkpoint recovery changed tokens"
+    );
+
+    // the regression proper: the re-prefill run's replay compresses
+    let rp_legacy = legacy.reprefilled_failovers.last().unwrap();
+    let rp_chunked = chunked.reprefilled_failovers.last().unwrap();
+    assert!(rp_chunked.replayed_iters >= 1, "{rp_chunked:?}");
+    assert!(
+        rp_chunked.replayed_iters < rp_legacy.replayed_iters,
+        "extended prefill did not shrink the replay window: \
+         chunked {rp_chunked:?} vs legacy {rp_legacy:?}"
+    );
+}
+
+#[test]
+fn continuous_chunked_replay_recovers_byte_identical() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    // The slots path under chunked prefill: per-row re-prefill recovery
+    // folds each row's history into one extended (chunk-dispatched)
+    // Admit; all invariants of the legacy continuous churn run must hold.
+    let cfg = ContinuousChurnConfig {
+        prefill_chunk: 8,
+        ..ContinuousChurnConfig::default()
+    };
+    let report = continuous_churn_scenario(&cfg).unwrap();
+    assert_continuous_recovered(&report, &cfg, 1);
+}
+
+#[test]
 fn dead_stage_without_stall_hook_errors_instead_of_hanging() {
     let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
     // Continuous serving with stall detection disabled (infinite

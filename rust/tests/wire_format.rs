@@ -1,0 +1,244 @@
+//! Wire-format and chunked-prefill gates, end-to-end on real stage
+//! actors + shaped links + the pure-rust sim backend.
+//!
+//! The guardrails of the quantized-wire / prefill-overlap work:
+//!
+//! 1. **fp32 byte-identity** — with `WireFormat::F32`, chunked prefill
+//!    (any chunk size, dividing the prompt or not) produces token
+//!    streams byte-identical to monolithic prefill, on the fixed-group
+//!    path, the continuous-batching path, and through an adaptive
+//!    migration.  The fp32 wire itself is byte-identical to the
+//!    historical frames, so these runs double as the no-regression gate.
+//! 2. **int8 bounded divergence** — with `WireFormat::Int8` (per-row
+//!    scales, ~4× smaller frames) greedy tokens must match the fp32
+//!    streams exactly on the sim manifest, monolithic and chunked, on
+//!    the same paths, and an int8 pipeline must survive failover with
+//!    recovered streams byte-identical to its own uninterrupted run.
+//!
+//! The quantize/dequantize round-trip error bound is unit-tested next to
+//! the kernels (`runtime::sim`); frame-size accounting next to the wire
+//! structs (`coordinator::stage`).
+
+use edgeshard::adaptive::scenario::{
+    device_churn_scenario, link_drop_scenario, ChurnConfig, ScenarioConfig,
+};
+use edgeshard::cluster::presets;
+use edgeshard::coordinator::api::GenRequest;
+use edgeshard::coordinator::scheduler::ContinuousConfig;
+use edgeshard::coordinator::{Batcher, Engine, EngineConfig, WireFormat};
+use edgeshard::planner::{Plan, PlanObjective, Stage};
+use edgeshard::runtime::manifest::ManifestConfig;
+use edgeshard::runtime::{ExecService, ExecServiceHandle, Manifest, WeightStore};
+use std::sync::Mutex;
+
+/// Wall-clock-sensitive tests run one at a time.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+const PROMPT_LEN: usize = 12;
+
+fn mini_config() -> ManifestConfig {
+    // prompt 12 so chunk 5 splits it unevenly (5 + 5 + 2)
+    ManifestConfig::mini_sim("tinyllama-wirefmt-sim", PROMPT_LEN, 64)
+}
+
+struct Ctx {
+    manifest: Manifest,
+    weights: WeightStore,
+    _svc: ExecService,
+    exec: ExecServiceHandle,
+}
+
+fn ctx() -> Ctx {
+    let manifest = Manifest::synthetic(mini_config(), vec![1, 4]);
+    let weights = WeightStore::synthetic(&manifest, 0);
+    let (_svc, exec) = ExecService::start_sim(&manifest).unwrap();
+    Ctx {
+        manifest,
+        weights,
+        _svc,
+        exec,
+    }
+}
+
+fn engine(c: &Ctx, wire: WireFormat, prefill_chunk: usize) -> Engine {
+    let n = c.manifest.config.n_layers + 2;
+    let plan = Plan {
+        objective: PlanObjective::Latency,
+        stages: vec![
+            Stage { device: 0, start: 0, end: 3 },
+            Stage { device: 2, start: 3, end: n },
+        ],
+        predicted_ms: 0.0,
+    };
+    let cluster = presets::tiny_demo(0);
+    let cfg = EngineConfig {
+        time_scale: 0.0,
+        wire_format: wire,
+        prefill_chunk,
+        ..EngineConfig::default()
+    };
+    Engine::build(&c.manifest, &c.weights, c.exec.clone(), &plan, &cluster, &cfg).unwrap()
+}
+
+/// Ragged requests with id-distinct prompts.
+fn ragged_requests(max_news: &[usize]) -> Vec<GenRequest> {
+    max_news
+        .iter()
+        .enumerate()
+        .map(|(i, &m)| {
+            GenRequest::new(
+                i as u64,
+                (0..PROMPT_LEN)
+                    .map(|t| ((t * 5 + i * 11 + 3) % 64) as i32)
+                    .collect(),
+                m,
+            )
+        })
+        .collect()
+}
+
+/// Per-request token rows from one engine, via the fixed-group pipelined
+/// path AND the continuous-batching path (asserted identical to each
+/// other before returning — composition never changes row math).
+fn serve_both_paths(
+    c: &Ctx,
+    wire: WireFormat,
+    prefill_chunk: usize,
+) -> Vec<(u64, Vec<i32>)> {
+    let reqs = ragged_requests(&[6, 14, 10, 6, 18, 10]);
+    let mut eng = engine(c, wire, prefill_chunk);
+
+    let mut batcher = Batcher::new(PROMPT_LEN, vec![1, 4]);
+    let groups = batcher.pack(&reqs);
+    let (g_results, _) = eng
+        .generate_pipelined(&groups, edgeshard::pipeline::Strategy::NoBubble)
+        .unwrap();
+    let mut g_rows: Vec<(u64, Vec<i32>)> =
+        g_results.into_iter().map(|r| (r.id, r.tokens)).collect();
+    g_rows.sort_by_key(|(id, _)| *id);
+
+    let ccfg = ContinuousConfig {
+        runs: 2,
+        ..ContinuousConfig::default()
+    };
+    let (c_results, _) = eng.generate_continuous(&reqs, &ccfg).unwrap();
+    eng.shutdown().unwrap();
+    let mut c_rows: Vec<(u64, Vec<i32>)> =
+        c_results.into_iter().map(|r| (r.id, r.tokens)).collect();
+    c_rows.sort_by_key(|(id, _)| *id);
+
+    assert_eq!(
+        g_rows, c_rows,
+        "{wire:?} chunk={prefill_chunk}: group vs continuous diverged"
+    );
+    g_rows
+}
+
+#[test]
+fn fp32_chunked_prefill_is_byte_identical() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let c = ctx();
+    // monolithic fp32: the historical wire, the reference stream
+    let reference = serve_both_paths(&c, WireFormat::F32, 0);
+    assert!(reference.iter().all(|(_, row)| !row.is_empty()));
+    // chunk 1 (every token its own frame), 5 (uneven split), 12 (== the
+    // prompt) and 100 (> the prompt) must all collapse to the same math
+    for chunk in [1, 5, PROMPT_LEN, 100] {
+        let rows = serve_both_paths(&c, WireFormat::F32, chunk);
+        assert_eq!(
+            rows, reference,
+            "fp32 chunk={chunk} changed the token stream"
+        );
+    }
+}
+
+#[test]
+fn int8_wire_greedy_tokens_match_fp32() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let c = ctx();
+    let reference = serve_both_paths(&c, WireFormat::F32, 0);
+    // int8 monolithic and int8 chunked: ~4× smaller frames, same greedy
+    // argmax on the sim manifest (the bounded-divergence gate)
+    for chunk in [0, 5] {
+        let rows = serve_both_paths(&c, WireFormat::Int8, chunk);
+        assert_eq!(
+            rows, reference,
+            "int8 chunk={chunk} diverged from the fp32 stream"
+        );
+    }
+}
+
+#[test]
+fn fp32_chunked_and_int8_survive_migration() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    // The migration path: a mid-generation link drop forces the adaptive
+    // engine to migrate layers while chunked prefill and the quantized
+    // wire are live.  Token streams must stay byte-identical to each
+    // run's own clean static control, and the int8 control must
+    // greedy-match the fp32 control.
+    let fp32 = link_drop_scenario(&ScenarioConfig {
+        prefill_chunk: 8,
+        ..ScenarioConfig::default()
+    })
+    .unwrap();
+    assert!(
+        !fp32.migrations.is_empty(),
+        "fp32 run never migrated — the scenario lost its point"
+    );
+    let clean = fp32.static_clean.token_rows();
+    assert_eq!(
+        fp32.adaptive.token_rows(),
+        clean,
+        "fp32 chunked migration changed tokens"
+    );
+
+    let int8 = link_drop_scenario(&ScenarioConfig {
+        wire_format: WireFormat::Int8,
+        prefill_chunk: 8,
+        ..ScenarioConfig::default()
+    })
+    .unwrap();
+    assert!(
+        !int8.migrations.is_empty(),
+        "int8 run never migrated — the scenario lost its point"
+    );
+    assert_eq!(
+        int8.adaptive.token_rows(),
+        int8.static_clean.token_rows(),
+        "int8 chunked migration changed tokens"
+    );
+    // the greedy-match gate across wire formats, same workload
+    assert_eq!(
+        int8.static_clean.token_rows(),
+        clean,
+        "int8 wire diverged from fp32 greedy tokens"
+    );
+}
+
+#[test]
+fn int8_survives_failover_byte_identical() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    // The failover path: a stage host crashes mid-generation on an int8
+    // chunked pipeline.  Both recovery paths (checkpoint replay and
+    // re-prefill) must reproduce the uninterrupted int8 stream exactly —
+    // quantization is deterministic, so replayed frames re-quantize to
+    // the same bits.
+    let report = device_churn_scenario(&ChurnConfig {
+        wire_format: WireFormat::Int8,
+        prefill_chunk: 8,
+        ..ChurnConfig::default()
+    })
+    .unwrap();
+    let clean = report.static_clean.token_rows();
+    assert!(clean.iter().all(|row| !row.is_empty()));
+    assert_eq!(
+        report.checkpointed.token_rows(),
+        clean,
+        "int8 checkpoint recovery changed tokens"
+    );
+    assert_eq!(
+        report.reprefilled.token_rows(),
+        clean,
+        "int8 re-prefill recovery changed tokens"
+    );
+}
